@@ -1,0 +1,55 @@
+//! ISA explorer: emit the inner loop of Algorithm 1 as a real
+//! instruction trace, show its machine encodings, and round-trip them
+//! through the decoder — what the paper's Fig. 3 describes, executable.
+//!
+//! Run: `cargo run --release --example isa_explorer`
+
+use sparq::isa::{decode, disasm, encode, Lmul, ScalarKind, Sew, VInst, VOp};
+
+fn main() {
+    // the inner loop of Algorithm 1 for one (channel, kernel-column)
+    // iteration at Fh = 3: three vmacsr issues + one slide
+    let inner: Vec<VInst> = vec![
+        VInst::SetVl { avl: 256, sew: Sew::E16, lmul: Lmul::M4 },
+        VInst::Load { eew: Sew::E16, vd: 12, addr: 0x8000 },
+        VInst::Scalar { kind: ScalarKind::WeightLoad, n: 1 },
+        VInst::OpVX { op: VOp::Macsr, vd: 0, vs2: 12, rs1: 0x0102 },
+        VInst::Scalar { kind: ScalarKind::WeightLoad, n: 1 },
+        VInst::OpVX { op: VOp::Macsr, vd: 4, vs2: 12, rs1: 0x0201 },
+        VInst::Scalar { kind: ScalarKind::WeightLoad, n: 1 },
+        VInst::OpVX { op: VOp::Macsr, vd: 8, vs2: 12, rs1: 0x0303 },
+        VInst::OpVI { op: VOp::SlideDown, vd: 12, vs2: 12, imm: 1 },
+    ];
+
+    println!("Algorithm 1 inner loop (Fh=3), as trace + machine code:\n");
+    println!("{:<10} {:<44} {}", "word", "assembly", "decoded-back");
+    for inst in &inner {
+        let word = encode(inst);
+        let back = decode(word)
+            .map(|i| disasm(&i))
+            .unwrap_or_else(|e| format!("<{e}>"));
+        println!("{word:#010x} {:<44} {back}", disasm(inst));
+    }
+
+    println!("\nkey encodings (paper Fig. 3):");
+    for (label, inst) in [
+        ("vmacc.vx  (RVV 1.0, funct6=101101)", VInst::OpVX { op: VOp::Macc, vd: 1, vs2: 2, rs1: 0 }),
+        ("vmacsr.vx (Sparq,   funct6=101110)", VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 0 }),
+        ("vmacsr.vv (Sparq,   OPMVV form)", VInst::OpVV { op: VOp::Macsr, vd: 1, vs2: 2, vs1: 3 }),
+        (
+            "vmacsr.cfg (this repo's future-work ext)",
+            VInst::OpVX { op: VOp::MacsrCfg, vd: 1, vs2: 2, rs1: 0 },
+        ),
+    ] {
+        let w = encode(&inst);
+        println!("  {w:#010x}  funct6={:06b}  {label}", w >> 26);
+    }
+
+    println!("\nillegal-word handling (the dispatcher must trap):");
+    for word in [0xffff_ffffu32, (0b111111 << 26) | (1 << 25) | (0b010 << 12) | 0x57] {
+        match decode(word) {
+            Ok(i) => println!("  {word:#010x}  {}", disasm(&i)),
+            Err(e) => println!("  {word:#010x}  trap: {e}"),
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Sub-byte conv2d explorer: sweep every precision pair over a custom
+//! workload and print which container/scheme the ULPPACK calculus picks
+//! and what it buys — the paper's Fig. 5 as an interactive tool.
+//!
+//! Run: `cargo run --release --example subbyte_conv2d -- [C] [H] [F]`
+//! (defaults: 32 70 7)
+
+use sparq::arch::ProcessorConfig;
+use sparq::kernels::{run_conv, ConvDims, ConvVariant, Workload};
+use sparq::ulppack::region::{plan_native, plan_vmacsr};
+use sparq::ulppack::RegionMode;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<u32> = std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+    let c = *args.first().unwrap_or(&32);
+    let s = *args.get(1).unwrap_or(&70);
+    let f = *args.get(2).unwrap_or(&7);
+    let dims = ConvDims { c, h: s, w: s, co: 4, fh: f, fw: f };
+    println!("workload: {c}x{s}x{s}, {f}x{f} kernel, {} MACs", dims.macs());
+
+    let sparq = ProcessorConfig::sparq();
+    let ara = ProcessorConfig::ara();
+    let base = {
+        let wl = Workload::random(dims, 8, 8, 1);
+        run_conv(&sparq, &wl, ConvVariant::Int16)?.report
+    };
+    println!("int16 baseline: {} cycles\n", base.stats.cycles);
+    println!(
+        "{:>5} {:>12} {:>9} {:>12} {:>9}   {}",
+        "(W,A)", "native cyc", "speedup", "vmacsr cyc", "speedup", "vmacsr plan"
+    );
+
+    for w in 1..=4u32 {
+        for a in 1..=4u32 {
+            let wl = Workload::random(dims, w, a, (w * 7 + a) as u64);
+            let nat = match plan_native(w, a) {
+                Some(_) => Some(
+                    run_conv(&ara, &wl, ConvVariant::Native { w_bits: w, a_bits: a })?.report,
+                ),
+                None => None,
+            };
+            let plan = plan_vmacsr(w, a, dims.issues_per_output(), RegionMode::Paper);
+            let vms = match plan {
+                Some(_) => Some(
+                    run_conv(
+                        &sparq,
+                        &wl,
+                        ConvVariant::Vmacsr { w_bits: w, a_bits: a, mode: RegionMode::Paper },
+                    )?
+                    .report,
+                ),
+                None => None,
+            };
+            let plan_str = plan
+                .map(|p| {
+                    format!(
+                        "{} spill@{}{}",
+                        p.container.name(),
+                        if p.spill_every == u64::MAX {
+                            "never".to_string()
+                        } else {
+                            p.spill_every.to_string()
+                        },
+                        if p.exact { "" } else { " [paper-mode]" }
+                    )
+                })
+                .unwrap_or_else(|| "--".into());
+            let fmt = |r: &Option<sparq::sim::RunReport>| match r {
+                Some(r) => (
+                    r.stats.cycles.to_string(),
+                    format!("{:.2}x", base.stats.cycles as f64 / r.stats.cycles as f64),
+                ),
+                None => ("--".into(), "--".into()),
+            };
+            let (nc, ns) = fmt(&nat);
+            let (vc, vs) = fmt(&vms);
+            println!("W{w}A{a} {nc:>13} {ns:>9} {vc:>12} {vs:>9}   {plan_str}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+"""AOT compile path: train the QNN, lower every model/kernel variant to
+HLO *text*, and write the artifacts the rust runtime serves.
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT ``HloModuleProto.serialize()`` —
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+Every lowering uses ``return_tuple=True`` so the rust side unwraps with
+``to_tuple1()``.
+
+Artifacts written:
+
+    qnn_fp32.hlo.txt        float reference model       (f32[16,1,16,16] -> f32[16,4])
+    qnn_w4a4.hlo.txt        packed-integer QNN, LP      (same signature)
+    qnn_w3a3.hlo.txt        packed-integer QNN, LP
+    qnn_w2a2.hlo.txt        packed-integer QNN, ULP
+    packed_conv2d_lp.hlo.txt   standalone L1 kernel, 16-bit containers
+                               (i32[16,18,18] levels, i32[8,16,3,3] levels -> i32[8,16,16])
+    packed_conv2d_ulp.hlo.txt  standalone L1 kernel, 8-bit containers
+    testset.bin             512 held-out images + labels (see dataset.save_raw)
+    train_log.txt           python-side reference accuracies + loss curves
+    manifest.txt            machine-readable index of all of the above
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset, model
+from .kernels.packed_conv2d import packed_conv2d
+from .kernels.ulppack_pack import pack_activations, pack_weights
+
+BATCH = 16
+
+QCONFIGS = {
+    "fp32": model.QConfig(None, None),
+    "w4a4": model.QConfig(4, 4),
+    "w3a3": model.QConfig(3, 3),
+    "w2a2": model.QConfig(2, 2),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constants as ``constant({...})`` and the rust-side text
+    parser silently reads those as zeros — which zeroes out every baked
+    model weight (accuracy collapses to chance).  Guarded by
+    ``test_aot.py::test_no_elided_constants``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_fn(fn, example_args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def standalone_kernel(container_bits: int):
+    """The L1 packed conv as a self-contained graph over i32 levels
+    (the xla 0.1.6 crate has first-class i32 literals; containers and
+    packing live inside the graph)."""
+
+    def fn(x_levels, w_levels):
+        xp = pack_activations(x_levels, container_bits)
+        wp = pack_weights(w_levels, container_bits)
+        return (packed_conv2d(xp, wp, container_bits),)
+
+    return fn
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--train-steps", type=int, default=400)
+    p.add_argument("--finetune-steps", type=int, default=150)
+    p.add_argument("--quick", action="store_true", help="tiny training run (CI)")
+    p.add_argument("--seed", type=int, default=7)
+    args = p.parse_args()
+    if args.quick:
+        args.train_steps, args.finetune_steps = 40, 20
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+    manifest: list[str] = []
+    trainlog: list[str] = []
+
+    # ------------------------------------------------------------------
+    # Data
+    # ------------------------------------------------------------------
+    train_x, train_y = dataset.make_dataset(2048, seed=args.seed)
+    test_x, test_y = dataset.make_dataset(512, seed=args.seed + 1)
+    dataset.save_raw(os.path.join(out, "testset.bin"), test_x, test_y)
+    manifest.append(f"data\ttestset\ttestset.bin\tn={len(test_y)}\tc=1\th=16\tw=16\tclasses=4")
+
+    # ------------------------------------------------------------------
+    # Train FP32 base, then fine-tune each quantized config from it
+    # ------------------------------------------------------------------
+    cfg_fp = QCONFIGS["fp32"]
+    params = model.init_params(seed=args.seed)
+    params, losses = model.train(
+        params, {}, cfg_fp, train_x, train_y, steps=args.train_steps, seed=args.seed
+    )
+    for step, l in losses:
+        trainlog.append(f"loss\tfp32\t{step}\t{l:.4f}")
+    acc_fp = model.accuracy(
+        lambda p, q, c, x: model.forward_qat(p, q, c, x), params, {}, cfg_fp, test_x, test_y
+    )
+    trainlog.append(f"acc\tfp32\t{acc_fp:.4f}")
+    print(f"[aot] fp32 trained: test acc {acc_fp:.4f} ({time.time()-t0:.1f}s)")
+
+    fwd_fp32 = lambda x: (model.forward_qat(params, {}, cfg_fp, x),)
+    spec = jax.ShapeDtypeStruct((BATCH, 1, 16, 16), jnp.float32)
+    path = "qnn_fp32.hlo.txt"
+    export_fn(fwd_fp32, (spec,), os.path.join(out, path))
+    manifest.append(f"artifact\tqnn_fp32\t{path}\tbatch={BATCH}\tin=1x16x16\tout=4\tacc_ref={acc_fp:.4f}")
+
+    for name in ("w4a4", "w3a3", "w2a2"):
+        cfg = QCONFIGS[name]
+        # 2-bit needs a longer fine-tune to recover from the harsher clip
+        steps = args.finetune_steps * (3 if name == "w2a2" else 1)
+        qstate = model.calibrate(params, cfg, jnp.asarray(train_x[:256]))
+        qparams, qlosses = model.train(
+            params, qstate, cfg, train_x, train_y, steps=steps, seed=args.seed
+        )
+        for step, l in qlosses:
+            trainlog.append(f"loss\t{name}\t{step}\t{l:.4f}")
+        # re-calibrate scales on the fine-tuned weights
+        qstate = model.calibrate(qparams, cfg, jnp.asarray(train_x[:256]))
+        acc_qat = model.accuracy(model.forward_qat, qparams, qstate, cfg, test_x, test_y)
+        acc_pk = model.accuracy(model.forward_packed, qparams, qstate, cfg, test_x[:256], test_y[:256])
+        trainlog.append(f"acc\t{name}\tqat={acc_qat:.4f}\tpacked={acc_pk:.4f}")
+        print(f"[aot] {name}: qat acc {acc_qat:.4f}, packed-integer acc {acc_pk:.4f} "
+              f"({time.time()-t0:.1f}s)")
+
+        fwd = lambda x, qp=qparams, qs=qstate, c=cfg: (model.forward_packed(qp, qs, c, x),)
+        path = f"qnn_{name}.hlo.txt"
+        export_fn(fwd, (spec,), os.path.join(out, path))
+        manifest.append(
+            f"artifact\tqnn_{name}\t{path}\tbatch={BATCH}\tin=1x16x16\tout=4"
+            f"\twbits={cfg.w_bits}\tabits={cfg.a_bits}\tcontainer={cfg.container_bits}"
+            f"\tacc_ref={acc_pk:.4f}"
+        )
+
+    # ------------------------------------------------------------------
+    # Standalone L1 kernel artifacts (rust <-> simulator cross-check)
+    # ------------------------------------------------------------------
+    xspec = jax.ShapeDtypeStruct((16, 18, 18), jnp.int32)
+    wspec = jax.ShapeDtypeStruct((8, 16, 3, 3), jnp.int32)
+    for name, bits in (("lp", 16), ("ulp", 8)):
+        path = f"packed_conv2d_{name}.hlo.txt"
+        export_fn(standalone_kernel(bits), (xspec, wspec), os.path.join(out, path))
+        manifest.append(
+            f"artifact\tpacked_conv2d_{name}\t{path}\tc=16\th=18\tw=18\tco=8\tf=3"
+            f"\tcontainer={bits}"
+        )
+
+    with open(os.path.join(out, "train_log.txt"), "w") as f:
+        f.write("\n".join(trainlog) + "\n")
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] wrote {len(manifest)} artifacts to {out} in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

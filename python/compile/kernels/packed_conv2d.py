@@ -1,0 +1,141 @@
+"""Pallas packed sub-byte conv2d — the paper's compute hot-spot as an L1
+kernel, re-thought for TPU (see DESIGN.md §Hardware-Adaptation).
+
+The RVV lane packs two sub-byte operands per 16-bit SIMD element and
+uses ``vmacsr`` (multiply, shift right by S, accumulate).  The TPU
+analogue implemented here packs two operands per VPU integer lane and
+fuses ``(a*w mod 2^B) >> S`` into the accumulation so no intermediate
+tile ever round-trips to HBM:
+
+  * grid over output channels — each step keeps the whole packed input
+    tile (Cp, H, W) plus one (Ho, Wo) int32 accumulator VMEM-resident
+    (the RVV kernel's "output-stationary in the VRF" strategy);
+  * the Fh×Fw spatial taps are static python loops (the RVV kernel's
+    unrolled ``vslidedown`` reuse becomes static slicing of the resident
+    tile — same data reuse, zero extra HBM traffic);
+  * the reduction over packed channels is a ``fori_loop`` so the kernel
+    scales to any channel count without code bloat.
+
+Accumulation is int32 (the natural TPU VPU width): this keeps the packed
+multiply trick (the throughput win) while giving the ideal-wide-
+accumulator semantics of ``ref.packed_conv2d_ref``.  The container-width
+wrap-around accumulator of the real Sparq register file is modelled by
+the rust simulator, not here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_DTYPES = {16: jnp.uint16, 8: jnp.uint8}
+
+
+def _packed_conv2d_kernel(x_ref, w_ref, o_ref, *, fh, fw, shift, cp):
+    """One output channel of the vmacsr-dataflow conv2d.
+
+    x_ref: (Cp, H, W) packed containers, w_ref: (1, Cp, Fh, Fw) packed
+    weights, o_ref: (1, Ho, Wo) int32.
+    """
+    x = x_ref[...]
+    w = w_ref[0]
+    _, h, wd = x.shape
+    ho, wo = h - fh + 1, wd - fw + 1
+
+    def body(c, acc):
+        xc = jax.lax.dynamic_index_in_dim(x, c, 0, keepdims=False)  # (H, W)
+        wc = jax.lax.dynamic_index_in_dim(w, c, 0, keepdims=False)  # (Fh, Fw)
+        for i in range(fh):
+            for j in range(fw):
+                patch = jax.lax.slice(xc, (i, j), (i + ho, j + wo))
+                # modular multiply at container width, then the vmacsr
+                # shift — one fused VPU pass per tap
+                prod = patch * wc[i, j]
+                acc = acc + (prod >> shift).astype(jnp.int32)
+        return acc
+
+    acc = jax.lax.fori_loop(0, cp, body, jnp.zeros((ho, wo), jnp.int32))
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("container_bits",))
+def packed_conv2d(xp: jax.Array, wp: jax.Array, container_bits: int = 16):
+    """Packed 'valid' conv2d, channel-first.
+
+    xp: (Cp, H, W) uint{B} packed activations;
+    wp: (Co, Cp, Fh, Fw) uint{B} packed weights (swapped halves);
+    returns (Co, Ho, Wo) int32 — equal to ``ref.conv2d_int_ref`` of the
+    unpacked levels whenever (W, A) is inside the overflow-free region.
+    """
+    dt = _DTYPES[container_bits]
+    s = container_bits // 2
+    cp, h, w = xp.shape
+    co, cpw, fh, fw = wp.shape
+    assert cp == cpw, f"channel mismatch: {cp} vs {cpw}"
+    ho, wo = h - fh + 1, w - fw + 1
+    return pl.pallas_call(
+        functools.partial(_packed_conv2d_kernel, fh=fh, fw=fw, shift=s, cp=cp),
+        grid=(co,),
+        in_specs=[
+            pl.BlockSpec((cp, h, w), lambda o: (0, 0, 0)),
+            pl.BlockSpec((1, cp, fh, fw), lambda o: (o, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo), lambda o: (o, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((co, ho, wo), jnp.int32),
+        interpret=True,
+    )(xp.astype(dt), wp.astype(dt))
+
+
+@functools.partial(jax.jit, static_argnames=("container_bits", "h_tile"))
+def packed_conv2d_tiled(
+    xp: jax.Array, wp: jax.Array, container_bits: int = 16, h_tile: int = 8
+):
+    """Row-tiled variant for inputs too tall for a single VMEM tile.
+
+    The grid is (Co, Ho/h_tile); each step loads an (Cp, h_tile+Fh-1, W)
+    input slab — the double-buffered HBM->VMEM schedule a real TPU
+    lowering would pipeline.  Requires Ho % h_tile == 0.
+    """
+    dt = _DTYPES[container_bits]
+    s = container_bits // 2
+    cp, h, w = xp.shape
+    co, cpw, fh, fw = wp.shape
+    assert cp == cpw, f"channel mismatch: {cp} vs {cpw}"
+    ho, wo = h - fh + 1, w - fw + 1
+    assert ho % h_tile == 0, f"Ho={ho} not divisible by h_tile={h_tile}"
+    slab = h_tile + fh - 1
+
+    def kernel(x_ref, w_ref, o_ref):
+        # Input slabs overlap by fh-1 rows, which blocked index maps
+        # cannot express; the spec hands us the whole input and we carve
+        # the slab out with a dynamic row offset (a real TPU lowering
+        # would express this as an overlapping HBM->VMEM DMA schedule).
+        r = pl.program_id(1)
+        x = jax.lax.dynamic_slice(x_ref[...], (0, r * h_tile, 0), (cp, slab, w))
+        wt = w_ref[0]
+
+        def body(c, acc):
+            xc = jax.lax.dynamic_index_in_dim(x, c, 0, keepdims=False)
+            wc = jax.lax.dynamic_index_in_dim(wt, c, 0, keepdims=False)
+            for i in range(fh):
+                for j in range(fw):
+                    patch = jax.lax.slice(xc, (i, j), (i + h_tile, j + wo))
+                    acc = acc + ((patch * wc[i, j]) >> s).astype(jnp.int32)
+            return acc
+
+        o_ref[0] = jax.lax.fori_loop(0, cp, body, jnp.zeros((h_tile, wo), jnp.int32))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(co, ho // h_tile),
+        in_specs=[
+            pl.BlockSpec((cp, h, w), lambda o, r: (0, 0, 0)),
+            pl.BlockSpec((1, cp, fh, fw), lambda o, r: (o, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h_tile, wo), lambda o, r: (o, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((co, ho, wo), jnp.int32),
+        interpret=True,
+    )(xp.astype(dt), wp.astype(dt))

@@ -1,0 +1,106 @@
+"""Quantizers used by the L2 QNN (QAT forward) and the integer export path.
+
+Activations are quantized *unsigned* (post-ReLU range) and weights are
+quantized to unsigned levels around a zero-point — the representation
+the ULPPACK containers need (both packed halves must be non-negative).
+A weight level ``q`` represents the real value ``(q - zp) * scale`` with
+``zp = 2^(W-1) - 1`` (mid-rise symmetric), so the integer conv output is
+corrected by ``zp * sum(a_levels)`` per output pixel:
+
+    sum_a sum_w a*(q - zp)*s_w*s_a = s_w*s_a * (dot(a, q) - zp * sum(a))
+
+The correction term ``sum(a)`` is itself a conv2d with all-ones weights
+over the activation levels — cheap, and the rust QNN scheduler accounts
+its cycles explicitly (see rust/src/qnn).
+
+Gradients: straight-through estimator (STE) — identity inside the clip
+range, zero outside — the standard LSQ/PACT-style QAT recipe.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def act_qparams(x: jax.Array, bits: int) -> jax.Array:
+    """Calibration: scale so the 99.9th percentile maps to the top level."""
+    hi = jnp.percentile(jnp.abs(x), 99.9)
+    return jnp.maximum(hi, 1e-5) / (2**bits - 1)
+
+
+def weight_qparams(w: jax.Array, bits: int) -> jax.Array:
+    """SAWB-flavoured symmetric weight scale.
+
+    For >= 3 bits the max-magnitude rule works; at 2 bits (ternary
+    levels {-1, 0, +1}) it would zero out every weight below max/2, so
+    the scale follows the mean magnitude instead (threshold at
+    ~0.75*mean, the classic ternary-networks choice).
+    """
+    zp = 2 ** (bits - 1) - 1
+    if bits <= 2:
+        return jnp.maximum(1.5 * jnp.mean(jnp.abs(w)), 1e-5)
+    hi = jnp.max(jnp.abs(w))
+    return jnp.maximum(hi, 1e-5) / jnp.maximum(zp, 1)
+
+
+def quantize_act_levels(x: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Unsigned activation levels in [0, 2^bits - 1] (int32)."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, 0, 2**bits - 1).astype(jnp.int32)
+
+
+def quantize_weight_levels(w: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Unsigned weight levels in [0, 2^bits - 2] around zp = 2^(W-1)-1."""
+    zp = 2 ** (bits - 1) - 1
+    q = jnp.round(w / scale) + zp
+    return jnp.clip(q, 0, 2 * zp).astype(jnp.int32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant_act(x: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Quantize-dequantize activations with an STE gradient."""
+    lv = quantize_act_levels(x, bits, scale)
+    return lv.astype(jnp.float32) * scale
+
+
+def _fqa_fwd(x, bits, scale):
+    y = fake_quant_act(x, bits, scale)
+    mask = (x >= 0) & (x <= scale * (2**bits - 1))
+    return y, (mask, x, scale)
+
+
+def _fqa_bwd(bits, res, g):
+    mask, x, scale = res
+    gx = jnp.where(mask, g, 0.0)
+    # LSQ-lite scale gradient: d(quant)/d(scale) ~ (y - x)/scale clipped
+    gs = jnp.sum(jnp.where(mask, 0.0, g * jnp.sign(x)))
+    return gx, gs
+
+
+fake_quant_act.defvjp(_fqa_fwd, _fqa_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant_weight(w: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Quantize-dequantize weights (symmetric, STE gradient)."""
+    zp = 2 ** (bits - 1) - 1
+    lv = quantize_weight_levels(w, bits, scale)
+    return (lv.astype(jnp.float32) - zp) * scale
+
+
+def _fqw_fwd(w, bits, scale):
+    y = fake_quant_weight(w, bits, scale)
+    zp = 2 ** (bits - 1) - 1
+    mask = jnp.abs(w) <= scale * zp
+    return y, (mask,)
+
+
+def _fqw_bwd(bits, res, g):
+    (mask,) = res
+    return jnp.where(mask, g, 0.0), jnp.zeros(())
+
+
+fake_quant_weight.defvjp(_fqw_fwd, _fqw_bwd)

@@ -1,0 +1,254 @@
+"""Pure-jnp reference oracles for every Sparq kernel.
+
+This file is the single source of truth for the ULPPACK / ``vmacsr``
+arithmetic used across the whole repository (python pallas kernels, the
+rust functional simulator, and the rust kernel-stream builders all match
+these semantics; the rust side re-implements them and the cross-layer
+integration tests assert equality).
+
+ULPPACK P1 packing with k=2 operands per container
+--------------------------------------------------
+
+A *container* is an unsigned B-bit integer (B = 16 for the LP range,
+B = 8 for the ULP range) holding two sub-byte operands in its two
+S = B/2 bit halves.  Activations and weights are packed with *swapped*
+halves (the trick that makes a single modular multiply compute a 2-term
+dot product):
+
+    a_c = a0 + 2^S * a1          (activation container)
+    w_c = w1 + 2^S * w0          (weight container, swapped)
+
+    a_c * w_c  mod 2^B  =  (a0*w0 + a1*w1) * 2^S  +  a0*w1     (mod 2^B)
+                            ^^^^^^^^^^^^^^^ dot product ^^^ junk
+
+(the 2^B * a1*w0 term is annihilated by the B-bit modular multiply that
+any SEW=B SIMD multiplier performs).
+
+``vmacsr`` (Sparq's custom instruction) computes
+
+    acc <- acc + ((a_c * w_c  mod 2^B) >> S)        [logical shift]
+
+so each issue contributes ``a0*w0 + a1*w1 + floor(a0*w1 / 2^S)`` to the
+accumulator.  Within the *overflow-free region* (see ``in_region_*``)
+the floor term is zero and the per-issue dot product fits in S bits, so
+the accumulation is exact until the B-bit accumulator itself saturates
+(after which the kernel must spill into a wider accumulator; the rust
+kernel builders schedule those spills, and ``packed_conv2d_ref`` models
+an ideal wide accumulator which is what the pallas/TPU adaptation uses).
+
+The *native* (non-vmacsr) ULPPACK scheme instead accumulates the raw
+product for ``k_local`` issues and repairs with ``(acc >> S)`` — the
+junk field then grows by a0*w1 per issue and both fields must stay
+below 2^S, which is exactly the local-accumulation constraint the paper
+removes with ``vmacsr``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Container parameterisation: (numpy dtype name, container bits B, shift S).
+LP = ("uint16", 16, 8)  # Low-Precision range: 16-bit containers
+ULP = ("uint8", 8, 4)  # Ultra-Low-Precision range: 8-bit containers
+
+_DTYPES = {16: jnp.uint16, 8: jnp.uint8}
+
+
+# ---------------------------------------------------------------------------
+# Overflow-free region calculus (mirrored by rust `ulppack::region`)
+# ---------------------------------------------------------------------------
+
+def dot_term_max(w_bits: int, a_bits: int) -> int:
+    """Worst-case per-issue dot product a0*w0 + a1*w1."""
+    return 2 * (2**a_bits - 1) * (2**w_bits - 1)
+
+
+def junk_term_max(w_bits: int, a_bits: int) -> int:
+    """Worst-case per-issue junk term a0*w1."""
+    return (2**a_bits - 1) * (2**w_bits - 1)
+
+
+def in_region_strict(w_bits: int, a_bits: int, shift: int) -> bool:
+    """Worst-case-guaranteed overflow-free (vmacsr, single issue)."""
+    return dot_term_max(w_bits, a_bits) <= 2**shift - 1
+
+
+def in_region_paper(w_bits: int, a_bits: int, shift: int) -> bool:
+    """The paper's operating region: W + A <= S (Fig. 5).
+
+    For S=8 (LP) this is W+A <= 8 which admits W4A4 (the 1.7x headline);
+    for S=4 (ULP) it admits W2A2 (the 3.2x headline).  Inside this
+    region the *typical* dot product of LSQ-style quantized tensors fits
+    in S bits even though the adversarial worst case does not; see
+    EXPERIMENTS.md for measured overflow rates.
+    """
+    return w_bits + a_bits <= shift
+
+
+def native_local_accumulations(w_bits: int, a_bits: int, shift: int) -> int:
+    """How many raw products the native scheme may accumulate before the
+    S-bit dot/junk fields can overflow (worst case).  0 = not possible."""
+    d, j = dot_term_max(w_bits, a_bits), junk_term_max(w_bits, a_bits)
+    if d == 0:
+        return 2**shift - 1
+    if d > 2**shift - 1:
+        return 0
+    return min((2**shift - 1) // d, (2**shift - 1) // max(j, 1))
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+def pack_activations_ref(levels, container_bits: int) -> jnp.ndarray:
+    """Pack unsigned activation levels pairwise along axis 0 (channels).
+
+    levels: (C, H, W) integer array, C even.  Returns (C//2, H, W) of
+    uint{container_bits} with ``out[c] = lv[2c] + (lv[2c+1] << S)``.
+    """
+    dt = _DTYPES[container_bits]
+    s = container_bits // 2
+    lv = jnp.asarray(levels).astype(dt)
+    return (lv[0::2] | (lv[1::2] << s)).astype(dt)
+
+
+def pack_weights_ref(levels, container_bits: int) -> jnp.ndarray:
+    """Pack unsigned weight levels pairwise along axis 1 (in-channels),
+    with swapped halves: ``out[o, c] = lv[o, 2c+1] + (lv[o, 2c] << S)``.
+
+    levels: (Co, C, Fh, Fw); returns (Co, C//2, Fh, Fw).
+    """
+    dt = _DTYPES[container_bits]
+    s = container_bits // 2
+    lv = jnp.asarray(levels).astype(dt)
+    return (lv[:, 1::2] | (lv[:, 0::2] << s)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Convolutions
+# ---------------------------------------------------------------------------
+
+def conv2d_int_ref(x, w) -> jnp.ndarray:
+    """Plain integer 'valid' conv2d, channel-first, int32 accumulation.
+
+    x: (C, H, W) levels; w: (Co, C, Fh, Fw) levels -> (Co, Ho, Wo) int32.
+    This is the ground truth every packed implementation must match
+    inside its overflow-free region.
+    """
+    x = jnp.asarray(x).astype(jnp.int32)
+    w = jnp.asarray(w).astype(jnp.int32)
+    co, c, fh, fw = w.shape
+    _, h, wd = x.shape
+    ho, wo = h - fh + 1, wd - fw + 1
+    out = jnp.zeros((co, ho, wo), jnp.int32)
+    for i in range(fh):
+        for j in range(fw):
+            patch = x[:, i : i + ho, j : j + wo]  # (C, Ho, Wo)
+            out = out + jnp.einsum("chw,oc->ohw", patch, w[:, :, i, j])
+    return out
+
+
+def packed_conv2d_ref(xp, wp, container_bits: int) -> jnp.ndarray:
+    """vmacsr-dataflow packed conv2d with an ideal wide accumulator.
+
+    xp: (Cp, H, W) packed activations, wp: (Co, Cp, Fh, Fw) packed
+    weights (both uint{container_bits}).  Per product:
+        contrib = ((xp * wp) mod 2^B) >> S        (logical)
+    accumulated in int32 -> (Co, Ho, Wo) int32.
+    """
+    dt = _DTYPES[container_bits]
+    s = container_bits // 2
+    xp = jnp.asarray(xp).astype(dt)
+    wp = jnp.asarray(wp).astype(dt)
+    co, cp, fh, fw = wp.shape
+    _, h, wd = xp.shape
+    ho, wo = h - fh + 1, wd - fw + 1
+    acc = jnp.zeros((co, ho, wo), jnp.int32)
+    for i in range(fh):
+        for j in range(fw):
+            patch = xp[:, i : i + ho, j : j + wo]  # (Cp, Ho, Wo)
+            # modular multiply at container width, per output channel
+            prod = patch[None] * wp[:, :, i, j][:, :, None, None]
+            contrib = (prod >> s).astype(jnp.int32)
+            acc = acc + contrib.sum(axis=1)
+    return acc
+
+
+def packed_conv2d_hw_ref(xp, wp, container_bits: int, spill_every: int = 0):
+    """Hardware-exact vmacsr conv2d: accumulator is *container-width* and
+    wraps, with optional periodic spills into an int32 accumulator every
+    ``spill_every`` issues (0 = never spill, matching a single
+    container-width accumulator register).  Mirrors what the rust
+    simulator executes; used by cross-layer equivalence tests.
+    """
+    dt = np.dtype(f"uint{container_bits}")
+    s = container_bits // 2
+    xp = np.asarray(xp).astype(dt)
+    wp = np.asarray(wp).astype(dt)
+    co, cp, fh, fw = wp.shape
+    _, h, wd = xp.shape
+    ho, wo = h - fh + 1, wd - fw + 1
+    wide = np.zeros((co, ho, wo), np.int64)
+    narrow = np.zeros((co, ho, wo), dt)
+    issues = 0
+    with np.errstate(over="ignore"):
+        for c in range(cp):
+            for i in range(fh):
+                for j in range(fw):
+                    patch = xp[c, i : i + ho, j : j + wo]
+                    prod = (patch[None] * wp[:, c, i, j][:, None, None]).astype(dt)
+                    narrow = (narrow + (prod >> s)).astype(dt)
+                    issues += 1
+                    if spill_every and issues % spill_every == 0:
+                        wide += narrow.astype(np.int64)
+                        narrow = np.zeros_like(narrow)
+    wide += narrow.astype(np.int64)
+    return jnp.asarray(wide.astype(np.int32))
+
+
+def native_packed_conv2d_ref(xp, wp, container_bits: int, k_local: int):
+    """Native (no-vmacsr) ULPPACK conv2d: raw products accumulate in a
+    container-width register for k_local issues, then are repaired with
+    a logical shift and added to an int32 accumulator (the vsrl+vadd
+    sequence the paper's Fig. 2 removes).
+    """
+    dt = np.dtype(f"uint{container_bits}")
+    s = container_bits // 2
+    xp = np.asarray(xp).astype(dt)
+    wp = np.asarray(wp).astype(dt)
+    co, cp, fh, fw = wp.shape
+    _, h, wd = xp.shape
+    ho, wo = h - fh + 1, wd - fw + 1
+    wide = np.zeros((co, ho, wo), np.int64)
+    local = np.zeros((co, ho, wo), dt)
+    n = 0
+    with np.errstate(over="ignore"):
+        for c in range(cp):
+            for i in range(fh):
+                for j in range(fw):
+                    patch = xp[c, i : i + ho, j : j + wo]
+                    prod = (patch[None] * wp[:, c, i, j][:, None, None]).astype(dt)
+                    local = (local + prod).astype(dt)
+                    n += 1
+                    if n % max(k_local, 1) == 0:
+                        wide += (local >> s).astype(np.int64)
+                        local = np.zeros_like(local)
+    wide += (local >> s).astype(np.int64)
+    return jnp.asarray(wide.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Quantization reference
+# ---------------------------------------------------------------------------
+
+def quantize_levels_ref(x, bits: int, scale: float) -> jnp.ndarray:
+    """Unsigned uniform quantizer: levels = clip(round(x/scale), 0, 2^b-1)."""
+    q = jnp.round(jnp.asarray(x, jnp.float32) / jnp.float32(scale))
+    return jnp.clip(q, 0, 2**bits - 1).astype(jnp.int32)
+
+
+def fake_quant_ref(x, bits: int, scale: float) -> jnp.ndarray:
+    """Quantize-dequantize (the value a QAT forward pass sees)."""
+    lv = quantize_levels_ref(x, bits, scale)
+    return lv.astype(jnp.float32) * jnp.float32(scale)

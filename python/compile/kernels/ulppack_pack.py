@@ -1,0 +1,80 @@
+"""Pallas kernels for ULPPACK P1 packing (k=2 operands per container).
+
+These are the L1 packing kernels: they take unsigned quantization levels
+and produce packed containers (see ``ref.py`` for the arithmetic).  They
+are written for TPU-style tiling — each grid step owns one output
+container channel, so the (2, H, W) input block and the (1, H, W) output
+block are VMEM-resident — and run under ``interpret=True`` so the same
+HLO executes on the CPU PJRT client the rust runtime uses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_DTYPES = {16: jnp.uint16, 8: jnp.uint8}
+
+
+def _pack_act_kernel(x_ref, o_ref, *, shift):
+    """One packed channel: o = x[0] | (x[1] << S)."""
+    lo = x_ref[0]
+    hi = x_ref[1]
+    o_ref[0] = lo | (hi << shift)
+
+
+def _pack_wgt_kernel(w_ref, o_ref, *, shift):
+    """One packed in-channel (swapped halves): o = w[:,1] | (w[:,0] << S)."""
+    lo = w_ref[:, 1]
+    hi = w_ref[:, 0]
+    o_ref[:, 0] = lo | (hi << shift)
+
+
+@functools.partial(jax.jit, static_argnames=("container_bits",))
+def pack_activations(levels: jax.Array, container_bits: int = 16) -> jax.Array:
+    """Pack (C, H, W) unsigned levels -> (C//2, H, W) containers.
+
+    ``levels`` may be any integer dtype; values must already be within
+    [0, 2^S - 1].  Channel c of the output holds input channels (2c,
+    2c+1) with 2c in the low half — matching ``ref.pack_activations_ref``
+    and the rust `ulppack::pack` module.
+    """
+    dt = _DTYPES[container_bits]
+    s = container_bits // 2
+    c, h, w = levels.shape
+    assert c % 2 == 0, "channel count must be even for k=2 packing"
+    lv = levels.astype(dt)
+    return pl.pallas_call(
+        functools.partial(_pack_act_kernel, shift=s),
+        grid=(c // 2,),
+        in_specs=[pl.BlockSpec((2, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c // 2, h, w), dt),
+        interpret=True,
+    )(lv)
+
+
+@functools.partial(jax.jit, static_argnames=("container_bits",))
+def pack_weights(levels: jax.Array, container_bits: int = 16) -> jax.Array:
+    """Pack (Co, C, Fh, Fw) unsigned weight levels -> (Co, C//2, Fh, Fw).
+
+    Halves are *swapped* relative to activations (w[2c] lands in the high
+    half) so a single modular multiply aligns a0*w0 + a1*w1 in the dot
+    field — see ref.py's derivation.
+    """
+    dt = _DTYPES[container_bits]
+    s = container_bits // 2
+    co, c, fh, fw = levels.shape
+    assert c % 2 == 0, "in-channel count must be even for k=2 packing"
+    lv = levels.astype(dt)
+    return pl.pallas_call(
+        functools.partial(_pack_wgt_kernel, shift=s),
+        grid=(c // 2,),
+        in_specs=[pl.BlockSpec((co, 2, fh, fw), lambda i: (0, i, 0, 0))],
+        out_specs=pl.BlockSpec((co, 1, fh, fw), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((co, c // 2, fh, fw), dt),
+        interpret=True,
+    )(lv)

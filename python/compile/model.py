@@ -1,0 +1,229 @@
+"""L2 — SparqCNN: the quantized CNN whose conv layers route through the
+L1 packed kernels.
+
+Two forward paths over the same trained parameters:
+
+* ``forward_qat``   — float fake-quant (STE) path used for training and
+  for the FP32 reference (bits=None).  Convolutions are
+  ``lax.conv_general_dilated`` so training is fast.
+* ``forward_packed``— the *deployed* integer path exported to HLO: per
+  quantized conv layer, activations are quantized to unsigned levels,
+  ULPPACK-packed (L1 pallas kernel), convolved with the packed weights
+  via the vmacsr-dataflow pallas kernel, zero-point-corrected and
+  rescaled.  This is the graph the rust runtime serves; python never
+  runs at inference time.
+
+Architecture (channel-first, 16x16 single-channel inputs, 4 classes):
+
+    conv1 1->16  3x3 same   relu   (stem kept at 8-bit acts, fp weights)
+    conv2 16->32 3x3 same   relu   maxpool2          [packed sub-byte]
+    conv3 32->32 3x3 same   relu   maxpool2          [packed sub-byte]
+    GAP -> fc 32->4
+
+The stem convolution is kept high-precision like most sub-byte QNN
+recipes (the paper's Table I models do the same); conv2/conv3 carry the
+W/A sub-byte configuration under test.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import quant
+from .kernels.packed_conv2d import packed_conv2d
+from .kernels.ulppack_pack import pack_activations, pack_weights
+
+NUM_CLASSES = 4
+STEM_BITS = 8
+
+
+class QConfig(NamedTuple):
+    """Per-model quantization config; ``None`` bits = FP32 everywhere."""
+
+    w_bits: Optional[int]
+    a_bits: Optional[int]
+
+    @property
+    def is_fp32(self) -> bool:
+        return self.w_bits is None
+
+    @property
+    def container_bits(self) -> int:
+        """LP (16-bit containers) vs ULP (8-bit) — the paper's Fig. 5
+        mapping: W+A <= 4 fits the ULP range, otherwise LP."""
+        assert self.w_bits is not None and self.a_bits is not None
+        return 8 if self.w_bits + self.a_bits <= 4 else 16
+
+
+def init_params(seed: int = 0) -> dict:
+    """He-initialised parameters, channel-first layouts."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+
+    def conv_init(key, co, ci, f):
+        fan_in = ci * f * f
+        return jax.random.normal(key, (co, ci, f, f), jnp.float32) * np.sqrt(2.0 / fan_in)
+
+    return {
+        "conv1_w": conv_init(ks[0], 16, 1, 3),
+        "conv1_b": jnp.zeros((16,), jnp.float32),
+        "conv2_w": conv_init(ks[1], 32, 16, 3),
+        "conv2_b": jnp.zeros((32,), jnp.float32),
+        "conv3_w": conv_init(ks[2], 32, 32, 3),
+        "conv3_b": jnp.zeros((32,), jnp.float32),
+        "fc_w": jax.random.normal(ks[3], (NUM_CLASSES, 32), jnp.float32) * 0.1,
+        "fc_b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+
+
+def _conv_same(x: jax.Array, w: jax.Array) -> jax.Array:
+    """NCHW 'same' convolution (float)."""
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def calibrate(params: dict, cfg: QConfig, x_cal: jax.Array) -> dict:
+    """One float forward over a calibration batch to fix all scales.
+
+    Returns the frozen quantization state (scales for activations at the
+    input of conv2/conv3 and for each quantized weight tensor).
+    """
+    h1 = jax.nn.relu(_conv_same(x_cal, params["conv1_w"]) + params["conv1_b"][:, None, None])
+    h2 = jax.nn.relu(_conv_same(h1, params["conv2_w"]) + params["conv2_b"][:, None, None])
+    h2p = _maxpool2(h2)
+    qs = {}
+    if not cfg.is_fp32:
+        qs["a2"] = quant.act_qparams(h1, cfg.a_bits)
+        qs["a3"] = quant.act_qparams(h2p, cfg.a_bits)
+        qs["w2"] = quant.weight_qparams(params["conv2_w"], cfg.w_bits)
+        qs["w3"] = quant.weight_qparams(params["conv3_w"], cfg.w_bits)
+    return jax.tree.map(jax.lax.stop_gradient, qs)
+
+
+def forward_qat(params: dict, qstate: dict, cfg: QConfig, x: jax.Array) -> jax.Array:
+    """Float/fake-quant forward (training + FP32 reference). x: (N,1,16,16)."""
+    h = jax.nn.relu(_conv_same(x, params["conv1_w"]) + params["conv1_b"][:, None, None])
+    if not cfg.is_fp32:
+        h = quant.fake_quant_act(h, cfg.a_bits, qstate["a2"])
+        w2 = quant.fake_quant_weight(params["conv2_w"], cfg.w_bits, qstate["w2"])
+    else:
+        w2 = params["conv2_w"]
+    h = jax.nn.relu(_conv_same(h, w2) + params["conv2_b"][:, None, None])
+    h = _maxpool2(h)
+    if not cfg.is_fp32:
+        h = quant.fake_quant_act(h, cfg.a_bits, qstate["a3"])
+        w3 = quant.fake_quant_weight(params["conv3_w"], cfg.w_bits, qstate["w3"])
+    else:
+        w3 = params["conv3_w"]
+    h = jax.nn.relu(_conv_same(h, w3) + params["conv3_b"][:, None, None])
+    h = _maxpool2(h)
+    feat = jnp.mean(h, axis=(2, 3))  # GAP -> (N, 32)
+    return feat @ params["fc_w"].T + params["fc_b"]
+
+
+def _sum_conv_same(levels: jax.Array, f: int) -> jax.Array:
+    """'Same' conv of integer levels with an all-ones FxF kernel — the
+    zero-point correction term, computed by static slicing (int32)."""
+    n, c, h, w = levels.shape
+    pad = f // 2
+    xp = jnp.pad(levels, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    out = jnp.zeros((n, h, w), jnp.int32)
+    for i in range(f):
+        for j in range(f):
+            out = out + xp[:, :, i : i + h, j : j + w].sum(axis=1)
+    return out
+
+
+def _packed_qconv_same(x_levels: jax.Array, w_levels: jax.Array, cfg: QConfig):
+    """'Same' packed conv over a batch of unsigned activation levels.
+
+    x_levels: (N, C, H, W) int32; w_levels: (Co, C, F, F) int32 unsigned
+    levels (zero-point offset included).  Returns (dot, sum_a) where
+    dot[n,o,h,w] = sum a*q  (int32) via the L1 pallas kernel and
+    sum_a[n,h,w] is the zero-point correction conv.
+    """
+    b = cfg.container_bits
+    f = w_levels.shape[-1]
+    pad = f // 2
+    xp = jnp.pad(x_levels, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    packed_w = pack_weights(w_levels, b)
+    packed_x = jax.vmap(lambda img: pack_activations(img, b))(xp)
+    dot = jax.vmap(lambda img: packed_conv2d(img, packed_w, b))(packed_x)
+    return dot, _sum_conv_same(x_levels, f)
+
+
+def forward_packed(params: dict, qstate: dict, cfg: QConfig, x: jax.Array) -> jax.Array:
+    """Deployed integer forward: conv2/conv3 go through the ULPPACK
+    pallas kernels with zero-point correction.  Matches the layer math
+    the rust Sparq simulator executes."""
+    assert not cfg.is_fp32, "packed path needs a quantized config"
+    h = jax.nn.relu(_conv_same(x, params["conv1_w"]) + params["conv1_b"][:, None, None])
+
+    for name, scale_a, scale_w in (("conv2", "a2", "w2"), ("conv3", "a3", "w3")):
+        w_bits, a_bits = cfg.w_bits, cfg.a_bits
+        zp = 2 ** (w_bits - 1) - 1
+        s_a, s_w = qstate[scale_a], qstate[scale_w]
+        a_lv = quant.quantize_act_levels(h, a_bits, s_a)
+        w_lv = quant.quantize_weight_levels(params[f"{name}_w"], w_bits, s_w)
+        dot, sum_a = _packed_qconv_same(a_lv, w_lv, cfg)
+        acc = dot - zp * sum_a[:, None, :, :]
+        y = acc.astype(jnp.float32) * (s_a * s_w) + params[f"{name}_b"][None, :, None, None]
+        h = _maxpool2(jax.nn.relu(y))
+
+    feat = jnp.mean(h, axis=(2, 3))
+    return feat @ params["fc_w"].T + params["fc_b"]
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, qstate, cfg, x, y):
+    logits = forward_qat(params, qstate, cfg, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr", "momentum"))
+def train_step(params, vel, qstate, cfg, x, y, lr=0.05, momentum=0.9):
+    l, g = jax.value_and_grad(loss_fn)(params, qstate, cfg, x, y)
+    vel = jax.tree.map(lambda v, gi: momentum * v - lr * gi, vel, g)
+    params = jax.tree.map(lambda p, v: p + v, params, vel)
+    return params, vel, l
+
+
+def train(params, qstate, cfg, images, labels, steps=400, batch=64, seed=0):
+    """Minibatch SGD+momentum; returns (params, losses per 50 steps)."""
+    rng = np.random.default_rng(seed)
+    vel = jax.tree.map(jnp.zeros_like, params)
+    x = jnp.asarray(images)
+    y = jnp.asarray(labels)
+    n = x.shape[0]
+    losses = []
+    for step in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, vel, l = train_step(params, vel, qstate, cfg, x[idx], y[idx])
+        if step % 50 == 0 or step == steps - 1:
+            losses.append((step, float(l)))
+    return params, losses
+
+
+def accuracy(forward, params, qstate, cfg, images, labels, batch=64) -> float:
+    n = images.shape[0]
+    correct = 0
+    for i in range(0, n, batch):
+        logits = forward(params, qstate, cfg, jnp.asarray(images[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == jnp.asarray(labels[i : i + batch])))
+    return correct / n

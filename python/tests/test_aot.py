@@ -1,0 +1,79 @@
+"""AOT bridge: HLO text emission invariants the rust loader depends on."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import to_hlo_text, standalone_kernel
+
+
+def test_hlo_text_header_and_tuple_root():
+    """Text (not proto) interchange; root must be a tuple so the rust
+    side can `to_tuple1()` uniformly."""
+    spec = jax.ShapeDtypeStruct((16, 18, 18), jnp.int32)
+    wspec = jax.ShapeDtypeStruct((8, 16, 3, 3), jnp.int32)
+    lowered = jax.jit(standalone_kernel(16)).lower(spec, wspec)
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "s32[8,16,16]" in text  # output shape present
+    assert "ROOT tuple" in text  # tuple-wrapped root (return_tuple=True)
+
+
+def test_standalone_kernel_is_pure_hlo():
+    """interpret=True pallas must lower to plain HLO ops — no custom
+    calls the CPU PJRT client can't execute."""
+    spec = jax.ShapeDtypeStruct((16, 18, 18), jnp.int32)
+    wspec = jax.ShapeDtypeStruct((8, 16, 3, 3), jnp.int32)
+    lowered = jax.jit(standalone_kernel(8)).lower(spec, wspec)
+    text = to_hlo_text(lowered)
+    assert "custom-call" not in text.lower(), "Mosaic custom-call leaked into AOT artifact"
+
+
+def test_no_elided_constants():
+    """The HLO printer must not elide large constants — the rust text
+    parser reads `constant({...})` as zeros, silently destroying the
+    baked weights (this was a real bug)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    big = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)), jnp.float32)
+    fn = lambda x: (x @ big,)
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 64), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "constant({...})" not in text
+    assert "..." not in text.split("ENTRY")[1], "elided constant leaked into entry"
+
+
+@pytest.mark.slow
+def test_full_aot_quick_run(tmp_path):
+    """End-to-end `make artifacts` in quick mode into a temp dir."""
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--quick"],
+        cwd=root,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    names = os.listdir(tmp_path)
+    for expected in (
+        "qnn_fp32.hlo.txt",
+        "qnn_w4a4.hlo.txt",
+        "qnn_w3a3.hlo.txt",
+        "qnn_w2a2.hlo.txt",
+        "packed_conv2d_lp.hlo.txt",
+        "packed_conv2d_ulp.hlo.txt",
+        "testset.bin",
+        "manifest.txt",
+        "train_log.txt",
+    ):
+        assert expected in names, expected
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert len([l for l in manifest.splitlines() if l.startswith("artifact")]) == 6

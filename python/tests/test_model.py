@@ -1,0 +1,81 @@
+"""L2 model: shapes, training sanity, and QAT-vs-packed-path agreement."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import dataset, model
+from compile.kernels import quant
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """One small FP32 training run shared by the module's tests."""
+    x, y = dataset.make_dataset(512, seed=3)
+    params = model.init_params(seed=3)
+    params, losses = model.train(params, {}, model.QConfig(None, None), x, y, steps=120)
+    return params, x, y, losses
+
+
+def test_forward_shapes(trained):
+    params, x, _, _ = trained
+    logits = model.forward_qat(params, {}, model.QConfig(None, None), jnp.asarray(x[:8]))
+    assert logits.shape == (8, model.NUM_CLASSES)
+
+
+def test_training_reduces_loss(trained):
+    _, _, _, losses = trained
+    assert losses[-1][1] < losses[0][1]
+
+
+def test_fp32_learns_the_task(trained):
+    params, x, y, _ = trained
+    acc = model.accuracy(model.forward_qat, params, {}, model.QConfig(None, None), x, y)
+    assert acc > 0.9, f"fp32 train accuracy only {acc}"
+
+
+@pytest.mark.parametrize("wb,ab", [(4, 4), (3, 3)])
+def test_packed_path_agrees_with_qat_path(trained, wb, ab):
+    """The deployed integer path must predict (almost) the same classes
+    as the float fake-quant path it was trained with."""
+    params, x, y, _ = trained
+    cfg = model.QConfig(wb, ab)
+    qstate = model.calibrate(params, cfg, jnp.asarray(x[:128]))
+    lq = model.forward_qat(params, qstate, cfg, jnp.asarray(x[:64]))
+    lp = model.forward_packed(params, qstate, cfg, jnp.asarray(x[:64]))
+    agree = np.mean(np.argmax(np.asarray(lq), 1) == np.argmax(np.asarray(lp), 1))
+    assert agree > 0.92, f"W{wb}A{ab} agreement {agree}"
+
+
+def test_container_selection_matches_paper_mapping():
+    assert model.QConfig(2, 2).container_bits == 8  # ULP
+    assert model.QConfig(1, 1).container_bits == 8
+    assert model.QConfig(3, 3).container_bits == 16  # LP
+    assert model.QConfig(4, 4).container_bits == 16
+
+
+def test_calibrate_returns_positive_scales(trained):
+    params, x, _, _ = trained
+    qs = model.calibrate(params, model.QConfig(3, 3), jnp.asarray(x[:64]))
+    for k, v in qs.items():
+        assert float(v) > 0, k
+
+
+def test_dataset_is_balanced_and_bounded():
+    x, y = dataset.make_dataset(400, seed=0)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    counts = np.bincount(y, minlength=4)
+    assert counts.min() > 50  # roughly balanced
+
+
+def test_dataset_roundtrip_raw(tmp_path):
+    x, y = dataset.make_dataset(10, seed=1)
+    p = tmp_path / "t.bin"
+    dataset.save_raw(str(p), x, y)
+    raw = p.read_bytes()
+    assert raw[:4] == b"SPQD"
+    n, c, h, w = np.frombuffer(raw[4:20], "<u4")
+    assert (n, c, h, w) == (10, 1, 16, 16)
+    data = np.frombuffer(raw[20 : 20 + 4 * n * c * h * w], "<f4").reshape(10, 1, 16, 16)
+    labels = np.frombuffer(raw[20 + 4 * n * c * h * w :], np.uint8)
+    assert np.allclose(data, x) and np.array_equal(labels, y)

@@ -1,0 +1,77 @@
+"""Hypothesis sweeps: pallas packing kernels vs the jnp reference."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ulppack_pack import pack_activations, pack_weights
+
+settings.register_profile("sparq", deadline=None, max_examples=25)
+settings.load_profile("sparq")
+
+
+shapes = st.tuples(
+    st.sampled_from([2, 4, 6, 8, 16]),  # C (even)
+    st.integers(3, 12),  # H
+    st.integers(3, 12),  # W
+)
+
+
+@given(shapes, st.sampled_from([8, 16]), st.integers(0, 2**31 - 1))
+def test_pack_activations_matches_ref(shape, bits, seed):
+    c, h, w = shape
+    s = bits // 2
+    rng = np.random.default_rng(seed)
+    lv = rng.integers(0, 2**s, (c, h, w))
+    got = np.asarray(pack_activations(jnp.asarray(lv), bits))
+    want = np.asarray(ref.pack_activations_ref(lv, bits))
+    assert got.dtype == want.dtype
+    assert np.array_equal(got, want)
+
+
+@given(
+    st.sampled_from([1, 2, 4, 8]),  # Co
+    st.sampled_from([2, 4, 8, 16]),  # C
+    st.sampled_from([1, 3, 5, 7]),  # F
+    st.sampled_from([8, 16]),
+    st.integers(0, 2**31 - 1),
+)
+def test_pack_weights_matches_ref(co, c, f, bits, seed):
+    s = bits // 2
+    rng = np.random.default_rng(seed)
+    lv = rng.integers(0, 2**s, (co, c, f, f))
+    got = np.asarray(pack_weights(jnp.asarray(lv), bits))
+    want = np.asarray(ref.pack_weights_ref(lv, bits))
+    assert np.array_equal(got, want)
+
+
+@given(shapes, st.sampled_from([8, 16]), st.integers(0, 2**31 - 1))
+def test_pack_roundtrip(shape, bits, seed):
+    """Unpacking both halves recovers the original levels."""
+    c, h, w = shape
+    s = bits // 2
+    rng = np.random.default_rng(seed)
+    lv = rng.integers(0, 2**s, (c, h, w))
+    packed = np.asarray(pack_activations(jnp.asarray(lv), bits)).astype(np.uint32)
+    lo = packed & (2**s - 1)
+    hi = packed >> s
+    assert np.array_equal(lo, lv[0::2])
+    assert np.array_equal(hi, lv[1::2])
+
+
+def test_pack_rejects_odd_channels():
+    import pytest
+
+    with pytest.raises(AssertionError):
+        pack_activations(jnp.zeros((3, 4, 4), jnp.int32), 16)
+
+
+def test_weight_halves_are_swapped():
+    """The defining ULPPACK P1 property: act half order != weight half order."""
+    lv = np.arange(2 * 1 * 1 * 1).reshape(1, 2, 1, 1) + 1  # w[:,0]=1, w[:,1]=2
+    packed = int(np.asarray(pack_weights(jnp.asarray(lv), 16))[0, 0, 0, 0])
+    assert packed == 2 + (1 << 8)  # low half = lv[:,1], high half = lv[:,0]
+    av = np.arange(2)[:, None, None] + 1  # a[0]=1, a[1]=2
+    packed_a = int(np.asarray(pack_activations(jnp.asarray(av), 16))[0, 0, 0])
+    assert packed_a == 1 + (2 << 8)  # low half = lv[0], high half = lv[1]

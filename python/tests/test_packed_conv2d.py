@@ -1,0 +1,130 @@
+"""Hypothesis sweeps of the L1 packed conv2d pallas kernel.
+
+The contract: inside the *strict* overflow-free region the packed kernel
+equals the plain integer conv oracle exactly; everywhere it equals the
+packed-arithmetic reference (which is what the hardware computes).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.packed_conv2d import packed_conv2d, packed_conv2d_tiled
+from compile.kernels.ulppack_pack import pack_activations, pack_weights
+
+settings.register_profile("sparq", deadline=None, max_examples=20)
+settings.load_profile("sparq")
+
+
+def _strict_pairs(container_bits):
+    s = container_bits // 2
+    return [
+        (w, a)
+        for w in range(1, 5)
+        for a in range(1, 5)
+        if ref.in_region_strict(w, a, s)
+    ]
+
+
+conv_cases = st.tuples(
+    st.sampled_from([2, 4, 8, 16]),  # C
+    st.integers(4, 10),  # H
+    st.integers(4, 10),  # W
+    st.sampled_from([1, 2, 4]),  # Co
+    st.sampled_from([1, 3]),  # F
+)
+
+
+@given(conv_cases, st.sampled_from([8, 16]), st.integers(0, 2**31 - 1))
+def test_packed_conv_equals_oracle_in_strict_region(case, bits, seed):
+    c, h, w, co, f = case
+    if f >= h or f >= w:
+        return
+    s = bits // 2
+    rng = np.random.default_rng(seed)
+    pairs = _strict_pairs(bits)
+    wb, ab = pairs[seed % len(pairs)]
+    x = rng.integers(0, 2**ab, (c, h, w))
+    wt = rng.integers(0, 2**wb, (co, c, f, f))
+    xp = pack_activations(jnp.asarray(x), bits)
+    wp = pack_weights(jnp.asarray(wt), bits)
+    got = np.asarray(packed_conv2d(xp, wp, bits))
+    oracle = np.asarray(ref.conv2d_int_ref(x, wt))
+    assert np.array_equal(got, oracle), f"W{wb}A{ab} B{bits}"
+
+
+@given(conv_cases, st.sampled_from([8, 16]), st.integers(0, 2**31 - 1))
+def test_packed_conv_equals_packed_reference_always(case, bits, seed):
+    """Even outside the region (arbitrary containers) the pallas kernel
+    must match the packed-arithmetic reference bit-exactly."""
+    c, h, w, co, f = case
+    if f >= h or f >= w:
+        return
+    rng = np.random.default_rng(seed)
+    xp = rng.integers(0, 2**bits, (c // 2 or 1, h, w)).astype(f"uint{bits}")
+    wp = rng.integers(0, 2**bits, (co, c // 2 or 1, f, f)).astype(f"uint{bits}")
+    got = np.asarray(packed_conv2d(jnp.asarray(xp), jnp.asarray(wp), bits))
+    want = np.asarray(ref.packed_conv2d_ref(xp, wp, bits))
+    assert np.array_equal(got, want)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_tiled_variant_matches_untiled(seed):
+    rng = np.random.default_rng(seed)
+    c, h, w, co, f = 8, 11, 12, 4, 4
+    xp = rng.integers(0, 2**16, (c, h, w)).astype(np.uint16)
+    wp = rng.integers(0, 2**16, (co, c, f, f)).astype(np.uint16)
+    a = np.asarray(packed_conv2d(jnp.asarray(xp), jnp.asarray(wp), 16))
+    b = np.asarray(packed_conv2d_tiled(jnp.asarray(xp), jnp.asarray(wp), 16, h_tile=4))
+    assert np.array_equal(a, b)
+
+
+def test_w4a4_paper_mode_on_realistic_data():
+    """W4A4 is outside the strict region; with realistic (gaussian-ish,
+    symmetric-quantized) tensors the packed result should still match
+    the oracle almost everywhere.  This documents the paper-mode bet."""
+    rng = np.random.default_rng(3)
+    c, h, w, co, f = 16, 12, 12, 8, 3
+    # levels concentrated near the middle like LSQ-quantized tensors
+    x = np.clip(rng.normal(4, 2.2, (c, h, w)).round(), 0, 15).astype(np.int64)
+    wt = np.clip(rng.normal(7, 2.4, (co, c, f, f)).round(), 0, 14).astype(np.int64)
+    xp = pack_activations(jnp.asarray(x), 16)
+    wp = pack_weights(jnp.asarray(wt), 16)
+    got = np.asarray(packed_conv2d(xp, wp, 16))
+    oracle = np.asarray(ref.conv2d_int_ref(x, wt))
+    agree = np.mean(got == oracle)
+    assert agree > 0.95, f"paper-mode agreement too low: {agree}"
+
+
+def test_hw_ref_spills_never_change_result_in_region():
+    """Spill cadence is a performance knob, not a correctness knob,
+    inside the strict region (W2A2 @ LP, small reduction)."""
+    rng = np.random.default_rng(11)
+    x = rng.integers(0, 4, (8, 8, 8))
+    wt = rng.integers(0, 4, (2, 8, 3, 3))
+    xp = np.asarray(pack_activations(jnp.asarray(x), 16))
+    wp = np.asarray(pack_weights(jnp.asarray(wt), 16))
+    oracle = np.asarray(ref.conv2d_int_ref(x, wt))
+    for spill in (0, 1, 3, 7, 16):
+        got = np.asarray(ref.packed_conv2d_hw_ref(xp, wp, 16, spill_every=spill))
+        assert np.array_equal(got, oracle), f"spill={spill}"
+
+
+def test_native_scheme_overflows_exactly_where_calculus_says():
+    """Adversarial all-max data: k_local accumulations are safe, and
+    k_local+1 must corrupt at least one output (the calculus is tight
+    for the junk field at W1A1/ULP)."""
+    wb = ab = 1
+    k = ref.native_local_accumulations(wb, ab, 4)
+    c, f = 32, 3  # plenty of reduction depth
+    x = np.ones((c, 6, 6), np.int64)
+    wt = np.ones((1, c, f, f), np.int64)
+    xp = np.asarray(ref.pack_activations_ref(x, 8))
+    wp = np.asarray(ref.pack_weights_ref(wt, 8))
+    oracle = np.asarray(ref.conv2d_int_ref(x, wt))
+    ok = np.asarray(ref.native_packed_conv2d_ref(xp, wp, 8, k))
+    assert np.array_equal(ok, oracle)
+    # one more local accumulation overflows the 4-bit dot field
+    bad = np.asarray(ref.native_packed_conv2d_ref(xp, wp, 8, k + 1))
+    assert not np.array_equal(bad, oracle)

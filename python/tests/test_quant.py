@@ -1,0 +1,89 @@
+"""Quantizer semantics + gradients (STE) used by the L2 QNN."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+settings.register_profile("sparq", deadline=None, max_examples=25)
+settings.load_profile("sparq")
+
+
+@given(st.integers(1, 8), st.floats(0.01, 2.0), st.integers(0, 2**31 - 1))
+def test_act_levels_in_range(bits, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)
+    lv = np.asarray(quant.quantize_act_levels(x, bits, jnp.float32(scale)))
+    assert lv.min() >= 0 and lv.max() <= 2**bits - 1
+
+
+@given(st.integers(1, 8), st.floats(0.01, 2.0), st.integers(0, 2**31 - 1))
+def test_weight_levels_symmetric_range(bits, scale, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)
+    lv = np.asarray(quant.quantize_weight_levels(w, bits, jnp.float32(scale)))
+    zp = 2 ** (bits - 1) - 1
+    assert lv.min() >= 0 and lv.max() <= 2 * zp
+
+
+def test_act_quant_matches_pure_ref():
+    x = jnp.linspace(-1, 3, 64)
+    lv = quant.quantize_act_levels(x, 3, jnp.float32(0.25))
+    want = ref.quantize_levels_ref(np.asarray(x), 3, 0.25)
+    assert np.array_equal(np.asarray(lv), np.asarray(want))
+
+
+def test_fake_quant_act_is_idempotent():
+    x = jax.nn.relu(jnp.asarray(np.random.default_rng(0).normal(0, 1, (128,)), jnp.float32))
+    s = quant.act_qparams(x, 4)
+    y1 = quant.fake_quant_act(x, 4, s)
+    y2 = quant.fake_quant_act(y1, 4, s)
+    assert np.allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_ste_gradient_identity_inside_range():
+    s = jnp.float32(0.1)
+    x = jnp.asarray([0.05, 0.2, 0.5], jnp.float32)  # all inside [0, s*15]
+    g = jax.grad(lambda v: jnp.sum(quant.fake_quant_act(v, 4, s)))(x)
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+def test_ste_gradient_zero_outside_range():
+    s = jnp.float32(0.1)
+    x = jnp.asarray([-0.5, 5.0], jnp.float32)  # below 0 / above s*(2^4-1)
+    g = jax.grad(lambda v: jnp.sum(quant.fake_quant_act(v, 4, s)))(x)
+    assert np.allclose(np.asarray(g), 0.0)
+
+
+def test_weight_ste_gradient_mask():
+    s = jnp.float32(0.1)
+    zp = 2 ** (4 - 1) - 1
+    x = jnp.asarray([0.0, s * zp * 0.5, s * zp * 2.0], jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(quant.fake_quant_weight(v, 4, s)))(x)
+    assert np.allclose(np.asarray(g), [1.0, 1.0, 0.0])
+
+
+def test_zero_point_correction_identity():
+    """dot(a, q-zp) == dot(a, q) - zp*sum(a): the identity the packed
+    forward path relies on (exact, integer)."""
+    rng = np.random.default_rng(5)
+    bits = 3
+    zp = 2 ** (bits - 1) - 1
+    a = rng.integers(0, 8, (100,))
+    q = rng.integers(0, 2 * zp + 1, (100,))
+    lhs = int(np.dot(a, q - zp))
+    rhs = int(np.dot(a, q)) - zp * int(a.sum())
+    assert lhs == rhs
+
+
+@given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+def test_dequant_error_bounded_by_half_scale(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jax.nn.relu(jnp.asarray(rng.normal(0.5, 0.4, (256,)), jnp.float32))
+    s = quant.act_qparams(x, bits)
+    y = quant.fake_quant_act(x, bits, s)
+    inside = np.asarray(x) <= float(s) * (2**bits - 1)
+    err = np.abs(np.asarray(y) - np.asarray(x))[inside]
+    assert err.max() <= float(s) / 2 + 1e-6

@@ -1,0 +1,64 @@
+"""Overflow-free region calculus — the analytical core of ULPPACK/vmacsr."""
+
+import pytest
+
+from compile.kernels import ref
+
+
+def test_dot_term_max_formula():
+    assert ref.dot_term_max(1, 1) == 2
+    assert ref.dot_term_max(2, 2) == 18
+    assert ref.dot_term_max(4, 4) == 450
+    assert ref.dot_term_max(3, 4) == 210
+
+
+def test_junk_is_half_of_dot():
+    for w in range(1, 5):
+        for a in range(1, 5):
+            assert ref.dot_term_max(w, a) == 2 * ref.junk_term_max(w, a)
+
+
+def test_strict_region_lp_matches_paper_condition():
+    """Strict worst-case region at S=8 coincides with the paper's
+    W+A <= 7 condition over the sub-byte range the paper studies
+    (1..4 bits; at extreme asymmetry like W1A7 the exact calculus is
+    slightly wider than the paper's linear rule)."""
+    for w in range(1, 5):
+        for a in range(1, 5):
+            assert ref.in_region_strict(w, a, 8) == (w + a <= 7), (w, a)
+    # the exact calculus admits the extreme-asymmetry corners
+    assert ref.in_region_strict(1, 7, 8) and ref.in_region_strict(7, 1, 8)
+
+
+def test_paper_region_includes_headline_points():
+    # the two headline speedup points: W2A2 on ULP, W4A4 on LP
+    assert ref.in_region_paper(2, 2, 4)
+    assert ref.in_region_paper(4, 4, 8)
+    # and their exclusions
+    assert not ref.in_region_paper(3, 2, 4)
+    assert not ref.in_region_paper(5, 4, 8)
+
+
+def test_strict_region_ulp():
+    assert ref.in_region_strict(1, 1, 4)
+    assert ref.in_region_strict(1, 3, 4)
+    assert not ref.in_region_strict(2, 2, 4)  # dot 18 > 15
+
+
+def test_native_local_accumulations_w1a1_ulp():
+    """Paper: ~8 local accumulations for 1-bit on 8-bit containers."""
+    k = ref.native_local_accumulations(1, 1, 4)
+    assert k == 7  # floor(15/2): the guaranteed-safe count
+
+
+def test_native_local_accumulations_monotone_in_bits():
+    prev = 1 << 30
+    for bits in range(1, 4):
+        k = ref.native_local_accumulations(bits, bits, 8)
+        assert k <= prev
+        prev = k
+
+
+def test_native_zero_outside_region():
+    assert ref.native_local_accumulations(4, 4, 8) == 0
+    assert ref.native_local_accumulations(2, 2, 4) == 0

@@ -1,0 +1,144 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. runtime vs offline operand packing (the paper notes weight
+//!    packing "could be avoided by offline preprocessing")
+//! 2. lane-count scaling (1/2/4/8 lanes)
+//! 3. the future-work configurable shifter: vmacsr.cfg lets ULP use a
+//!    k=2-but-asymmetric layout — modelled here as identical cost
+//! 4. vmacsr without FPU removal (does the speedup need the area cut?)
+//! 5. spill-cadence sensitivity (strict vs paper admission at W4A4)
+
+mod common;
+
+use common::Bench;
+use sparq::arch::ProcessorConfig;
+use sparq::kernels::{run_conv, run_conv_opts, ConvDims, ConvVariant, EngineOpts, Workload};
+use sparq::ulppack::RegionMode;
+
+fn main() {
+    let b = Bench::new("ablations");
+    let dims = ConvDims::fig4(false);
+    let sparq = ProcessorConfig::sparq();
+
+    // 1. packing: runtime vs offline
+    b.section("packing ablation", || {
+        let wl = Workload::random(dims, 2, 2, 5);
+        let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
+        let rt = run_conv(&sparq, &wl, v).unwrap().report;
+        let off = run_conv_opts(
+            &sparq,
+            &wl,
+            v,
+            EngineOpts { runtime_act_pack: false, runtime_weight_pack: false },
+        )
+        .unwrap()
+        .report;
+        println!(
+            "  runtime packing: {} cycles | offline: {} cycles | overhead {:.1}%",
+            rt.stats.cycles,
+            off.stats.cycles,
+            100.0 * (rt.stats.cycles as f64 / off.stats.cycles as f64 - 1.0)
+        );
+    });
+
+    // 2. lane scaling
+    b.section("lane scaling", || {
+        for lanes in [1u32, 2, 4, 8] {
+            let cfg = ProcessorConfig::sparq().with_lanes(lanes);
+            let wl = Workload::random(dims, 2, 2, 5);
+            let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
+            let r = run_conv(&cfg, &wl, v).unwrap().report;
+            println!(
+                "  {lanes} lane(s): {:>10} cycles, {:>6.2} ops/cycle",
+                r.stats.cycles,
+                r.ops_per_cycle()
+            );
+        }
+    });
+
+    // 3. configurable shifter: custom shift for asymmetric fields
+    b.section("configurable shifter (future work)", || {
+        use sparq::isa::{Lmul, Sew, VInst, VOp};
+        use sparq::sim::{Machine, Program};
+        let mut m = Machine::new(ProcessorConfig::sparq_cfgshift(), 1 << 16);
+        m.set_shift_csr(6); // asymmetric 10/6 split instead of 8/8
+        let mut p = Program::new("vmacsr.cfg");
+        p.push(VInst::SetVl { avl: 64, sew: Sew::E16, lmul: Lmul::M1 });
+        p.push(VInst::OpVX { op: VOp::MacsrCfg, vd: 1, vs2: 2, rs1: 3 });
+        let r = m.run(&p).unwrap();
+        println!(
+            "  vmacsr.cfg executes with CSR shift=6: {} cycles (same datapath cost as vmacsr)",
+            r.stats.cycles
+        );
+        // and it traps on plain sparq
+        let mut m2 = Machine::new(ProcessorConfig::sparq(), 1 << 16);
+        let err = m2.run(&p).unwrap_err();
+        println!("  on plain Sparq: {err}");
+    });
+
+    // 4. vmacsr with the FPU kept (area/power cost, same cycles)
+    b.section("vmacsr without FPU removal", || {
+        let mut cfg = ProcessorConfig::ara();
+        cfg.vmacsr = true;
+        cfg.name = "ara+vmacsr".into();
+        let wl = Workload::random(dims, 2, 2, 5);
+        let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
+        let with_fpu = run_conv(&cfg, &wl, v).unwrap().report;
+        let without = run_conv(&sparq, &wl, v).unwrap().report;
+        let pw = sparq::power::LaneReport::for_config(&cfg);
+        let ps = sparq::power::LaneReport::for_config(&sparq);
+        println!(
+            "  cycles identical: {} vs {} | lane power {:.1} vs {:.1} mW | ops/nJ {:.2} vs {:.2}",
+            with_fpu.stats.cycles,
+            without.stats.cycles,
+            pw.power_mw(),
+            ps.power_mw(),
+            pw.ops_per_nj(with_fpu.ops_per_cycle()),
+            ps.ops_per_nj(without.ops_per_cycle())
+        );
+    });
+
+    // 5b. direct conv vs im2col+GEMM (the §III-A design argument)
+    b.section("direct vs im2col+GEMM", || {
+        use sparq::sim::Machine;
+        let d = ConvDims { c: 16, h: 26, w: 70, co: 4, fh: 7, fw: 7 };
+        let wl = Workload::random(d, 2, 2, 5);
+        let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict };
+        let direct = run_conv(&sparq, &wl, v).unwrap().report;
+        let mut m = Machine::new(sparq.clone(), wl.mem_bytes() * 8);
+        let (prog, _) =
+            sparq::kernels::im2col_gemm::build(&mut m, &wl, 2, 2, RegionMode::Strict).unwrap();
+        let gemm = m.run(&prog).unwrap();
+        let mb = |r: &sparq::sim::RunReport| r.stats.bytes_loaded + r.stats.bytes_stored;
+        println!(
+            "  direct: {} cycles, {:.2} MB moved | im2col+GEMM: {} cycles, {:.2} MB moved ({:.1}x traffic)",
+            direct.stats.cycles,
+            mb(&direct) as f64 / 1e6,
+            gemm.stats.cycles,
+            mb(&gemm) as f64 / 1e6,
+            mb(&gemm) as f64 / mb(&direct) as f64
+        );
+    });
+
+    // 5. admission-mode sensitivity at W4A4
+    b.section("region mode at W4A4", || {
+        let wl = Workload::random(dims, 4, 4, 5);
+        let paper =
+            run_conv(&sparq, &wl, ConvVariant::Vmacsr { w_bits: 4, a_bits: 4, mode: RegionMode::Paper })
+                .unwrap()
+                .report;
+        println!(
+            "  paper-mode LP: {} cycles ({:.2} ops/cycle); strict mode refuses W4A4 (dot field 420 > 255)",
+            paper.stats.cycles,
+            paper.ops_per_cycle()
+        );
+        let strict = run_conv(
+            &sparq,
+            &wl,
+            ConvVariant::Vmacsr { w_bits: 4, a_bits: 4, mode: RegionMode::Strict },
+        );
+        assert!(strict.is_err());
+    });
+
+    b.finish();
+}

@@ -1,0 +1,40 @@
+//! Shared mini-harness for the paper-reproduction benches (the vendored
+//! crate set has no criterion; this provides the timing/reporting
+//! conventions: named sections, wall-clock, and a stable output format
+//! that `bench_output.txt` captures).
+#![allow(dead_code)] // each bench uses a different subset of the harness
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: &'static str,
+    t0: Instant,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Bench {
+        println!("\n================ bench: {name} ================");
+        Bench { name, t0: Instant::now() }
+    }
+
+    /// Time one section; prints its wall time and returns the value.
+    pub fn section<T>(&self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let v = f();
+        println!("[{} / {label}] {:.3}s", self.name, t.elapsed().as_secs_f64());
+        v
+    }
+
+    pub fn finish(self) {
+        println!(
+            "================ bench: {} done in {:.3}s ================",
+            self.name,
+            self.t0.elapsed().as_secs_f64()
+        );
+    }
+}
+
+/// `--large` flag passthrough (cargo bench -- --large).
+pub fn large_flag() -> bool {
+    std::env::args().any(|a| a == "--large")
+}

@@ -1,0 +1,29 @@
+//! Regenerates the paper's Fig. 4: ops/cycle for every conv2d
+//! implementation (int16, native W3A3/W2A2/W1A1, vmacsr LP/ULP) with a
+//! 7x7 kernel.  Pass `-- --large` for the paper's full 32x512x512.
+
+mod common;
+
+use common::{large_flag, Bench};
+use sparq::kernels::ConvDims;
+use sparq::report;
+
+fn main() {
+    let b = Bench::new("fig4");
+    let large = large_flag();
+    let rows = b.section("simulate all 6 implementations", || {
+        report::fig4(large, 42).expect("fig4")
+    });
+    print!("{}", report::render_fig4(&rows, ConvDims::fig4(large)));
+
+    // paper-shape assertions (soft: print, don't panic, so partial
+    // regressions still produce the table)
+    let sp = |l: &str| rows.iter().find(|r| r.label.starts_with(l)).map(|r| r.speedup_vs_int16);
+    let ulp = sp("ULP").unwrap_or(0.0);
+    let lp = sp("LP").unwrap_or(0.0);
+    println!(
+        "paper check: W2A2 (ULP) {:.2}x vs paper 3.2x | W4A4 (LP) {:.2}x vs paper 1.7x",
+        ulp, lp
+    );
+    b.finish();
+}

@@ -1,0 +1,28 @@
+//! Regenerates the paper's Fig. 5: relative speedup over int16-conv2d
+//! across the overflow-free precision region — (a) native RVV on Ara,
+//! (b) vmacsr on Sparq.  Pass `-- --large` for the paper's 32x256x256.
+
+mod common;
+
+use common::{large_flag, Bench};
+use sparq::kernels::ConvDims;
+use sparq::report;
+
+fn main() {
+    let b = Bench::new("fig5");
+    let large = large_flag();
+    let dims = ConvDims::fig5(large);
+    let native = b.section("native grid (Fig. 5a)", || report::fig5(false, large, 7).unwrap());
+    print!("{}", report::render_fig5(&native, false, dims));
+    println!();
+    let vmacsr = b.section("vmacsr grid (Fig. 5b)", || report::fig5(true, large, 7).unwrap());
+    print!("{}", report::render_fig5(&vmacsr, true, dims));
+
+    let runnable_native = native.iter().filter(|c| c.speedup.is_some()).count();
+    let runnable_vmacsr = vmacsr.iter().filter(|c| c.speedup.is_some()).count();
+    println!(
+        "\npaper check: vmacsr region ({runnable_vmacsr} points) wider than native ({runnable_native}) — \
+         'higher precision range without modifying the algorithm'"
+    );
+    b.finish();
+}

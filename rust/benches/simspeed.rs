@@ -1,0 +1,45 @@
+//! Simulator performance bench — the §Perf hot path.  Measures host
+//! throughput of the functional+timing simulator (element-ops/s and
+//! instructions/s) on the Fig. 4 inner loop, so optimization work has a
+//! stable number to move.
+
+mod common;
+
+use common::{large_flag, Bench};
+use std::time::Instant;
+
+use sparq::arch::ProcessorConfig;
+use sparq::kernels::{run_conv, ConvDims, ConvVariant, Workload};
+use sparq::ulppack::RegionMode;
+
+fn main() {
+    let b = Bench::new("simspeed");
+    let large = large_flag();
+    let dims = if large { ConvDims::fig4(true) } else { ConvDims::fig4(false) };
+
+    for (label, variant) in [
+        ("int16", ConvVariant::Int16),
+        ("vmacsr-ulp-w2a2", ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper }),
+        ("native-w1a1", ConvVariant::Native { w_bits: 1, a_bits: 1 }),
+    ] {
+        let (wb, ab) = variant.bits();
+        let wl = Workload::random(dims, wb, ab, 9);
+        let cfg = if matches!(variant, ConvVariant::Native { .. }) {
+            ProcessorConfig::ara()
+        } else {
+            ProcessorConfig::sparq()
+        };
+        let t = Instant::now();
+        let run = run_conv(&cfg, &wl, variant).expect(label);
+        let dt = t.elapsed().as_secs_f64();
+        let eops = run.report.stats.element_ops as f64;
+        let insts = run.report.stats.cycles; // proxy scale
+        println!(
+            "  {label:<18} host {dt:>6.3}s | {:>7.1} M element-ops/s | sim {} cycles ({:.1} sim-Mcycles/s)",
+            eops / dt / 1e6,
+            insts,
+            insts as f64 / dt / 1e6,
+        );
+    }
+    b.finish();
+}

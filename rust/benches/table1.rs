@@ -1,0 +1,62 @@
+//! Regenerates the paper's Table I (substituted per DESIGN.md §2):
+//! accuracy of the trained SparqCNN at FP32 / W4A4 / W3A3 / W2A2,
+//! evaluated through the PJRT-compiled artifacts on the held-out set.
+//! Needs `make artifacts`.
+
+mod common;
+
+use common::Bench;
+use sparq::report;
+use sparq::runtime::{artifacts_dir, artifacts_present, Runtime, TestSet};
+
+fn main() {
+    let b = Bench::new("table1");
+    if !artifacts_present() {
+        println!("SKIP: no artifacts (run `make artifacts`)");
+        b.finish();
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = b.section("load + compile artifacts", || Runtime::load(&dir).expect("runtime"));
+    let ts = TestSet::load(dir.join("testset.bin")).expect("testset");
+    let mut rows = Vec::new();
+    let mut fp32 = 0.0;
+    for name in ["qnn_fp32", "qnn_w4a4", "qnn_w3a3", "qnn_w2a2"] {
+        let acc = b.section(name, || evaluate(&rt, name, &ts).expect(name));
+        if name == "qnn_fp32" {
+            fp32 = acc;
+        }
+        rows.push((name.trim_start_matches("qnn_").to_string(), acc, acc - fp32));
+    }
+    print!("{}", report::render_table1(&rows));
+    println!(
+        "paper check: sub-byte accuracy within 2% of fp32 -> {}",
+        if rows.iter().all(|r| r.2 > -0.02) { "holds" } else { "VIOLATED" }
+    );
+    b.finish();
+}
+
+fn evaluate(rt: &Runtime, model: &str, ts: &TestSet) -> Result<f64, String> {
+    let art = rt.manifest.artifact(model).ok_or("missing artifact")?;
+    let batch = art.meta_u32("batch").unwrap_or(16) as usize;
+    let dims = [batch as i64, ts.c as i64, ts.h as i64, ts.w as i64];
+    let (mut correct, mut total, mut start) = (0usize, 0usize, 0usize);
+    while start < ts.n {
+        let (data, real) = ts.batch(start, batch);
+        let logits = rt.exec_f32(model, &[(&data, &dims)]).map_err(|e| e.to_string())?;
+        let classes = logits.len() / batch;
+        for i in 0..real {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k)
+                .unwrap();
+            correct += (pred == ts.labels[start + i] as usize) as usize;
+            total += 1;
+        }
+        start += batch;
+    }
+    Ok(correct as f64 / total as f64)
+}

@@ -1,0 +1,41 @@
+//! Regenerates the paper's Table II: physical implementation of the Ara
+//! and Sparq lanes (cell area, fmax, power) from the GF22FDX-calibrated
+//! component model, plus the derived energy-efficiency comparison.
+
+mod common;
+
+use common::Bench;
+use sparq::power::LaneReport;
+use sparq::report;
+use sparq::ProcessorConfig;
+
+fn main() {
+    let b = Bench::new("table2");
+    let (ara, sq) = report::table2();
+    print!("{}", report::render_table2(&ara, &sq));
+
+    println!("\nper-component breakdown (Sparq lane):");
+    for c in &sq.components {
+        println!(
+            "  {:<22} {:>8.4} mm2 {:>7.1} mW  path {:>5.3} ns",
+            c.name, c.area_mm2, c.power_mw, c.path_ns
+        );
+    }
+
+    // derived: energy efficiency of the headline conv throughputs
+    let rows = b.section("fig4 throughputs for efficiency", || {
+        report::fig4(false, 42).expect("fig4")
+    });
+    let sq_eff = LaneReport::for_config(&ProcessorConfig::sparq());
+    let ara_eff = LaneReport::for_config(&ProcessorConfig::ara());
+    println!("\nenergy efficiency (ops/nJ at lane fmax):");
+    for r in &rows {
+        let lane = if r.label.contains("W3A3") || r.label.contains("W2A2-conv2d") || r.label.contains("W1A1") {
+            &ara_eff
+        } else {
+            &sq_eff
+        };
+        println!("  {:<28} {:>7.2} ops/nJ", r.label, lane.ops_per_nj(r.ops_per_cycle));
+    }
+    b.finish();
+}

@@ -1,0 +1,18 @@
+//! Regenerates §III-A's utilization claims: the int16 and fp32 baseline
+//! conv2d reach 93.8% / 93.6% lane utilization at 1x32x512x512.
+//! Pass `-- --large` for the full-size input (default 128x128).
+
+mod common;
+
+use common::{large_flag, Bench};
+use sparq::report;
+
+fn main() {
+    let b = Bench::new("utilization");
+    let large = large_flag();
+    let rows = b.section("baselines", || report::utilization(large, 3).expect("utilization"));
+    print!("{}", report::render_utilization(&rows, large));
+    let ok = rows.iter().all(|(_, u, _)| *u > 0.88);
+    println!("paper check (>=88% on both baselines): {}", if ok { "holds" } else { "VIOLATED" });
+    b.finish();
+}

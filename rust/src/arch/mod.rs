@@ -1,0 +1,176 @@
+//! Processor configuration — which machine are we simulating?
+//!
+//! `ara()` is the baseline (4 lanes, FPU, no `vmacsr`); `sparq()` is
+//! the paper's machine (FPU removed, `vmacsr` present).  Everything
+//! else (lane count sweeps, the configurable-shifter future-work
+//! extension) is expressed as field tweaks for the ablation benches.
+
+use std::fmt;
+
+/// The functional units of one Ara/Sparq lane (paper Fig. 6 legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Unit {
+    /// SIMD multiplier + (on Ara) FPU — executes vmul/vmacc/vmacsr/vf*.
+    Mfpu,
+    /// Integer ALU — add/logic/shift/slide-free moves/widening adds.
+    Valu,
+    /// Vector load/store unit.
+    Vlsu,
+    /// Slide unit (inter-lane shuffle network).
+    Sldu,
+    /// Instruction dispatch (the scalar core + Ara sequencer front end).
+    Dispatch,
+}
+
+impl Unit {
+    pub const ALL: [Unit; 5] = [Unit::Mfpu, Unit::Valu, Unit::Vlsu, Unit::Sldu, Unit::Dispatch];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Unit::Mfpu => "MFPU",
+            Unit::Valu => "VALU",
+            Unit::Vlsu => "VLSU",
+            Unit::Sldu => "SLDU",
+            Unit::Dispatch => "DISP",
+        }
+    }
+}
+
+impl fmt::Display for Unit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Static description of the simulated machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcessorConfig {
+    /// Human-readable name used in reports.
+    pub name: String,
+    /// Number of vector lanes (the paper evaluates 4).
+    pub lanes: u32,
+    /// VLEN in bits.  Ara's VRF is `32 * VLEN / 8` bytes total; the
+    /// paper's 4-lane, 16 KiB-VRF configuration is VLEN = 4096.
+    pub vlen_bits: u32,
+    /// Lane datapath width in bits (64 for Ara — one 64-bit word per
+    /// lane per cycle through each functional unit).
+    pub datapath_bits: u32,
+    /// Vector FPU present?  (Removed in Sparq — the paper's Table II.)
+    pub fpu: bool,
+    /// `vmacsr` implemented?  (Sparq yes, Ara no.)
+    pub vmacsr: bool,
+    /// The future-work extension: run-time configurable shift amount
+    /// (`vmacsr.cfg` + CSR) instead of the hard-wired SEW/2.
+    pub configurable_shifter: bool,
+    /// Memory port bandwidth in bytes/cycle (the AXI width towards L2).
+    /// Ara's default system gives the VLSU one lane-word per lane.
+    pub mem_bytes_per_cycle: u32,
+    /// Startup latency of a vector instruction reaching its unit
+    /// (dispatch -> sequencer -> operand fetch), in cycles.
+    pub issue_latency: u32,
+    /// Extra latency of a memory access (AXI round trip), in cycles.
+    pub mem_latency: u32,
+    /// Pipeline bubble between back-to-back instructions on one unit
+    /// (operand-requester turnaround in Ara's lanes); this is what keeps
+    /// real lane utilization below 100% (§III-A's 93.8%).
+    pub issue_bubble: u32,
+}
+
+impl ProcessorConfig {
+    /// The baseline: Ara, RVV 1.0, 4 lanes, with FPU, no custom ops.
+    pub fn ara() -> ProcessorConfig {
+        ProcessorConfig {
+            name: "ara".into(),
+            lanes: 4,
+            vlen_bits: 4096,
+            datapath_bits: 64,
+            fpu: true,
+            vmacsr: false,
+            configurable_shifter: false,
+            mem_bytes_per_cycle: 4 * 8,
+            issue_latency: 4,
+            mem_latency: 10,
+            issue_bubble: 1,
+        }
+    }
+
+    /// The paper's machine: Ara minus FPU plus `vmacsr`.
+    pub fn sparq() -> ProcessorConfig {
+        ProcessorConfig {
+            name: "sparq".into(),
+            fpu: false,
+            vmacsr: true,
+            ..ProcessorConfig::ara()
+        }
+    }
+
+    /// Sparq with the future-work configurable shifter.
+    pub fn sparq_cfgshift() -> ProcessorConfig {
+        ProcessorConfig {
+            name: "sparq-cfgshift".into(),
+            configurable_shifter: true,
+            ..ProcessorConfig::sparq()
+        }
+    }
+
+    /// Lane-count variant (used by the scaling ablation).
+    pub fn with_lanes(mut self, lanes: u32) -> ProcessorConfig {
+        assert!(lanes.is_power_of_two() && lanes >= 1 && lanes <= 16);
+        // Ara scales VLEN and memory bandwidth with the lane count.
+        self.vlen_bits = self.vlen_bits / self.lanes * lanes;
+        self.mem_bytes_per_cycle = self.mem_bytes_per_cycle / self.lanes * lanes;
+        self.name = format!("{}-{}l", self.name, lanes);
+        self.lanes = lanes;
+        self
+    }
+
+    /// Bytes the whole vector engine moves through one unit per cycle.
+    pub fn bytes_per_cycle(&self) -> u32 {
+        self.lanes * self.datapath_bits / 8
+    }
+
+    /// Total VRF capacity in bytes (32 architectural registers).
+    pub fn vrf_bytes(&self) -> u32 {
+        32 * self.vlen_bits / 8
+    }
+}
+
+impl fmt::Display for ProcessorConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} ({} lanes, VLEN={}, FPU={}, vmacsr={})",
+            self.name, self.lanes, self.vlen_bits, self.fpu, self.vmacsr
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs() {
+        let ara = ProcessorConfig::ara();
+        assert!(ara.fpu && !ara.vmacsr);
+        let sq = ProcessorConfig::sparq();
+        assert!(!sq.fpu && sq.vmacsr);
+        assert_eq!(ara.lanes, 4);
+        // Table II: 16 KiB VRF
+        assert_eq!(ara.vrf_bytes(), 16 * 1024);
+    }
+
+    #[test]
+    fn lane_scaling_scales_vlen_and_bandwidth() {
+        let p = ProcessorConfig::sparq().with_lanes(8);
+        assert_eq!(p.lanes, 8);
+        assert_eq!(p.vlen_bits, 8192);
+        assert_eq!(p.bytes_per_cycle(), 64);
+        assert_eq!(p.mem_bytes_per_cycle, 64);
+    }
+
+    #[test]
+    fn four_lanes_move_32_bytes_per_cycle() {
+        assert_eq!(ProcessorConfig::ara().bytes_per_cycle(), 32);
+    }
+}

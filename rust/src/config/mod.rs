@@ -1,0 +1,223 @@
+//! The config system: an INI-flavoured `[section]` + `key = value`
+//! format (the vendored crate set has no serde/toml, so the parser is
+//! in-repo — ~100 lines, fully tested).
+//!
+//! ```text
+//! [processor]
+//! preset = sparq          # ara | sparq | sparq-cfgshift
+//! lanes = 4
+//! vlen_bits = 4096
+//! fpu = false
+//! vmacsr = true
+//!
+//! [serve]
+//! workers = 2
+//! batch_window_us = 500
+//! queue_depth = 256
+//! ```
+
+use crate::arch::ProcessorConfig;
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ConfigError {
+    #[error("line {0}: expected 'key = value'")]
+    Syntax(usize),
+    #[error("[{section}] {key}: invalid value '{value}'")]
+    BadValue { section: String, key: String, value: String },
+    #[error("unknown preset '{0}' (ara | sparq | sparq-cfgshift)")]
+    UnknownPreset(String),
+    #[error("io: {0}")]
+    Io(String),
+}
+
+/// Parsed config: section -> key -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::from("global");
+        for (ln, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(i) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(ConfigError::Syntax(ln + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError::Io(e.to_string()))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    fn typed<T: std::str::FromStr>(&self, section: &str, key: &str) -> Result<Option<T>, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| ConfigError::BadValue {
+                section: section.into(),
+                key: key.into(),
+                value: v.into(),
+            }),
+        }
+    }
+
+    pub fn get_u32(&self, section: &str, key: &str) -> Result<Option<u32>, ConfigError> {
+        self.typed(section, key)
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>, ConfigError> {
+        self.typed(section, key)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some("true") | Some("1") | Some("yes") => Ok(Some(true)),
+            Some("false") | Some("0") | Some("no") => Ok(Some(false)),
+            Some(v) => Err(ConfigError::BadValue {
+                section: section.into(),
+                key: key.into(),
+                value: v.into(),
+            }),
+        }
+    }
+
+    /// Build the processor config from the `[processor]` section
+    /// (preset first, then field overrides).
+    pub fn processor(&self) -> Result<ProcessorConfig, ConfigError> {
+        let mut p = match self.get("processor", "preset").unwrap_or("sparq") {
+            "ara" => ProcessorConfig::ara(),
+            "sparq" => ProcessorConfig::sparq(),
+            "sparq-cfgshift" => ProcessorConfig::sparq_cfgshift(),
+            other => return Err(ConfigError::UnknownPreset(other.into())),
+        };
+        if let Some(lanes) = self.get_u32("processor", "lanes")? {
+            p = p.with_lanes(lanes);
+        }
+        if let Some(v) = self.get_u32("processor", "vlen_bits")? {
+            p.vlen_bits = v;
+        }
+        if let Some(v) = self.get_bool("processor", "fpu")? {
+            p.fpu = v;
+        }
+        if let Some(v) = self.get_bool("processor", "vmacsr")? {
+            p.vmacsr = v;
+        }
+        if let Some(v) = self.get_u32("processor", "mem_bytes_per_cycle")? {
+            p.mem_bytes_per_cycle = v;
+        }
+        if let Some(v) = self.get_u32("processor", "issue_bubble")? {
+            p.issue_bubble = v;
+        }
+        Ok(p)
+    }
+
+    /// `[serve]` parameters with defaults.
+    pub fn serve(&self) -> Result<ServeConfig, ConfigError> {
+        Ok(ServeConfig {
+            workers: self.get_u32("serve", "workers")?.unwrap_or(1) as usize,
+            batch_window_us: self.get_u64("serve", "batch_window_us")?.unwrap_or(500),
+            queue_depth: self.get_u32("serve", "queue_depth")?.unwrap_or(256) as usize,
+        })
+    }
+}
+
+/// Serving-stack knobs (see `coordinator`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub batch_window_us: u64,
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 1, batch_window_us: 500, queue_depth: 256 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+[processor]
+preset = ara
+lanes = 8        # inline comment
+vmacsr = true
+
+[serve]
+workers = 3
+queue_depth = 64
+";
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("processor", "preset"), Some("ara"));
+        assert_eq!(c.get_u32("processor", "lanes").unwrap(), Some(8));
+        assert_eq!(c.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn builds_processor_with_overrides() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let p = c.processor().unwrap();
+        assert_eq!(p.lanes, 8);
+        assert!(p.fpu); // ara preset
+        assert!(p.vmacsr); // overridden
+        assert_eq!(p.vlen_bits, 8192); // scaled by with_lanes
+    }
+
+    #[test]
+    fn serve_defaults_and_overrides() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let s = c.serve().unwrap();
+        assert_eq!(s.workers, 3);
+        assert_eq!(s.queue_depth, 64);
+        assert_eq!(s.batch_window_us, 500); // default
+    }
+
+    #[test]
+    fn error_cases() {
+        assert_eq!(Config::parse("junk line").unwrap_err(), ConfigError::Syntax(1));
+        let c = Config::parse("[processor]\npreset = turbo").unwrap();
+        assert!(matches!(c.processor(), Err(ConfigError::UnknownPreset(_))));
+        let c = Config::parse("[processor]\nlanes = many").unwrap();
+        assert!(matches!(c.processor(), Err(ConfigError::BadValue { .. })));
+        let c = Config::parse("[processor]\nfpu = maybe").unwrap();
+        assert!(matches!(c.processor(), Err(ConfigError::BadValue { .. })));
+    }
+
+    #[test]
+    fn empty_config_gives_sparq_defaults() {
+        let c = Config::parse("").unwrap();
+        let p = c.processor().unwrap();
+        assert_eq!(p.name, "sparq");
+        assert!(!p.fpu && p.vmacsr);
+    }
+}

@@ -1,0 +1,121 @@
+//! Serving metrics: latency distribution, batch-size histogram,
+//! throughput — the numbers the e2e example reports.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metrics sink shared between workers and the caller.
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<u64>,
+    batch_sizes: Vec<u32>,
+    completed: u64,
+    rejected: u64,
+    sim_cycles: u128,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+    }
+}
+
+impl Metrics {
+    pub fn record(&self, latency_us: u64, batch: u32, sim_cycles: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_us.push(latency_us);
+        g.batch_sizes.push(batch);
+        g.completed += 1;
+        g.sim_cycles += sim_cycles as u128;
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Snapshot of the distribution so far.
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_us.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                return 0;
+            }
+            let idx = ((lat.len() as f64 - 1.0) * p).round() as usize;
+            lat[idx]
+        };
+        let elapsed = self.started.elapsed().as_secs_f64();
+        Snapshot {
+            completed: g.completed,
+            rejected: g.rejected,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            mean_batch: if g.batch_sizes.is_empty() {
+                0.0
+            } else {
+                g.batch_sizes.iter().map(|&b| b as f64).sum::<f64>() / g.batch_sizes.len() as f64
+            },
+            throughput_rps: if elapsed > 0.0 { g.completed as f64 / elapsed } else { 0.0 },
+            total_sim_cycles: g.sim_cycles,
+        }
+    }
+}
+
+/// A point-in-time view of the metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+    /// Simulated Sparq cycles attributed across completed requests.
+    pub total_sim_cycles: u128,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_over_known_distribution() {
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record(i, 4, 10);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        // index = round(99 * p): p50 -> lat[50] = 51, etc.
+        assert_eq!(s.p50_us, 51);
+        assert_eq!(s.p95_us, 95);
+        assert_eq!(s.p99_us, 99);
+        assert_eq!(s.mean_batch, 4.0);
+        assert_eq!(s.total_sim_cycles, 1000);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p99_us, 0);
+        assert_eq!(s.mean_batch, 0.0);
+    }
+
+    #[test]
+    fn rejection_counter() {
+        let m = Metrics::default();
+        m.record_rejected();
+        m.record_rejected();
+        assert_eq!(m.snapshot().rejected, 2);
+    }
+}

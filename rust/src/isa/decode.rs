@@ -1,0 +1,274 @@
+//! Decoder: 32-bit machine word -> trace instruction (dynamic fields
+//! zeroed — they live in scalar registers on real hardware).
+//!
+//! Reserved encodings return [`DecodeError`]; the dispatcher-level
+//! failure injection tests rely on that (Ara's dispatcher would raise
+//! an illegal-instruction exception).
+
+use super::encode::{funct3, mem_width, OPC_V, OPC_VL, OPC_VS};
+use super::inst::{VInst, VOp};
+use super::vtype::{Sew, VType};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("unknown major opcode {0:#04x}")]
+    UnknownOpcode(u32),
+    #[error("reserved funct6 {funct6:#08b} in funct3 space {funct3:#05b}")]
+    ReservedFunct6 { funct6: u32, funct3: u32 },
+    #[error("reserved vtype bits {0:#013b}")]
+    ReservedVType(u32),
+    #[error("unsupported memory width encoding {0:#05b}")]
+    BadMemWidth(u32),
+    #[error("masked (vm=0) encodings are not implemented by this subset")]
+    MaskedUnsupported,
+}
+
+fn opi_from_funct6(f6: u32) -> Option<VOp> {
+    Some(match f6 {
+        0b000000 => VOp::Add,
+        0b000010 => VOp::Sub,
+        0b000100 => VOp::Min,
+        0b000110 => VOp::Max,
+        0b001001 => VOp::And,
+        0b001010 => VOp::Or,
+        0b001011 => VOp::Xor,
+        0b010111 => VOp::Mv,
+        0b100101 => VOp::Sll,
+        0b101000 => VOp::Srl,
+        0b101001 => VOp::Sra,
+        0b001110 => VOp::SlideUp,
+        0b001111 => VOp::SlideDown,
+        _ => return None,
+    })
+}
+
+fn opm_from_funct6(f6: u32) -> Option<VOp> {
+    Some(match f6 {
+        0b100100 => VOp::Mulhu,
+        0b100101 => VOp::Mul,
+        0b100111 => VOp::Mulh,
+        0b101101 => VOp::Macc,
+        0b101110 => VOp::Macsr,
+        0b101010 => VOp::MacsrCfg,
+        0b101111 => VOp::Nmsac,
+        0b110101 => VOp::WAdduWv,
+        _ => return None,
+    })
+}
+
+fn opf_from_funct6(f6: u32) -> Option<VOp> {
+    Some(match f6 {
+        0b000000 => VOp::FAdd,
+        0b100100 => VOp::FMul,
+        0b101100 => VOp::FMacc,
+        _ => return None,
+    })
+}
+
+fn sew_from_mem_width(w: u32) -> Option<Sew> {
+    for s in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+        if mem_width(s.bits()) == w {
+            return Some(s);
+        }
+    }
+    None
+}
+
+/// Decode a 32-bit word.  Dynamic operands (addresses, scalar values,
+/// AVL) decode to 0 — see `encode.rs` for why.
+pub fn decode(word: u32) -> Result<VInst, DecodeError> {
+    let opcode = word & 0x7f;
+    match opcode {
+        OPC_VL | OPC_VS => {
+            let width = (word >> 12) & 0x7;
+            let eew = sew_from_mem_width(width).ok_or(DecodeError::BadMemWidth(width))?;
+            let vreg = ((word >> 7) & 0x1f) as u8;
+            if (word >> 25) & 1 == 0 {
+                return Err(DecodeError::MaskedUnsupported);
+            }
+            Ok(if opcode == OPC_VL {
+                VInst::Load { eew, vd: vreg, addr: 0 }
+            } else {
+                VInst::Store { eew, vs3: vreg, addr: 0 }
+            })
+        }
+        OPC_V => {
+            let f3 = (word >> 12) & 0x7;
+            if f3 == funct3::OPCFG {
+                let vtypei = (word >> 20) & 0x7ff;
+                let vt = VType::from_bits(vtypei).ok_or(DecodeError::ReservedVType(vtypei))?;
+                return Ok(VInst::SetVl { avl: 0, sew: vt.sew, lmul: vt.lmul });
+            }
+            let f6 = word >> 26;
+            let vm = (word >> 25) & 1;
+            if vm == 0 {
+                return Err(DecodeError::MaskedUnsupported);
+            }
+            let vd = ((word >> 7) & 0x1f) as u8;
+            let vs2 = ((word >> 20) & 0x1f) as u8;
+            let v1 = ((word >> 15) & 0x1f) as u8;
+            let err = DecodeError::ReservedFunct6 { funct6: f6, funct3: f3 };
+            match f3 {
+                funct3::OPIVV => {
+                    let op = opi_from_funct6(f6).ok_or(err)?;
+                    Ok(VInst::OpVV { op, vd, vs2, vs1: v1 })
+                }
+                funct3::OPIVX => {
+                    let op = opi_from_funct6(f6).ok_or(err)?;
+                    Ok(VInst::OpVX { op, vd, vs2, rs1: 0 })
+                }
+                funct3::OPIVI => {
+                    let op = opi_from_funct6(f6).ok_or(err)?;
+                    // shifts/slides take uimm5; others simm5
+                    let imm = if matches!(op, VOp::Sll | VOp::Srl | VOp::Sra | VOp::SlideUp | VOp::SlideDown)
+                    {
+                        v1 as i8
+                    } else {
+                        ((v1 as i8) << 3) >> 3 // sign-extend 5 bits
+                    };
+                    Ok(VInst::OpVI { op, vd, vs2, imm })
+                }
+                funct3::OPMVV => {
+                    let op = opm_from_funct6(f6).ok_or(err)?;
+                    Ok(VInst::OpVV { op, vd, vs2, vs1: v1 })
+                }
+                funct3::OPMVX => {
+                    let op = opm_from_funct6(f6).ok_or(err)?;
+                    Ok(VInst::OpVX { op, vd, vs2, rs1: 0 })
+                }
+                funct3::OPFVV => {
+                    let op = opf_from_funct6(f6).ok_or(err)?;
+                    Ok(VInst::OpVV { op, vd, vs2, vs1: v1 })
+                }
+                funct3::OPFVF => {
+                    let op = opf_from_funct6(f6).ok_or(err)?;
+                    Ok(VInst::OpVX { op, vd, vs2, rs1: 0 })
+                }
+                _ => unreachable!(),
+            }
+        }
+        0b001_0011 if word == 0x0000_0013 => {
+            // canonical NOP stands in for scalar slots
+            Ok(VInst::Scalar { kind: super::inst::ScalarKind::LoopCtl, n: 1 })
+        }
+        _ => Err(DecodeError::UnknownOpcode(opcode)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode;
+    use crate::isa::inst::ScalarKind;
+    use crate::isa::vtype::Lmul;
+    use crate::testutil::Prop;
+
+    /// Every encodable (op, format) pair, for exhaustive round-trips.
+    fn all_ops() -> Vec<VInst> {
+        let mut v = vec![];
+        let vv_ops = [
+            VOp::Add, VOp::Sub, VOp::And, VOp::Or, VOp::Xor, VOp::Min, VOp::Max, VOp::Mv,
+            VOp::Sll, VOp::Srl, VOp::Sra, VOp::Mul, VOp::Mulh, VOp::Mulhu, VOp::Macc,
+            VOp::Nmsac, VOp::Macsr, VOp::MacsrCfg, VOp::WAdduWv, VOp::FAdd, VOp::FMul,
+            VOp::FMacc,
+        ];
+        for op in vv_ops {
+            v.push(VInst::OpVV { op, vd: 1, vs2: 2, vs1: 3 });
+            v.push(VInst::OpVX { op, vd: 1, vs2: 2, rs1: 0 });
+        }
+        for op in [VOp::Add, VOp::Sll, VOp::Srl, VOp::SlideDown, VOp::SlideUp, VOp::Mv] {
+            v.push(VInst::OpVI { op, vd: 1, vs2: 2, imm: 5 });
+        }
+        for op in [VOp::SlideDown, VOp::SlideUp] {
+            v.push(VInst::OpVX { op, vd: 8, vs2: 16, rs1: 0 });
+        }
+        v
+    }
+
+    #[test]
+    fn roundtrip_every_op() {
+        for inst in all_ops() {
+            let w = encode(&inst);
+            let back = decode(w).unwrap_or_else(|e| panic!("{inst}: {e}"));
+            assert_eq!(encode(&back), w, "{inst}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_fields() {
+        // property: register/imm fields survive encode->decode->encode
+        Prop::new(0xB0B).runs(500).check(|g| {
+            let ops = all_ops();
+            let mut inst = ops[g.below(ops.len() as u64) as usize];
+            match &mut inst {
+                VInst::OpVV { vd, vs2, vs1, .. } => {
+                    *vd = g.below(32) as u8;
+                    *vs2 = g.below(32) as u8;
+                    *vs1 = g.below(32) as u8;
+                }
+                VInst::OpVX { vd, vs2, .. } => {
+                    *vd = g.below(32) as u8;
+                    *vs2 = g.below(32) as u8;
+                }
+                VInst::OpVI { vd, vs2, imm, .. } => {
+                    *vd = g.below(32) as u8;
+                    *vs2 = g.below(32) as u8;
+                    *imm = g.below(16) as i8;
+                }
+                _ => {}
+            }
+            let w = encode(&inst);
+            let back = decode(w).expect("decodable");
+            assert_eq!(encode(&back), w);
+        });
+    }
+
+    #[test]
+    fn setvl_roundtrip_all_vtypes() {
+        for sew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+            for lmul in [Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8] {
+                let i = VInst::SetVl { avl: 0, sew, lmul };
+                assert_eq!(decode(encode(&i)).unwrap(), i);
+            }
+        }
+    }
+
+    #[test]
+    fn loads_stores_roundtrip() {
+        for eew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+            let l = VInst::Load { eew, vd: 7, addr: 0 };
+            assert_eq!(decode(encode(&l)).unwrap(), l);
+            let s = VInst::Store { eew, vs3: 7, addr: 0 };
+            assert_eq!(decode(encode(&s)).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn reserved_funct6_rejected() {
+        // funct6 111111 in OPMVV space is unassigned in our subset
+        let w = (0b111111 << 26) | (1 << 25) | (funct3::OPMVV << 12) | OPC_V;
+        assert!(matches!(decode(w), Err(DecodeError::ReservedFunct6 { .. })));
+    }
+
+    #[test]
+    fn masked_encodings_rejected() {
+        let mut w = encode(&VInst::OpVV { op: VOp::Macsr, vd: 1, vs2: 2, vs1: 3 });
+        w &= !(1 << 25); // clear vm
+        assert_eq!(decode(w), Err(DecodeError::MaskedUnsupported));
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(decode(0xffff_ffff).is_err());
+        assert!(decode(0x0000_0000).is_err());
+    }
+
+    #[test]
+    fn nop_is_scalar_slot() {
+        assert_eq!(
+            decode(0x0000_0013).unwrap(),
+            VInst::Scalar { kind: ScalarKind::LoopCtl, n: 1 }
+        );
+    }
+}

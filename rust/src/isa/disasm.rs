@@ -1,0 +1,77 @@
+//! Assembly-text rendering of trace instructions (debugging aid and the
+//! `isa_explorer` example's output format).
+
+use super::inst::{ScalarKind, VInst, VOp};
+
+/// Render one instruction in RVV assembly syntax (dynamic operands are
+/// rendered with their resolved values in `{}` braces).
+pub fn disasm(inst: &VInst) -> String {
+    match *inst {
+        VInst::SetVl { avl, sew, lmul } => {
+            format!("vsetvli a0, {{avl={avl}}}, {sew},{lmul},ta,ma")
+        }
+        VInst::Load { eew, vd, addr } => {
+            format!("vle{}.v v{vd}, ({{{addr:#x}}})", eew.bits())
+        }
+        VInst::Store { eew, vs3, addr } => {
+            format!("vse{}.v v{vs3}, ({{{addr:#x}}})", eew.bits())
+        }
+        VInst::OpVV { op, vd, vs2, vs1 } => {
+            if op == VOp::Mv {
+                format!("vmv.v.v v{vd}, v{vs1}")
+            } else {
+                format!("{}.vv v{vd}, v{vs2}, v{vs1}", op.mnemonic())
+            }
+        }
+        VInst::OpVX { op, vd, vs2, rs1 } => {
+            if op == VOp::Mv {
+                format!("vmv.v.x v{vd}, {{{rs1:#x}}}")
+            } else {
+                let suffix = if op.is_fp() { "vf" } else { "vx" };
+                format!("{}.{suffix} v{vd}, v{vs2}, {{{rs1:#x}}}", op.mnemonic())
+            }
+        }
+        VInst::OpVI { op, vd, vs2, imm } => {
+            if op == VOp::Mv {
+                format!("vmv.v.i v{vd}, {imm}")
+            } else {
+                format!("{}.vi v{vd}, v{vs2}, {imm}", op.mnemonic())
+            }
+        }
+        VInst::Scalar { kind, n } => {
+            let k = match kind {
+                ScalarKind::AddrCalc => "addr-calc",
+                ScalarKind::LoopCtl => "loop-ctl",
+                ScalarKind::WeightLoad => "weight-load",
+                ScalarKind::Csr => "csr",
+            };
+            format!("<scalar {k} x{n}>")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::vtype::{Lmul, Sew};
+
+    #[test]
+    fn renders_vmacsr() {
+        let i = VInst::OpVX { op: VOp::Macsr, vd: 3, vs2: 1, rs1: 0x1234 };
+        assert_eq!(disasm(&i), "vmacsr.vx v3, v1, {0x1234}");
+    }
+
+    #[test]
+    fn renders_fp_with_vf_suffix() {
+        let i = VInst::OpVX { op: VOp::FMacc, vd: 3, vs2: 1, rs1: 42 };
+        assert!(disasm(&i).starts_with("vfmacc.vf"));
+    }
+
+    #[test]
+    fn renders_setvl_and_mem() {
+        let s = disasm(&VInst::SetVl { avl: 512, sew: Sew::E16, lmul: Lmul::M2 });
+        assert!(s.contains("e16,m2"));
+        let l = disasm(&VInst::Load { eew: Sew::E8, vd: 2, addr: 64 });
+        assert!(l.starts_with("vle8.v v2"));
+    }
+}

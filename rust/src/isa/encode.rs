@@ -1,0 +1,218 @@
+//! Faithful 32-bit RVV 1.0 machine encodings for the implemented subset,
+//! including the paper's `vmacsr` (Fig. 3: the free funct6 slot right
+//! after `vmacc`, in both OPMVV and OPMVX formats).
+//!
+//! The dynamic parts of the trace (resolved addresses, scalar values,
+//! AVL) do not live in the instruction word on real hardware either —
+//! they come from scalar registers.  The encoder emits `a0` (x10) as
+//! the scalar register for those operands, so
+//! `encode(decode(encode(i))) == encode(i)` holds for every instruction
+//! (see the round-trip property tests in `decode.rs`).
+
+use super::inst::{VInst, VOp};
+use super::vtype::VType;
+
+/// OP-V major opcode.
+pub const OPC_V: u32 = 0b101_0111;
+/// Vector load / store major opcodes.
+pub const OPC_VL: u32 = 0b000_0111;
+pub const OPC_VS: u32 = 0b010_0111;
+
+/// funct3 encodings (RVV 1.0 table 10).
+pub mod funct3 {
+    pub const OPIVV: u32 = 0b000;
+    pub const OPFVV: u32 = 0b001;
+    pub const OPMVV: u32 = 0b010;
+    pub const OPIVI: u32 = 0b011;
+    pub const OPIVX: u32 = 0b100;
+    pub const OPFVF: u32 = 0b101;
+    pub const OPMVX: u32 = 0b110;
+    pub const OPCFG: u32 = 0b111;
+}
+
+/// The scalar register the encoder substitutes for dynamic operands.
+pub const TRACE_RS1: u32 = 10; // a0
+
+/// funct6 for an op in the OPI* (integer ALU) space, if it lives there.
+pub fn funct6_opi(op: VOp) -> Option<u32> {
+    Some(match op {
+        VOp::Add => 0b000000,
+        VOp::Sub => 0b000010,
+        VOp::Min => 0b000100,
+        VOp::Max => 0b000110,
+        VOp::And => 0b001001,
+        VOp::Or => 0b001010,
+        VOp::Xor => 0b001011,
+        VOp::Mv => 0b010111, // vmv.v.* = vmerge with vm=1, vs2=v0
+        VOp::Sll => 0b100101,
+        VOp::Srl => 0b101000,
+        VOp::Sra => 0b101001,
+        VOp::SlideUp => 0b001110,
+        VOp::SlideDown => 0b001111,
+        _ => return None,
+    })
+}
+
+/// funct6 for an op in the OPM* (multiplier / widening) space.
+pub fn funct6_opm(op: VOp) -> Option<u32> {
+    Some(match op {
+        VOp::Mulhu => 0b100100,
+        VOp::Mul => 0b100101,
+        VOp::Mulh => 0b100111,
+        VOp::Macc => 0b101101,
+        // the paper's custom instruction: the free slot after vmacc
+        VOp::Macsr => 0b101110,
+        VOp::Nmsac => 0b101111,
+        // this repo's configurable-shift extension (paper future work):
+        // the reserved slot between vmadd (101001) and vnmsub (101011)
+        VOp::MacsrCfg => 0b101010,
+        VOp::WAdduWv => 0b110101,
+        _ => return None,
+    })
+}
+
+/// funct6 for an op in the OPF* (floating point) space.
+pub fn funct6_opf(op: VOp) -> Option<u32> {
+    Some(match op {
+        VOp::FAdd => 0b000000,
+        VOp::FMul => 0b100100,
+        VOp::FMacc => 0b101100,
+        _ => return None,
+    })
+}
+
+/// Memory element-width field (RVV 1.0 table 8: mem width encoding).
+pub fn mem_width(bits: u32) -> u32 {
+    match bits {
+        8 => 0b000,
+        16 => 0b101,
+        32 => 0b110,
+        64 => 0b111,
+        _ => unreachable!("unsupported EEW {bits}"),
+    }
+}
+
+fn opv(funct6: u32, vm: u32, vs2: u32, v1: u32, f3: u32, vd: u32) -> u32 {
+    (funct6 << 26) | (vm << 25) | (vs2 << 20) | (v1 << 15) | (f3 << 12) | (vd << 7) | OPC_V
+}
+
+/// Encode one trace instruction to its 32-bit machine word.
+///
+/// Panics on malformed instructions (unknown op/format combination) —
+/// the kernel builders only construct encodable instructions, and the
+/// property tests sweep every constructible combination.
+pub fn encode(inst: &VInst) -> u32 {
+    match *inst {
+        VInst::SetVl { sew, lmul, .. } => {
+            let vtypei = VType::new(sew, lmul).to_bits();
+            // vsetvli rd=a0, rs1=a0, vtypei  (bit31=0 selects vsetvli)
+            (vtypei << 20) | (TRACE_RS1 << 15) | (funct3::OPCFG << 12) | (TRACE_RS1 << 7) | OPC_V
+        }
+        VInst::Load { eew, vd, .. } => {
+            // nf=0 mew=0 mop=00 (unit stride) vm=1 lumop=00000
+            (1 << 25)
+                | (TRACE_RS1 << 15)
+                | (mem_width(eew.bits()) << 12)
+                | ((vd as u32) << 7)
+                | OPC_VL
+        }
+        VInst::Store { eew, vs3, .. } => {
+            (1 << 25)
+                | (TRACE_RS1 << 15)
+                | (mem_width(eew.bits()) << 12)
+                | ((vs3 as u32) << 7)
+                | OPC_VS
+        }
+        VInst::OpVV { op, vd, vs2, vs1 } => {
+            let (f6, f3) = if let Some(f6) = funct6_opi(op) {
+                (f6, funct3::OPIVV)
+            } else if let Some(f6) = funct6_opm(op) {
+                (f6, funct3::OPMVV)
+            } else if let Some(f6) = funct6_opf(op) {
+                (f6, funct3::OPFVV)
+            } else {
+                panic!("op {:?} has no VV encoding", op)
+            };
+            let vs2 = if op == VOp::Mv { 0 } else { vs2 as u32 };
+            opv(f6, 1, vs2, vs1 as u32, f3, vd as u32)
+        }
+        VInst::OpVX { op, vd, vs2, .. } => {
+            let (f6, f3) = if let Some(f6) = funct6_opi(op) {
+                (f6, funct3::OPIVX)
+            } else if let Some(f6) = funct6_opm(op) {
+                (f6, funct3::OPMVX)
+            } else if let Some(f6) = funct6_opf(op) {
+                (f6, funct3::OPFVF)
+            } else {
+                panic!("op {:?} has no VX encoding", op)
+            };
+            let vs2 = if op == VOp::Mv { 0 } else { vs2 as u32 };
+            opv(f6, 1, vs2, TRACE_RS1, f3, vd as u32)
+        }
+        VInst::OpVI { op, vd, vs2, imm } => {
+            let f6 = funct6_opi(op).unwrap_or_else(|| panic!("op {:?} has no VI encoding", op));
+            let vs2 = if op == VOp::Mv { 0 } else { vs2 as u32 };
+            opv(f6, 1, vs2, (imm as u32) & 0x1f, funct3::OPIVI, vd as u32)
+        }
+        VInst::Scalar { .. } => {
+            // Scalar slots are not vector instructions; encode as a
+            // canonical RV64I NOP (addi x0, x0, 0) for completeness.
+            0x0000_0013
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::vtype::{Lmul, Sew};
+
+    #[test]
+    fn vmacsr_uses_the_free_slot_after_vmacc() {
+        assert_eq!(funct6_opm(VOp::Macc), Some(0b101101));
+        assert_eq!(funct6_opm(VOp::Macsr), Some(0b101110));
+    }
+
+    #[test]
+    fn vmacsr_vx_word_fields() {
+        let w = encode(&VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 99 });
+        assert_eq!(w & 0x7f, OPC_V);
+        assert_eq!((w >> 12) & 0x7, funct3::OPMVX);
+        assert_eq!(w >> 26, 0b101110);
+        assert_eq!((w >> 7) & 0x1f, 1); // vd
+        assert_eq!((w >> 20) & 0x1f, 2); // vs2
+        assert_eq!((w >> 15) & 0x1f, TRACE_RS1);
+        assert_eq!((w >> 25) & 1, 1); // vm=1 (unmasked)
+    }
+
+    #[test]
+    fn vsetvli_word() {
+        let w = encode(&VInst::SetVl { avl: 256, sew: Sew::E16, lmul: Lmul::M2 });
+        assert_eq!(w & 0x7f, OPC_V);
+        assert_eq!((w >> 12) & 0x7, funct3::OPCFG);
+        assert_eq!(w >> 31, 0); // vsetvli (not vsetvl)
+        let vtypei = (w >> 20) & 0x7ff;
+        assert_eq!(VType::from_bits(vtypei), Some(VType::new(Sew::E16, Lmul::M2)));
+    }
+
+    #[test]
+    fn load_store_width_fields() {
+        let l = encode(&VInst::Load { eew: Sew::E16, vd: 4, addr: 0xdead });
+        assert_eq!(l & 0x7f, OPC_VL);
+        assert_eq!((l >> 12) & 0x7, 0b101);
+        let s = encode(&VInst::Store { eew: Sew::E8, vs3: 9, addr: 0 });
+        assert_eq!(s & 0x7f, OPC_VS);
+        assert_eq!((s >> 12) & 0x7, 0b000);
+        assert_eq!((s >> 7) & 0x1f, 9);
+    }
+
+    #[test]
+    fn vmul_and_vsll_share_funct6_but_not_funct3() {
+        // both 100101 — disambiguated by OPM vs OPI funct3 space
+        assert_eq!(funct6_opi(VOp::Sll), Some(0b100101));
+        assert_eq!(funct6_opm(VOp::Mul), Some(0b100101));
+        let sll = encode(&VInst::OpVI { op: VOp::Sll, vd: 1, vs2: 2, imm: 8 });
+        let mul = encode(&VInst::OpVV { op: VOp::Mul, vd: 1, vs2: 2, vs1: 3 });
+        assert_ne!((sll >> 12) & 7, (mul >> 12) & 7);
+    }
+}

@@ -1,0 +1,233 @@
+//! Dynamic-trace instruction form: what the kernel builders emit and the
+//! simulator executes.
+//!
+//! Loads/stores carry *resolved* byte addresses (the scalar core's
+//! address computation is accounted separately as [`ScalarKind`]
+//! dispatch slots), and `..VX` forms carry the resolved scalar operand —
+//! i.e. this is a post-register-read trace of the vector instruction
+//! stream, which is exactly the input an RTL-faithful timing model of
+//! the vector engine needs.
+
+use super::vtype::{Lmul, Sew};
+use std::fmt;
+
+/// Vector arithmetic / permutation opcodes used by the paper's kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VOp {
+    // --- integer ALU (VALU) ---
+    Add,
+    Sub,
+    And,
+    Or,
+    Xor,
+    Sll,
+    Srl,
+    Sra,
+    Min,
+    Max,
+    /// vmv.v.{v,x,i} — move/broadcast (executes on the VALU)
+    Mv,
+    /// vwaddu.wv — widening unsigned add-accumulate: vd(2*SEW) += vs2(SEW)
+    WAdduWv,
+    // --- SIMD multiplier (MFPU fixed-point side) ---
+    Mul,
+    Mulh,
+    Mulhu,
+    /// vmacc: vd += vs1*vs2 (modular at SEW)
+    Macc,
+    /// vnmsac: vd -= vs1*vs2
+    Nmsac,
+    /// **vmacsr** (Sparq custom): vd += (vs1*vs2 mod 2^SEW) >> (SEW/2),
+    /// logical shift — the paper's multiply-shift-accumulate.
+    Macsr,
+    /// vmacsr.cfg (this repo's "future work" extension): shift amount
+    /// comes from a CSR instead of being hard-wired to SEW/2.
+    MacsrCfg,
+    // --- floating point (VFPU — only present on Ara, removed in Sparq) ---
+    FAdd,
+    FMul,
+    /// vfmacc: vd += vs1*vs2 (fp32)
+    FMacc,
+    // --- slide unit (SLDU) ---
+    SlideDown,
+    SlideUp,
+}
+
+impl VOp {
+    /// True for ops executed by the floating-point side of the MFPU —
+    /// these trap on Sparq (no FPU).
+    pub fn is_fp(self) -> bool {
+        matches!(self, VOp::FAdd | VOp::FMul | VOp::FMacc)
+    }
+
+    /// True for the multiplier-side ops (occupy the SIMD multiplier).
+    pub fn is_mul(self) -> bool {
+        matches!(
+            self,
+            VOp::Mul | VOp::Mulh | VOp::Mulhu | VOp::Macc | VOp::Nmsac | VOp::Macsr | VOp::MacsrCfg
+        )
+    }
+
+    /// True for the slide-unit ops.
+    pub fn is_slide(self) -> bool {
+        matches!(self, VOp::SlideDown | VOp::SlideUp)
+    }
+
+    /// True for ternary (read-modify-write vd) ops.
+    pub fn reads_vd(self) -> bool {
+        matches!(
+            self,
+            VOp::Macc | VOp::Nmsac | VOp::Macsr | VOp::MacsrCfg | VOp::FMacc | VOp::WAdduWv
+        )
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            VOp::Add => "vadd",
+            VOp::Sub => "vsub",
+            VOp::And => "vand",
+            VOp::Or => "vor",
+            VOp::Xor => "vxor",
+            VOp::Sll => "vsll",
+            VOp::Srl => "vsrl",
+            VOp::Sra => "vsra",
+            VOp::Min => "vminu",
+            VOp::Max => "vmaxu",
+            VOp::Mv => "vmv.v",
+            VOp::WAdduWv => "vwaddu.w",
+            VOp::Mul => "vmul",
+            VOp::Mulh => "vmulh",
+            VOp::Mulhu => "vmulhu",
+            VOp::Macc => "vmacc",
+            VOp::Nmsac => "vnmsac",
+            VOp::Macsr => "vmacsr",
+            VOp::MacsrCfg => "vmacsr.cfg",
+            VOp::FAdd => "vfadd",
+            VOp::FMul => "vfmul",
+            VOp::FMacc => "vfmacc",
+            VOp::SlideDown => "vslidedown",
+            VOp::SlideUp => "vslideup",
+        }
+    }
+}
+
+/// Scalar-core work interleaved with the vector stream.  Each entry
+/// occupies issue slots in the (single-issue) front end but no vector
+/// unit — this is how loop control, address generation, and the scalar
+/// weight loads of Algorithm 1 cost cycles without being simulated at
+/// the RV64I level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScalarKind {
+    /// Address computation (adds/shifts feeding loads/stores).
+    AddrCalc,
+    /// Loop counters, compares, branches.
+    LoopCtl,
+    /// Scalar load of a (packed) weight word feeding a `.vx` operand.
+    WeightLoad,
+    /// CSR read/write (e.g. programming the configurable shifter).
+    Csr,
+}
+
+/// One instruction of the dynamic trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum VInst {
+    /// `vsetvli` — sets (vl, SEW, LMUL) for subsequent instructions.
+    SetVl { avl: u64, sew: Sew, lmul: Lmul },
+    /// Unit-stride vector load: `vle{eew}.v vd, (addr)`; element count
+    /// taken from the current `vl` (scaled if `eew != sew`).
+    Load { eew: Sew, vd: u8, addr: u64 },
+    /// Unit-stride vector store: `vse{eew}.v vs3, (addr)`.
+    Store { eew: Sew, vs3: u8, addr: u64 },
+    /// Vector-vector: `op vd, vs2, vs1` (RVV operand order).
+    OpVV { op: VOp, vd: u8, vs2: u8, vs1: u8 },
+    /// Vector-scalar: `op vd, vs2, rs1` with the scalar value resolved.
+    OpVX { op: VOp, vd: u8, vs2: u8, rs1: u64 },
+    /// Vector-immediate: `op vd, vs2, imm`.
+    OpVI { op: VOp, vd: u8, vs2: u8, imm: i8 },
+    /// Scalar-core overhead (see [`ScalarKind`]); `n` back-to-back slots.
+    Scalar { kind: ScalarKind, n: u32 },
+}
+
+impl VInst {
+    /// The destination vector register, if any.
+    pub fn vd(&self) -> Option<u8> {
+        match *self {
+            VInst::Load { vd, .. } => Some(vd),
+            VInst::OpVV { vd, .. } | VInst::OpVX { vd, .. } | VInst::OpVI { vd, .. } => Some(vd),
+            _ => None,
+        }
+    }
+
+    /// Source vector registers, allocation-free: fills `buf` and
+    /// returns the count (the timing model calls this per instruction —
+    /// §Perf iteration 2 removed the former per-call `Vec`).
+    pub fn srcs_into(&self, buf: &mut [u8; 3]) -> usize {
+        match *self {
+            VInst::Store { vs3, .. } => {
+                buf[0] = vs3;
+                1
+            }
+            VInst::OpVV { op, vd, vs2, vs1 } => {
+                buf[0] = vs2;
+                buf[1] = vs1;
+                if op.reads_vd() {
+                    buf[2] = vd;
+                    3
+                } else {
+                    2
+                }
+            }
+            VInst::OpVX { op, vd, vs2, .. } | VInst::OpVI { op, vd, vs2, .. } => {
+                buf[0] = vs2;
+                if op.reads_vd() {
+                    buf[1] = vd;
+                    2
+                } else {
+                    1
+                }
+            }
+            _ => 0,
+        }
+    }
+
+    /// Source vector registers (convenience; allocates).
+    pub fn srcs(&self) -> Vec<u8> {
+        let mut buf = [0u8; 3];
+        let n = self.srcs_into(&mut buf);
+        buf[..n].to_vec()
+    }
+
+    pub fn vop(&self) -> Option<VOp> {
+        match *self {
+            VInst::OpVV { op, .. } | VInst::OpVX { op, .. } | VInst::OpVI { op, .. } => Some(op),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for VInst {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", super::disasm::disasm(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srcs_include_vd_for_ternary_ops() {
+        let i = VInst::OpVX { op: VOp::Macsr, vd: 3, vs2: 4, rs1: 7 };
+        assert_eq!(i.srcs(), vec![4, 3]);
+        let i = VInst::OpVV { op: VOp::Add, vd: 3, vs2: 4, vs1: 5 };
+        assert_eq!(i.srcs(), vec![4, 5]);
+    }
+
+    #[test]
+    fn unit_classification() {
+        assert!(VOp::Macsr.is_mul() && !VOp::Macsr.is_fp());
+        assert!(VOp::FMacc.is_fp() && !VOp::FMacc.is_mul());
+        assert!(VOp::SlideDown.is_slide());
+        assert!(VOp::WAdduWv.reads_vd());
+    }
+}

@@ -1,0 +1,22 @@
+//! The RISC-V "V" 1.0 instruction subset Ara implements, extended with
+//! the paper's custom `vmacsr` (vector multiply-shift-accumulate).
+//!
+//! Layering: [`VInst`](inst::VInst) is the *dynamic trace* form the
+//! kernel builders emit and the simulator executes (operands carry
+//! resolved addresses/scalars, like a post-register-read trace).
+//! [`encode`]/[`decode`] map the architectural part of each instruction
+//! to/from its faithful 32-bit RVV machine encoding — this is where the
+//! `vmacsr` funct6 slot from the paper's Fig. 3 lives — and [`disasm`]
+//! renders assembly text.
+
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+pub mod inst;
+pub mod vtype;
+
+pub use decode::{decode, DecodeError};
+pub use disasm::disasm;
+pub use encode::encode;
+pub use inst::{ScalarKind, VInst, VOp};
+pub use vtype::{Lmul, Sew, VType};

@@ -1,0 +1,221 @@
+//! The `vtype` CSR state machine: SEW / LMUL / VL computation per the
+//! RVV 1.0 spec (`vsetvli` semantics).
+
+use std::fmt;
+
+/// Selected element width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sew {
+    E8,
+    E16,
+    E32,
+    E64,
+}
+
+impl Sew {
+    /// Element width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            Sew::E8 => 8,
+            Sew::E16 => 16,
+            Sew::E32 => 32,
+            Sew::E64 => 64,
+        }
+    }
+
+    /// Element width in bytes.
+    pub fn bytes(self) -> u32 {
+        self.bits() / 8
+    }
+
+    /// The `vsew[2:0]` encoding of the vtype CSR.
+    pub fn vsew(self) -> u32 {
+        match self {
+            Sew::E8 => 0,
+            Sew::E16 => 1,
+            Sew::E32 => 2,
+            Sew::E64 => 3,
+        }
+    }
+
+    pub fn from_vsew(v: u32) -> Option<Sew> {
+        match v {
+            0 => Some(Sew::E8),
+            1 => Some(Sew::E16),
+            2 => Some(Sew::E32),
+            3 => Some(Sew::E64),
+            _ => None,
+        }
+    }
+
+    /// The doubled width used by widening ops (`vwaddu.wv`).
+    pub fn widened(self) -> Option<Sew> {
+        match self {
+            Sew::E8 => Some(Sew::E16),
+            Sew::E16 => Some(Sew::E32),
+            Sew::E32 => Some(Sew::E64),
+            Sew::E64 => None,
+        }
+    }
+}
+
+impl fmt::Display for Sew {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "e{}", self.bits())
+    }
+}
+
+/// Register-group multiplier (fractional LMUL is not used by any of the
+/// paper's kernels and is not modelled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lmul {
+    M1,
+    M2,
+    M4,
+    M8,
+}
+
+impl Lmul {
+    pub fn factor(self) -> u32 {
+        match self {
+            Lmul::M1 => 1,
+            Lmul::M2 => 2,
+            Lmul::M4 => 4,
+            Lmul::M8 => 8,
+        }
+    }
+
+    /// The `vlmul[2:0]` encoding.
+    pub fn vlmul(self) -> u32 {
+        match self {
+            Lmul::M1 => 0,
+            Lmul::M2 => 1,
+            Lmul::M4 => 2,
+            Lmul::M8 => 3,
+        }
+    }
+
+    pub fn from_vlmul(v: u32) -> Option<Lmul> {
+        match v {
+            0 => Some(Lmul::M1),
+            1 => Some(Lmul::M2),
+            2 => Some(Lmul::M4),
+            3 => Some(Lmul::M8),
+            _ => None,
+        }
+    }
+
+    /// Smallest LMUL whose VLMAX covers `avl` elements, if any.
+    pub fn covering(avl: u64, sew: Sew, vlen_bits: u32) -> Option<Lmul> {
+        for lmul in [Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8] {
+            if VType::new(sew, lmul).vlmax(vlen_bits) as u64 >= avl {
+                return Some(lmul);
+            }
+        }
+        None
+    }
+}
+
+impl fmt::Display for Lmul {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "m{}", self.factor())
+    }
+}
+
+/// A (SEW, LMUL) pair — the subset of the vtype CSR the kernels use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VType {
+    pub sew: Sew,
+    pub lmul: Lmul,
+}
+
+impl VType {
+    pub fn new(sew: Sew, lmul: Lmul) -> VType {
+        VType { sew, lmul }
+    }
+
+    /// VLMAX = VLEN/SEW * LMUL (RVV 1.0 §3.4.2).
+    pub fn vlmax(self, vlen_bits: u32) -> u32 {
+        vlen_bits / self.sew.bits() * self.lmul.factor()
+    }
+
+    /// `vsetvli` rd-result: vl = min(AVL, VLMAX).
+    pub fn apply(self, avl: u64, vlen_bits: u32) -> u32 {
+        (avl.min(self.vlmax(vlen_bits) as u64)) as u32
+    }
+
+    /// vtype CSR bits (vill=0, vma=0, vta=0).
+    pub fn to_bits(self) -> u32 {
+        (self.sew.vsew() << 3) | self.lmul.vlmul()
+    }
+
+    pub fn from_bits(bits: u32) -> Option<VType> {
+        Some(VType {
+            sew: Sew::from_vsew((bits >> 3) & 0x7)?,
+            lmul: Lmul::from_vlmul(bits & 0x7)?,
+        })
+    }
+
+    /// Register-group alignment check: vd must be a multiple of LMUL.
+    pub fn reg_aligned(self, v: u8) -> bool {
+        v as u32 % self.lmul.factor() == 0
+    }
+}
+
+impl fmt::Display for VType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{},{},ta,ma", self.sew, self.lmul)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vlmax_matches_spec_examples() {
+        // VLEN=4096: e16/m1 -> 256, e8/m1 -> 512, e16/m2 -> 512
+        assert_eq!(VType::new(Sew::E16, Lmul::M1).vlmax(4096), 256);
+        assert_eq!(VType::new(Sew::E8, Lmul::M1).vlmax(4096), 512);
+        assert_eq!(VType::new(Sew::E16, Lmul::M2).vlmax(4096), 512);
+        assert_eq!(VType::new(Sew::E64, Lmul::M8).vlmax(4096), 512);
+    }
+
+    #[test]
+    fn vsetvli_clamps_to_vlmax() {
+        let vt = VType::new(Sew::E16, Lmul::M1);
+        assert_eq!(vt.apply(100, 4096), 100);
+        assert_eq!(vt.apply(1000, 4096), 256);
+    }
+
+    #[test]
+    fn vtype_bits_roundtrip() {
+        for sew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+            for lmul in [Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8] {
+                let vt = VType::new(sew, lmul);
+                assert_eq!(VType::from_bits(vt.to_bits()), Some(vt));
+            }
+        }
+    }
+
+    #[test]
+    fn covering_picks_smallest() {
+        assert_eq!(Lmul::covering(256, Sew::E16, 4096), Some(Lmul::M1));
+        assert_eq!(Lmul::covering(257, Sew::E16, 4096), Some(Lmul::M2));
+        assert_eq!(Lmul::covering(512, Sew::E16, 4096), Some(Lmul::M2));
+        assert_eq!(Lmul::covering(3000, Sew::E16, 4096), None);
+    }
+
+    #[test]
+    fn widened_chain() {
+        assert_eq!(Sew::E8.widened(), Some(Sew::E16));
+        assert_eq!(Sew::E64.widened(), None);
+    }
+
+    #[test]
+    fn reg_alignment() {
+        let vt = VType::new(Sew::E16, Lmul::M4);
+        assert!(vt.reg_aligned(0) && vt.reg_aligned(4) && vt.reg_aligned(28));
+        assert!(!vt.reg_aligned(2) && !vt.reg_aligned(30) || vt.lmul.factor() <= 2);
+    }
+}

@@ -1,0 +1,184 @@
+//! `Asm` — the builder the kernel writers use; a thin, stateful wrapper
+//! over [`Program`] that mirrors what hand-written inline assembly
+//! would emit (vsetvli tracking, scalar-overhead bookkeeping, strip-
+//! mining helpers).
+
+use crate::isa::{Lmul, ScalarKind, Sew, VInst, VOp, VType};
+use crate::sim::Program;
+
+/// Builder state: the (SEW, LMUL, vl) the emitted stream is under.
+pub struct Asm {
+    pub prog: Program,
+    vlen_bits: u32,
+    cur: Option<(Sew, Lmul, u32)>,
+}
+
+impl Asm {
+    pub fn new(label: impl Into<String>, vlen_bits: u32) -> Asm {
+        Asm { prog: Program::new(label), vlen_bits, cur: None }
+    }
+
+    pub fn finish(mut self, macs: u64) -> Program {
+        self.prog.macs = macs;
+        self.prog
+    }
+
+    /// The machine's VLEN (bits) this stream is built for.
+    pub fn vlen_bits(&self) -> u32 {
+        self.vlen_bits
+    }
+
+    /// Current vl.
+    pub fn vl(&self) -> u32 {
+        self.cur.expect("vsetvli not issued").2
+    }
+
+    pub fn vtype(&self) -> VType {
+        let (sew, lmul, _) = self.cur.expect("vsetvli not issued");
+        VType::new(sew, lmul)
+    }
+
+    /// Emit `vsetvli` (skipped if the requested state is already in
+    /// effect — like a peephole-optimised kernel would).
+    pub fn setvl(&mut self, avl: u64, sew: Sew, lmul: Lmul) -> u32 {
+        let vl = VType::new(sew, lmul).apply(avl, self.vlen_bits);
+        if self.cur == Some((sew, lmul, vl)) {
+            return vl;
+        }
+        self.cur = Some((sew, lmul, vl));
+        self.prog.push(VInst::SetVl { avl, sew, lmul });
+        vl
+    }
+
+    /// Largest LMUL whose register budget allows `groups` live register
+    /// groups (32 architectural registers).
+    pub fn lmul_for(&self, groups: u32, avl: u64, sew: Sew) -> Lmul {
+        let max_by_budget = 32 / groups.max(1);
+        let mut best = Lmul::M1;
+        for lm in [Lmul::M2, Lmul::M4, Lmul::M8] {
+            if lm.factor() > max_by_budget {
+                break;
+            }
+            // stop growing once a single group already covers the row
+            if VType::new(sew, best).vlmax(self.vlen_bits) as u64 >= avl {
+                break;
+            }
+            best = lm;
+        }
+        best
+    }
+
+    // ---- memory ----
+    pub fn vle(&mut self, eew: Sew, vd: u8, addr: u64) {
+        self.scalar(ScalarKind::AddrCalc, 1);
+        self.prog.push(VInst::Load { eew, vd, addr });
+    }
+
+    pub fn vse(&mut self, eew: Sew, vs3: u8, addr: u64) {
+        self.scalar(ScalarKind::AddrCalc, 1);
+        self.prog.push(VInst::Store { eew, vs3, addr });
+    }
+
+    // ---- arithmetic ----
+    pub fn vv(&mut self, op: VOp, vd: u8, vs2: u8, vs1: u8) {
+        self.prog.push(VInst::OpVV { op, vd, vs2, vs1 });
+    }
+
+    pub fn vx(&mut self, op: VOp, vd: u8, vs2: u8, rs1: u64) {
+        self.prog.push(VInst::OpVX { op, vd, vs2, rs1 });
+    }
+
+    pub fn vi(&mut self, op: VOp, vd: u8, vs2: u8, imm: i8) {
+        self.prog.push(VInst::OpVI { op, vd, vs2, imm });
+    }
+
+    /// `vmv.v.i vd, 0` — clear an accumulator.
+    pub fn vclear(&mut self, vd: u8) {
+        self.prog.push(VInst::OpVI { op: VOp::Mv, vd, vs2: 0, imm: 0 });
+    }
+
+    /// `vmacc.vx` with a pre-loaded scalar weight: models the scalar
+    /// load feeding rs1 (1 slot) + the vector op.
+    pub fn vmacc_weight(&mut self, vd: u8, vs2: u8, weight: u64) {
+        self.scalar(ScalarKind::WeightLoad, 1);
+        self.vx(VOp::Macc, vd, vs2, weight);
+    }
+
+    /// `vmacsr.vx` likewise (the paper only uses the vector-scalar form).
+    pub fn vmacsr_weight(&mut self, vd: u8, vs2: u8, weight: u64) {
+        self.scalar(ScalarKind::WeightLoad, 1);
+        self.vx(VOp::Macsr, vd, vs2, weight);
+    }
+
+    /// `vfmacc.vf` with a scalar f32 weight.
+    pub fn vfmacc_weight(&mut self, vd: u8, vs2: u8, weight: f32) {
+        self.scalar(ScalarKind::WeightLoad, 1);
+        self.vx(VOp::FMacc, vd, vs2, weight.to_bits() as u64);
+    }
+
+    // ---- scalar-core overhead ----
+    pub fn scalar(&mut self, kind: ScalarKind, n: u32) {
+        self.prog.push(VInst::Scalar { kind, n });
+    }
+
+    /// Loop-iteration overhead (counter bump + compare + branch).
+    pub fn loop_overhead(&mut self) {
+        self.scalar(ScalarKind::LoopCtl, 2);
+    }
+}
+
+/// Strip-mining: split `total` output columns into strips of at most
+/// `max_strip`, returning (start, width) pairs.
+pub fn strips(total: u32, max_strip: u32) -> Vec<(u32, u32)> {
+    assert!(max_strip > 0);
+    let mut out = Vec::new();
+    let mut s = 0;
+    while s < total {
+        let w = max_strip.min(total - s);
+        out.push((s, w));
+        s += w;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn setvl_dedupes() {
+        let mut a = Asm::new("t", 4096);
+        a.setvl(100, Sew::E16, Lmul::M1);
+        a.setvl(100, Sew::E16, Lmul::M1);
+        assert_eq!(a.prog.len(), 1);
+        a.setvl(50, Sew::E16, Lmul::M1);
+        assert_eq!(a.prog.len(), 2);
+    }
+
+    #[test]
+    fn lmul_for_respects_register_budget() {
+        let a = Asm::new("t", 4096);
+        // 8 groups (7x7 conv: 7 accumulators + input) -> at most m4
+        assert_eq!(a.lmul_for(8, 518, Sew::E16), Lmul::M4);
+        // 22 groups (spilling variants) -> m1
+        assert_eq!(a.lmul_for(22, 518, Sew::E16), Lmul::M1);
+        // small rows don't need big groups
+        assert_eq!(a.lmul_for(8, 64, Sew::E16), Lmul::M1);
+    }
+
+    #[test]
+    fn strips_cover_exactly() {
+        assert_eq!(strips(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(strips(4, 8), vec![(0, 4)]);
+        let total: u32 = strips(517, 256).iter().map(|&(_, w)| w).sum();
+        assert_eq!(total, 517);
+    }
+
+    #[test]
+    fn weight_macc_emits_scalar_slot() {
+        let mut a = Asm::new("t", 4096);
+        a.setvl(16, Sew::E16, Lmul::M1);
+        a.vmacc_weight(1, 2, 7);
+        assert_eq!(a.prog.len(), 3); // setvl + scalar + vmacc
+    }
+}

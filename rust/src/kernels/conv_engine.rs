@@ -1,0 +1,413 @@
+//! The output-stationary slide-based conv2d engine — Algorithm 1 of the
+//! paper, generalised over the four inner-loop policies (int16 vmacc,
+//! fp32 vfmacc, native ULPPACK vmacc+repair, `vmacsr`+spill).
+//!
+//! Loop nest (paper Algorithm 1, 0-indexed):
+//!
+//! ```text
+//! for o in output channels:
+//!   for strip in output-column strips:          # strip-mining to VLMAX
+//!     clear the Fh rotating accumulators
+//!     for h in input rows:
+//!       for cc in (packed) channels:
+//!         V_in <- load input row (cc, h) strip
+//!         for i in 0..Fw:
+//!           for j in 0..Fh:                     # slot j holds an output row
+//!             acc[j] += op(V_in, W[o][cc][fh-1-j][i])
+//!           V_in <- vslidedown(V_in, 1)
+//!           (repair / spill cadence)
+//!       if slot 0's output row is complete: finalize + store
+//!       rotate slots, clear the recycled accumulator
+//! ```
+//!
+//! Slot `j` at input row `h` accumulates output row `h - (Fh-1) + j`
+//! with kernel row `ki = Fh-1-j`; slot 0 completes at every `h >= Fh-1`.
+//!
+//! Exactness: the drain cadences come from `ulppack::region`; because a
+//! drained chunk never overflows its subfields, the wide total is
+//! partition-independent and the kernel output equals the golden models
+//! in `workload.rs` bit-for-bit (see the integration tests).
+
+use super::asm::{strips, Asm};
+use super::pack_rt;
+use super::workload::{OutElem, OutputRef, Workload};
+use crate::isa::{Lmul, ScalarKind, Sew, VOp, VType};
+use crate::sim::{Machine, Program, SimError};
+use crate::ulppack::{self, Container};
+
+/// Inner-loop policy: what one "MAC issue" is and how accumulators are
+/// kept exact.
+#[derive(Debug, Clone, Copy)]
+pub enum Inner {
+    /// vmacc on int16 levels (the paper's speedup baseline).
+    Int16,
+    /// vfmacc on f32 (Ara only).
+    Fp32,
+    /// Algorithm 1 proper: vmacsr on packed containers, wide-accumulator
+    /// spills every `spill_every` issues (u64::MAX = never).
+    Vmacsr { container: Container, spill_every: u64 },
+    /// Native ULPPACK: vmacc on packed containers + the vsrl/vwaddu/vmv
+    /// repair sequence every `k_local` issues.
+    Native { container: Container, k_local: u64 },
+}
+
+impl Inner {
+    pub fn sew(self) -> Sew {
+        match self {
+            Inner::Int16 => Sew::E16,
+            Inner::Fp32 => Sew::E32,
+            Inner::Vmacsr { container, .. } | Inner::Native { container, .. } => match container {
+                Container::Lp => Sew::E16,
+                Container::Ulp => Sew::E8,
+            },
+        }
+    }
+
+    fn packed(self) -> Option<Container> {
+        match self {
+            Inner::Vmacsr { container, .. } | Inner::Native { container, .. } => Some(container),
+            _ => None,
+        }
+    }
+
+    /// Drain cadence in issues (u64::MAX = never).
+    fn cadence(self) -> u64 {
+        match self {
+            Inner::Vmacsr { spill_every, .. } => spill_every,
+            Inner::Native { k_local, .. } => k_local,
+            _ => u64::MAX,
+        }
+    }
+
+    /// Does this policy keep a wide (2xSEW) accumulator per slot?
+    /// ULP always does: its u8 accumulator must be widened for storage
+    /// anyway, and its spill cadences are far below any real reduction.
+    fn has_wide(self, total_issues: u64) -> bool {
+        match self {
+            Inner::Int16 | Inner::Fp32 => false,
+            Inner::Vmacsr { container: Container::Ulp, .. } => true,
+            Inner::Vmacsr { spill_every, .. } => spill_every < total_issues,
+            Inner::Native { .. } => true,
+        }
+    }
+}
+
+/// Engine options beyond the inner policy.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOpts {
+    /// Pack weights at runtime (counted as scalar slots) — the paper's
+    /// measurement includes this; `false` models offline preprocessing
+    /// (the ablation).
+    pub runtime_weight_pack: bool,
+    /// Pack activations at runtime with vector code (always true in the
+    /// paper; `false` is the offline-packing ablation).
+    pub runtime_act_pack: bool,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { runtime_weight_pack: true, runtime_act_pack: true }
+    }
+}
+
+/// Register map for one build.
+struct Regs {
+    lmul: Lmul,
+    /// acc[j] base register per slot (rotated by index).
+    acc: Vec<u8>,
+    /// wide accumulator base per slot (EEW = 2*SEW, 2 regs), if any.
+    wide: Vec<u8>,
+    /// input row register group.
+    vin: u8,
+    /// scratch for the native repair.
+    tmp: Option<u8>,
+}
+
+fn alloc_regs(a: &Asm, fh: u32, avl: u64, sew: Sew, wide: bool, tmp: bool) -> Regs {
+    assert!((1..=7).contains(&fh), "engine supports Fh in 1..=7 (paper uses 7x7)");
+    if !wide && !tmp {
+        // fh accumulators + input row, at the largest LMUL that fits
+        let lmul = a.lmul_for(fh + 1, avl, sew);
+        let l = lmul.factor();
+        Regs {
+            lmul,
+            acc: (0..fh).map(|j| (j * l) as u8).collect(),
+            wide: vec![],
+            vin: (fh * l) as u8,
+            tmp: None,
+        }
+    } else {
+        // narrow accs at v0..fh-1, wide pairs at v8+2j (even-aligned for
+        // the EEW=2*SEW group), input + scratch at the top; LMUL=1
+        Regs {
+            lmul: Lmul::M1,
+            acc: (0..fh).map(|j| j as u8).collect(),
+            wide: if wide { (0..fh).map(|j| (8 + 2 * j) as u8).collect() } else { vec![] },
+            vin: 22,
+            tmp: if tmp { Some(23) } else { None },
+        }
+    }
+}
+
+/// Build the conv program for `inner` over `wl`; returns the trace and
+/// where the output tensor will be.
+pub fn build(
+    m: &mut Machine,
+    wl: &Workload,
+    inner: Inner,
+    opts: EngineOpts,
+    label: String,
+) -> Result<(Program, OutputRef), SimError> {
+    let d = wl.dims;
+    let sew = inner.sew();
+    let ew = sew.bytes() as u64;
+    let (ho, wo) = (d.ho(), d.wo());
+    let total_issues = match inner.packed() {
+        Some(_) => d.issues_per_output(),
+        None => (d.c * d.fh * d.fw) as u64,
+    };
+    let has_wide = inner.has_wide(total_issues);
+    let needs_tmp = matches!(inner, Inner::Native { .. });
+
+    // ---- guard: the wide accumulator itself must suffice ----
+    if has_wide && sew.bits() < 32 {
+        let dmax = ulppack::region::dot_max(wl.w_bits, wl.a_bits).max(1);
+        let wide_cap = (1u64 << (2 * sew.bits())) - 1;
+        if total_issues.saturating_mul(dmax) > wide_cap {
+            return Err(SimError::Unsupported(
+                "wide accumulator would overflow: reduce C or kernel size",
+            ));
+        }
+    }
+
+    // ---- stage tensors into simulated DRAM ----
+    let channels = match inner.packed() {
+        Some(_) => d.c / 2,
+        None => d.c,
+    };
+    let row_bytes = d.w as u64 * ew;
+    let x_addr = m.mem.alloc(d.c as u64 * d.h as u64 * row_bytes, 64)?;
+    match inner {
+        Inner::Fp32 => {
+            for (c, row) in wl.act_f32.iter().enumerate() {
+                m.mem.write_f32s(x_addr + c as u64 * d.h as u64 * row_bytes, row)?;
+            }
+        }
+        _ => {
+            for (c, row) in wl.act.iter().enumerate() {
+                let base = x_addr + c as u64 * d.h as u64 * row_bytes;
+                for (i, &v) in row.iter().enumerate() {
+                    m.mem.store_uint(base + i as u64 * ew, ew as u32, v)?;
+                }
+            }
+        }
+    }
+    // packed activations: written by the runtime packing pass, or staged
+    // by the host for the offline-packing ablation
+    let xp_addr = if let Some(cont) = inner.packed() {
+        let addr = m.mem.alloc(channels as u64 * d.h as u64 * row_bytes, 64)?;
+        if !opts.runtime_act_pack {
+            let packed = ulppack::pack_activations(&wl.act, cont);
+            for (c, row) in packed.iter().enumerate() {
+                let base = addr + c as u64 * d.h as u64 * row_bytes;
+                for (i, &v) in row.iter().enumerate() {
+                    m.mem.store_uint(base + i as u64 * ew, ew as u32, v)?;
+                }
+            }
+        }
+        addr
+    } else {
+        x_addr
+    };
+
+    // output buffer
+    let out_elem = match inner {
+        Inner::Fp32 => OutElem::F32,
+        Inner::Int16 => OutElem::U16,
+        Inner::Vmacsr { container, .. } | Inner::Native { container, .. } => {
+            if has_wide {
+                match container {
+                    Container::Lp => OutElem::U32,
+                    Container::Ulp => OutElem::U16,
+                }
+            } else {
+                OutElem::U16 // LP, no spill needed
+            }
+        }
+    };
+    let out_bytes = match out_elem {
+        OutElem::U16 => 2u64,
+        OutElem::U32 | OutElem::F32 => 4,
+    };
+    let out_len = (d.co * ho * wo) as usize;
+    let out_addr = m.mem.alloc(out_len as u64 * out_bytes, 64)?;
+
+    // resolved weights for the .vx operands
+    let wvals: Vec<Vec<Vec<u64>>> = match inner {
+        Inner::Fp32 => wl
+            .wgt_f32
+            .iter()
+            .map(|po| po.iter().map(|f| f.iter().map(|&v| v.to_bits() as u64).collect()).collect())
+            .collect(),
+        Inner::Int16 => wl.wgt.clone(),
+        Inner::Vmacsr { container, .. } | Inner::Native { container, .. } => {
+            ulppack::pack_weights(&wl.wgt, container)
+        }
+    };
+
+    // ---- emit ----
+    let mut a = Asm::new(label, m.cfg.vlen_bits);
+
+    if inner.packed().is_some() {
+        if opts.runtime_weight_pack {
+            // scalar packing of weight containers: 2 loads + shift+or +
+            // store per container, all in the scalar core
+            a.scalar(ScalarKind::AddrCalc, d.co * channels * d.fh * d.fw * 4);
+        }
+        if opts.runtime_act_pack {
+            pack_rt::emit_pack_activations(&mut a, &d, sew, x_addr, xp_addr);
+        }
+    }
+
+    let regs = alloc_regs(&a, d.fh, d.w as u64, sew, has_wide, needs_tmp);
+    let wide_sew = sew.widened();
+    let vlmax_cols = VType::new(sew, regs.lmul).vlmax(m.cfg.vlen_bits);
+    let max_strip = vlmax_cols.saturating_sub(d.fw - 1).max(1);
+    let cadence = inner.cadence();
+
+    // helper: clear one wide pair under the EEW view (so every byte the
+    // widening add will touch is zeroed), then return to the narrow view
+    let clear_wide = |a: &mut Asm, reg: u8, svl: u64| {
+        a.setvl(svl, wide_sew.unwrap(), Lmul::M2);
+        a.vclear(reg);
+    };
+
+    for o in 0..d.co {
+        for (s0, sw) in strips(wo, max_strip) {
+            let svl_in = (sw + d.fw - 1) as u64;
+            let mut slots: Vec<usize> = (0..d.fh as usize).collect();
+            if has_wide {
+                for j in 0..d.fh as usize {
+                    clear_wide(&mut a, regs.wide[j], svl_in);
+                }
+            }
+            a.setvl(svl_in, sew, regs.lmul);
+            for j in 0..d.fh as usize {
+                a.vclear(regs.acc[j]);
+            }
+            let mut issues_since: u64 = 0;
+
+            for h in 0..d.h {
+                for cc in 0..channels {
+                    a.setvl(svl_in, sew, regs.lmul);
+                    let row = xp_addr + ((cc * d.h + h) as u64 * d.w as u64 + s0 as u64) * ew;
+                    a.vle(sew, regs.vin, row);
+                    for i in 0..d.fw {
+                        for j in 0..d.fh as usize {
+                            let ki = d.fh as usize - 1 - j;
+                            let wv = wvals[o as usize][cc as usize][ki * d.fw as usize + i as usize];
+                            match inner {
+                                Inner::Fp32 => a.vfmacc_weight(
+                                    regs.acc[slots[j]],
+                                    regs.vin,
+                                    f32::from_bits(wv as u32),
+                                ),
+                                Inner::Int16 | Inner::Native { .. } => {
+                                    a.vmacc_weight(regs.acc[slots[j]], regs.vin, wv)
+                                }
+                                Inner::Vmacsr { .. } => {
+                                    a.vmacsr_weight(regs.acc[slots[j]], regs.vin, wv)
+                                }
+                            }
+                        }
+                        if i < d.fw - 1 {
+                            a.vi(VOp::SlideDown, regs.vin, regs.vin, 1);
+                        }
+                        // every slot received one issue this iteration
+                        issues_since += 1;
+                        if issues_since >= cadence {
+                            issues_since = 0;
+                            emit_drain_all(&mut a, inner, &regs, &slots);
+                        }
+                    }
+                    a.loop_overhead();
+                }
+
+                // store the completed output row (slot 0)
+                let r = h as i64 - (d.fh as i64 - 1);
+                if r >= 0 && (r as u32) < ho {
+                    let dst = out_addr
+                        + ((o * ho + r as u32) as u64 * wo as u64 + s0 as u64) * out_bytes;
+                    emit_store_row(&mut a, inner, &regs, slots[0], has_wide, sw, svl_in, dst);
+                }
+                // rotate: slot j takes over slot j+1's registers; the
+                // recycled registers become the freshest accumulator
+                slots.rotate_left(1);
+                let fresh = slots[d.fh as usize - 1];
+                if has_wide {
+                    clear_wide(&mut a, regs.wide[fresh], svl_in);
+                }
+                a.setvl(svl_in, sew, regs.lmul);
+                a.vclear(regs.acc[fresh]);
+                a.loop_overhead();
+            }
+            a.loop_overhead();
+        }
+    }
+
+    let out = OutputRef { addr: out_addr, elem: out_elem, len: out_len };
+    Ok((a.finish(d.macs()), out))
+}
+
+/// Drain every slot's narrow accumulator into its wide one (the spill /
+/// repair sequence).  Caller guarantees the current vtype is the narrow
+/// (sew, lmul) view.
+fn emit_drain_all(a: &mut Asm, inner: Inner, regs: &Regs, slots: &[usize]) {
+    for &sl in slots {
+        emit_drain_one(a, inner, regs, sl);
+    }
+}
+
+fn emit_drain_one(a: &mut Asm, inner: Inner, regs: &Regs, sl: usize) {
+    match inner {
+        Inner::Native { .. } => {
+            // t = local >> S ; wide += t ; local = 0
+            let t = regs.tmp.expect("native repair needs the scratch register");
+            let s = (inner.sew().bits() / 2) as i8;
+            a.vi(VOp::Srl, t, regs.acc[sl], s);
+            a.vv(VOp::WAdduWv, regs.wide[sl], t, 0);
+            a.vclear(regs.acc[sl]);
+        }
+        Inner::Vmacsr { .. } => {
+            // wide += acc ; acc = 0   (already shifted by the hardware)
+            a.vv(VOp::WAdduWv, regs.wide[sl], regs.acc[sl], 0);
+            a.vclear(regs.acc[sl]);
+        }
+        _ => unreachable!("only packed policies drain"),
+    }
+}
+
+/// Finalize slot `sl` and store `sw` output columns at `dst`.
+fn emit_store_row(
+    a: &mut Asm,
+    inner: Inner,
+    regs: &Regs,
+    sl: usize,
+    has_wide: bool,
+    sw: u32,
+    svl_in: u64,
+    dst: u64,
+) {
+    let sew = inner.sew();
+    if has_wide {
+        // final drain of this slot, then store the wide accumulator
+        a.setvl(svl_in, sew, regs.lmul);
+        emit_drain_one(a, inner, regs, sl);
+        let ws = sew.widened().unwrap();
+        a.setvl(sw as u64, ws, Lmul::M2);
+        a.vse(ws, regs.wide[sl], dst);
+    } else {
+        a.setvl(sw as u64, sew, regs.lmul);
+        a.vse(sew, regs.acc[sl], dst);
+    }
+}

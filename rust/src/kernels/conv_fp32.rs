@@ -1,0 +1,50 @@
+//! The fp32 conv2d baseline — runs on Ara (Sparq traps: no FPU).
+//! Same slide-based structure with `vfmacc.vf` at SEW=32.
+
+use super::conv_engine::{self, EngineOpts, Inner};
+use super::workload::{OutputRef, Workload};
+use crate::sim::{Machine, Program, SimError};
+
+pub fn build(m: &mut Machine, wl: &Workload) -> Result<(Program, OutputRef), SimError> {
+    conv_engine::build(m, wl, Inner::Fp32, EngineOpts::default(), "fp32-conv2d".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ProcessorConfig;
+    use crate::kernels::workload::{golden_fp32, ConvDims, Workload};
+    use crate::sim::SimError;
+
+    #[test]
+    fn matches_order_exact_golden() {
+        let d = ConvDims { c: 4, h: 8, w: 10, co: 2, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 4, 4, 21);
+        let mut m = Machine::new(ProcessorConfig::ara(), wl.mem_bytes());
+        let (prog, out) = build(&mut m, &wl).unwrap();
+        m.run(&prog).unwrap();
+        let got = out.read_f32(&m.mem).unwrap();
+        let want = golden_fp32(&wl);
+        // the golden replicates the kernel's summation order: exact
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn traps_on_sparq() {
+        let d = ConvDims { c: 2, h: 4, w: 6, co: 1, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 4, 4, 2);
+        let mut m = Machine::new(ProcessorConfig::sparq(), wl.mem_bytes());
+        let (prog, _) = build(&mut m, &wl).unwrap();
+        assert!(matches!(m.run(&prog), Err(SimError::NoFpu(_))));
+    }
+
+    #[test]
+    fn matches_golden_7x7() {
+        let d = ConvDims { c: 2, h: 10, w: 40, co: 1, fh: 7, fw: 7 };
+        let wl = Workload::random(d, 4, 4, 5);
+        let mut m = Machine::new(ProcessorConfig::ara(), wl.mem_bytes());
+        let (prog, out) = build(&mut m, &wl).unwrap();
+        m.run(&prog).unwrap();
+        assert_eq!(out.read_f32(&m.mem).unwrap(), golden_fp32(&wl));
+    }
+}

@@ -1,0 +1,65 @@
+//! The optimized int16 conv2d baseline — the denominator of every
+//! speedup the paper reports.  Identical loop structure to Algorithm 1
+//! (slide-based, output-stationary) with `vmacc.vx` at SEW=16 on
+//! unpacked levels; no packing passes.
+
+use super::conv_engine::{self, EngineOpts, Inner};
+use super::workload::{OutputRef, Workload};
+use crate::sim::{Machine, Program, SimError};
+
+pub fn build(m: &mut Machine, wl: &Workload) -> Result<(Program, OutputRef), SimError> {
+    conv_engine::build(m, wl, Inner::Int16, EngineOpts::default(), "int16-conv2d".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ProcessorConfig;
+    use crate::kernels::workload::{golden_mod, ConvDims, Workload};
+    use crate::testutil::Prop;
+
+    fn run(wl: &Workload) -> (Vec<i64>, crate::sim::RunReport) {
+        let mut m = Machine::new(ProcessorConfig::sparq(), wl.mem_bytes());
+        let (prog, out) = build(&mut m, wl).unwrap();
+        let rep = m.run(&prog).unwrap();
+        (out.read_ints(&m.mem).unwrap(), rep)
+    }
+
+    #[test]
+    fn matches_golden_small() {
+        let d = ConvDims { c: 4, h: 8, w: 10, co: 2, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 8, 8, 11);
+        let (got, rep) = run(&wl);
+        assert_eq!(got, golden_mod(&wl, 16));
+        assert_eq!(rep.macs, d.macs());
+        assert!(rep.stats.cycles > 0);
+    }
+
+    #[test]
+    fn matches_golden_7x7_strip_mined() {
+        // width > VLMAX at the chosen LMUL forces strip-mining
+        let d = ConvDims { c: 2, h: 9, w: 1100, co: 1, fh: 7, fw: 7 };
+        let wl = Workload::random(d, 4, 4, 3);
+        let (got, _) = run(&wl);
+        assert_eq!(got, golden_mod(&wl, 16));
+    }
+
+    #[test]
+    fn property_random_shapes_match_golden() {
+        Prop::new(0x16).runs(12).check(|g| {
+            let fh = g.range(1, 5) as u32;
+            let fw = g.range(1, 5) as u32;
+            let d = ConvDims {
+                c: 2 * g.range(1, 3) as u32,
+                h: fh + g.range(1, 6) as u32,
+                w: fw + g.range(1, 12) as u32,
+                co: g.range(1, 3) as u32,
+                fh,
+                fw,
+            };
+            let wl = Workload::random(d, 5, 5, g.next_u64());
+            let (got, _) = run(&wl);
+            assert_eq!(got, golden_mod(&wl, 16), "{d:?}");
+        });
+    }
+}

@@ -1,0 +1,122 @@
+//! Native ULPPACK conv2d on stock RVV (runs on Ara *and* Sparq): vmacc
+//! accumulates raw packed products locally, and every `k_local` issues
+//! the vsrl + vwaddu + vmv repair sequence extracts the dot-product
+//! field — the exact overhead `vmacsr` was designed to remove (paper
+//! Fig. 2).
+
+use super::conv_engine::{self, EngineOpts, Inner};
+use super::workload::{OutputRef, Workload};
+use crate::sim::{Machine, Program, SimError};
+use crate::ulppack::region;
+
+/// Build the native ULPPACK conv at (W, A).  Fails with `Unsupported`
+/// when no container sustains even one local accumulation.
+pub fn build(
+    m: &mut Machine,
+    wl: &Workload,
+    w_bits: u32,
+    a_bits: u32,
+) -> Result<(Program, OutputRef), SimError> {
+    build_opts(m, wl, w_bits, a_bits, EngineOpts::default())
+}
+
+pub fn build_opts(
+    m: &mut Machine,
+    wl: &Workload,
+    w_bits: u32,
+    a_bits: u32,
+    opts: EngineOpts,
+) -> Result<(Program, OutputRef), SimError> {
+    let plan = region::plan_native(w_bits, a_bits)
+        .ok_or(SimError::Unsupported("precision pair not natively packable"))?;
+    let inner = Inner::Native { container: plan.container, k_local: plan.spill_every };
+    let label = format!("W{w_bits}A{a_bits}-conv2d-native");
+    conv_engine::build(m, wl, inner, opts, label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ProcessorConfig;
+    use crate::kernels::workload::{golden_exact, ConvDims, Workload};
+    use crate::testutil::Prop;
+
+    fn run(wl: &Workload, w: u32, a: u32) -> (Vec<i64>, crate::sim::RunReport) {
+        let mut m = Machine::new(ProcessorConfig::ara(), wl.mem_bytes());
+        let (prog, out) = build(&mut m, wl, w, a).unwrap();
+        let rep = m.run(&prog).unwrap();
+        (out.read_ints(&m.mem).unwrap(), rep)
+    }
+
+    #[test]
+    fn w1a1_exact() {
+        let d = ConvDims { c: 8, h: 9, w: 12, co: 2, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 1, 1, 4);
+        let (got, _) = run(&wl, 1, 1);
+        assert_eq!(got, golden_exact(&wl));
+    }
+
+    #[test]
+    fn w3a3_exact_with_subrow_repairs() {
+        // k_local(3,3,LP) = 3 < fw: repairs fire inside the i loop
+        let d = ConvDims { c: 4, h: 11, w: 14, co: 1, fh: 5, fw: 5 };
+        let wl = Workload::random(d, 3, 3, 8);
+        let (got, _) = run(&wl, 3, 3);
+        assert_eq!(got, golden_exact(&wl));
+    }
+
+    #[test]
+    fn w4a4_rejected() {
+        let d = ConvDims { c: 4, h: 6, w: 8, co: 1, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 4, 4, 1);
+        let mut m = Machine::new(ProcessorConfig::ara(), wl.mem_bytes());
+        assert!(build(&mut m, &wl, 4, 4).is_err());
+    }
+
+    #[test]
+    fn runs_on_stock_ara() {
+        // no vmacsr involved: the whole point of the native scheme
+        let d = ConvDims { c: 4, h: 6, w: 8, co: 1, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 2, 2, 6);
+        let (got, _) = run(&wl, 2, 2);
+        assert_eq!(got, golden_exact(&wl));
+    }
+
+    #[test]
+    fn property_native_pairs_match_exact_golden() {
+        Prop::new(0x7A7).runs(8).check(|g| {
+            let pairs = [(1u32, 1u32), (1, 2), (2, 2), (3, 3), (2, 3)];
+            let (w, a) = *g.pick(&pairs);
+            let f = *g.pick(&[1u32, 3, 5]);
+            let d = ConvDims {
+                c: 2 * g.range(1, 3) as u32,
+                h: f + g.range(2, 5) as u32,
+                w: f + g.range(2, 9) as u32,
+                co: g.range(1, 2) as u32,
+                fh: f,
+                fw: f,
+            };
+            let wl = Workload::random(d, w, a, g.next_u64());
+            let (got, _) = run(&wl, w, a);
+            assert_eq!(got, golden_exact(&wl), "W{w}A{a} {d:?}");
+        });
+    }
+
+    #[test]
+    fn slower_than_vmacsr_same_precision() {
+        use crate::ulppack::RegionMode;
+        let d = ConvDims { c: 8, h: 14, w: 70, co: 2, fh: 7, fw: 7 };
+        let wl = Workload::random(d, 2, 2, 3);
+        let (_, rep_nat) = run(&wl, 2, 2);
+        let mut m = Machine::new(ProcessorConfig::sparq(), wl.mem_bytes());
+        let (prog, _) =
+            crate::kernels::conv_vmacsr::build(&mut m, &wl, 2, 2, RegionMode::Strict).unwrap();
+        let rep_sr = m.run(&prog).unwrap();
+        assert!(
+            rep_sr.stats.cycles < rep_nat.stats.cycles,
+            "vmacsr {} !< native {}",
+            rep_sr.stats.cycles,
+            rep_nat.stats.cycles
+        );
+    }
+}

@@ -1,0 +1,129 @@
+//! Algorithm 1 of the paper: the ULPPACK conv2d accelerated with the
+//! `vmacsr` multiply-shift-accumulate (runs on Sparq only).  The
+//! container (LP 16-bit / ULP 8-bit) and the wide-accumulator spill
+//! cadence come from the region calculus in [`crate::ulppack::region`].
+
+use super::conv_engine::{self, EngineOpts, Inner};
+use super::workload::{OutputRef, Workload};
+use crate::sim::{Machine, Program, SimError};
+use crate::ulppack::region::{self, RegionMode};
+
+/// Build the vmacsr conv at (W, A) under `mode`.  Fails with
+/// `Unsupported` when no container admits the precision pair.
+pub fn build(
+    m: &mut Machine,
+    wl: &Workload,
+    w_bits: u32,
+    a_bits: u32,
+    mode: RegionMode,
+) -> Result<(Program, OutputRef), SimError> {
+    build_opts(m, wl, w_bits, a_bits, mode, EngineOpts::default())
+}
+
+pub fn build_opts(
+    m: &mut Machine,
+    wl: &Workload,
+    w_bits: u32,
+    a_bits: u32,
+    mode: RegionMode,
+    opts: EngineOpts,
+) -> Result<(Program, OutputRef), SimError> {
+    let plan = region::plan_vmacsr(w_bits, a_bits, wl.dims.issues_per_output(), mode)
+        .ok_or(SimError::Unsupported("precision pair outside every container's region"))?;
+    let inner = Inner::Vmacsr { container: plan.container, spill_every: plan.spill_every };
+    let label = format!("{}-W{w_bits}A{a_bits}-vmacsr", plan.container.name());
+    conv_engine::build(m, wl, inner, opts, label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ProcessorConfig;
+    use crate::kernels::workload::{golden_exact, golden_packed_vmacsr, ConvDims, Workload};
+    use crate::testutil::Prop;
+    use crate::ulppack::region::plan_vmacsr;
+
+    fn run(wl: &Workload, w: u32, a: u32, mode: RegionMode) -> (Vec<i64>, crate::sim::RunReport) {
+        let mut m = Machine::new(ProcessorConfig::sparq(), wl.mem_bytes());
+        let (prog, out) = build(&mut m, wl, w, a, mode).unwrap();
+        let rep = m.run(&prog).unwrap();
+        (out.read_ints(&m.mem).unwrap(), rep)
+    }
+
+    #[test]
+    fn w2a2_exact_on_ulp() {
+        let d = ConvDims { c: 8, h: 9, w: 12, co: 2, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 2, 2, 77);
+        let (got, _) = run(&wl, 2, 2, RegionMode::Strict);
+        assert_eq!(got, golden_exact(&wl));
+    }
+
+    #[test]
+    fn w3a3_exact_on_lp() {
+        let d = ConvDims { c: 6, h: 8, w: 14, co: 2, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 3, 3, 5);
+        let (got, _) = run(&wl, 3, 3, RegionMode::Strict);
+        assert_eq!(got, golden_exact(&wl));
+    }
+
+    #[test]
+    fn w4a4_paper_mode_matches_packed_golden() {
+        // outside the strict region: must equal the packed-arithmetic
+        // golden bit-for-bit (that is what the hardware computes)
+        let d = ConvDims { c: 6, h: 8, w: 12, co: 2, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 4, 4, 13);
+        let plan = plan_vmacsr(4, 4, d.issues_per_output(), RegionMode::Paper).unwrap();
+        let (got, _) = run(&wl, 4, 4, RegionMode::Paper);
+        assert_eq!(got, golden_packed_vmacsr(&wl, plan.container, plan.spill_every));
+    }
+
+    #[test]
+    fn w4a4_strict_rejected() {
+        let d = ConvDims { c: 4, h: 6, w: 8, co: 1, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 4, 4, 1);
+        let mut m = Machine::new(ProcessorConfig::sparq(), wl.mem_bytes());
+        assert!(build(&mut m, &wl, 4, 4, RegionMode::Strict).is_err());
+    }
+
+    #[test]
+    fn traps_on_ara() {
+        let d = ConvDims { c: 4, h: 6, w: 8, co: 1, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 2, 2, 1);
+        let mut m = Machine::new(ProcessorConfig::ara(), wl.mem_bytes());
+        let (prog, _) = build(&mut m, &wl, 2, 2, RegionMode::Strict).unwrap();
+        assert_eq!(m.run(&prog).unwrap_err(), crate::sim::SimError::NoVmacsr);
+    }
+
+    #[test]
+    fn property_strict_pairs_match_exact_golden() {
+        Prop::new(0xACE).runs(10).check(|g| {
+            let pairs = [(1u32, 1u32), (1, 2), (2, 1), (2, 2), (3, 3), (2, 3), (3, 2)];
+            let (w, a) = *g.pick(&pairs);
+            let fh = g.range(1, 3) as u32 * 2 - 1; // 1, 3, 5
+            let d = ConvDims {
+                c: 2 * g.range(1, 4) as u32,
+                h: fh + g.range(2, 6) as u32,
+                w: fh + g.range(2, 10) as u32,
+                co: g.range(1, 2) as u32,
+                fh,
+                fw: fh,
+            };
+            let wl = Workload::random(d, w, a, g.next_u64());
+            let (got, _) = run(&wl, w, a, RegionMode::Strict);
+            assert_eq!(got, golden_exact(&wl), "W{w}A{a} {d:?}");
+        });
+    }
+
+    #[test]
+    fn faster_than_int16_on_same_workload() {
+        let d = ConvDims { c: 16, h: 16, w: 70, co: 2, fh: 7, fw: 7 };
+        let wl2 = Workload::random(d, 2, 2, 3);
+        let (_, rep2) = run(&wl2, 2, 2, RegionMode::Paper);
+        let wl16 = Workload::random(d, 8, 8, 3);
+        let mut m = Machine::new(ProcessorConfig::sparq(), wl16.mem_bytes());
+        let (prog, _) = crate::kernels::conv_int16::build(&mut m, &wl16).unwrap();
+        let rep16 = m.run(&prog).unwrap();
+        let speedup = rep2.speedup_over(&rep16);
+        assert!(speedup > 1.5, "W2A2 speedup over int16 only {speedup:.2}x");
+    }
+}

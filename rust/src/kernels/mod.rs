@@ -1,0 +1,117 @@
+//! The paper's "hand-written inline assembly" as instruction-stream
+//! builders: each conv2d variant emits the exact RVV (+`vmacsr`) trace
+//! an unrolled hand-tuned kernel would execute, against tensors that
+//! live in the simulated memory.
+//!
+//! Variants (paper Fig. 4 legend):
+//! * [`conv_int16`]  — optimized int16 baseline (the speedup denominator)
+//! * [`conv_fp32`]   — fp32 baseline (runs on Ara; Sparq has no FPU)
+//! * [`conv_native`] — ULPPACK on stock RVV: vmacc + the vsrl/vwaddu
+//!   repair sequence every `k_local` issues (W1A1/W2A2/W3A3 bars)
+//! * [`conv_vmacsr`] — Algorithm 1 on Sparq: `vmacsr` with
+//!   calculus-scheduled wide-accumulator spills (LP and ULP bars)
+//! * [`pack_rt`]     — the runtime packing passes (counted in the
+//!   measured cycles, exactly like the paper measures)
+//!
+//! Golden models live in [`workload`]; each variant's module tests pin
+//! its outputs to them bit-for-bit.
+
+pub mod asm;
+pub mod conv_engine;
+pub mod conv_fp32;
+pub mod conv_int16;
+pub mod conv_native;
+pub mod conv_vmacsr;
+pub mod im2col_gemm;
+pub mod pack_rt;
+pub mod workload;
+
+pub use conv_engine::EngineOpts;
+pub use workload::{ConvDims, OutputRef, Workload};
+
+use crate::arch::ProcessorConfig;
+use crate::sim::{Machine, RunReport, SimError};
+use crate::ulppack::RegionMode;
+
+/// Which conv2d implementation to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvVariant {
+    Int16,
+    Fp32,
+    /// Native ULPPACK at (W, A) on stock RVV.
+    Native { w_bits: u32, a_bits: u32 },
+    /// Algorithm 1 with `vmacsr` at (W, A).
+    Vmacsr { w_bits: u32, a_bits: u32, mode: RegionMode },
+}
+
+impl ConvVariant {
+    pub fn label(&self) -> String {
+        match *self {
+            ConvVariant::Int16 => "int16-conv2d".into(),
+            ConvVariant::Fp32 => "fp32-conv2d".into(),
+            ConvVariant::Native { w_bits, a_bits } => format!("W{w_bits}A{a_bits}-conv2d"),
+            ConvVariant::Vmacsr { w_bits, a_bits, .. } => {
+                format!("W{w_bits}A{a_bits}-vmacsr-conv2d")
+            }
+        }
+    }
+
+    /// The (W, A) bits the workload should be quantized to.
+    pub fn bits(&self) -> (u32, u32) {
+        match *self {
+            ConvVariant::Int16 | ConvVariant::Fp32 => (8, 8),
+            ConvVariant::Native { w_bits, a_bits }
+            | ConvVariant::Vmacsr { w_bits, a_bits, .. } => (w_bits, a_bits),
+        }
+    }
+}
+
+/// One finished conv run: the timing report, the machine (for reading
+/// memory back), and where the output tensor is.
+pub struct ConvRun {
+    pub report: RunReport,
+    pub machine: Machine,
+    pub out: OutputRef,
+}
+
+/// Build + run one conv2d variant on a fresh machine.
+pub fn run_conv(
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    variant: ConvVariant,
+) -> Result<ConvRun, SimError> {
+    run_conv_opts(cfg, wl, variant, EngineOpts::default())
+}
+
+pub fn run_conv_opts(
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    variant: ConvVariant,
+    opts: EngineOpts,
+) -> Result<ConvRun, SimError> {
+    let mut m = Machine::new(cfg.clone(), wl.mem_bytes());
+    let (prog, out) = match variant {
+        ConvVariant::Int16 => conv_engine::build(
+            &mut m,
+            wl,
+            conv_engine::Inner::Int16,
+            opts,
+            variant.label(),
+        )?,
+        ConvVariant::Fp32 => conv_engine::build(
+            &mut m,
+            wl,
+            conv_engine::Inner::Fp32,
+            opts,
+            variant.label(),
+        )?,
+        ConvVariant::Native { w_bits, a_bits } => {
+            conv_native::build_opts(&mut m, wl, w_bits, a_bits, opts)?
+        }
+        ConvVariant::Vmacsr { w_bits, a_bits, mode } => {
+            conv_vmacsr::build_opts(&mut m, wl, w_bits, a_bits, mode, opts)?
+        }
+    };
+    let report = m.run(&prog)?;
+    Ok(ConvRun { report, machine: m, out })
+}

@@ -1,0 +1,109 @@
+//! Runtime activation packing — the vector pass that turns unpacked
+//! levels into ULPPACK containers before the conv runs.  The paper
+//! measures this cost ("execution time includes both activations and
+//! weights packing done at runtime", §V-A); it is emitted into the same
+//! program the conv executes so its cycles land in the total.
+//!
+//! Per channel pair and row strip:
+//!
+//! ```text
+//! vle  v0, row[2c]        # low-half levels
+//! vle  v8, row[2c+1]      # high-half levels
+//! vsll.vi v8, v8, S
+//! vor.vv  v0, v0, v8
+//! vse  v0, packed[c]
+//! ```
+
+use super::asm::{strips, Asm};
+use super::workload::ConvDims;
+use crate::isa::{Sew, VOp, VType};
+
+/// Emit the packing pass for all `C/2` channel pairs over the full
+/// `H x W` input.  `sew` is the container width's element type; levels
+/// are stored at container width (the quantizer's output layout).
+pub fn emit_pack_activations(a: &mut Asm, d: &ConvDims, sew: Sew, x_addr: u64, xp_addr: u64) {
+    let ew = sew.bytes() as u64;
+    let shift = (sew.bits() / 2) as i8;
+    let lmul = a.lmul_for(4, d.w as u64, sew); // v0 and v8 groups, <= m8
+    let max_strip = VType::new(sew, lmul).vlmax(a.vlen_bits()).max(1);
+    let row_elems = d.w;
+    let plane = d.h as u64 * d.w as u64;
+
+    for cp in 0..d.c / 2 {
+        let src0 = x_addr + (2 * cp) as u64 * plane * ew;
+        let src1 = x_addr + (2 * cp + 1) as u64 * plane * ew;
+        let dst = xp_addr + cp as u64 * plane * ew;
+        for h in 0..d.h {
+            for (s0, swidth) in strips(row_elems, max_strip) {
+                let off = (h as u64 * d.w as u64 + s0 as u64) * ew;
+                a.setvl(swidth as u64, sew, lmul);
+                a.vle(sew, 0, src0 + off);
+                a.vle(sew, 8, src1 + off);
+                a.vi(VOp::Sll, 8, 8, shift);
+                a.vv(VOp::Or, 0, 0, 8);
+                a.vse(sew, 0, dst + off);
+            }
+            a.loop_overhead();
+        }
+        a.loop_overhead();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ProcessorConfig;
+    use crate::kernels::workload::{ConvDims, Workload};
+    use crate::sim::Machine;
+    use crate::ulppack::{pack_activations, Container};
+
+    #[test]
+    fn packing_pass_matches_host_reference() {
+        let d = ConvDims { c: 6, h: 5, w: 9, co: 1, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 2, 2, 99);
+        let mut m = Machine::new(ProcessorConfig::sparq(), 1 << 20);
+        let ew = 2u64;
+        let plane = (d.h * d.w) as u64;
+        let x_addr = m.mem.alloc(d.c as u64 * plane * ew, 64).unwrap();
+        let xp_addr = m.mem.alloc((d.c / 2) as u64 * plane * ew, 64).unwrap();
+        for (c, row) in wl.act.iter().enumerate() {
+            let vals: Vec<u16> = row.iter().map(|&v| v as u16).collect();
+            m.mem.write_u16s(x_addr + c as u64 * plane * ew, &vals).unwrap();
+        }
+        let mut a = Asm::new("pack", m.cfg.vlen_bits);
+        emit_pack_activations(&mut a, &d, Sew::E16, x_addr, xp_addr);
+        let prog = a.finish(0);
+        m.run(&prog).unwrap();
+
+        let want = pack_activations(&wl.act, Container::Lp);
+        for (cp, row) in want.iter().enumerate() {
+            let got = m.mem.read_u16s(xp_addr + cp as u64 * plane * ew, row.len()).unwrap();
+            let want16: Vec<u16> = row.iter().map(|&v| v as u16).collect();
+            assert_eq!(got, want16, "channel pair {cp}");
+        }
+    }
+
+    #[test]
+    fn ulp_packing_at_u8() {
+        let d = ConvDims { c: 4, h: 3, w: 600, co: 1, fh: 1, fw: 1 };
+        let wl = Workload::random(d, 1, 1, 5);
+        let mut m = Machine::new(ProcessorConfig::sparq(), 1 << 20);
+        let plane = (d.h * d.w) as u64;
+        let x_addr = m.mem.alloc(d.c as u64 * plane, 64).unwrap();
+        let xp_addr = m.mem.alloc((d.c / 2) as u64 * plane, 64).unwrap();
+        for (c, row) in wl.act.iter().enumerate() {
+            let vals: Vec<u8> = row.iter().map(|&v| v as u8).collect();
+            m.mem.write_u8s(x_addr + c as u64 * plane, &vals).unwrap();
+        }
+        let mut a = Asm::new("pack8", m.cfg.vlen_bits);
+        emit_pack_activations(&mut a, &d, Sew::E8, x_addr, xp_addr);
+        let prog = a.finish(0);
+        m.run(&prog).unwrap();
+        let want = pack_activations(&wl.act, Container::Ulp);
+        for (cp, row) in want.iter().enumerate() {
+            let got = m.mem.read_u8s(xp_addr + cp as u64 * plane, row.len()).unwrap();
+            let want8: Vec<u8> = row.iter().map(|&v| v as u8).collect();
+            assert_eq!(got, want8, "channel pair {cp}");
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! Workloads: the tensors a conv2d benchmark runs on, host-side golden
+//! models, and the output descriptors the builders hand back.
+
+use crate::sim::mem::Mem;
+use crate::sim::SimError;
+use crate::testutil::Gen;
+use crate::ulppack::{act_level_max, weight_level_max, Container};
+
+/// Conv2d problem dimensions ('valid' padding, channel-first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvDims {
+    pub c: u32,
+    pub h: u32,
+    pub w: u32,
+    pub co: u32,
+    pub fh: u32,
+    pub fw: u32,
+}
+
+impl ConvDims {
+    pub fn ho(&self) -> u32 {
+        self.h - self.fh + 1
+    }
+
+    pub fn wo(&self) -> u32 {
+        self.w - self.fw + 1
+    }
+
+    /// Useful multiply-accumulates of the convolution.
+    pub fn macs(&self) -> u64 {
+        self.co as u64
+            * self.ho() as u64
+            * self.wo() as u64
+            * self.c as u64
+            * self.fh as u64
+            * self.fw as u64
+    }
+
+    /// Packed-container issues per output element (k=2 packing).
+    pub fn issues_per_output(&self) -> u64 {
+        (self.c as u64 / 2) * self.fh as u64 * self.fw as u64
+    }
+
+    /// The paper's Fig. 4 workload shape (scaled-down by default; the
+    /// benches take a `--large` flag for the full 512x512).
+    pub fn fig4(large: bool) -> ConvDims {
+        let s = if large { 512 } else { 64 };
+        ConvDims { c: 32, h: s + 6, w: s + 6, co: 8, fh: 7, fw: 7 }
+    }
+
+    /// The paper's Fig. 5 workload (32 x 256 x 256, 7x7).
+    pub fn fig5(large: bool) -> ConvDims {
+        let s = if large { 256 } else { 64 };
+        ConvDims { c: 32, h: s + 6, w: s + 6, co: 8, fh: 7, fw: 7 }
+    }
+}
+
+/// Host-side tensors for one quantization of a conv problem.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub dims: ConvDims,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    /// Activation levels, `[c][h*w]`.
+    pub act: Vec<Vec<u64>>,
+    /// Weight levels (zero-point offset), `[o][c][fh*fw]`.
+    pub wgt: Vec<Vec<Vec<u64>>>,
+    /// f32 views (for the fp32 baseline), same shapes.
+    pub act_f32: Vec<Vec<f32>>,
+    pub wgt_f32: Vec<Vec<Vec<f32>>>,
+}
+
+impl Workload {
+    /// Uniform-random levels in the (W, A) ranges (the paper's RTL
+    /// benchmarks use random tensors too).
+    pub fn random(dims: ConvDims, w_bits: u32, a_bits: u32, seed: u64) -> Workload {
+        assert!(dims.c % 2 == 0, "in-channels must be even for k=2 packing");
+        let mut g = Gen::new(seed);
+        let amax = act_level_max(a_bits);
+        let wmax = weight_level_max(w_bits);
+        let hw = (dims.h * dims.w) as usize;
+        let fhw = (dims.fh * dims.fw) as usize;
+        let act: Vec<Vec<u64>> =
+            (0..dims.c).map(|_| (0..hw).map(|_| g.below(amax + 1)).collect()).collect();
+        let wgt: Vec<Vec<Vec<u64>>> = (0..dims.co)
+            .map(|_| {
+                (0..dims.c).map(|_| (0..fhw).map(|_| g.below(wmax + 1)).collect()).collect()
+            })
+            .collect();
+        let act_f32 = act
+            .iter()
+            .map(|row| row.iter().map(|&v| v as f32 / (amax + 1) as f32).collect())
+            .collect();
+        let wgt_f32 = wgt
+            .iter()
+            .map(|per_o| {
+                per_o
+                    .iter()
+                    .map(|f| {
+                        f.iter().map(|&v| v as f32 / (wmax + 1) as f32 - 0.5).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        Workload { dims, w_bits, a_bits, act, wgt, act_f32, wgt_f32 }
+    }
+
+    /// Simulated-DRAM sizing for this workload (acts + packed copy +
+    /// outputs + slack).
+    pub fn mem_bytes(&self) -> usize {
+        let d = &self.dims;
+        let acts = (d.c * d.h * d.w) as usize * 4;
+        let outs = (d.co * d.ho() * d.wo()) as usize * 4;
+        (acts * 3 + outs * 2 + (1 << 16)).next_power_of_two()
+    }
+}
+
+/// Element type of a conv output buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutElem {
+    U16,
+    U32,
+    F32,
+}
+
+/// Where a builder put its output tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct OutputRef {
+    pub addr: u64,
+    pub elem: OutElem,
+    /// co * ho * wo elements, channel-first.
+    pub len: usize,
+}
+
+impl OutputRef {
+    /// Read the output back as i64 (f32 outputs are bit-preserved via
+    /// `read_f32`, use that instead).
+    pub fn read_ints(&self, mem: &Mem) -> Result<Vec<i64>, SimError> {
+        Ok(match self.elem {
+            OutElem::U16 => mem.read_u16s(self.addr, self.len)?.iter().map(|&v| v as i64).collect(),
+            OutElem::U32 => mem
+                .read_i32s(self.addr, self.len)?
+                .iter()
+                .map(|&v| v as u32 as i64)
+                .collect(),
+            OutElem::F32 => panic!("f32 output read as ints"),
+        })
+    }
+
+    pub fn read_f32(&self, mem: &Mem) -> Result<Vec<f32>, SimError> {
+        assert_eq!(self.elem, OutElem::F32);
+        Ok(mem.read_f32s(self.addr, self.len)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden models
+// ---------------------------------------------------------------------------
+
+/// Exact integer 'valid' conv on levels -> i64 (the oracle).
+pub fn golden_exact(wl: &Workload) -> Vec<i64> {
+    let d = &wl.dims;
+    let (ho, wo) = (d.ho() as usize, d.wo() as usize);
+    let mut out = vec![0i64; d.co as usize * ho * wo];
+    for o in 0..d.co as usize {
+        for r in 0..ho {
+            for q in 0..wo {
+                let mut acc = 0i64;
+                for c in 0..d.c as usize {
+                    for ki in 0..d.fh as usize {
+                        for i in 0..d.fw as usize {
+                            let x = wl.act[c][(r + ki) * d.w as usize + q + i] as i64;
+                            let w = wl.wgt[o][c][ki * d.fw as usize + i] as i64;
+                            acc += x * w;
+                        }
+                    }
+                }
+                out[(o * ho + r) * wo + q] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// The exact conv reduced mod 2^bits (what a SEW-wide wrapping
+/// accumulator produces when the packed pipeline is exact).
+pub fn golden_mod(wl: &Workload, bits: u32) -> Vec<i64> {
+    let mask = if bits >= 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    golden_exact(wl).iter().map(|&v| (v as u64 & mask) as i64).collect()
+}
+
+/// Packed-arithmetic golden: what the vmacsr dataflow computes even
+/// outside the overflow-free region (container-wrapping narrow
+/// accumulator spilled every `spill_every` issues into a wide one).
+/// Mirrors `ref.packed_conv2d_hw_ref`, with the kernel's loop order.
+pub fn golden_packed_vmacsr(wl: &Workload, container: Container, spill_every: u64) -> Vec<i64> {
+    let d = &wl.dims;
+    let s = container.shift();
+    let cmask = (1u64 << container.bits()) - 1;
+    let xp = crate::ulppack::pack_activations(&wl.act, container);
+    let wp = crate::ulppack::pack_weights(&wl.wgt, container);
+    let (ho, wo) = (d.ho() as usize, d.wo() as usize);
+    let cp = d.c as usize / 2;
+    let mut out = vec![0i64; d.co as usize * ho * wo];
+    for o in 0..d.co as usize {
+        for r in 0..ho {
+            for q in 0..wo {
+                let mut wide = 0u64;
+                let mut narrow = 0u64;
+                let mut issues = 0u64;
+                // kernel loop order: ki (input row), then c, then i
+                for ki in 0..d.fh as usize {
+                    for c in 0..cp {
+                        for i in 0..d.fw as usize {
+                            let x = xp[c][(r + ki) * d.w as usize + q + i];
+                            let w = wp[o][c][ki * d.fw as usize + i];
+                            let prod = x.wrapping_mul(w) & cmask;
+                            narrow = (narrow + (prod >> s)) & cmask;
+                            issues += 1;
+                            if spill_every != u64::MAX && issues % spill_every == 0 {
+                                wide += narrow;
+                                narrow = 0;
+                            }
+                        }
+                    }
+                }
+                out[(o * ho + r) * wo + q] = (wide + narrow) as i64;
+            }
+        }
+    }
+    out
+}
+
+/// fp32 golden with the *kernel's* summation order (ki, then c, then i)
+/// so the comparison is exact, not approximate.
+pub fn golden_fp32(wl: &Workload) -> Vec<f32> {
+    let d = &wl.dims;
+    let (ho, wo) = (d.ho() as usize, d.wo() as usize);
+    let mut out = vec![0f32; d.co as usize * ho * wo];
+    for o in 0..d.co as usize {
+        for r in 0..ho {
+            for q in 0..wo {
+                let mut acc = 0f32;
+                for ki in 0..d.fh as usize {
+                    for c in 0..d.c as usize {
+                        for i in 0..d.fw as usize {
+                            let x = wl.act_f32[c][(r + ki) * d.w as usize + q + i];
+                            let w = wl.wgt_f32[o][c][ki * d.fw as usize + i];
+                            acc += x * w;
+                        }
+                    }
+                }
+                out[(o * ho + r) * wo + q] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ulppack::RegionMode;
+
+    fn small() -> ConvDims {
+        ConvDims { c: 4, h: 6, w: 6, co: 2, fh: 3, fw: 3 }
+    }
+
+    #[test]
+    fn dims_math() {
+        let d = small();
+        assert_eq!(d.ho(), 4);
+        assert_eq!(d.wo(), 4);
+        assert_eq!(d.macs(), 2 * 4 * 4 * 4 * 3 * 3);
+        assert_eq!(d.issues_per_output(), 2 * 9);
+    }
+
+    #[test]
+    fn random_levels_in_range() {
+        let wl = Workload::random(small(), 3, 2, 42);
+        for row in &wl.act {
+            assert!(row.iter().all(|&v| v <= 3));
+        }
+        for o in &wl.wgt {
+            for c in o {
+                assert!(c.iter().all(|&v| v <= 6));
+            }
+        }
+    }
+
+    #[test]
+    fn packed_golden_equals_exact_inside_strict_region() {
+        let wl = Workload::random(small(), 2, 2, 7);
+        let plan = crate::ulppack::region::plan_vmacsr(
+            2,
+            2,
+            wl.dims.issues_per_output(),
+            RegionMode::Strict,
+        )
+        .unwrap();
+        let packed = golden_packed_vmacsr(&wl, plan.container, plan.spill_every);
+        assert_eq!(packed, golden_exact(&wl));
+    }
+
+    #[test]
+    fn packed_golden_differs_outside_region_on_adversarial_data() {
+        // all-max W4A4 data on LP overflows the dot field
+        let mut wl = Workload::random(small(), 4, 4, 7);
+        for row in wl.act.iter_mut() {
+            row.iter_mut().for_each(|v| *v = 15);
+        }
+        for o in wl.wgt.iter_mut() {
+            for c in o.iter_mut() {
+                c.iter_mut().for_each(|v| *v = 14);
+            }
+        }
+        let packed = golden_packed_vmacsr(&wl, Container::Lp, 100);
+        assert_ne!(packed, golden_exact(&wl));
+    }
+
+    #[test]
+    fn golden_mod_wraps() {
+        let wl = Workload::random(small(), 4, 4, 9);
+        let exact = golden_exact(&wl);
+        let modded = golden_mod(&wl, 16);
+        assert!(modded.iter().all(|&v| v < 65536));
+        for (e, m) in exact.iter().zip(&modded) {
+            assert_eq!(((*e as u64) & 0xFFFF) as i64, *m);
+        }
+    }
+}

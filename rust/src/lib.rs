@@ -1,0 +1,47 @@
+//! # sparq — a systems reproduction of *Sparq: A Custom RISC-V Vector
+//! Processor for Efficient Sub-Byte Quantized Inference* (Dupuis et al., 2023)
+//!
+//! The crate is organised bottom-up (see `DESIGN.md` at the repo root):
+//!
+//! * [`isa`] — the RISC-V "V" 1.0 instruction subset Ara implements, plus
+//!   the paper's custom `vmacsr` multiply-shift-accumulate instruction
+//!   (encoder / decoder / disassembler, faithful 32-bit encodings).
+//! * [`arch`] — processor configuration: lane count, VLEN, which
+//!   functional units exist (the FPU is removable — that *is* Sparq).
+//! * [`sim`] — a cycle-approximate, functionally-exact simulator of the
+//!   Ara/Sparq vector machine: VRF, MFPU/ALU/VLSU/SLDU units, chaining,
+//!   per-unit utilization counters.
+//! * [`ulppack`] — the ULPPACK P1 packing calculus: container layouts,
+//!   overflow-free regions, local-accumulation and spill cadences.
+//! * [`kernels`] — the "hand-written inline assembly" of the paper as
+//!   instruction-stream builders: fp32/int16 baselines, native ULPPACK,
+//!   and the `vmacsr` LP/ULP conv2d of Algorithm 1.
+//! * [`power`] — the GF22FDX-calibrated analytical area/power/fmax model
+//!   behind Table II.
+//! * [`qnn`] — the quantized CNN graph and its layer-by-layer scheduling
+//!   onto the simulator.
+//! * [`runtime`] — the PJRT side: loads the AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py` and executes them
+//!   (python never runs at inference time).
+//! * [`coordinator`] — the serving stack: request queue, dynamic
+//!   batcher, worker pool, latency metrics.
+//! * [`report`] — paper-style table/figure printers (Fig. 4, Fig. 5,
+//!   Table I, Table II).
+//! * [`config`] — the hand-rolled key=value config system and presets.
+//! * [`testutil`] — a tiny property-testing harness (xorshift PRNG).
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod isa;
+pub mod kernels;
+pub mod power;
+pub mod qnn;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod ulppack;
+
+pub use arch::ProcessorConfig;
+pub use sim::{Machine, Program};

@@ -1,0 +1,295 @@
+//! `sparq` — the CLI.  Subcommands map one-to-one onto the paper's
+//! experiments (see DESIGN.md §5) plus the serving stack:
+//!
+//! ```text
+//! sparq fig4 [--large] [--seed N]          ops/cycle bar chart (Fig. 4)
+//! sparq fig5 [--native|--vmacsr] [--large] speedup grids (Fig. 5a/5b)
+//! sparq table1 [--artifacts DIR]           QNN accuracy (Table I)
+//! sparq table2                             lane area/power/fmax (Table II)
+//! sparq utilization [--large]              §III-A lane utilization
+//! sparq qnn-cycles [--precision wXaY|fp32] per-layer schedule
+//! sparq serve [--requests N] [--config F]  batched serving demo
+//! sparq isa [WORD...]                      encode/decode explorer
+//! ```
+
+use std::process::ExitCode;
+
+use sparq::config::Config;
+use sparq::qnn::schedule::QnnPrecision;
+use sparq::report;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    let r = match cmd {
+        "fig4" => cmd_fig4(rest),
+        "fig5" => cmd_fig5(rest),
+        "table1" => cmd_table1(rest),
+        "table2" => cmd_table2(),
+        "utilization" => cmd_utilization(rest),
+        "qnn-cycles" => cmd_qnn_cycles(rest),
+        "serve" => cmd_serve(rest),
+        "isa" => cmd_isa(rest),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{HELP}")),
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "\
+sparq — reproduction of 'Sparq: A Custom RISC-V Vector Processor for
+Efficient Sub-Byte Quantized Inference' (Dupuis et al., 2023)
+
+USAGE: sparq <command> [flags]
+
+COMMANDS
+  fig4         ops/cycle for every conv2d implementation     [--large] [--seed N]
+  fig5         speedup grid over the precision region        [--native|--vmacsr|--both] [--large]
+  table1       QNN accuracy via the PJRT artifacts           [--artifacts DIR]
+  table2       lane area / power / fmax model (Ara vs Sparq)
+  utilization  MFPU utilization of the baselines             [--large]
+  qnn-cycles   per-layer simulated schedule                  [--precision w2a2|w3a3|w4a4|fp32]
+  serve        batched QNN serving demo                      [--requests N] [--model NAME] [--config FILE]
+  isa          vmacsr encoding explorer                      [hex words...]
+";
+
+fn flag(rest: &[String], name: &str) -> bool {
+    rest.iter().any(|a| a == name)
+}
+
+fn opt<'a>(rest: &'a [String], name: &str) -> Option<&'a str> {
+    rest.iter().position(|a| a == name).and_then(|i| rest.get(i + 1)).map(|s| s.as_str())
+}
+
+fn seed_of(rest: &[String]) -> u64 {
+    opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+fn cmd_fig4(rest: &[String]) -> Result<(), String> {
+    let large = flag(rest, "--large");
+    let rows = report::fig4(large, seed_of(rest)).map_err(|e| e.to_string())?;
+    print!("{}", report::render_fig4(&rows, sparq::kernels::ConvDims::fig4(large)));
+    Ok(())
+}
+
+fn cmd_fig5(rest: &[String]) -> Result<(), String> {
+    let large = flag(rest, "--large");
+    let both = flag(rest, "--both") || (!flag(rest, "--native") && !flag(rest, "--vmacsr"));
+    let dims = sparq::kernels::ConvDims::fig5(large);
+    if flag(rest, "--native") || both {
+        let cells = report::fig5(false, large, seed_of(rest)).map_err(|e| e.to_string())?;
+        print!("{}", report::render_fig5(&cells, false, dims));
+        println!();
+    }
+    if flag(rest, "--vmacsr") || both {
+        let cells = report::fig5(true, large, seed_of(rest)).map_err(|e| e.to_string())?;
+        print!("{}", report::render_fig5(&cells, true, dims));
+    }
+    Ok(())
+}
+
+fn cmd_table2() -> Result<(), String> {
+    let (ara, sq) = report::table2();
+    print!("{}", report::render_table2(&ara, &sq));
+    Ok(())
+}
+
+fn cmd_utilization(rest: &[String]) -> Result<(), String> {
+    let large = flag(rest, "--large");
+    let rows = report::utilization(large, seed_of(rest)).map_err(|e| e.to_string())?;
+    print!("{}", report::render_utilization(&rows, large));
+    Ok(())
+}
+
+fn cmd_table1(rest: &[String]) -> Result<(), String> {
+    let dir = opt(rest, "--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(sparq::runtime::artifacts_dir);
+    if !dir.join("manifest.txt").exists() {
+        return Err(format!("no artifacts at {} — run `make artifacts` first", dir.display()));
+    }
+    let rt = sparq::runtime::Runtime::load(&dir).map_err(|e| e.to_string())?;
+    let ts = sparq::runtime::TestSet::load(dir.join("testset.bin")).map_err(|e| e.to_string())?;
+    let mut rows = Vec::new();
+    let mut fp32_acc = None;
+    for name in ["qnn_fp32", "qnn_w4a4", "qnn_w3a3", "qnn_w2a2"] {
+        let art = rt.manifest.artifact(name).ok_or(format!("{name} missing from manifest"))?;
+        let batch = art.meta_u32("batch").unwrap_or(16) as usize;
+        let acc = evaluate(&rt, name, &ts, batch)?;
+        if name == "qnn_fp32" {
+            fp32_acc = Some(acc);
+        }
+        let delta = acc - fp32_acc.unwrap();
+        rows.push((name.trim_start_matches("qnn_").to_string(), acc, delta));
+    }
+    print!("{}", report::render_table1(&rows));
+    Ok(())
+}
+
+/// Evaluate one artifact over the whole test set; returns accuracy.
+fn evaluate(
+    rt: &sparq::runtime::Runtime,
+    model: &str,
+    ts: &sparq::runtime::TestSet,
+    batch: usize,
+) -> Result<f64, String> {
+    let dims = [batch as i64, ts.c as i64, ts.h as i64, ts.w as i64];
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut start = 0;
+    while start < ts.n {
+        let (data, real) = ts.batch(start, batch);
+        let logits = rt.exec_f32(model, &[(&data, &dims)]).map_err(|e| e.to_string())?;
+        let classes = logits.len() / batch;
+        for i in 0..real {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k)
+                .unwrap();
+            correct += (pred == ts.labels[start + i] as usize) as usize;
+            total += 1;
+        }
+        start += batch;
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+fn cmd_qnn_cycles(rest: &[String]) -> Result<(), String> {
+    let prec = match opt(rest, "--precision").unwrap_or("w2a2") {
+        "fp32" => QnnPrecision::Fp32,
+        s => {
+            let s = s.trim_start_matches('w');
+            let (w, a) = s.split_once('a').ok_or("precision must be fp32 or wXaY")?;
+            QnnPrecision::SubByte {
+                w_bits: w.parse().map_err(|_| "bad W bits")?,
+                a_bits: a.parse().map_err(|_| "bad A bits")?,
+            }
+        }
+    };
+    let cfg = match prec {
+        QnnPrecision::Fp32 => sparq::ProcessorConfig::ara(),
+        _ => sparq::ProcessorConfig::sparq(),
+    };
+    let sched = report::qnn_schedule(&cfg, prec).map_err(|e| e.to_string())?;
+    let fmax = sparq::power::LaneReport::for_config(&cfg).fmax_ghz();
+    print!("{}", report::render_schedule(&sched, fmax));
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<(), String> {
+    let dir = opt(rest, "--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(sparq::runtime::artifacts_dir);
+    if !dir.join("manifest.txt").exists() {
+        return Err("no artifacts — run `make artifacts` first".into());
+    }
+    let model = opt(rest, "--model").unwrap_or("qnn_w4a4").to_string();
+    let n: usize = opt(rest, "--requests").and_then(|s| s.parse().ok()).unwrap_or(256);
+    let serve_cfg = match opt(rest, "--config") {
+        Some(f) => Config::load(f).map_err(|e| e.to_string())?.serve().map_err(|e| e.to_string())?,
+        None => sparq::config::ServeConfig::default(),
+    };
+
+    // hardware-cost attribution from the simulator
+    let prec = match model.as_str() {
+        "qnn_fp32" => QnnPrecision::Fp32,
+        "qnn_w3a3" => QnnPrecision::SubByte { w_bits: 3, a_bits: 3 },
+        "qnn_w2a2" => QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+        _ => QnnPrecision::SubByte { w_bits: 4, a_bits: 4 },
+    };
+    let hw = match prec {
+        QnnPrecision::Fp32 => sparq::ProcessorConfig::ara(),
+        _ => sparq::ProcessorConfig::sparq(),
+    };
+    let cyc = report::qnn_schedule(&hw, prec).map_err(|e| e.to_string())?.total_cycles();
+
+    let ts = sparq::runtime::TestSet::load(dir.join("testset.bin")).map_err(|e| e.to_string())?;
+    let dirc = dir.clone();
+    let modelc = model.clone();
+    let server = sparq::coordinator::Server::start(
+        Box::new(move || {
+            Ok(Box::new(sparq::coordinator::PjrtExecutor::new(&dirc, &modelc)?)
+                as Box<dyn sparq::coordinator::Executor>)
+        }),
+        serve_cfg,
+        cyc,
+    )
+    .map_err(|e| e.to_string())?;
+
+    println!("serving {model} with {} worker(s), {n} requests...", serve_cfg.workers);
+    let mut correct = 0usize;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let img = ts.image(i % ts.n).to_vec();
+        match server.submit(img) {
+            Ok(rx) => pending.push((i, rx)),
+            Err(e) => println!("request {i}: {e}"),
+        }
+        if pending.len() >= 64 {
+            for (j, rx) in pending.drain(..) {
+                if let Ok(Ok(r)) = rx.recv() {
+                    correct += (r.class == ts.labels[j % ts.n] as usize) as usize;
+                }
+            }
+        }
+    }
+    for (j, rx) in pending.drain(..) {
+        if let Ok(Ok(r)) = rx.recv() {
+            correct += (r.class == ts.labels[j % ts.n] as usize) as usize;
+        }
+    }
+    let snap = server.shutdown();
+    println!(
+        "done: {}/{} correct ({:.1}%)\n  latency p50/p95/p99: {}/{}/{} us\n  mean batch {:.1}, throughput {:.0} req/s\n  simulated Sparq cost: {} cycles total ({} cycles/image)",
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64,
+        snap.p50_us,
+        snap.p95_us,
+        snap.p99_us,
+        snap.mean_batch,
+        snap.throughput_rps,
+        snap.total_sim_cycles,
+        cyc
+    );
+    Ok(())
+}
+
+fn cmd_isa(rest: &[String]) -> Result<(), String> {
+    use sparq::isa::{decode, disasm, encode, VInst, VOp};
+    if rest.is_empty() {
+        // showcase the paper's Fig. 3 encoding
+        println!("vmacsr encodings (paper Fig. 3 — funct6 after vmacc):");
+        for inst in [
+            VInst::OpVV { op: VOp::Macsr, vd: 1, vs2: 2, vs1: 3 },
+            VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 0 },
+            VInst::OpVX { op: VOp::Macc, vd: 1, vs2: 2, rs1: 0 },
+        ] {
+            let w = encode(&inst);
+            println!("  {w:#010x}  {}", disasm(&inst));
+        }
+        return Ok(());
+    }
+    for arg in rest {
+        let word = u32::from_str_radix(arg.trim_start_matches("0x"), 16)
+            .map_err(|_| format!("'{arg}' is not a hex word"))?;
+        match decode(word) {
+            Ok(inst) => println!("{word:#010x}  {}", disasm(&inst)),
+            Err(e) => println!("{word:#010x}  <illegal: {e}>"),
+        }
+    }
+    Ok(())
+}

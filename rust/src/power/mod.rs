@@ -1,0 +1,188 @@
+//! GF22FDX-calibrated analytical area / power / timing model of one
+//! Ara/Sparq lane — the substitution for the paper's Synopsys/Cadence
+//! physical implementation (Table II).  See DESIGN.md §2.
+//!
+//! The model is a component inventory calibrated to the published Ara
+//! lane breakdown (the FPU dominates the MFPU; the VRF is an SRAM
+//! macro; queues/sequencer are the fixed overhead) such that:
+//!
+//! * Ara   lane = 0.120 mm², 159.2 mW, 1.346 GHz   (Table II col 1)
+//! * Sparq lane = Ara − FPU − FP queue share + vmacsr shifter
+//!              = 0.068 mm²,  65.6 mW, 1.464 GHz   (Table II col 2)
+//!
+//! Frequency is a max-over-paths model: the FPU owns the longest lane
+//! path; the vmacsr shifter sits after the SIMD multiplier whose path
+//! has slack, so it never sets fmax (the paper's observation).
+
+use crate::arch::ProcessorConfig;
+
+/// One synthesizable component of a lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Component {
+    pub name: &'static str,
+    /// Cell area in mm² (GF22FDX, post-P&R utilization folded in).
+    pub area_mm2: f64,
+    /// Power at the typical corner (TT/0.8V/25C), mW, at the lane's fmax.
+    pub power_mw: f64,
+    /// Critical-path length through this component, ns.
+    pub path_ns: f64,
+}
+
+/// The calibrated Ara lane inventory (per lane, 4 KiB VRF slice).
+fn base_components() -> Vec<Component> {
+    vec![
+        Component { name: "vrf-sram", area_mm2: 0.0220, power_mw: 18.0, path_ns: 0.580 },
+        Component { name: "operand-queues-int", area_mm2: 0.0100, power_mw: 8.0, path_ns: 0.500 },
+        Component { name: "operand-queues-fp", area_mm2: 0.0020, power_mw: 3.0, path_ns: 0.500 },
+        // the integer multiplier path sets Sparq's fmax once the FPU is
+        // gone: 0.683 ns -> 1.464 GHz (Table II)
+        Component { name: "simd-multiplier", area_mm2: 0.0140, power_mw: 13.0, path_ns: 0.683 },
+        Component { name: "vfpu", area_mm2: 0.0505, power_mw: 90.9, path_ns: 0.743 },
+        Component { name: "valu", area_mm2: 0.0090, power_mw: 9.0, path_ns: 0.560 },
+        Component { name: "sequencer", area_mm2: 0.0080, power_mw: 10.0, path_ns: 0.620 },
+        Component { name: "misc-wiring", area_mm2: 0.0045, power_mw: 7.3, path_ns: 0.400 },
+    ]
+}
+
+/// The vmacsr shifter (inserted between multiplier and accumulator).
+fn vmacsr_shifter() -> Component {
+    Component { name: "vmacsr-shifter", area_mm2: 0.0005, power_mw: 0.3, path_ns: 0.660 }
+}
+
+/// Physical report for one lane configuration.
+#[derive(Debug, Clone)]
+pub struct LaneReport {
+    pub name: String,
+    pub components: Vec<Component>,
+    pub lanes: u32,
+    pub vrf_kib_total: u32,
+}
+
+impl LaneReport {
+    /// Build the lane inventory for a processor configuration.
+    pub fn for_config(cfg: &ProcessorConfig) -> LaneReport {
+        let mut comps: Vec<Component> = base_components();
+        if !cfg.fpu {
+            comps.retain(|c| c.name != "vfpu" && c.name != "operand-queues-fp");
+        }
+        if cfg.vmacsr {
+            comps.push(vmacsr_shifter());
+        }
+        // VRF slice scales with per-lane VLEN (Table II config: 4 KiB)
+        let slice_kib = cfg.vrf_bytes() as f64 / cfg.lanes as f64 / 1024.0;
+        let scale = slice_kib / 4.0;
+        for c in comps.iter_mut() {
+            if c.name == "vrf-sram" {
+                c.area_mm2 *= scale;
+                c.power_mw *= scale;
+            }
+        }
+        LaneReport {
+            name: cfg.name.clone(),
+            components: comps,
+            lanes: cfg.lanes,
+            vrf_kib_total: cfg.vrf_bytes() / 1024,
+        }
+    }
+
+    /// Lane cell area, mm².
+    pub fn area_mm2(&self) -> f64 {
+        self.components.iter().map(|c| c.area_mm2).sum()
+    }
+
+    /// Lane power at typical corner, mW.
+    pub fn power_mw(&self) -> f64 {
+        self.components.iter().map(|c| c.power_mw).sum()
+    }
+
+    /// Lane fmax, GHz (max over component paths).
+    pub fn fmax_ghz(&self) -> f64 {
+        let worst = self.components.iter().map(|c| c.path_ns).fold(0.0, f64::max);
+        1.0 / worst
+    }
+
+    /// The component owning the critical path.
+    pub fn critical_path(&self) -> &Component {
+        self.components
+            .iter()
+            .max_by(|a, b| a.path_ns.partial_cmp(&b.path_ns).unwrap())
+            .unwrap()
+    }
+
+    /// Whole-vector-engine power (all lanes), mW.
+    pub fn total_power_mw(&self) -> f64 {
+        self.power_mw() * self.lanes as f64
+    }
+
+    /// Energy efficiency at a measured throughput: ops per nanojoule.
+    pub fn ops_per_nj(&self, ops_per_cycle: f64) -> f64 {
+        let ops_per_s = ops_per_cycle * self.fmax_ghz() * 1e9;
+        ops_per_s / (self.total_power_mw() * 1e-3) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn ara_lane_matches_table2() {
+        let r = LaneReport::for_config(&ProcessorConfig::ara());
+        assert!(close(r.area_mm2(), 0.120, 0.0005), "area {}", r.area_mm2());
+        assert!(close(r.power_mw(), 159.2, 0.05), "power {}", r.power_mw());
+        assert!(close(r.fmax_ghz(), 1.346, 0.002), "fmax {}", r.fmax_ghz());
+        assert_eq!(r.critical_path().name, "vfpu");
+    }
+
+    #[test]
+    fn sparq_lane_matches_table2() {
+        let r = LaneReport::for_config(&ProcessorConfig::sparq());
+        assert!(close(r.area_mm2(), 0.068, 0.0005), "area {}", r.area_mm2());
+        assert!(close(r.power_mw(), 65.6, 0.05), "power {}", r.power_mw());
+        assert!(close(r.fmax_ghz(), 1.464, 0.002), "fmax {}", r.fmax_ghz());
+        assert_ne!(r.critical_path().name, "vmacsr-shifter");
+    }
+
+    #[test]
+    fn paper_deltas() {
+        let ara = LaneReport::for_config(&ProcessorConfig::ara());
+        let sq = LaneReport::for_config(&ProcessorConfig::sparq());
+        let darea = (ara.area_mm2() - sq.area_mm2()) / ara.area_mm2();
+        let dpow = (ara.power_mw() - sq.power_mw()) / ara.power_mw();
+        let dfreq = (sq.fmax_ghz() - ara.fmax_ghz()) / ara.fmax_ghz();
+        assert!(close(darea, 0.433, 0.01), "area delta {darea}"); // paper: -43.3%
+        assert!(close(dpow, 0.588, 0.01), "power delta {dpow}"); // paper: -58.8%
+        assert!(close(dfreq, 0.087, 0.005), "fmax delta {dfreq}"); // paper: +8.7%
+    }
+
+    #[test]
+    fn vmacsr_shifter_off_critical_path() {
+        // adding the shifter must not change fmax (paper §V-B)
+        let mut cfg = ProcessorConfig::ara();
+        cfg.vmacsr = true;
+        let with = LaneReport::for_config(&cfg);
+        let without = LaneReport::for_config(&ProcessorConfig::ara());
+        assert_eq!(with.fmax_ghz(), without.fmax_ghz());
+    }
+
+    #[test]
+    fn vrf_scales_with_vlen() {
+        let mut cfg = ProcessorConfig::sparq();
+        cfg.vlen_bits *= 2; // 8 KiB per lane
+        let r = LaneReport::for_config(&cfg);
+        let base = LaneReport::for_config(&ProcessorConfig::sparq());
+        assert!(r.area_mm2() > base.area_mm2());
+        assert_eq!(r.vrf_kib_total, 32);
+    }
+
+    #[test]
+    fn efficiency_metric_sane() {
+        let r = LaneReport::for_config(&ProcessorConfig::sparq());
+        let e = r.ops_per_nj(53.0);
+        assert!(e > 0.0 && e.is_finite());
+    }
+}

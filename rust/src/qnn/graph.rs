@@ -1,0 +1,91 @@
+//! Static description of the SparqCNN architecture (kept in lock-step
+//! with `python/compile/model.py` — the artifact manifest carries the
+//! same shapes and the integration tests cross-check them).
+
+/// One layer of the network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerDesc {
+    /// 'same' conv: C_in x H x W -> C_out x H x W with an FxF kernel.
+    Conv { c_in: u32, c_out: u32, h: u32, w: u32, f: u32, quantized: bool },
+    /// 2x2 max pool (halves H and W).
+    MaxPool { c: u32, h: u32, w: u32 },
+    /// Global average pool + linear head.
+    GapFc { c: u32, classes: u32 },
+}
+
+impl LayerDesc {
+    /// Multiply-accumulates of this layer (per image).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            LayerDesc::Conv { c_in, c_out, h, w, f, .. } => {
+                c_in as u64 * c_out as u64 * h as u64 * w as u64 * (f * f) as u64
+            }
+            LayerDesc::MaxPool { .. } => 0,
+            LayerDesc::GapFc { c, classes } => (c * classes) as u64,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            LayerDesc::Conv { c_in, c_out, f, quantized, .. } => format!(
+                "conv {c_in}->{c_out} {f}x{f}{}",
+                if quantized { " [sub-byte]" } else { " [stem]" }
+            ),
+            LayerDesc::MaxPool { .. } => "maxpool2".into(),
+            LayerDesc::GapFc { .. } => "gap+fc".into(),
+        }
+    }
+}
+
+/// The whole network.
+#[derive(Debug, Clone)]
+pub struct QnnGraph {
+    pub layers: Vec<LayerDesc>,
+    pub input: (u32, u32, u32),
+    pub classes: u32,
+}
+
+impl QnnGraph {
+    /// The SparqCNN from `python/compile/model.py`: 16x16 single-channel
+    /// inputs, 4 classes; conv2/conv3 carry the sub-byte precision.
+    pub fn sparq_cnn() -> QnnGraph {
+        QnnGraph {
+            layers: vec![
+                LayerDesc::Conv { c_in: 1, c_out: 16, h: 16, w: 16, f: 3, quantized: false },
+                LayerDesc::Conv { c_in: 16, c_out: 32, h: 16, w: 16, f: 3, quantized: true },
+                LayerDesc::MaxPool { c: 32, h: 16, w: 16 },
+                LayerDesc::Conv { c_in: 32, c_out: 32, h: 8, w: 8, f: 3, quantized: true },
+                LayerDesc::MaxPool { c: 32, h: 8, w: 8 },
+                LayerDesc::GapFc { c: 32, classes: 4 },
+            ],
+            input: (1, 16, 16),
+            classes: 4,
+        }
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(LayerDesc::macs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparq_cnn_shapes() {
+        let g = QnnGraph::sparq_cnn();
+        assert_eq!(g.layers.len(), 6);
+        assert_eq!(g.input, (1, 16, 16));
+        // conv2: 16*32*16*16*9
+        assert_eq!(g.layers[1].macs(), 16 * 32 * 16 * 16 * 9);
+        assert!(g.total_macs() > 1_000_000);
+    }
+
+    #[test]
+    fn names_tag_quantized_layers() {
+        let g = QnnGraph::sparq_cnn();
+        assert!(g.layers[0].name().contains("[stem]"));
+        assert!(g.layers[1].name().contains("[sub-byte]"));
+    }
+}

@@ -1,0 +1,13 @@
+//! The QNN graph (mirroring `python/compile/model.py`'s SparqCNN) and
+//! its layer-by-layer scheduling onto the Sparq simulator.
+//!
+//! The serving stack uses this to attach *hardware* cost to every
+//! request: PJRT executes the numerics (the AOT artifact), while this
+//! module answers "how many Sparq cycles would this inference take",
+//! layer by layer, using the same kernel builders the benchmarks use.
+
+pub mod graph;
+pub mod schedule;
+
+pub use graph::{LayerDesc, QnnGraph};
+pub use schedule::{schedule, LayerCycles, QnnSchedule};

@@ -1,0 +1,188 @@
+//! Layer-by-layer scheduling of a QNN onto the simulated processor:
+//! every conv layer is built with the same kernel builders the
+//! benchmarks use and run through the cycle model.
+//!
+//! Padding note: the network uses 'same' convs; the kernel library
+//! computes 'valid' convs, so each layer is scheduled over its padded
+//! input (H+f-1), exactly what an im2row-free implementation does with
+//! a zero-padded buffer.
+
+use crate::arch::ProcessorConfig;
+use crate::kernels::{run_conv, ConvDims, ConvVariant, Workload};
+use crate::qnn::graph::{LayerDesc, QnnGraph};
+use crate::sim::SimError;
+use crate::ulppack::RegionMode;
+
+/// Precision configuration for a scheduled network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QnnPrecision {
+    Fp32,
+    /// Sub-byte (W, A) on the quantized layers; the stem stays int16.
+    SubByte { w_bits: u32, a_bits: u32 },
+}
+
+impl QnnPrecision {
+    pub fn label(&self) -> String {
+        match *self {
+            QnnPrecision::Fp32 => "fp32".into(),
+            QnnPrecision::SubByte { w_bits, a_bits } => format!("w{w_bits}a{a_bits}"),
+        }
+    }
+}
+
+/// Cycle cost of one scheduled layer.
+#[derive(Debug, Clone)]
+pub struct LayerCycles {
+    pub name: String,
+    pub cycles: u64,
+    pub macs: u64,
+    pub variant: String,
+}
+
+/// A full per-image schedule.
+#[derive(Debug, Clone)]
+pub struct QnnSchedule {
+    pub precision: QnnPrecision,
+    pub layers: Vec<LayerCycles>,
+    pub processor: String,
+}
+
+impl QnnSchedule {
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Images/second at the lane fmax from the power model.
+    pub fn throughput_at(&self, fmax_ghz: f64) -> f64 {
+        fmax_ghz * 1e9 / self.total_cycles() as f64
+    }
+}
+
+/// Pick the conv variant a layer runs with under `precision`.
+fn variant_for(layer: &LayerDesc, precision: QnnPrecision) -> Option<ConvVariant> {
+    match *layer {
+        LayerDesc::Conv { quantized, .. } => Some(match precision {
+            QnnPrecision::Fp32 => ConvVariant::Fp32,
+            QnnPrecision::SubByte { w_bits, a_bits } => {
+                if quantized {
+                    ConvVariant::Vmacsr { w_bits, a_bits, mode: RegionMode::Paper }
+                } else {
+                    ConvVariant::Int16 // the stem
+                }
+            }
+        }),
+        _ => None,
+    }
+}
+
+/// Schedule one inference of `graph` at `precision` on `cfg`.
+///
+/// Non-conv layers (pool, GAP+FC) are costed as a single memory-bound
+/// vector pass over their activations (they are <2% of the MACs).
+pub fn schedule(
+    cfg: &ProcessorConfig,
+    graph: &QnnGraph,
+    precision: QnnPrecision,
+) -> Result<QnnSchedule, SimError> {
+    let mut layers = Vec::new();
+    for (li, layer) in graph.layers.iter().enumerate() {
+        match variant_for(layer, precision) {
+            Some(variant) => {
+                let LayerDesc::Conv { c_in, c_out, h, w, f, .. } = *layer else { unreachable!() };
+                // 'same' padding -> schedule the padded 'valid' problem.
+                // in-channels are padded to even for the packed kernels
+                // (the python model's channel counts are already even
+                // except the 1-channel stem, which runs int16 anyway).
+                let c = if c_in % 2 == 1 { c_in + 1 } else { c_in };
+                let dims =
+                    ConvDims { c, h: h + f - 1, w: w + f - 1, co: c_out, fh: f, fw: f };
+                let (wb, ab) = variant.bits();
+                let wl = Workload::random(dims, wb, ab, 0x5EED + li as u64);
+                let run = run_conv(cfg, &wl, variant)?;
+                layers.push(LayerCycles {
+                    name: layer.name(),
+                    cycles: run.report.stats.cycles,
+                    macs: layer.macs(),
+                    variant: variant.label(),
+                });
+            }
+            None => {
+                // one streaming pass over the activations at the vector
+                // engine's memory bandwidth
+                let bytes = match *layer {
+                    LayerDesc::MaxPool { c, h, w } => (c * h * w * 2) as u64,
+                    LayerDesc::GapFc { c, .. } => (c * 64) as u64,
+                    _ => unreachable!(),
+                };
+                let cycles = bytes.div_ceil(cfg.mem_bytes_per_cycle as u64)
+                    + cfg.mem_latency as u64;
+                layers.push(LayerCycles {
+                    name: layer.name(),
+                    cycles,
+                    macs: layer.macs(),
+                    variant: "streaming".into(),
+                });
+            }
+        }
+    }
+    Ok(QnnSchedule { precision, layers, processor: cfg.name.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_all_layers() {
+        let g = QnnGraph::sparq_cnn();
+        let s = schedule(
+            &ProcessorConfig::sparq(),
+            &g,
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+        )
+        .unwrap();
+        assert_eq!(s.layers.len(), g.layers.len());
+        assert!(s.total_cycles() > 0);
+        assert_eq!(s.total_macs(), g.total_macs());
+    }
+
+    #[test]
+    fn subbyte_faster_than_fp32() {
+        let g = QnnGraph::sparq_cnn();
+        let fp = schedule(&ProcessorConfig::ara(), &g, QnnPrecision::Fp32).unwrap();
+        let q2 = schedule(
+            &ProcessorConfig::sparq(),
+            &g,
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+        )
+        .unwrap();
+        assert!(
+            q2.total_cycles() < fp.total_cycles(),
+            "w2a2 {} !< fp32 {}",
+            q2.total_cycles(),
+            fp.total_cycles()
+        );
+    }
+
+    #[test]
+    fn fp32_rejected_on_sparq() {
+        let g = QnnGraph::sparq_cnn();
+        assert!(schedule(&ProcessorConfig::sparq(), &g, QnnPrecision::Fp32).is_err());
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let g = QnnGraph::sparq_cnn();
+        let s = schedule(
+            &ProcessorConfig::sparq(),
+            &g,
+            QnnPrecision::SubByte { w_bits: 4, a_bits: 4 },
+        )
+        .unwrap();
+        assert!(s.throughput_at(1.464) > 0.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Parser for `artifacts/manifest.txt` — the tab-separated index
+//! `python/compile/aot.py` writes:
+//!
+//! ```text
+//! artifact<TAB>name<TAB>file<TAB>key=value<TAB>...
+//! data<TAB>name<TAB>file<TAB>key=value<TAB>...
+//! ```
+
+use super::RuntimeError;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One AOT-compiled model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub meta: HashMap<String, String>,
+}
+
+impl Artifact {
+    /// Typed metadata accessor (`batch=16` etc.).
+    pub fn meta_u32(&self, key: &str) -> Option<u32> {
+        self.meta.get(key)?.parse().ok()
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key)?.parse().ok()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    pub data: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, RuntimeError> {
+        let mut m = Manifest::default();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() < 3 {
+                return Err(RuntimeError::Manifest(format!(
+                    "line {}: expected at least 3 tab-separated fields",
+                    ln + 1
+                )));
+            }
+            let meta = fields[3..]
+                .iter()
+                .filter_map(|kv| kv.split_once('='))
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect();
+            let art = Artifact { name: fields[1].into(), file: fields[2].into(), meta };
+            match fields[0] {
+                "artifact" => m.artifacts.push(art),
+                "data" => m.data.push(art),
+                other => {
+                    return Err(RuntimeError::Manifest(format!(
+                        "line {}: unknown record type '{other}'",
+                        ln + 1
+                    )))
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest, RuntimeError> {
+        Manifest::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn datum(&self, name: &str) -> Option<&Artifact> {
+        self.data.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+data\ttestset\ttestset.bin\tn=512\tc=1\th=16\tw=16\tclasses=4
+artifact\tqnn_fp32\tqnn_fp32.hlo.txt\tbatch=16\tin=1x16x16\tout=4\tacc_ref=0.9980
+artifact\tqnn_w2a2\tqnn_w2a2.hlo.txt\tbatch=16\twbits=2\tabits=2\tcontainer=8
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.data.len(), 1);
+        let a = m.artifact("qnn_w2a2").unwrap();
+        assert_eq!(a.meta_u32("wbits"), Some(2));
+        assert_eq!(a.meta_u32("container"), Some(8));
+        let fp = m.artifact("qnn_fp32").unwrap();
+        assert!((fp.meta_f64("acc_ref").unwrap() - 0.998).abs() < 1e-6);
+        assert_eq!(m.datum("testset").unwrap().meta_u32("n"), Some(512));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("artifact\tonly-two").is_err());
+        assert!(Manifest::parse("mystery\ta\tb").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# header\n\nartifact\ta\tb.hlo.txt\n").unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! The PJRT runtime: loads the AOT-compiled HLO-text artifacts that
+//! `python/compile/aot.py` produced (`make artifacts`) and executes
+//! them on the CPU PJRT client — python never runs on this path.
+//!
+//! Interchange is HLO *text* (see `aot.py` and DESIGN.md: jax >= 0.5
+//! emits 64-bit-id protos that the crate's xla_extension 0.5.1
+//! rejects; the text parser reassigns ids).  Every artifact is lowered
+//! with `return_tuple=True`, so results unwrap with `to_tuple1()`.
+
+pub mod manifest;
+pub mod testset;
+
+pub use manifest::{Artifact, Manifest};
+pub use testset::TestSet;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    #[error("artifact directory problem: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest: {0}")]
+    Manifest(String),
+    #[error("xla/pjrt: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("unknown model '{0}' (is it in artifacts/manifest.txt?)")]
+    UnknownModel(String),
+}
+
+/// A loaded, compiled inference runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` (compiling each HLO module once).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for art in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(dir.join(&art.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            exes.insert(art.name.clone(), client.compile(&comp)?);
+        }
+        Ok(Runtime { client, exes, manifest, dir })
+    }
+
+    /// Names of the loaded models.
+    pub fn models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
+        self.exes.get(name).ok_or_else(|| RuntimeError::UnknownModel(name.into()))
+    }
+
+    /// Execute a model whose inputs and output are f32 tensors.
+    /// `inputs` = (data, dims) pairs; returns the flattened f32 output.
+    pub fn exec_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<f32>, RuntimeError> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| xla::Literal::vec1(data).reshape(dims))
+            .collect::<Result<Vec<_>, _>>()?;
+        let result = self.exe(name)?.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Execute a model whose inputs and output are i32 tensors.
+    pub fn exec_i32(
+        &self,
+        name: &str,
+        inputs: &[(&[i32], &[i64])],
+    ) -> Result<Vec<i32>, RuntimeError> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| xla::Literal::vec1(data).reshape(dims))
+            .collect::<Result<Vec<_>, _>>()?;
+        let result = self.exe(name)?.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<i32>()?)
+    }
+}
+
+/// The repo-conventional artifacts directory, overridable via
+/// `SPARQ_ARTIFACTS` (used by every example and bench).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SPARQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if `make artifacts` has been run (integration tests and benches
+/// skip politely otherwise).
+pub fn artifacts_present() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}

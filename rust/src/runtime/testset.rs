@@ -1,0 +1,100 @@
+//! Loader for the `SPQD` test-set binary `python/compile/dataset.py`
+//! writes: `magic 'SPQD' | u32 n,c,h,w | f32 data | u8 labels`.
+
+use super::RuntimeError;
+use std::path::Path;
+
+/// A held-out evaluation set.
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Flattened (n, c, h, w) images, row-major.
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+impl TestSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<TestSet, RuntimeError> {
+        let bytes = std::fs::read(path)?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<TestSet, RuntimeError> {
+        let bad = |m: &str| RuntimeError::Manifest(format!("testset: {m}"));
+        if bytes.len() < 20 || &bytes[..4] != b"SPQD" {
+            return Err(bad("bad magic"));
+        }
+        let rd = |i: usize| {
+            u32::from_le_bytes(bytes[4 + 4 * i..8 + 4 * i].try_into().unwrap()) as usize
+        };
+        let (n, c, h, w) = (rd(0), rd(1), rd(2), rd(3));
+        let nf = n * c * h * w;
+        let expected = 20 + 4 * nf + n;
+        if bytes.len() != expected {
+            return Err(bad(&format!("size {} != expected {expected}", bytes.len())));
+        }
+        let images = bytes[20..20 + 4 * nf]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        let labels = bytes[20 + 4 * nf..].to_vec();
+        Ok(TestSet { n, c, h, w, images, labels })
+    }
+
+    /// The images of one batch (padded with zeros to `batch` images if
+    /// the tail is short); returns (data, real_count).
+    pub fn batch(&self, start: usize, batch: usize) -> (Vec<f32>, usize) {
+        let per = self.c * self.h * self.w;
+        let real = batch.min(self.n.saturating_sub(start));
+        let mut out = vec![0f32; batch * per];
+        out[..real * per].copy_from_slice(&self.images[start * per..(start + real) * per]);
+        (out, real)
+    }
+
+    /// One image's data.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let per = self.c * self.h * self.w;
+        &self.images[i * per..(i + 1) * per]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize) -> Vec<u8> {
+        let (c, h, w) = (1usize, 2usize, 2usize);
+        let mut v = b"SPQD".to_vec();
+        for d in [n as u32, c as u32, h as u32, w as u32] {
+            v.extend_from_slice(&d.to_le_bytes());
+        }
+        for i in 0..n * c * h * w {
+            v.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        v.extend((0..n).map(|i| (i % 4) as u8));
+        v
+    }
+
+    #[test]
+    fn parses_and_batches() {
+        let ts = TestSet::parse(&sample(5)).unwrap();
+        assert_eq!((ts.n, ts.c, ts.h, ts.w), (5, 1, 2, 2));
+        assert_eq!(ts.image(1), &[4.0, 5.0, 6.0, 7.0]);
+        let (b, real) = ts.batch(4, 4);
+        assert_eq!(real, 1);
+        assert_eq!(b.len(), 16);
+        assert_eq!(&b[0..4], &[16.0, 17.0, 18.0, 19.0]);
+        assert!(b[4..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_size() {
+        assert!(TestSet::parse(b"NOPE").is_err());
+        let mut s = sample(3);
+        s.pop();
+        assert!(TestSet::parse(&s).is_err());
+    }
+}

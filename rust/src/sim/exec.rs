@@ -1,0 +1,555 @@
+//! Functional execution of one trace instruction — bit-exact integer
+//! semantics (modular at SEW), IEEE f32 for the FPU ops, RVV slide
+//! semantics.  The timing model lives in `sim::timing`; this file only
+//! answers "what values" — and is itself the subject of the
+//! SIMD-vs-scalar property tests.
+
+use super::mem::Mem;
+use super::vrf::Vrf;
+use super::SimError;
+use crate::arch::ProcessorConfig;
+use crate::isa::{Lmul, Sew, VInst, VOp, VType};
+
+/// Architectural state carried between instructions.
+#[derive(Debug, Clone)]
+pub struct ExecState {
+    pub vl: u32,
+    pub vtype: VType,
+    /// The configurable-shifter CSR (vmacsr.cfg extension).
+    pub csr_shift: u32,
+}
+
+impl Default for ExecState {
+    fn default() -> Self {
+        ExecState { vl: 0, vtype: VType::new(Sew::E8, Lmul::M1), csr_shift: 0 }
+    }
+}
+
+#[inline]
+fn sext(v: u64, sew: Sew) -> i64 {
+    let sh = 64 - sew.bits();
+    ((v << sh) as i64) >> sh
+}
+
+#[inline]
+fn trunc(v: u64, sew: Sew) -> u64 {
+    if sew.bits() == 64 {
+        v
+    } else {
+        v & ((1u64 << sew.bits()) - 1)
+    }
+}
+
+#[inline]
+fn mulhu(a: u64, b: u64, sew: Sew) -> u64 {
+    match sew {
+        Sew::E64 => ((a as u128 * b as u128) >> 64) as u64,
+        _ => trunc((a.wrapping_mul(b)) >> sew.bits(), sew),
+    }
+}
+
+#[inline]
+fn mulh(a: u64, b: u64, sew: Sew) -> u64 {
+    match sew {
+        Sew::E64 => (((sext(a, sew) as i128) * (sext(b, sew) as i128)) >> 64) as u64,
+        _ => trunc(((sext(a, sew) as i64).wrapping_mul(sext(b, sew) as i64) >> sew.bits()) as u64, sew),
+    }
+}
+
+/// ALU/MUL op at one element; `x` is the vs1/rs1/imm operand, `a` is
+/// vs2, `d` the old vd (for ternary ops).
+#[inline]
+fn scalar_op(op: VOp, a: u64, x: u64, d: u64, sew: Sew, shift: u32) -> u64 {
+    let m = |v| trunc(v, sew);
+    match op {
+        VOp::Add => m(a.wrapping_add(x)),
+        VOp::Sub => m(a.wrapping_sub(x)),
+        VOp::And => a & x,
+        VOp::Or => a | x,
+        VOp::Xor => a ^ x,
+        VOp::Min => a.min(x),
+        VOp::Max => a.max(x),
+        VOp::Sll => m(a << (x & (sew.bits() as u64 - 1))),
+        VOp::Srl => a >> (x & (sew.bits() as u64 - 1)),
+        VOp::Sra => m((sext(a, sew) >> (x & (sew.bits() as u64 - 1))) as u64),
+        VOp::Mv => x,
+        VOp::Mul => m(a.wrapping_mul(x)),
+        VOp::Mulhu => mulhu(a, x, sew),
+        VOp::Mulh => mulh(a, x, sew),
+        VOp::Macc => m(d.wrapping_add(a.wrapping_mul(x))),
+        VOp::Nmsac => m(d.wrapping_sub(a.wrapping_mul(x))),
+        // the paper's instruction: vd += ((vs1*vs2) mod 2^SEW) >> M,
+        // with M hard-wired to SEW/2 (or CSR-driven for .cfg)
+        VOp::Macsr | VOp::MacsrCfg => m(d.wrapping_add(m(a.wrapping_mul(x)) >> shift)),
+        VOp::FAdd => (f32::from_bits(a as u32) + f32::from_bits(x as u32)).to_bits() as u64,
+        VOp::FMul => (f32::from_bits(a as u32) * f32::from_bits(x as u32)).to_bits() as u64,
+        VOp::FMacc => {
+            let prod = f32::from_bits(a as u32) * f32::from_bits(x as u32);
+            (f32::from_bits(d as u32) + prod).to_bits() as u64
+        }
+        VOp::WAdduWv | VOp::SlideDown | VOp::SlideUp => unreachable!("handled separately"),
+    }
+}
+
+fn check_legal(op: VOp, cfg: &ProcessorConfig, st: &ExecState) -> Result<(), SimError> {
+    if op.is_fp() {
+        if !cfg.fpu {
+            return Err(SimError::NoFpu(op.mnemonic()));
+        }
+        if st.vtype.sew != Sew::E32 {
+            return Err(SimError::Unsupported("fp ops are modelled at SEW=32 only"));
+        }
+    }
+    if op == VOp::Macsr && !cfg.vmacsr {
+        return Err(SimError::NoVmacsr);
+    }
+    if op == VOp::MacsrCfg && !cfg.configurable_shifter {
+        return Err(SimError::NoCfgShifter);
+    }
+    Ok(())
+}
+
+fn check_alignment(inst: &VInst, st: &ExecState) -> Result<(), SimError> {
+    let lm = st.vtype.lmul;
+    let check = |v: u8, factor: u32| -> Result<(), SimError> {
+        if v as u32 % factor != 0 {
+            return Err(SimError::Misaligned { reg: v, lmul: factor });
+        }
+        if v as u32 + factor > 32 {
+            return Err(SimError::GroupPastV31 { reg: v, lmul: factor });
+        }
+        Ok(())
+    };
+    let f = lm.factor();
+    if let Some(vd) = inst.vd() {
+        let df = if inst.vop() == Some(VOp::WAdduWv) { f * 2 } else { f };
+        check(vd, df)?;
+    }
+    for s in inst.srcs() {
+        check(s, f)?;
+    }
+    Ok(())
+}
+
+/// Execute one instruction; returns the number of element operations.
+pub fn execute(
+    inst: &VInst,
+    cfg: &ProcessorConfig,
+    st: &mut ExecState,
+    vrf: &mut Vrf,
+    mem: &mut Mem,
+) -> Result<u64, SimError> {
+    match *inst {
+        VInst::Scalar { .. } => Ok(0),
+        VInst::SetVl { avl, sew, lmul } => {
+            st.vtype = VType::new(sew, lmul);
+            st.vl = st.vtype.apply(avl, vrf.vlenb() * 8);
+            Ok(0)
+        }
+        VInst::Load { eew, vd, addr } => {
+            check_alignment(&VInst::Load { eew, vd, addr }, st)?;
+            let n = st.vl as usize * eew.bytes() as usize;
+            // mem and vrf are disjoint structs: no copy needed (§Perf)
+            vrf.slice_mut(vd, n).copy_from_slice(mem.read(addr, n)?);
+            Ok(st.vl as u64)
+        }
+        VInst::Store { eew, vs3, addr } => {
+            check_alignment(&VInst::Store { eew, vs3, addr }, st)?;
+            let n = st.vl as usize * eew.bytes() as usize;
+            mem.write(addr, vrf.slice(vs3, n))?;
+            Ok(st.vl as u64)
+        }
+        VInst::OpVV { op, vd, vs2, vs1 } => {
+            check_legal(op, cfg, st)?;
+            check_alignment(inst, st)?;
+            exec_arith(op, vd, vs2, Src::Vec(vs1), cfg, st, vrf)
+        }
+        VInst::OpVX { op, vd, vs2, rs1 } => {
+            check_legal(op, cfg, st)?;
+            check_alignment(inst, st)?;
+            exec_arith(op, vd, vs2, Src::Scalar(rs1), cfg, st, vrf)
+        }
+        VInst::OpVI { op, vd, vs2, imm } => {
+            check_legal(op, cfg, st)?;
+            check_alignment(inst, st)?;
+            let x = if matches!(op, VOp::Sll | VOp::Srl | VOp::Sra | VOp::SlideDown | VOp::SlideUp)
+            {
+                imm as u8 as u64 // uimm5
+            } else {
+                trunc(imm as i64 as u64, st.vtype.sew) // simm5, truncated at SEW
+            };
+            exec_arith(op, vd, vs2, Src::Scalar(x), cfg, st, vrf)
+        }
+    }
+}
+
+enum Src {
+    Vec(u8),
+    Scalar(u64),
+}
+
+fn exec_arith(
+    op: VOp,
+    vd: u8,
+    vs2: u8,
+    src: Src,
+    cfg: &ProcessorConfig,
+    st: &ExecState,
+    vrf: &mut Vrf,
+) -> Result<u64, SimError> {
+    let sew = st.vtype.sew;
+    let vl = st.vl;
+    let shift = match op {
+        VOp::Macsr => sew.bits() / 2,
+        VOp::MacsrCfg => st.csr_shift.min(sew.bits() - 1),
+        _ => 0,
+    };
+    let _ = cfg;
+    match op {
+        VOp::SlideDown | VOp::SlideUp => {
+            let off = match src {
+                Src::Scalar(x) => x,
+                Src::Vec(_) => return Err(SimError::Unsupported("slide .vv form")),
+            };
+            if op == VOp::SlideUp && vd == vs2 {
+                // RVV 1.0: vslideup vd must not overlap vs2
+                return Err(SimError::Unsupported("vslideup with vd == vs2"));
+            }
+            let vlmax = st.vtype.vlmax(vrf.vlenb() * 8);
+            if op == VOp::SlideDown {
+                for i in 0..vl {
+                    let j = i as u64 + off;
+                    let v = if j < vlmax as u64 { vrf.get(vs2, j as u32, sew) } else { 0 };
+                    vrf.set(vd, i, sew, v);
+                }
+            } else {
+                // ascending would read already-written elements if vd==vs2
+                for i in (0..vl).rev() {
+                    if (i as u64) < off {
+                        break; // elements below OFFSET keep vd's old value
+                    }
+                    let v = vrf.get(vs2, (i as u64 - off) as u32, sew);
+                    vrf.set(vd, i, sew, v);
+                }
+            }
+            Ok(vl as u64)
+        }
+        VOp::WAdduWv => {
+            let wide = sew.widened().ok_or(SimError::Unsupported("vwaddu.wv at SEW=64"))?;
+            // descending: element i of the 2*SEW dest never overlaps a
+            // not-yet-read source element of vs2 (vd group is distinct
+            // by the alignment rules our builders follow)
+            for i in 0..vl {
+                let a = vrf.get(vs2, i, sew);
+                let d = vrf.get(vd, i, wide);
+                vrf.set(vd, i, wide, trunc(d.wrapping_add(a), wide));
+            }
+            Ok(vl as u64)
+        }
+        _ => {
+            if let Src::Scalar(x) = src {
+                if exec_vx_fast(op, vd, vs2, trunc(x, sew), sew, vl, shift, vrf) {
+                    return Ok(vl as u64);
+                }
+            }
+            for i in 0..vl {
+                let a = vrf.get(vs2, i, sew);
+                let x = match src {
+                    Src::Vec(v1) => vrf.get(v1, i, sew),
+                    Src::Scalar(x) => trunc(x, sew),
+                };
+                let d = if op.reads_vd() { vrf.get(vd, i, sew) } else { 0 };
+                vrf.set(vd, i, sew, scalar_op(op, a, x, d, sew, shift));
+            }
+            Ok(vl as u64)
+        }
+    }
+}
+
+/// §Perf fast path: monomorphic slice loops for the hot vector-scalar
+/// ops at E8/E16 (the Algorithm-1 inner loop is >80% vmacsr/vmacc).
+/// Falls back to the generic loop (returns false) for anything it does
+/// not cover; the property tests in `conv_*` pin both paths to the same
+/// goldens.
+#[allow(clippy::too_many_arguments)]
+fn exec_vx_fast(
+    op: VOp,
+    vd: u8,
+    vs2: u8,
+    x: u64,
+    sew: Sew,
+    vl: u32,
+    shift: u32,
+    vrf: &mut Vrf,
+) -> bool {
+    if !matches!(sew, Sew::E8 | Sew::E16) {
+        return false;
+    }
+    let eb = sew.bytes() as usize;
+    let len = vl as usize * eb;
+
+    // broadcast (vmv.v.i / vmv.v.x) — a plain fill
+    if op == VOp::Mv {
+        match sew {
+            Sew::E8 => vrf.slice_mut(vd, len).fill(x as u8),
+            Sew::E16 => {
+                let b = (x as u16).to_le_bytes();
+                for d in vrf.slice_mut(vd, len).chunks_exact_mut(2) {
+                    d.copy_from_slice(&b);
+                }
+            }
+            _ => unreachable!(),
+        }
+        return true;
+    }
+
+    macro_rules! lanes {
+        ($t:ty, $w:expr, $f:expr) => {{
+            if vd == vs2 {
+                // elementwise in-place (a == old d for ternary ops)
+                for d in vrf.slice_mut(vd, len).chunks_exact_mut($w) {
+                    let a = <$t>::from_le_bytes(d.try_into().unwrap());
+                    let r: $t = $f(a, a);
+                    d.copy_from_slice(&r.to_le_bytes());
+                }
+                true
+            } else if let Some((s, d)) = vrf.try_src_dst(vs2, vd, len) {
+                for (dc, sc) in d.chunks_exact_mut($w).zip(s.chunks_exact($w)) {
+                    let a = <$t>::from_le_bytes(sc.try_into().unwrap());
+                    let dv = <$t>::from_le_bytes(dc.try_into().unwrap());
+                    let r: $t = $f(a, dv);
+                    dc.copy_from_slice(&r.to_le_bytes());
+                }
+                true
+            } else {
+                false // partially-overlapping groups: generic loop
+            }
+        }};
+    }
+
+    macro_rules! per_sew {
+        ($f8:expr, $f16:expr) => {
+            match sew {
+                Sew::E8 => lanes!(u8, 1, $f8),
+                Sew::E16 => lanes!(u16, 2, $f16),
+                _ => unreachable!(),
+            }
+        };
+    }
+
+    match op {
+        VOp::Macsr | VOp::MacsrCfg => {
+            let (x8, x16, sh) = (x as u8, x as u16, shift);
+            per_sew!(
+                |a: u8, d: u8| d.wrapping_add(a.wrapping_mul(x8) >> sh),
+                |a: u16, d: u16| d.wrapping_add(a.wrapping_mul(x16) >> sh)
+            )
+        }
+        VOp::Macc => {
+            let (x8, x16) = (x as u8, x as u16);
+            per_sew!(
+                |a: u8, d: u8| d.wrapping_add(a.wrapping_mul(x8)),
+                |a: u16, d: u16| d.wrapping_add(a.wrapping_mul(x16))
+            )
+        }
+        VOp::Mul => {
+            let (x8, x16) = (x as u8, x as u16);
+            per_sew!(|a: u8, _| a.wrapping_mul(x8), |a: u16, _| a.wrapping_mul(x16))
+        }
+        VOp::Add => {
+            let (x8, x16) = (x as u8, x as u16);
+            per_sew!(|a: u8, _| a.wrapping_add(x8), |a: u16, _| a.wrapping_add(x16))
+        }
+        VOp::Or => {
+            let (x8, x16) = (x as u8, x as u16);
+            per_sew!(|a: u8, _| a | x8, |a: u16, _| a | x16)
+        }
+        VOp::And => {
+            let (x8, x16) = (x as u8, x as u16);
+            per_sew!(|a: u8, _| a & x8, |a: u16, _| a & x16)
+        }
+        VOp::Sll => {
+            let sh = (x & (sew.bits() as u64 - 1)) as u32;
+            per_sew!(|a: u8, _| a << sh, |a: u16, _| a << sh)
+        }
+        VOp::Srl => {
+            let sh = (x & (sew.bits() as u64 - 1)) as u32;
+            per_sew!(|a: u8, _| a >> sh, |a: u16, _| a >> sh)
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (ProcessorConfig, ExecState, Vrf, Mem) {
+        let cfg = ProcessorConfig::sparq_cfgshift();
+        let st = ExecState::default();
+        let vrf = Vrf::new(4096);
+        let mem = Mem::new(1 << 16);
+        (cfg, st, vrf, mem)
+    }
+
+    fn setvl(st: &mut ExecState, vrf: &Vrf, avl: u64, sew: Sew) {
+        st.vtype = VType::new(sew, Lmul::M1);
+        st.vl = st.vtype.apply(avl, vrf.vlenb() * 8);
+    }
+
+    #[test]
+    fn vmacsr_matches_papers_formula() {
+        // Vd <- Vd + ((Vs1 x Vs2 mod 2^16) >> 8): the ULPPACK trick.
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        setvl(&mut st, &vrf, 4, Sew::E16);
+        // a = a0 + a1<<8, w = w1 + w0<<8 with (a0,a1,w0,w1)=(3,2,1,2)
+        let a = 3u64 | (2 << 8);
+        let w = 2u64 | (1 << 8);
+        vrf.set(2, 0, Sew::E16, a);
+        vrf.set(1, 0, Sew::E16, 100); // pre-existing accumulator
+        let i = VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: w };
+        execute(&i, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        // dot = a0*w0 + a1*w1 = 3 + 4 = 7; junk a0*w1 = 6 (< 256)
+        assert_eq!(vrf.get(1, 0, Sew::E16), 107);
+    }
+
+    #[test]
+    fn vmacc_wraps_modulo_sew() {
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        setvl(&mut st, &vrf, 1, Sew::E8);
+        vrf.set(2, 0, Sew::E8, 200);
+        vrf.set(1, 0, Sew::E8, 100);
+        let i = VInst::OpVX { op: VOp::Macc, vd: 1, vs2: 2, rs1: 2 };
+        execute(&i, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        assert_eq!(vrf.get(1, 0, Sew::E8), (100u64 + 400) % 256);
+    }
+
+    #[test]
+    fn slidedown_pulls_in_zero_past_vlmax() {
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        setvl(&mut st, &vrf, 256, Sew::E16); // vlmax for VLEN=4096
+        for i in 0..256 {
+            vrf.set(4, i, Sew::E16, i as u64 + 1);
+        }
+        let i = VInst::OpVI { op: VOp::SlideDown, vd: 4, vs2: 4, imm: 1 };
+        execute(&i, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        assert_eq!(vrf.get(4, 0, Sew::E16), 2);
+        assert_eq!(vrf.get(4, 254, Sew::E16), 256);
+        assert_eq!(vrf.get(4, 255, Sew::E16), 0); // past vlmax
+    }
+
+    #[test]
+    fn slidedown_reads_beyond_vl_within_vlmax() {
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        setvl(&mut st, &vrf, 4, Sew::E16);
+        for i in 0..8 {
+            vrf.set(4, i, Sew::E16, 10 + i as u64);
+        }
+        let i = VInst::OpVI { op: VOp::SlideDown, vd: 2, vs2: 4, imm: 2 };
+        execute(&i, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        // element vl-1 comes from vs2[vl+1], which is beyond vl but valid
+        assert_eq!(vrf.get(2, 3, Sew::E16), 15);
+    }
+
+    #[test]
+    fn slideup_preserves_low_elements() {
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        setvl(&mut st, &vrf, 4, Sew::E16);
+        for i in 0..4 {
+            vrf.set(4, i, Sew::E16, i as u64 + 1);
+            vrf.set(6, i, Sew::E16, 99);
+        }
+        let i = VInst::OpVI { op: VOp::SlideUp, vd: 6, vs2: 4, imm: 2 };
+        execute(&i, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        assert_eq!(vrf.get(6, 0, Sew::E16), 99);
+        assert_eq!(vrf.get(6, 1, Sew::E16), 99);
+        assert_eq!(vrf.get(6, 2, Sew::E16), 1);
+        assert_eq!(vrf.get(6, 3, Sew::E16), 2);
+    }
+
+    #[test]
+    fn fp_ops_trap_without_fpu() {
+        let cfg = ProcessorConfig::sparq();
+        let mut st = ExecState::default();
+        let mut vrf = Vrf::new(4096);
+        let mut mem = Mem::new(1024);
+        setvl(&mut st, &vrf, 4, Sew::E32);
+        let i = VInst::OpVV { op: VOp::FMacc, vd: 1, vs2: 2, vs1: 3 };
+        assert!(matches!(execute(&i, &cfg, &mut st, &mut vrf, &mut mem), Err(SimError::NoFpu(_))));
+    }
+
+    #[test]
+    fn vmacsr_traps_on_ara() {
+        let cfg = ProcessorConfig::ara();
+        let mut st = ExecState::default();
+        let mut vrf = Vrf::new(4096);
+        let mut mem = Mem::new(1024);
+        setvl(&mut st, &vrf, 4, Sew::E16);
+        let i = VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 3 };
+        assert_eq!(execute(&i, &cfg, &mut st, &mut vrf, &mut mem), Err(SimError::NoVmacsr));
+    }
+
+    #[test]
+    fn misaligned_group_trap() {
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        st.vtype = VType::new(Sew::E16, Lmul::M4);
+        st.vl = 100;
+        let i = VInst::OpVV { op: VOp::Add, vd: 2, vs2: 4, vs1: 8 };
+        assert!(matches!(
+            execute(&i, &cfg, &mut st, &mut vrf, &mut mem),
+            Err(SimError::Misaligned { reg: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn wadduwv_accumulates_at_double_width() {
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        setvl(&mut st, &vrf, 3, Sew::E16);
+        for i in 0..3 {
+            vrf.set(4, i, Sew::E16, 0xFFFF); // max u16
+            vrf.set(8, i, Sew::E32, 10);
+        }
+        let i = VInst::OpVV { op: VOp::WAdduWv, vd: 8, vs2: 4, vs1: 0 };
+        execute(&i, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        for i in 0..3 {
+            assert_eq!(vrf.get(8, i, Sew::E32), 10 + 0xFFFF);
+        }
+    }
+
+    #[test]
+    fn load_store_roundtrip_through_vrf() {
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        mem.write_u16s(256, &[5, 6, 7, 8]).unwrap();
+        setvl(&mut st, &vrf, 4, Sew::E16);
+        execute(&VInst::Load { eew: Sew::E16, vd: 3, addr: 256 }, &cfg, &mut st, &mut vrf, &mut mem)
+            .unwrap();
+        execute(&VInst::Store { eew: Sew::E16, vs3: 3, addr: 512 }, &cfg, &mut st, &mut vrf, &mut mem)
+            .unwrap();
+        assert_eq!(mem.read_u16s(512, 4).unwrap(), vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn fp_macc_is_ieee_f32() {
+        let cfg = ProcessorConfig::ara();
+        let mut st = ExecState::default();
+        let mut vrf = Vrf::new(4096);
+        let mut mem = Mem::new(1024);
+        setvl(&mut st, &vrf, 1, Sew::E32);
+        vrf.set(2, 0, Sew::E32, 1.5f32.to_bits() as u64);
+        vrf.set(1, 0, Sew::E32, 0.25f32.to_bits() as u64);
+        let i = VInst::OpVX { op: VOp::FMacc, vd: 1, vs2: 2, rs1: 2.0f32.to_bits() as u64 };
+        execute(&i, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        assert_eq!(f32::from_bits(vrf.get(1, 0, Sew::E32) as u32), 0.25 + 1.5 * 2.0);
+    }
+
+    #[test]
+    fn cfg_shifter_uses_csr() {
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        setvl(&mut st, &vrf, 1, Sew::E16);
+        st.csr_shift = 4;
+        vrf.set(2, 0, Sew::E16, 0x100);
+        let i = VInst::OpVX { op: VOp::MacsrCfg, vd: 1, vs2: 2, rs1: 1 };
+        execute(&i, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        assert_eq!(vrf.get(1, 0, Sew::E16), 0x10);
+    }
+}

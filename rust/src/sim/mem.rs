@@ -1,0 +1,149 @@
+//! Flat byte-addressed memory with a bump allocator — the simulated
+//! system's DRAM.  Kernel builders allocate tensors here and bake the
+//! resolved addresses into their instruction traces.
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum MemError {
+    #[error("access at {addr:#x}+{len} out of bounds (size {size:#x})")]
+    OutOfBounds { addr: u64, len: usize, size: usize },
+    #[error("allocation of {0} bytes exceeds memory")]
+    OutOfMemory(u64),
+}
+
+/// Simulated main memory.
+#[derive(Debug, Clone)]
+pub struct Mem {
+    data: Vec<u8>,
+    brk: u64,
+}
+
+impl Mem {
+    /// A memory of `size` bytes, zero-initialised.
+    pub fn new(size: usize) -> Mem {
+        Mem { data: vec![0; size], brk: 64 } // keep null page tiny but nonzero
+    }
+
+    pub fn size(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bump-allocate `bytes` with `align` (power of two) alignment.
+    pub fn alloc(&mut self, bytes: u64, align: u64) -> Result<u64, MemError> {
+        debug_assert!(align.is_power_of_two());
+        let base = (self.brk + align - 1) & !(align - 1);
+        if base + bytes > self.data.len() as u64 {
+            return Err(MemError::OutOfMemory(bytes));
+        }
+        self.brk = base + bytes;
+        Ok(base)
+    }
+
+    fn check(&self, addr: u64, len: usize) -> Result<usize, MemError> {
+        let a = addr as usize;
+        if a + len > self.data.len() {
+            return Err(MemError::OutOfBounds { addr, len, size: self.data.len() });
+        }
+        Ok(a)
+    }
+
+    pub fn read(&self, addr: u64, len: usize) -> Result<&[u8], MemError> {
+        let a = self.check(addr, len)?;
+        Ok(&self.data[a..a + len])
+    }
+
+    pub fn write(&mut self, addr: u64, bytes: &[u8]) -> Result<(), MemError> {
+        let a = self.check(addr, bytes.len())?;
+        self.data[a..a + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Unsigned element load of `bytes` in {1,2,4,8}.
+    pub fn load_uint(&self, addr: u64, bytes: u32) -> Result<u64, MemError> {
+        let s = self.read(addr, bytes as usize)?;
+        let mut v = [0u8; 8];
+        v[..bytes as usize].copy_from_slice(s);
+        Ok(u64::from_le_bytes(v))
+    }
+
+    pub fn store_uint(&mut self, addr: u64, bytes: u32, val: u64) -> Result<(), MemError> {
+        let le = val.to_le_bytes();
+        self.write(addr, &le[..bytes as usize])
+    }
+
+    /// Typed helpers for the host side of tests / drivers.
+    pub fn write_u16s(&mut self, addr: u64, xs: &[u16]) -> Result<(), MemError> {
+        for (i, &x) in xs.iter().enumerate() {
+            self.store_uint(addr + 2 * i as u64, 2, x as u64)?;
+        }
+        Ok(())
+    }
+
+    pub fn write_u8s(&mut self, addr: u64, xs: &[u8]) -> Result<(), MemError> {
+        self.write(addr, xs)
+    }
+
+    pub fn write_f32s(&mut self, addr: u64, xs: &[f32]) -> Result<(), MemError> {
+        for (i, &x) in xs.iter().enumerate() {
+            self.store_uint(addr + 4 * i as u64, 4, x.to_bits() as u64)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_u16s(&self, addr: u64, n: usize) -> Result<Vec<u16>, MemError> {
+        (0..n).map(|i| self.load_uint(addr + 2 * i as u64, 2).map(|v| v as u16)).collect()
+    }
+
+    pub fn read_u8s(&self, addr: u64, n: usize) -> Result<Vec<u8>, MemError> {
+        Ok(self.read(addr, n)?.to_vec())
+    }
+
+    pub fn read_i32s(&self, addr: u64, n: usize) -> Result<Vec<i32>, MemError> {
+        (0..n).map(|i| self.load_uint(addr + 4 * i as u64, 4).map(|v| v as u32 as i32)).collect()
+    }
+
+    pub fn read_f32s(&self, addr: u64, n: usize) -> Result<Vec<f32>, MemError> {
+        (0..n)
+            .map(|i| self.load_uint(addr + 4 * i as u64, 4).map(|v| f32::from_bits(v as u32)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_respects_alignment_and_bounds() {
+        let mut m = Mem::new(1024);
+        let a = m.alloc(10, 64).unwrap();
+        assert_eq!(a % 64, 0);
+        let b = m.alloc(10, 64).unwrap();
+        assert!(b >= a + 10 && b % 64 == 0);
+        assert_eq!(m.alloc(10_000, 8), Err(MemError::OutOfMemory(10_000)));
+    }
+
+    #[test]
+    fn uint_roundtrip_all_widths() {
+        let mut m = Mem::new(256);
+        for (bytes, val) in [(1u32, 0xAB), (2, 0xABCD), (4, 0xABCD_1234), (8, 0xABCD_1234_5678u64)] {
+            m.store_uint(128, bytes, val).unwrap();
+            assert_eq!(m.load_uint(128, bytes).unwrap(), val);
+        }
+    }
+
+    #[test]
+    fn oob_rejected() {
+        let m = Mem::new(64);
+        assert!(m.load_uint(63, 4).is_err());
+        assert!(m.read(64, 1).is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut m = Mem::new(64);
+        m.write_f32s(0, &[1.5, -2.25]).unwrap();
+        assert_eq!(m.read_f32s(0, 2).unwrap(), vec![1.5, -2.25]);
+    }
+}

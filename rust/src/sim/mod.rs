@@ -1,0 +1,262 @@
+//! The Ara/Sparq vector-machine simulator: functionally exact execution
+//! (see [`exec`]) married to a cycle-approximate timing model
+//! ([`timing`]) with per-unit utilization accounting ([`stats`]).
+
+pub mod exec;
+pub mod mem;
+pub mod stats;
+pub mod timing;
+pub mod vrf;
+
+use crate::arch::{ProcessorConfig, Unit};
+use crate::isa::{Sew, VInst, VOp};
+use exec::ExecState;
+use mem::{Mem, MemError};
+use stats::Stats;
+pub use stats::RunReport;
+use thiserror::Error;
+use timing::Timing;
+use vrf::Vrf;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum SimError {
+    #[error("memory fault: {0}")]
+    Mem(#[from] MemError),
+    #[error("illegal instruction: {0} needs the FPU (removed on Sparq)")]
+    NoFpu(&'static str),
+    #[error("illegal instruction: vmacsr is not implemented on this core")]
+    NoVmacsr,
+    #[error("illegal instruction: vmacsr.cfg needs the configurable-shifter extension")]
+    NoCfgShifter,
+    #[error("illegal instruction: v{reg} not aligned to LMUL={lmul} group")]
+    Misaligned { reg: u8, lmul: u32 },
+    #[error("illegal instruction: v{reg} group of {lmul} extends past v31")]
+    GroupPastV31 { reg: u8, lmul: u32 },
+    #[error("unsupported by this model: {0}")]
+    Unsupported(&'static str),
+}
+
+/// A dynamic instruction trace plus the work it claims to perform.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub insts: Vec<VInst>,
+    /// Effective MACs the kernel computes (declared by the builder;
+    /// packed kernels count 2 MACs per container multiply).
+    pub macs: u64,
+    /// Label for reports.
+    pub label: String,
+}
+
+impl Program {
+    pub fn new(label: impl Into<String>) -> Program {
+        Program { insts: Vec::new(), macs: 0, label: label.into() }
+    }
+
+    pub fn push(&mut self, i: VInst) {
+        self.insts.push(i);
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+}
+
+/// The simulated machine: configuration + architectural state + memory.
+pub struct Machine {
+    pub cfg: ProcessorConfig,
+    pub mem: Mem,
+    vrf: Vrf,
+    state: ExecState,
+}
+
+impl Machine {
+    /// A machine with `mem_bytes` of simulated DRAM.
+    pub fn new(cfg: ProcessorConfig, mem_bytes: usize) -> Machine {
+        let vrf = Vrf::new(cfg.vlen_bits);
+        Machine { cfg, mem: Mem::new(mem_bytes), vrf, state: ExecState::default() }
+    }
+
+    /// Set the configurable-shifter CSR (vmacsr.cfg extension).
+    pub fn set_shift_csr(&mut self, shift: u32) {
+        self.state.csr_shift = shift;
+    }
+
+    /// Current vl (after the last vsetvli).
+    pub fn vl(&self) -> u32 {
+        self.state.vl
+    }
+
+    /// Direct VRF access for tests.
+    pub fn vrf(&mut self) -> &mut Vrf {
+        &mut self.vrf
+    }
+
+    /// Run a program to completion: functional execution + timing.
+    pub fn run(&mut self, prog: &Program) -> Result<RunReport, SimError> {
+        let mut timing = Timing::new(&self.cfg);
+        let mut st = Stats::default();
+
+        for inst in &prog.insts {
+            let ops = exec::execute(inst, &self.cfg, &mut self.state, &mut self.vrf, &mut self.mem)?;
+            st.element_ops += ops;
+            self.account(inst, &mut timing, &mut st);
+        }
+        st.cycles = timing.cycles();
+        st.raw_stall_cycles = timing.raw_stalls;
+        Ok(RunReport { stats: st, macs: prog.macs, label: prog.label.clone() })
+    }
+
+    /// Timing-side accounting for one instruction.
+    fn account(&self, inst: &VInst, timing: &mut Timing, st: &mut Stats) {
+        let lmul = self.state.vtype.lmul.factor();
+        let sew = self.state.vtype.sew;
+        let vl = self.state.vl as u64;
+        match *inst {
+            VInst::Scalar { n, .. } => {
+                timing.scalar(n);
+                st.add_scalar_slots(n as u64);
+            }
+            VInst::SetVl { .. } => {
+                timing.scalar(1);
+                st.add_scalar_slots(1);
+            }
+            VInst::Load { eew, vd, .. } => {
+                let bytes = vl * eew.bytes() as u64;
+                let (s, e) = timing.vector(Unit::Vlsu, bytes, bytes, Some((vd, lmul)), &[]);
+                st.add_busy(Unit::Vlsu, e - s);
+                st.bytes_loaded += bytes;
+            }
+            VInst::Store { eew, vs3, .. } => {
+                let bytes = vl * eew.bytes() as u64;
+                let (s, e) = timing.vector(Unit::Vlsu, bytes, bytes, None, &[(vs3, lmul)]);
+                st.add_busy(Unit::Vlsu, e - s);
+                st.bytes_stored += bytes;
+            }
+            VInst::OpVV { .. } | VInst::OpVX { .. } | VInst::OpVI { .. } => {
+                let op = inst.vop().unwrap();
+                let unit = if op.is_fp() || op.is_mul() {
+                    Unit::Mfpu
+                } else if op.is_slide() {
+                    Unit::Sldu
+                } else {
+                    Unit::Valu
+                };
+                // widening ops move dest-width data
+                let ebytes = if op == VOp::WAdduWv {
+                    sew.widened().map(Sew::bytes).unwrap_or(8) as u64
+                } else {
+                    sew.bytes() as u64
+                };
+                let dst_regs = if op == VOp::WAdduWv { lmul * 2 } else { lmul };
+                let mut buf = [0u8; 3];
+                let n = inst.srcs_into(&mut buf);
+                let mut srcs = [(0u8, 0u32); 3];
+                for (i, &r) in buf[..n].iter().enumerate() {
+                    srcs[i] = (r, lmul);
+                }
+                let dst = inst.vd().map(|d| (d, dst_regs));
+                let busy = vl * ebytes;
+                let (_, _) = timing.vector(unit, busy, 0, dst, &srcs[..n]);
+                // a unit is "busy" for its occupancy, not its latency
+                st.add_busy(unit, busy.div_ceil(self.cfg.bytes_per_cycle() as u64).max(1));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Lmul, ScalarKind};
+
+    fn machine() -> Machine {
+        Machine::new(ProcessorConfig::sparq(), 1 << 20)
+    }
+
+    #[test]
+    fn runs_a_tiny_program_and_counts_cycles() {
+        let mut m = machine();
+        m.mem.write_u16s(0x100, &[1, 2, 3, 4]).unwrap();
+        let mut p = Program::new("tiny");
+        p.push(VInst::SetVl { avl: 4, sew: Sew::E16, lmul: Lmul::M1 });
+        p.push(VInst::Load { eew: Sew::E16, vd: 1, addr: 0x100 });
+        p.push(VInst::OpVX { op: VOp::Add, vd: 2, vs2: 1, rs1: 10 });
+        p.push(VInst::Store { eew: Sew::E16, vs3: 2, addr: 0x200 });
+        p.macs = 0;
+        let r = m.run(&p).unwrap();
+        assert_eq!(m.mem.read_u16s(0x200, 4).unwrap(), vec![11, 12, 13, 14]);
+        assert!(r.stats.cycles > 0);
+        assert_eq!(r.stats.bytes_loaded, 8);
+        assert_eq!(r.stats.bytes_stored, 8);
+    }
+
+    #[test]
+    fn short_consumer_cannot_retire_before_long_producer() {
+        // Chaining lets dependents start early, but a short dependent op
+        // must still retire after its producer's last element.
+        let build = |dep: bool| {
+            let mut p = Program::new("x");
+            p.push(VInst::SetVl { avl: 512, sew: Sew::E16, lmul: Lmul::M2 });
+            p.push(VInst::OpVX { op: VOp::Mul, vd: 2, vs2: 2, rs1: 3 }); // 32-cycle producer
+            p.push(VInst::SetVl { avl: 16, sew: Sew::E16, lmul: Lmul::M2 });
+            let vs2 = if dep { 2 } else { 4 };
+            p.push(VInst::OpVX { op: VOp::Add, vd: 6, vs2, rs1: 1 }); // 1-cycle consumer
+            p
+        };
+        let c_dep = machine().run(&build(true)).unwrap().stats.cycles;
+        let c_ind = machine().run(&build(false)).unwrap().stats.cycles;
+        assert!(c_dep > c_ind, "dep {c_dep} <= ind {c_ind}");
+    }
+
+    #[test]
+    fn mfpu_utilization_high_for_back_to_back_maccs() {
+        let mut m = machine();
+        let mut p = Program::new("macc-stream");
+        p.push(VInst::SetVl { avl: 512, sew: Sew::E16, lmul: Lmul::M2 });
+        for k in 0..64 {
+            // independent accumulators round-robin over 8 groups
+            let vd = ((k % 8) * 2) as u8;
+            p.push(VInst::OpVX { op: VOp::Macc, vd, vs2: 16, rs1: 7 });
+        }
+        let r = m.run(&p).unwrap();
+        let util = r.stats.utilization(Unit::Mfpu);
+        assert!(util > 0.9, "MFPU utilization {util}");
+    }
+
+    #[test]
+    fn scalar_slots_serialize_dispatch() {
+        let mut m = machine();
+        let mut p = Program::new("scalar-heavy");
+        p.push(VInst::SetVl { avl: 16, sew: Sew::E16, lmul: Lmul::M1 });
+        for _ in 0..100 {
+            p.push(VInst::Scalar { kind: ScalarKind::AddrCalc, n: 4 });
+            p.push(VInst::OpVX { op: VOp::Macc, vd: 2, vs2: 4, rs1: 7 });
+        }
+        let r = m.run(&p).unwrap();
+        // 400 scalar slots dominate: MFPU can't be >50% utilized
+        assert!(r.stats.utilization(Unit::Mfpu) < 0.5);
+        assert!(r.stats.cycles >= 500);
+    }
+
+    #[test]
+    fn errors_propagate_from_exec() {
+        let mut m = Machine::new(ProcessorConfig::ara(), 1 << 16);
+        let mut p = Program::new("bad");
+        p.push(VInst::SetVl { avl: 4, sew: Sew::E16, lmul: Lmul::M1 });
+        p.push(VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 0 });
+        assert_eq!(m.run(&p).unwrap_err(), SimError::NoVmacsr);
+    }
+
+    #[test]
+    fn oob_load_faults() {
+        let mut m = machine();
+        let mut p = Program::new("oob");
+        p.push(VInst::SetVl { avl: 64, sew: Sew::E64, lmul: Lmul::M1 });
+        p.push(VInst::Load { eew: Sew::E64, vd: 0, addr: (1 << 20) - 8 });
+        assert!(matches!(m.run(&p), Err(SimError::Mem(_))));
+    }
+}

@@ -1,0 +1,131 @@
+//! Cycle/utilization accounting — the numbers behind Fig. 4, Fig. 5
+//! and the §III-A utilization claims.
+
+use crate::arch::Unit;
+use std::collections::BTreeMap;
+
+fn uix(u: Unit) -> usize {
+    match u {
+        Unit::Mfpu => 0,
+        Unit::Valu => 1,
+        Unit::Vlsu => 2,
+        Unit::Sldu => 3,
+        Unit::Dispatch => 4,
+    }
+}
+
+/// Counters accumulated over one program run.  Per-unit counters are
+/// flat arrays indexed by unit (§Perf iteration 3 replaced the former
+/// string-keyed maps that were walked once per instruction).
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    /// Total cycles (time the last instruction retires).
+    pub cycles: u64,
+    /// Cycles each unit spent busy (indexed by [`Unit`]).
+    busy: [u64; 5],
+    /// Dynamic instruction counts per unit (scalar slots under DISP).
+    insts: [u64; 5],
+    /// Vector element operations executed (functional count).
+    pub element_ops: u64,
+    /// Bytes moved by the VLSU.
+    pub bytes_loaded: u64,
+    pub bytes_stored: u64,
+    /// Stall cycles attributable to operand (RAW) dependencies.
+    pub raw_stall_cycles: u64,
+}
+
+impl Stats {
+    pub fn busy(&self, u: Unit) -> u64 {
+        self.busy[uix(u)]
+    }
+
+    pub fn insts(&self, u: Unit) -> u64 {
+        self.insts[uix(u)]
+    }
+
+    #[inline]
+    pub fn add_busy(&mut self, u: Unit, cycles: u64) {
+        self.busy[uix(u)] += cycles;
+        self.insts[uix(u)] += 1;
+    }
+
+    #[inline]
+    pub fn add_scalar_slots(&mut self, n: u64) {
+        self.busy[uix(Unit::Dispatch)] += n;
+        self.insts[uix(Unit::Dispatch)] += n;
+    }
+
+    /// Named view of the per-unit counters (reports).
+    pub fn unit_table(&self) -> BTreeMap<&'static str, (u64, u64)> {
+        Unit::ALL.iter().map(|&u| (u.name(), (self.busy(u), self.insts(u)))).collect()
+    }
+
+    /// Utilization of a unit over the whole run, in [0, 1].
+    pub fn utilization(&self, u: Unit) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.busy(u) as f64 / self.cycles as f64
+    }
+}
+
+/// A finished run plus the kernel-declared work, ready for reporting.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub stats: Stats,
+    /// Effective multiply-accumulates the kernel computed (declared by
+    /// the builder: packed kernels do 2 MACs per container product).
+    pub macs: u64,
+    /// Human label ("int16-conv2d", "ULP-conv2d", ...).
+    pub label: String,
+}
+
+impl RunReport {
+    /// Operations per cycle, counting 1 MAC = 2 ops (mul + add), the
+    /// convention of the paper's Fig. 4.
+    pub fn ops_per_cycle(&self) -> f64 {
+        if self.stats.cycles == 0 {
+            return 0.0;
+        }
+        (2 * self.macs) as f64 / self.stats.cycles as f64
+    }
+
+    /// Speedup of this run over a baseline run of the same workload.
+    pub fn speedup_over(&self, base: &RunReport) -> f64 {
+        debug_assert_eq!(self.macs, base.macs, "speedup needs identical workloads");
+        base.stats.cycles as f64 / self.stats.cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_math() {
+        let mut s = Stats::default();
+        s.cycles = 200;
+        s.add_busy(Unit::Mfpu, 150);
+        assert!((s.utilization(Unit::Mfpu) - 0.75).abs() < 1e-12);
+        assert_eq!(s.insts(Unit::Mfpu), 1);
+        assert_eq!(s.utilization(Unit::Valu), 0.0);
+    }
+
+    #[test]
+    fn ops_per_cycle_counts_mac_as_two() {
+        let mut s = Stats::default();
+        s.cycles = 100;
+        let r = RunReport { stats: s, macs: 400, label: "x".into() };
+        assert!((r.ops_per_cycle() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_is_cycle_ratio() {
+        let mk = |cycles| RunReport {
+            stats: Stats { cycles, ..Default::default() },
+            macs: 10,
+            label: String::new(),
+        };
+        assert!((mk(50).speedup_over(&mk(100)) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,128 @@
+//! The vector register file: 32 architectural registers of VLEN bits,
+//! stored as raw bytes (exactly like the banked SRAM slices of an Ara
+//! lane, minus the banking — the timing model accounts for bandwidth).
+
+use crate::isa::Sew;
+
+#[derive(Debug, Clone)]
+pub struct Vrf {
+    bytes: Vec<u8>,
+    vlenb: u32,
+}
+
+impl Vrf {
+    pub fn new(vlen_bits: u32) -> Vrf {
+        assert!(vlen_bits % 64 == 0, "VLEN must be a multiple of 64");
+        Vrf { bytes: vec![0; (vlen_bits / 8 * 32) as usize], vlenb: vlen_bits / 8 }
+    }
+
+    /// VLEN in bytes.
+    pub fn vlenb(&self) -> u32 {
+        self.vlenb
+    }
+
+    #[inline]
+    fn base(&self, v: u8) -> usize {
+        v as usize * self.vlenb as usize
+    }
+
+    /// Read element `i` of register group starting at `v` (flows across
+    /// register boundaries like an LMUL group does), zero-extended.
+    #[inline]
+    pub fn get(&self, v: u8, i: u32, sew: Sew) -> u64 {
+        let eb = sew.bytes() as usize;
+        let off = self.base(v) + i as usize * eb;
+        debug_assert!(off + eb <= self.bytes.len(), "VRF read past v31");
+        let mut b = [0u8; 8];
+        b[..eb].copy_from_slice(&self.bytes[off..off + eb]);
+        u64::from_le_bytes(b)
+    }
+
+    /// Write element `i` of register group `v` (truncating to SEW).
+    #[inline]
+    pub fn set(&mut self, v: u8, i: u32, sew: Sew, val: u64) {
+        let eb = sew.bytes() as usize;
+        let off = self.base(v) + i as usize * eb;
+        debug_assert!(off + eb <= self.bytes.len(), "VRF write past v31");
+        self.bytes[off..off + eb].copy_from_slice(&val.to_le_bytes()[..eb]);
+    }
+
+    /// Raw byte view of a register group of `regs` registers (hot-path
+    /// bulk ops: loads/stores/moves).
+    pub fn slice(&self, v: u8, len: usize) -> &[u8] {
+        &self.bytes[self.base(v)..self.base(v) + len]
+    }
+
+    pub fn slice_mut(&mut self, v: u8, len: usize) -> &mut [u8] {
+        let b = self.base(v);
+        &mut self.bytes[b..b + len]
+    }
+
+    /// Non-panicking split borrow: `None` when the byte ranges overlap.
+    pub fn try_src_dst(&mut self, src: u8, dst: u8, len: usize) -> Option<(&[u8], &mut [u8])> {
+        let (s, d) = (self.base(src), self.base(dst));
+        if !(s + len <= d || d + len <= s) {
+            return None;
+        }
+        Some(self.src_dst(src, dst, len))
+    }
+
+    /// Split-borrow two distinct register groups (src, dst) for bulk
+    /// copies without allocation.  Panics if the groups overlap.
+    pub fn src_dst(&mut self, src: u8, dst: u8, len: usize) -> (&[u8], &mut [u8]) {
+        let (s, d) = (self.base(src), self.base(dst));
+        assert!(s + len <= d || d + len <= s, "overlapping register groups");
+        if s < d {
+            let (a, b) = self.bytes.split_at_mut(d);
+            (&a[s..s + len], &mut b[..len])
+        } else {
+            let (a, b) = self.bytes.split_at_mut(s);
+            (&b[..len], &mut a[d..d + len])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_roundtrip_across_sews() {
+        let mut vrf = Vrf::new(4096);
+        for sew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+            vrf.set(4, 3, sew, 0xAB);
+            assert_eq!(vrf.get(4, 3, sew), 0xAB);
+        }
+    }
+
+    #[test]
+    fn truncates_to_sew() {
+        let mut vrf = Vrf::new(4096);
+        vrf.set(0, 0, Sew::E8, 0x1FF);
+        assert_eq!(vrf.get(0, 0, Sew::E8), 0xFF);
+    }
+
+    #[test]
+    fn group_flows_across_register_boundary() {
+        // element VLEN/SEW of a group lands in the next register
+        let mut vrf = Vrf::new(256); // 32B per reg => 16 e16 elements
+        vrf.set(2, 16, Sew::E16, 0x1234); // first element of v3
+        assert_eq!(vrf.get(3, 0, Sew::E16), 0x1234);
+    }
+
+    #[test]
+    fn split_borrow_disjoint() {
+        let mut vrf = Vrf::new(256);
+        vrf.set(1, 0, Sew::E8, 7);
+        let (s, d) = vrf.src_dst(1, 5, 32);
+        assert_eq!(s[0], 7);
+        assert_eq!(d.len(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping")]
+    fn split_borrow_overlap_panics() {
+        let mut vrf = Vrf::new(256);
+        let _ = vrf.src_dst(1, 2, 64); // 2 regs each, overlapping
+    }
+}

@@ -1,0 +1,138 @@
+//! proptest-lite: a tiny deterministic property-testing harness.
+//!
+//! The vendored crate set has no `proptest`/`quickcheck`, so invariants
+//! are checked with this ~60-line xorshift-based runner: deterministic
+//! seeds (failures are reproducible by construction), a `runs(n)` knob,
+//! and generator helpers for the value shapes the tests need.  No
+//! shrinking — cases are kept small enough to debug directly.
+
+/// xorshift64* PRNG — deterministic, fast, good enough for test-case
+/// generation (NOT for cryptography).
+#[derive(Debug, Clone)]
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform i64 in [lo, hi] inclusive.
+    pub fn irange(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// f32 uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// A vec of `len` values each uniform in [0, bound).
+    pub fn vec_below(&mut self, len: usize, bound: u64) -> Vec<u64> {
+        (0..len).map(|_| self.below(bound)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Property runner: `Prop::new(seed).runs(200).check(|g| { ... })`.
+pub struct Prop {
+    seed: u64,
+    runs: u32,
+}
+
+impl Prop {
+    pub fn new(seed: u64) -> Prop {
+        Prop { seed, runs: 100 }
+    }
+
+    pub fn runs(mut self, n: u32) -> Prop {
+        self.runs = n;
+        self
+    }
+
+    /// Run the property across `runs` deterministic cases.  A panic in
+    /// the closure reports the case number and seed so the failure can
+    /// be re-run in isolation.
+    pub fn check<F: FnMut(&mut Gen)>(self, mut f: F) {
+        for case in 0..self.runs {
+            let seed = self.seed.wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1));
+            let mut g = Gen::new(seed);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+            if let Err(e) = r {
+                eprintln!("property failed at case {case} (gen seed {seed:#x})");
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let a: Vec<u64> = (0..10).map(|_| 0).scan(Gen::new(42), |g, _| Some(g.next_u64())).collect();
+        let b: Vec<u64> = (0..10).map(|_| 0).scan(Gen::new(42), |g, _| Some(g.next_u64())).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut g = Gen::new(7);
+        for _ in 0..1000 {
+            assert!(g.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut g = Gen::new(9);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2000 {
+            let v = g.range(3, 6);
+            assert!((3..=6).contains(&v));
+            saw_lo |= v == 3;
+            saw_hi |= v == 6;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn f32_unit_interval() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let v = g.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! ULPPACK P1 packing with k=2 operands per container, and the
+//! overflow-free-region calculus that decides which (W, A) precision
+//! pairs run where — the analytical heart of the paper (mirrors
+//! `python/compile/kernels/ref.py`; the two are kept in lock-step by
+//! the cross-layer tests).
+
+pub mod pack;
+pub mod quantize;
+pub mod region;
+
+pub use pack::{pack_activations, pack_weights, unpack_container};
+pub use quantize::{act_level_max, weight_level_max, Quantizer};
+pub use region::{Container, Plan, RegionMode};

@@ -1,0 +1,112 @@
+//! Host-side ULPPACK P1 packing (k=2) — the functional reference for
+//! the runtime vector packing code in `kernels::pack_rt`, and the
+//! loader used to seed weight containers.
+//!
+//! Layouts match `ref.py`:
+//!   activations: `packed[c] = lv[2c]   | lv[2c+1] << S`
+//!   weights:     `packed[c] = lv[2c+1] | lv[2c]   << S`   (swapped)
+
+use super::region::Container;
+
+/// Pack activation levels pairwise along the channel axis.
+/// `levels` is (C, H*W) row-major flattened per channel; returns
+/// (C/2, H*W) containers.
+pub fn pack_activations(levels: &[Vec<u64>], c: Container) -> Vec<Vec<u64>> {
+    assert!(levels.len() % 2 == 0, "channel count must be even");
+    let s = c.shift();
+    let mask = (1u64 << c.bits()) - 1;
+    levels
+        .chunks(2)
+        .map(|pair| {
+            pair[0]
+                .iter()
+                .zip(&pair[1])
+                .map(|(&lo, &hi)| (lo | (hi << s)) & mask)
+                .collect()
+        })
+        .collect()
+}
+
+/// Pack weight levels pairwise along the in-channel axis with swapped
+/// halves. `levels[o][c]` is the (Fh*Fw)-flattened filter; returns
+/// `[o][c/2]` containers.
+pub fn pack_weights(levels: &[Vec<Vec<u64>>], c: Container) -> Vec<Vec<Vec<u64>>> {
+    let s = c.shift();
+    let mask = (1u64 << c.bits()) - 1;
+    levels
+        .iter()
+        .map(|per_out| {
+            assert!(per_out.len() % 2 == 0, "in-channel count must be even");
+            per_out
+                .chunks(2)
+                .map(|pair| {
+                    pair[1]
+                        .iter()
+                        .zip(&pair[0])
+                        .map(|(&lo, &hi)| (lo | (hi << s)) & mask)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Split a container back into (low, high) subfields.
+pub fn unpack_container(v: u64, c: Container) -> (u64, u64) {
+    let s = c.shift();
+    let fmask = (1u64 << s) - 1;
+    (v & fmask, (v >> s) & fmask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn activation_packing_layout() {
+        let levels = vec![vec![1, 2], vec![3, 4]];
+        let p = pack_activations(&levels, Container::Lp);
+        assert_eq!(p, vec![vec![1 | (3 << 8), 2 | (4 << 8)]]);
+    }
+
+    #[test]
+    fn weight_packing_is_swapped() {
+        let levels = vec![vec![vec![1], vec![2]]]; // o=0, c0=1, c1=2
+        let p = pack_weights(&levels, Container::Lp);
+        assert_eq!(p, vec![vec![vec![2 | (1 << 8)]]]);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        Prop::new(0x9A5).runs(300).check(|g| {
+            let c = *g.pick(&[Container::Ulp, Container::Lp]);
+            let s = c.shift();
+            let lo = g.below(1 << s);
+            let hi = g.below(1 << s);
+            let packed = lo | (hi << s);
+            assert_eq!(unpack_container(packed, c), (lo, hi));
+        });
+    }
+
+    #[test]
+    fn packed_multiply_computes_dot_in_high_field() {
+        // the defining identity: (a0 + a1<<S) * (w1 + w0<<S) mod 2^B
+        //   = (a0w0 + a1w1) << S  +  a0w1      (when fields fit)
+        Prop::new(0x1D0).runs(500).check(|g| {
+            let c = *g.pick(&[Container::Ulp, Container::Lp]);
+            let s = c.shift();
+            let bound = 1u64 << (s / 2); // keep products within fields
+            let (a0, a1, w0, w1) =
+                (g.below(bound), g.below(bound), g.below(bound), g.below(bound));
+            if a0 * w0 + a1 * w1 >= (1 << s) || a0 * w1 >= (1 << s) {
+                return;
+            }
+            let ac = a0 | (a1 << s);
+            let wc = w1 | (w0 << s);
+            let prod = (ac.wrapping_mul(wc)) & ((1u64 << c.bits()) - 1);
+            assert_eq!(prod >> s, a0 * w0 + a1 * w1);
+            assert_eq!(prod & ((1 << s) - 1), a0 * w1);
+        });
+    }
+}

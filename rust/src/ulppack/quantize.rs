@@ -1,0 +1,121 @@
+//! Level representations and the float->level quantizers, matching
+//! `python/compile/kernels/quant.py` bit-for-bit on the level domain.
+
+/// Max unsigned activation level at `a_bits`: `2^A - 1`.
+pub fn act_level_max(a_bits: u32) -> u64 {
+    (1u64 << a_bits) - 1
+}
+
+/// Max zero-point-offset weight level.  Symmetric weights quantize to
+/// `[-zp, +zp]` with `zp = 2^(W-1) - 1`, stored as `[0, 2*zp]`; binary
+/// (W=1) weights are `{0, 1}`.
+pub fn weight_level_max(w_bits: u32) -> u64 {
+    if w_bits == 1 {
+        1
+    } else {
+        2 * ((1u64 << (w_bits - 1)) - 1)
+    }
+}
+
+/// Weight zero point (the level that represents 0.0).
+pub fn weight_zero_point(w_bits: u32) -> u64 {
+    if w_bits == 1 {
+        0
+    } else {
+        (1u64 << (w_bits - 1)) - 1
+    }
+}
+
+/// Symmetric uniform quantizer (scale fixed at construction).
+#[derive(Debug, Clone, Copy)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub scale: f32,
+}
+
+impl Quantizer {
+    /// Activation quantizer whose top level hits `hi`.
+    pub fn for_activations(bits: u32, hi: f32) -> Quantizer {
+        Quantizer { bits, scale: hi.max(1e-5) / act_level_max(bits) as f32 }
+    }
+
+    /// Weight quantizer whose max magnitude hits the top magnitude.
+    pub fn for_weights(bits: u32, max_abs: f32) -> Quantizer {
+        let zp = weight_zero_point(bits).max(1);
+        Quantizer { bits, scale: max_abs.max(1e-5) / zp as f32 }
+    }
+
+    /// Unsigned activation level: `clip(round(x/s), 0, 2^b - 1)`.
+    pub fn act_level(&self, x: f32) -> u64 {
+        let q = (x / self.scale).round();
+        (q.max(0.0) as u64).min(act_level_max(self.bits))
+    }
+
+    /// Zero-point-offset weight level: `clip(round(w/s) + zp, 0, 2zp)`.
+    pub fn weight_level(&self, w: f32) -> u64 {
+        let zp = weight_zero_point(self.bits) as f32;
+        let q = (w / self.scale).round() + zp;
+        (q.max(0.0) as u64).min(weight_level_max(self.bits))
+    }
+
+    /// Dequantize an activation level.
+    pub fn act_value(&self, level: u64) -> f32 {
+        level as f32 * self.scale
+    }
+
+    /// Dequantize a weight level.
+    pub fn weight_value(&self, level: u64) -> f32 {
+        (level as f32 - weight_zero_point(self.bits) as f32) * self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Prop;
+
+    #[test]
+    fn level_maxes() {
+        assert_eq!(act_level_max(1), 1);
+        assert_eq!(act_level_max(4), 15);
+        assert_eq!(weight_level_max(1), 1);
+        assert_eq!(weight_level_max(2), 2);
+        assert_eq!(weight_level_max(4), 14);
+        assert_eq!(weight_zero_point(4), 7);
+        assert_eq!(weight_zero_point(1), 0);
+    }
+
+    #[test]
+    fn act_levels_bounded_and_monotone() {
+        Prop::new(0xACC).runs(200).check(|g| {
+            let bits = g.range(1, 8) as u32;
+            let q = Quantizer::for_activations(bits, 1.0 + g.f32());
+            let a = g.f32() * 3.0 - 0.5;
+            let b = a + g.f32();
+            let (la, lb) = (q.act_level(a), q.act_level(b));
+            assert!(la <= act_level_max(bits));
+            assert!(lb >= la, "quantizer must be monotone");
+        });
+    }
+
+    #[test]
+    fn weight_roundtrip_error_within_half_scale() {
+        Prop::new(0xBEE).runs(200).check(|g| {
+            let bits = g.range(2, 6) as u32;
+            let q = Quantizer::for_weights(bits, 1.0);
+            let w = g.f32() * 2.0 - 1.0; // in [-1, 1]
+            let lv = q.weight_level(w);
+            let back = q.weight_value(lv);
+            assert!((back - w).abs() <= q.scale / 2.0 + 1e-6, "w={w} back={back}");
+        });
+    }
+
+    #[test]
+    fn zero_maps_to_zero_point() {
+        for bits in 2..=5 {
+            let q = Quantizer::for_weights(bits, 1.0);
+            assert_eq!(q.weight_level(0.0), weight_zero_point(bits));
+            assert_eq!(q.weight_value(weight_zero_point(bits)), 0.0);
+        }
+    }
+}

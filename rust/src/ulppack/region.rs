@@ -1,0 +1,282 @@
+//! The overflow-free region calculus.
+//!
+//! Terminology (see `ref.py` for the algebra): packing two operands per
+//! B-bit container with subfields of S = B/2 bits, one modular multiply
+//! yields `dot * 2^S + junk` where `dot = a0*w0 + a1*w1` and
+//! `junk = a0*w1`.  Three independent capacity limits exist:
+//!
+//! 1. **dot field** (per multiply): `dot <= 2^S - 1` — or the shifted
+//!    contribution is corrupted.  This bounds which (W, A) pairs a
+//!    container admits at all.
+//! 2. **junk field** (native scheme only): junk accumulates for
+//!    `k_local` issues and must stay below 2^S; same for the
+//!    accumulated dot.  `vmacsr` eliminates this limit — the paper's
+//!    contribution.
+//! 3. **accumulator**: the shifted contributions accumulate in a B-bit
+//!    register and must be spilled to a wider accumulator every
+//!    `spill_every` issues.
+//!
+//! Activations are unsigned levels `[0, 2^A - 1]`; weights are
+//! zero-point-offset unsigned levels `[0, 2*(2^(W-1)-1)]` (binary W=1
+//! is special-cased to `{0, 1}`), matching the QNN quantizers.
+
+use super::quantize::{act_level_max, weight_level_max};
+
+/// Container width: LP = 16-bit, ULP = 8-bit (the paper's two ranges).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Container {
+    Ulp,
+    Lp,
+}
+
+impl Container {
+    pub fn bits(self) -> u32 {
+        match self {
+            Container::Ulp => 8,
+            Container::Lp => 16,
+        }
+    }
+
+    pub fn shift(self) -> u32 {
+        self.bits() / 2
+    }
+
+    pub fn bytes(self) -> u32 {
+        self.bits() / 8
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Container::Ulp => "ULP",
+            Container::Lp => "LP",
+        }
+    }
+}
+
+/// Region-admission policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegionMode {
+    /// Worst-case-guaranteed: every input combination is exact.
+    Strict,
+    /// The paper's Fig. 5 operating region W+A <= S: typical quantized
+    /// tensors are exact; adversarial worst cases may overflow the dot
+    /// field (measured overflow rates are reported in EXPERIMENTS.md).
+    Paper,
+}
+
+/// Worst-case per-issue dot product `a0*w0 + a1*w1` for levels.
+pub fn dot_max(w_bits: u32, a_bits: u32) -> u64 {
+    2 * act_level_max(a_bits) * weight_level_max(w_bits)
+}
+
+/// Worst-case per-issue junk term `a0*w1`.
+pub fn junk_max(w_bits: u32, a_bits: u32) -> u64 {
+    act_level_max(a_bits) * weight_level_max(w_bits)
+}
+
+/// Does (W, A) fit this container's dot field under `mode`?
+pub fn admits(w_bits: u32, a_bits: u32, c: Container, mode: RegionMode) -> bool {
+    match mode {
+        RegionMode::Strict => dot_max(w_bits, a_bits) <= (1 << c.shift()) - 1,
+        RegionMode::Paper => w_bits + a_bits <= c.shift(),
+    }
+}
+
+/// How many raw (unshifted) products the native scheme may locally
+/// accumulate before a subfield can overflow; 0 = native impossible.
+pub fn native_k_local(w_bits: u32, a_bits: u32, c: Container) -> u64 {
+    let field = (1u64 << c.shift()) - 1;
+    let d = dot_max(w_bits, a_bits);
+    let j = junk_max(w_bits, a_bits);
+    if d == 0 {
+        return field;
+    }
+    if d > field {
+        return 0;
+    }
+    (field / d).min(field / j.max(1))
+}
+
+/// After how many `vmacsr` issues must the B-bit accumulator spill to a
+/// wide accumulator (worst case)?
+pub fn vmacsr_spill_every(w_bits: u32, a_bits: u32, c: Container) -> u64 {
+    let cap = (1u64 << c.bits()) - 1;
+    let d = dot_max(w_bits, a_bits).max(1);
+    (cap / d).max(1)
+}
+
+/// An execution plan for one packed conv2d at (W, A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Plan {
+    pub container: Container,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub mode: RegionMode,
+    /// vmacsr: spill cadence in issues (u64::MAX = never needed given
+    /// `total_issues`); native: the local-accumulation budget.
+    pub spill_every: u64,
+    /// Whether exactness vs the plain integer conv is guaranteed for
+    /// arbitrary inputs (strict admission) or data-dependent (paper).
+    pub exact: bool,
+}
+
+/// Relative time per packed issue for a container with a drain of
+/// `drain_instrs` extra ops every `cadence` issues: instruction time is
+/// proportional to the container's byte width, and each drain op costs
+/// roughly one issue's worth of (chained, but RAW-serialised) ALU time.
+fn issue_cost(c: Container, cadence: u64, drain_instrs: u64) -> f64 {
+    let per_issue = 1.0 + drain_instrs as f64 / cadence.max(1) as f64;
+    per_issue * c.bytes() as f64
+}
+
+/// Choose the best container for a `vmacsr` conv at (W, A): the one
+/// with the lowest per-issue cost (ULP moves half the bytes but may
+/// spill more often).
+pub fn plan_vmacsr(
+    w_bits: u32,
+    a_bits: u32,
+    total_issues: u64,
+    mode: RegionMode,
+) -> Option<Plan> {
+    let mut best: Option<(f64, Plan)> = None;
+    for c in [Container::Ulp, Container::Lp] {
+        if !admits(w_bits, a_bits, c, mode) {
+            continue;
+        }
+        let spill = vmacsr_spill_every(w_bits, a_bits, c);
+        let needed = spill < total_issues;
+        let cost = issue_cost(c, spill, if needed { 2 } else { 0 });
+        let plan = Plan {
+            container: c,
+            w_bits,
+            a_bits,
+            mode,
+            spill_every: if needed { spill } else { u64::MAX },
+            exact: admits(w_bits, a_bits, c, RegionMode::Strict),
+        };
+        if best.as_ref().is_none_or(|(bc, _)| cost < *bc) {
+            best = Some((cost, plan));
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// Choose the container for a native (no-vmacsr) ULPPACK conv by the
+/// same cost model (the repair sequence is 3 instructions).  The native
+/// scheme cannot tolerate junk-field overflow at all, so it is always
+/// strict.
+pub fn plan_native(w_bits: u32, a_bits: u32) -> Option<Plan> {
+    let mut best: Option<(f64, Plan)> = None;
+    for c in [Container::Ulp, Container::Lp] {
+        let k = native_k_local(w_bits, a_bits, c);
+        if k == 0 {
+            continue;
+        }
+        let cost = issue_cost(c, k, 3);
+        let plan = Plan {
+            container: c,
+            w_bits,
+            a_bits,
+            mode: RegionMode::Strict,
+            spill_every: k,
+            exact: true,
+        };
+        if best.as_ref().is_none_or(|(bc, _)| cost < *bc) {
+            best = Some((cost, plan));
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_max_uses_symmetric_weight_levels() {
+        // W2: levels [0,2] (zp=1)  A2: [0,3]
+        assert_eq!(dot_max(2, 2), 2 * 3 * 2);
+        // W1 is binary {0,1}
+        assert_eq!(dot_max(1, 1), 2);
+        // W4: [0,14], A4: [0,15]
+        assert_eq!(dot_max(4, 4), 2 * 15 * 14);
+    }
+
+    #[test]
+    fn paper_headline_points_admitted_in_paper_mode() {
+        assert!(admits(2, 2, Container::Ulp, RegionMode::Paper)); // 3.2x point
+        assert!(admits(4, 4, Container::Lp, RegionMode::Paper)); // 1.7x point
+        assert!(!admits(4, 4, Container::Lp, RegionMode::Strict)); // 420 > 255
+    }
+
+    #[test]
+    fn w2a2_is_strict_on_ulp_thanks_to_symmetric_weights() {
+        // dot_max = 12 <= 15: the zero-point representation buys W2A2
+        // strict exactness on 8-bit containers
+        assert!(admits(2, 2, Container::Ulp, RegionMode::Strict));
+        assert!(!admits(2, 3, Container::Ulp, RegionMode::Strict));
+    }
+
+    #[test]
+    fn native_k_local_w1a1_matches_paper_ballpark() {
+        // paper: ~8 local accumulations at 1-bit on 8-bit containers
+        assert_eq!(native_k_local(1, 1, Container::Ulp), 7);
+    }
+
+    #[test]
+    fn native_impossible_where_dot_field_overflows() {
+        assert_eq!(native_k_local(4, 4, Container::Lp), 0);
+        assert!(native_k_local(3, 3, Container::Lp) >= 1);
+    }
+
+    #[test]
+    fn vmacsr_spill_cadence() {
+        // W2A2 @ LP: dot_max 12 -> 65535/12 = 5461 issues before spill
+        assert_eq!(vmacsr_spill_every(2, 2, Container::Lp), 5461);
+        // W2A2 @ ULP: 255/12 = 21
+        assert_eq!(vmacsr_spill_every(2, 2, Container::Ulp), 21);
+    }
+
+    #[test]
+    fn plan_vmacsr_prefers_ulp() {
+        let p = plan_vmacsr(2, 2, 784, RegionMode::Paper).unwrap();
+        assert_eq!(p.container, Container::Ulp);
+        assert!(p.exact); // W2A2 is strict on ULP
+        let p = plan_vmacsr(4, 4, 784, RegionMode::Paper).unwrap();
+        assert_eq!(p.container, Container::Lp);
+        assert!(!p.exact);
+        assert!(plan_vmacsr(4, 4, 784, RegionMode::Strict).is_none());
+    }
+
+    #[test]
+    fn plan_vmacsr_spill_infinite_when_not_needed() {
+        let p = plan_vmacsr(2, 2, 784, RegionMode::Strict).unwrap();
+        // ULP spills every 21 < 784 issues
+        assert_eq!(p.container, Container::Ulp);
+        assert_eq!(p.spill_every, 21);
+        let p = plan_vmacsr(3, 3, 784, RegionMode::Strict).unwrap();
+        // LP: dot 84 -> 65535/84 = 780 < 784 issues: one spill
+        assert_eq!(p.container, Container::Lp);
+        assert_eq!(p.spill_every, 780);
+        let p = plan_vmacsr(3, 3, 700, RegionMode::Strict).unwrap();
+        assert_eq!(p.spill_every, u64::MAX);
+    }
+
+    #[test]
+    fn plan_native_always_strict() {
+        for w in 1..=4u32 {
+            for a in 1..=4u32 {
+                if let Some(p) = plan_native(w, a) {
+                    assert!(p.exact);
+                    assert!(p.spill_every >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_native_w4a4_not_runnable() {
+        // dot_max(4,4) = 420 > 255: no container admits it natively
+        assert_eq!(plan_native(4, 4), None);
+    }
+}

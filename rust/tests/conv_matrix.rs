@@ -1,0 +1,178 @@
+//! Integration: the conv2d equivalence matrix across variants,
+//! processors, shapes and precisions — every packed implementation must
+//! agree with the plain integer convolution wherever the calculus says
+//! it is exact, and all variants must agree with *each other* through
+//! the shared oracle.  No artifacts needed.
+
+use sparq::arch::ProcessorConfig;
+use sparq::kernels::workload::{golden_exact, golden_fp32, golden_mod};
+use sparq::kernels::{run_conv, ConvDims, ConvVariant, Workload};
+use sparq::testutil::Prop;
+use sparq::ulppack::region;
+use sparq::ulppack::RegionMode;
+
+fn dims_cases() -> Vec<ConvDims> {
+    vec![
+        ConvDims { c: 2, h: 4, w: 6, co: 1, fh: 1, fw: 1 },
+        ConvDims { c: 4, h: 8, w: 9, co: 3, fh: 3, fw: 3 },
+        ConvDims { c: 8, h: 12, w: 300, co: 2, fh: 5, fw: 5 }, // strip-mined
+        ConvDims { c: 16, h: 13, w: 13, co: 2, fh: 7, fw: 7 },
+        ConvDims { c: 6, h: 9, w: 8, co: 2, fh: 3, fw: 5 }, // non-square kernel
+    ]
+}
+
+#[test]
+fn int16_matches_oracle_on_all_shapes() {
+    for d in dims_cases() {
+        let wl = Workload::random(d, 6, 6, 0xD1);
+        let run = run_conv(&ProcessorConfig::sparq(), &wl, ConvVariant::Int16).unwrap();
+        assert_eq!(
+            run.out.read_ints(&run.machine.mem).unwrap(),
+            golden_mod(&wl, 16),
+            "{d:?}"
+        );
+    }
+}
+
+#[test]
+fn fp32_matches_ordered_golden_on_all_shapes() {
+    for d in dims_cases() {
+        let wl = Workload::random(d, 4, 4, 0xF3);
+        let run = run_conv(&ProcessorConfig::ara(), &wl, ConvVariant::Fp32).unwrap();
+        assert_eq!(run.out.read_f32(&run.machine.mem).unwrap(), golden_fp32(&wl), "{d:?}");
+    }
+}
+
+#[test]
+fn every_strict_precision_exact_on_every_shape() {
+    let sparq = ProcessorConfig::sparq();
+    let ara = ProcessorConfig::ara();
+    for d in dims_cases() {
+        for w in 1..=4u32 {
+            for a in 1..=4u32 {
+                let wl = Workload::random(d, w, a, (w * 31 + a) as u64);
+                let oracle = golden_exact(&wl);
+                if region::plan_vmacsr(w, a, d.issues_per_output(), RegionMode::Strict).is_some() {
+                    let run = run_conv(
+                        &sparq,
+                        &wl,
+                        ConvVariant::Vmacsr { w_bits: w, a_bits: a, mode: RegionMode::Strict },
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        run.out.read_ints(&run.machine.mem).unwrap(),
+                        oracle,
+                        "vmacsr W{w}A{a} {d:?}"
+                    );
+                }
+                if region::plan_native(w, a).is_some() {
+                    let run = run_conv(&ara, &wl, ConvVariant::Native { w_bits: w, a_bits: a })
+                        .unwrap();
+                    assert_eq!(
+                        run.out.read_ints(&run.machine.mem).unwrap(),
+                        oracle,
+                        "native W{w}A{a} {d:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn property_offline_and_runtime_packing_agree() {
+    use sparq::kernels::{run_conv_opts, EngineOpts};
+    Prop::new(0xB00).runs(6).check(|g| {
+        let f = *g.pick(&[1u32, 3, 5]);
+        let d = ConvDims {
+            c: 2 * g.range(1, 4) as u32,
+            h: f + g.range(2, 6) as u32,
+            w: f + g.range(2, 20) as u32,
+            co: g.range(1, 3) as u32,
+            fh: f,
+            fw: f,
+        };
+        let wl = Workload::random(d, 2, 2, g.next_u64());
+        let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict };
+        let cfg = ProcessorConfig::sparq();
+        let rt = run_conv(&cfg, &wl, v).unwrap();
+        let off = run_conv_opts(
+            &cfg,
+            &wl,
+            v,
+            EngineOpts { runtime_act_pack: false, runtime_weight_pack: false },
+        )
+        .unwrap();
+        assert_eq!(
+            rt.out.read_ints(&rt.machine.mem).unwrap(),
+            off.out.read_ints(&off.machine.mem).unwrap(),
+            "{d:?}"
+        );
+        // and offline is never slower
+        assert!(off.report.stats.cycles <= rt.report.stats.cycles);
+    });
+}
+
+#[test]
+fn property_lane_count_never_changes_results() {
+    Prop::new(0x1A) .runs(4).check(|g| {
+        let d = ConvDims { c: 4, h: 9, w: 40, co: 2, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 2, 2, g.next_u64());
+        let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict };
+        let mut outs = Vec::new();
+        let mut cycles = Vec::new();
+        for lanes in [1u32, 4, 8] {
+            let cfg = ProcessorConfig::sparq().with_lanes(lanes);
+            let run = run_conv(&cfg, &wl, v).unwrap();
+            outs.push(run.out.read_ints(&run.machine.mem).unwrap());
+            cycles.push(run.report.stats.cycles);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+        // more lanes, fewer (or equal) cycles
+        assert!(cycles[0] >= cycles[1] && cycles[1] >= cycles[2], "{cycles:?}");
+    });
+}
+
+#[test]
+fn speedup_grows_monotonically_with_packing_headroom() {
+    // fewer bits -> more headroom -> faster (vmacsr, same dims)
+    let d = ConvDims { c: 16, h: 16, w: 70, co: 2, fh: 7, fw: 7 };
+    let sparq = ProcessorConfig::sparq();
+    let mut last = u64::MAX;
+    for (w, a) in [(4u32, 4u32), (3, 3), (2, 2)] {
+        let wl = Workload::random(d, w, a, 5);
+        let run = run_conv(
+            &sparq,
+            &wl,
+            ConvVariant::Vmacsr { w_bits: w, a_bits: a, mode: RegionMode::Paper },
+        )
+        .unwrap();
+        assert!(
+            run.report.stats.cycles <= last,
+            "W{w}A{a} slower than higher precision"
+        );
+        last = run.report.stats.cycles;
+    }
+}
+
+#[test]
+fn adversarial_all_max_data_still_exact_in_strict_region() {
+    let d = ConvDims { c: 8, h: 10, w: 12, co: 2, fh: 3, fw: 3 };
+    let mut wl = Workload::random(d, 2, 2, 1);
+    for row in wl.act.iter_mut() {
+        row.iter_mut().for_each(|v| *v = 3); // max A2 level
+    }
+    for o in wl.wgt.iter_mut() {
+        for c in o.iter_mut() {
+            c.iter_mut().for_each(|v| *v = 2); // max W2 level
+        }
+    }
+    let run = run_conv(
+        &ProcessorConfig::sparq(),
+        &wl,
+        ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict },
+    )
+    .unwrap();
+    assert_eq!(run.out.read_ints(&run.machine.mem).unwrap(), golden_exact(&wl));
+}

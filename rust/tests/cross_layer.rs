@@ -1,0 +1,138 @@
+//! Cross-layer integration: the same packed convolution computed three
+//! ways must agree bit-for-bit —
+//!
+//!   (a) the AOT pallas kernel (python-authored, PJRT-executed in rust),
+//!   (b) the rust Sparq simulator running Algorithm 1,
+//!   (c) the host golden model.
+//!
+//! This is the test that proves L1, L3 and the oracle implement the
+//! same ULPPACK/vmacsr arithmetic.  Skips (with a message) when
+//! `make artifacts` hasn't been run.
+
+use sparq::arch::ProcessorConfig;
+use sparq::kernels::workload::golden_exact;
+use sparq::kernels::{run_conv, ConvDims, ConvVariant, Workload};
+use sparq::runtime::{artifacts_dir, artifacts_present, Runtime, TestSet};
+use sparq::ulppack::RegionMode;
+
+/// The standalone kernel artifacts are fixed at (C=16, H=W=18, Co=8,
+/// F=3) — see `python/compile/aot.py`.
+const C: usize = 16;
+const HW: usize = 18;
+const CO: usize = 8;
+const F: usize = 3;
+
+fn artifact_inputs(wl: &Workload) -> (Vec<i32>, Vec<i32>) {
+    let x: Vec<i32> = wl.act.iter().flat_map(|r| r.iter().map(|&v| v as i32)).collect();
+    let w: Vec<i32> = wl
+        .wgt
+        .iter()
+        .flat_map(|po| po.iter().flat_map(|f| f.iter().map(|&v| v as i32)))
+        .collect();
+    (x, w)
+}
+
+#[test]
+fn pallas_artifact_equals_simulator_equals_oracle() {
+    if !artifacts_present() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir()).expect("runtime");
+    let dims =
+        ConvDims { c: C as u32, h: HW as u32, w: HW as u32, co: CO as u32, fh: F as u32, fw: F as u32 };
+
+    for (name, w_bits, a_bits) in [("packed_conv2d_lp", 3u32, 3u32), ("packed_conv2d_ulp", 2, 2)] {
+        let wl = Workload::random(dims, w_bits, a_bits, 0xC0FFEE);
+        let (x, w) = artifact_inputs(&wl);
+
+        // (a) the AOT pallas kernel through PJRT
+        let got_pjrt = rt
+            .exec_i32(
+                name,
+                &[
+                    (&x, &[C as i64, HW as i64, HW as i64]),
+                    (&w, &[CO as i64, C as i64, F as i64, F as i64]),
+                ],
+            )
+            .expect(name);
+
+        // (b) the rust simulator running Algorithm 1 on Sparq
+        let run = run_conv(
+            &ProcessorConfig::sparq(),
+            &wl,
+            ConvVariant::Vmacsr { w_bits, a_bits, mode: RegionMode::Strict },
+        )
+        .expect("sim");
+        let got_sim = run.out.read_ints(&run.machine.mem).expect("read");
+
+        // (c) the oracle
+        let oracle = golden_exact(&wl);
+
+        let pjrt64: Vec<i64> = got_pjrt.iter().map(|&v| v as i64).collect();
+        assert_eq!(pjrt64, oracle, "{name}: pallas != oracle");
+        assert_eq!(got_sim, oracle, "{name}: simulator != oracle");
+    }
+}
+
+#[test]
+fn qnn_artifacts_all_load_and_predict() {
+    if !artifacts_present() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = Runtime::load(&dir).expect("runtime");
+    let ts = TestSet::load(dir.join("testset.bin")).expect("testset");
+    assert!(ts.n >= 256);
+    for name in ["qnn_fp32", "qnn_w4a4", "qnn_w3a3", "qnn_w2a2"] {
+        let art = rt.manifest.artifact(name).expect(name);
+        let batch = art.meta_u32("batch").unwrap() as usize;
+        let (data, real) = ts.batch(0, batch);
+        let logits = rt
+            .exec_f32(name, &[(&data, &[batch as i64, 1, 16, 16])])
+            .expect(name);
+        assert_eq!(logits.len(), batch * 4, "{name}");
+        // accuracy of the first batch must beat chance by a wide margin
+        let mut correct = 0;
+        for i in 0..real {
+            let row = &logits[i * 4..(i + 1) * 4];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += (pred == ts.labels[i] as usize) as usize;
+        }
+        assert!(
+            correct as f64 / real as f64 > 0.7,
+            "{name}: first-batch accuracy {correct}/{real}"
+        );
+    }
+}
+
+#[test]
+fn manifest_metadata_matches_rust_graph() {
+    if !artifacts_present() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir()).expect("runtime");
+    // container selection in the manifest must agree with the rust
+    // region calculus (paper mapping: W+A<=4 -> ULP, else LP)
+    for (name, w, a) in [("qnn_w4a4", 4u32, 4u32), ("qnn_w3a3", 3, 3), ("qnn_w2a2", 2, 2)] {
+        let art = rt.manifest.artifact(name).expect(name);
+        let container = art.meta_u32("container").unwrap();
+        let expected = if w + a <= 4 { 8 } else { 16 };
+        assert_eq!(container, expected, "{name}");
+        assert_eq!(art.meta_u32("wbits"), Some(w));
+        assert_eq!(art.meta_u32("abits"), Some(a));
+    }
+    // graph shapes agree with the rust-side QnnGraph
+    let g = sparq::qnn::QnnGraph::sparq_cnn();
+    assert_eq!(g.input, (1, 16, 16));
+    let ts_meta = rt.manifest.datum("testset").expect("testset");
+    assert_eq!(ts_meta.meta_u32("h"), Some(16));
+    assert_eq!(ts_meta.meta_u32("classes"), Some(g.classes));
+}

@@ -1,0 +1,80 @@
+//! Integration: the serving coordinator end-to-end over the real PJRT
+//! executor — batched requests, accuracy, metrics, and failure modes.
+//! Skips when artifacts are missing.
+
+use sparq::config::ServeConfig;
+use sparq::coordinator::{Executor, PjrtExecutor, ServeError, Server};
+use sparq::runtime::{artifacts_dir, artifacts_present, TestSet};
+
+fn start_server(model: &'static str, cfg: ServeConfig) -> Server {
+    let dir = artifacts_dir();
+    Server::start(
+        Box::new(move || {
+            Ok(Box::new(PjrtExecutor::new(&dir, model)?) as Box<dyn Executor>)
+        }),
+        cfg,
+        42,
+    )
+    .expect("server")
+}
+
+#[test]
+fn serves_the_testset_accurately() {
+    if !artifacts_present() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let ts = TestSet::load(artifacts_dir().join("testset.bin")).expect("testset");
+    let server = start_server(
+        "qnn_w4a4",
+        ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 128 },
+    );
+    let n = 128.min(ts.n);
+    let mut pending = Vec::new();
+    for i in 0..n {
+        pending.push((i, server.submit(ts.image(i).to_vec()).expect("submit")));
+    }
+    let mut correct = 0usize;
+    for (i, rx) in pending {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.logits.len(), 4);
+        assert_eq!(r.sim_cycles, 42);
+        correct += (r.class == ts.labels[i] as usize) as usize;
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.9, "served accuracy {acc}");
+    let snap = server.shutdown();
+    assert_eq!(snap.completed as usize, n);
+    assert!(snap.mean_batch >= 1.0);
+}
+
+#[test]
+fn bad_model_name_fails_fast() {
+    if !artifacts_present() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let server = start_server("qnn_nonexistent", ServeConfig::default());
+    // the worker dies during init; requests must not hang forever
+    match server.submit(vec![0.0; 256]) {
+        Ok(rx) => {
+            // channel closes when the worker exits
+            let r = rx.recv_timeout(std::time::Duration::from_secs(30));
+            assert!(matches!(r, Err(_) | Ok(Err(ServeError::Worker(_)))));
+        }
+        Err(_) => {} // also acceptable: queue rejected
+    }
+    server.shutdown();
+}
+
+#[test]
+fn short_image_is_zero_padded_not_crashing() {
+    if !artifacts_present() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let server = start_server("qnn_w3a3", ServeConfig::default());
+    let r = server.infer(vec![0.5; 10]).expect("infer"); // 10 < 256 floats
+    assert_eq!(r.logits.len(), 4);
+    server.shutdown();
+}
