@@ -24,7 +24,7 @@ fn main() {
     println!("Algorithm 1 inner loop (Fh=3), as trace + machine code:\n");
     println!("{:<10} {:<44} {}", "word", "assembly", "decoded-back");
     for inst in &inner {
-        let word = encode(inst);
+        let word = encode(inst).expect("inner loop is fully encodable");
         let back = decode(word)
             .map(|i| disasm(&i))
             .unwrap_or_else(|e| format!("<{e}>"));
@@ -41,7 +41,7 @@ fn main() {
             VInst::OpVX { op: VOp::MacsrCfg, vd: 1, vs2: 2, rs1: 0 },
         ),
     ] {
-        let w = encode(&inst);
+        let w = encode(&inst).expect("fig-3 encodings exist");
         println!("  {w:#010x}  funct6={:06b}  {label}", w >> 26);
     }
 

@@ -54,7 +54,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // 4. what the custom instruction looks like on the wire
     use sparq::isa::{encode, VInst, VOp};
-    let word = encode(&VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 0 });
+    let word = encode(&VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 0 })?;
     println!(
         "\nvmacsr.vx v1, v2, a0  encodes as {word:#010x} (funct6 = 0b101110, the slot after vmacc)"
     );

@@ -12,27 +12,32 @@ mod common;
 
 use common::Bench;
 use sparq::arch::ProcessorConfig;
-use sparq::kernels::{run_conv, run_conv_opts, ConvDims, ConvVariant, EngineOpts, Workload};
+use sparq::kernels::{run_conv, run_conv_cached, ConvDims, ConvVariant, EngineOpts, Workload};
+use sparq::report::SweepCtx;
 use sparq::ulppack::RegionMode;
 
 fn main() {
     let b = Bench::new("ablations");
     let dims = ConvDims::fig4(false);
     let sparq = ProcessorConfig::sparq();
+    // one compile-once context across every section: the (sparq, W2A2)
+    // point recurs in sections 1 and 4 and compiles exactly once
+    let ctx = SweepCtx::new();
 
     // 1. packing: runtime vs offline
     b.section("packing ablation", || {
         let wl = Workload::random(dims, 2, 2, 5);
         let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
-        let rt = run_conv(&sparq, &wl, v).unwrap().report;
-        let off = run_conv_opts(
+        let rt = ctx.run(&sparq, &wl, v).unwrap();
+        let off = run_conv_cached(
+            &ctx.cache,
+            &ctx.pool,
             &sparq,
             &wl,
             v,
             EngineOpts { runtime_act_pack: false, runtime_weight_pack: false },
         )
-        .unwrap()
-        .report;
+        .unwrap();
         println!(
             "  runtime packing: {} cycles | offline: {} cycles | overhead {:.1}%",
             rt.stats.cycles,
@@ -47,7 +52,7 @@ fn main() {
             let cfg = ProcessorConfig::sparq().with_lanes(lanes);
             let wl = Workload::random(dims, 2, 2, 5);
             let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
-            let r = run_conv(&cfg, &wl, v).unwrap().report;
+            let r = ctx.run(&cfg, &wl, v).unwrap();
             println!(
                 "  {lanes} lane(s): {:>10} cycles, {:>6.2} ops/cycle",
                 r.stats.cycles,
@@ -83,8 +88,8 @@ fn main() {
         cfg.name = "ara+vmacsr".into();
         let wl = Workload::random(dims, 2, 2, 5);
         let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
-        let with_fpu = run_conv(&cfg, &wl, v).unwrap().report;
-        let without = run_conv(&sparq, &wl, v).unwrap().report;
+        let with_fpu = ctx.run(&cfg, &wl, v).unwrap();
+        let without = ctx.run(&sparq, &wl, v).unwrap();
         let pw = sparq::power::LaneReport::for_config(&cfg);
         let ps = sparq::power::LaneReport::for_config(&sparq);
         println!(
@@ -123,10 +128,9 @@ fn main() {
     // 5. admission-mode sensitivity at W4A4
     b.section("region mode at W4A4", || {
         let wl = Workload::random(dims, 4, 4, 5);
-        let paper =
-            run_conv(&sparq, &wl, ConvVariant::Vmacsr { w_bits: 4, a_bits: 4, mode: RegionMode::Paper })
-                .unwrap()
-                .report;
+        let paper = ctx
+            .run(&sparq, &wl, ConvVariant::Vmacsr { w_bits: 4, a_bits: 4, mode: RegionMode::Paper })
+            .unwrap();
         println!(
             "  paper-mode LP: {} cycles ({:.2} ops/cycle); strict mode refuses W4A4 (dot field 420 > 255)",
             paper.stats.cycles,
@@ -140,5 +144,10 @@ fn main() {
         assert!(strict.is_err());
     });
 
+    let cs = ctx.cache.stats();
+    println!(
+        "\nprogram cache across sections: {} compiles, {} hits (the shared W2A2 point compiled once)",
+        cs.misses, cs.hits
+    );
     b.finish();
 }

@@ -1,19 +1,38 @@
 //! Regenerates the paper's Fig. 4: ops/cycle for every conv2d
 //! implementation (int16, native W3A3/W2A2/W1A1, vmacsr LP/ULP) with a
 //! 7x7 kernel.  Pass `-- --large` for the paper's full 32x512x512.
+//!
+//! The sweep runs twice against one `SweepCtx`: the warm pass re-uses
+//! every compiled instruction stream from the program cache (no
+//! re-emission) and must reproduce the cold pass bit-for-bit.
 
 mod common;
 
 use common::{large_flag, Bench};
 use sparq::kernels::ConvDims;
-use sparq::report;
+use sparq::report::{self, SweepCtx};
 
 fn main() {
     let b = Bench::new("fig4");
     let large = large_flag();
-    let rows = b.section("simulate all 6 implementations", || {
-        report::fig4(large, 42).expect("fig4")
+    let ctx = SweepCtx::new();
+    let rows = b.section("simulate all 6 implementations (cold)", || {
+        report::fig4_with(&ctx, large, 42).expect("fig4")
     });
+    let warm = b.section("repeat sweep (cached programs, pooled machines)", || {
+        report::fig4_with(&ctx, large, 42).expect("fig4 warm")
+    });
+    for (c, w) in rows.iter().zip(&warm) {
+        assert_eq!(c.cycles, w.cycles, "warm rerun diverged on {}", c.label);
+    }
+    let cs = ctx.cache.stats();
+    println!(
+        "cache: {} compiles, {} hits on the warm pass; pool: {} machines for {} runs",
+        cs.misses,
+        cs.hits,
+        ctx.pool.stats().created,
+        cs.hits + cs.misses
+    );
     print!("{}", report::render_fig4(&rows, ConvDims::fig4(large)));
 
     // paper-shape assertions (soft: print, don't panic, so partial

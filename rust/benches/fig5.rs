@@ -1,21 +1,27 @@
 //! Regenerates the paper's Fig. 5: relative speedup over int16-conv2d
 //! across the overflow-free precision region — (a) native RVV on Ara,
 //! (b) vmacsr on Sparq.  Pass `-- --large` for the paper's 32x256x256.
+//!
+//! Both grids share one `SweepCtx`: the int16 baseline compiles once
+//! and the 5b grid re-executes it from the program cache.
 
 mod common;
 
 use common::{large_flag, Bench};
 use sparq::kernels::ConvDims;
-use sparq::report;
+use sparq::report::{self, SweepCtx};
 
 fn main() {
     let b = Bench::new("fig5");
     let large = large_flag();
     let dims = ConvDims::fig5(large);
-    let native = b.section("native grid (Fig. 5a)", || report::fig5(false, large, 7).unwrap());
+    let ctx = SweepCtx::new();
+    let native =
+        b.section("native grid (Fig. 5a)", || report::fig5_with(&ctx, false, large, 7).unwrap());
     print!("{}", report::render_fig5(&native, false, dims));
     println!();
-    let vmacsr = b.section("vmacsr grid (Fig. 5b)", || report::fig5(true, large, 7).unwrap());
+    let vmacsr =
+        b.section("vmacsr grid (Fig. 5b)", || report::fig5_with(&ctx, true, large, 7).unwrap());
     print!("{}", report::render_fig5(&vmacsr, true, dims));
 
     let runnable_native = native.iter().filter(|c| c.speedup.is_some()).count();
@@ -23,6 +29,11 @@ fn main() {
     println!(
         "\npaper check: vmacsr region ({runnable_vmacsr} points) wider than native ({runnable_native}) — \
          'higher precision range without modifying the algorithm'"
+    );
+    let cs = ctx.cache.stats();
+    println!(
+        "cache: {} compiles, {} hits (shared int16 baseline across grids)",
+        cs.misses, cs.hits
     );
     b.finish();
 }

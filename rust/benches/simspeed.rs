@@ -2,6 +2,11 @@
 //! throughput of the functional+timing simulator (element-ops/s and
 //! instructions/s) on the Fig. 4 inner loop, so optimization work has a
 //! stable number to move.
+//!
+//! The `cached vs uncached` section is the compile-once/execute-many
+//! acceptance check: a Fig. 4-style repeated sweep through the program
+//! cache + machine pool must beat the seed's rebuild-every-call path
+//! while producing bit-identical conv outputs and cycle counts.
 
 mod common;
 
@@ -9,7 +14,10 @@ use common::{large_flag, Bench};
 use std::time::Instant;
 
 use sparq::arch::ProcessorConfig;
-use sparq::kernels::{run_conv, ConvDims, ConvVariant, Workload};
+use sparq::kernels::{
+    run_conv, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload,
+};
+use sparq::sim::MachinePool;
 use sparq::ulppack::RegionMode;
 
 fn main() {
@@ -41,5 +49,63 @@ fn main() {
             insts as f64 / dt / 1e6,
         );
     }
+
+    // ---- compile-once/execute-many vs rebuild-every-call ----
+    b.section("cached vs uncached (Fig. 4-style repeated sweep)", || {
+        let reps = if large { 3 } else { 5 };
+        let cfg = ProcessorConfig::sparq();
+        let variant = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
+        let wl = Workload::random(dims, 2, 2, 9);
+
+        // the seed's path: rebuild the machine + instruction stream per rep
+        let t = Instant::now();
+        let mut cold_outs = Vec::new();
+        let mut cold_cycles = Vec::new();
+        for _ in 0..reps {
+            let run = run_conv(&cfg, &wl, variant).expect("uncached");
+            cold_outs = run.out.read_ints(&run.machine.mem).expect("read");
+            cold_cycles.push(run.report.stats.cycles);
+        }
+        let t_uncached = t.elapsed().as_secs_f64();
+
+        // the cached path: compile once, execute on a pooled machine
+        let cache = ProgramCache::new();
+        let pool = MachinePool::new();
+        let t = Instant::now();
+        let mut warm_outs = Vec::new();
+        let mut warm_cycles = Vec::new();
+        for _ in 0..reps {
+            let cc = cache
+                .get_or_compile(&cfg, &wl, variant, EngineOpts::default())
+                .expect("compile");
+            let mut m = pool.acquire(&cfg, cc.mem_bytes);
+            let rep = cc.execute(&mut m, &wl).expect("execute");
+            warm_outs = cc.out.read_ints(&m.mem).expect("read");
+            warm_cycles.push(rep.stats.cycles);
+            pool.release(m);
+        }
+        let t_cached = t.elapsed().as_secs_f64();
+
+        // correctness gate: identical outputs and identical cycle counts
+        assert_eq!(cold_outs, warm_outs, "cached outputs diverged");
+        assert_eq!(cold_cycles, warm_cycles, "cached cycle counts diverged");
+        let cs = cache.stats();
+        assert_eq!(cs.misses, 1, "program must compile exactly once");
+        assert_eq!(cs.hits as usize, reps - 1);
+
+        println!(
+            "  {reps} reps | rebuild-every-call {t_uncached:.3}s | compile-once {t_cached:.3}s | {:.2}x faster",
+            t_uncached / t_cached
+        );
+        println!(
+            "  identical outputs ({} elems) and cycle counts ({} cycles); cache: 1 compile + {} hits; pool: {} machine(s) created, {} reuses",
+            warm_outs.len(),
+            warm_cycles[0],
+            cs.hits,
+            pool.stats().created,
+            pool.stats().reused,
+        );
+    });
+
     b.finish();
 }

@@ -43,7 +43,7 @@ impl fmt::Display for Unit {
 }
 
 /// Static description of the simulated machine.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ProcessorConfig {
     /// Human-readable name used in reports.
     pub name: String,

@@ -18,19 +18,32 @@
 
 use crate::arch::ProcessorConfig;
 use std::collections::BTreeMap;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ConfigError {
-    #[error("line {0}: expected 'key = value'")]
     Syntax(usize),
-    #[error("[{section}] {key}: invalid value '{value}'")]
     BadValue { section: String, key: String, value: String },
-    #[error("unknown preset '{0}' (ara | sparq | sparq-cfgshift)")]
     UnknownPreset(String),
-    #[error("io: {0}")]
     Io(String),
 }
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Syntax(line) => write!(f, "line {line}: expected 'key = value'"),
+            ConfigError::BadValue { section, key, value } => {
+                write!(f, "[{section}] {key}: invalid value '{value}'")
+            }
+            ConfigError::UnknownPreset(p) => {
+                write!(f, "unknown preset '{p}' (ara | sparq | sparq-cfgshift)")
+            }
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Parsed config: section -> key -> value.
 #[derive(Debug, Clone, Default, PartialEq)]

@@ -17,6 +17,10 @@ struct Inner {
     batch_sizes: Vec<u32>,
     completed: u64,
     rejected: u64,
+    /// Requests that got an error response instead of a result
+    /// (executor errors and caught executor panics count once per
+    /// request in the failed batch; a worker init failure counts 1).
+    errors: u64,
     sim_cycles: u128,
 }
 
@@ -39,6 +43,13 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// Worker-side failures: `n` = number of requests that received an
+    /// error response (a failed batch counts once per rider; a worker
+    /// init failure, which serves nobody, counts 1).
+    pub fn record_errors(&self, n: u64) {
+        self.inner.lock().unwrap().errors += n;
+    }
+
     /// Snapshot of the distribution so far.
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
@@ -55,6 +66,7 @@ impl Metrics {
         Snapshot {
             completed: g.completed,
             rejected: g.rejected,
+            errors: g.errors,
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
@@ -74,6 +86,9 @@ impl Metrics {
 pub struct Snapshot {
     pub completed: u64,
     pub rejected: u64,
+    /// Requests that received an error response (plus 1 per worker
+    /// init failure) — comparable against `completed`.
+    pub errors: u64,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
@@ -117,5 +132,14 @@ mod tests {
         m.record_rejected();
         m.record_rejected();
         assert_eq!(m.snapshot().rejected, 2);
+    }
+
+    #[test]
+    fn error_counter_counts_requests() {
+        let m = Metrics::default();
+        m.record_errors(4); // a failed batch of 4 riders
+        m.record_errors(1); // a worker init failure
+        assert_eq!(m.snapshot().errors, 5);
+        assert_eq!(m.snapshot().completed, 0);
     }
 }

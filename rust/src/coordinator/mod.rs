@@ -24,17 +24,26 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::ServeConfig;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
-    #[error("queue full (backpressure)")]
     QueueFull,
-    #[error("server is shut down")]
     Closed,
-    #[error("worker failed: {0}")]
     Worker(String),
 }
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::QueueFull => write!(f, "queue full (backpressure)"),
+            ServeError::Closed => write!(f, "server is shut down"),
+            ServeError::Worker(e) => write!(f, "worker failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// What a worker computes for one image.
 #[derive(Debug, Clone)]
@@ -149,6 +158,7 @@ fn worker_loop(
     let mut exec = match factory() {
         Ok(e) => e,
         Err(e) => {
+            metrics.record_errors(1);
             eprintln!("executor init failed: {e}");
             return;
         }
@@ -184,7 +194,12 @@ fn worker_loop(
             let n = r.image.len().min(per);
             data[i * per..i * per + n].copy_from_slice(&r.image[..n]);
         }
-        let result = exec.run(&data);
+        // One poisoned request must not kill the worker: a panicking
+        // executor is caught and mapped to `ServeError::Worker` like any
+        // other executor error, recorded in the metrics, and the worker
+        // loops on to the next batch.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec.run(&data)))
+            .unwrap_or_else(|p| Err(panic_message(p.as_ref())));
         let bsz = reqs.len() as u32;
         match result {
             Ok(logits) => {
@@ -202,11 +217,23 @@ fn worker_loop(
                 }
             }
             Err(e) => {
+                metrics.record_errors(reqs.len() as u64);
                 for r in reqs {
                     let _ = r.resp.send(Err(ServeError::Worker(e.clone())));
                 }
             }
         }
+    }
+}
+
+/// Best-effort text of a caught executor panic payload.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("executor panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("executor panicked: {s}")
+    } else {
+        "executor panicked".into()
     }
 }
 
@@ -270,6 +297,104 @@ impl Executor for PjrtExecutor {
             .exec_f32(&self.model, &[(batch_data, &self.dims)])
             .map_err(|e| e.to_string())
     }
+}
+
+/// Simulator-backed executor: compile-once/execute-many serving of a
+/// sub-byte conv2d on the simulated Sparq.  The compiled program comes
+/// from a [`ProgramCache`] **shared across all workers** (via the
+/// factory's `Arc`); each worker owns a *private* [`MachinePool`], so
+/// steady-state serving holds one machine per worker with no
+/// cross-worker lock traffic.
+///
+/// Request contract: an "image" is the flattened (c, h, w) activation
+/// tensor as f32 levels (clamped + rounded into the A-bit range); the
+/// "logits" are the per-output-channel sums of the conv output — a
+/// global-average-pool head over real simulated conv numerics.
+pub struct SimConvExecutor {
+    model: crate::runtime::SimConvModel,
+    pool: crate::sim::MachinePool,
+    batch: usize,
+}
+
+use crate::kernels::{ConvDims, ConvVariant, ProgramCache};
+use crate::ProcessorConfig;
+
+impl SimConvExecutor {
+    pub fn new(
+        cfg: &ProcessorConfig,
+        dims: ConvDims,
+        variant: ConvVariant,
+        batch: usize,
+        seed: u64,
+        cache: &ProgramCache,
+    ) -> Result<SimConvExecutor, String> {
+        let model = crate::runtime::SimConvModel::compile(cfg, dims, variant, seed, cache)
+            .map_err(|e| e.to_string())?;
+        Ok(SimConvExecutor {
+            model,
+            pool: crate::sim::MachinePool::new(),
+            batch: batch.max(1),
+        })
+    }
+
+    /// Pool diagnostics (tests assert reuse).
+    pub fn pool_stats(&self) -> crate::sim::pool::PoolStats {
+        self.pool.stats()
+    }
+}
+
+impl Executor for SimConvExecutor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn image_len(&self) -> usize {
+        self.model.input_len()
+    }
+
+    fn classes(&self) -> usize {
+        self.model.dims.co as usize
+    }
+
+    fn run(&mut self, batch_data: &[f32]) -> Result<Vec<f32>, String> {
+        let per = self.model.input_len();
+        let classes = self.model.dims.co as usize;
+        let plane = self.model.output_len() / classes;
+        let mut logits = Vec::with_capacity(batch_data.len() / per * classes);
+        for img in batch_data.chunks(per) {
+            // All-zero activation levels produce an exactly-zero conv
+            // output (every product is 0), so zero-padded batch slots —
+            // and genuine all-zero images — skip the simulation instead
+            // of paying a full conv2d per padding slot.
+            if img.iter().all(|&v| self.model.quantize_level(v) == 0) {
+                logits.resize(logits.len() + classes, 0.0);
+                continue;
+            }
+            let (out, _report) =
+                self.model.infer(&self.pool, img).map_err(|e| e.to_string())?;
+            for o in 0..classes {
+                logits.push(out[o * plane..(o + 1) * plane].iter().sum::<i64>() as f32);
+            }
+        }
+        Ok(logits)
+    }
+}
+
+/// Factory for [`Server::start`]: every worker builds its own
+/// `SimConvExecutor` (private machine pool) against the one shared
+/// program cache.
+pub fn sim_conv_factory(
+    cfg: ProcessorConfig,
+    dims: ConvDims,
+    variant: ConvVariant,
+    batch: usize,
+    seed: u64,
+    cache: Arc<ProgramCache>,
+) -> ExecutorFactory {
+    Box::new(move || {
+        Ok(Box::new(SimConvExecutor::new(&cfg, dims, variant, batch, seed, &cache)?)
+            as Box<dyn Executor>)
+    })
 }
 
 #[cfg(test)]
@@ -405,5 +530,53 @@ mod tests {
         let s = mock_server(1, 10, 4);
         let snap = s.shutdown();
         assert_eq!(snap.completed, 0);
+    }
+
+    /// An executor that panics on the first batch, then recovers.
+    struct PanicsOnce {
+        panicked: bool,
+    }
+
+    impl Executor for PanicsOnce {
+        fn batch(&self) -> usize {
+            1
+        }
+        fn image_len(&self) -> usize {
+            4
+        }
+        fn classes(&self) -> usize {
+            2
+        }
+        fn run(&mut self, data: &[f32]) -> Result<Vec<f32>, String> {
+            if !self.panicked {
+                self.panicked = true;
+                panic!("poisoned request");
+            }
+            let s: f32 = data.iter().sum();
+            Ok(vec![s, -s])
+        }
+    }
+
+    #[test]
+    fn executor_panic_does_not_kill_the_worker() {
+        let cfg = ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 16 };
+        let s = Server::start(
+            Box::new(|| Ok(Box::new(PanicsOnce { panicked: false }) as Box<dyn Executor>)),
+            cfg,
+            7,
+        )
+        .unwrap();
+        // first request rides the poisoned batch -> typed worker error
+        let first = s.infer(vec![1.0; 4]);
+        match first {
+            Err(ServeError::Worker(msg)) => assert!(msg.contains("poisoned"), "{msg}"),
+            other => panic!("expected Worker error, got {other:?}"),
+        }
+        // the worker survived: the next request succeeds
+        let second = s.infer(vec![1.0, 2.0, 3.0, 4.0]).expect("worker must survive the panic");
+        assert_eq!(second.logits, vec![10.0, -10.0]);
+        let snap = s.shutdown();
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.completed, 1);
     }
 }

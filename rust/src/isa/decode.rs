@@ -8,21 +8,36 @@
 use super::encode::{funct3, mem_width, OPC_V, OPC_VL, OPC_VS};
 use super::inst::{VInst, VOp};
 use super::vtype::{Sew, VType};
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("unknown major opcode {0:#04x}")]
     UnknownOpcode(u32),
-    #[error("reserved funct6 {funct6:#08b} in funct3 space {funct3:#05b}")]
     ReservedFunct6 { funct6: u32, funct3: u32 },
-    #[error("reserved vtype bits {0:#013b}")]
     ReservedVType(u32),
-    #[error("unsupported memory width encoding {0:#05b}")]
     BadMemWidth(u32),
-    #[error("masked (vm=0) encodings are not implemented by this subset")]
     MaskedUnsupported,
 }
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            DecodeError::UnknownOpcode(op) => write!(f, "unknown major opcode {op:#04x}"),
+            DecodeError::ReservedFunct6 { funct6, funct3 } => {
+                write!(f, "reserved funct6 {funct6:#08b} in funct3 space {funct3:#05b}")
+            }
+            DecodeError::ReservedVType(bits) => write!(f, "reserved vtype bits {bits:#013b}"),
+            DecodeError::BadMemWidth(w) => {
+                write!(f, "unsupported memory width encoding {w:#05b}")
+            }
+            DecodeError::MaskedUnsupported => {
+                write!(f, "masked (vm=0) encodings are not implemented by this subset")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 fn opi_from_funct6(f6: u32) -> Option<VOp> {
     Some(match f6 {
@@ -125,7 +140,9 @@ pub fn decode(word: u32) -> Result<VInst, DecodeError> {
                     {
                         v1 as i8
                     } else {
-                        ((v1 as i8) << 3) >> 3 // sign-extend 5 bits
+                        // sign-extend 5 bits (shift in u8 space: v1 can
+                        // reach 31, and 31i8 << 3 would overflow)
+                        ((v1 << 3) as i8) >> 3
                     };
                     Ok(VInst::OpVI { op, vd, vs2, imm })
                 }
@@ -189,9 +206,9 @@ mod tests {
     #[test]
     fn roundtrip_every_op() {
         for inst in all_ops() {
-            let w = encode(&inst);
+            let w = encode(&inst).unwrap();
             let back = decode(w).unwrap_or_else(|e| panic!("{inst}: {e}"));
-            assert_eq!(encode(&back), w, "{inst}");
+            assert_eq!(encode(&back).unwrap(), w, "{inst}");
         }
     }
 
@@ -218,9 +235,9 @@ mod tests {
                 }
                 _ => {}
             }
-            let w = encode(&inst);
+            let w = encode(&inst).unwrap();
             let back = decode(w).expect("decodable");
-            assert_eq!(encode(&back), w);
+            assert_eq!(encode(&back).unwrap(), w);
         });
     }
 
@@ -229,7 +246,7 @@ mod tests {
         for sew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
             for lmul in [Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8] {
                 let i = VInst::SetVl { avl: 0, sew, lmul };
-                assert_eq!(decode(encode(&i)).unwrap(), i);
+                assert_eq!(decode(encode(&i).unwrap()).unwrap(), i);
             }
         }
     }
@@ -238,9 +255,9 @@ mod tests {
     fn loads_stores_roundtrip() {
         for eew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
             let l = VInst::Load { eew, vd: 7, addr: 0 };
-            assert_eq!(decode(encode(&l)).unwrap(), l);
+            assert_eq!(decode(encode(&l).unwrap()).unwrap(), l);
             let s = VInst::Store { eew, vs3: 7, addr: 0 };
-            assert_eq!(decode(encode(&s)).unwrap(), s);
+            assert_eq!(decode(encode(&s).unwrap()).unwrap(), s);
         }
     }
 
@@ -253,7 +270,7 @@ mod tests {
 
     #[test]
     fn masked_encodings_rejected() {
-        let mut w = encode(&VInst::OpVV { op: VOp::Macsr, vd: 1, vs2: 2, vs1: 3 });
+        let mut w = encode(&VInst::OpVV { op: VOp::Macsr, vd: 1, vs2: 2, vs1: 3 }).unwrap();
         w &= !(1 << 25); // clear vm
         assert_eq!(decode(w), Err(DecodeError::MaskedUnsupported));
     }

@@ -11,6 +11,29 @@
 
 use super::inst::{VInst, VOp};
 use super::vtype::VType;
+use std::fmt;
+
+/// A trace instruction with no machine encoding (op/format mismatch).
+/// Surfaced as a typed error so a bad kernel builder propagates a
+/// `Result` through `run_conv` instead of aborting a serving worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EncodeError {
+    /// The op has no encoding in the requested operand format
+    /// (`"VV"`, `"VX"`, or `"VI"`).
+    NoEncoding { op: VOp, form: &'static str },
+}
+
+impl fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            EncodeError::NoEncoding { op, form } => {
+                write!(f, "op {op:?} has no {form} encoding")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
 
 /// OP-V major opcode.
 pub const OPC_V: u32 = 0b101_0111;
@@ -98,11 +121,13 @@ fn opv(funct6: u32, vm: u32, vs2: u32, v1: u32, f3: u32, vd: u32) -> u32 {
 
 /// Encode one trace instruction to its 32-bit machine word.
 ///
-/// Panics on malformed instructions (unknown op/format combination) —
-/// the kernel builders only construct encodable instructions, and the
-/// property tests sweep every constructible combination.
-pub fn encode(inst: &VInst) -> u32 {
-    match *inst {
+/// Malformed instructions (unknown op/format combination) return a
+/// typed [`EncodeError`] — the kernel builders only construct encodable
+/// instructions and the property tests sweep every constructible
+/// combination, but a bad builder must surface as a `Result` rather
+/// than abort the process (e.g. a serving worker thread).
+pub fn encode(inst: &VInst) -> Result<u32, EncodeError> {
+    Ok(match *inst {
         VInst::SetVl { sew, lmul, .. } => {
             let vtypei = VType::new(sew, lmul).to_bits();
             // vsetvli rd=a0, rs1=a0, vtypei  (bit31=0 selects vsetvli)
@@ -131,7 +156,7 @@ pub fn encode(inst: &VInst) -> u32 {
             } else if let Some(f6) = funct6_opf(op) {
                 (f6, funct3::OPFVV)
             } else {
-                panic!("op {:?} has no VV encoding", op)
+                return Err(EncodeError::NoEncoding { op, form: "VV" });
             };
             let vs2 = if op == VOp::Mv { 0 } else { vs2 as u32 };
             opv(f6, 1, vs2, vs1 as u32, f3, vd as u32)
@@ -144,13 +169,14 @@ pub fn encode(inst: &VInst) -> u32 {
             } else if let Some(f6) = funct6_opf(op) {
                 (f6, funct3::OPFVF)
             } else {
-                panic!("op {:?} has no VX encoding", op)
+                return Err(EncodeError::NoEncoding { op, form: "VX" });
             };
             let vs2 = if op == VOp::Mv { 0 } else { vs2 as u32 };
             opv(f6, 1, vs2, TRACE_RS1, f3, vd as u32)
         }
         VInst::OpVI { op, vd, vs2, imm } => {
-            let f6 = funct6_opi(op).unwrap_or_else(|| panic!("op {:?} has no VI encoding", op));
+            let f6 =
+                funct6_opi(op).ok_or(EncodeError::NoEncoding { op, form: "VI" })?;
             let vs2 = if op == VOp::Mv { 0 } else { vs2 as u32 };
             opv(f6, 1, vs2, (imm as u32) & 0x1f, funct3::OPIVI, vd as u32)
         }
@@ -159,7 +185,7 @@ pub fn encode(inst: &VInst) -> u32 {
             // canonical RV64I NOP (addi x0, x0, 0) for completeness.
             0x0000_0013
         }
-    }
+    })
 }
 
 #[cfg(test)]
@@ -175,7 +201,7 @@ mod tests {
 
     #[test]
     fn vmacsr_vx_word_fields() {
-        let w = encode(&VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 99 });
+        let w = encode(&VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 99 }).unwrap();
         assert_eq!(w & 0x7f, OPC_V);
         assert_eq!((w >> 12) & 0x7, funct3::OPMVX);
         assert_eq!(w >> 26, 0b101110);
@@ -187,7 +213,7 @@ mod tests {
 
     #[test]
     fn vsetvli_word() {
-        let w = encode(&VInst::SetVl { avl: 256, sew: Sew::E16, lmul: Lmul::M2 });
+        let w = encode(&VInst::SetVl { avl: 256, sew: Sew::E16, lmul: Lmul::M2 }).unwrap();
         assert_eq!(w & 0x7f, OPC_V);
         assert_eq!((w >> 12) & 0x7, funct3::OPCFG);
         assert_eq!(w >> 31, 0); // vsetvli (not vsetvl)
@@ -197,10 +223,10 @@ mod tests {
 
     #[test]
     fn load_store_width_fields() {
-        let l = encode(&VInst::Load { eew: Sew::E16, vd: 4, addr: 0xdead });
+        let l = encode(&VInst::Load { eew: Sew::E16, vd: 4, addr: 0xdead }).unwrap();
         assert_eq!(l & 0x7f, OPC_VL);
         assert_eq!((l >> 12) & 0x7, 0b101);
-        let s = encode(&VInst::Store { eew: Sew::E8, vs3: 9, addr: 0 });
+        let s = encode(&VInst::Store { eew: Sew::E8, vs3: 9, addr: 0 }).unwrap();
         assert_eq!(s & 0x7f, OPC_VS);
         assert_eq!((s >> 12) & 0x7, 0b000);
         assert_eq!((s >> 7) & 0x1f, 9);
@@ -211,8 +237,24 @@ mod tests {
         // both 100101 — disambiguated by OPM vs OPI funct3 space
         assert_eq!(funct6_opi(VOp::Sll), Some(0b100101));
         assert_eq!(funct6_opm(VOp::Mul), Some(0b100101));
-        let sll = encode(&VInst::OpVI { op: VOp::Sll, vd: 1, vs2: 2, imm: 8 });
-        let mul = encode(&VInst::OpVV { op: VOp::Mul, vd: 1, vs2: 2, vs1: 3 });
+        let sll = encode(&VInst::OpVI { op: VOp::Sll, vd: 1, vs2: 2, imm: 8 }).unwrap();
+        let mul = encode(&VInst::OpVV { op: VOp::Mul, vd: 1, vs2: 2, vs1: 3 }).unwrap();
         assert_ne!((sll >> 12) & 7, (mul >> 12) & 7);
+    }
+
+    #[test]
+    fn unencodable_forms_are_typed_errors_not_panics() {
+        // slides have no OPM/OPF space; FMacc has no VI form; WAdduWv
+        // has no VI form — all previously panicked in the encoder.
+        assert_eq!(
+            encode(&VInst::OpVI { op: VOp::FMacc, vd: 1, vs2: 2, imm: 0 }),
+            Err(EncodeError::NoEncoding { op: VOp::FMacc, form: "VI" })
+        );
+        assert_eq!(
+            encode(&VInst::OpVI { op: VOp::WAdduWv, vd: 1, vs2: 2, imm: 0 }),
+            Err(EncodeError::NoEncoding { op: VOp::WAdduWv, form: "VI" })
+        );
+        let e = encode(&VInst::OpVI { op: VOp::Macc, vd: 0, vs2: 0, imm: 0 }).unwrap_err();
+        assert!(e.to_string().contains("no VI encoding"), "{e}");
     }
 }

@@ -17,6 +17,6 @@ pub mod vtype;
 
 pub use decode::{decode, DecodeError};
 pub use disasm::disasm;
-pub use encode::encode;
+pub use encode::{encode, EncodeError};
 pub use inst::{ScalarKind, VInst, VOp};
 pub use vtype::{Lmul, Sew, VType};

@@ -1,0 +1,212 @@
+//! The compiled-program cache: memoizes [`CompiledConv`] behind a
+//! content key so repeated workloads (serving, bench sweeps, layer
+//! schedules) stop re-emitting identical instruction streams.
+//!
+//! The key holds everything that shapes the emitted stream *by exact
+//! value*: the processor configuration (VLEN drives strip-mining and
+//! LMUL selection), the conv dims, the variant (including region mode),
+//! the engine options, the precision, and the flattened *weight
+//! tensors* — weights are baked into the stream as resolved `.vx`
+//! scalar operands, so two workloads sharing dims but not weights must
+//! not share a program.  Nothing is compared by hash digest: a cache
+//! hit can never serve a program compiled from different inputs.  The
+//! weight words cost a few hundred KB per entry at most, dwarfed by
+//! the cached instruction stream itself.  Activations are deliberately
+//! *not* keyed: they rebind per execution (`CompiledConv::execute`).
+//!
+//! Sharing: the cache is `Sync`; the serving coordinator shares one
+//! instance across workers via `Arc` while each worker keeps a private
+//! machine pool (DESIGN.md §"Compile once, execute many").
+
+use super::conv_engine::{CompiledConv, EngineOpts};
+use super::workload::{ConvDims, Workload};
+use super::ConvVariant;
+use crate::arch::ProcessorConfig;
+use crate::sim::SimError;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache counters (diagnostics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: u64,
+}
+
+/// The cache key: every compile input compared exactly, weight words
+/// included (see the module docs).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ConvKey {
+    cfg: ProcessorConfig,
+    dims: ConvDims,
+    variant: ConvVariant,
+    opts: EngineOpts,
+    w_bits: u32,
+    a_bits: u32,
+    /// The flattened weight tensors, by value.
+    wgt: Vec<u64>,
+}
+
+/// Flatten the weight tensors into the key's word list: integer levels
+/// always, plus the f32 bit patterns for the fp32 baseline (whose
+/// stream bakes `wgt_f32`).
+fn weight_words(wl: &Workload, variant: ConvVariant) -> Vec<u64> {
+    let mut words = Vec::new();
+    for per_o in &wl.wgt {
+        for per_c in per_o {
+            words.extend_from_slice(per_c);
+        }
+    }
+    if matches!(variant, ConvVariant::Fp32) {
+        for per_o in &wl.wgt_f32 {
+            for per_c in per_o {
+                words.extend(per_c.iter().map(|v| v.to_bits() as u64));
+            }
+        }
+    }
+    words
+}
+
+/// A concurrent map from conv content keys to compiled programs.
+#[derive(Debug, Default)]
+pub struct ProgramCache {
+    map: Mutex<HashMap<ConvKey, Arc<CompiledConv>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ProgramCache {
+    pub fn new() -> ProgramCache {
+        ProgramCache::default()
+    }
+
+    /// The content key `get_or_compile` uses (exposed for tests and
+    /// diagnostics).
+    pub fn key(
+        cfg: &ProcessorConfig,
+        wl: &Workload,
+        variant: ConvVariant,
+        opts: EngineOpts,
+    ) -> ConvKey {
+        ConvKey {
+            cfg: cfg.clone(),
+            dims: wl.dims,
+            variant,
+            opts,
+            w_bits: wl.w_bits,
+            a_bits: wl.a_bits,
+            wgt: weight_words(wl, variant),
+        }
+    }
+
+    /// Look up the compiled program for this (cfg, workload, variant,
+    /// opts) tuple, compiling and inserting on a miss.  Compilation
+    /// runs outside the lock; on a concurrent double-compile the first
+    /// inserted entry wins and both callers get the same `Arc`.
+    pub fn get_or_compile(
+        &self,
+        cfg: &ProcessorConfig,
+        wl: &Workload,
+        variant: ConvVariant,
+        opts: EngineOpts,
+    ) -> Result<Arc<CompiledConv>, SimError> {
+        let key = Self::key(cfg, wl, variant, opts);
+        if let Some(cc) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(cc));
+        }
+        let compiled = Arc::new(super::compile_conv_opts(cfg, wl, variant, opts)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        let entry = map.entry(key).or_insert(compiled);
+        Ok(Arc::clone(entry))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len() as u64,
+        }
+    }
+
+    /// Drop every cached program (keeps the counters).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ulppack::RegionMode;
+
+    fn wl(seed: u64) -> Workload {
+        Workload::random(ConvDims { c: 4, h: 6, w: 8, co: 2, fh: 3, fw: 3 }, 2, 2, seed)
+    }
+
+    #[test]
+    fn same_inputs_hit_different_inputs_miss() {
+        let cache = ProgramCache::new();
+        let cfg = ProcessorConfig::sparq();
+        let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict };
+        let a = cache.get_or_compile(&cfg, &wl(1), v, EngineOpts::default()).unwrap();
+        let b = cache.get_or_compile(&cfg, &wl(1), v, EngineOpts::default()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "identical request must share the entry");
+        // different weights (seed) must not share a program
+        cache.get_or_compile(&cfg, &wl(2), v, EngineOpts::default()).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 2));
+    }
+
+    #[test]
+    fn key_separates_cfg_variant_and_opts() {
+        let w = wl(3);
+        let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict };
+        let base = ProgramCache::key(&ProcessorConfig::sparq(), &w, v, EngineOpts::default());
+        let lanes = ProgramCache::key(
+            &ProcessorConfig::sparq().with_lanes(8),
+            &w,
+            v,
+            EngineOpts::default(),
+        );
+        let mode = ProgramCache::key(
+            &ProcessorConfig::sparq(),
+            &w,
+            ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper },
+            EngineOpts::default(),
+        );
+        let opts = ProgramCache::key(
+            &ProcessorConfig::sparq(),
+            &w,
+            v,
+            EngineOpts { runtime_act_pack: false, runtime_weight_pack: false },
+        );
+        assert_ne!(base, lanes);
+        assert_ne!(base, mode);
+        assert_ne!(base, opts);
+    }
+
+    #[test]
+    fn unsupported_variant_still_errors() {
+        let cache = ProgramCache::new();
+        let w = Workload::random(ConvDims { c: 4, h: 6, w: 8, co: 1, fh: 3, fw: 3 }, 4, 4, 1);
+        let v = ConvVariant::Vmacsr { w_bits: 4, a_bits: 4, mode: RegionMode::Strict };
+        assert!(cache
+            .get_or_compile(&ProcessorConfig::sparq(), &w, v, EngineOpts::default())
+            .is_err());
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn clear_empties_entries() {
+        let cache = ProgramCache::new();
+        let cfg = ProcessorConfig::sparq();
+        cache.get_or_compile(&cfg, &wl(1), ConvVariant::Int16, EngineOpts::default()).unwrap();
+        assert_eq!(cache.stats().entries, 1);
+        cache.clear();
+        assert_eq!(cache.stats().entries, 0);
+    }
+}

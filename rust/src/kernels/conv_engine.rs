@@ -27,12 +27,33 @@
 //! drained chunk never overflows its subfields, the wide total is
 //! partition-independent and the kernel output equals the golden models
 //! in `workload.rs` bit-for-bit (see the integration tests).
+//!
+//! ## Compile once, execute many
+//!
+//! Emission is split from data staging (DESIGN.md §"Compile once,
+//! execute many"):
+//!
+//! * [`compile`] lays tensors out with the same bump allocator a fresh
+//!   machine uses, bakes the resolved addresses and weights into the
+//!   instruction stream, and returns a [`CompiledConv`] — no machine
+//!   involved.
+//! * [`bind`] re-creates that layout on a freshly reset [`Machine`] and
+//!   writes the workload's *activation* tensors into it (weights live
+//!   in the stream as `.vx` scalar operands).
+//! * [`CompiledConv::execute`] = reset + bind + run: re-executing a
+//!   cached program on rebound tensors is bit-identical (outputs and
+//!   cycle counts) to a cold build, which the cache-correctness tests
+//!   pin.
+//!
+//! [`build`] is compile + bind on the caller's machine — the original
+//! single-shot API the variant modules and their tests use.
 
 use super::asm::{strips, Asm};
 use super::pack_rt;
-use super::workload::{OutElem, OutputRef, Workload};
+use super::workload::{ConvDims, OutElem, OutputRef, Workload};
+use crate::arch::ProcessorConfig;
 use crate::isa::{Lmul, ScalarKind, Sew, VOp, VType};
-use crate::sim::{Machine, Program, SimError};
+use crate::sim::{Machine, Program, RunReport, SimError};
 use crate::ulppack::{self, Container};
 
 /// Inner-loop policy: what one "MAC issue" is and how accumulators are
@@ -93,7 +114,7 @@ impl Inner {
 }
 
 /// Engine options beyond the inner policy.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EngineOpts {
     /// Pack weights at runtime (counted as scalar slots) — the paper's
     /// measurement includes this; `false` models offline preprocessing
@@ -149,15 +170,121 @@ fn alloc_regs(a: &Asm, fh: u32, avl: u64, sew: Sew, wide: bool, tmp: bool) -> Re
     }
 }
 
-/// Build the conv program for `inner` over `wl`; returns the trace and
-/// where the output tensor will be.
-pub fn build(
-    m: &mut Machine,
+/// Mirror of the machine's bump allocator (`Mem::alloc` on a fresh
+/// memory: brk starts at 64), so `compile` can resolve addresses
+/// without a machine and `bind` can replay the identical sequence.
+struct LayoutAlloc {
+    brk: u64,
+}
+
+impl LayoutAlloc {
+    fn new() -> LayoutAlloc {
+        LayoutAlloc { brk: 64 }
+    }
+
+    fn alloc(&mut self, bytes: u64, align: u64) -> u64 {
+        debug_assert!(align.is_power_of_two());
+        let base = (self.brk + align - 1) & !(align - 1);
+        self.brk = base + bytes;
+        base
+    }
+}
+
+/// Tensor placement a compiled program was laid out against.  The
+/// addresses are baked into the instruction stream; [`bind`] re-creates
+/// exactly this layout on a freshly reset machine.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ConvLayout {
+    /// Activation buffer: (address, byte size).
+    x: (u64, u64),
+    /// Packed-activation buffer (packed policies only): (address, byte
+    /// size) — the size is recorded here so `bind` replays exactly the
+    /// allocation `compile` made instead of re-deriving it.
+    xp: Option<(u64, u64)>,
+    /// Element bytes at the kernel SEW.
+    ew: u64,
+    /// Host-stage the packed activations at bind time (the
+    /// offline-packing ablation, `!opts.runtime_act_pack`).
+    stage_packed: Option<Container>,
+    /// Activations are f32 (the fp32 baseline) rather than levels.
+    fp32_acts: bool,
+}
+
+/// A conv2d program compiled once for a (dims, variant, processor,
+/// opts, weights) tuple.  Weights are baked into the stream as resolved
+/// `.vx` scalar operands; activations rebind per execution.  Obtain one
+/// via [`compile`], [`crate::kernels::compile_conv`], or a
+/// [`crate::kernels::ProgramCache`], then run it any number of times
+/// with [`CompiledConv::execute`] on pooled machines.
+pub struct CompiledConv {
+    pub prog: Program,
+    pub out: OutputRef,
+    pub dims: ConvDims,
+    /// The processor the stream was compiled for (VLEN is baked into
+    /// strip-mining and LMUL choices).
+    pub cfg: ProcessorConfig,
+    pub opts: EngineOpts,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    /// Simulated-DRAM bytes a machine needs for this program.
+    pub mem_bytes: usize,
+    pub(crate) layout: ConvLayout,
+}
+
+impl CompiledConv {
+    /// Execute the cached program: reset the machine in place, rebind
+    /// `wl`'s activation tensors at the compiled layout, and run.
+    ///
+    /// Re-execution is bit-identical — outputs *and* `RunReport` cycle
+    /// counts — to a cold [`build`] + run of the same workload (pinned
+    /// by the `program_cache` integration tests).  `wl` must have the
+    /// dims and precision the program was compiled for; its weights are
+    /// ignored (they are baked into the stream).
+    pub fn execute(&self, m: &mut Machine, wl: &Workload) -> Result<RunReport, SimError> {
+        self.execute_impl(m, wl, true)
+    }
+
+    /// [`Self::execute`] for a machine known to be freshly constructed
+    /// (or just reset): skips the redundant re-zeroing pass.  The
+    /// one-shot `run_conv` path uses this right after `Machine::new`.
+    pub(crate) fn execute_fresh(&self, m: &mut Machine, wl: &Workload) -> Result<RunReport, SimError> {
+        self.execute_impl(m, wl, false)
+    }
+
+    fn execute_impl(
+        &self,
+        m: &mut Machine,
+        wl: &Workload,
+        reset: bool,
+    ) -> Result<RunReport, SimError> {
+        if m.cfg != self.cfg {
+            return Err(SimError::Unsupported(
+                "machine configuration differs from the compiled program's",
+            ));
+        }
+        if wl.dims != self.dims || wl.w_bits != self.w_bits || wl.a_bits != self.a_bits {
+            return Err(SimError::Unsupported(
+                "workload shape/precision differs from the compiled program's",
+            ));
+        }
+        if reset {
+            m.reset_for(self.mem_bytes);
+        }
+        bind(m, wl, self)?;
+        m.run(&self.prog)
+    }
+}
+
+/// Compile the conv program for `inner` over `wl` against `cfg`,
+/// without touching a machine: resolve the tensor layout, bake weights
+/// and addresses into the stream, and return the reusable program.
+pub fn compile(
+    cfg: &ProcessorConfig,
     wl: &Workload,
     inner: Inner,
     opts: EngineOpts,
     label: String,
-) -> Result<(Program, OutputRef), SimError> {
+) -> Result<CompiledConv, SimError> {
     let d = wl.dims;
     let sew = inner.sew();
     let ew = sew.bytes() as u64;
@@ -180,45 +307,21 @@ pub fn build(
         }
     }
 
-    // ---- stage tensors into simulated DRAM ----
+    // ---- lay tensors out in simulated DRAM (same bump sequence a
+    //      fresh machine performs; data is written at bind time) ----
     let channels = match inner.packed() {
         Some(_) => d.c / 2,
         None => d.c,
     };
     let row_bytes = d.w as u64 * ew;
-    let x_addr = m.mem.alloc(d.c as u64 * d.h as u64 * row_bytes, 64)?;
-    match inner {
-        Inner::Fp32 => {
-            for (c, row) in wl.act_f32.iter().enumerate() {
-                m.mem.write_f32s(x_addr + c as u64 * d.h as u64 * row_bytes, row)?;
-            }
-        }
-        _ => {
-            for (c, row) in wl.act.iter().enumerate() {
-                let base = x_addr + c as u64 * d.h as u64 * row_bytes;
-                for (i, &v) in row.iter().enumerate() {
-                    m.mem.store_uint(base + i as u64 * ew, ew as u32, v)?;
-                }
-            }
-        }
-    }
+    let mut la = LayoutAlloc::new();
+    let x_bytes = d.c as u64 * d.h as u64 * row_bytes;
+    let x_addr = la.alloc(x_bytes, 64);
     // packed activations: written by the runtime packing pass, or staged
-    // by the host for the offline-packing ablation
-    let xp_addr = if let Some(cont) = inner.packed() {
-        let addr = m.mem.alloc(channels as u64 * d.h as u64 * row_bytes, 64)?;
-        if !opts.runtime_act_pack {
-            let packed = ulppack::pack_activations(&wl.act, cont);
-            for (c, row) in packed.iter().enumerate() {
-                let base = addr + c as u64 * d.h as u64 * row_bytes;
-                for (i, &v) in row.iter().enumerate() {
-                    m.mem.store_uint(base + i as u64 * ew, ew as u32, v)?;
-                }
-            }
-        }
-        addr
-    } else {
-        x_addr
-    };
+    // by the host at bind time for the offline-packing ablation
+    let xp_bytes = channels as u64 * d.h as u64 * row_bytes;
+    let xp = inner.packed().map(|_| (la.alloc(xp_bytes, 64), xp_bytes));
+    let xp_base = xp.map(|(addr, _)| addr).unwrap_or(x_addr);
 
     // output buffer
     let out_elem = match inner {
@@ -240,7 +343,7 @@ pub fn build(
         OutElem::U32 | OutElem::F32 => 4,
     };
     let out_len = (d.co * ho * wo) as usize;
-    let out_addr = m.mem.alloc(out_len as u64 * out_bytes, 64)?;
+    let out_addr = la.alloc(out_len as u64 * out_bytes, 64);
 
     // resolved weights for the .vx operands
     let wvals: Vec<Vec<Vec<u64>>> = match inner {
@@ -256,7 +359,7 @@ pub fn build(
     };
 
     // ---- emit ----
-    let mut a = Asm::new(label, m.cfg.vlen_bits);
+    let mut a = Asm::new(label, cfg.vlen_bits);
 
     if inner.packed().is_some() {
         if opts.runtime_weight_pack {
@@ -265,13 +368,13 @@ pub fn build(
             a.scalar(ScalarKind::AddrCalc, d.co * channels * d.fh * d.fw * 4);
         }
         if opts.runtime_act_pack {
-            pack_rt::emit_pack_activations(&mut a, &d, sew, x_addr, xp_addr);
+            pack_rt::emit_pack_activations(&mut a, &d, sew, x_addr, xp_base);
         }
     }
 
     let regs = alloc_regs(&a, d.fh, d.w as u64, sew, has_wide, needs_tmp);
     let wide_sew = sew.widened();
-    let vlmax_cols = VType::new(sew, regs.lmul).vlmax(m.cfg.vlen_bits);
+    let vlmax_cols = VType::new(sew, regs.lmul).vlmax(cfg.vlen_bits);
     let max_strip = vlmax_cols.saturating_sub(d.fw - 1).max(1);
     let cadence = inner.cadence();
 
@@ -300,7 +403,7 @@ pub fn build(
             for h in 0..d.h {
                 for cc in 0..channels {
                     a.setvl(svl_in, sew, regs.lmul);
-                    let row = xp_addr + ((cc * d.h + h) as u64 * d.w as u64 + s0 as u64) * ew;
+                    let row = xp_base + ((cc * d.h + h) as u64 * d.w as u64 + s0 as u64) * ew;
                     a.vle(sew, regs.vin, row);
                     for i in 0..d.fw {
                         for j in 0..d.fh as usize {
@@ -356,7 +459,96 @@ pub fn build(
     }
 
     let out = OutputRef { addr: out_addr, elem: out_elem, len: out_len };
-    Ok((a.finish(d.macs()), out))
+    Ok(CompiledConv {
+        prog: a.finish(d.macs()),
+        out,
+        dims: d,
+        cfg: cfg.clone(),
+        opts,
+        w_bits: wl.w_bits,
+        a_bits: wl.a_bits,
+        mem_bytes: wl.mem_bytes(),
+        layout: ConvLayout {
+            x: (x_addr, x_bytes),
+            xp,
+            ew,
+            stage_packed: if opts.runtime_act_pack { None } else { inner.packed() },
+            fp32_acts: matches!(inner, Inner::Fp32),
+        },
+    })
+}
+
+/// Re-create the compiled layout on a freshly reset machine and write
+/// the workload's activation tensors into it.  The machine's allocator
+/// must be at its initial state (fresh `Machine::new` or
+/// `Machine::reset*`) so the replayed allocations land on the addresses
+/// baked into the program.
+pub fn bind(m: &mut Machine, wl: &Workload, cc: &CompiledConv) -> Result<(), SimError> {
+    const STALE: SimError =
+        SimError::Unsupported("bind requires a freshly reset machine (layout address mismatch)");
+    let d = cc.dims;
+    let lay = &cc.layout;
+    let ew = lay.ew;
+    let row_bytes = d.w as u64 * ew;
+
+    let x_addr = m.mem.alloc(lay.x.1, 64)?;
+    if x_addr != lay.x.0 {
+        return Err(STALE);
+    }
+    if lay.fp32_acts {
+        for (c, row) in wl.act_f32.iter().enumerate() {
+            m.mem.write_f32s(x_addr + c as u64 * d.h as u64 * row_bytes, row)?;
+        }
+    } else {
+        for (c, row) in wl.act.iter().enumerate() {
+            let base = x_addr + c as u64 * d.h as u64 * row_bytes;
+            for (i, &v) in row.iter().enumerate() {
+                m.mem.store_uint(base + i as u64 * ew, ew as u32, v)?;
+            }
+        }
+    }
+
+    if let Some((xp_expected, xp_bytes)) = lay.xp {
+        let xp_addr = m.mem.alloc(xp_bytes, 64)?;
+        if xp_addr != xp_expected {
+            return Err(STALE);
+        }
+        if let Some(cont) = lay.stage_packed {
+            let packed = ulppack::pack_activations(&wl.act, cont);
+            for (c, row) in packed.iter().enumerate() {
+                let base = xp_addr + c as u64 * d.h as u64 * row_bytes;
+                for (i, &v) in row.iter().enumerate() {
+                    m.mem.store_uint(base + i as u64 * ew, ew as u32, v)?;
+                }
+            }
+        }
+    }
+
+    let out_bytes = match cc.out.elem {
+        OutElem::U16 => 2u64,
+        OutElem::U32 | OutElem::F32 => 4,
+    };
+    let out_addr = m.mem.alloc(cc.out.len as u64 * out_bytes, 64)?;
+    if out_addr != cc.out.addr {
+        return Err(STALE);
+    }
+    Ok(())
+}
+
+/// Build the conv program for `inner` over `wl` directly on the
+/// caller's (fresh) machine — compile + bind; returns the trace and
+/// where the output tensor will be.  The compile-once/execute-many path
+/// is [`compile`] + [`CompiledConv::execute`].
+pub fn build(
+    m: &mut Machine,
+    wl: &Workload,
+    inner: Inner,
+    opts: EngineOpts,
+    label: String,
+) -> Result<(Program, OutputRef), SimError> {
+    let cc = compile(&m.cfg, wl, inner, opts, label)?;
+    bind(m, wl, &cc)?;
+    Ok((cc.prog, cc.out))
 }
 
 /// Drain every slot's narrow accumulator into its wide one (the spill /
@@ -388,6 +580,7 @@ fn emit_drain_one(a: &mut Asm, inner: Inner, regs: &Regs, sl: usize) {
 }
 
 /// Finalize slot `sl` and store `sw` output columns at `dst`.
+#[allow(clippy::too_many_arguments)]
 fn emit_store_row(
     a: &mut Asm,
     inner: Inner,

@@ -4,10 +4,10 @@
 //! field — the exact overhead `vmacsr` was designed to remove (paper
 //! Fig. 2).
 
-use super::conv_engine::{self, EngineOpts, Inner};
+use super::conv_engine::{self, EngineOpts};
 use super::workload::{OutputRef, Workload};
+use super::ConvVariant;
 use crate::sim::{Machine, Program, SimError};
-use crate::ulppack::region;
 
 /// Build the native ULPPACK conv at (W, A).  Fails with `Unsupported`
 /// when no container sustains even one local accumulation.
@@ -27,10 +27,7 @@ pub fn build_opts(
     a_bits: u32,
     opts: EngineOpts,
 ) -> Result<(Program, OutputRef), SimError> {
-    let plan = region::plan_native(w_bits, a_bits)
-        .ok_or(SimError::Unsupported("precision pair not natively packable"))?;
-    let inner = Inner::Native { container: plan.container, k_local: plan.spill_every };
-    let label = format!("W{w_bits}A{a_bits}-conv2d-native");
+    let (inner, label) = ConvVariant::Native { w_bits, a_bits }.planned_inner(wl)?;
     conv_engine::build(m, wl, inner, opts, label)
 }
 

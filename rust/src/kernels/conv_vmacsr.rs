@@ -3,10 +3,11 @@
 //! container (LP 16-bit / ULP 8-bit) and the wide-accumulator spill
 //! cadence come from the region calculus in [`crate::ulppack::region`].
 
-use super::conv_engine::{self, EngineOpts, Inner};
+use super::conv_engine::{self, EngineOpts};
 use super::workload::{OutputRef, Workload};
+use super::ConvVariant;
 use crate::sim::{Machine, Program, SimError};
-use crate::ulppack::region::{self, RegionMode};
+use crate::ulppack::region::RegionMode;
 
 /// Build the vmacsr conv at (W, A) under `mode`.  Fails with
 /// `Unsupported` when no container admits the precision pair.
@@ -28,10 +29,7 @@ pub fn build_opts(
     mode: RegionMode,
     opts: EngineOpts,
 ) -> Result<(Program, OutputRef), SimError> {
-    let plan = region::plan_vmacsr(w_bits, a_bits, wl.dims.issues_per_output(), mode)
-        .ok_or(SimError::Unsupported("precision pair outside every container's region"))?;
-    let inner = Inner::Vmacsr { container: plan.container, spill_every: plan.spill_every };
-    let label = format!("{}-W{w_bits}A{a_bits}-vmacsr", plan.container.name());
+    let (inner, label) = ConvVariant::Vmacsr { w_bits, a_bits, mode }.planned_inner(wl)?;
     conv_engine::build(m, wl, inner, opts, label)
 }
 

@@ -15,8 +15,20 @@
 //!
 //! Golden models live in [`workload`]; each variant's module tests pin
 //! its outputs to them bit-for-bit.
+//!
+//! ## Compile once, execute many
+//!
+//! [`compile_conv`] builds a [`CompiledConv`] (instruction stream +
+//! tensor layout) once per (dims, variant, processor, opts, weights)
+//! tuple; [`CompiledConv::execute`] rebinds activation data into a
+//! reset machine and re-runs it with bit-identical outputs and cycle
+//! counts.  [`ProgramCache`] memoizes compilations behind a content
+//! key and [`crate::sim::MachinePool`] recycles machines, which is what
+//! the serving stack and the bench sweeps use ([`run_conv_cached`]).
+//! [`run_conv`] keeps the original one-shot build-and-run semantics.
 
 pub mod asm;
+pub mod cache;
 pub mod conv_engine;
 pub mod conv_fp32;
 pub mod conv_int16;
@@ -26,15 +38,17 @@ pub mod im2col_gemm;
 pub mod pack_rt;
 pub mod workload;
 
-pub use conv_engine::EngineOpts;
+pub use cache::{CacheStats, ProgramCache};
+pub use conv_engine::{CompiledConv, EngineOpts};
 pub use workload::{ConvDims, OutputRef, Workload};
 
 use crate::arch::ProcessorConfig;
-use crate::sim::{Machine, RunReport, SimError};
-use crate::ulppack::RegionMode;
+use crate::sim::{Machine, MachinePool, RunReport, SimError};
+use crate::ulppack::{region, RegionMode};
+use conv_engine::Inner;
 
 /// Which conv2d implementation to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ConvVariant {
     Int16,
     Fp32,
@@ -64,6 +78,36 @@ impl ConvVariant {
             | ConvVariant::Vmacsr { w_bits, a_bits, .. } => (w_bits, a_bits),
         }
     }
+
+    /// Resolve the region-calculus plan into an engine inner policy and
+    /// the builder's label — the single source of truth the variant
+    /// modules (`conv_native`, `conv_vmacsr`) and the cached path both
+    /// delegate to, so every path reports identical labels.
+    pub(crate) fn planned_inner(&self, wl: &Workload) -> Result<(Inner, String), SimError> {
+        Ok(match *self {
+            ConvVariant::Int16 => (Inner::Int16, self.label()),
+            ConvVariant::Fp32 => (Inner::Fp32, self.label()),
+            ConvVariant::Native { w_bits, a_bits } => {
+                let plan = region::plan_native(w_bits, a_bits)
+                    .ok_or(SimError::Unsupported("precision pair not natively packable"))?;
+                (
+                    Inner::Native { container: plan.container, k_local: plan.spill_every },
+                    format!("W{w_bits}A{a_bits}-conv2d-native"),
+                )
+            }
+            ConvVariant::Vmacsr { w_bits, a_bits, mode } => {
+                let plan =
+                    region::plan_vmacsr(w_bits, a_bits, wl.dims.issues_per_output(), mode)
+                        .ok_or(SimError::Unsupported(
+                            "precision pair outside every container's region",
+                        ))?;
+                (
+                    Inner::Vmacsr { container: plan.container, spill_every: plan.spill_every },
+                    format!("{}-W{w_bits}A{a_bits}-vmacsr", plan.container.name()),
+                )
+            }
+        })
+    }
 }
 
 /// One finished conv run: the timing report, the machine (for reading
@@ -72,6 +116,27 @@ pub struct ConvRun {
     pub report: RunReport,
     pub machine: Machine,
     pub out: OutputRef,
+}
+
+/// Compile one conv2d variant for `cfg` without running it — the
+/// "compile" half of compile-once/execute-many.  Weights from `wl` are
+/// baked into the stream; activations rebind per execution.
+pub fn compile_conv(
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    variant: ConvVariant,
+) -> Result<CompiledConv, SimError> {
+    compile_conv_opts(cfg, wl, variant, EngineOpts::default())
+}
+
+pub fn compile_conv_opts(
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    variant: ConvVariant,
+    opts: EngineOpts,
+) -> Result<CompiledConv, SimError> {
+    let (inner, label) = variant.planned_inner(wl)?;
+    conv_engine::compile(cfg, wl, inner, opts, label)
 }
 
 /// Build + run one conv2d variant on a fresh machine.
@@ -89,29 +154,28 @@ pub fn run_conv_opts(
     variant: ConvVariant,
     opts: EngineOpts,
 ) -> Result<ConvRun, SimError> {
+    let cc = compile_conv_opts(cfg, wl, variant, opts)?;
     let mut m = Machine::new(cfg.clone(), wl.mem_bytes());
-    let (prog, out) = match variant {
-        ConvVariant::Int16 => conv_engine::build(
-            &mut m,
-            wl,
-            conv_engine::Inner::Int16,
-            opts,
-            variant.label(),
-        )?,
-        ConvVariant::Fp32 => conv_engine::build(
-            &mut m,
-            wl,
-            conv_engine::Inner::Fp32,
-            opts,
-            variant.label(),
-        )?,
-        ConvVariant::Native { w_bits, a_bits } => {
-            conv_native::build_opts(&mut m, wl, w_bits, a_bits, opts)?
-        }
-        ConvVariant::Vmacsr { w_bits, a_bits, mode } => {
-            conv_vmacsr::build_opts(&mut m, wl, w_bits, a_bits, mode, opts)?
-        }
-    };
-    let report = m.run(&prog)?;
-    Ok(ConvRun { report, machine: m, out })
+    let report = cc.execute_fresh(&mut m, wl)?;
+    Ok(ConvRun { report, machine: m, out: cc.out })
+}
+
+/// Run one conv through the compiled-program cache on a pooled machine
+/// — the hot path for sweeps and serving.  Identical outputs and cycle
+/// counts to [`run_conv_opts`]; only the host-side rebuild/realloc work
+/// is skipped on cache hits.
+pub fn run_conv_cached(
+    cache: &ProgramCache,
+    pool: &MachinePool,
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    variant: ConvVariant,
+    opts: EngineOpts,
+) -> Result<RunReport, SimError> {
+    let cc = cache.get_or_compile(cfg, wl, variant, opts)?;
+    let mut m = pool.acquire(cfg, cc.mem_bytes);
+    // acquire() already reset the machine: skip execute()'s re-zeroing
+    let report = cc.execute_fresh(&mut m, wl);
+    pool.release(m);
+    report
 }

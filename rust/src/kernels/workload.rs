@@ -7,7 +7,7 @@ use crate::testutil::Gen;
 use crate::ulppack::{act_level_max, weight_level_max, Container};
 
 /// Conv2d problem dimensions ('valid' padding, channel-first).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConvDims {
     pub c: u32,
     pub h: u32,

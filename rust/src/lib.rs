@@ -10,21 +10,31 @@
 //!   functional units exist (the FPU is removable — that *is* Sparq).
 //! * [`sim`] — a cycle-approximate, functionally-exact simulator of the
 //!   Ara/Sparq vector machine: VRF, MFPU/ALU/VLSU/SLDU units, chaining,
-//!   per-unit utilization counters.
+//!   per-unit utilization counters.  Machines reset in place and are
+//!   recycled through [`sim::MachinePool`] instead of reallocated.
 //! * [`ulppack`] — the ULPPACK P1 packing calculus: container layouts,
 //!   overflow-free regions, local-accumulation and spill cadences.
 //! * [`kernels`] — the "hand-written inline assembly" of the paper as
 //!   instruction-stream builders: fp32/int16 baselines, native ULPPACK,
-//!   and the `vmacsr` LP/ULP conv2d of Algorithm 1.
+//!   and the `vmacsr` LP/ULP conv2d of Algorithm 1.  Kernels follow a
+//!   compile-once/execute-many split: `compile_conv` bakes a reusable
+//!   [`kernels::CompiledConv`] (weights + layout in the stream),
+//!   `CompiledConv::execute` rebinds activations into a pooled machine,
+//!   and [`kernels::ProgramCache`] memoizes compilations behind a
+//!   content key (see DESIGN.md §"Compile once, execute many").
 //! * [`power`] — the GF22FDX-calibrated analytical area/power/fmax model
 //!   behind Table II.
 //! * [`qnn`] — the quantized CNN graph and its layer-by-layer scheduling
 //!   onto the simulator.
-//! * [`runtime`] — the PJRT side: loads the AOT-compiled HLO-text
-//!   artifacts produced by `python/compile/aot.py` and executes them
-//!   (python never runs at inference time).
+//! * [`runtime`] — artifact loading and execution backends: the PJRT
+//!   path (behind the off-by-default `pjrt` feature; the `xla` crate is
+//!   not vendored) and the simulator-backed conv model
+//!   ([`runtime::simconv`]) that serves real sub-byte convolutions
+//!   through the cached-program path with no artifacts at all.
 //! * [`coordinator`] — the serving stack: request queue, dynamic
-//!   batcher, worker pool, latency metrics.
+//!   batcher, worker pool, latency metrics.  Workers share one
+//!   [`kernels::ProgramCache`] via `Arc` and own a private machine
+//!   pool each (compile-once/execute-many serving).
 //! * [`report`] — paper-style table/figure printers (Fig. 4, Fig. 5,
 //!   Table I, Table II).
 //! * [`config`] — the hand-rolled key=value config system and presets.
@@ -44,4 +54,5 @@ pub mod testutil;
 pub mod ulppack;
 
 pub use arch::ProcessorConfig;
-pub use sim::{Machine, Program};
+pub use kernels::{CompiledConv, ProgramCache};
+pub use sim::{Machine, MachinePool, Program};

@@ -8,9 +8,9 @@
 //! a zero-padded buffer.
 
 use crate::arch::ProcessorConfig;
-use crate::kernels::{run_conv, ConvDims, ConvVariant, Workload};
+use crate::kernels::{run_conv_cached, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload};
 use crate::qnn::graph::{LayerDesc, QnnGraph};
-use crate::sim::SimError;
+use crate::sim::{MachinePool, SimError};
 use crate::ulppack::RegionMode;
 
 /// Precision configuration for a scheduled network.
@@ -83,10 +83,29 @@ fn variant_for(layer: &LayerDesc, precision: QnnPrecision) -> Option<ConvVariant
 ///
 /// Non-conv layers (pool, GAP+FC) are costed as a single memory-bound
 /// vector pass over their activations (they are <2% of the MACs).
+///
+/// One-shot convenience over [`schedule_cached`] with a transient cache
+/// and pool; callers that re-schedule (serving, sweeps) should hold a
+/// shared [`ProgramCache`]/[`MachinePool`] and call the cached form so
+/// every layer's instruction stream is emitted exactly once.
 pub fn schedule(
     cfg: &ProcessorConfig,
     graph: &QnnGraph,
     precision: QnnPrecision,
+) -> Result<QnnSchedule, SimError> {
+    schedule_cached(cfg, graph, precision, &ProgramCache::new(), &MachinePool::new())
+}
+
+/// [`schedule`] through a shared compiled-program cache and machine
+/// pool: layer programs compile once per (dims, variant, processor,
+/// weights) and re-execute on reset pooled machines with identical
+/// cycle counts.
+pub fn schedule_cached(
+    cfg: &ProcessorConfig,
+    graph: &QnnGraph,
+    precision: QnnPrecision,
+    cache: &ProgramCache,
+    pool: &MachinePool,
 ) -> Result<QnnSchedule, SimError> {
     let mut layers = Vec::new();
     for (li, layer) in graph.layers.iter().enumerate() {
@@ -102,10 +121,11 @@ pub fn schedule(
                     ConvDims { c, h: h + f - 1, w: w + f - 1, co: c_out, fh: f, fw: f };
                 let (wb, ab) = variant.bits();
                 let wl = Workload::random(dims, wb, ab, 0x5EED + li as u64);
-                let run = run_conv(cfg, &wl, variant)?;
+                let report =
+                    run_conv_cached(cache, pool, cfg, &wl, variant, EngineOpts::default())?;
                 layers.push(LayerCycles {
                     name: layer.name(),
-                    cycles: run.report.stats.cycles,
+                    cycles: report.stats.cycles,
                     macs: layer.macs(),
                     variant: variant.label(),
                 });
@@ -172,6 +192,26 @@ mod tests {
     fn fp32_rejected_on_sparq() {
         let g = QnnGraph::sparq_cnn();
         assert!(schedule(&ProcessorConfig::sparq(), &g, QnnPrecision::Fp32).is_err());
+    }
+
+    #[test]
+    fn cached_reschedule_is_identical_and_hits() {
+        let g = QnnGraph::sparq_cnn();
+        let cfg = ProcessorConfig::sparq();
+        let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let cache = ProgramCache::new();
+        let pool = MachinePool::new();
+        let a = schedule_cached(&cfg, &g, prec, &cache, &pool).unwrap();
+        let misses_after_first = cache.stats().misses;
+        let b = schedule_cached(&cfg, &g, prec, &cache, &pool).unwrap();
+        assert_eq!(a.total_cycles(), b.total_cycles());
+        let s = cache.stats();
+        assert_eq!(s.misses, misses_after_first, "second schedule must be all hits");
+        assert!(s.hits >= misses_after_first);
+        // and the cached path agrees with the one-shot path
+        let cold = schedule(&cfg, &g, prec).unwrap();
+        assert_eq!(a.total_cycles(), cold.total_cycles());
+        assert!(pool.stats().reused > 0);
     }
 
     #[test]

@@ -3,12 +3,42 @@
 //! and the cargo benches are thin wrappers around these functions).
 
 use crate::arch::{ProcessorConfig, Unit};
-use crate::kernels::{run_conv, ConvDims, ConvVariant, Workload};
+use crate::kernels::{
+    run_conv_cached, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload,
+};
 use crate::power::LaneReport;
 use crate::qnn::{schedule, QnnGraph};
 use crate::qnn::schedule::QnnPrecision;
-use crate::sim::SimError;
+use crate::sim::{MachinePool, RunReport, SimError};
 use crate::ulppack::{region, RegionMode};
+
+/// Shared compile-once/execute-many context for the sweep drivers: one
+/// program cache + one machine pool reused across figures so repeated
+/// (workload, variant, processor) tuples stop re-emitting identical
+/// instruction streams.  The benches run each figure twice (cold/warm)
+/// against one `SweepCtx` to demonstrate the cached speedup.
+#[derive(Default)]
+pub struct SweepCtx {
+    pub cache: ProgramCache,
+    pub pool: MachinePool,
+}
+
+impl SweepCtx {
+    pub fn new() -> SweepCtx {
+        SweepCtx::default()
+    }
+
+    /// Run one conv through the context (cycle counts and outputs are
+    /// bit-identical to `kernels::run_conv`).
+    pub fn run(
+        &self,
+        cfg: &ProcessorConfig,
+        wl: &Workload,
+        variant: ConvVariant,
+    ) -> Result<RunReport, SimError> {
+        run_conv_cached(&self.cache, &self.pool, cfg, wl, variant, EngineOpts::default())
+    }
+}
 
 /// One bar of Fig. 4.
 #[derive(Debug, Clone)]
@@ -22,6 +52,12 @@ pub struct Fig4Row {
 
 /// Fig. 4: ops/cycle for every conv2d implementation, 7x7 kernel.
 pub fn fig4(large: bool, seed: u64) -> Result<Vec<Fig4Row>, SimError> {
+    fig4_with(&SweepCtx::new(), large, seed)
+}
+
+/// [`fig4`] against a caller-held [`SweepCtx`] (warm reruns are pure
+/// cache hits).
+pub fn fig4_with(ctx: &SweepCtx, large: bool, seed: u64) -> Result<Vec<Fig4Row>, SimError> {
     let dims = ConvDims::fig4(large);
     let sparq = ProcessorConfig::sparq();
     let ara = ProcessorConfig::ara();
@@ -47,16 +83,16 @@ pub fn fig4(large: bool, seed: u64) -> Result<Vec<Fig4Row>, SimError> {
     for (cfg, variant, label) in plan {
         let (wb, ab) = variant.bits();
         let wl = Workload::random(dims, wb, ab, seed);
-        let run = run_conv(cfg, &wl, variant)?;
+        let report = ctx.run(cfg, &wl, variant)?;
         if rows.is_empty() {
-            base_cycles = run.report.stats.cycles;
+            base_cycles = report.stats.cycles;
         }
         rows.push(Fig4Row {
             label,
-            cycles: run.report.stats.cycles,
-            ops_per_cycle: run.report.ops_per_cycle(),
-            speedup_vs_int16: base_cycles as f64 / run.report.stats.cycles as f64,
-            mfpu_util: run.report.stats.utilization(Unit::Mfpu),
+            cycles: report.stats.cycles,
+            ops_per_cycle: report.ops_per_cycle(),
+            speedup_vs_int16: base_cycles as f64 / report.stats.cycles as f64,
+            mfpu_util: report.stats.utilization(Unit::Mfpu),
         });
     }
     Ok(rows)
@@ -96,11 +132,23 @@ pub struct Fig5Cell {
 /// Fig. 5: the speedup grid over the precision region, native (a) or
 /// vmacsr (b).
 pub fn fig5(vmacsr: bool, large: bool, seed: u64) -> Result<Vec<Fig5Cell>, SimError> {
+    fig5_with(&SweepCtx::new(), vmacsr, large, seed)
+}
+
+/// [`fig5`] against a caller-held [`SweepCtx`]: the int16 baseline is
+/// shared between the 5a and 5b grids (one compile instead of two), and
+/// warm reruns are pure cache hits.
+pub fn fig5_with(
+    ctx: &SweepCtx,
+    vmacsr: bool,
+    large: bool,
+    seed: u64,
+) -> Result<Vec<Fig5Cell>, SimError> {
     let dims = ConvDims::fig5(large);
     let sparq = ProcessorConfig::sparq();
     let ara = ProcessorConfig::ara();
     let wl16 = Workload::random(dims, 8, 8, seed);
-    let base = run_conv(&sparq, &wl16, ConvVariant::Int16)?.report;
+    let base = ctx.run(&sparq, &wl16, ConvVariant::Int16)?;
     let mut cells = Vec::new();
     for w in 1..=4u32 {
         for a in 1..=4u32 {
@@ -117,11 +165,11 @@ pub fn fig5(vmacsr: bool, large: bool, seed: u64) -> Result<Vec<Fig5Cell>, SimEr
                 None => Fig5Cell { w_bits: w, a_bits: a, speedup: None, container: None },
                 Some(p) => {
                     let wl = Workload::random(dims, w, a, seed.wrapping_add((w * 5 + a) as u64));
-                    let run = run_conv(cfg, &wl, variant)?;
+                    let report = ctx.run(cfg, &wl, variant)?;
                     Fig5Cell {
                         w_bits: w,
                         a_bits: a,
-                        speedup: Some(base.stats.cycles as f64 / run.report.stats.cycles as f64),
+                        speedup: Some(base.stats.cycles as f64 / report.stats.cycles as f64),
                         container: Some(p.container.name()),
                     }
                 }
@@ -199,14 +247,15 @@ pub fn render_table2(ara: &LaneReport, sparq: &LaneReport) -> String {
 
 /// §III-A lane-utilization reproduction: int16 on Sparq, fp32 on Ara.
 pub fn utilization(large: bool, seed: u64) -> Result<Vec<(String, f64, u64)>, SimError> {
+    let ctx = SweepCtx::new();
     let s = if large { 512 } else { 128 };
     let dims = ConvDims { c: 32, h: s + 6, w: s + 6, co: 2, fh: 7, fw: 7 };
     let mut out = Vec::new();
     let wl = Workload::random(dims, 8, 8, seed);
-    let run = run_conv(&ProcessorConfig::sparq(), &wl, ConvVariant::Int16)?;
-    out.push(("int16 (Sparq)".to_string(), run.report.stats.utilization(Unit::Mfpu), run.report.stats.cycles));
-    let run = run_conv(&ProcessorConfig::ara(), &wl, ConvVariant::Fp32)?;
-    out.push(("fp32 (Ara)".to_string(), run.report.stats.utilization(Unit::Mfpu), run.report.stats.cycles));
+    let rep = ctx.run(&ProcessorConfig::sparq(), &wl, ConvVariant::Int16)?;
+    out.push(("int16 (Sparq)".to_string(), rep.stats.utilization(Unit::Mfpu), rep.stats.cycles));
+    let rep = ctx.run(&ProcessorConfig::ara(), &wl, ConvVariant::Fp32)?;
+    out.push(("fp32 (Ara)".to_string(), rep.stats.utilization(Unit::Mfpu), rep.stats.cycles));
     Ok(out)
 }
 
@@ -317,6 +366,29 @@ mod tests {
         assert!(t2.contains("0.120") && t2.contains("0.068"));
         let rows = vec![("fp32".into(), 0.99, 0.0)];
         assert!(render_table1(&rows).contains("fp32"));
+    }
+
+    #[test]
+    fn warm_fig4_rerun_is_all_hits_and_identical() {
+        let ctx = SweepCtx::new();
+        let cold = fig4_with(&ctx, false, 42).unwrap();
+        let misses = ctx.cache.stats().misses;
+        let warm = fig4_with(&ctx, false, 42).unwrap();
+        assert_eq!(ctx.cache.stats().misses, misses, "warm rerun recompiled something");
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.cycles, w.cycles, "{}", c.label);
+        }
+        assert!(ctx.pool.stats().reused > 0);
+    }
+
+    #[test]
+    fn fig5_grids_share_the_int16_baseline() {
+        let ctx = SweepCtx::new();
+        fig5_with(&ctx, false, false, 7).unwrap();
+        let hits_before = ctx.cache.stats().hits;
+        fig5_with(&ctx, true, false, 7).unwrap();
+        // the 5b grid reuses 5a's int16 baseline program at minimum
+        assert!(ctx.cache.stats().hits > hits_before);
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! The simulator-backed conv "model": the artifact of the offline
+//! build is a [`CompiledConv`] — compiled once (through a shared
+//! [`ProgramCache`]) and executed many times on pooled machines.  This
+//! is the runtime the serving coordinator's `SimConvExecutor` drives:
+//! real sub-byte conv2d numerics, bit-exact against the golden models
+//! in `kernels::workload`, with no PJRT artifacts and no python.
+
+use crate::arch::ProcessorConfig;
+use crate::kernels::{
+    CompiledConv, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload,
+};
+use crate::sim::{MachinePool, RunReport, SimError};
+use crate::ulppack::act_level_max;
+use std::sync::Arc;
+
+/// A compiled, weight-frozen conv2d ready to serve inference requests.
+///
+/// The weights come from the deterministic workload seed (standing in
+/// for a trained checkpoint, as everywhere else in the reproduction);
+/// each request supplies fresh activations.
+pub struct SimConvModel {
+    pub cc: Arc<CompiledConv>,
+    pub cfg: ProcessorConfig,
+    pub dims: ConvDims,
+    pub variant: ConvVariant,
+    /// Workload template: frozen weights + rebindable activations.
+    template: Workload,
+    amax: u64,
+}
+
+impl SimConvModel {
+    /// Compile (or fetch from `cache`) the conv program for this model.
+    /// Fp32 is rejected: the serving readback path is integer-only.
+    pub fn compile(
+        cfg: &ProcessorConfig,
+        dims: ConvDims,
+        variant: ConvVariant,
+        seed: u64,
+        cache: &ProgramCache,
+    ) -> Result<SimConvModel, SimError> {
+        if matches!(variant, ConvVariant::Fp32) {
+            return Err(SimError::Unsupported(
+                "SimConvModel serves integer conv variants only",
+            ));
+        }
+        let (wb, ab) = variant.bits();
+        let template = Workload::random(dims, wb, ab, seed);
+        let cc = cache.get_or_compile(cfg, &template, variant, EngineOpts::default())?;
+        Ok(SimConvModel {
+            cc,
+            cfg: cfg.clone(),
+            dims,
+            variant,
+            template,
+            amax: act_level_max(ab),
+        })
+    }
+
+    /// Activation tensor length (c * h * w levels, channel-first).
+    pub fn input_len(&self) -> usize {
+        (self.dims.c * self.dims.h * self.dims.w) as usize
+    }
+
+    /// Output tensor length (co * ho * wo).
+    pub fn output_len(&self) -> usize {
+        self.cc.out.len
+    }
+
+    /// The weight tensor this model was frozen with (for building
+    /// golden references in tests).
+    pub fn weights(&self) -> &[Vec<Vec<u64>>] {
+        &self.template.wgt
+    }
+
+    /// Clamp + round one f32 into the activation level range.
+    pub fn quantize_level(&self, v: f32) -> u64 {
+        quantize(v, self.amax)
+    }
+
+    /// Run one inference: rebind `input` (flattened c-first activation
+    /// levels, quantized via [`Self::quantize_level`]) into a pooled
+    /// machine, execute the cached program, read the output back.
+    pub fn infer(
+        &mut self,
+        pool: &MachinePool,
+        input: &[f32],
+    ) -> Result<(Vec<i64>, RunReport), SimError> {
+        if input.len() != self.input_len() {
+            return Err(SimError::Unsupported("input length != c*h*w"));
+        }
+        let hw = (self.dims.h * self.dims.w) as usize;
+        let amax = self.amax;
+        for (c, row) in self.template.act.iter_mut().enumerate() {
+            for (i, lv) in row.iter_mut().enumerate() {
+                *lv = quantize(input[c * hw + i], amax);
+            }
+        }
+        let mut m = pool.acquire(&self.cfg, self.cc.mem_bytes);
+        // acquire() already reset the machine: skip execute()'s re-zeroing
+        let result = match self.cc.execute_fresh(&mut m, &self.template) {
+            Ok(rep) => self.cc.out.read_ints(&m.mem).map(|out| (out, rep)),
+            Err(e) => Err(e),
+        };
+        pool.release(m);
+        result
+    }
+}
+
+/// Clamp + round one f32 into `[0, amax]` levels (NaN -> 0).  Shared
+/// by the inference rebind loop and the public `quantize_level`.
+fn quantize(v: f32, amax: u64) -> u64 {
+    let hi = amax as f32;
+    let v = if v.is_nan() { 0.0 } else { v.clamp(0.0, hi) };
+    v.round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::workload::golden_exact;
+    use crate::ulppack::RegionMode;
+
+    fn model() -> (SimConvModel, ProgramCache) {
+        let cache = ProgramCache::new();
+        let m = SimConvModel::compile(
+            &ProcessorConfig::sparq(),
+            ConvDims { c: 4, h: 8, w: 8, co: 2, fh: 3, fw: 3 },
+            ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict },
+            0xFEED,
+            &cache,
+        )
+        .unwrap();
+        (m, cache)
+    }
+
+    #[test]
+    fn infer_matches_golden_on_fresh_activations() {
+        let (mut model, _cache) = model();
+        let pool = MachinePool::new();
+        // activations distinct from the template's: request-supplied
+        let input: Vec<f32> = (0..model.input_len()).map(|i| (i % 4) as f32).collect();
+        let (got, rep) = model.infer(&pool, &input).unwrap();
+        assert!(rep.stats.cycles > 0);
+        // golden: same weights, the request's activation levels
+        let mut wl = model.template.clone();
+        let hw = (model.dims.h * model.dims.w) as usize;
+        for (c, row) in wl.act.iter_mut().enumerate() {
+            for (i, lv) in row.iter_mut().enumerate() {
+                *lv = (input[c * hw + i]) as u64;
+            }
+        }
+        assert_eq!(got, golden_exact(&wl));
+    }
+
+    #[test]
+    fn repeated_inference_reuses_machines_and_cycles_are_stable() {
+        let (mut model, _cache) = model();
+        let pool = MachinePool::new();
+        let input: Vec<f32> = vec![1.0; model.input_len()];
+        let (_, r1) = model.infer(&pool, &input).unwrap();
+        let (_, r2) = model.infer(&pool, &input).unwrap();
+        assert_eq!(r1.stats.cycles, r2.stats.cycles);
+        assert_eq!(pool.stats().created, 1);
+        assert_eq!(pool.stats().reused, 1);
+    }
+
+    #[test]
+    fn out_of_range_inputs_are_clamped_not_wrapped() {
+        let (mut model, _) = model();
+        let pool = MachinePool::new();
+        let mut input = vec![0.0f32; model.input_len()];
+        input[0] = 999.0;
+        input[1] = -5.0;
+        input[2] = f32::NAN;
+        let (got, _) = model.infer(&pool, &input).unwrap();
+        assert_eq!(got.len(), model.output_len());
+        assert_eq!(model.quantize_level(999.0), 3); // A2 max level
+        assert_eq!(model.quantize_level(-5.0), 0);
+        assert_eq!(model.quantize_level(f32::NAN), 0);
+    }
+
+    #[test]
+    fn fp32_rejected() {
+        let cache = ProgramCache::new();
+        assert!(SimConvModel::compile(
+            &ProcessorConfig::ara(),
+            ConvDims { c: 2, h: 4, w: 4, co: 1, fh: 1, fw: 1 },
+            ConvVariant::Fp32,
+            1,
+            &cache,
+        )
+        .is_err());
+    }
+}

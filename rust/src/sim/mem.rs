@@ -2,15 +2,28 @@
 //! system's DRAM.  Kernel builders allocate tensors here and bake the
 //! resolved addresses into their instruction traces.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MemError {
-    #[error("access at {addr:#x}+{len} out of bounds (size {size:#x})")]
     OutOfBounds { addr: u64, len: usize, size: usize },
-    #[error("allocation of {0} bytes exceeds memory")]
     OutOfMemory(u64),
 }
+
+impl fmt::Display for MemError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            MemError::OutOfBounds { addr, len, size } => {
+                write!(f, "access at {addr:#x}+{len} out of bounds (size {size:#x})")
+            }
+            MemError::OutOfMemory(bytes) => {
+                write!(f, "allocation of {bytes} bytes exceeds memory")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
 
 /// Simulated main memory.
 #[derive(Debug, Clone)]
@@ -27,6 +40,13 @@ impl Mem {
 
     pub fn size(&self) -> usize {
         self.data.len()
+    }
+
+    /// Reset to the freshly-constructed state (all zeroes, allocator
+    /// rewound) — the machine-pool reuse path, cheaper than a realloc.
+    pub fn reset(&mut self) {
+        self.data.fill(0);
+        self.brk = 64;
     }
 
     /// Bump-allocate `bytes` with `align` (power of two) alignment.

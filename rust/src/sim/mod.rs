@@ -4,36 +4,74 @@
 
 pub mod exec;
 pub mod mem;
+pub mod pool;
 pub mod stats;
 pub mod timing;
 pub mod vrf;
 
 use crate::arch::{ProcessorConfig, Unit};
-use crate::isa::{Sew, VInst, VOp};
+use crate::isa::{EncodeError, Sew, VInst, VOp};
 use exec::ExecState;
 use mem::{Mem, MemError};
 use stats::Stats;
+pub use pool::MachinePool;
 pub use stats::RunReport;
-use thiserror::Error;
+use std::fmt;
 use timing::Timing;
 use vrf::Vrf;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SimError {
-    #[error("memory fault: {0}")]
-    Mem(#[from] MemError),
-    #[error("illegal instruction: {0} needs the FPU (removed on Sparq)")]
+    Mem(MemError),
     NoFpu(&'static str),
-    #[error("illegal instruction: vmacsr is not implemented on this core")]
     NoVmacsr,
-    #[error("illegal instruction: vmacsr.cfg needs the configurable-shifter extension")]
     NoCfgShifter,
-    #[error("illegal instruction: v{reg} not aligned to LMUL={lmul} group")]
     Misaligned { reg: u8, lmul: u32 },
-    #[error("illegal instruction: v{reg} group of {lmul} extends past v31")]
     GroupPastV31 { reg: u8, lmul: u32 },
-    #[error("unsupported by this model: {0}")]
     Unsupported(&'static str),
+    /// A kernel builder constructed an instruction with no machine
+    /// encoding (surfaced as a `Result` instead of a builder panic).
+    Encode(EncodeError),
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            SimError::Mem(ref e) => write!(f, "memory fault: {e}"),
+            SimError::NoFpu(op) => {
+                write!(f, "illegal instruction: {op} needs the FPU (removed on Sparq)")
+            }
+            SimError::NoVmacsr => {
+                write!(f, "illegal instruction: vmacsr is not implemented on this core")
+            }
+            SimError::NoCfgShifter => write!(
+                f,
+                "illegal instruction: vmacsr.cfg needs the configurable-shifter extension"
+            ),
+            SimError::Misaligned { reg, lmul } => {
+                write!(f, "illegal instruction: v{reg} not aligned to LMUL={lmul} group")
+            }
+            SimError::GroupPastV31 { reg, lmul } => {
+                write!(f, "illegal instruction: v{reg} group of {lmul} extends past v31")
+            }
+            SimError::Unsupported(what) => write!(f, "unsupported by this model: {what}"),
+            SimError::Encode(ref e) => write!(f, "unencodable instruction: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+impl From<MemError> for SimError {
+    fn from(e: MemError) -> SimError {
+        SimError::Mem(e)
+    }
+}
+
+impl From<EncodeError> for SimError {
+    fn from(e: EncodeError) -> SimError {
+        SimError::Encode(e)
+    }
 }
 
 /// A dynamic instruction trace plus the work it claims to perform.
@@ -63,6 +101,18 @@ impl Program {
     pub fn is_empty(&self) -> bool {
         self.insts.is_empty()
     }
+
+    /// Encode the whole trace to its 32-bit machine words — the
+    /// architectural view of the stream (what an AOT emitter would
+    /// write to an ELF).  A builder that constructed an unencodable
+    /// instruction surfaces here as [`SimError::Encode`] instead of a
+    /// panic.
+    pub fn machine_code(&self) -> Result<Vec<u32>, SimError> {
+        self.insts
+            .iter()
+            .map(|i| crate::isa::encode(i).map_err(SimError::from))
+            .collect()
+    }
 }
 
 /// The simulated machine: configuration + architectural state + memory.
@@ -78,6 +128,28 @@ impl Machine {
     pub fn new(cfg: ProcessorConfig, mem_bytes: usize) -> Machine {
         let vrf = Vrf::new(cfg.vlen_bits);
         Machine { cfg, mem: Mem::new(mem_bytes), vrf, state: ExecState::default() }
+    }
+
+    /// Reset architectural state in place (memory zeroed + allocator
+    /// rewound, VRF zeroed, vtype/vl/CSRs cleared) — equivalent to a
+    /// fresh `Machine::new` with the same configuration, without the
+    /// reallocation.  The machine pool calls this between executions.
+    pub fn reset(&mut self) {
+        self.mem.reset();
+        self.vrf.clear();
+        self.state = ExecState::default();
+    }
+
+    /// Reset, growing the simulated DRAM to at least `mem_bytes` if the
+    /// current allocation is too small (pool reuse across workloads).
+    pub fn reset_for(&mut self, mem_bytes: usize) {
+        if self.mem.size() < mem_bytes {
+            self.mem = Mem::new(mem_bytes);
+        } else {
+            self.mem.reset();
+        }
+        self.vrf.clear();
+        self.state = ExecState::default();
     }
 
     /// Set the configurable-shifter CSR (vmacsr.cfg extension).
@@ -249,6 +321,37 @@ mod tests {
         p.push(VInst::SetVl { avl: 4, sew: Sew::E16, lmul: Lmul::M1 });
         p.push(VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 0 });
         assert_eq!(m.run(&p).unwrap_err(), SimError::NoVmacsr);
+    }
+
+    #[test]
+    fn program_machine_code_encodes_or_errors_typed() {
+        let mut p = Program::new("enc");
+        p.push(VInst::SetVl { avl: 4, sew: Sew::E16, lmul: Lmul::M1 });
+        p.push(VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 7 });
+        let words = p.machine_code().unwrap();
+        assert_eq!(words.len(), 2);
+        // an unencodable instruction is a typed error, not a panic
+        p.push(VInst::OpVI { op: VOp::Macc, vd: 1, vs2: 2, imm: 0 });
+        assert!(matches!(p.machine_code(), Err(SimError::Encode(_))));
+    }
+
+    #[test]
+    fn reset_machine_reruns_bit_identically() {
+        let mut m = machine();
+        let mut p = Program::new("rr");
+        p.push(VInst::SetVl { avl: 8, sew: Sew::E16, lmul: Lmul::M1 });
+        p.push(VInst::OpVX { op: VOp::Macc, vd: 2, vs2: 4, rs1: 3 });
+        p.push(VInst::Store { eew: Sew::E16, vs3: 2, addr: 0x100 });
+        let r1 = m.run(&p).unwrap();
+        let o1 = m.mem.read_u16s(0x100, 8).unwrap();
+        m.reset();
+        let r2 = m.run(&p).unwrap();
+        assert_eq!(o1, m.mem.read_u16s(0x100, 8).unwrap());
+        assert_eq!(r1.stats.cycles, r2.stats.cycles);
+        m.reset_for(1 << 22); // grow
+        assert!(m.mem.size() >= 1 << 22);
+        let r3 = m.run(&p).unwrap();
+        assert_eq!(r1.stats.cycles, r3.stats.cycles);
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! The machine pool — reset-in-place reuse of simulated machines for
+//! compile-once / execute-many serving and sweeps.
+//!
+//! `Machine::new` allocates the simulated DRAM and VRF on every call;
+//! on repeated workloads (a serving worker, a bench sweep) that
+//! allocation plus the instruction-stream rebuild dominates the
+//! non-simulation cost.  The pool keeps finished machines, bucketed by
+//! processor configuration (compared by value — a bucket can never
+//! hand out a wrong-config machine), and hands them back after a
+//! `Machine::reset_for` — architecturally indistinguishable from a
+//! fresh machine.
+//!
+//! Sharing model: the pool is `Sync` (internally locked), but the
+//! serving coordinator deliberately gives each worker its *own* pool
+//! (one machine per worker in steady state, no cross-worker lock
+//! traffic) while sharing one `ProgramCache` via `Arc` — see
+//! DESIGN.md §"Compile once, execute many".
+
+use super::Machine;
+use crate::arch::ProcessorConfig;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Pool counters (diagnostics; `reused / (created + reused)` is the
+/// hit rate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    pub created: u64,
+    pub reused: u64,
+    /// Machines currently parked in the pool.
+    pub idle: u64,
+}
+
+/// A pool of reusable simulated machines, bucketed by configuration.
+#[derive(Debug, Default)]
+pub struct MachinePool {
+    buckets: Mutex<HashMap<ProcessorConfig, Vec<Machine>>>,
+    created: AtomicU64,
+    reused: AtomicU64,
+}
+
+/// Per-bucket cap: a serving worker needs one machine; sweeps over a
+/// few sizes need a handful.  Beyond this, released machines are
+/// dropped instead of parked.
+const MAX_IDLE_PER_BUCKET: usize = 8;
+
+impl MachinePool {
+    pub fn new() -> MachinePool {
+        MachinePool::default()
+    }
+
+    /// Take a machine for `cfg` with at least `mem_bytes` of simulated
+    /// DRAM, reset and ready to run — reusing a parked machine when one
+    /// exists, allocating otherwise.
+    pub fn acquire(&self, cfg: &ProcessorConfig, mem_bytes: usize) -> Machine {
+        let reusable = {
+            let mut buckets = self.buckets.lock().unwrap();
+            match buckets.get_mut(cfg) {
+                Some(v) if !v.is_empty() => {
+                    // prefer one whose DRAM already fits (avoids a grow)
+                    let i = v
+                        .iter()
+                        .position(|m| m.mem.size() >= mem_bytes)
+                        .unwrap_or(v.len() - 1);
+                    Some(v.swap_remove(i))
+                }
+                _ => None,
+            }
+        };
+        match reusable {
+            Some(mut m) => {
+                m.reset_for(mem_bytes);
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                m
+            }
+            None => {
+                self.created.fetch_add(1, Ordering::Relaxed);
+                Machine::new(cfg.clone(), mem_bytes)
+            }
+        }
+    }
+
+    /// Return a machine to the pool for later reuse.
+    pub fn release(&self, m: Machine) {
+        let mut buckets = self.buckets.lock().unwrap();
+        let v = buckets.entry(m.cfg.clone()).or_default();
+        if v.len() < MAX_IDLE_PER_BUCKET {
+            v.push(m);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let idle = self.buckets.lock().unwrap().values().map(|v| v.len() as u64).sum();
+        PoolStats {
+            created: self.created.load(Ordering::Relaxed),
+            reused: self.reused.load(Ordering::Relaxed),
+            idle,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_released_machines() {
+        let pool = MachinePool::new();
+        let cfg = ProcessorConfig::sparq();
+        for _ in 0..4 {
+            let m = pool.acquire(&cfg, 1 << 16);
+            pool.release(m);
+        }
+        let s = pool.stats();
+        assert_eq!(s.created, 1);
+        assert_eq!(s.reused, 3);
+        assert_eq!(s.idle, 1);
+    }
+
+    #[test]
+    fn different_configs_use_different_buckets() {
+        let pool = MachinePool::new();
+        let a = pool.acquire(&ProcessorConfig::sparq(), 1 << 16);
+        pool.release(a);
+        // ara must not receive the parked sparq machine
+        let b = pool.acquire(&ProcessorConfig::ara(), 1 << 16);
+        assert!(b.cfg.fpu);
+        assert_eq!(pool.stats().created, 2);
+    }
+
+    #[test]
+    fn grows_memory_on_demand() {
+        let pool = MachinePool::new();
+        let cfg = ProcessorConfig::sparq();
+        let m = pool.acquire(&cfg, 1 << 12);
+        pool.release(m);
+        let m = pool.acquire(&cfg, 1 << 20);
+        assert!(m.mem.size() >= 1 << 20);
+        assert_eq!(pool.stats().reused, 1);
+    }
+
+    #[test]
+    fn bucket_capped() {
+        let pool = MachinePool::new();
+        let cfg = ProcessorConfig::sparq();
+        let machines: Vec<_> = (0..12).map(|_| pool.acquire(&cfg, 1 << 10)).collect();
+        for m in machines {
+            pool.release(m);
+        }
+        assert!(pool.stats().idle as usize <= super::MAX_IDLE_PER_BUCKET);
+    }
+}

@@ -21,6 +21,11 @@ impl Vrf {
         self.vlenb
     }
 
+    /// Zero every register (machine-pool reset).
+    pub fn clear(&mut self) {
+        self.bytes.fill(0);
+    }
+
     #[inline]
     fn base(&self, v: u8) -> usize {
         v as usize * self.vlenb as usize

@@ -54,7 +54,7 @@ impl Container {
 }
 
 /// Region-admission policy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RegionMode {
     /// Worst-case-guaranteed: every input combination is exact.
     Strict,

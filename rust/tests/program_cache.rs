@@ -1,0 +1,155 @@
+//! Cache correctness: a cached `Program` re-executed on rebound
+//! tensors must be bit-identical — conv outputs *and* `RunReport`
+//! cycle counts — to a cold build, across Int16 / Native / Vmacsr
+//! variants and both `RegionMode`s.  This is the contract that makes
+//! compile-once/execute-many serving sound.
+
+use sparq::arch::ProcessorConfig;
+use sparq::kernels::workload::golden_exact;
+use sparq::kernels::{
+    compile_conv, run_conv, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload,
+};
+use sparq::sim::{Machine, MachinePool};
+use sparq::ulppack::RegionMode;
+
+fn dims() -> ConvDims {
+    ConvDims { c: 8, h: 10, w: 40, co: 2, fh: 3, fw: 3 }
+}
+
+/// Every (variant, processor) pair the matrix covers: both containers
+/// (ULP via W2A2, LP via W3A3/W4A4) and both region modes.
+fn matrix() -> Vec<(ConvVariant, ProcessorConfig)> {
+    let sparq = ProcessorConfig::sparq;
+    let ara = ProcessorConfig::ara;
+    vec![
+        (ConvVariant::Int16, sparq()),
+        (ConvVariant::Native { w_bits: 2, a_bits: 2 }, ara()),
+        (ConvVariant::Native { w_bits: 1, a_bits: 1 }, ara()),
+        (ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict }, sparq()),
+        (ConvVariant::Vmacsr { w_bits: 3, a_bits: 3, mode: RegionMode::Strict }, sparq()),
+        (ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper }, sparq()),
+        (ConvVariant::Vmacsr { w_bits: 4, a_bits: 4, mode: RegionMode::Paper }, sparq()),
+    ]
+}
+
+#[test]
+fn cached_execution_bit_identical_to_cold_build() {
+    let cache = ProgramCache::new();
+    let pool = MachinePool::new();
+    for (variant, cfg) in matrix() {
+        let (wb, ab) = variant.bits();
+        let wl = Workload::random(dims(), wb, ab, 0xCAFE);
+
+        // cold: the seed's rebuild-every-call path
+        let cold = run_conv(&cfg, &wl, variant).unwrap();
+        let cold_out = cold.out.read_ints(&cold.machine.mem).unwrap();
+
+        // warm: cached program on a pooled, reset-in-place machine — 3x
+        for rep in 0..3 {
+            let cc = cache.get_or_compile(&cfg, &wl, variant, EngineOpts::default()).unwrap();
+            let mut m = pool.acquire(&cfg, cc.mem_bytes);
+            let report = cc.execute(&mut m, &wl).unwrap();
+            let out = cc.out.read_ints(&m.mem).unwrap();
+            pool.release(m);
+            assert_eq!(out, cold_out, "{variant:?} rep {rep}: outputs diverged");
+            assert_eq!(
+                report.stats.cycles,
+                cold.report.stats.cycles,
+                "{variant:?} rep {rep}: cycle counts diverged"
+            );
+            assert_eq!(report.label, cold.report.label, "{variant:?}: labels diverged");
+            assert_eq!(report.macs, cold.report.macs);
+        }
+    }
+    let s = cache.stats();
+    assert_eq!(s.misses as usize, matrix().len(), "each variant compiles exactly once");
+    assert_eq!(s.hits as usize, 2 * matrix().len());
+    assert!(pool.stats().reused > 0, "pool never reused a machine");
+}
+
+#[test]
+fn rebinding_fresh_activations_matches_a_fresh_build() {
+    // the serving scenario: weights frozen at compile time, activations
+    // changing per request
+    let cfg = ProcessorConfig::sparq();
+    let variant = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict };
+    let wl = Workload::random(dims(), 2, 2, 0xBEEF);
+    let cc = compile_conv(&cfg, &wl, variant).unwrap();
+
+    // a second workload: same weights, different activations
+    let mut wl2 = wl.clone();
+    for row in wl2.act.iter_mut() {
+        for v in row.iter_mut() {
+            *v = (*v + 1) % 4; // stay in the A2 level range
+        }
+    }
+
+    let mut m = Machine::new(cfg.clone(), wl2.mem_bytes());
+    let report = cc.execute(&mut m, &wl2).unwrap();
+    let out = cc.out.read_ints(&m.mem).unwrap();
+
+    // reference: a cold build on wl2 (same weights -> same program)
+    let fresh = run_conv(&cfg, &wl2, variant).unwrap();
+    assert_eq!(out, fresh.out.read_ints(&fresh.machine.mem).unwrap());
+    assert_eq!(report.stats.cycles, fresh.report.stats.cycles);
+    // and the strict-region kernel is still exact on the new data
+    assert_eq!(out, golden_exact(&wl2));
+}
+
+#[test]
+fn offline_packing_opts_cached_too() {
+    // both RegionModes x both packing modes through the cache
+    let cfg = ProcessorConfig::sparq();
+    for mode in [RegionMode::Strict, RegionMode::Paper] {
+        let variant = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode };
+        let wl = Workload::random(dims(), 2, 2, 0xD00D);
+        for opts in [
+            EngineOpts::default(),
+            EngineOpts { runtime_act_pack: false, runtime_weight_pack: false },
+        ] {
+            let cache = ProgramCache::new();
+            let pool = MachinePool::new();
+            let cold = sparq::kernels::run_conv_opts(&cfg, &wl, variant, opts).unwrap();
+            let rep =
+                sparq::kernels::run_conv_cached(&cache, &pool, &cfg, &wl, variant, opts).unwrap();
+            assert_eq!(rep.stats.cycles, cold.report.stats.cycles, "{mode:?} {opts:?}");
+        }
+    }
+}
+
+#[test]
+fn execute_rejects_mismatched_machine_or_workload() {
+    let cfg = ProcessorConfig::sparq();
+    let variant = ConvVariant::Int16;
+    let wl = Workload::random(dims(), 8, 8, 0xF00);
+    let cc = compile_conv(&cfg, &wl, variant).unwrap();
+
+    // wrong processor config
+    let mut wrong_m = Machine::new(ProcessorConfig::ara(), wl.mem_bytes());
+    assert!(cc.execute(&mut wrong_m, &wl).is_err());
+
+    // wrong workload shape
+    let small = Workload::random(ConvDims { c: 4, h: 6, w: 8, co: 1, fh: 3, fw: 3 }, 8, 8, 1);
+    let mut m = Machine::new(cfg.clone(), wl.mem_bytes());
+    assert!(cc.execute(&mut m, &small).is_err());
+
+    // right inputs still fine on the same machine afterwards
+    assert!(cc.execute(&mut m, &wl).is_ok());
+}
+
+#[test]
+fn compiled_program_is_machine_free_and_reusable_across_machines() {
+    let cfg = ProcessorConfig::sparq();
+    let variant = ConvVariant::Vmacsr { w_bits: 3, a_bits: 3, mode: RegionMode::Strict };
+    let wl = Workload::random(dims(), 3, 3, 0xABC);
+    let cc = compile_conv(&cfg, &wl, variant).unwrap();
+    let golden = golden_exact(&wl);
+    let mut outs = Vec::new();
+    for _ in 0..2 {
+        let mut m = Machine::new(cfg.clone(), wl.mem_bytes());
+        cc.execute(&mut m, &wl).unwrap();
+        outs.push(cc.out.read_ints(&m.mem).unwrap());
+    }
+    assert_eq!(outs[0], outs[1]);
+    assert_eq!(outs[0], golden);
+}
