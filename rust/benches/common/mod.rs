@@ -38,3 +38,99 @@ impl Bench {
 pub fn large_flag() -> bool {
     std::env::args().any(|a| a == "--large")
 }
+
+/// `--json` flag passthrough (cargo bench -- --json): also write the
+/// bench's numbers to a `BENCH_<name>.json` artifact so the perf
+/// trajectory is machine-trackable across PRs (CI uploads it).
+pub fn json_flag() -> bool {
+    std::env::args().any(|a| a == "--json")
+}
+
+/// Minimal hand-rolled JSON object writer — the crate set is
+/// dependency-free, and the benches only need flat/nested objects of
+/// numbers and strings.
+pub struct Json {
+    buf: String,
+    first: bool,
+}
+
+impl Default for Json {
+    fn default() -> Json {
+        Json::new()
+    }
+}
+
+impl Json {
+    pub fn new() -> Json {
+        Json { buf: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        self.buf.push('"');
+        self.buf.push_str(&escape(k));
+        self.buf.push_str("\":");
+    }
+
+    pub fn num(&mut self, k: &str, v: f64) -> &mut Json {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    pub fn int(&mut self, k: &str, v: u64) -> &mut Json {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Json {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    /// Nested object: `j.obj("inner", |j| { j.int("x", 1); })`.
+    pub fn obj(&mut self, k: &str, f: impl FnOnce(&mut Json)) -> &mut Json {
+        self.key(k);
+        let mut inner = Json::new();
+        f(&mut inner);
+        self.buf.push_str(&inner.finish());
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+
+    /// Serialize and write to `path` (panics on IO errors — bench-only).
+    pub fn write(self, path: &str) {
+        let s = self.finish();
+        std::fs::write(path, &s).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path} ({} bytes)", s.len());
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

@@ -3,28 +3,42 @@
 //! instructions/s) on the Fig. 4 inner loop, so optimization work has a
 //! stable number to move.
 //!
-//! The `cached vs uncached` section is the compile-once/execute-many
-//! acceptance check: a Fig. 4-style repeated sweep through the program
-//! cache + machine pool must beat the seed's rebuild-every-call path
-//! while producing bit-identical conv outputs and cycle counts.
+//! Three acceptance sections:
+//!
+//! * per-variant host throughput through the full compiled path;
+//! * `compiled vs seed path` — the same E8 vmacsr inner-loop program
+//!   executed by the interpreting `Machine::run` (the seed engine) and
+//!   by the pre-compiled SWAR `Machine::run_compiled`, with identical
+//!   memory and cycle counts asserted;
+//! * `cached vs uncached` — the compile-once/execute-many check: a
+//!   Fig. 4-style repeated sweep through the program cache + machine
+//!   pool must beat rebuild-every-call bit-identically.
+//!
+//! `-- --json` additionally writes `BENCH_simspeed.json` (host
+//! element-ops/s, sim-Mcycles/s, cached-vs-uncached ratio per variant,
+//! compiled-vs-seed speedup) so the perf trajectory is tracked across
+//! PRs; CI uploads it as an artifact.
 
 mod common;
 
-use common::{large_flag, Bench};
+use common::{json_flag, large_flag, Bench, Json};
 use std::time::Instant;
 
 use sparq::arch::ProcessorConfig;
 use sparq::kernels::{
-    run_conv, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload,
+    compile_conv, run_conv, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload,
 };
-use sparq::sim::MachinePool;
+use sparq::sim::{Machine, MachinePool};
 use sparq::ulppack::RegionMode;
 
 fn main() {
     let b = Bench::new("simspeed");
     let large = large_flag();
     let dims = if large { ConvDims::fig4(true) } else { ConvDims::fig4(false) };
+    let mut json = Json::new();
+    json.str("bench", "simspeed").int("large", large as u64);
 
+    let mut variant_stats: Vec<(String, f64, f64, u64, f64)> = Vec::new();
     for (label, variant) in [
         ("int16", ConvVariant::Int16),
         ("vmacsr-ulp-w2a2", ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper }),
@@ -48,64 +62,152 @@ fn main() {
             insts,
             insts as f64 / dt / 1e6,
         );
+        variant_stats.push((label.to_string(), dt, eops / dt, insts, insts as f64 / dt));
     }
 
+    // ---- compiled micro-ops vs the seed interpreter ----
+    let (seed_s, comp_s, seed_eops, comp_eops) =
+        b.section("compiled vs seed path (E8 vmacsr inner loop)", || {
+            let reps = if large { 2 } else { 6 };
+            let cfg = ProcessorConfig::sparq();
+            // ULP W2A2 is the paper's headline kernel: an E8 vmacsr
+            // inner loop with slides and widening-spill drains
+            let variant = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
+            let wl = Workload::random(dims, 2, 2, 9);
+            let cc = compile_conv(&cfg, &wl, variant).expect("compile");
+            let cp = cc.compiled.as_ref().expect("legal stream must pre-compile");
+            let (bulk, swar, generic) = cp.strategy_counts();
+            println!("  strategy mix: {bulk} bulk | {swar} swar | {generic} generic micro-ops");
+
+            // two machines, identically bound once; each engine re-runs
+            // the same stream in place (state drift is identical on
+            // both sides, so outputs/cycles must stay equal rep by rep)
+            let mut m_seed = Machine::new(cfg.clone(), cc.mem_bytes);
+            let mut m_comp = Machine::new(cfg.clone(), cc.mem_bytes);
+            sparq::kernels::conv_engine::bind(&mut m_seed, &wl, &cc).expect("bind");
+            sparq::kernels::conv_engine::bind(&mut m_comp, &wl, &cc).expect("bind");
+
+            let t = Instant::now();
+            let mut seed_eops = 0u64;
+            let mut seed_cycles = Vec::new();
+            for _ in 0..reps {
+                let r = m_seed.run(&cc.prog).expect("seed run");
+                seed_eops += r.stats.element_ops;
+                seed_cycles.push(r.stats.cycles);
+            }
+            let seed_s = t.elapsed().as_secs_f64();
+
+            let t = Instant::now();
+            let mut comp_eops = 0u64;
+            let mut comp_cycles = Vec::new();
+            for _ in 0..reps {
+                let r = m_comp.run_compiled(cp).expect("compiled run");
+                comp_eops += r.stats.element_ops;
+                comp_cycles.push(r.stats.cycles);
+            }
+            let comp_s = t.elapsed().as_secs_f64();
+
+            assert_eq!(seed_cycles, comp_cycles, "engines disagree on cycle counts");
+            assert_eq!(
+                m_seed.mem.read(0, m_seed.mem.size()).unwrap(),
+                m_comp.mem.read(0, m_comp.mem.size()).unwrap(),
+                "engines disagree on memory"
+            );
+            let se = seed_eops as f64 / seed_s;
+            let ce = comp_eops as f64 / comp_s;
+            println!(
+                "  {reps} reps | seed {seed_s:.3}s ({:.1} M eops/s) | compiled {comp_s:.3}s ({:.1} M eops/s) | {:.2}x host speedup",
+                se / 1e6,
+                ce / 1e6,
+                ce / se
+            );
+            (seed_s, comp_s, se, ce)
+        });
+
     // ---- compile-once/execute-many vs rebuild-every-call ----
-    b.section("cached vs uncached (Fig. 4-style repeated sweep)", || {
-        let reps = if large { 3 } else { 5 };
-        let cfg = ProcessorConfig::sparq();
-        let variant = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
-        let wl = Workload::random(dims, 2, 2, 9);
+    let (t_uncached, t_cached) =
+        b.section("cached vs uncached (Fig. 4-style repeated sweep)", || {
+            let reps = if large { 3 } else { 5 };
+            let cfg = ProcessorConfig::sparq();
+            let variant = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper };
+            let wl = Workload::random(dims, 2, 2, 9);
 
-        // the seed's path: rebuild the machine + instruction stream per rep
-        let t = Instant::now();
-        let mut cold_outs = Vec::new();
-        let mut cold_cycles = Vec::new();
-        for _ in 0..reps {
-            let run = run_conv(&cfg, &wl, variant).expect("uncached");
-            cold_outs = run.out.read_ints(&run.machine.mem).expect("read");
-            cold_cycles.push(run.report.stats.cycles);
-        }
-        let t_uncached = t.elapsed().as_secs_f64();
+            // the seed's path: rebuild the machine + instruction stream per rep
+            let t = Instant::now();
+            let mut cold_outs = Vec::new();
+            let mut cold_cycles = Vec::new();
+            for _ in 0..reps {
+                let run = run_conv(&cfg, &wl, variant).expect("uncached");
+                cold_outs = run.out.read_ints(&run.machine.mem).expect("read");
+                cold_cycles.push(run.report.stats.cycles);
+            }
+            let t_uncached = t.elapsed().as_secs_f64();
 
-        // the cached path: compile once, execute on a pooled machine
-        let cache = ProgramCache::new();
-        let pool = MachinePool::new();
-        let t = Instant::now();
-        let mut warm_outs = Vec::new();
-        let mut warm_cycles = Vec::new();
-        for _ in 0..reps {
-            let cc = cache
-                .get_or_compile(&cfg, &wl, variant, EngineOpts::default())
-                .expect("compile");
-            let mut m = pool.acquire(&cfg, cc.mem_bytes);
-            let rep = cc.execute(&mut m, &wl).expect("execute");
-            warm_outs = cc.out.read_ints(&m.mem).expect("read");
-            warm_cycles.push(rep.stats.cycles);
-            pool.release(m);
-        }
-        let t_cached = t.elapsed().as_secs_f64();
+            // the cached path: compile once, execute on a pooled machine
+            let cache = ProgramCache::new();
+            let pool = MachinePool::new();
+            let t = Instant::now();
+            let mut warm_outs = Vec::new();
+            let mut warm_cycles = Vec::new();
+            for _ in 0..reps {
+                let cc = cache
+                    .get_or_compile(&cfg, &wl, variant, EngineOpts::default())
+                    .expect("compile");
+                let mut m = pool.acquire(&cfg, cc.mem_bytes);
+                let rep = cc.execute(&mut m, &wl).expect("execute");
+                warm_outs = cc.out.read_ints(&m.mem).expect("read");
+                warm_cycles.push(rep.stats.cycles);
+                pool.release(m);
+            }
+            let t_cached = t.elapsed().as_secs_f64();
 
-        // correctness gate: identical outputs and identical cycle counts
-        assert_eq!(cold_outs, warm_outs, "cached outputs diverged");
-        assert_eq!(cold_cycles, warm_cycles, "cached cycle counts diverged");
-        let cs = cache.stats();
-        assert_eq!(cs.misses, 1, "program must compile exactly once");
-        assert_eq!(cs.hits as usize, reps - 1);
+            // correctness gate: identical outputs and identical cycle counts
+            assert_eq!(cold_outs, warm_outs, "cached outputs diverged");
+            assert_eq!(cold_cycles, warm_cycles, "cached cycle counts diverged");
+            let cs = cache.stats();
+            assert_eq!(cs.misses, 1, "program must compile exactly once");
+            assert_eq!(cs.hits as usize, reps - 1);
 
-        println!(
-            "  {reps} reps | rebuild-every-call {t_uncached:.3}s | compile-once {t_cached:.3}s | {:.2}x faster",
-            t_uncached / t_cached
-        );
-        println!(
-            "  identical outputs ({} elems) and cycle counts ({} cycles); cache: 1 compile + {} hits; pool: {} machine(s) created, {} reuses",
-            warm_outs.len(),
-            warm_cycles[0],
-            cs.hits,
-            pool.stats().created,
-            pool.stats().reused,
-        );
-    });
+            println!(
+                "  {reps} reps | rebuild-every-call {t_uncached:.3}s | compile-once {t_cached:.3}s | {:.2}x faster",
+                t_uncached / t_cached
+            );
+            println!(
+                "  identical outputs ({} elems) and cycle counts ({} cycles); cache: 1 compile + {} hits; pool: {} machine(s) created, {} reuses",
+                warm_outs.len(),
+                warm_cycles[0],
+                cs.hits,
+                pool.stats().created,
+                pool.stats().reused,
+            );
+            (t_uncached, t_cached)
+        });
+
+    if json_flag() {
+        json.obj("variants", |j| {
+            for (label, dt, eops_s, cycles, mcyc_s) in &variant_stats {
+                j.obj(label, |j| {
+                    j.num("host_s", *dt)
+                        .num("element_ops_per_s", *eops_s)
+                        .int("sim_cycles", *cycles)
+                        .num("sim_cycles_per_s", *mcyc_s);
+                });
+            }
+        });
+        json.obj("compiled_vs_seed", |j| {
+            j.num("seed_s", seed_s)
+                .num("compiled_s", comp_s)
+                .num("seed_element_ops_per_s", seed_eops)
+                .num("compiled_element_ops_per_s", comp_eops)
+                .num("speedup", comp_eops / seed_eops);
+        });
+        json.obj("cached_vs_uncached", |j| {
+            j.num("uncached_s", t_uncached)
+                .num("cached_s", t_cached)
+                .num("ratio", t_uncached / t_cached);
+        });
+        json.write("BENCH_simspeed.json");
+    }
 
     b.finish();
 }

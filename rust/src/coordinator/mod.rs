@@ -304,7 +304,10 @@ impl Executor for PjrtExecutor {
 /// from a [`ProgramCache`] **shared across all workers** (via the
 /// factory's `Arc`); each worker owns a *private* [`MachinePool`], so
 /// steady-state serving holds one machine per worker with no
-/// cross-worker lock traffic.
+/// cross-worker lock traffic.  What each worker actually executes is
+/// the cached micro-op form (`sim::CompiledProgram`, DESIGN.md §Perf)
+/// — per-request host work is activation rebind + word-parallel
+/// execution, with zero per-instruction re-validation.
 ///
 /// Request contract: an "image" is the flattened (c, h, w) activation
 /// tensor as f32 levels (clamped + rounded into the A-bit range); the

@@ -9,7 +9,10 @@
 //! tensors* — weights are baked into the stream as resolved `.vx`
 //! scalar operands, so two workloads sharing dims but not weights must
 //! not share a program.  Nothing is compared by hash digest: a cache
-//! hit can never serve a program compiled from different inputs.  The
+//! hit can never serve a program compiled from different inputs.  (A
+//! precomputed FNV-1a fingerprint cheapens the *lookup* — it is the
+//! map hash and an equality pre-filter, never the verdict; see
+//! [`ConvKey`].)  The
 //! weight words cost a few hundred KB per entry at most, dwarfed by
 //! the cached instruction stream itself.  Activations are deliberately
 //! *not* keyed: they rebind per execution (`CompiledConv::execute`).
@@ -23,7 +26,9 @@ use super::workload::{ConvDims, Workload};
 use super::ConvVariant;
 use crate::arch::ProcessorConfig;
 use crate::sim::SimError;
+use crate::ulppack::RegionMode;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -37,8 +42,18 @@ pub struct CacheStats {
 
 /// The cache key: every compile input compared exactly, weight words
 /// included (see the module docs).
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+///
+/// `fp` is a hand-rolled FNV-1a fingerprint over all the fields below.
+/// It is a *pre-filter only*: `Hash` is just this one word (so map
+/// lookups stop re-hashing the flattened weight vector on every call)
+/// and `PartialEq` checks it before the field-by-field compare (so
+/// probes against non-matching entries short-circuit without touching
+/// the weights).  Equality itself remains exact — a fingerprint match
+/// never *admits* a hit on its own, preserving the "no hash-digest
+/// shortcuts" contract above.
+#[derive(Debug, Clone)]
 pub struct ConvKey {
+    fp: u64,
     cfg: ProcessorConfig,
     dims: ConvDims,
     variant: ConvVariant,
@@ -47,6 +62,113 @@ pub struct ConvKey {
     a_bits: u32,
     /// The flattened weight tensors, by value.
     wgt: Vec<u64>,
+}
+
+impl PartialEq for ConvKey {
+    fn eq(&self, o: &ConvKey) -> bool {
+        // cheap fingerprint first; the exact compare still decides
+        self.fp == o.fp
+            && self.cfg == o.cfg
+            && self.dims == o.dims
+            && self.variant == o.variant
+            && self.opts == o.opts
+            && self.w_bits == o.w_bits
+            && self.a_bits == o.a_bits
+            && self.wgt == o.wgt
+    }
+}
+
+impl Eq for ConvKey {}
+
+impl Hash for ConvKey {
+    fn hash<H: Hasher>(&self, h: &mut H) {
+        // equal keys have equal fields, hence equal fingerprints — the
+        // Hash/Eq contract holds with only the fingerprint hashed
+        self.fp.hash(h);
+    }
+}
+
+/// Hand-rolled 64-bit FNV-1a (the crate is dependency-free).
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    #[inline]
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+}
+
+fn fingerprint(
+    cfg: &ProcessorConfig,
+    dims: ConvDims,
+    variant: ConvVariant,
+    opts: EngineOpts,
+    w_bits: u32,
+    a_bits: u32,
+    wgt: &[u64],
+) -> u64 {
+    let mut f = Fnv1a::new();
+    f.bytes(cfg.name.as_bytes());
+    f.u32(cfg.name.len() as u32); // length-delimit the only string field
+    for v in [
+        cfg.lanes,
+        cfg.vlen_bits,
+        cfg.datapath_bits,
+        cfg.fpu as u32,
+        cfg.vmacsr as u32,
+        cfg.configurable_shifter as u32,
+        cfg.mem_bytes_per_cycle,
+        cfg.issue_latency,
+        cfg.mem_latency,
+        cfg.issue_bubble,
+    ] {
+        f.u32(v);
+    }
+    for v in [dims.c, dims.h, dims.w, dims.co, dims.fh, dims.fw] {
+        f.u32(v);
+    }
+    match variant {
+        ConvVariant::Int16 => f.u32(0),
+        ConvVariant::Fp32 => f.u32(1),
+        ConvVariant::Native { w_bits, a_bits } => {
+            f.u32(2);
+            f.u32(w_bits);
+            f.u32(a_bits);
+        }
+        ConvVariant::Vmacsr { w_bits, a_bits, mode } => {
+            f.u32(3);
+            f.u32(w_bits);
+            f.u32(a_bits);
+            f.u32(match mode {
+                RegionMode::Strict => 0,
+                RegionMode::Paper => 1,
+            });
+        }
+    }
+    f.u32(opts.runtime_weight_pack as u32);
+    f.u32(opts.runtime_act_pack as u32);
+    f.u32(w_bits);
+    f.u32(a_bits);
+    for &w in wgt {
+        f.u64(w);
+    }
+    f.0
 }
 
 /// Flatten the weight tensors into the key's word list: integer levels
@@ -90,14 +212,16 @@ impl ProgramCache {
         variant: ConvVariant,
         opts: EngineOpts,
     ) -> ConvKey {
+        let wgt = weight_words(wl, variant);
         ConvKey {
+            fp: fingerprint(cfg, wl.dims, variant, opts, wl.w_bits, wl.a_bits, &wgt),
             cfg: cfg.clone(),
             dims: wl.dims,
             variant,
             opts,
             w_bits: wl.w_bits,
             a_bits: wl.a_bits,
-            wgt: weight_words(wl, variant),
+            wgt,
         }
     }
 
@@ -198,6 +322,23 @@ mod tests {
             .get_or_compile(&ProcessorConfig::sparq(), &w, v, EngineOpts::default())
             .is_err());
         assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn fingerprint_is_a_prefilter_not_the_verdict() {
+        let cfg = ProcessorConfig::sparq();
+        let v = ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Strict };
+        let a = ProgramCache::key(&cfg, &wl(1), v, EngineOpts::default());
+        let b = ProgramCache::key(&cfg, &wl(1), v, EngineOpts::default());
+        assert_eq!(a.fp, b.fp, "equal inputs must fingerprint equal (Hash/Eq contract)");
+        assert_eq!(a, b);
+        let c = ProgramCache::key(&cfg, &wl(2), v, EngineOpts::default());
+        assert_ne!(a, c);
+        // even a forged fingerprint collision must NOT admit a hit:
+        // equality stays exact over the weight words
+        let mut forged = c.clone();
+        forged.fp = a.fp;
+        assert_ne!(a, forged, "a fingerprint collision must not alias different weights");
     }
 
     #[test]

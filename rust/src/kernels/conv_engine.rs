@@ -43,7 +43,10 @@
 //! * [`CompiledConv::execute`] = reset + bind + run: re-executing a
 //!   cached program on rebound tensors is bit-identical (outputs and
 //!   cycle counts) to a cold build, which the cache-correctness tests
-//!   pin.
+//!   pin.  The run step uses the pre-compiled micro-op form
+//!   ([`crate::sim::CompiledProgram`], DESIGN.md §Perf): legality and
+//!   alignment were checked at compile time, and the inner loops
+//!   execute word-parallel instead of element-at-a-time.
 //!
 //! [`build`] is compile + bind on the caller's machine — the original
 //! single-shot API the variant modules and their tests use.
@@ -53,7 +56,7 @@ use super::pack_rt;
 use super::workload::{ConvDims, OutElem, OutputRef, Workload};
 use crate::arch::ProcessorConfig;
 use crate::isa::{Lmul, ScalarKind, Sew, VOp, VType};
-use crate::sim::{Machine, Program, RunReport, SimError};
+use crate::sim::{CompiledProgram, Machine, Program, RunReport, SimError};
 use crate::ulppack::{self, Container};
 
 /// Inner-loop policy: what one "MAC issue" is and how accumulators are
@@ -218,6 +221,15 @@ pub(crate) struct ConvLayout {
 /// with [`CompiledConv::execute`] on pooled machines.
 pub struct CompiledConv {
     pub prog: Program,
+    /// §Perf: `prog` pre-compiled to micro-ops for `cfg` (legality and
+    /// alignment checked once, SWAR/bulk strategies resolved) —
+    /// [`CompiledConv::execute`] runs this form.  `None` when the
+    /// stream is illegal for `cfg` (e.g. a vmacsr stream built for an
+    /// Ara machine) — execution then falls back to the interpreting
+    /// [`Machine::run`], which reports the error exactly as the seed
+    /// path did — and on the one-shot [`build`] path, which runs the
+    /// interpreter and would discard the lowering.
+    pub compiled: Option<CompiledProgram>,
     pub out: OutputRef,
     pub dims: ConvDims,
     /// The processor the stream was compiled for (VLEN is baked into
@@ -271,7 +283,10 @@ impl CompiledConv {
             m.reset_for(self.mem_bytes);
         }
         bind(m, wl, self)?;
-        m.run(&self.prog)
+        match &self.compiled {
+            Some(cp) => m.run_compiled(cp),
+            None => m.run(&self.prog),
+        }
     }
 }
 
@@ -284,6 +299,17 @@ pub fn compile(
     inner: Inner,
     opts: EngineOpts,
     label: String,
+) -> Result<CompiledConv, SimError> {
+    compile_impl(cfg, wl, inner, opts, label, true)
+}
+
+fn compile_impl(
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    inner: Inner,
+    opts: EngineOpts,
+    label: String,
+    with_uops: bool,
 ) -> Result<CompiledConv, SimError> {
     let d = wl.dims;
     let sew = inner.sew();
@@ -459,8 +485,11 @@ pub fn compile(
     }
 
     let out = OutputRef { addr: out_addr, elem: out_elem, len: out_len };
+    let prog = a.finish(d.macs());
+    let compiled = if with_uops { CompiledProgram::compile(&prog, cfg).ok() } else { None };
     Ok(CompiledConv {
-        prog: a.finish(d.macs()),
+        prog,
+        compiled,
         out,
         dims: d,
         cfg: cfg.clone(),
@@ -538,7 +567,9 @@ pub fn bind(m: &mut Machine, wl: &Workload, cc: &CompiledConv) -> Result<(), Sim
 /// Build the conv program for `inner` over `wl` directly on the
 /// caller's (fresh) machine — compile + bind; returns the trace and
 /// where the output tensor will be.  The compile-once/execute-many path
-/// is [`compile`] + [`CompiledConv::execute`].
+/// is [`compile`] + [`CompiledConv::execute`].  This one-shot path
+/// runs through `Machine::run`, so it skips the micro-op lowering pass
+/// whose result it would immediately discard.
 pub fn build(
     m: &mut Machine,
     wl: &Workload,
@@ -546,7 +577,7 @@ pub fn build(
     opts: EngineOpts,
     label: String,
 ) -> Result<(Program, OutputRef), SimError> {
-    let cc = compile(&m.cfg, wl, inner, opts, label)?;
+    let cc = compile_impl(&m.cfg, wl, inner, opts, label, false)?;
     bind(m, wl, &cc)?;
     Ok((cc.prog, cc.out))
 }

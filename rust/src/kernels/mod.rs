@@ -19,12 +19,15 @@
 //! ## Compile once, execute many
 //!
 //! [`compile_conv`] builds a [`CompiledConv`] (instruction stream +
-//! tensor layout) once per (dims, variant, processor, opts, weights)
-//! tuple; [`CompiledConv::execute`] rebinds activation data into a
-//! reset machine and re-runs it with bit-identical outputs and cycle
-//! counts.  [`ProgramCache`] memoizes compilations behind a content
-//! key and [`crate::sim::MachinePool`] recycles machines, which is what
-//! the serving stack and the bench sweeps use ([`run_conv_cached`]).
+//! tensor layout + the pre-compiled micro-op form, see
+//! [`crate::sim::CompiledProgram`] and DESIGN.md §Perf) once per
+//! (dims, variant, processor, opts, weights) tuple;
+//! [`CompiledConv::execute`] rebinds activation data into a reset
+//! machine and re-runs the micro-ops word-parallel with bit-identical
+//! outputs and cycle counts.  [`ProgramCache`] memoizes compilations —
+//! including the micro-op form — behind a content key and
+//! [`crate::sim::MachinePool`] recycles machines, which is what the
+//! serving stack and the bench sweeps use ([`run_conv_cached`]).
 //! [`run_conv`] keeps the original one-shot build-and-run semantics.
 
 pub mod asm;

@@ -11,7 +11,10 @@
 //! * [`sim`] — a cycle-approximate, functionally-exact simulator of the
 //!   Ara/Sparq vector machine: VRF, MFPU/ALU/VLSU/SLDU units, chaining,
 //!   per-unit utilization counters.  Machines reset in place and are
-//!   recycled through [`sim::MachinePool`] instead of reallocated.
+//!   recycled through [`sim::MachinePool`] instead of reallocated.  The
+//!   hot path pre-compiles traces to micro-ops and executes them
+//!   word-parallel ([`sim::CompiledProgram`] +
+//!   `Machine::run_compiled`, DESIGN.md §Perf).
 //! * [`ulppack`] — the ULPPACK P1 packing calculus: container layouts,
 //!   overflow-free regions, local-accumulation and spill cadences.
 //! * [`kernels`] — the "hand-written inline assembly" of the paper as
@@ -55,4 +58,4 @@ pub mod ulppack;
 
 pub use arch::ProcessorConfig;
 pub use kernels::{CompiledConv, ProgramCache};
-pub use sim::{Machine, MachinePool, Program};
+pub use sim::{CompiledProgram, Machine, MachinePool, Program};

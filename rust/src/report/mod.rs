@@ -17,6 +17,13 @@ use crate::ulppack::{region, RegionMode};
 /// (workload, variant, processor) tuples stop re-emitting identical
 /// instruction streams.  The benches run each figure twice (cold/warm)
 /// against one `SweepCtx` to demonstrate the cached speedup.
+///
+/// Both members are `Sync`, so the figure drivers fan their
+/// independent workloads out across `std::thread::scope` threads that
+/// share this context — each thread executes pre-compiled micro-op
+/// programs (`sim::CompiledProgram`) on pooled machines, and the
+/// deterministic simulator makes the parallel sweep bit-identical to
+/// the sequential one.
 #[derive(Default)]
 pub struct SweepCtx {
     pub cache: ProgramCache,
@@ -57,6 +64,12 @@ pub fn fig4(large: bool, seed: u64) -> Result<Vec<Fig4Row>, SimError> {
 
 /// [`fig4`] against a caller-held [`SweepCtx`] (warm reruns are pure
 /// cache hits).
+///
+/// §Perf: the six implementations are independent workloads, so they
+/// run in parallel (`std::thread::scope`) against the shared program
+/// cache and machine pool.  Rows keep the plan order and each run is
+/// deterministic, so the figure is bit-identical to a sequential
+/// sweep.
 pub fn fig4_with(ctx: &SweepCtx, large: bool, seed: u64) -> Result<Vec<Fig4Row>, SimError> {
     let dims = ConvDims::fig4(large);
     let sparq = ProcessorConfig::sparq();
@@ -78,12 +91,23 @@ pub fn fig4_with(ctx: &SweepCtx, large: bool, seed: u64) -> Result<Vec<Fig4Row>,
             "ULP-conv2d (vmacsr, W2A2)".into(),
         ),
     ];
+    let reports: Vec<Result<RunReport, SimError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .iter()
+            .map(|(cfg, variant, _)| {
+                s.spawn(move || {
+                    let (wb, ab) = variant.bits();
+                    let wl = Workload::random(dims, wb, ab, seed);
+                    ctx.run(cfg, &wl, *variant)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+    });
     let mut rows = Vec::new();
     let mut base_cycles = 0u64;
-    for (cfg, variant, label) in plan {
-        let (wb, ab) = variant.bits();
-        let wl = Workload::random(dims, wb, ab, seed);
-        let report = ctx.run(cfg, &wl, variant)?;
+    for ((_, _, label), report) in plan.into_iter().zip(reports) {
+        let report = report?;
         if rows.is_empty() {
             base_cycles = report.stats.cycles;
         }
@@ -138,6 +162,10 @@ pub fn fig5(vmacsr: bool, large: bool, seed: u64) -> Result<Vec<Fig5Cell>, SimEr
 /// [`fig5`] against a caller-held [`SweepCtx`]: the int16 baseline is
 /// shared between the 5a and 5b grids (one compile instead of two), and
 /// warm reruns are pure cache hits.
+///
+/// §Perf: after the shared baseline, the 16 grid points run in
+/// parallel on pooled machines; cells keep (W, A) order, so the
+/// rendered grid is identical to the sequential sweep.
 pub fn fig5_with(
     ctx: &SweepCtx,
     vmacsr: bool,
@@ -149,35 +177,44 @@ pub fn fig5_with(
     let ara = ProcessorConfig::ara();
     let wl16 = Workload::random(dims, 8, 8, seed);
     let base = ctx.run(&sparq, &wl16, ConvVariant::Int16)?;
-    let mut cells = Vec::new();
-    for w in 1..=4u32 {
-        for a in 1..=4u32 {
-            let (variant, cfg, plan) = if vmacsr {
-                (
-                    ConvVariant::Vmacsr { w_bits: w, a_bits: a, mode: RegionMode::Paper },
-                    &sparq,
-                    region::plan_vmacsr(w, a, dims.issues_per_output(), RegionMode::Paper),
-                )
-            } else {
-                (ConvVariant::Native { w_bits: w, a_bits: a }, &ara, region::plan_native(w, a))
-            };
-            let cell = match plan {
-                None => Fig5Cell { w_bits: w, a_bits: a, speedup: None, container: None },
-                Some(p) => {
-                    let wl = Workload::random(dims, w, a, seed.wrapping_add((w * 5 + a) as u64));
-                    let report = ctx.run(cfg, &wl, variant)?;
-                    Fig5Cell {
-                        w_bits: w,
-                        a_bits: a,
-                        speedup: Some(base.stats.cycles as f64 / report.stats.cycles as f64),
-                        container: Some(p.container.name()),
+    let base_cycles = base.stats.cycles;
+    let points: Vec<(u32, u32)> =
+        (1..=4u32).flat_map(|w| (1..=4u32).map(move |a| (w, a))).collect();
+    let cells: Vec<Result<Fig5Cell, SimError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = points
+            .iter()
+            .map(|&(w, a)| {
+                let (sparq, ara) = (&sparq, &ara);
+                s.spawn(move || {
+                    let (variant, cfg, plan) = if vmacsr {
+                        (
+                            ConvVariant::Vmacsr { w_bits: w, a_bits: a, mode: RegionMode::Paper },
+                            sparq,
+                            region::plan_vmacsr(w, a, dims.issues_per_output(), RegionMode::Paper),
+                        )
+                    } else {
+                        (ConvVariant::Native { w_bits: w, a_bits: a }, ara, region::plan_native(w, a))
+                    };
+                    match plan {
+                        None => Ok(Fig5Cell { w_bits: w, a_bits: a, speedup: None, container: None }),
+                        Some(p) => {
+                            let wl =
+                                Workload::random(dims, w, a, seed.wrapping_add((w * 5 + a) as u64));
+                            let report = ctx.run(cfg, &wl, variant)?;
+                            Ok(Fig5Cell {
+                                w_bits: w,
+                                a_bits: a,
+                                speedup: Some(base_cycles as f64 / report.stats.cycles as f64),
+                                container: Some(p.container.name()),
+                            })
+                        }
                     }
-                }
-            };
-            cells.push(cell);
-        }
-    }
-    Ok(cells)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+    });
+    cells.into_iter().collect()
 }
 
 pub fn render_fig5(cells: &[Fig5Cell], vmacsr: bool, dims: ConvDims) -> String {
@@ -245,18 +282,23 @@ pub fn render_table2(ara: &LaneReport, sparq: &LaneReport) -> String {
     s
 }
 
-/// §III-A lane-utilization reproduction: int16 on Sparq, fp32 on Ara.
+/// §III-A lane-utilization reproduction: int16 on Sparq, fp32 on Ara
+/// (the two baselines run in parallel on pooled machines).
 pub fn utilization(large: bool, seed: u64) -> Result<Vec<(String, f64, u64)>, SimError> {
     let ctx = SweepCtx::new();
     let s = if large { 512 } else { 128 };
     let dims = ConvDims { c: 32, h: s + 6, w: s + 6, co: 2, fh: 7, fw: 7 };
-    let mut out = Vec::new();
     let wl = Workload::random(dims, 8, 8, seed);
-    let rep = ctx.run(&ProcessorConfig::sparq(), &wl, ConvVariant::Int16)?;
-    out.push(("int16 (Sparq)".to_string(), rep.stats.utilization(Unit::Mfpu), rep.stats.cycles));
-    let rep = ctx.run(&ProcessorConfig::ara(), &wl, ConvVariant::Fp32)?;
-    out.push(("fp32 (Ara)".to_string(), rep.stats.utilization(Unit::Mfpu), rep.stats.cycles));
-    Ok(out)
+    let (int16, fp32) = std::thread::scope(|s| {
+        let h16 = s.spawn(|| ctx.run(&ProcessorConfig::sparq(), &wl, ConvVariant::Int16));
+        let h32 = s.spawn(|| ctx.run(&ProcessorConfig::ara(), &wl, ConvVariant::Fp32));
+        (h16.join().expect("int16 worker"), h32.join().expect("fp32 worker"))
+    });
+    let (int16, fp32) = (int16?, fp32?);
+    Ok(vec![
+        ("int16 (Sparq)".to_string(), int16.stats.utilization(Unit::Mfpu), int16.stats.cycles),
+        ("fp32 (Ara)".to_string(), fp32.stats.utilization(Unit::Mfpu), fp32.stats.cycles),
+    ])
 }
 
 pub fn render_utilization(rows: &[(String, f64, u64)], large: bool) -> String {
@@ -389,6 +431,32 @@ mod tests {
         fig5_with(&ctx, true, false, 7).unwrap();
         // the 5b grid reuses 5a's int16 baseline program at minimum
         assert!(ctx.cache.stats().hits > hits_before);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_the_sequential_path_row_by_row() {
+        // the scoped-thread fan-out must be bit-identical to running
+        // each (cfg, variant) workload alone through the sequential
+        // one-shot path — not merely self-consistent across reruns
+        use crate::kernels::run_conv;
+        let rows = fig4(false, 11).unwrap();
+        let sparq = ProcessorConfig::sparq();
+        let ara = ProcessorConfig::ara();
+        let plan: Vec<(&ProcessorConfig, ConvVariant)> = vec![
+            (&sparq, ConvVariant::Int16),
+            (&ara, ConvVariant::Native { w_bits: 3, a_bits: 3 }),
+            (&ara, ConvVariant::Native { w_bits: 2, a_bits: 2 }),
+            (&ara, ConvVariant::Native { w_bits: 1, a_bits: 1 }),
+            (&sparq, ConvVariant::Vmacsr { w_bits: 4, a_bits: 4, mode: RegionMode::Paper }),
+            (&sparq, ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper }),
+        ];
+        assert_eq!(rows.len(), plan.len());
+        for (row, (cfg, variant)) in rows.iter().zip(plan) {
+            let (wb, ab) = variant.bits();
+            let wl = Workload::random(ConvDims::fig4(false), wb, ab, 11);
+            let seq = run_conv(cfg, &wl, variant).unwrap();
+            assert_eq!(row.cycles, seq.report.stats.cycles, "{} diverged", row.label);
+        }
     }
 
     #[test]

@@ -4,6 +4,10 @@
 //! is the runtime the serving coordinator's `SimConvExecutor` drives:
 //! real sub-byte conv2d numerics, bit-exact against the golden models
 //! in `kernels::workload`, with no PJRT artifacts and no python.
+//! Every `infer` runs the cached *micro-op* form of the program
+//! (`sim::CompiledProgram`, DESIGN.md §Perf): legality was validated
+//! at compile time and the inner loops execute word-parallel, so the
+//! per-request host cost is rebind + SWAR execution only.
 
 use crate::arch::ProcessorConfig;
 use crate::kernels::{

@@ -3,6 +3,15 @@
 //! semantics.  The timing model lives in `sim::timing`; this file only
 //! answers "what values" — and is itself the subject of the
 //! SIMD-vs-scalar property tests.
+//!
+//! This is the *interpreting* engine: [`execute`] re-validates legality
+//! and alignment per instruction and (outside the `exec_vx_fast` VX
+//! paths) walks elements one at a time.  The serving hot path instead
+//! pre-compiles a trace into micro-ops and executes them word-parallel
+//! — see [`super::uop`] and DESIGN.md §Perf.  [`execute_reference`]
+//! pins the semantics: it forces the per-element loop everywhere and is
+//! the oracle the differential fuzz test (`rust/tests/exec_diff.rs`)
+//! compares both fast engines against.
 
 use super::mem::Mem;
 use super::vrf::Vrf;
@@ -26,13 +35,13 @@ impl Default for ExecState {
 }
 
 #[inline]
-fn sext(v: u64, sew: Sew) -> i64 {
+pub(crate) fn sext(v: u64, sew: Sew) -> i64 {
     let sh = 64 - sew.bits();
     ((v << sh) as i64) >> sh
 }
 
 #[inline]
-fn trunc(v: u64, sew: Sew) -> u64 {
+pub(crate) fn trunc(v: u64, sew: Sew) -> u64 {
     if sew.bits() == 64 {
         v
     } else {
@@ -59,7 +68,7 @@ fn mulh(a: u64, b: u64, sew: Sew) -> u64 {
 /// ALU/MUL op at one element; `x` is the vs1/rs1/imm operand, `a` is
 /// vs2, `d` the old vd (for ternary ops).
 #[inline]
-fn scalar_op(op: VOp, a: u64, x: u64, d: u64, sew: Sew, shift: u32) -> u64 {
+pub(crate) fn scalar_op(op: VOp, a: u64, x: u64, d: u64, sew: Sew, shift: u32) -> u64 {
     let m = |v| trunc(v, sew);
     match op {
         VOp::Add => m(a.wrapping_add(x)),
@@ -91,7 +100,7 @@ fn scalar_op(op: VOp, a: u64, x: u64, d: u64, sew: Sew, shift: u32) -> u64 {
     }
 }
 
-fn check_legal(op: VOp, cfg: &ProcessorConfig, st: &ExecState) -> Result<(), SimError> {
+pub(crate) fn check_legal(op: VOp, cfg: &ProcessorConfig, st: &ExecState) -> Result<(), SimError> {
     if op.is_fp() {
         if !cfg.fpu {
             return Err(SimError::NoFpu(op.mnemonic()));
@@ -109,7 +118,7 @@ fn check_legal(op: VOp, cfg: &ProcessorConfig, st: &ExecState) -> Result<(), Sim
     Ok(())
 }
 
-fn check_alignment(inst: &VInst, st: &ExecState) -> Result<(), SimError> {
+pub(crate) fn check_alignment(inst: &VInst, st: &ExecState) -> Result<(), SimError> {
     let lm = st.vtype.lmul;
     let check = |v: u8, factor: u32| -> Result<(), SimError> {
         if v as u32 % factor != 0 {
@@ -139,6 +148,30 @@ pub fn execute(
     vrf: &mut Vrf,
     mem: &mut Mem,
 ) -> Result<u64, SimError> {
+    execute_impl(inst, cfg, st, vrf, mem, true)
+}
+
+/// [`execute`] with every fast path disabled: the retained per-element
+/// reference interpreter the differential tests compare the compiled
+/// micro-op engine (and `execute`'s own VX fast paths) against.
+pub fn execute_reference(
+    inst: &VInst,
+    cfg: &ProcessorConfig,
+    st: &mut ExecState,
+    vrf: &mut Vrf,
+    mem: &mut Mem,
+) -> Result<u64, SimError> {
+    execute_impl(inst, cfg, st, vrf, mem, false)
+}
+
+fn execute_impl(
+    inst: &VInst,
+    cfg: &ProcessorConfig,
+    st: &mut ExecState,
+    vrf: &mut Vrf,
+    mem: &mut Mem,
+    fast: bool,
+) -> Result<u64, SimError> {
     match *inst {
         VInst::Scalar { .. } => Ok(0),
         VInst::SetVl { avl, sew, lmul } => {
@@ -162,12 +195,12 @@ pub fn execute(
         VInst::OpVV { op, vd, vs2, vs1 } => {
             check_legal(op, cfg, st)?;
             check_alignment(inst, st)?;
-            exec_arith(op, vd, vs2, Src::Vec(vs1), cfg, st, vrf)
+            exec_arith(op, vd, vs2, Src::Vec(vs1), cfg, st, vrf, fast)
         }
         VInst::OpVX { op, vd, vs2, rs1 } => {
             check_legal(op, cfg, st)?;
             check_alignment(inst, st)?;
-            exec_arith(op, vd, vs2, Src::Scalar(rs1), cfg, st, vrf)
+            exec_arith(op, vd, vs2, Src::Scalar(rs1), cfg, st, vrf, fast)
         }
         VInst::OpVI { op, vd, vs2, imm } => {
             check_legal(op, cfg, st)?;
@@ -178,7 +211,7 @@ pub fn execute(
             } else {
                 trunc(imm as i64 as u64, st.vtype.sew) // simm5, truncated at SEW
             };
-            exec_arith(op, vd, vs2, Src::Scalar(x), cfg, st, vrf)
+            exec_arith(op, vd, vs2, Src::Scalar(x), cfg, st, vrf, fast)
         }
     }
 }
@@ -188,6 +221,7 @@ enum Src {
     Scalar(u64),
 }
 
+#[allow(clippy::too_many_arguments)]
 fn exec_arith(
     op: VOp,
     vd: u8,
@@ -196,6 +230,7 @@ fn exec_arith(
     cfg: &ProcessorConfig,
     st: &ExecState,
     vrf: &mut Vrf,
+    fast: bool,
 ) -> Result<u64, SimError> {
     let sew = st.vtype.sew;
     let vl = st.vl;
@@ -247,9 +282,11 @@ fn exec_arith(
             Ok(vl as u64)
         }
         _ => {
-            if let Src::Scalar(x) = src {
-                if exec_vx_fast(op, vd, vs2, trunc(x, sew), sew, vl, shift, vrf) {
-                    return Ok(vl as u64);
+            if fast {
+                if let Src::Scalar(x) = src {
+                    if exec_vx_fast(op, vd, vs2, trunc(x, sew), sew, vl, shift, vrf) {
+                        return Ok(vl as u64);
+                    }
                 }
             }
             for i in 0..vl {

@@ -1,12 +1,22 @@
 //! The Ara/Sparq vector-machine simulator: functionally exact execution
 //! (see [`exec`]) married to a cycle-approximate timing model
 //! ([`timing`]) with per-unit utilization accounting ([`stats`]).
+//!
+//! Two execution engines share those semantics (DESIGN.md §Perf):
+//! [`Machine::run`] interprets the trace instruction by instruction,
+//! while [`Machine::run_compiled`] executes a [`uop::CompiledProgram`]
+//! — legality/alignment checked once at compile time, elements
+//! processed many-per-`u64`-word (SWAR) — with bit-identical outputs
+//! and cycle counts.  [`Machine::run_reference`] is the pure
+//! per-element oracle both are differentially fuzzed against
+//! (`rust/tests/exec_diff.rs`).
 
 pub mod exec;
 pub mod mem;
 pub mod pool;
 pub mod stats;
 pub mod timing;
+pub mod uop;
 pub mod vrf;
 
 use crate::arch::{ProcessorConfig, Unit};
@@ -16,6 +26,7 @@ use mem::{Mem, MemError};
 use stats::Stats;
 pub use pool::MachinePool;
 pub use stats::RunReport;
+pub use uop::CompiledProgram;
 use std::fmt;
 use timing::Timing;
 use vrf::Vrf;
@@ -168,12 +179,40 @@ impl Machine {
     }
 
     /// Run a program to completion: functional execution + timing.
+    ///
+    /// This is the interpreting engine (per-instruction validation, VX
+    /// fast paths).  The serving hot path pre-compiles the trace with
+    /// [`uop::CompiledProgram::compile`] and uses
+    /// [`Machine::run_compiled`] instead — same results, far less host
+    /// work per execution.
     pub fn run(&mut self, prog: &Program) -> Result<RunReport, SimError> {
+        self.run_interp(prog, true)
+    }
+
+    /// [`Machine::run`] with every fast path disabled: the retained
+    /// per-element reference interpreter.  The differential fuzz test
+    /// pins both `run` and `run_compiled` to this oracle bit-for-bit
+    /// (VRF, memory, and cycle counts).
+    pub fn run_reference(&mut self, prog: &Program) -> Result<RunReport, SimError> {
+        self.run_interp(prog, false)
+    }
+
+    fn run_interp(&mut self, prog: &Program, fast: bool) -> Result<RunReport, SimError> {
         let mut timing = Timing::new(&self.cfg);
         let mut st = Stats::default();
 
         for inst in &prog.insts {
-            let ops = exec::execute(inst, &self.cfg, &mut self.state, &mut self.vrf, &mut self.mem)?;
+            let ops = if fast {
+                exec::execute(inst, &self.cfg, &mut self.state, &mut self.vrf, &mut self.mem)?
+            } else {
+                exec::execute_reference(
+                    inst,
+                    &self.cfg,
+                    &mut self.state,
+                    &mut self.vrf,
+                    &mut self.mem,
+                )?
+            };
             st.element_ops += ops;
             self.account(inst, &mut timing, &mut st);
         }

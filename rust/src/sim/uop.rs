@@ -1,0 +1,1125 @@
+//! §Perf: micro-op pre-compilation + word-parallel (SWAR) execution —
+//! the simulator's serving hot path (DESIGN.md §Perf).
+//!
+//! [`Machine::run`] re-validates legality and alignment per instruction
+//! on every execution and, outside a few VX fast paths, walks elements
+//! one at a time through a per-element `match op`.  For
+//! compile-once/execute-many serving that work is pure waste: the
+//! instruction stream is fixed, so everything that does not depend on
+//! run-time *data* can be resolved exactly once.
+//!
+//! [`CompiledProgram::compile`] folds the `vsetvli` state machine
+//! forward through the trace, runs `check_legal`/`check_alignment`
+//! once, resolves shift amounts, operand kinds, byte counts and flat
+//! VRF offsets, validates every register-group byte range (the typed
+//! promotion of the `debug_assert!`s in `Vrf::get`/`set` — see
+//! [`super::vrf::Vrf::check_group`]), and pre-selects an execution
+//! strategy per instruction:
+//!
+//! * **Bulk** — loads, stores, broadcasts, copies and slides become
+//!   `copy_from_slice`/`copy_within`/`fill` over the flat VRF bytes.
+//! * **Swar** — add/sub/and/or/xor/shift lanes ride in one `u64` word
+//!   (8 lanes at E8) with carry masking at the lane boundaries, and the
+//!   vector-scalar multiply family (vmul/vmacc/vnmsac/vmacsr) uses the
+//!   ULPPACK trick *on the host*: lanes are spread into spaced fields
+//!   and one scalar `u64` multiply computes 4 lane products at E8.
+//! * **Generic** — a monomorphic per-element loop over the retained
+//!   [`exec::scalar_op`] semantics for the cold ops (mulh/min/max/sra,
+//!   fp, overlapping slides, widening adds).
+//!
+//! [`Machine::run_compiled`] then executes micro-ops with zero
+//! per-element dispatch and feeds [`Timing`] from the precomputed byte
+//! counts.  The invariant — pinned by `rust/tests/exec_diff.rs` and
+//! every conv golden test — is that outputs, memory, *and cycle
+//! counts* are bit-identical to the interpreting [`Machine::run`] and
+//! to the per-element [`Machine::run_reference`] oracle.
+//!
+//! ## Why ascending word loops are exact under group overlap
+//!
+//! Register-group base offsets are multiples of VLENB, and VLENB is a
+//! multiple of 8 bytes (`Vrf::new` asserts VLEN % 64 == 0), so any
+//! aliasing between a destination and a source group has a byte offset
+//! that is a multiple of 8: an element can never alias another element
+//! *inside the same 8-byte word*.  An ascending word loop that reads
+//! its operand words and then writes its destination word therefore
+//! observes exactly the same values as the reference's ascending
+//! per-element loop, for every overlap pattern the ISA allows.
+
+use super::exec::{self, ExecState};
+use super::mem::Mem;
+use super::stats::{RunReport, Stats};
+use super::timing::Timing;
+use super::vrf::Vrf;
+use super::{Machine, Program, SimError};
+use crate::arch::{ProcessorConfig, Unit};
+use crate::isa::{Sew, VInst, VOp, VType};
+
+/// Execution strategy pre-selected at compile time (diagnostics; the
+/// real dispatch is the [`Exec`] variant itself).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Bulk byte moves: loads/stores/broadcasts/copies/slides.
+    Bulk,
+    /// Word-parallel lanes: SWAR ALU ops and the multiply tricks.
+    Swar,
+    /// Monomorphic per-element loop (cold ops, overlapping slides).
+    Generic,
+}
+
+/// Fully resolved shift amount for the vmacsr family.
+#[derive(Debug, Clone, Copy)]
+enum Shift {
+    Fixed(u32),
+    /// vmacsr.cfg: read the CSR at execution time (the only run-time
+    /// input besides the VRF/memory data itself).
+    Csr,
+}
+
+impl Shift {
+    #[inline]
+    fn resolve(self, st: &ExecState, sew: Sew) -> u32 {
+        match self {
+            Shift::Fixed(s) => s,
+            Shift::Csr => st.csr_shift.min(sew.bits() - 1),
+        }
+    }
+}
+
+/// The vs1/rs1/imm operand of a word loop: either a pre-splatted
+/// scalar (its truncated value repeated across the 64-bit word) or the
+/// flat VRF byte offset of the source vector group.
+#[derive(Debug, Clone, Copy)]
+enum Operand {
+    Splat(u64),
+    Vec(usize),
+}
+
+/// Word-parallel ALU ops (shift amounts resolved at compile time).
+#[derive(Debug, Clone, Copy)]
+enum AluWord {
+    Add,
+    Sub,
+    And,
+    Or,
+    Xor,
+    Sll(u32),
+    Srl(u32),
+}
+
+/// The multiply family, with vmacsr.cfg folded into `Macsr` + a
+/// [`Shift`].
+#[derive(Debug, Clone, Copy)]
+enum MulOp {
+    Mul,
+    Macc,
+    Nmsac,
+    Macsr,
+}
+
+/// The functional half of one micro-op.  All `usize` fields are flat
+/// VRF byte offsets, pre-validated against the register-file size.
+#[derive(Debug, Clone)]
+enum Exec {
+    /// Scalar slots: no architectural effect.
+    Nop,
+    /// `vsetvli`: fold the already-computed state into the machine.
+    SetState { vl: u32, vtype: VType },
+    Load { dst: usize, addr: u64, len: usize },
+    Store { src: usize, addr: u64, len: usize },
+    /// `vmv.v.x` / `vmv.v.i` broadcast.
+    Fill { dst: usize, len: usize, splat: u64 },
+    /// `vmv.v.v`: ascending word copy.
+    Copy { dst: usize, src: usize, len: usize },
+    /// Slide as one memmove + zero fill (identical or disjoint groups).
+    SlideBulk { dst: usize, src: usize, copy: usize, zero: usize },
+    /// Slide in exact reference element order (partial group overlap).
+    SlideGen { down: bool, off: u64, dst: usize, src: usize, eb: usize, vl: u32, vlmax: u32 },
+    /// SWAR word loop over add/sub/logic/shift lanes.
+    Alu { op: AluWord, sew: Sew, dst: usize, a: usize, x: Operand, len: usize },
+    /// Vector-scalar multiply family at E8/E16: spaced-field multiply
+    /// (2 host multiplies per 64-bit word).
+    MulVx { op: MulOp, sew: Sew, dst: usize, a: usize, x: u64, shift: Shift, len: usize },
+    /// Multiply family, word-read lane loop (VV forms, E32/E64).
+    MulLane { op: MulOp, sew: Sew, dst: usize, a: usize, x: Operand, shift: Shift, len: usize },
+    /// `vwaddu.wv`: widening add-accumulate in reference element order.
+    Wadd { dst: usize, src: usize, sew: Sew, vl: u32 },
+    /// Monomorphic per-element fallback over [`exec::scalar_op`].
+    Gen { op: VOp, sew: Sew, vl: u32, dst: usize, a: usize, x: Operand, eb: usize, shift: Shift, reads_vd: bool },
+}
+
+/// The timing half of one micro-op — everything `Machine::account`
+/// derived from the architectural state, precomputed.
+#[derive(Debug, Clone)]
+enum Acct {
+    Scalar { n: u32 },
+    Mem { bytes: u64, reg: u8, lmul: u32, load: bool },
+    Vec { unit: Unit, busy: u64, busy_cycles: u64, dst: Option<(u8, u32)>, srcs: [(u8, u32); 3], nsrcs: u8 },
+}
+
+#[derive(Debug, Clone)]
+struct Uop {
+    exec: Exec,
+    acct: Acct,
+    /// Element operations this micro-op contributes to the stats.
+    ops: u64,
+}
+
+/// A trace pre-compiled for one processor configuration: legality,
+/// alignment, vtype folding, operand resolution and strategy selection
+/// all done once.  Execute it any number of times with
+/// [`Machine::run_compiled`] — bit-identical (outputs and cycle
+/// counts) to [`Machine::run`] on the original [`Program`].
+#[derive(Debug, Clone)]
+pub struct CompiledProgram {
+    uops: Vec<Uop>,
+    /// The configuration the stream was validated against
+    /// (`run_compiled` rejects a machine with any other config).
+    pub cfg: ProcessorConfig,
+    pub macs: u64,
+    pub label: String,
+    counts: [usize; 3],
+    /// True when some vector instruction was lowered under the
+    /// *initial* (default) vtype/vl — i.e. before the stream's first
+    /// `vsetvli`.  Such a program is only valid on a machine whose
+    /// architectural state is still the reset state; `run_compiled`
+    /// enforces that instead of silently diverging from the
+    /// interpreter (which reads the live state).
+    needs_default_entry: bool,
+}
+
+impl CompiledProgram {
+    /// Compile `prog` for `cfg`.  Errors the interpreter would raise
+    /// mid-run (illegal instruction, misaligned group, group past v31
+    /// — including ranges the interpreter only catches as a
+    /// `debug_assert!`, e.g. a load at EEW wider than SEW running past
+    /// the register file) surface here as typed [`SimError`]s instead.
+    pub fn compile(prog: &Program, cfg: &ProcessorConfig) -> Result<CompiledProgram, SimError> {
+        let vlenb = (cfg.vlen_bits / 8) as usize;
+        let bpc = cfg.bytes_per_cycle() as u64;
+        let mut st = ExecState::default();
+        let mut uops = Vec::with_capacity(prog.insts.len());
+        let mut counts = [0usize; 3];
+        let mut saw_setvl = false;
+        let mut needs_default_entry = false;
+        for inst in &prog.insts {
+            saw_setvl |= matches!(inst, VInst::SetVl { .. });
+            // a vector instruction before the first vsetvli was folded
+            // against the *default* state: remember that the program
+            // only replays correctly from a reset machine
+            needs_default_entry |=
+                !saw_setvl && !matches!(inst, VInst::Scalar { .. });
+            let uop = lower(inst, cfg, &mut st, vlenb, bpc)?;
+            if let Some(s) = strategy_of(&uop.exec) {
+                counts[s as usize] += 1;
+            }
+            uops.push(uop);
+        }
+        Ok(CompiledProgram {
+            uops,
+            cfg: cfg.clone(),
+            macs: prog.macs,
+            label: prog.label.clone(),
+            counts,
+            needs_default_entry,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.uops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.uops.is_empty()
+    }
+
+    /// (bulk, swar, generic) micro-op counts — how much of the stream
+    /// landed on each strategy (diagnostics and perf tests).
+    pub fn strategy_counts(&self) -> (usize, usize, usize) {
+        (self.counts[0], self.counts[1], self.counts[2])
+    }
+}
+
+/// Strategy of one micro-op; `None` for pure bookkeeping (scalar
+/// slots, vsetvli).
+fn strategy_of(e: &Exec) -> Option<Strategy> {
+    match e {
+        Exec::Nop | Exec::SetState { .. } => None,
+        Exec::Load { .. }
+        | Exec::Store { .. }
+        | Exec::Fill { .. }
+        | Exec::Copy { .. }
+        | Exec::SlideBulk { .. } => Some(Strategy::Bulk),
+        Exec::Alu { .. } | Exec::MulVx { .. } | Exec::MulLane { .. } => Some(Strategy::Swar),
+        _ => Some(Strategy::Generic),
+    }
+}
+
+impl Machine {
+    /// Execute a pre-compiled program: the hot path of
+    /// compile-once/execute-many serving.  Zero per-instruction
+    /// validation, zero per-element dispatch; [`Timing`] is fed from
+    /// the byte counts resolved at compile time.  Outputs, memory and
+    /// the returned [`RunReport`] are bit-identical to
+    /// [`Machine::run`] on the source [`Program`].
+    pub fn run_compiled(&mut self, cp: &CompiledProgram) -> Result<RunReport, SimError> {
+        if self.cfg != cp.cfg {
+            return Err(SimError::Unsupported(
+                "machine configuration differs from the compiled program's",
+            ));
+        }
+        // compile() folded vtype/vl forward from the reset state; a
+        // program whose first vector instruction precedes its first
+        // vsetvli would read the *live* state under the interpreter —
+        // reject that instead of silently diverging from it.  (Streams
+        // that set vtype before touching vector state — every kernel
+        // builder's — replay from any entry state.)
+        if cp.needs_default_entry
+            && (self.state.vl != 0 || self.state.vtype != ExecState::default().vtype)
+        {
+            return Err(SimError::Unsupported(
+                "compiled program uses vector state before its first vsetvli: run it on a reset machine",
+            ));
+        }
+        let mut timing = Timing::new(&self.cfg);
+        let mut st = Stats::default();
+        for u in &cp.uops {
+            exec_uop(&u.exec, &mut self.state, &mut self.vrf, &mut self.mem)?;
+            match u.acct {
+                Acct::Scalar { n } => {
+                    timing.scalar(n);
+                    st.add_scalar_slots(n as u64);
+                }
+                Acct::Mem { bytes, reg, lmul, load } => {
+                    let store_src = [(reg, lmul)];
+                    let (dst, srcs): (Option<(u8, u32)>, &[(u8, u32)]) = if load {
+                        (Some((reg, lmul)), &[])
+                    } else {
+                        (None, &store_src)
+                    };
+                    let (s, e) = timing.vector(Unit::Vlsu, bytes, bytes, dst, srcs);
+                    st.add_busy(Unit::Vlsu, e - s);
+                    if load {
+                        st.bytes_loaded += bytes;
+                    } else {
+                        st.bytes_stored += bytes;
+                    }
+                }
+                Acct::Vec { unit, busy, busy_cycles, dst, ref srcs, nsrcs } => {
+                    timing.vector(unit, busy, 0, dst, &srcs[..nsrcs as usize]);
+                    st.add_busy(unit, busy_cycles);
+                }
+            }
+            st.element_ops += u.ops;
+        }
+        st.cycles = timing.cycles();
+        st.raw_stall_cycles = timing.raw_stalls;
+        Ok(RunReport { stats: st, macs: cp.macs, label: cp.label.clone() })
+    }
+}
+
+// ---------------------------------------------------------------- lower
+
+/// Raw operand before strategy selection.
+enum RawSrc {
+    Vec(u8),
+    Scalar(u64),
+}
+
+fn lower(
+    inst: &VInst,
+    cfg: &ProcessorConfig,
+    st: &mut ExecState,
+    vlenb: usize,
+    bpc: u64,
+) -> Result<Uop, SimError> {
+    match *inst {
+        VInst::Scalar { n, .. } => Ok(Uop { exec: Exec::Nop, acct: Acct::Scalar { n }, ops: 0 }),
+        VInst::SetVl { avl, sew, lmul } => {
+            st.vtype = VType::new(sew, lmul);
+            st.vl = st.vtype.apply(avl, cfg.vlen_bits);
+            Ok(Uop {
+                exec: Exec::SetState { vl: st.vl, vtype: st.vtype },
+                acct: Acct::Scalar { n: 1 },
+                ops: 0,
+            })
+        }
+        VInst::Load { eew, vd, addr } => {
+            exec::check_alignment(inst, st)?;
+            let lmul = st.vtype.lmul.factor();
+            let len = st.vl as usize * eew.bytes() as usize;
+            let dst = vd as usize * vlenb;
+            Vrf::check_group_for(vlenb, vd, len, lmul)?;
+            let bytes = st.vl as u64 * eew.bytes() as u64;
+            Ok(Uop {
+                exec: Exec::Load { dst, addr, len },
+                acct: Acct::Mem { bytes, reg: vd, lmul, load: true },
+                ops: st.vl as u64,
+            })
+        }
+        VInst::Store { eew, vs3, addr } => {
+            exec::check_alignment(inst, st)?;
+            let lmul = st.vtype.lmul.factor();
+            let len = st.vl as usize * eew.bytes() as usize;
+            let src = vs3 as usize * vlenb;
+            Vrf::check_group_for(vlenb, vs3, len, lmul)?;
+            let bytes = st.vl as u64 * eew.bytes() as u64;
+            Ok(Uop {
+                exec: Exec::Store { src, addr, len },
+                acct: Acct::Mem { bytes, reg: vs3, lmul, load: false },
+                ops: st.vl as u64,
+            })
+        }
+        VInst::OpVV { op, vd, vs2, vs1 } => {
+            exec::check_legal(op, cfg, st)?;
+            exec::check_alignment(inst, st)?;
+            lower_arith(inst, op, vd, vs2, RawSrc::Vec(vs1), cfg, st, vlenb, bpc)
+        }
+        VInst::OpVX { op, vd, vs2, rs1 } => {
+            exec::check_legal(op, cfg, st)?;
+            exec::check_alignment(inst, st)?;
+            lower_arith(inst, op, vd, vs2, RawSrc::Scalar(rs1), cfg, st, vlenb, bpc)
+        }
+        VInst::OpVI { op, vd, vs2, imm } => {
+            exec::check_legal(op, cfg, st)?;
+            exec::check_alignment(inst, st)?;
+            let x = if matches!(op, VOp::Sll | VOp::Srl | VOp::Sra | VOp::SlideDown | VOp::SlideUp)
+            {
+                imm as u8 as u64 // uimm5
+            } else {
+                exec::trunc(imm as i64 as u64, st.vtype.sew) // simm5 at SEW
+            };
+            lower_arith(inst, op, vd, vs2, RawSrc::Scalar(x), cfg, st, vlenb, bpc)
+        }
+    }
+}
+
+/// The timing record `Machine::account` would produce for this
+/// arithmetic instruction, from the folded state.
+fn arith_acct(inst: &VInst, op: VOp, st: &ExecState, bpc: u64) -> Acct {
+    let lmul = st.vtype.lmul.factor();
+    let sew = st.vtype.sew;
+    let vl = st.vl as u64;
+    let unit = if op.is_fp() || op.is_mul() {
+        Unit::Mfpu
+    } else if op.is_slide() {
+        Unit::Sldu
+    } else {
+        Unit::Valu
+    };
+    let ebytes = if op == VOp::WAdduWv {
+        sew.widened().map(Sew::bytes).unwrap_or(8) as u64
+    } else {
+        sew.bytes() as u64
+    };
+    let dst_regs = if op == VOp::WAdduWv { lmul * 2 } else { lmul };
+    let mut buf = [0u8; 3];
+    let n = inst.srcs_into(&mut buf);
+    let mut srcs = [(0u8, 0u32); 3];
+    for (i, &r) in buf[..n].iter().enumerate() {
+        srcs[i] = (r, lmul);
+    }
+    let busy = vl * ebytes;
+    Acct::Vec {
+        unit,
+        busy,
+        busy_cycles: busy.div_ceil(bpc).max(1),
+        dst: inst.vd().map(|d| (d, dst_regs)),
+        srcs,
+        nsrcs: n as u8,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lower_arith(
+    inst: &VInst,
+    op: VOp,
+    vd: u8,
+    vs2: u8,
+    src: RawSrc,
+    cfg: &ProcessorConfig,
+    st: &ExecState,
+    vlenb: usize,
+    bpc: u64,
+) -> Result<Uop, SimError> {
+    let sew = st.vtype.sew;
+    let eb = sew.bytes() as usize;
+    let vl = st.vl;
+    let len = vl as usize * eb;
+    let dst = vd as usize * vlenb;
+    let a = vs2 as usize * vlenb;
+    let shift = match op {
+        VOp::Macsr => Shift::Fixed(sew.bits() / 2),
+        VOp::MacsrCfg => Shift::Csr,
+        _ => Shift::Fixed(0),
+    };
+    let operand = |s: &RawSrc| match *s {
+        RawSrc::Vec(v1) => Operand::Vec(v1 as usize * vlenb),
+        RawSrc::Scalar(x) => Operand::Splat(splat_word(exec::trunc(x, sew), sew)),
+    };
+    let acct = arith_acct(inst, op, st, bpc);
+    let ops = vl as u64;
+    let done = |exec: Exec| Ok(Uop { exec, acct, ops });
+
+    match op {
+        VOp::SlideDown | VOp::SlideUp => {
+            let off = match src {
+                RawSrc::Scalar(x) => x,
+                RawSrc::Vec(_) => return Err(SimError::Unsupported("slide .vv form")),
+            };
+            if op == VOp::SlideUp && vd == vs2 {
+                return Err(SimError::Unsupported("vslideup with vd == vs2"));
+            }
+            let vlmax = st.vtype.vlmax(cfg.vlen_bits);
+            if op == VOp::SlideDown {
+                let ncopy = (vl as u64).min((vlmax as u64).saturating_sub(off)) as usize;
+                if ncopy == 0 {
+                    // nothing in range: pure zero fill
+                    return done(Exec::SlideBulk { dst, src: dst, copy: 0, zero: len });
+                }
+                let src_lo = a + off as usize * eb;
+                let copy = ncopy * eb;
+                // identical groups memmove ascending-safe (src >= dst);
+                // fully disjoint is trivially safe; partial overlap
+                // must replay the exact reference element order
+                if vd == vs2 || disjoint(dst, len, src_lo, copy) {
+                    done(Exec::SlideBulk { dst, src: src_lo, copy, zero: len - copy })
+                } else {
+                    done(Exec::SlideGen { down: true, off, dst, src: a, eb, vl, vlmax })
+                }
+            } else {
+                if off >= vl as u64 {
+                    // every element keeps vd's old value
+                    return done(Exec::SlideBulk { dst, src: dst, copy: 0, zero: 0 });
+                }
+                let copy = (vl as u64 - off) as usize * eb;
+                let dst_lo = dst + off as usize * eb;
+                if disjoint(dst_lo, copy, a, copy) {
+                    done(Exec::SlideBulk { dst: dst_lo, src: a, copy, zero: 0 })
+                } else {
+                    done(Exec::SlideGen { down: false, off, dst, src: a, eb, vl, vlmax })
+                }
+            }
+        }
+        VOp::WAdduWv => {
+            if sew.widened().is_none() {
+                return Err(SimError::Unsupported("vwaddu.wv at SEW=64"));
+            }
+            done(Exec::Wadd { dst, src: a, sew, vl })
+        }
+        VOp::Mv => match src {
+            RawSrc::Scalar(x) => {
+                done(Exec::Fill { dst, len, splat: splat_word(exec::trunc(x, sew), sew) })
+            }
+            RawSrc::Vec(v1) => done(Exec::Copy { dst, src: v1 as usize * vlenb, len }),
+        },
+        VOp::Add | VOp::Sub | VOp::And | VOp::Or | VOp::Xor => {
+            let aop = match op {
+                VOp::Add => AluWord::Add,
+                VOp::Sub => AluWord::Sub,
+                VOp::And => AluWord::And,
+                VOp::Or => AluWord::Or,
+                _ => AluWord::Xor,
+            };
+            done(Exec::Alu { op: aop, sew, dst, a, x: operand(&src), len })
+        }
+        VOp::Sll | VOp::Srl => match src {
+            RawSrc::Scalar(x) => {
+                let sh = (x & (sew.bits() as u64 - 1)) as u32;
+                let aop = if op == VOp::Sll { AluWord::Sll(sh) } else { AluWord::Srl(sh) };
+                done(Exec::Alu { op: aop, sew, dst, a, x: Operand::Splat(0), len })
+            }
+            RawSrc::Vec(_) => done(Exec::Gen {
+                op,
+                sew,
+                vl,
+                dst,
+                a,
+                x: operand(&src),
+                eb,
+                shift,
+                reads_vd: op.reads_vd(),
+            }),
+        },
+        VOp::Mul | VOp::Macc | VOp::Nmsac | VOp::Macsr | VOp::MacsrCfg => {
+            let mop = match op {
+                VOp::Mul => MulOp::Mul,
+                VOp::Macc => MulOp::Macc,
+                VOp::Nmsac => MulOp::Nmsac,
+                _ => MulOp::Macsr,
+            };
+            match src {
+                RawSrc::Scalar(x) if matches!(sew, Sew::E8 | Sew::E16) => done(Exec::MulVx {
+                    op: mop,
+                    sew,
+                    dst,
+                    a,
+                    x: exec::trunc(x, sew),
+                    shift,
+                    len,
+                }),
+                _ => done(Exec::MulLane { op: mop, sew, dst, a, x: operand(&src), shift, len }),
+            }
+        }
+        // cold ops: monomorphic per-element loop over the reference
+        // semantics (no per-element `match op` — `op` selects once)
+        _ => done(Exec::Gen {
+            op,
+            sew,
+            vl,
+            dst,
+            a,
+            x: operand(&src),
+            eb,
+            shift,
+            reads_vd: op.reads_vd(),
+        }),
+    }
+}
+
+#[inline]
+fn disjoint(a: usize, alen: usize, b: usize, blen: usize) -> bool {
+    a + alen <= b || b + blen <= a
+}
+
+// ---------------------------------------------------------------- exec
+
+#[inline]
+fn rd64(b: &[u8], o: usize) -> u64 {
+    u64::from_le_bytes(b[o..o + 8].try_into().unwrap())
+}
+
+#[inline]
+fn wr64(b: &mut [u8], o: usize, v: u64) {
+    b[o..o + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+/// Zero-padded partial-word read (tails; the pad lanes are never
+/// written back, and no SWAR op lets a lane influence a lower one).
+#[inline]
+fn rd_part(b: &[u8], o: usize, n: usize) -> u64 {
+    let mut t = [0u8; 8];
+    t[..n].copy_from_slice(&b[o..o + n]);
+    u64::from_le_bytes(t)
+}
+
+#[inline]
+fn wr_part(b: &mut [u8], o: usize, n: usize, v: u64) {
+    b[o..o + n].copy_from_slice(&v.to_le_bytes()[..n]);
+}
+
+#[inline]
+fn rd_elem(b: &[u8], o: usize, eb: usize) -> u64 {
+    rd_part(b, o, eb)
+}
+
+#[inline]
+fn wr_elem(b: &mut [u8], o: usize, eb: usize, v: u64) {
+    wr_part(b, o, eb, v);
+}
+
+/// Per-lane MSB mask (the SWAR carry fence).
+#[inline]
+fn hi_mask(sew: Sew) -> u64 {
+    match sew {
+        Sew::E8 => 0x8080_8080_8080_8080,
+        Sew::E16 => 0x8000_8000_8000_8000,
+        Sew::E32 => 0x8000_0000_8000_0000,
+        Sew::E64 => 0x8000_0000_0000_0000,
+    }
+}
+
+/// All-ones lane value.
+#[inline]
+fn lane_ones(sew: Sew) -> u64 {
+    exec::trunc(!0u64, sew)
+}
+
+/// Repeat the (truncated) lane value across the 64-bit word.
+#[inline]
+fn splat_word(x: u64, sew: Sew) -> u64 {
+    match sew {
+        Sew::E8 => (x as u8 as u64) * 0x0101_0101_0101_0101,
+        Sew::E16 => (x as u16 as u64) * 0x0001_0001_0001_0001,
+        Sew::E32 => {
+            let x = x as u32 as u64;
+            x | (x << 32)
+        }
+        Sew::E64 => x,
+    }
+}
+
+/// Lane-wise wrapping add: clear the lane MSBs so carries cannot cross
+/// lanes, then patch the MSBs back with the carry-in xor.
+#[inline]
+fn swar_add(a: u64, b: u64, h: u64) -> u64 {
+    ((a & !h).wrapping_add(b & !h)) ^ ((a ^ b) & h)
+}
+
+/// Lane-wise wrapping sub: force the lane MSBs of `a` so borrows
+/// cannot cross lanes, then patch the MSBs with the borrow-in xnor.
+#[inline]
+fn swar_sub(a: u64, b: u64, h: u64) -> u64 {
+    ((a | h).wrapping_sub(b & !h)) ^ (!(a ^ b) & h)
+}
+
+/// SWAR word loop driver: ascending full words, then one zero-padded
+/// partial word for the tail.  `f(a_word, x_word) -> dst_word`.
+#[inline]
+fn alu_loop<F: Fn(u64, u64) -> u64>(bytes: &mut [u8], dst: usize, a: usize, x: Operand, len: usize, f: F) {
+    let words = len / 8;
+    match x {
+        Operand::Splat(s) => {
+            for w in 0..words {
+                let o = w * 8;
+                let r = f(rd64(bytes, a + o), s);
+                wr64(bytes, dst + o, r);
+            }
+            let t = len - words * 8;
+            if t > 0 {
+                let o = words * 8;
+                let r = f(rd_part(bytes, a + o, t), s);
+                wr_part(bytes, dst + o, t, r);
+            }
+        }
+        Operand::Vec(xo) => {
+            for w in 0..words {
+                let o = w * 8;
+                let r = f(rd64(bytes, a + o), rd64(bytes, xo + o));
+                wr64(bytes, dst + o, r);
+            }
+            let t = len - words * 8;
+            if t > 0 {
+                let o = words * 8;
+                let r = f(rd_part(bytes, a + o, t), rd_part(bytes, xo + o, t));
+                wr_part(bytes, dst + o, t, r);
+            }
+        }
+    }
+}
+
+/// Ternary SWAR word loop: `f(a_word, x_word, d_word) -> dst_word`.
+#[inline]
+fn mul_word_loop<F: Fn(u64, u64, u64) -> u64>(
+    bytes: &mut [u8],
+    dst: usize,
+    a: usize,
+    x: Operand,
+    len: usize,
+    f: F,
+) {
+    let words = len / 8;
+    for w in 0..words {
+        let o = w * 8;
+        let xw = match x {
+            Operand::Splat(s) => s,
+            Operand::Vec(xo) => rd64(bytes, xo + o),
+        };
+        let r = f(rd64(bytes, a + o), xw, rd64(bytes, dst + o));
+        wr64(bytes, dst + o, r);
+    }
+    let t = len - words * 8;
+    if t > 0 {
+        let o = words * 8;
+        let xw = match x {
+            Operand::Splat(s) => s,
+            Operand::Vec(xo) => rd_part(bytes, xo + o, t),
+        };
+        let r = f(rd_part(bytes, a + o, t), xw, rd_part(bytes, dst + o, t));
+        wr_part(bytes, dst + o, t, r);
+    }
+}
+
+/// The host-side ULPPACK trick: spread the even/odd lanes of `a` into
+/// spaced fields and let *one* scalar multiply compute every field's
+/// lane product (the products cannot cross fields: at E8 each 8-bit
+/// lane times an 8-bit scalar is < 2^16, exactly the field pitch).
+/// Returns the word of per-lane `(a*x mod 2^SEW) >> sh` values.
+#[inline]
+fn swar_mul_prod(a: u64, x: u64, sh: u32, field: u64, lane_bits: u32) -> u64 {
+    let ae = a & field;
+    let ao = (a >> lane_bits) & field;
+    let pe = ((ae.wrapping_mul(x) & field) >> sh) & field;
+    let po = ((ao.wrapping_mul(x) & field) >> sh) & field;
+    pe | (po << lane_bits)
+}
+
+/// One micro-op, functionally.  The only run-time inputs are the VRF
+/// bytes, the memory, and the vmacsr.cfg CSR.
+fn exec_uop(e: &Exec, st: &mut ExecState, vrf: &mut Vrf, mem: &mut Mem) -> Result<(), SimError> {
+    match *e {
+        Exec::Nop => {}
+        Exec::SetState { vl, vtype } => {
+            st.vl = vl;
+            st.vtype = vtype;
+        }
+        Exec::Load { dst, addr, len } => {
+            vrf.flat_mut()[dst..dst + len].copy_from_slice(mem.read(addr, len)?);
+        }
+        Exec::Store { src, addr, len } => {
+            mem.write(addr, &vrf.flat()[src..src + len])?;
+        }
+        Exec::Fill { dst, len, splat } => {
+            let le = splat.to_le_bytes();
+            for chunk in vrf.flat_mut()[dst..dst + len].chunks_mut(8) {
+                chunk.copy_from_slice(&le[..chunk.len()]);
+            }
+        }
+        Exec::Copy { dst, src, len } => {
+            let b = vrf.flat_mut();
+            let words = len / 8;
+            for w in 0..words {
+                let o = w * 8;
+                let v = rd64(b, src + o);
+                wr64(b, dst + o, v);
+            }
+            for i in words * 8..len {
+                b[dst + i] = b[src + i];
+            }
+        }
+        Exec::SlideBulk { dst, src, copy, zero } => {
+            let b = vrf.flat_mut();
+            b.copy_within(src..src + copy, dst);
+            b[dst + copy..dst + copy + zero].fill(0);
+        }
+        Exec::SlideGen { down, off, dst, src, eb, vl, vlmax } => {
+            let b = vrf.flat_mut();
+            if down {
+                for i in 0..vl as u64 {
+                    let j = i + off;
+                    let v = if j < vlmax as u64 { rd_elem(b, src + j as usize * eb, eb) } else { 0 };
+                    wr_elem(b, dst + i as usize * eb, eb, v);
+                }
+            } else {
+                for i in (0..vl as u64).rev() {
+                    if i < off {
+                        break;
+                    }
+                    let v = rd_elem(b, src + (i - off) as usize * eb, eb);
+                    wr_elem(b, dst + i as usize * eb, eb, v);
+                }
+            }
+        }
+        Exec::Alu { op, sew, dst, a, x, len } => {
+            let b = vrf.flat_mut();
+            let h = hi_mask(sew);
+            match op {
+                AluWord::Add => alu_loop(b, dst, a, x, len, |aw, xw| swar_add(aw, xw, h)),
+                AluWord::Sub => alu_loop(b, dst, a, x, len, |aw, xw| swar_sub(aw, xw, h)),
+                AluWord::And => alu_loop(b, dst, a, x, len, |aw, xw| aw & xw),
+                AluWord::Or => alu_loop(b, dst, a, x, len, |aw, xw| aw | xw),
+                AluWord::Xor => alu_loop(b, dst, a, x, len, |aw, xw| aw ^ xw),
+                AluWord::Sll(sh) => {
+                    let keep = splat_word(exec::trunc(lane_ones(sew) << sh, sew), sew);
+                    alu_loop(b, dst, a, x, len, |aw, _| (aw << sh) & keep);
+                }
+                AluWord::Srl(sh) => {
+                    let keep = splat_word(lane_ones(sew) >> sh, sew);
+                    alu_loop(b, dst, a, x, len, |aw, _| (aw >> sh) & keep);
+                }
+            }
+        }
+        Exec::MulVx { op, sew, dst, a, x, shift, len } => {
+            let b = vrf.flat_mut();
+            let h = hi_mask(sew);
+            let sh = shift.resolve(st, sew);
+            let (field, lane_bits) = match sew {
+                Sew::E8 => (0x00FF_00FF_00FF_00FFu64, 8u32),
+                _ => (0x0000_FFFF_0000_FFFFu64, 16u32),
+            };
+            let prod = |aw: u64| swar_mul_prod(aw, x, sh, field, lane_bits);
+            let xw = Operand::Splat(0); // multiplier folded into `prod`
+            match op {
+                MulOp::Mul => mul_word_loop(b, dst, a, xw, len, |aw, _, _| prod(aw)),
+                MulOp::Macc | MulOp::Macsr => {
+                    mul_word_loop(b, dst, a, xw, len, |aw, _, dw| swar_add(dw, prod(aw), h))
+                }
+                MulOp::Nmsac => {
+                    mul_word_loop(b, dst, a, xw, len, |aw, _, dw| swar_sub(dw, prod(aw), h))
+                }
+            }
+        }
+        Exec::MulLane { op, sew, dst, a, x, shift, len } => {
+            let b = vrf.flat_mut();
+            let sh = shift.resolve(st, sew);
+            exec_mul_lane(b, op, sew, dst, a, x, sh, len);
+        }
+        Exec::Wadd { dst, src, sew, vl } => {
+            let b = vrf.flat_mut();
+            exec_wadd(b, dst, src, sew, vl);
+        }
+        Exec::Gen { op, sew, vl, dst, a, x, eb, shift, reads_vd } => {
+            let b = vrf.flat_mut();
+            let sh = shift.resolve(st, sew);
+            for i in 0..vl as usize {
+                let av = rd_elem(b, a + i * eb, eb);
+                let xv = match x {
+                    Operand::Splat(s) => exec::trunc(s, sew),
+                    Operand::Vec(xo) => rd_elem(b, xo + i * eb, eb),
+                };
+                let dv = if reads_vd { rd_elem(b, dst + i * eb, eb) } else { 0 };
+                wr_elem(b, dst + i * eb, eb, exec::scalar_op(op, av, xv, dv, sew, sh));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Multiply family as a word-read lane loop (VV forms and wide SEWs):
+/// one `match` per instruction, typed lane arithmetic inside.
+#[allow(clippy::too_many_arguments)]
+fn exec_mul_lane(b: &mut [u8], op: MulOp, sew: Sew, dst: usize, a: usize, x: Operand, sh: u32, len: usize) {
+    macro_rules! lanes {
+        ($t:ty, $eb:expr, $f:expr) => {{
+            let f = $f;
+            let eb: usize = $eb;
+            let lanes: usize = 8 / eb;
+            let bits: usize = eb * 8;
+            let words = len / 8;
+            for w in 0..words {
+                let o = w * 8;
+                let aw = rd64(b, a + o);
+                let xw = match x {
+                    Operand::Splat(s) => s,
+                    Operand::Vec(xo) => rd64(b, xo + o),
+                };
+                let dw = rd64(b, dst + o);
+                let mut r = 0u64;
+                for k in 0..lanes {
+                    let s = k * bits;
+                    let rv: $t = f((aw >> s) as $t, (xw >> s) as $t, (dw >> s) as $t);
+                    r |= (rv as u64) << s;
+                }
+                wr64(b, dst + o, r);
+            }
+            let t = len - words * 8;
+            if t > 0 {
+                let o = words * 8;
+                let aw = rd_part(b, a + o, t);
+                let xw = match x {
+                    Operand::Splat(s) => s,
+                    Operand::Vec(xo) => rd_part(b, xo + o, t),
+                };
+                let dw = rd_part(b, dst + o, t);
+                let mut r = 0u64;
+                for k in 0..t / eb {
+                    let s = k * bits;
+                    let rv: $t = f((aw >> s) as $t, (xw >> s) as $t, (dw >> s) as $t);
+                    r |= (rv as u64) << s;
+                }
+                wr_part(b, dst + o, t, r);
+            }
+        }};
+    }
+    macro_rules! per_op {
+        ($t:ty, $eb:expr) => {
+            match op {
+                MulOp::Mul => lanes!($t, $eb, |av: $t, xv: $t, _d: $t| av.wrapping_mul(xv)),
+                MulOp::Macc => {
+                    lanes!($t, $eb, |av: $t, xv: $t, dv: $t| dv.wrapping_add(av.wrapping_mul(xv)))
+                }
+                MulOp::Nmsac => {
+                    lanes!($t, $eb, |av: $t, xv: $t, dv: $t| dv.wrapping_sub(av.wrapping_mul(xv)))
+                }
+                MulOp::Macsr => lanes!($t, $eb, |av: $t, xv: $t, dv: $t| dv
+                    .wrapping_add(av.wrapping_mul(xv) >> sh)),
+            }
+        };
+    }
+    match sew {
+        Sew::E8 => per_op!(u8, 1),
+        Sew::E16 => per_op!(u16, 2),
+        Sew::E32 => per_op!(u32, 4),
+        Sew::E64 => per_op!(u64, 8),
+    }
+}
+
+/// `vwaddu.wv` in reference element order, monomorphic per SEW pair.
+fn exec_wadd(b: &mut [u8], dst: usize, src: usize, sew: Sew, vl: u32) {
+    macro_rules! wadd {
+        ($n:ty, $w:ty, $eb:expr) => {{
+            let eb: usize = $eb;
+            for i in 0..vl as usize {
+                let no = src + i * eb;
+                let wo = dst + i * 2 * eb;
+                let a = <$n>::from_le_bytes(b[no..no + eb].try_into().unwrap()) as $w;
+                let d = <$w>::from_le_bytes(b[wo..wo + 2 * eb].try_into().unwrap());
+                b[wo..wo + 2 * eb].copy_from_slice(&d.wrapping_add(a).to_le_bytes());
+            }
+        }};
+    }
+    match sew {
+        Sew::E8 => wadd!(u8, u16, 1),
+        Sew::E16 => wadd!(u16, u32, 2),
+        Sew::E32 => wadd!(u32, u64, 4),
+        Sew::E64 => unreachable!("rejected at compile"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Lmul, ScalarKind};
+
+    fn cfg() -> ProcessorConfig {
+        ProcessorConfig::sparq_cfgshift()
+    }
+
+    fn roundtrip(p: &Program, cfg: &ProcessorConfig) -> (RunReport, Vec<u8>, RunReport, Vec<u8>) {
+        let mut a = Machine::new(cfg.clone(), 1 << 16);
+        let mut b = Machine::new(cfg.clone(), 1 << 16);
+        // seed both VRFs with the same pseudo-random bytes
+        let n = (cfg.vlen_bits / 8 * 32) as usize;
+        let fill: Vec<u8> = (0..n).map(|i| (i as u32).wrapping_mul(2654435761) as u8).collect();
+        a.vrf().slice_mut(0, n).copy_from_slice(&fill);
+        b.vrf().slice_mut(0, n).copy_from_slice(&fill);
+        a.mem.write(0, &[7u8; 256]).unwrap();
+        b.mem.write(0, &[7u8; 256]).unwrap();
+        let ra = a.run(p).unwrap();
+        let cp = CompiledProgram::compile(p, cfg).unwrap();
+        let rb = b.run_compiled(&cp).unwrap();
+        let va = a.vrf().slice(0, n).to_vec();
+        let vb = b.vrf().slice(0, n).to_vec();
+        (ra, va, rb, vb)
+    }
+
+    #[test]
+    fn compiled_matches_interpreter_on_mixed_program() {
+        let c = cfg();
+        let mut p = Program::new("mixed");
+        p.push(VInst::SetVl { avl: 37, sew: Sew::E8, lmul: Lmul::M1 });
+        p.push(VInst::Load { eew: Sew::E8, vd: 1, addr: 0x10 });
+        p.push(VInst::OpVX { op: VOp::Macsr, vd: 2, vs2: 1, rs1: 0x55 });
+        p.push(VInst::OpVX { op: VOp::Macc, vd: 3, vs2: 1, rs1: 200 });
+        p.push(VInst::OpVV { op: VOp::Add, vd: 4, vs2: 2, vs1: 3 });
+        p.push(VInst::OpVV { op: VOp::Sub, vd: 4, vs2: 4, vs1: 1 });
+        p.push(VInst::OpVI { op: VOp::SlideDown, vd: 4, vs2: 4, imm: 1 });
+        p.push(VInst::OpVI { op: VOp::Srl, vd: 5, vs2: 4, imm: 3 });
+        p.push(VInst::Scalar { kind: ScalarKind::LoopCtl, n: 2 });
+        p.push(VInst::SetVl { avl: 19, sew: Sew::E16, lmul: Lmul::M2 });
+        p.push(VInst::OpVX { op: VOp::Mul, vd: 6, vs2: 8, rs1: 0x1234 });
+        p.push(VInst::OpVV { op: VOp::WAdduWv, vd: 12, vs2: 6, vs1: 0 });
+        p.push(VInst::OpVI { op: VOp::Mv, vd: 10, vs2: 0, imm: -3 });
+        p.push(VInst::Store { eew: Sew::E16, vs3: 6, addr: 0x200 });
+        let (ra, va, rb, vb) = roundtrip(&p, &c);
+        assert_eq!(va, vb, "VRF diverged");
+        assert_eq!(ra.stats.cycles, rb.stats.cycles);
+        assert_eq!(ra.stats.element_ops, rb.stats.element_ops);
+        assert_eq!(ra.stats.raw_stall_cycles, rb.stats.raw_stall_cycles);
+        assert_eq!(ra.stats.bytes_loaded, rb.stats.bytes_loaded);
+        assert_eq!(ra.stats.bytes_stored, rb.stats.bytes_stored);
+        assert_eq!(ra.stats.unit_table(), rb.stats.unit_table());
+    }
+
+    #[test]
+    fn strategies_land_where_expected() {
+        let c = cfg();
+        let mut p = Program::new("strat");
+        p.push(VInst::SetVl { avl: 64, sew: Sew::E8, lmul: Lmul::M1 });
+        p.push(VInst::Load { eew: Sew::E8, vd: 1, addr: 0 }); // bulk
+        p.push(VInst::OpVX { op: VOp::Macsr, vd: 2, vs2: 1, rs1: 3 }); // swar
+        p.push(VInst::OpVV { op: VOp::Add, vd: 3, vs2: 1, vs1: 2 }); // swar
+        p.push(VInst::OpVX { op: VOp::Mulhu, vd: 4, vs2: 1, rs1: 3 }); // generic
+        let cp = CompiledProgram::compile(&p, &c).unwrap();
+        assert_eq!(cp.strategy_counts(), (1, 2, 1));
+    }
+
+    #[test]
+    fn vx_mul_family_lowers_to_the_spaced_field_trick() {
+        // guard the fast path specifically: a regression that demotes
+        // the .vx multiply family to the per-lane loop would still
+        // count as "Swar" in the aggregate, so pin the variant itself
+        let c = cfg();
+        let mut p = Program::new("trick");
+        p.push(VInst::SetVl { avl: 64, sew: Sew::E8, lmul: Lmul::M1 });
+        p.push(VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 3 });
+        p.push(VInst::OpVV { op: VOp::Macc, vd: 3, vs2: 4, vs1: 5 });
+        p.push(VInst::SetVl { avl: 8, sew: Sew::E32, lmul: Lmul::M1 });
+        p.push(VInst::OpVX { op: VOp::Macc, vd: 6, vs2: 7, rs1: 3 });
+        let cp = CompiledProgram::compile(&p, &c).unwrap();
+        assert!(matches!(cp.uops[1].exec, Exec::MulVx { .. }), ".vx at E8 takes the trick");
+        assert!(matches!(cp.uops[2].exec, Exec::MulLane { .. }), ".vv takes the lane loop");
+        assert!(matches!(cp.uops[4].exec, Exec::MulLane { .. }), ".vx at E32 takes the lane loop");
+    }
+
+    #[test]
+    fn wide_eew_load_past_v31_is_typed_not_a_panic() {
+        // At e8/m8 with vl = VLMAX, a load at EEW=64 spans 8x the group
+        // bytes: the interpreter only catches this as a debug_assert /
+        // slice panic; the compile path reports it as a typed error.
+        let c = cfg();
+        let mut p = Program::new("oob");
+        p.push(VInst::SetVl { avl: 1 << 20, sew: Sew::E8, lmul: Lmul::M8 });
+        p.push(VInst::Load { eew: Sew::E64, vd: 24, addr: 0 });
+        assert_eq!(
+            CompiledProgram::compile(&p, &c).unwrap_err(),
+            SimError::GroupPastV31 { reg: 24, lmul: 8 }
+        );
+    }
+
+    #[test]
+    fn compile_rejects_illegal_ops_for_the_config() {
+        let mut p = Program::new("illegal");
+        p.push(VInst::SetVl { avl: 8, sew: Sew::E16, lmul: Lmul::M1 });
+        p.push(VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 3 });
+        assert_eq!(
+            CompiledProgram::compile(&p, &ProcessorConfig::ara()).unwrap_err(),
+            SimError::NoVmacsr
+        );
+    }
+
+    #[test]
+    fn run_compiled_rejects_mismatched_machine() {
+        let p = Program::new("empty");
+        let cp = CompiledProgram::compile(&p, &ProcessorConfig::sparq()).unwrap();
+        let mut m = Machine::new(ProcessorConfig::ara(), 1 << 12);
+        assert!(m.run_compiled(&cp).is_err());
+    }
+
+    #[test]
+    fn swar_add_sub_lanes_are_independent() {
+        for sew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+            let h = hi_mask(sew);
+            let a = 0xFFFE_8001_7FFF_0000u64;
+            let b = 0x0003_8001_8001_FFFFu64;
+            let bits = sew.bits();
+            let lanes = 64 / bits;
+            let sum = swar_add(a, b, h);
+            let dif = swar_sub(a, b, h);
+            for k in 0..lanes {
+                let sh = k * bits;
+                let la = exec::trunc(a >> sh, sew);
+                let lb = exec::trunc(b >> sh, sew);
+                assert_eq!(exec::trunc(sum >> sh, sew), exec::trunc(la.wrapping_add(lb), sew));
+                assert_eq!(exec::trunc(dif >> sh, sew), exec::trunc(la.wrapping_sub(lb), sew));
+            }
+        }
+    }
+
+    #[test]
+    fn swar_mul_prod_matches_per_lane() {
+        // E8: 8 lanes, every (shift, x) combination against the scalar
+        for &x in &[0u64, 1, 2, 0x55, 0xAA, 0xFF] {
+            for sh in 0..8u32 {
+                let a = 0x80FF_7F01_C933_0212u64;
+                let got = swar_mul_prod(a, x, sh, 0x00FF_00FF_00FF_00FF, 8);
+                for k in 0..8 {
+                    let la = (a >> (8 * k)) as u8 as u64;
+                    let want = ((la * x) & 0xFF) >> sh;
+                    assert_eq!((got >> (8 * k)) as u8 as u64, want, "x={x:#x} sh={sh} lane {k}");
+                }
+            }
+        }
+        // E16: 4 lanes
+        for &x in &[0u64, 3, 0x8000, 0xFFFF] {
+            for sh in [0u32, 8, 15] {
+                let a = 0xFFFF_8001_1234_00FFu64;
+                let got = swar_mul_prod(a, x, sh, 0x0000_FFFF_0000_FFFF, 16);
+                for k in 0..4 {
+                    let la = (a >> (16 * k)) as u16 as u64;
+                    let want = ((la * x) & 0xFFFF) >> sh;
+                    assert_eq!((got >> (16 * k)) as u16 as u64, want, "x={x:#x} sh={sh} lane {k}");
+                }
+            }
+        }
+    }
+}

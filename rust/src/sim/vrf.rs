@@ -2,6 +2,7 @@
 //! stored as raw bytes (exactly like the banked SRAM slices of an Ara
 //! lane, minus the banking — the timing model accounts for bandwidth).
 
+use super::SimError;
 use crate::isa::Sew;
 
 #[derive(Debug, Clone)]
@@ -27,8 +28,41 @@ impl Vrf {
     }
 
     #[inline]
-    fn base(&self, v: u8) -> usize {
+    pub(crate) fn base(&self, v: u8) -> usize {
         v as usize * self.vlenb as usize
+    }
+
+    /// Flat byte view of the whole register file (the micro-op engine
+    /// computes register-group offsets itself — see [`super::uop`]).
+    #[inline]
+    pub(crate) fn flat(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    #[inline]
+    pub(crate) fn flat_mut(&mut self) -> &mut [u8] {
+        &mut self.bytes
+    }
+
+    /// Typed bounds check for a `len`-byte access to the group at `v` —
+    /// the compile-path promotion of the `debug_assert!`s in
+    /// [`Vrf::get`]/[`Vrf::set`]: `sim::uop` validates every access
+    /// range once at compile time (through [`Vrf::check_group_for`],
+    /// which needs only the VLEN) and reports
+    /// [`SimError::GroupPastV31`] instead of a run-time panic, which
+    /// keeps the run-time loops check-free.
+    pub fn check_group(&self, v: u8, len: usize, lmul: u32) -> Result<(), SimError> {
+        Vrf::check_group_for(self.vlenb as usize, v, len, lmul)
+    }
+
+    /// [`Vrf::check_group`] without a register file in hand (`vlenb` in
+    /// bytes) — what `sim::uop::CompiledProgram::compile` calls, since
+    /// compilation happens before any machine exists.
+    pub fn check_group_for(vlenb: usize, v: u8, len: usize, lmul: u32) -> Result<(), SimError> {
+        if v as usize * vlenb + len > 32 * vlenb {
+            return Err(SimError::GroupPastV31 { reg: v, lmul });
+        }
+        Ok(())
     }
 
     /// Read element `i` of register group starting at `v` (flows across
@@ -113,6 +147,21 @@ mod tests {
         let mut vrf = Vrf::new(256); // 32B per reg => 16 e16 elements
         vrf.set(2, 16, Sew::E16, 0x1234); // first element of v3
         assert_eq!(vrf.get(3, 0, Sew::E16), 0x1234);
+    }
+
+    #[test]
+    fn check_group_is_typed_where_get_would_assert() {
+        let vrf = Vrf::new(256); // 32 B/reg, 1 KiB total
+        assert!(vrf.check_group(24, 8 * 32, 8).is_ok()); // v24..v31 exactly
+        assert_eq!(
+            vrf.check_group(24, 8 * 32 + 1, 8),
+            Err(SimError::GroupPastV31 { reg: 24, lmul: 8 })
+        );
+        // the eew-wider-than-sew load shape: v31 + 2 registers' worth
+        assert_eq!(
+            vrf.check_group(31, 64, 1),
+            Err(SimError::GroupPastV31 { reg: 31, lmul: 1 })
+        );
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Differential fuzzing of the three execution engines: randomized
+//! programs (all `VOp`s x SEW x LMUL x identical/disjoint/partially-
+//! overlapping register groups, plus loads/stores/slides/vsetvli
+//! churn) run through
+//!
+//! * `Machine::run_reference` — the retained per-element oracle,
+//! * `Machine::run`           — the interpreter with its VX fast paths,
+//! * `Machine::run_compiled`  — the pre-compiled SWAR micro-op engine,
+//!
+//! and every run must agree bit-for-bit on the VRF, the memory, *and*
+//! the `RunReport` (cycles, element ops, per-unit busy/inst counters,
+//! bytes moved, RAW stalls).  This is the contract that lets the
+//! serving stack run the word-parallel engine (DESIGN.md §Perf).
+
+use sparq::arch::ProcessorConfig;
+use sparq::isa::{Lmul, ScalarKind, Sew, VInst, VOp};
+use sparq::sim::{CompiledProgram, Machine, Program, RunReport};
+use sparq::testutil::{Gen, Prop};
+
+const VLEN: u32 = 512; // small VRF: fast cases, frequent group reuse
+const MEM: usize = 1 << 14;
+
+/// A machine with every extension enabled (FPU + vmacsr + cfg-shifter)
+/// so the generator can draw from the full op set.
+fn fuzz_cfg() -> ProcessorConfig {
+    let mut cfg = ProcessorConfig::sparq_cfgshift();
+    cfg.fpu = true;
+    cfg.vlen_bits = VLEN;
+    cfg.name = "fuzz".into();
+    cfg
+}
+
+struct VState {
+    sew: Sew,
+    lmul: Lmul,
+    vl: u32,
+    vlmax: u32,
+}
+
+fn pick_sew(g: &mut Gen) -> Sew {
+    *g.pick(&[Sew::E8, Sew::E16, Sew::E32, Sew::E64])
+}
+
+fn pick_lmul(g: &mut Gen) -> Lmul {
+    *g.pick(&[Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8])
+}
+
+/// An LMUL-aligned register whose group fits below v32.
+fn reg(g: &mut Gen, factor: u32) -> u8 {
+    (g.below((32 / factor) as u64) as u32 * factor) as u8
+}
+
+fn setvl(g: &mut Gen, st: &mut VState) -> VInst {
+    let sew = pick_sew(g);
+    let lmul = pick_lmul(g);
+    let vlmax = VLEN / sew.bits() * lmul.factor();
+    let avl = g.range(1, (2 * vlmax) as u64);
+    st.sew = sew;
+    st.lmul = lmul;
+    st.vlmax = vlmax;
+    st.vl = avl.min(vlmax as u64) as u32;
+    VInst::SetVl { avl, sew, lmul }
+}
+
+fn arith(g: &mut Gen, st: &VState) -> VInst {
+    let f = st.lmul.factor();
+    let vd = reg(g, f);
+    let vs2 = reg(g, f);
+    // the full integer op set; FP only at the modelled SEW=32
+    let mut ops = vec![
+        VOp::Add,
+        VOp::Sub,
+        VOp::And,
+        VOp::Or,
+        VOp::Xor,
+        VOp::Sll,
+        VOp::Srl,
+        VOp::Sra,
+        VOp::Min,
+        VOp::Max,
+        VOp::Mv,
+        VOp::Mul,
+        VOp::Mulh,
+        VOp::Mulhu,
+        VOp::Macc,
+        VOp::Nmsac,
+        VOp::Macsr,
+        VOp::MacsrCfg,
+    ];
+    if st.sew == Sew::E32 {
+        ops.extend([VOp::FAdd, VOp::FMul, VOp::FMacc]);
+    }
+    if st.sew != Sew::E64 {
+        ops.push(VOp::WAdduWv);
+    }
+    ops.extend([VOp::SlideDown, VOp::SlideUp]);
+    let op = *g.pick(&ops);
+
+    if op == VOp::WAdduWv {
+        // vd needs a 2*LMUL-aligned group (may partially overlap vs2 —
+        // exactly the case the ascending-order engines must get right)
+        let df = 2 * f;
+        let vd = reg(g, df);
+        return VInst::OpVV { op, vd, vs2, vs1: reg(g, f) };
+    }
+    if op.is_slide() {
+        // .vx/.vi only (no .vv form); vslideup forbids vd == vs2
+        let vs2 = if op == VOp::SlideUp {
+            let v = reg(g, f);
+            if v == vd {
+                // next aligned group (still a multiple of f, f | 32)
+                ((vd as u32 + f) % 32) as u8
+            } else {
+                v
+            }
+        } else {
+            vs2
+        };
+        let off = g.below(st.vlmax as u64 + 2);
+        return if g.bool() && off < 32 {
+            VInst::OpVI { op, vd, vs2, imm: off as i8 }
+        } else {
+            VInst::OpVX { op, vd, vs2, rs1: off }
+        };
+    }
+    match g.below(3) {
+        0 => VInst::OpVV { op, vd, vs2, vs1: reg(g, f) },
+        1 => VInst::OpVX { op, vd, vs2, rs1: g.next_u64() },
+        _ => VInst::OpVI { op, vd, vs2, imm: g.irange(-16, 15) as i8 },
+    }
+}
+
+fn mem_op(g: &mut Gen, st: &VState) -> VInst {
+    let f = st.lmul.factor();
+    let vlenb = (VLEN / 8) as usize;
+    // mixed EEW too (the conv kernels' widened stores do this): pick a
+    // base whose vl*EEW-byte access stays inside the register file so
+    // all three engines remain legal
+    let mut eew = *g.pick(&[Sew::E8, Sew::E16, Sew::E32, Sew::E64]);
+    let mut n = st.vl as usize * eew.bytes() as usize;
+    let mut fits: Vec<u8> = (0..32 / f)
+        .map(|k| (k * f) as u8)
+        .filter(|&r| r as usize * vlenb + n <= 32 * vlenb)
+        .collect();
+    if fits.is_empty() {
+        // EEW == SEW always fits every aligned group
+        eew = st.sew;
+        n = st.vl as usize * eew.bytes() as usize;
+        fits = (0..32 / f).map(|k| (k * f) as u8).collect();
+    }
+    let v = *g.pick(&fits);
+    let addr = g.below((MEM - n) as u64 + 1);
+    if g.bool() {
+        VInst::Load { eew, vd: v, addr }
+    } else {
+        VInst::Store { eew, vs3: v, addr }
+    }
+}
+
+fn gen_program(g: &mut Gen) -> (Program, u32) {
+    let mut p = Program::new("fuzz");
+    let mut st = VState { sew: Sew::E8, lmul: Lmul::M1, vl: 0, vlmax: 0 };
+    p.push(setvl(g, &mut st));
+    let n = g.range(8, 28);
+    for _ in 0..n {
+        let inst = match g.below(100) {
+            0..=11 => setvl(g, &mut st),
+            12..=27 => mem_op(g, &st),
+            28..=33 => VInst::Scalar { kind: ScalarKind::LoopCtl, n: g.range(1, 4) as u32 },
+            _ => arith(g, &st),
+        };
+        p.push(inst);
+    }
+    (p, g.below(16) as u32)
+}
+
+fn machine_with_state(cfg: &ProcessorConfig, seed_bytes: &[u8]) -> Machine {
+    let mut m = Machine::new(cfg.clone(), MEM);
+    let vrf_len = (VLEN / 8 * 32) as usize;
+    m.vrf().slice_mut(0, vrf_len).copy_from_slice(&seed_bytes[..vrf_len]);
+    m.mem.write(0, &seed_bytes[vrf_len..vrf_len + 4096]).unwrap();
+    m
+}
+
+fn snapshot(m: &mut Machine) -> (Vec<u8>, Vec<u8>) {
+    let vrf_len = (VLEN / 8 * 32) as usize;
+    (m.vrf().slice(0, vrf_len).to_vec(), m.mem.read(0, MEM).unwrap().to_vec())
+}
+
+fn assert_reports_eq(a: &RunReport, b: &RunReport, what: &str) {
+    assert_eq!(a.stats.cycles, b.stats.cycles, "{what}: cycles");
+    assert_eq!(a.stats.element_ops, b.stats.element_ops, "{what}: element ops");
+    assert_eq!(a.stats.raw_stall_cycles, b.stats.raw_stall_cycles, "{what}: raw stalls");
+    assert_eq!(a.stats.bytes_loaded, b.stats.bytes_loaded, "{what}: bytes loaded");
+    assert_eq!(a.stats.bytes_stored, b.stats.bytes_stored, "{what}: bytes stored");
+    assert_eq!(a.stats.unit_table(), b.stats.unit_table(), "{what}: unit counters");
+}
+
+#[test]
+fn compiled_and_fast_engines_match_the_reference_bit_for_bit() {
+    let cfg = fuzz_cfg();
+    Prop::new(0xD1FF).runs(150).check(|g| {
+        let (p, csr) = gen_program(g);
+        let seed_bytes: Vec<u8> = {
+            let n = (VLEN / 8 * 32) as usize + 4096;
+            (0..n).map(|_| g.next_u64() as u8).collect()
+        };
+
+        let mut m_ref = machine_with_state(&cfg, &seed_bytes);
+        let mut m_fast = machine_with_state(&cfg, &seed_bytes);
+        let mut m_uop = machine_with_state(&cfg, &seed_bytes);
+        m_ref.set_shift_csr(csr);
+        m_fast.set_shift_csr(csr);
+        m_uop.set_shift_csr(csr);
+
+        let r_ref = m_ref.run_reference(&p).unwrap_or_else(|e| panic!("reference: {e}\n{p:?}"));
+        let r_fast = m_fast.run(&p).unwrap_or_else(|e| panic!("interpreter: {e}\n{p:?}"));
+        let cp = CompiledProgram::compile(&p, &cfg)
+            .unwrap_or_else(|e| panic!("uop compile: {e}\n{p:?}"));
+        let r_uop = m_uop.run_compiled(&cp).unwrap_or_else(|e| panic!("uop run: {e}\n{p:?}"));
+
+        let s_ref = snapshot(&mut m_ref);
+        let s_fast = snapshot(&mut m_fast);
+        let s_uop = snapshot(&mut m_uop);
+        assert_eq!(s_ref.0, s_fast.0, "interpreter VRF diverged\n{p:?}");
+        assert_eq!(s_ref.1, s_fast.1, "interpreter memory diverged\n{p:?}");
+        assert_eq!(s_ref.0, s_uop.0, "compiled VRF diverged\n{p:?}");
+        assert_eq!(s_ref.1, s_uop.1, "compiled memory diverged\n{p:?}");
+        assert_reports_eq(&r_ref, &r_fast, "interpreter");
+        assert_reports_eq(&r_ref, &r_uop, "compiled");
+    });
+}
+
+#[test]
+fn hot_conv_shapes_match_across_engines() {
+    // the exact op mix the conv kernels emit, at the kernels' SEWs —
+    // long vectors so the SWAR word loops run many full words + tails
+    let cfg = fuzz_cfg();
+    for (sew, vl) in [(Sew::E8, 61u64), (Sew::E8, 64), (Sew::E16, 37), (Sew::E16, 32)] {
+        let mut p = Program::new("conv-shape");
+        p.push(VInst::SetVl { avl: vl, sew, lmul: Lmul::M1 });
+        p.push(VInst::Load { eew: sew, vd: 22, addr: 0x40 });
+        for k in 0..6u8 {
+            p.push(VInst::Scalar { kind: ScalarKind::WeightLoad, n: 1 });
+            p.push(VInst::OpVX { op: VOp::Macsr, vd: k, vs2: 22, rs1: 0x9E + k as u64 });
+            p.push(VInst::OpVX { op: VOp::Macc, vd: k, vs2: 22, rs1: 3 + k as u64 });
+            p.push(VInst::OpVI { op: VOp::SlideDown, vd: 22, vs2: 22, imm: 1 });
+        }
+        if sew.widened().is_some() {
+            p.push(VInst::OpVI { op: VOp::Srl, vd: 23, vs2: 0, imm: 4 });
+            p.push(VInst::OpVV { op: VOp::WAdduWv, vd: 8, vs2: 23, vs1: 0 });
+            p.push(VInst::OpVI { op: VOp::Mv, vd: 0, vs2: 0, imm: 0 });
+        }
+        p.push(VInst::Store { eew: sew, vs3: 0, addr: 0x400 });
+
+        let seed_bytes: Vec<u8> = {
+            let n = (VLEN / 8 * 32) as usize + 4096;
+            (0..n).map(|i| (i as u32).wrapping_mul(2654435761) as u8).collect()
+        };
+        let mut m_ref = machine_with_state(&cfg, &seed_bytes);
+        let mut m_uop = machine_with_state(&cfg, &seed_bytes);
+        let r_ref = m_ref.run_reference(&p).unwrap();
+        let cp = CompiledProgram::compile(&p, &cfg).unwrap();
+        let (_, swar, _) = cp.strategy_counts();
+        assert!(swar > 0, "conv shape must land on the SWAR strategy");
+        let r_uop = m_uop.run_compiled(&cp).unwrap();
+        assert_eq!(snapshot(&mut m_ref), snapshot(&mut m_uop), "{sew:?} vl={vl}");
+        assert_reports_eq(&r_ref, &r_uop, "conv shape");
+    }
+}
+
+#[test]
+fn group_past_v31_is_a_typed_compile_error() {
+    // An EEW=64 load under an e8 vtype spans 8x the checked group: the
+    // interpreter only catches this via debug_assert/slice panics; the
+    // compile path must return the typed SimError instead (satellite:
+    // Vrf bounds promotion).
+    let cfg = fuzz_cfg();
+    let mut p = Program::new("oob");
+    p.push(VInst::SetVl { avl: 1 << 16, sew: Sew::E8, lmul: Lmul::M8 });
+    p.push(VInst::Load { eew: Sew::E64, vd: 24, addr: 0 });
+    assert_eq!(
+        CompiledProgram::compile(&p, &cfg).unwrap_err(),
+        sparq::sim::SimError::GroupPastV31 { reg: 24, lmul: 8 }
+    );
+}
