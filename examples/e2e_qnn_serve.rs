@@ -1,48 +1,44 @@
-//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//! END-TO-END DRIVER: serve the whole SparqCNN through the simulated
+//! dataflow backend.
 //!
-//! * L1/L2 (build time): `make artifacts` trained the QNN and lowered
-//!   the packed pallas conv + model to HLO text.
-//! * Runtime (this binary, pure rust): load the artifacts via PJRT,
-//!   stand up the serving coordinator (bounded queue, dynamic batcher,
-//!   worker threads), stream the held-out test set through it, and
-//!   attribute simulated Sparq hardware cycles to every request via the
-//!   qnn scheduler.
+//! The network compiles ONCE per precision into a chained multi-layer
+//! program (`qnn::compiled::CompiledQnn`): one planned activation
+//! arena, per-layer convs whose inputs rebind to the previous layer's
+//! output region, zero-padding/requantize/maxpool/GAP+FC as real
+//! instruction streams, cached in the shared `ProgramCache` under a
+//! graph-level key.  The serving coordinator (bounded queue, dynamic
+//! batcher, worker threads) classifies a synthetic test set through it
+//! — and because the executed network is bit-exact against the host
+//! golden model (`QnnNet::golden_forward`), served accuracy against
+//! golden labels must be 100%.
 //!
-//! Reports: accuracy per precision (Table I), serving latency
-//! percentiles + throughput, and the paper's headline metric — the
-//! sub-byte speedup over the int16 schedule.  Results are recorded in
-//! EXPERIMENTS.md §E2E.
-//!
-//! Run: `make artifacts && cargo run --release --example e2e_qnn_serve`
+//! No artifacts needed: `cargo run --release --example e2e_qnn_serve`
 
 use sparq::config::ServeConfig;
-use sparq::coordinator::{Executor, PjrtExecutor, Server};
+use sparq::coordinator::{sim_qnn_factory, Server};
+use sparq::kernels::ProgramCache;
 use sparq::power::LaneReport;
-use sparq::qnn::schedule::QnnPrecision;
-use sparq::report;
-use sparq::runtime::{artifacts_dir, artifacts_present, TestSet};
+use sparq::qnn::schedule::{schedule_seeded, QnnPrecision, DEFAULT_QNN_SEED};
+use sparq::qnn::{QnnGraph, QnnNet};
+use sparq::sim::MachinePool;
 use sparq::ProcessorConfig;
+use std::sync::Arc;
+
+const IMAGES: usize = 96;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    if !artifacts_present() {
-        eprintln!("no artifacts found — run `make artifacts` first");
-        std::process::exit(2);
-    }
-    let dir = artifacts_dir();
-    let ts = TestSet::load(dir.join("testset.bin"))?;
-    println!(
-        "test set: {} images ({}x{}x{}), 4 classes\n",
-        ts.n, ts.c, ts.h, ts.w
-    );
-
+    let graph = QnnGraph::sparq_cnn();
+    graph.validate()?;
     let sparq_cfg = ProcessorConfig::sparq();
     let fmax = LaneReport::for_config(&sparq_cfg).fmax_ghz();
-    let int16_sched =
-        report::qnn_schedule(&sparq_cfg, QnnPrecision::SubByte { w_bits: 8, a_bits: 8 });
-    // int16 reference: schedule the quantized layers as int16 too
+    let cache = Arc::new(ProgramCache::new());
+    let pool = MachinePool::new();
+    let seed = DEFAULT_QNN_SEED;
+
+    // int16 reference: every conv layer scheduled as int16 (the
+    // paper's speedup denominator; pool/head identical across both)
     let int16_cycles = {
         use sparq::kernels::{run_conv, ConvDims, ConvVariant, Workload};
-        // conv1 + conv2 + conv3 all as int16 (padded dims, as scheduler)
         let mut total = 0u64;
         for (c, co, h, f) in [(2u32, 16u32, 16u32, 3u32), (16, 32, 16, 3), (32, 32, 8, 3)] {
             let dims = ConvDims { c, h: h + f - 1, w: h + f - 1, co, fh: f, fw: f };
@@ -51,58 +47,55 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
         total
     };
-    drop(int16_sched);
 
     let mut summary = Vec::new();
-    for (model, prec) in [
-        ("qnn_w4a4", QnnPrecision::SubByte { w_bits: 4, a_bits: 4 }),
-        ("qnn_w3a3", QnnPrecision::SubByte { w_bits: 3, a_bits: 3 }),
-        ("qnn_w2a2", QnnPrecision::SubByte { w_bits: 2, a_bits: 2 }),
+    for prec in [
+        QnnPrecision::SubByte { w_bits: 4, a_bits: 4 },
+        QnnPrecision::SubByte { w_bits: 3, a_bits: 3 },
+        QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
     ] {
-        let sched = report::qnn_schedule(&sparq_cfg, prec)?;
+        let sched = schedule_seeded(&sparq_cfg, &graph, prec, seed, &cache, &pool)?;
         let cyc = sched.total_cycles();
-        println!("=== serving {model} (simulated Sparq: {cyc} cycles/image) ===");
+        println!("=== serving SparqCNN at {} ({cyc} cycles/image, end-to-end) ===", prec.label());
+        print!("{}", sparq::report::render_schedule(&sched, fmax));
 
-        let dirc = dir.clone();
-        let modelc = model.to_string();
+        // synthetic test set labelled by the golden network: served
+        // classifications must agree on every image (bit-exactness)
+        let net = QnnNet::from_seed(&graph, prec, seed)?;
+        let images: Vec<Vec<u64>> = (0..IMAGES).map(|i| net.test_image(1000 + i as u64)).collect();
+        let labels: Vec<usize> = images
+            .iter()
+            .map(|img| net.golden_forward(img).map(|t| t.argmax))
+            .collect::<Result<_, _>>()?;
+
         let server = Server::start(
-            Box::new(move || {
-                Ok(Box::new(PjrtExecutor::new(&dirc, &modelc)?) as Box<dyn Executor>)
-            }),
+            sim_qnn_factory(
+                sparq_cfg.clone(),
+                graph.clone(),
+                prec,
+                4,
+                seed,
+                Arc::clone(&cache),
+            ),
             ServeConfig { workers: 2, batch_window_us: 300, queue_depth: 256 },
             cyc,
         )?;
 
         let t0 = std::time::Instant::now();
-        type Rx = std::sync::mpsc::Receiver<
-            Result<sparq::coordinator::InferResult, sparq::coordinator::ServeError>,
-        >;
-        let mut pending: Vec<(usize, Rx)> = Vec::new();
+        let mut pending = Vec::new();
         let mut correct = 0usize;
         let mut served = 0usize;
-        for i in 0..ts.n {
-            // cap in-flight work so reported latency reflects service
-            // time + batching, not a self-inflicted standing queue
+        for (i, img) in images.iter().enumerate() {
+            let fimg: Vec<f32> = img.iter().map(|&v| v as f32).collect();
+            match server.submit(fimg) {
+                Ok(rx) => pending.push((i, rx)),
+                Err(e) => println!("request {i}: {e}"),
+            }
             if pending.len() >= 32 {
                 for (j, rx) in pending.drain(..) {
                     if let Ok(Ok(r)) = rx.recv() {
                         served += 1;
-                        correct += (r.class == ts.labels[j] as usize) as usize;
-                    }
-                }
-            }
-            match server.submit(ts.image(i).to_vec()) {
-                Ok(rx) => pending.push((i, rx)),
-                Err(_) => {
-                    // backpressure: drain, then retry once
-                    for (j, rx) in pending.drain(..) {
-                        if let Ok(Ok(r)) = rx.recv() {
-                            served += 1;
-                            correct += (r.class == ts.labels[j] as usize) as usize;
-                        }
-                    }
-                    if let Ok(rx) = server.submit(ts.image(i).to_vec()) {
-                        pending.push((i, rx));
+                        correct += (r.class == labels[j]) as usize;
                     }
                 }
             }
@@ -110,7 +103,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         for (j, rx) in pending.drain(..) {
             if let Ok(Ok(r)) = rx.recv() {
                 served += 1;
-                correct += (r.class == ts.labels[j] as usize) as usize;
+                correct += (r.class == labels[j]) as usize;
             }
         }
         let wall = t0.elapsed();
@@ -118,9 +111,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let acc = correct as f64 / served.max(1) as f64;
         let speedup = int16_cycles as f64 / cyc as f64;
         println!(
-            "  accuracy {:.2}% over {} images\n  \
+            "  golden agreement {:.2}% over {} images (must be 100 — the arena numerics are exact)\n  \
              latency p50/p95/p99 = {}/{}/{} us, mean batch {:.1}, {:.0} req/s (wall {:.2}s)\n  \
-             hardware: {} cycles/image -> {:.0} img/s at {:.3} GHz; speedup over int16 schedule: {:.2}x\n",
+             hardware: {} cycles/image -> {:.0} img/s at {:.3} GHz; speedup over int16 convs: {:.2}x\n",
             100.0 * acc,
             served,
             snap.p50_us,
@@ -134,13 +127,21 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             fmax,
             speedup
         );
-        summary.push((model, acc, cyc, speedup));
+        summary.push((prec.label(), acc, cyc, speedup));
     }
 
-    println!("=== summary (headline: paper claims 3.2x @ 2-bit, 1.7x @ 4-bit on conv2d) ===");
-    println!("{:<10} {:>9} {:>14} {:>22}", "model", "accuracy", "cycles/image", "speedup vs int16 QNN");
+    let cs = cache.stats();
+    println!("=== summary (paper headline: 3.2x @ 2-bit, 1.7x @ 4-bit on conv2d) ===");
+    println!(
+        "{:<10} {:>17} {:>14} {:>22}",
+        "model", "golden agreement", "cycles/image", "speedup vs int16 convs"
+    );
     for (m, acc, cyc, sp) in &summary {
-        println!("{:<10} {:>8.2}% {:>14} {:>21.2}x", m, 100.0 * acc, cyc, sp);
+        println!("{:<10} {:>16.2}% {:>14} {:>21.2}x", m, 100.0 * acc, cyc, sp);
     }
+    println!(
+        "program cache: {} network compile(s), {} hits across scheduling + serving",
+        cs.misses, cs.hits
+    );
     Ok(())
 }

@@ -1,0 +1,134 @@
+//! End-to-end network bench: the whole SparqCNN as one chained
+//! dataflow program (compile once, infer many).  Reports per-layer
+//! cycles, images/s at the modelled fmax, host-side inference
+//! throughput, and the program-cache hit rate across repeated
+//! inferences.  `--json` writes `BENCH_qnn.json` next to
+//! `BENCH_simspeed.json` (CI uploads both).
+
+mod common;
+
+use common::{json_flag, Bench, Json};
+use sparq::kernels::ProgramCache;
+use sparq::power::LaneReport;
+use sparq::qnn::schedule::QnnPrecision;
+use sparq::qnn::QnnGraph;
+use sparq::runtime::SimQnnModel;
+use sparq::sim::MachinePool;
+use sparq::ProcessorConfig;
+use std::time::Instant;
+
+const SEED: u64 = 0xBE7C_5EED;
+const REPS: usize = 24;
+
+fn main() {
+    let b = Bench::new("qnn_e2e");
+    let cfg = ProcessorConfig::sparq();
+    let fmax = LaneReport::for_config(&cfg).fmax_ghz();
+    let graph = QnnGraph::sparq_cnn();
+    let cache = ProgramCache::new();
+    let mut json = Json::new();
+    json.str("bench", "qnn_e2e").int("reps", REPS as u64).num("fmax_ghz", fmax);
+
+    let mut precisions = Vec::new();
+    for prec in [
+        QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+        QnnPrecision::SubByte { w_bits: 3, a_bits: 3 },
+        QnnPrecision::SubByte { w_bits: 4, a_bits: 4 },
+    ] {
+        let label = prec.label();
+        let (sched, layer_rows, cycles, host_s) = b.section(&label, || {
+            let pool = MachinePool::new();
+            let t0 = Instant::now();
+            let sched = sparq::qnn::schedule::schedule_seeded(
+                &cfg, &graph, prec, SEED, &cache, &pool,
+            )
+            .expect("schedule");
+            let compile_s = t0.elapsed().as_secs_f64();
+            let model =
+                SimQnnModel::compile(&cfg, &graph, prec, SEED, &cache).expect("model");
+
+            // repeated inferences through the cached network
+            let images: Vec<Vec<f32>> = (0..REPS)
+                .map(|i| {
+                    model
+                        .cq
+                        .net
+                        .test_image(i as u64)
+                        .iter()
+                        .map(|&v| v as f32)
+                        .collect()
+                })
+                .collect();
+            let t1 = Instant::now();
+            let mut cycles_each = Vec::with_capacity(REPS);
+            for img in &images {
+                let (_logits, cyc) = model.infer(&pool, img).expect("infer");
+                cycles_each.push(cyc);
+            }
+            let infer_s = t1.elapsed().as_secs_f64();
+            assert!(
+                cycles_each.iter().all(|&c| c == cycles_each[0]),
+                "cycle counts must be identical across repeated inferences"
+            );
+            println!(
+                "  {label}: {} cycles/image -> {:.0} img/s at {fmax:.3} GHz | host: compile {compile_s:.3}s, {REPS} inferences in {infer_s:.3}s ({:.1} inf/s)",
+                cycles_each[0],
+                fmax * 1e9 / cycles_each[0] as f64,
+                REPS as f64 / infer_s
+            );
+            for l in &sched.layers {
+                println!("    {:<26} {:>12} cycles  {}", l.name, l.cycles, l.variant);
+            }
+            // index-prefixed: two maxpool layers must not collide as
+            // JSON keys
+            let rows: Vec<(String, u64, String)> = sched
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| (format!("L{i} {}", l.name), l.cycles, l.variant.clone()))
+                .collect();
+            (sched, rows, cycles_each[0], infer_s)
+        });
+        precisions.push((label, sched, layer_rows, cycles, host_s));
+    }
+
+    let cs = cache.stats();
+    let total_lookups = cs.hits + cs.misses;
+    println!(
+        "program cache: {} network compile(s), {} hits ({} lookups, {:.1}% hit rate)",
+        cs.misses,
+        cs.hits,
+        total_lookups,
+        100.0 * cs.hits as f64 / total_lookups.max(1) as f64
+    );
+
+    if json_flag() {
+        json.obj("precisions", |j| {
+            for (label, sched, rows, cycles, host_s) in &precisions {
+                j.obj(label, |j| {
+                    j.int("cycles_per_image", *cycles)
+                        .num("images_per_s_at_fmax", fmax * 1e9 / *cycles as f64)
+                        .num("host_infer_s", *host_s)
+                        .num("host_inferences_per_s", REPS as f64 / *host_s)
+                        .int("total_macs", sched.total_macs())
+                        .obj("layers", |j| {
+                            for (name, cyc, variant) in rows {
+                                j.obj(name, |j| {
+                                    j.int("cycles", *cyc).str("variant", variant);
+                                });
+                            }
+                        });
+                });
+            }
+        });
+        json.obj("cache", |j| {
+            j.int("compiles", cs.misses).int("hits", cs.hits).num(
+                "hit_rate",
+                cs.hits as f64 / total_lookups.max(1) as f64,
+            );
+        });
+        json.write("BENCH_qnn.json");
+    }
+
+    b.finish();
+}

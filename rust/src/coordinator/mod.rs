@@ -1,7 +1,11 @@
-//! The serving coordinator — the L3 stack around the PJRT-compiled QNN:
-//! bounded request queue (backpressure), dynamic batcher, worker
-//! threads, per-request metrics, and simulated-hardware cycle
-//! attribution from the `qnn` scheduler.
+//! The serving coordinator — the L3 stack around the QNN: bounded
+//! request queue (backpressure), dynamic batcher, worker threads,
+//! per-request metrics, and simulated-hardware cycle attribution from
+//! the `qnn` scheduler.  Three executors exist: the PJRT artifact path
+//! ([`PjrtExecutor`]), a single simulated conv ([`SimConvExecutor`]),
+//! and — since the dataflow refactor — the whole SparqCNN as one
+//! chained simulated program ([`SimQnnExecutor`]), which is what
+//! `sparq serve` uses when no artifacts are present.
 //!
 //! Design notes:
 //! * PJRT handles are not `Send`, so each worker thread owns its *own*
@@ -396,6 +400,92 @@ pub fn sim_conv_factory(
 ) -> ExecutorFactory {
     Box::new(move || {
         Ok(Box::new(SimConvExecutor::new(&cfg, dims, variant, batch, seed, &cache)?)
+            as Box<dyn Executor>)
+    })
+}
+
+/// Whole-network simulator executor: serves SparqCNN classification
+/// through the chained dataflow program (`qnn::compiled::CompiledQnn`)
+/// — every request runs conv/requant/maxpool/GAP+FC end-to-end in the
+/// simulated arena and the logits come straight out of it.  Same
+/// sharing model as [`SimConvExecutor`]: the compiled network lives in
+/// the [`ProgramCache`] shared across workers (graph-level key), each
+/// worker owns a private [`MachinePool`] sized for the arena.
+pub struct SimQnnExecutor {
+    model: crate::runtime::SimQnnModel,
+    pool: crate::sim::MachinePool,
+    batch: usize,
+}
+
+impl SimQnnExecutor {
+    pub fn new(
+        cfg: &ProcessorConfig,
+        graph: &crate::qnn::QnnGraph,
+        precision: crate::qnn::schedule::QnnPrecision,
+        batch: usize,
+        seed: u64,
+        cache: &ProgramCache,
+    ) -> Result<SimQnnExecutor, String> {
+        let model = crate::runtime::SimQnnModel::compile(cfg, graph, precision, seed, cache)
+            .map_err(|e| e.to_string())?;
+        Ok(SimQnnExecutor {
+            model,
+            pool: crate::sim::MachinePool::new(),
+            batch: batch.max(1),
+        })
+    }
+
+    /// Pool diagnostics (tests assert reuse).
+    pub fn pool_stats(&self) -> crate::sim::pool::PoolStats {
+        self.pool.stats()
+    }
+}
+
+impl Executor for SimQnnExecutor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn image_len(&self) -> usize {
+        self.model.input_len()
+    }
+
+    fn classes(&self) -> usize {
+        self.model.classes()
+    }
+
+    fn run(&mut self, batch_data: &[f32]) -> Result<Vec<f32>, String> {
+        let per = self.model.input_len();
+        let classes = self.model.classes();
+        let mut logits = Vec::with_capacity(batch_data.len() / per * classes);
+        for img in batch_data.chunks(per) {
+            // All-zero level images flow zeros through every layer
+            // (convs of zeros, requant(0)=0, max(0)=0, FC on zero GAP
+            // sums), so zero-padded batch slots skip the simulation.
+            if img.iter().all(|&v| self.model.quantize_level(v) == 0) {
+                logits.resize(logits.len() + classes, 0.0);
+                continue;
+            }
+            let (out, _cycles) = self.model.infer(&self.pool, img).map_err(|e| e.to_string())?;
+            logits.extend(out.iter().map(|&v| v as f32));
+        }
+        Ok(logits)
+    }
+}
+
+/// Factory for [`Server::start`]: full-network simulator serving —
+/// every worker builds its own `SimQnnExecutor` (private machine pool)
+/// against the one shared program cache.
+pub fn sim_qnn_factory(
+    cfg: ProcessorConfig,
+    graph: crate::qnn::QnnGraph,
+    precision: crate::qnn::schedule::QnnPrecision,
+    batch: usize,
+    seed: u64,
+    cache: Arc<ProgramCache>,
+) -> ExecutorFactory {
+    Box::new(move || {
+        Ok(Box::new(SimQnnExecutor::new(&cfg, &graph, precision, batch, seed, &cache)?)
             as Box<dyn Executor>)
     })
 }

@@ -52,6 +52,7 @@ fn opi_from_funct6(f6: u32) -> Option<VOp> {
         0b100101 => VOp::Sll,
         0b101000 => VOp::Srl,
         0b101001 => VOp::Sra,
+        0b101100 => VOp::NSrl,
         0b001110 => VOp::SlideUp,
         0b001111 => VOp::SlideDown,
         _ => return None,
@@ -136,7 +137,7 @@ pub fn decode(word: u32) -> Result<VInst, DecodeError> {
                 funct3::OPIVI => {
                     let op = opi_from_funct6(f6).ok_or(err)?;
                     // shifts/slides take uimm5; others simm5
-                    let imm = if matches!(op, VOp::Sll | VOp::Srl | VOp::Sra | VOp::SlideUp | VOp::SlideDown)
+                    let imm = if matches!(op, VOp::Sll | VOp::Srl | VOp::Sra | VOp::NSrl | VOp::SlideUp | VOp::SlideDown)
                     {
                         v1 as i8
                     } else {
@@ -186,7 +187,7 @@ mod tests {
         let mut v = vec![];
         let vv_ops = [
             VOp::Add, VOp::Sub, VOp::And, VOp::Or, VOp::Xor, VOp::Min, VOp::Max, VOp::Mv,
-            VOp::Sll, VOp::Srl, VOp::Sra, VOp::Mul, VOp::Mulh, VOp::Mulhu, VOp::Macc,
+            VOp::Sll, VOp::Srl, VOp::Sra, VOp::NSrl, VOp::Mul, VOp::Mulh, VOp::Mulhu, VOp::Macc,
             VOp::Nmsac, VOp::Macsr, VOp::MacsrCfg, VOp::WAdduWv, VOp::FAdd, VOp::FMul,
             VOp::FMacc,
         ];
@@ -194,7 +195,7 @@ mod tests {
             v.push(VInst::OpVV { op, vd: 1, vs2: 2, vs1: 3 });
             v.push(VInst::OpVX { op, vd: 1, vs2: 2, rs1: 0 });
         }
-        for op in [VOp::Add, VOp::Sll, VOp::Srl, VOp::SlideDown, VOp::SlideUp, VOp::Mv] {
+        for op in [VOp::Add, VOp::Sll, VOp::Srl, VOp::NSrl, VOp::SlideDown, VOp::SlideUp, VOp::Mv] {
             v.push(VInst::OpVI { op, vd: 1, vs2: 2, imm: 5 });
         }
         for op in [VOp::SlideDown, VOp::SlideUp] {

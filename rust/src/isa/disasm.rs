@@ -20,14 +20,22 @@ pub fn disasm(inst: &VInst) -> String {
             if op == VOp::Mv {
                 format!("vmv.v.v v{vd}, v{vs1}")
             } else {
-                format!("{}.vv v{vd}, v{vs2}, v{vs1}", op.mnemonic())
+                // narrowing ops read a wide vs2: .wv, not .vv (RVV asm)
+                let suffix = if op == VOp::NSrl { "wv" } else { "vv" };
+                format!("{}.{suffix} v{vd}, v{vs2}, v{vs1}", op.mnemonic())
             }
         }
         VInst::OpVX { op, vd, vs2, rs1 } => {
             if op == VOp::Mv {
                 format!("vmv.v.x v{vd}, {{{rs1:#x}}}")
             } else {
-                let suffix = if op.is_fp() { "vf" } else { "vx" };
+                let suffix = if op.is_fp() {
+                    "vf"
+                } else if op == VOp::NSrl {
+                    "wx"
+                } else {
+                    "vx"
+                };
                 format!("{}.{suffix} v{vd}, v{vs2}, {{{rs1:#x}}}", op.mnemonic())
             }
         }
@@ -35,7 +43,8 @@ pub fn disasm(inst: &VInst) -> String {
             if op == VOp::Mv {
                 format!("vmv.v.i v{vd}, {imm}")
             } else {
-                format!("{}.vi v{vd}, v{vs2}, {imm}", op.mnemonic())
+                let suffix = if op == VOp::NSrl { "wi" } else { "vi" };
+                format!("{}.{suffix} v{vd}, v{vs2}, {imm}", op.mnemonic())
             }
         }
         VInst::Scalar { kind, n } => {
@@ -65,6 +74,14 @@ mod tests {
     fn renders_fp_with_vf_suffix() {
         let i = VInst::OpVX { op: VOp::FMacc, vd: 3, vs2: 1, rs1: 42 };
         assert!(disasm(&i).starts_with("vfmacc.vf"));
+    }
+
+    #[test]
+    fn renders_narrowing_with_w_suffix() {
+        let i = VInst::OpVI { op: VOp::NSrl, vd: 0, vs2: 8, imm: 16 };
+        assert_eq!(disasm(&i), "vnsrl.wi v0, v8, 16");
+        let x = VInst::OpVX { op: VOp::NSrl, vd: 0, vs2: 8, rs1: 32 };
+        assert!(disasm(&x).starts_with("vnsrl.wx"));
     }
 
     #[test]

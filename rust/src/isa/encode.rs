@@ -70,6 +70,8 @@ pub fn funct6_opi(op: VOp) -> Option<u32> {
         VOp::Sll => 0b100101,
         VOp::Srl => 0b101000,
         VOp::Sra => 0b101001,
+        // RVV 1.0 narrowing shift: vnsrl.w{v,x,i}
+        VOp::NSrl => 0b101100,
         VOp::SlideUp => 0b001110,
         VOp::SlideDown => 0b001111,
         _ => return None,

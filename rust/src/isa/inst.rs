@@ -29,6 +29,12 @@ pub enum VOp {
     Mv,
     /// vwaddu.wv — widening unsigned add-accumulate: vd(2*SEW) += vs2(SEW)
     WAdduWv,
+    /// vnsrl.w{x,i} — narrowing logical shift right: vd(SEW) =
+    /// vs2(2*SEW) >> shamt.  The inter-layer requantize streams use it
+    /// to narrow wide conv accumulators into the next layer's level
+    /// width, and the maxpool kernel uses the classic shift-0/shift-SEW
+    /// pair to deinterleave even/odd columns.
+    NSrl,
     // --- SIMD multiplier (MFPU fixed-point side) ---
     Mul,
     Mulh,
@@ -95,6 +101,7 @@ impl VOp {
             VOp::Max => "vmaxu",
             VOp::Mv => "vmv.v",
             VOp::WAdduWv => "vwaddu.w",
+            VOp::NSrl => "vnsrl",
             VOp::Mul => "vmul",
             VOp::Mulh => "vmulh",
             VOp::Mulhu => "vmulhu",
@@ -229,5 +236,8 @@ mod tests {
         assert!(VOp::FMacc.is_fp() && !VOp::FMacc.is_mul());
         assert!(VOp::SlideDown.is_slide());
         assert!(VOp::WAdduWv.reads_vd());
+        // vnsrl reads its (wide) vs2 only — an overwriting narrow op
+        assert!(!VOp::NSrl.is_mul() && !VOp::NSrl.is_fp() && !VOp::NSrl.is_slide());
+        assert!(!VOp::NSrl.reads_vd());
     }
 }

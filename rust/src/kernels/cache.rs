@@ -25,6 +25,9 @@ use super::conv_engine::{CompiledConv, EngineOpts};
 use super::workload::{ConvDims, Workload};
 use super::ConvVariant;
 use crate::arch::ProcessorConfig;
+use crate::qnn::compiled::{CompiledQnn, QnnNet};
+use crate::qnn::graph::{LayerDesc, QnnGraph};
+use crate::qnn::schedule::QnnPrecision;
 use crate::sim::SimError;
 use crate::ulppack::RegionMode;
 use std::collections::HashMap;
@@ -114,16 +117,9 @@ impl Fnv1a {
     }
 }
 
-fn fingerprint(
-    cfg: &ProcessorConfig,
-    dims: ConvDims,
-    variant: ConvVariant,
-    opts: EngineOpts,
-    w_bits: u32,
-    a_bits: u32,
-    wgt: &[u64],
-) -> u64 {
-    let mut f = Fnv1a::new();
+/// Fold every stream-shaping `ProcessorConfig` field into a
+/// fingerprint (shared by the conv and graph-level keys).
+fn fp_cfg(f: &mut Fnv1a, cfg: &ProcessorConfig) {
     f.bytes(cfg.name.as_bytes());
     f.u32(cfg.name.len() as u32); // length-delimit the only string field
     for v in [
@@ -140,6 +136,19 @@ fn fingerprint(
     ] {
         f.u32(v);
     }
+}
+
+fn fingerprint(
+    cfg: &ProcessorConfig,
+    dims: ConvDims,
+    variant: ConvVariant,
+    opts: EngineOpts,
+    w_bits: u32,
+    a_bits: u32,
+    wgt: &[u64],
+) -> u64 {
+    let mut f = Fnv1a::new();
+    fp_cfg(&mut f, cfg);
     for v in [dims.c, dims.h, dims.w, dims.co, dims.fh, dims.fw] {
         f.u32(v);
     }
@@ -191,10 +200,94 @@ fn weight_words(wl: &Workload, variant: ConvVariant) -> Vec<u64> {
     words
 }
 
-/// A concurrent map from conv content keys to compiled programs.
+/// The graph-level key for whole-network entries: the processor, every
+/// layer descriptor by value, the precision, and the weight seed (the
+/// network's weights derive deterministically from it).  Same
+/// discipline as [`ConvKey`]: the fingerprint is the map hash and an
+/// equality pre-filter; the exact field compare decides.
+#[derive(Debug, Clone)]
+pub struct QnnKey {
+    fp: u64,
+    cfg: ProcessorConfig,
+    layers: Vec<LayerDesc>,
+    input: (u32, u32, u32),
+    classes: u32,
+    precision: QnnPrecision,
+    seed: u64,
+}
+
+impl PartialEq for QnnKey {
+    fn eq(&self, o: &QnnKey) -> bool {
+        self.fp == o.fp
+            && self.cfg == o.cfg
+            && self.layers == o.layers
+            && self.input == o.input
+            && self.classes == o.classes
+            && self.precision == o.precision
+            && self.seed == o.seed
+    }
+}
+
+impl Eq for QnnKey {}
+
+impl Hash for QnnKey {
+    fn hash<H: Hasher>(&self, h: &mut H) {
+        self.fp.hash(h);
+    }
+}
+
+fn qnn_fingerprint(
+    cfg: &ProcessorConfig,
+    graph: &QnnGraph,
+    precision: QnnPrecision,
+    seed: u64,
+) -> u64 {
+    let mut f = Fnv1a::new();
+    fp_cfg(&mut f, cfg);
+    for layer in &graph.layers {
+        match *layer {
+            LayerDesc::Conv { c_in, c_out, h, w, f: k, quantized } => {
+                f.u32(0);
+                for v in [c_in, c_out, h, w, k, quantized as u32] {
+                    f.u32(v);
+                }
+            }
+            LayerDesc::MaxPool { c, h, w } => {
+                f.u32(1);
+                for v in [c, h, w] {
+                    f.u32(v);
+                }
+            }
+            LayerDesc::GapFc { c, classes } => {
+                f.u32(2);
+                f.u32(c);
+                f.u32(classes);
+            }
+        }
+    }
+    f.u32(graph.input.0);
+    f.u32(graph.input.1);
+    f.u32(graph.input.2);
+    f.u32(graph.classes);
+    match precision {
+        QnnPrecision::Fp32 => f.u32(0),
+        QnnPrecision::SubByte { w_bits, a_bits } => {
+            f.u32(1);
+            f.u32(w_bits);
+            f.u32(a_bits);
+        }
+    }
+    f.u64(seed);
+    f.0
+}
+
+/// A concurrent map from conv content keys to compiled programs, plus
+/// a second map from graph-level keys to whole compiled networks
+/// ([`CompiledQnn`]) — the dataflow executor's compile-once cache.
 #[derive(Debug, Default)]
 pub struct ProgramCache {
     map: Mutex<HashMap<ConvKey, Arc<CompiledConv>>>,
+    qnn_map: Mutex<HashMap<QnnKey, Arc<CompiledQnn>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -248,17 +341,61 @@ impl ProgramCache {
         Ok(Arc::clone(entry))
     }
 
+    /// The graph-level key `get_or_compile_qnn` uses.
+    pub fn qnn_key(
+        cfg: &ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+    ) -> QnnKey {
+        QnnKey {
+            fp: qnn_fingerprint(cfg, graph, precision, seed),
+            cfg: cfg.clone(),
+            layers: graph.layers.clone(),
+            input: graph.input,
+            classes: graph.classes,
+            precision,
+            seed,
+        }
+    }
+
+    /// Look up the whole compiled network for (cfg, graph, precision,
+    /// seed), compiling it once on a miss — graph validation, weight
+    /// derivation, arena planning and every layer stream included.
+    /// Counted in the same hit/miss stats as the conv entries.
+    pub fn get_or_compile_qnn(
+        &self,
+        cfg: &ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+    ) -> Result<Arc<CompiledQnn>, SimError> {
+        let key = Self::qnn_key(cfg, graph, precision, seed);
+        if let Some(cq) = self.qnn_map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(cq));
+        }
+        let net = QnnNet::from_seed(graph, precision, seed)?;
+        let compiled = Arc::new(CompiledQnn::compile(cfg, net)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.qnn_map.lock().unwrap();
+        let entry = map.entry(key).or_insert(compiled);
+        Ok(Arc::clone(entry))
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.map.lock().unwrap().len() as u64,
+            entries: self.map.lock().unwrap().len() as u64
+                + self.qnn_map.lock().unwrap().len() as u64,
         }
     }
 
     /// Drop every cached program (keeps the counters).
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
+        self.qnn_map.lock().unwrap().clear();
     }
 }
 
@@ -339,6 +476,30 @@ mod tests {
         let mut forged = c.clone();
         forged.fp = a.fp;
         assert_ne!(a, forged, "a fingerprint collision must not alias different weights");
+    }
+
+    #[test]
+    fn qnn_entries_share_and_key_exactly() {
+        let cache = ProgramCache::new();
+        let cfg = ProcessorConfig::sparq();
+        let g = QnnGraph::sparq_cnn();
+        let p = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let a = cache.get_or_compile_qnn(&cfg, &g, p, 7).unwrap();
+        let b = cache.get_or_compile_qnn(&cfg, &g, p, 7).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "identical network request must share the entry");
+        // a different weight seed is a different network
+        cache.get_or_compile_qnn(&cfg, &g, p, 8).unwrap();
+        // and a different precision too
+        cache
+            .get_or_compile_qnn(&cfg, &g, QnnPrecision::SubByte { w_bits: 4, a_bits: 4 }, 7)
+            .unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 3, 3));
+        let k1 = ProgramCache::qnn_key(&cfg, &g, p, 7);
+        let k2 = ProgramCache::qnn_key(&cfg, &g, p, 8);
+        assert_ne!(k1, k2);
+        cache.clear();
+        assert_eq!(cache.stats().entries, 0);
     }
 
     #[test]

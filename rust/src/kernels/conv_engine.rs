@@ -176,20 +176,35 @@ fn alloc_regs(a: &Asm, fh: u32, avl: u64, sew: Sew, wide: bool, tmp: bool) -> Re
 /// Mirror of the machine's bump allocator (`Mem::alloc` on a fresh
 /// memory: brk starts at 64), so `compile` can resolve addresses
 /// without a machine and `bind` can replay the identical sequence.
-struct LayoutAlloc {
+///
+/// The multi-layer dataflow compiler (`qnn::compiled`) threads ONE of
+/// these through every layer's `compile_in_arena` call, so a whole
+/// network's tensors land in a single planned activation arena.
+pub(crate) struct LayoutAlloc {
     brk: u64,
 }
 
+impl Default for LayoutAlloc {
+    fn default() -> LayoutAlloc {
+        LayoutAlloc::new()
+    }
+}
+
 impl LayoutAlloc {
-    fn new() -> LayoutAlloc {
+    pub(crate) fn new() -> LayoutAlloc {
         LayoutAlloc { brk: 64 }
     }
 
-    fn alloc(&mut self, bytes: u64, align: u64) -> u64 {
+    pub(crate) fn alloc(&mut self, bytes: u64, align: u64) -> u64 {
         debug_assert!(align.is_power_of_two());
         let base = (self.brk + align - 1) & !(align - 1);
         self.brk = base + bytes;
         base
+    }
+
+    /// High-water mark: total arena bytes allocated so far.
+    pub(crate) fn brk(&self) -> u64 {
+        self.brk
     }
 }
 
@@ -219,6 +234,7 @@ pub(crate) struct ConvLayout {
 /// via [`compile`], [`crate::kernels::compile_conv`], or a
 /// [`crate::kernels::ProgramCache`], then run it any number of times
 /// with [`CompiledConv::execute`] on pooled machines.
+#[derive(Debug)]
 pub struct CompiledConv {
     pub prog: Program,
     /// §Perf: `prog` pre-compiled to micro-ops for `cfg` (legality and
@@ -244,6 +260,19 @@ pub struct CompiledConv {
 }
 
 impl CompiledConv {
+    /// The (address, bytes) of the unpacked activation buffer the
+    /// stream loads from — the region an upstream requantize stage
+    /// writes into when this conv is chained inside a
+    /// [`crate::qnn::compiled::CompiledQnn`] arena.
+    pub(crate) fn input_region(&self) -> (u64, u64) {
+        self.layout.x
+    }
+
+    /// Element bytes of the unpacked activation buffer.
+    pub(crate) fn input_elem_bytes(&self) -> u64 {
+        self.layout.ew
+    }
+
     /// Execute the cached program: reset the machine in place, rebind
     /// `wl`'s activation tensors at the compiled layout, and run.
     ///
@@ -300,7 +329,25 @@ pub fn compile(
     opts: EngineOpts,
     label: String,
 ) -> Result<CompiledConv, SimError> {
-    compile_impl(cfg, wl, inner, opts, label, true)
+    compile_impl(cfg, wl, inner, opts, label, true, &mut LayoutAlloc::new())
+}
+
+/// [`compile`] against a caller-held arena allocator: the layer's
+/// tensors are appended to the shared arena instead of starting at the
+/// bottom of a private address space.  This is how `qnn::compiled`
+/// chains layers — each conv's activation buffer is the region the
+/// previous layer's requantize stream writes into.  `bind` must NOT be
+/// used with arena-compiled programs (the addresses do not replay from
+/// a fresh allocator); the dataflow executor stages inputs directly.
+pub(crate) fn compile_in_arena(
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    inner: Inner,
+    opts: EngineOpts,
+    label: String,
+    la: &mut LayoutAlloc,
+) -> Result<CompiledConv, SimError> {
+    compile_impl(cfg, wl, inner, opts, label, true, la)
 }
 
 fn compile_impl(
@@ -310,6 +357,7 @@ fn compile_impl(
     opts: EngineOpts,
     label: String,
     with_uops: bool,
+    la: &mut LayoutAlloc,
 ) -> Result<CompiledConv, SimError> {
     let d = wl.dims;
     let sew = inner.sew();
@@ -340,7 +388,6 @@ fn compile_impl(
         None => d.c,
     };
     let row_bytes = d.w as u64 * ew;
-    let mut la = LayoutAlloc::new();
     let x_bytes = d.c as u64 * d.h as u64 * row_bytes;
     let x_addr = la.alloc(x_bytes, 64);
     // packed activations: written by the runtime packing pass, or staged
@@ -353,16 +400,10 @@ fn compile_impl(
     let out_elem = match inner {
         Inner::Fp32 => OutElem::F32,
         Inner::Int16 => OutElem::U16,
-        Inner::Vmacsr { container, .. } | Inner::Native { container, .. } => {
-            if has_wide {
-                match container {
-                    Container::Lp => OutElem::U32,
-                    Container::Ulp => OutElem::U16,
-                }
-            } else {
-                OutElem::U16 // LP, no spill needed
-            }
+        Inner::Vmacsr { container, spill_every } => {
+            vmacsr_out_elem(container, spill_every, total_issues)
         }
+        Inner::Native { container, .. } => packed_out_elem(container, has_wide),
     };
     let out_bytes = match out_elem {
         OutElem::U16 => 2u64,
@@ -507,6 +548,32 @@ fn compile_impl(
     })
 }
 
+/// Output element of a packed conv: the wide accumulator's width when
+/// one is kept, u16 otherwise (LP with no spill needed).
+fn packed_out_elem(container: Container, has_wide: bool) -> OutElem {
+    if has_wide {
+        match container {
+            Container::Lp => OutElem::U32,
+            Container::Ulp => OutElem::U16,
+        }
+    } else {
+        OutElem::U16
+    }
+}
+
+/// The output element a `vmacsr` conv stores for this region plan —
+/// the single source of truth shared by [`compile`] and the golden
+/// network's element-capacity cap (`qnn::compiled`), so the boundary
+/// requantization shift can never diverge between the two.
+pub(crate) fn vmacsr_out_elem(
+    container: Container,
+    spill_every: u64,
+    total_issues: u64,
+) -> OutElem {
+    let inner = Inner::Vmacsr { container, spill_every };
+    packed_out_elem(container, inner.has_wide(total_issues))
+}
+
 /// Re-create the compiled layout on a freshly reset machine and write
 /// the workload's activation tensors into it.  The machine's allocator
 /// must be at its initial state (fresh `Machine::new` or
@@ -577,7 +644,7 @@ pub fn build(
     opts: EngineOpts,
     label: String,
 ) -> Result<(Program, OutputRef), SimError> {
-    let cc = compile_impl(&m.cfg, wl, inner, opts, label, false)?;
+    let cc = compile_impl(&m.cfg, wl, inner, opts, label, false, &mut LayoutAlloc::new())?;
     bind(m, wl, &cc)?;
     Ok((cc.prog, cc.out))
 }

@@ -16,6 +16,13 @@
 //! Golden models live in [`workload`]; each variant's module tests pin
 //! its outputs to them bit-for-bit.
 //!
+//! Beyond the conv variants, [`requant`] and [`pool_fc`] emit the
+//! *inter-layer* streams of the dataflow QNN executor
+//! ([`crate::qnn::compiled::CompiledQnn`]): zero-padding + requantize
+//! + narrow at every layer boundary, 2x2 maxpool via the `vnsrl`
+//! deinterleave idiom, and the GAP+FC head — executed layers, not
+//! bytes/cycle estimates.
+//!
 //! ## Compile once, execute many
 //!
 //! [`compile_conv`] builds a [`CompiledConv`] (instruction stream +
@@ -39,6 +46,8 @@ pub mod conv_native;
 pub mod conv_vmacsr;
 pub mod im2col_gemm;
 pub mod pack_rt;
+pub mod pool_fc;
+pub mod requant;
 pub mod workload;
 
 pub use cache::{CacheStats, ProgramCache};

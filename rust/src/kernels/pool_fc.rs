@@ -1,0 +1,238 @@
+//! Executed (not estimated) maxpool and GAP+FC streams for the
+//! dataflow QNN executor — before the multi-layer refactor these
+//! layers were costed with a fabricated bytes/cycle formula; now they
+//! run through the same simulator as the convs.
+//!
+//! ## 2x2 maxpool (stride 2)
+//!
+//! Per channel and output row, with only unit-stride memory ops:
+//!
+//! ```text
+//! vle{W}   v8,  in[c][2r]       # row A (w elements)
+//! vle{W}   v10, in[c][2r+1]     # row B
+//! vmaxu.vv v8,  v8, v10         # vertical max
+//! vnsrl.wx v0,  v8, 0           # even columns  (deinterleave ...)
+//! vnsrl.wx v2,  v8, W           # odd columns   (... via pair view)
+//! vmaxu.vv v0,  v0, v2          # horizontal max
+//! vse{W}   v0,  out[c][r]       # w/2 elements
+//! ```
+//!
+//! The `vnsrl` pair is the classic RVV even/odd deinterleave: viewing
+//! the vector as 2*W-wide pairs, shift 0 extracts the even elements
+//! and shift W the odd ones.
+//!
+//! ## GAP + FC head
+//!
+//! Global-average pooling keeps integer *sums* (the 1/HW factor is a
+//! class-uniform scale, so the argmax is unchanged — the golden model
+//! uses sums too).  Per channel: a slide-down/add reduction tree
+//! produces the channel sum in element 0, `vwaddu.wv` widens it to
+//! E32, and one `vmacc.vx` per class accumulates `sum * w[k][c]` with
+//! the FC weight baked into the stream as a scalar operand — the same
+//! "weights live in the stream" discipline the conv kernels use.
+
+use super::asm::Asm;
+use crate::isa::{Lmul, Sew, VOp, VType};
+
+/// Emit 2x2/stride-2 maxpool over a dense `c x h x w` tensor at `sew`
+/// (`h`, `w` even), writing the dense `c x h/2 x w/2` result to `dst`.
+pub fn emit_maxpool2(a: &mut Asm, c: u32, h: u32, w: u32, sew: Sew, src: u64, dst: u64) {
+    assert!(h % 2 == 0 && w % 2 == 0, "2x2 pooling needs even spatial dims");
+    let eb = sew.bytes() as u64;
+    // w input elements load into v8's M1 group; the vnsrl wide view
+    // spans v8..v9, so w/2 must also fit one narrow register
+    assert!(
+        w as u64 * eb <= (a.vlen_bits() / 8) as u64,
+        "pool row must fit one register at M1"
+    );
+    let (ho, wo) = (h / 2, w / 2);
+    for ch in 0..c {
+        for r in 0..ho {
+            let row_a = src + ((ch * h + 2 * r) as u64 * w as u64) * eb;
+            let row_b = row_a + w as u64 * eb;
+            a.setvl(w as u64, sew, Lmul::M1);
+            a.vle(sew, 8, row_a);
+            a.vle(sew, 10, row_b);
+            a.vv(VOp::Max, 8, 8, 10);
+            a.setvl(wo as u64, sew, Lmul::M1);
+            a.vx(VOp::NSrl, 0, 8, 0);
+            a.vx(VOp::NSrl, 2, 8, sew.bits() as u64);
+            a.vv(VOp::Max, 0, 0, 2);
+            a.vse(sew, 0, dst + ((ch * ho + r) as u64 * wo as u64) * eb);
+            a.loop_overhead();
+        }
+        a.loop_overhead();
+    }
+}
+
+/// Host golden for [`emit_maxpool2`] on a flat `c x h x w` tensor.
+pub fn maxpool2_host(vals: &[i64], c: u32, h: u32, w: u32) -> Vec<i64> {
+    let (ho, wo) = ((h / 2) as usize, (w / 2) as usize);
+    let (h, w) = (h as usize, w as usize);
+    let mut out = vec![0i64; c as usize * ho * wo];
+    for ch in 0..c as usize {
+        for r in 0..ho {
+            for q in 0..wo {
+                let at = |dr: usize, dq: usize| vals[(ch * h + 2 * r + dr) * w + 2 * q + dq];
+                out[(ch * ho + r) * wo + q] =
+                    at(0, 0).max(at(0, 1)).max(at(1, 0)).max(at(1, 1));
+            }
+        }
+    }
+    out
+}
+
+/// Emit the GAP+FC head: levels (`c` channels x `hw` elements at
+/// `sew_in`, E8 or E16) reduce to per-channel sums, widen to E32, and
+/// accumulate into `classes` logits stored as u32 at `logits`.
+/// `fc_wgt[k][ch]` are the (level-domain) FC weights.
+///
+/// Value-range preconditions (the caller guards them — see
+/// `qnn::compiled`'s typed checks): the channel sum `hw * max_level`
+/// must fit `sew_in`'s lanes, and `c * sum_max * max_weight` must fit
+/// u32, or the reduction wraps where the host golden does not.
+pub fn emit_gap_fc(
+    a: &mut Asm,
+    c: u32,
+    hw: u32,
+    sew_in: Sew,
+    src: u64,
+    fc_wgt: &[Vec<u64>],
+    logits: u64,
+) {
+    let classes = fc_wgt.len();
+    assert!(classes <= 4, "acc registers v0/v2/v4/v6 hold up to 4 logits");
+    assert!(hw.is_power_of_two(), "the reduction tree wants a power-of-two HW");
+    assert!(sew_in == Sew::E8 || sew_in == Sew::E16, "levels are sub-word");
+    let eb = sew_in.bytes() as u64;
+    let acc = |k: usize| (2 * k) as u8; // E32 logits in v0/v2/v4/v6
+
+    a.setvl(1, Sew::E32, Lmul::M1);
+    for k in 0..classes {
+        a.vclear(acc(k));
+    }
+    for ch in 0..c {
+        // clear v8 past the loaded elements: the slide tree reads up to
+        // index hw + hw/2 - 1, which must be zero, not stale
+        a.setvl(2 * hw as u64, sew_in, Lmul::M1);
+        a.vclear(8);
+        a.setvl(hw as u64, sew_in, Lmul::M1);
+        a.vle(sew_in, 8, src + ch as u64 * hw as u64 * eb);
+        let mut step = hw / 2;
+        while step >= 1 {
+            a.vx(VOp::SlideDown, 10, 8, step as u64);
+            a.vv(VOp::Add, 8, 8, 10);
+            step /= 2;
+        }
+        // widen the element-0 sum to E32 (E8 goes through E16 first)
+        let mut cur = sew_in;
+        let mut reg = 8u8;
+        while cur != Sew::E32 {
+            let wide = cur.widened().unwrap();
+            let wreg = reg + 4; // v12 then v16: even, disjoint
+            a.setvl(1, wide, Lmul::M1);
+            a.vclear(wreg);
+            a.setvl(1, cur, Lmul::M1);
+            a.vv(VOp::WAdduWv, wreg, reg, 0);
+            reg = wreg;
+            cur = wide;
+        }
+        a.setvl(1, Sew::E32, Lmul::M1);
+        for (k, per_class) in fc_wgt.iter().enumerate() {
+            a.vmacc_weight(acc(k), reg, per_class[ch as usize]);
+        }
+        a.loop_overhead();
+    }
+    a.setvl(1, Sew::E32, Lmul::M1);
+    for k in 0..classes {
+        a.vse(Sew::E32, acc(k), logits + 4 * k as u64);
+    }
+}
+
+/// Host golden for [`emit_gap_fc`]: `logit[k] = sum_c w[k][c] *
+/// (sum of channel c's levels)`.
+pub fn gap_fc_host(levels: &[i64], c: u32, hw: u32, fc_wgt: &[Vec<u64>]) -> Vec<i64> {
+    let gap: Vec<i64> = (0..c as usize)
+        .map(|ch| levels[ch * hw as usize..(ch + 1) * hw as usize].iter().sum())
+        .collect();
+    fc_wgt
+        .iter()
+        .map(|per_class| {
+            (0..c as usize).map(|ch| per_class[ch] as i64 * gap[ch]).sum::<i64>()
+        })
+        .collect()
+}
+
+/// The largest `vl` the GAP reduction's clear pass requests — callers
+/// size `hw` so `2*hw` fits one register at `sew_in`/M1.
+pub fn gap_fits(hw: u32, sew_in: Sew, vlen_bits: u32) -> bool {
+    2 * hw <= VType::new(sew_in, Lmul::M1).vlmax(vlen_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ProcessorConfig;
+    use crate::sim::Machine;
+    use crate::testutil::Gen;
+
+    #[test]
+    fn maxpool_matches_host_at_both_widths() {
+        for (sew, maxv) in [(Sew::E16, 1u64 << 14), (Sew::E32, 1u64 << 30)] {
+            let (c, h, w) = (3u32, 6u32, 8u32);
+            let cfg = ProcessorConfig::sparq();
+            let mut m = Machine::new(cfg.clone(), 1 << 20);
+            let eb = sew.bytes() as u64;
+            let (src, dst) = (0x1000u64, 0x8000u64);
+            let mut g = Gen::new(0xBEEF);
+            let vals: Vec<i64> = (0..c * h * w).map(|_| g.below(maxv) as i64).collect();
+            for (i, &v) in vals.iter().enumerate() {
+                m.mem.store_uint(src + i as u64 * eb, eb as u32, v as u64).unwrap();
+            }
+            let mut a = Asm::new("pool", cfg.vlen_bits);
+            emit_maxpool2(&mut a, c, h, w, sew, src, dst);
+            m.run(&a.finish(0)).unwrap();
+            let want = maxpool2_host(&vals, c, h, w);
+            let got: Vec<i64> = (0..want.len())
+                .map(|i| m.mem.load_uint(dst + i as u64 * eb, eb as u32).unwrap() as i64)
+                .collect();
+            assert_eq!(got, want, "sew {sew}");
+        }
+    }
+
+    #[test]
+    fn gap_fc_matches_host() {
+        for sew_in in [Sew::E8, Sew::E16] {
+            let (c, hw, classes) = (32u32, 16u32, 4usize);
+            let cfg = ProcessorConfig::sparq();
+            assert!(gap_fits(hw, sew_in, cfg.vlen_bits));
+            let mut m = Machine::new(cfg.clone(), 1 << 20);
+            let eb = sew_in.bytes() as u64;
+            let (src, logits) = (0x1000u64, 0xC000u64);
+            let mut g = Gen::new(0x60D);
+            let levels: Vec<i64> = (0..c * hw).map(|_| g.below(16) as i64).collect();
+            let fc_wgt: Vec<Vec<u64>> =
+                (0..classes).map(|_| (0..c).map(|_| g.below(15)).collect()).collect();
+            for (i, &v) in levels.iter().enumerate() {
+                m.mem.store_uint(src + i as u64 * eb, eb as u32, v as u64).unwrap();
+            }
+            let mut a = Asm::new("gapfc", cfg.vlen_bits);
+            emit_gap_fc(&mut a, c, hw, sew_in, src, &fc_wgt, logits);
+            m.run(&a.finish((c * classes as u32) as u64)).unwrap();
+            let want = gap_fc_host(&levels, c, hw, &fc_wgt);
+            let got: Vec<i64> =
+                (0..classes).map(|k| m.mem.load_uint(logits + 4 * k as u64, 4).unwrap() as i64).collect();
+            assert_eq!(got, want, "sew {sew_in}");
+        }
+    }
+
+    #[test]
+    fn maxpool_rejects_odd_dims() {
+        let cfg = ProcessorConfig::sparq();
+        let mut a = Asm::new("bad", cfg.vlen_bits);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            emit_maxpool2(&mut a, 1, 5, 4, Sew::E16, 0, 0x100)
+        }));
+        assert!(r.is_err());
+    }
+}

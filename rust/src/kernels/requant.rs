@@ -1,0 +1,270 @@
+//! Inter-layer requantize + repack placement — the real instruction
+//! streams that move activations between chained layers of a
+//! [`crate::qnn::compiled::CompiledQnn`].
+//!
+//! A conv layer leaves wide accumulator sums (u16 for ULP containers,
+//! u32 for LP) in its dense output buffer; the next layer wants
+//! zero-padded *level* tensors at its own element width.  This module
+//! emits that boundary as vector code, so its cycles land in the
+//! end-to-end total exactly like the runtime packing passes do:
+//!
+//! ```text
+//! # zero-fill the whole padded destination buffer (the explicit
+//! # zero-padding border — and the explicit zero channel when an odd
+//! # c_in was padded to even)
+//! vmv.v.i v4, 0 ; vse ... (strip loop)
+//! # per channel, per row strip:
+//! vle{W}   v8, src            # wide sums
+//! vsrl.vx  v8, v8, rshift     # the layer's requantization shift
+//! vminu.vx v8, v8, amax       # clamp into the A-bit level range
+//! vnsrl.wx v0, v8, 0          # narrow W -> W/2 (skipped when N == W)
+//! vse{N}   v0, dst_interior   # into the padded interior
+//! ```
+//!
+//! The clamp runs at the wide width *before* the narrowing shift, so a
+//! post-shift value that still exceeds the level range can never be
+//! silently truncated — `min` then `narrow` is exact.
+//!
+//! The host golden model is [`requant_host`]; `qnn`'s golden network
+//! applies it at every layer boundary and the cross-layer tests pin
+//! the emitted stream to it bit-for-bit.
+
+use super::asm::{strips, Asm};
+use crate::isa::{Lmul, Sew, VOp, VType};
+
+/// One layer boundary: where the producer's dense values live, where
+/// the consumer's padded level tensor goes, and the requantization.
+#[derive(Debug, Clone, Copy)]
+pub struct RequantSpec {
+    /// Producer values: dense `c x h x w` at element width `src_sew`.
+    pub src: u64,
+    pub src_sew: Sew,
+    /// Logical dims of the producer tensor.
+    pub c: u32,
+    pub h: u32,
+    pub w: u32,
+    /// Consumer buffer: `c_pad x (h + 2*pad) x (w + 2*pad)` at
+    /// `dst_sew`, zero-filled, values written to the interior.
+    pub dst: u64,
+    pub dst_sew: Sew,
+    /// Consumer channel count (>= c; extra channels stay zero — the
+    /// explicit odd-`c_in` padding channel).
+    pub c_pad: u32,
+    /// 'same'-conv border on each side of the interior (0 = dense).
+    pub pad: u32,
+    /// Requantization: `level = min(amax, value >> rshift)`.
+    pub rshift: u32,
+    pub amax: u64,
+}
+
+impl RequantSpec {
+    pub fn dst_w(&self) -> u32 {
+        self.w + 2 * self.pad
+    }
+
+    pub fn dst_h(&self) -> u32 {
+        self.h + 2 * self.pad
+    }
+
+    /// Total destination elements (padded).
+    pub fn dst_len(&self) -> u64 {
+        self.c_pad as u64 * self.dst_h() as u64 * self.dst_w() as u64
+    }
+}
+
+/// Emit the zero-fill + requantize + narrow + place stream for one
+/// layer boundary.  `src_sew` must equal `dst_sew` or be its widened
+/// form (one `vnsrl` step).
+pub fn emit_requant(a: &mut Asm, s: &RequantSpec) {
+    let ws = s.src_sew;
+    let wn = s.dst_sew;
+    assert!(
+        ws == wn || wn.widened() == Some(ws),
+        "requant narrows by at most one SEW step ({ws} -> {wn})"
+    );
+    assert!(s.rshift < ws.bits(), "rshift must stay below the wide element width");
+    let wsb = ws.bytes() as u64;
+    let wnb = wn.bytes() as u64;
+
+    emit_zero_fill(a, s.dst, wn, s.dst_len());
+
+    // v8 (even: the wide group a vnsrl reads spans 2 registers at M1)
+    // holds the wide strip, v0 the narrowed result
+    let max_strip = VType::new(ws, Lmul::M1).vlmax(a.vlen_bits()).max(1);
+    let (hp, wp) = (s.dst_h() as u64, s.dst_w() as u64);
+    for c in 0..s.c {
+        for r in 0..s.h {
+            let src_row = s.src + ((c * s.h + r) as u64 * s.w as u64) * wsb;
+            let dst_row = s.dst
+                + ((c as u64 * hp + (r + s.pad) as u64) * wp + s.pad as u64) * wnb;
+            for (s0, sw) in strips(s.w, max_strip) {
+                a.setvl(sw as u64, ws, Lmul::M1);
+                a.vle(ws, 8, src_row + s0 as u64 * wsb);
+                if s.rshift > 0 {
+                    a.vx(VOp::Srl, 8, 8, s.rshift as u64);
+                }
+                a.vx(VOp::Min, 8, 8, s.amax);
+                if wn == ws {
+                    a.vse(ws, 8, dst_row + s0 as u64 * wnb);
+                } else {
+                    a.setvl(sw as u64, wn, Lmul::M1);
+                    a.vx(VOp::NSrl, 0, 8, 0);
+                    a.vse(wn, 0, dst_row + s0 as u64 * wnb);
+                }
+            }
+            a.loop_overhead();
+        }
+        a.loop_overhead();
+    }
+}
+
+/// Zero an `len`-element buffer at `sew` with vector stores (the
+/// explicit padding pass — borders and padded channels become real
+/// stored zeros, costed like any other store).
+pub fn emit_zero_fill(a: &mut Asm, addr: u64, sew: Sew, len: u64) {
+    let eb = sew.bytes() as u64;
+    let lmul = Lmul::M4; // v4..v7: one wide zero group
+    let max_strip = VType::new(sew, lmul).vlmax(a.vlen_bits()).max(1) as u64;
+    a.setvl(max_strip.min(len), sew, lmul);
+    a.vclear(4);
+    let mut off = 0u64;
+    while off < len {
+        let n = max_strip.min(len - off);
+        a.setvl(n, sew, lmul);
+        a.vse(sew, 4, addr + off * eb);
+        off += n;
+    }
+    a.loop_overhead();
+}
+
+/// Host-side golden of the requantization a boundary applies to one
+/// value: `min(amax, v >> rshift)`.  Producer values are non-negative
+/// by construction (levels and zero-point-offset weights).
+pub fn requant_host(v: u64, rshift: u32, amax: u64) -> u64 {
+    (v >> rshift).min(amax)
+}
+
+/// The deterministic per-boundary shift: large enough that the maximum
+/// possible producer value lands inside the A-bit level range, so the
+/// clamp only trims the tail of the distribution.
+pub fn rshift_for(max_val: u64, a_bits: u32) -> u32 {
+    let bits = 64 - max_val.leading_zeros();
+    bits.saturating_sub(a_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ProcessorConfig;
+    use crate::sim::Machine;
+    use crate::testutil::Gen;
+
+    fn run_spec(spec: &RequantSpec, vals: &[u64]) -> Vec<u64> {
+        let cfg = ProcessorConfig::sparq();
+        let mut m = Machine::new(cfg.clone(), 1 << 20);
+        let wsb = spec.src_sew.bytes() as u64;
+        for (i, &v) in vals.iter().enumerate() {
+            m.mem.store_uint(spec.src + i as u64 * wsb, wsb as u32, v).unwrap();
+        }
+        // poison the destination so the zero-fill is actually observed
+        let wnb = spec.dst_sew.bytes() as u64;
+        for i in 0..spec.dst_len() {
+            m.mem.store_uint(spec.dst + i * wnb, wnb as u32, 0x55).unwrap();
+        }
+        let mut a = Asm::new("requant", cfg.vlen_bits);
+        emit_requant(&mut a, spec);
+        let prog = a.finish(0);
+        m.run(&prog).unwrap();
+        (0..spec.dst_len())
+            .map(|i| m.mem.load_uint(spec.dst + i * wnb, wnb as u32).unwrap())
+            .collect()
+    }
+
+    fn golden(spec: &RequantSpec, vals: &[u64]) -> Vec<u64> {
+        let (hp, wp) = (spec.dst_h() as usize, spec.dst_w() as usize);
+        let mut out = vec![0u64; spec.dst_len() as usize];
+        for c in 0..spec.c as usize {
+            for r in 0..spec.h as usize {
+                for q in 0..spec.w as usize {
+                    let v = vals[(c * spec.h as usize + r) * spec.w as usize + q];
+                    out[(c * hp + r + spec.pad as usize) * wp + q + spec.pad as usize] =
+                        requant_host(v, spec.rshift, spec.amax);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn narrowing_requant_with_padding_matches_host() {
+        // E32 sums -> E16 levels, 1-wide border, one extra zero channel
+        let spec = RequantSpec {
+            src: 0x1000,
+            src_sew: Sew::E32,
+            c: 3,
+            h: 5,
+            w: 7,
+            dst: 0x8000,
+            dst_sew: Sew::E16,
+            c_pad: 4,
+            pad: 1,
+            rshift: 6,
+            amax: 15,
+        };
+        let mut g = Gen::new(0xCAFE);
+        let vals: Vec<u64> = (0..spec.c * spec.h * spec.w).map(|_| g.below(1 << 12)).collect();
+        assert_eq!(run_spec(&spec, &vals), golden(&spec, &vals));
+    }
+
+    #[test]
+    fn same_width_requant_dense_matches_host() {
+        // E16 -> E16 (the int16 stem feeding an LP layer), no padding
+        let spec = RequantSpec {
+            src: 0x1000,
+            src_sew: Sew::E16,
+            c: 2,
+            h: 4,
+            w: 9,
+            dst: 0x4000,
+            dst_sew: Sew::E16,
+            c_pad: 2,
+            pad: 0,
+            rshift: 3,
+            amax: 7,
+        };
+        let mut g = Gen::new(7);
+        let vals: Vec<u64> = (0..spec.c * spec.h * spec.w).map(|_| g.below(1 << 14)).collect();
+        assert_eq!(run_spec(&spec, &vals), golden(&spec, &vals));
+    }
+
+    #[test]
+    fn clamp_happens_before_the_narrowing_shift() {
+        // a value whose shifted form exceeds the narrow width must
+        // clamp to amax, not wrap through the vnsrl truncation
+        let spec = RequantSpec {
+            src: 0x1000,
+            src_sew: Sew::E16,
+            c: 1,
+            h: 1,
+            w: 4,
+            dst: 0x2000,
+            dst_sew: Sew::E8,
+            c_pad: 1,
+            pad: 0,
+            rshift: 2,
+            amax: 3,
+        };
+        let vals = [0xFFFF, 0x0400, 3, 12];
+        let got = run_spec(&spec, &vals);
+        assert_eq!(got, vec![3, 3, 0, 3]);
+    }
+
+    #[test]
+    fn rshift_for_keeps_max_in_range() {
+        for (max, a) in [(6858u64, 2u32), (2592, 2), (107_000, 4), (3, 2), (1, 8)] {
+            let sh = rshift_for(max, a);
+            assert!(max >> sh <= (1 << a) - 1 || max < (1 << a), "max={max} a={a} sh={sh}");
+        }
+        assert_eq!(rshift_for(0, 4), 0);
+    }
+}

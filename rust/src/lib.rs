@@ -27,17 +27,26 @@
 //!   content key (see DESIGN.md §"Compile once, execute many").
 //! * [`power`] — the GF22FDX-calibrated analytical area/power/fmax model
 //!   behind Table II.
-//! * [`qnn`] — the quantized CNN graph and its layer-by-layer scheduling
-//!   onto the simulator.
+//! * [`qnn`] — the quantized CNN graph, its shape-chaining validation,
+//!   and the dataflow compiler ([`qnn::compiled::CompiledQnn`],
+//!   DESIGN.md §Dataflow) that turns the whole network into ONE chained
+//!   multi-layer program over a planned activation arena — per-layer
+//!   convs whose inputs rebind to the previous layer's output region,
+//!   zero-padding/requantize/maxpool/GAP+FC as real instruction
+//!   streams, cached whole in the [`ProgramCache`] under a graph-level
+//!   key.  `qnn::schedule` reads per-layer cycles off one real
+//!   end-to-end run.
 //! * [`runtime`] — artifact loading and execution backends: the PJRT
 //!   path (behind the off-by-default `pjrt` feature; the `xla` crate is
-//!   not vendored) and the simulator-backed conv model
-//!   ([`runtime::simconv`]) that serves real sub-byte convolutions
-//!   through the cached-program path with no artifacts at all.
+//!   not vendored) and the simulator-backed models
+//!   ([`runtime::simconv`]): a single conv, or the whole network
+//!   ([`runtime::SimQnnModel`]) classifying through the cached
+//!   dataflow program with no artifacts at all.
 //! * [`coordinator`] — the serving stack: request queue, dynamic
 //!   batcher, worker pool, latency metrics.  Workers share one
 //!   [`kernels::ProgramCache`] via `Arc` and own a private machine
-//!   pool each (compile-once/execute-many serving).
+//!   pool each (compile-once/execute-many serving), whether they run
+//!   the single-conv executor or the full-network one.
 //! * [`report`] — paper-style table/figure printers (Fig. 4, Fig. 5,
 //!   Table I, Table II).
 //! * [`config`] — the hand-rolled key=value config system and presets.

@@ -190,12 +190,14 @@ fn cmd_qnn_cycles(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Serve the sub-byte conv workload on the simulator backend:
-/// compile-once/execute-many with one shared program cache and a
-/// machine pool per worker (no artifacts, no PJRT).
+/// Serve the whole SparqCNN on the simulator backend: the network is
+/// compiled once into a chained multi-layer dataflow program (shared
+/// program cache, graph-level key) and every request classifies
+/// through it end-to-end on a per-worker machine pool (no artifacts,
+/// no PJRT).
 fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
-    use sparq::kernels::{ConvDims, ConvVariant, ProgramCache};
-    use sparq::ulppack::RegionMode;
+    use sparq::kernels::ProgramCache;
+    use sparq::qnn::QnnGraph;
     use std::sync::Arc;
 
     let n: usize = opt(rest, "--requests").and_then(|s| s.parse().ok()).unwrap_or(64);
@@ -208,32 +210,41 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
         "w4a4" => (4, 4),
         _ => (2, 2),
     };
-    let mode = if w_bits + a_bits > 4 { RegionMode::Paper } else { RegionMode::Strict };
-    let dims = ConvDims { c: 8, h: 18, w: 18, co: 4, fh: 3, fw: 3 };
-    let variant = ConvVariant::Vmacsr { w_bits, a_bits, mode };
+    let precision = QnnPrecision::SubByte { w_bits, a_bits };
+    let graph = QnnGraph::sparq_cnn();
     let cfg = sparq::ProcessorConfig::sparq();
     let cache = Arc::new(ProgramCache::new());
+    let seed = sparq::qnn::schedule::DEFAULT_QNN_SEED;
+
+    // per-image hardware cost from the same compiled network
+    let cyc = {
+        let pool = sparq::sim::MachinePool::new();
+        sparq::qnn::schedule::schedule_seeded(&cfg, &graph, precision, seed, &cache, &pool)
+            .map_err(|e| e.to_string())?
+            .total_cycles()
+    };
 
     let server = sparq::coordinator::Server::start(
-        sparq::coordinator::sim_conv_factory(
+        sparq::coordinator::sim_qnn_factory(
             cfg.clone(),
-            dims,
-            variant,
+            graph.clone(),
+            precision,
             4,
-            0x5EED,
+            seed,
             Arc::clone(&cache),
         ),
         serve_cfg,
-        0,
+        cyc,
     )
     .map_err(|e| e.to_string())?;
 
     println!(
-        "serving W{w_bits}A{a_bits} vmacsr conv2d ({}x{}x{}) on the simulator backend, \
-         {} worker(s), {n} requests...",
-        dims.c, dims.h, dims.w, serve_cfg.workers
+        "serving SparqCNN at W{w_bits}A{a_bits} on the simulated dataflow backend \
+         ({cyc} cycles/image), {} worker(s), {n} requests...",
+        serve_cfg.workers
     );
-    let image_len = (dims.c * dims.h * dims.w) as usize;
+    let (ic, ih, iw) = graph.input;
+    let image_len = (ic * ih * iw) as usize;
     let mut pending = Vec::new();
     let mut served = 0usize;
     for i in 0..n {
@@ -255,7 +266,7 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     let snap = server.shutdown();
     let cs = cache.stats();
     println!(
-        "done: {served}/{n} served\n  latency p50/p95/p99: {}/{}/{} us\n  mean batch {:.1}, throughput {:.0} req/s, {} worker errors\n  program cache: {} compile(s) shared by {} worker(s) ({} cache hits) for {served} executions",
+        "done: {served}/{n} served\n  latency p50/p95/p99: {}/{}/{} us\n  mean batch {:.1}, throughput {:.0} req/s, {} worker errors\n  program cache: {} compile(s) shared by {} worker(s) ({} cache hits) for {served} network inferences",
         snap.p50_us,
         snap.p95_us,
         snap.p99_us,

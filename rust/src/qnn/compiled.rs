@@ -1,0 +1,792 @@
+//! `CompiledQnn` — the whole network compiled once into a chained
+//! multi-layer program over a single planned activation arena
+//! (DESIGN.md §Dataflow).
+//!
+//! Before this refactor, `qnn::schedule` was only a cost model: every
+//! conv layer ran on an independent random tensor, activations never
+//! flowed layer to layer, and maxpool/GAP+FC cycles were a fabricated
+//! bytes/cycle formula.  Now:
+//!
+//! * A layout planner walks the shape-chained graph and allocates one
+//!   arena with the same bump-allocator discipline the conv engine
+//!   uses — each conv's padded input buffer, packed-copy buffer and
+//!   wide output buffer, plus the pool/requant/logits buffers, are
+//!   fixed addresses baked into every stream.
+//! * Each conv layer is a [`CompiledConv`] compiled *in the arena*
+//!   (`conv_engine::compile_in_arena`) whose input region is exactly
+//!   where the previous layer's requantize stream writes — inputs
+//!   rebind to the previous layer's output region, not to host-staged
+//!   tensors.
+//! * Layer boundaries are real instruction streams: zero-padding and
+//!   requantize+narrow via [`crate::kernels::requant`], maxpool and
+//!   GAP+FC via [`crate::kernels::pool_fc`].  Nothing is estimated.
+//! * The compiled network is cached whole in
+//!   [`crate::kernels::ProgramCache`] under a graph-level key
+//!   (processor + layers + precision + weight seed).
+//!
+//! Exactness contract: [`QnnNet::golden_forward`] is the host-side
+//! golden network; every layer boundary of an executed inference
+//! matches it bit-for-bit (`rust/tests/qnn_dataflow.rs`), and repeated
+//! executions produce identical outputs *and* cycle counts.
+
+use crate::arch::ProcessorConfig;
+use crate::kernels::conv_engine::{self, LayoutAlloc};
+use crate::kernels::pool_fc::{self, gap_fc_host, maxpool2_host};
+use crate::kernels::requant::{self, requant_host, RequantSpec};
+use crate::kernels::workload::{golden_mod, golden_packed_vmacsr, ConvDims, OutElem, OutputRef, Workload};
+use crate::kernels::{asm::Asm, CompiledConv, EngineOpts};
+use crate::qnn::graph::{padded_c, LayerDesc, QnnGraph};
+use crate::qnn::schedule::{variant_for, QnnPrecision};
+use crate::sim::{CompiledProgram, Machine, Program, RunReport, SimError};
+use crate::testutil::Gen;
+use crate::ulppack::{act_level_max, region, weight_level_max, Container};
+
+/// Host-side network: the graph plus every weight tensor, all derived
+/// from ONE graph-level seed (recorded in `QnnSchedule` for
+/// reproducibility — no more per-layer `0x5EED + li` scatter).
+#[derive(Debug, Clone)]
+pub struct QnnNet {
+    pub graph: QnnGraph,
+    pub precision: QnnPrecision,
+    pub seed: u64,
+    /// Conv weight levels per *conv* layer (graph order), shaped
+    /// `[co][padded_c][f*f]`; the padded channel's weights are drawn
+    /// like any other but always multiply explicit zero activations.
+    pub conv_wgt: Vec<Vec<Vec<Vec<u64>>>>,
+    /// FC head weight levels, `[classes][c]`.
+    pub fc_wgt: Vec<Vec<u64>>,
+}
+
+/// What one layer boundary of the golden network holds.
+#[derive(Debug, Clone)]
+pub struct GoldenTrace {
+    /// Per graph layer: the layer's output values (wide conv sums,
+    /// pooled sums, or the logits for the head).
+    pub layer_outs: Vec<Vec<i64>>,
+    pub logits: Vec<i64>,
+    pub argmax: usize,
+}
+
+impl QnnNet {
+    /// Derive every weight in the network from one seed (one `Gen`
+    /// stream, layers in graph order).
+    pub fn from_seed(
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+    ) -> Result<QnnNet, SimError> {
+        graph.validate().map_err(|e| SimError::Graph(e.to_string()))?;
+        let QnnPrecision::SubByte { w_bits, .. } = precision else {
+            return Err(SimError::Unsupported(
+                "the dataflow executor serves sub-byte precisions (fp32 keeps the legacy cost model)",
+            ));
+        };
+        let mut g = Gen::new(seed);
+        let mut conv_wgt = Vec::new();
+        let mut fc_wgt = Vec::new();
+        for layer in &graph.layers {
+            match *layer {
+                LayerDesc::Conv { c_in, c_out, f, quantized, .. } => {
+                    let wmax = if quantized { weight_level_max(w_bits) } else { weight_level_max(8) };
+                    let cp = padded_c(c_in);
+                    conv_wgt.push(
+                        (0..c_out)
+                            .map(|_| {
+                                (0..cp)
+                                    .map(|_| g.vec_below((f * f) as usize, wmax + 1))
+                                    .collect()
+                            })
+                            .collect(),
+                    );
+                }
+                LayerDesc::GapFc { c, classes } => {
+                    let wmax = weight_level_max(w_bits);
+                    fc_wgt = (0..classes).map(|_| g.vec_below(c as usize, wmax + 1)).collect();
+                }
+                LayerDesc::MaxPool { .. } => {}
+            }
+        }
+        Ok(QnnNet { graph: graph.clone(), precision, seed, conv_wgt, fc_wgt })
+    }
+
+    /// Activation level bits (uniform across layer boundaries).
+    pub fn a_bits(&self) -> u32 {
+        match self.precision {
+            QnnPrecision::SubByte { a_bits, .. } => a_bits,
+            QnnPrecision::Fp32 => unreachable!("from_seed rejects fp32"),
+        }
+    }
+
+    /// Input image length in levels (c * h * w).
+    pub fn input_len(&self) -> usize {
+        let (c, h, w) = self.graph.input;
+        (c * h * w) as usize
+    }
+
+    /// A deterministic test image (levels in the A-bit range).
+    pub fn test_image(&self, image_seed: u64) -> Vec<u64> {
+        let amax = act_level_max(self.a_bits());
+        let mut g = Gen::new(image_seed);
+        g.vec_below(self.input_len(), amax + 1)
+    }
+
+    /// The exact host-side forward pass the simulated program must
+    /// reproduce bit-for-bit at every layer boundary: hardware-accurate
+    /// conv models (mod-2^16 int16 stem, packed-vmacsr dataflow for
+    /// quantized layers), maxpool on sums, `min(amax, v >> rshift)`
+    /// requantization at every boundary, integer GAP+FC.
+    pub fn golden_forward(&self, image: &[u64]) -> Result<GoldenTrace, SimError> {
+        assert_eq!(image.len(), self.input_len(), "image length != c*h*w");
+        let QnnPrecision::SubByte { w_bits, a_bits } = self.precision else {
+            return Err(SimError::Unsupported("fp32 has no integer golden network"));
+        };
+        let amax = act_level_max(a_bits);
+        let (c0, h0, w0) = self.graph.input;
+
+        // the flowing value: dense levels (conv inputs are re-padded
+        // per layer) or dense sums; bookkeeping mirrors the compiler.
+        // Out-of-range input levels clamp exactly like `execute` does.
+        let mut levels: Vec<u64> = image.iter().map(|&v| v.min(amax)).collect();
+        let mut dims = (c0, h0, w0);
+        let mut max_val = amax;
+        let mut is_levels = true;
+        let mut conv_ix = 0usize;
+        let mut layer_outs = Vec::new();
+        let mut logits: Vec<i64> = Vec::new();
+
+        for layer in &self.graph.layers {
+            match *layer {
+                LayerDesc::Conv { c_in, c_out, h, w, f, quantized } => {
+                    if !is_levels {
+                        // boundary requant happens on entry to a conv
+                        levels = levels.iter().map(|&v| requant_host(v, requant::rshift_for(max_val, a_bits), amax)).collect();
+                        is_levels = true;
+                    }
+                    let cp = padded_c(c_in);
+                    let pad = (f - 1) / 2;
+                    let (hp, wp) = (h + f - 1, w + f - 1);
+                    // zero-padded act tensor, explicit zero channel(s)
+                    let mut act = vec![vec![0u64; (hp * wp) as usize]; cp as usize];
+                    for ch in 0..c_in as usize {
+                        for r in 0..h as usize {
+                            for q in 0..w as usize {
+                                act[ch][(r + pad as usize) * wp as usize + q + pad as usize] =
+                                    levels[(ch * h as usize + r) * w as usize + q];
+                            }
+                        }
+                    }
+                    let d = ConvDims { c: cp, h: hp, w: wp, co: c_out, fh: f, fw: f };
+                    let (wb, ab) = if quantized { (w_bits, a_bits) } else { (8, a_bits) };
+                    let wl = Workload {
+                        dims: d,
+                        w_bits: wb,
+                        a_bits: ab,
+                        act,
+                        wgt: self.conv_wgt[conv_ix].clone(),
+                        act_f32: vec![],
+                        wgt_f32: vec![],
+                    };
+                    // the hardware-accurate conv model + the element the
+                    // machine stores it in (the latter from the same
+                    // conv_engine helper `compile` resolves through, so
+                    // the boundary rshift cannot diverge)
+                    let (out, out_el) = if quantized {
+                        let plan = region::plan_vmacsr(
+                            w_bits,
+                            a_bits,
+                            d.issues_per_output(),
+                            crate::ulppack::RegionMode::Paper,
+                        )
+                        .ok_or(SimError::Unsupported("precision outside every container's region"))?;
+                        (
+                            golden_packed_vmacsr(&wl, plan.container, plan.spill_every),
+                            conv_engine::vmacsr_out_elem(
+                                plan.container,
+                                plan.spill_every,
+                                d.issues_per_output(),
+                            ),
+                        )
+                    } else {
+                        // the int16 stem wraps mod 2^16
+                        (golden_mod(&wl, 16), OutElem::U16)
+                    };
+                    layer_outs.push(out.clone());
+                    levels = out.iter().map(|&v| v as u64).collect();
+                    dims = (c_out, h, w);
+                    max_val = (c_in as u64
+                        * (f * f) as u64
+                        * amax
+                        * if quantized { weight_level_max(w_bits) } else { weight_level_max(8) })
+                    .min(elem_cap(out_el));
+                    is_levels = false;
+                    conv_ix += 1;
+                }
+                LayerDesc::MaxPool { c, h, w } => {
+                    let vals: Vec<i64> = levels.iter().map(|&v| v as i64).collect();
+                    let out = maxpool2_host(&vals, c, h, w);
+                    layer_outs.push(out.clone());
+                    levels = out.iter().map(|&v| v as u64).collect();
+                    dims = (c, h / 2, w / 2);
+                }
+                LayerDesc::GapFc { c, .. } => {
+                    let rshift = requant_host_shift(is_levels, max_val, a_bits);
+                    let lv: Vec<i64> = levels
+                        .iter()
+                        .map(|&v| requant_host(v, rshift, amax) as i64)
+                        .collect();
+                    let hw = dims.1 * dims.2;
+                    logits = gap_fc_host(&lv, c, hw, &self.fc_wgt);
+                    layer_outs.push(logits.clone());
+                }
+            }
+        }
+        let argmax = argmax_i64(&logits);
+        Ok(GoldenTrace { layer_outs, logits, argmax })
+    }
+}
+
+/// Requant shift on entry to a consumer: identity for values that are
+/// already levels, `rshift_for` on wide sums.
+fn requant_host_shift(is_levels: bool, max_val: u64, a_bits: u32) -> u32 {
+    if is_levels {
+        0
+    } else {
+        requant::rshift_for(max_val, a_bits)
+    }
+}
+
+/// One stage of the chained program.  A graph layer maps to one or two
+/// stages: an optional boundary stream (zero-pad + requantize into the
+/// consumer's input region) and the layer's own stream.
+#[derive(Debug)]
+pub struct QnnStage {
+    /// Graph layer this stage's cycles are attributed to.
+    pub layer: usize,
+    pub kind: StageKind,
+}
+
+#[derive(Debug)]
+pub enum StageKind {
+    /// Inter-layer boundary: zero-fill + requantize + place.
+    Boundary(StageProg),
+    /// The conv layer proper (arena-compiled; its input region is the
+    /// previous boundary stream's destination — the rebind).
+    Conv(Box<CompiledConv>),
+    Pool(StageProg),
+    GapFc(StageProg),
+}
+
+/// An emitted stream plus its pre-compiled micro-op form (present
+/// whenever the stream is legal for the processor — always on Sparq).
+#[derive(Debug)]
+pub struct StageProg {
+    pub prog: Program,
+    pub compiled: Option<CompiledProgram>,
+}
+
+impl QnnStage {
+    /// The stage's stream + its micro-op form, whichever kind it is.
+    fn parts(&self) -> (&Program, Option<&CompiledProgram>) {
+        match &self.kind {
+            StageKind::Conv(cc) => (&cc.prog, cc.compiled.as_ref()),
+            StageKind::Boundary(p) | StageKind::Pool(p) | StageKind::GapFc(p) => {
+                (&p.prog, p.compiled.as_ref())
+            }
+        }
+    }
+
+    pub fn label(&self) -> &str {
+        &self.parts().0.label
+    }
+
+    pub fn is_boundary(&self) -> bool {
+        matches!(self.kind, StageKind::Boundary(_))
+    }
+
+    fn run(&self, m: &mut Machine) -> Result<RunReport, SimError> {
+        match self.parts() {
+            (_, Some(cp)) => m.run_compiled(cp),
+            (prog, None) => m.run(prog),
+        }
+    }
+
+    /// Micro-op pre-compilation happened for this stage.
+    pub fn has_uops(&self) -> bool {
+        self.parts().1.is_some()
+    }
+}
+
+/// Where a graph layer's output lives in the arena (for the
+/// bit-for-bit boundary tests).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerTap {
+    pub out: OutputRef,
+}
+
+/// Where the input image is staged.
+#[derive(Debug, Clone, Copy)]
+struct InputDesc {
+    x_addr: u64,
+    ew: u64,
+    c_real: u32,
+    h: u32,
+    w: u32,
+    hp: u32,
+    wp: u32,
+    pad: u32,
+}
+
+/// The whole QNN compiled once: chained per-layer programs over one
+/// planned activation arena.  Execute any number of times on pooled
+/// machines; outputs and cycle counts are bit-identical per execution.
+#[derive(Debug)]
+pub struct CompiledQnn {
+    pub net: QnnNet,
+    pub cfg: ProcessorConfig,
+    pub stages: Vec<QnnStage>,
+    /// One tap per graph layer (the executed layer boundaries).
+    pub taps: Vec<LayerTap>,
+    pub logits: OutputRef,
+    /// Simulated-DRAM bytes a machine needs for the arena.
+    pub mem_bytes: usize,
+    input: InputDesc,
+}
+
+/// One inference through the compiled network.
+pub struct QnnRun {
+    pub logits: Vec<i64>,
+    pub argmax: usize,
+    /// Per-stage reports (boundary streams included), stage order.
+    pub stage_reports: Vec<RunReport>,
+}
+
+impl QnnRun {
+    pub fn total_cycles(&self) -> u64 {
+        self.stage_reports.iter().map(|r| r.stats.cycles).sum()
+    }
+}
+
+/// The flowing inter-layer value during compilation: dense wide sums.
+#[derive(Clone, Copy)]
+struct Flow {
+    addr: u64,
+    sew: crate::isa::Sew,
+    c: u32,
+    h: u32,
+    w: u32,
+    max_val: u64,
+}
+
+impl CompiledQnn {
+    /// Compile `net`'s graph for `cfg`: plan the arena, compile every
+    /// conv in it, and emit the boundary/pool/head streams.
+    pub fn compile(cfg: &ProcessorConfig, net: QnnNet) -> Result<CompiledQnn, SimError> {
+        use crate::isa::Sew;
+        net.graph.validate().map_err(|e| SimError::Graph(e.to_string()))?;
+        let QnnPrecision::SubByte { w_bits, a_bits } = net.precision else {
+            return Err(SimError::Unsupported("fp32 is served by the legacy cost model"));
+        };
+        let amax = act_level_max(a_bits);
+        let opts = EngineOpts::default();
+        let mut la = LayoutAlloc::new();
+        let mut stages: Vec<QnnStage> = Vec::new();
+        let mut taps: Vec<LayerTap> = Vec::new();
+        let mut flow: Option<Flow> = None;
+        let mut input: Option<InputDesc> = None;
+        let mut logits: Option<OutputRef> = None;
+        let mut conv_ix = 0usize;
+
+        for (li, layer) in net.graph.layers.iter().enumerate() {
+            match *layer {
+                LayerDesc::Conv { c_in, c_out, h, w, f, quantized } => {
+                    let cp = padded_c(c_in);
+                    let pad = (f - 1) / 2;
+                    let d = ConvDims { c: cp, h: h + f - 1, w: w + f - 1, co: c_out, fh: f, fw: f };
+                    let variant = variant_for(layer, net.precision)
+                        .expect("conv layers always map to a variant");
+                    let (wb, ab) = variant.bits();
+                    let wl = Workload {
+                        dims: d,
+                        w_bits: wb,
+                        a_bits: ab,
+                        act: vec![vec![0; (d.h * d.w) as usize]; cp as usize],
+                        wgt: net.conv_wgt[conv_ix].clone(),
+                        act_f32: vec![],
+                        wgt_f32: vec![],
+                    };
+                    let (inner, label) = variant.planned_inner(&wl)?;
+                    let cc = conv_engine::compile_in_arena(cfg, &wl, inner, opts, label, &mut la)?;
+                    let (x_addr, _) = cc.input_region();
+                    let ew = cc.input_elem_bytes();
+                    let in_sew = match ew {
+                        1 => Sew::E8,
+                        2 => Sew::E16,
+                        _ => Sew::E32,
+                    };
+                    match flow {
+                        None => {
+                            // layer 0: the host stages the image here
+                            input = Some(InputDesc {
+                                x_addr,
+                                ew,
+                                c_real: c_in,
+                                h,
+                                w,
+                                hp: d.h,
+                                wp: d.w,
+                                pad,
+                            });
+                        }
+                        Some(fl) => {
+                            let spec = RequantSpec {
+                                src: fl.addr,
+                                src_sew: fl.sew,
+                                c: fl.c,
+                                h: fl.h,
+                                w: fl.w,
+                                dst: x_addr,
+                                dst_sew: in_sew,
+                                c_pad: cp,
+                                pad,
+                                rshift: requant::rshift_for(fl.max_val, a_bits),
+                                amax,
+                            };
+                            if !(fl.sew == in_sew || in_sew.widened() == Some(fl.sew)) {
+                                return Err(SimError::Unsupported(
+                                    "layer boundary narrows by more than one element width",
+                                ));
+                            }
+                            let mut a = Asm::new(format!("boundary->{}", layer.name()), cfg.vlen_bits);
+                            requant::emit_requant(&mut a, &spec);
+                            stages.push(boundary_stage(li, a.finish(0), cfg));
+                        }
+                    }
+                    let out = cc.out;
+                    // worst-case output value, capped at what the output
+                    // element can physically hold (a wrapping int16 stem
+                    // never exceeds u16::MAX, whatever the exact bound
+                    // says) — this also keeps the boundary's requant
+                    // shift below the wide element width for any graph
+                    let max_val = (c_in as u64 * (f * f) as u64 * amax * weight_level_max(wb))
+                        .min(elem_cap(out.elem));
+                    flow = Some(Flow {
+                        addr: out.addr,
+                        sew: out_sew(out.elem),
+                        c: c_out,
+                        h,
+                        w,
+                        max_val,
+                    });
+                    taps.push(LayerTap { out });
+                    stages.push(QnnStage { layer: li, kind: StageKind::Conv(Box::new(cc)) });
+                    conv_ix += 1;
+                }
+                LayerDesc::MaxPool { c, h, w } => {
+                    let fl = flow.ok_or(SimError::Unsupported(
+                        "the dataflow executor needs a conv before the first pool",
+                    ))?;
+                    let eb = fl.sew.bytes() as u64;
+                    if w as u64 * eb > (cfg.vlen_bits / 8) as u64 {
+                        return Err(SimError::Unsupported(
+                            "pool row does not fit one vector register at M1",
+                        ));
+                    }
+                    let out_len = (c * (h / 2) * (w / 2)) as u64;
+                    let dst = la.alloc(out_len * eb, 64);
+                    let mut a = Asm::new("maxpool2-vec", cfg.vlen_bits);
+                    pool_fc::emit_maxpool2(&mut a, c, h, w, fl.sew, fl.addr, dst);
+                    let p = stage_prog(a.finish(0), cfg);
+                    stages.push(QnnStage { layer: li, kind: StageKind::Pool(p) });
+                    let out = OutputRef { addr: dst, elem: out_elem(fl.sew), len: out_len as usize };
+                    taps.push(LayerTap { out });
+                    flow = Some(Flow { addr: dst, sew: fl.sew, c, h: h / 2, w: w / 2, ..fl });
+                }
+                LayerDesc::GapFc { c, classes } => {
+                    use crate::isa::Sew;
+                    let fl = flow.ok_or(SimError::Unsupported(
+                        "the dataflow executor needs a conv before the head",
+                    ))?;
+                    if classes > 4 {
+                        return Err(SimError::Unsupported(
+                            "the GAP+FC head holds at most 4 logit accumulators",
+                        ));
+                    }
+                    // boundary requant into a dense E16 level buffer
+                    let hw = fl.h * fl.w;
+                    if !hw.is_power_of_two() || !pool_fc::gap_fits(hw, Sew::E16, cfg.vlen_bits) {
+                        return Err(SimError::Unsupported(
+                            "GAP spatial extent must be a power of two fitting one register",
+                        ));
+                    }
+                    // value-range guards: the channel sums reduce in
+                    // 16-bit lanes and the logits accumulate in u32 —
+                    // the golden network is exact i64, so a graph that
+                    // could wrap either must not compile
+                    let gap_max = hw as u64 * amax;
+                    if gap_max > u16::MAX as u64 {
+                        return Err(SimError::Unsupported(
+                            "GAP channel sum would overflow its 16-bit lanes",
+                        ));
+                    }
+                    if c as u64 * gap_max * weight_level_max(w_bits) > u32::MAX as u64 {
+                        return Err(SimError::Unsupported(
+                            "FC logits would overflow their 32-bit accumulators",
+                        ));
+                    }
+                    let lv_addr = la.alloc(c as u64 * hw as u64 * 2, 64);
+                    let spec = RequantSpec {
+                        src: fl.addr,
+                        src_sew: fl.sew,
+                        c,
+                        h: fl.h,
+                        w: fl.w,
+                        dst: lv_addr,
+                        dst_sew: Sew::E16,
+                        c_pad: c,
+                        pad: 0,
+                        rshift: requant::rshift_for(fl.max_val, a_bits),
+                        amax,
+                    };
+                    let mut a = Asm::new("boundary->gap+fc", cfg.vlen_bits);
+                    requant::emit_requant(&mut a, &spec);
+                    stages.push(boundary_stage(li, a.finish(0), cfg));
+
+                    let lg_addr = la.alloc(classes as u64 * 4, 64);
+                    let mut a = Asm::new("gap+fc-vec", cfg.vlen_bits);
+                    pool_fc::emit_gap_fc(&mut a, c, hw, Sew::E16, lv_addr, &net.fc_wgt, lg_addr);
+                    let p = stage_prog(a.finish(layer.macs()), cfg);
+                    stages.push(QnnStage { layer: li, kind: StageKind::GapFc(p) });
+                    let out = OutputRef { addr: lg_addr, elem: OutElem::U32, len: classes as usize };
+                    taps.push(LayerTap { out });
+                    logits = Some(out);
+                }
+            }
+        }
+
+        let input = input.ok_or(SimError::Unsupported(
+            "the dataflow executor needs a conv as the first layer",
+        ))?;
+        let logits = logits.ok_or(SimError::Unsupported(
+            "the dataflow executor needs a gap+fc head as the last layer",
+        ))?;
+        let mem_bytes = (la.brk() as usize).next_power_of_two().max(1 << 16);
+        Ok(CompiledQnn {
+            net,
+            cfg: cfg.clone(),
+            stages,
+            taps,
+            logits,
+            mem_bytes,
+            input,
+        })
+    }
+
+    /// Execute one inference: reset the machine, stage the image into
+    /// layer 0's padded input region, run every chained stage, read
+    /// the logits back from the arena.
+    pub fn execute(&self, m: &mut Machine, image: &[u64]) -> Result<QnnRun, SimError> {
+        m.reset_for(self.mem_bytes);
+        self.execute_fresh(m, image)
+    }
+
+    /// [`Self::execute`] for a machine known to be freshly reset (the
+    /// pooled-serving path: `MachinePool::acquire` already reset it).
+    pub fn execute_fresh(&self, m: &mut Machine, image: &[u64]) -> Result<QnnRun, SimError> {
+        if m.cfg != self.cfg {
+            return Err(SimError::Unsupported(
+                "machine configuration differs from the compiled network's",
+            ));
+        }
+        if image.len() != self.net.input_len() {
+            return Err(SimError::Unsupported("image length != c*h*w"));
+        }
+        let d = &self.input;
+        let amax = act_level_max(self.net.a_bits());
+        for ch in 0..d.c_real {
+            for r in 0..d.h {
+                for q in 0..d.w {
+                    let lv = image[((ch * d.h + r) * d.w + q) as usize].min(amax);
+                    let at = d.x_addr
+                        + ((ch as u64 * d.hp as u64 + (r + d.pad) as u64) * d.wp as u64
+                            + (q + d.pad) as u64)
+                            * d.ew;
+                    m.mem.store_uint(at, d.ew as u32, lv)?;
+                }
+            }
+        }
+        let mut stage_reports = Vec::with_capacity(self.stages.len());
+        for st in &self.stages {
+            stage_reports.push(st.run(m)?);
+        }
+        let logits = self.logits.read_ints(&m.mem)?;
+        let argmax = argmax_i64(&logits);
+        Ok(QnnRun { logits, argmax, stage_reports })
+    }
+
+    /// Read graph layer `li`'s executed output back from the arena
+    /// (after an `execute` on `m`) — the boundary the golden network
+    /// pins bit-for-bit.
+    pub fn read_tap(&self, m: &Machine, li: usize) -> Result<Vec<i64>, SimError> {
+        self.taps[li].out.read_ints(&m.mem)
+    }
+
+    /// Aggregate a run's stage reports into per-graph-layer cycles
+    /// (boundary streams count toward their consumer layer, exactly
+    /// like the runtime packing passes count toward their conv).
+    pub fn layer_cycles(&self, run: &QnnRun) -> Vec<super::schedule::LayerCycles> {
+        let mut rows: Vec<super::schedule::LayerCycles> = self
+            .net
+            .graph
+            .layers
+            .iter()
+            .map(|l| super::schedule::LayerCycles {
+                name: l.name(),
+                cycles: 0,
+                macs: l.macs(),
+                variant: String::new(),
+            })
+            .collect();
+        for (st, rep) in self.stages.iter().zip(&run.stage_reports) {
+            rows[st.layer].cycles += rep.stats.cycles;
+            if !st.is_boundary() {
+                rows[st.layer].variant = rep.label.clone();
+            }
+        }
+        rows
+    }
+}
+
+/// Tie-breaking matches `coordinator::argmax` (last maximum wins), so
+/// a served classification and the golden argmax can never disagree on
+/// equal logits.
+pub fn argmax_i64(xs: &[i64]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.cmp(b.1)).map(|(i, _)| i).unwrap_or(0)
+}
+
+fn stage_prog(prog: Program, cfg: &ProcessorConfig) -> StageProg {
+    let compiled = CompiledProgram::compile(&prog, cfg).ok();
+    StageProg { prog, compiled }
+}
+
+fn boundary_stage(layer: usize, prog: Program, cfg: &ProcessorConfig) -> QnnStage {
+    QnnStage { layer, kind: StageKind::Boundary(stage_prog(prog, cfg)) }
+}
+
+/// Largest value an output element can hold — the cap both the
+/// compiler's `Flow::max_val` and the golden network's bound share.
+fn elem_cap(e: OutElem) -> u64 {
+    match e {
+        OutElem::U16 => u16::MAX as u64,
+        OutElem::U32 | OutElem::F32 => u32::MAX as u64,
+    }
+}
+
+fn out_sew(e: OutElem) -> crate::isa::Sew {
+    match e {
+        OutElem::U16 => crate::isa::Sew::E16,
+        OutElem::U32 | OutElem::F32 => crate::isa::Sew::E32,
+    }
+}
+
+fn out_elem(s: crate::isa::Sew) -> OutElem {
+    match s {
+        crate::isa::Sew::E16 => OutElem::U16,
+        _ => OutElem::U32,
+    }
+}
+
+/// Which container a quantized layer of this net runs in (diagnostic,
+/// used by the benches' labels).
+pub fn container_for(precision: QnnPrecision, issues: u64) -> Option<Container> {
+    match precision {
+        QnnPrecision::SubByte { w_bits, a_bits } => {
+            region::plan_vmacsr(w_bits, a_bits, issues, crate::ulppack::RegionMode::Paper)
+                .map(|p| p.container)
+        }
+        QnnPrecision::Fp32 => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MachinePool;
+
+    fn w2a2() -> QnnPrecision {
+        QnnPrecision::SubByte { w_bits: 2, a_bits: 2 }
+    }
+
+    #[test]
+    fn compiles_and_runs_the_sparq_cnn() {
+        let net = QnnNet::from_seed(&QnnGraph::sparq_cnn(), w2a2(), 0xABCD).unwrap();
+        let cq = CompiledQnn::compile(&ProcessorConfig::sparq(), net).unwrap();
+        assert_eq!(cq.taps.len(), cq.net.graph.layers.len());
+        let image = cq.net.test_image(7);
+        let mut m = Machine::new(cq.cfg.clone(), cq.mem_bytes);
+        let run = cq.execute(&mut m, &image).unwrap();
+        assert_eq!(run.logits.len(), 4);
+        assert!(run.total_cycles() > 0);
+        // every stage stream pre-compiled to micro-ops on Sparq
+        assert!(cq.stages.iter().all(|s| s.has_uops()));
+    }
+
+    #[test]
+    fn executed_boundaries_match_the_golden_network() {
+        let net = QnnNet::from_seed(&QnnGraph::sparq_cnn(), w2a2(), 0x5EED_CAFE).unwrap();
+        let cq = CompiledQnn::compile(&ProcessorConfig::sparq(), net).unwrap();
+        let image = cq.net.test_image(42);
+        let golden = cq.net.golden_forward(&image).unwrap();
+        let mut m = Machine::new(cq.cfg.clone(), cq.mem_bytes);
+        let run = cq.execute(&mut m, &image).unwrap();
+        for li in 0..cq.net.graph.layers.len() {
+            assert_eq!(
+                cq.read_tap(&m, li).unwrap(),
+                golden.layer_outs[li],
+                "layer {li} ({}) diverged",
+                cq.net.graph.layers[li].name()
+            );
+        }
+        assert_eq!(run.logits, golden.logits);
+        assert_eq!(run.argmax, golden.argmax);
+    }
+
+    #[test]
+    fn repeated_execution_is_bit_identical_on_pooled_machines() {
+        let net = QnnNet::from_seed(&QnnGraph::sparq_cnn(), w2a2(), 1).unwrap();
+        let cq = CompiledQnn::compile(&ProcessorConfig::sparq(), net).unwrap();
+        let pool = MachinePool::new();
+        let image = cq.net.test_image(3);
+        let mut m = pool.acquire(&cq.cfg, cq.mem_bytes);
+        let a = cq.execute_fresh(&mut m, &image).unwrap();
+        pool.release(m);
+        let mut m = pool.acquire(&cq.cfg, cq.mem_bytes);
+        let b = cq.execute_fresh(&mut m, &image).unwrap();
+        pool.release(m);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.total_cycles(), b.total_cycles());
+        assert_eq!(pool.stats().reused, 1);
+    }
+
+    #[test]
+    fn fp32_and_invalid_graphs_are_rejected() {
+        let g = QnnGraph::sparq_cnn();
+        assert!(matches!(
+            QnnNet::from_seed(&g, QnnPrecision::Fp32, 1),
+            Err(SimError::Unsupported(_))
+        ));
+        let mut bad = g.clone();
+        bad.input = (3, 16, 16);
+        assert!(matches!(QnnNet::from_seed(&bad, w2a2(), 1), Err(SimError::Graph(_))));
+    }
+
+    #[test]
+    fn different_seeds_give_different_weights_same_seed_identical() {
+        let g = QnnGraph::sparq_cnn();
+        let a = QnnNet::from_seed(&g, w2a2(), 10).unwrap();
+        let b = QnnNet::from_seed(&g, w2a2(), 10).unwrap();
+        let c = QnnNet::from_seed(&g, w2a2(), 11).unwrap();
+        assert_eq!(a.conv_wgt, b.conv_wgt);
+        assert_eq!(a.fc_wgt, b.fc_wgt);
+        assert_ne!(a.conv_wgt, c.conv_wgt);
+    }
+}

@@ -3,7 +3,7 @@
 //! same shapes and the integration tests cross-check them).
 
 /// One layer of the network.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerDesc {
     /// 'same' conv: C_in x H x W -> C_out x H x W with an FxF kernel.
     Conv { c_in: u32, c_out: u32, h: u32, w: u32, f: u32, quantized: bool },
@@ -34,6 +34,80 @@ impl LayerDesc {
             LayerDesc::MaxPool { .. } => "maxpool2".into(),
             LayerDesc::GapFc { .. } => "gap+fc".into(),
         }
+    }
+
+    /// (c, h, w) this layer consumes.
+    pub fn in_dims(&self) -> (u32, u32, u32) {
+        match *self {
+            LayerDesc::Conv { c_in, h, w, .. } => (c_in, h, w),
+            LayerDesc::MaxPool { c, h, w } => (c, h, w),
+            // GAP+FC consumes whatever spatial extent it is handed;
+            // validate() checks the channel count only
+            LayerDesc::GapFc { c, .. } => (c, 0, 0),
+        }
+    }
+
+    /// (c, h, w) this layer produces ('same' convs preserve h x w;
+    /// GAP+FC produces the logits vector).
+    pub fn out_dims(&self) -> (u32, u32, u32) {
+        match *self {
+            LayerDesc::Conv { c_out, h, w, .. } => (c_out, h, w),
+            LayerDesc::MaxPool { c, h, w } => (c, h / 2, w / 2),
+            LayerDesc::GapFc { classes, .. } => (classes, 1, 1),
+        }
+    }
+}
+
+/// Why a [`QnnGraph`] failed shape-chaining validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    Empty,
+    /// Layer `layer`'s declared input dims do not equal the previous
+    /// layer's output dims.
+    ShapeMismatch { layer: usize, expected: (u32, u32, u32), got: (u32, u32, u32) },
+    /// 2x2 pooling needs even spatial dims.
+    OddPool { layer: usize, h: u32, w: u32 },
+    /// 'same' convs need an odd kernel (symmetric border).
+    EvenKernel { layer: usize, f: u32 },
+    /// GAP+FC must be the final layer.
+    HeadNotLast { layer: usize },
+    /// The head's class count disagrees with the graph's.
+    ClassMismatch { head: u32, graph: u32 },
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            GraphError::Empty => write!(f, "graph has no layers"),
+            GraphError::ShapeMismatch { layer, expected, got } => write!(
+                f,
+                "layer {layer}: input dims {got:?} != previous layer's output {expected:?}"
+            ),
+            GraphError::OddPool { layer, h, w } => {
+                write!(f, "layer {layer}: 2x2 maxpool over odd dims {h}x{w}")
+            }
+            GraphError::EvenKernel { layer, f: k } => {
+                write!(f, "layer {layer}: 'same' conv needs an odd kernel, got {k}x{k}")
+            }
+            GraphError::HeadNotLast { layer } => {
+                write!(f, "layer {layer}: gap+fc must be the final layer")
+            }
+            GraphError::ClassMismatch { head, graph } => {
+                write!(f, "head produces {head} classes but the graph declares {graph}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// In-channel count the packed kernels actually run with: odd counts
+/// get one explicit always-zero channel (the stem's 1 -> 2).
+pub fn padded_c(c: u32) -> u32 {
+    if c % 2 == 1 {
+        c + 1
+    } else {
+        c
     }
 }
 
@@ -66,6 +140,50 @@ impl QnnGraph {
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(LayerDesc::macs).sum()
     }
+
+    /// Shape-chaining validation: every layer's declared input dims
+    /// must equal the previous layer's output dims (the graph input for
+    /// layer 0), pools need even spatial dims, 'same' convs odd
+    /// kernels, and the GAP+FC head must be last and agree on the
+    /// class count.  Before this check existed, mismatched graphs
+    /// scheduled silently against per-layer random tensors; the
+    /// dataflow compiler refuses them instead.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        if self.layers.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        let mut cur = self.input;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (ic, ih, iw) = layer.in_dims();
+            let expected_spatial = !matches!(layer, LayerDesc::GapFc { .. });
+            let got = if expected_spatial { (ic, ih, iw) } else { (ic, cur.1, cur.2) };
+            if got != cur {
+                return Err(GraphError::ShapeMismatch { layer: li, expected: cur, got });
+            }
+            match *layer {
+                LayerDesc::Conv { f, .. } if f % 2 == 0 => {
+                    return Err(GraphError::EvenKernel { layer: li, f });
+                }
+                LayerDesc::MaxPool { h, w, .. } if h % 2 != 0 || w % 2 != 0 => {
+                    return Err(GraphError::OddPool { layer: li, h, w });
+                }
+                LayerDesc::GapFc { classes, .. } => {
+                    if li != self.layers.len() - 1 {
+                        return Err(GraphError::HeadNotLast { layer: li });
+                    }
+                    if classes != self.classes {
+                        return Err(GraphError::ClassMismatch {
+                            head: classes,
+                            graph: self.classes,
+                        });
+                    }
+                }
+                _ => {}
+            }
+            cur = layer.out_dims();
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -87,5 +205,73 @@ mod tests {
         let g = QnnGraph::sparq_cnn();
         assert!(g.layers[0].name().contains("[stem]"));
         assert!(g.layers[1].name().contains("[sub-byte]"));
+    }
+
+    #[test]
+    fn sparq_cnn_validates() {
+        QnnGraph::sparq_cnn().validate().unwrap();
+    }
+
+    #[test]
+    fn mismatched_channels_rejected() {
+        let mut g = QnnGraph::sparq_cnn();
+        // conv2 claims 8 input channels; conv1 produces 16
+        g.layers[1] = LayerDesc::Conv { c_in: 8, c_out: 32, h: 16, w: 16, f: 3, quantized: true };
+        assert!(matches!(g.validate(), Err(GraphError::ShapeMismatch { layer: 1, .. })));
+    }
+
+    #[test]
+    fn mismatched_spatial_dims_rejected() {
+        let mut g = QnnGraph::sparq_cnn();
+        // conv3 claims the pre-pool 16x16 extent
+        g.layers[3] = LayerDesc::Conv { c_in: 32, c_out: 32, h: 16, w: 16, f: 3, quantized: true };
+        assert!(matches!(g.validate(), Err(GraphError::ShapeMismatch { layer: 3, .. })));
+    }
+
+    #[test]
+    fn input_mismatch_rejected_at_layer_zero() {
+        let mut g = QnnGraph::sparq_cnn();
+        g.input = (3, 16, 16);
+        assert!(matches!(g.validate(), Err(GraphError::ShapeMismatch { layer: 0, .. })));
+    }
+
+    #[test]
+    fn odd_pool_and_even_kernel_rejected() {
+        let g = QnnGraph {
+            layers: vec![LayerDesc::MaxPool { c: 2, h: 5, w: 4 }],
+            input: (2, 5, 4),
+            classes: 4,
+        };
+        assert!(matches!(g.validate(), Err(GraphError::OddPool { layer: 0, .. })));
+        let g = QnnGraph {
+            layers: vec![LayerDesc::Conv { c_in: 2, c_out: 4, h: 8, w: 8, f: 2, quantized: true }],
+            input: (2, 8, 8),
+            classes: 4,
+        };
+        assert!(matches!(g.validate(), Err(GraphError::EvenKernel { layer: 0, f: 2 })));
+    }
+
+    #[test]
+    fn head_position_and_classes_checked() {
+        let mut g = QnnGraph::sparq_cnn();
+        g.classes = 10;
+        assert_eq!(g.validate(), Err(GraphError::ClassMismatch { head: 4, graph: 10 }));
+        let g = QnnGraph {
+            layers: vec![
+                LayerDesc::GapFc { c: 2, classes: 4 },
+                LayerDesc::MaxPool { c: 4, h: 1, w: 1 },
+            ],
+            input: (2, 4, 4),
+            classes: 4,
+        };
+        assert!(matches!(g.validate(), Err(GraphError::HeadNotLast { layer: 0 })));
+    }
+
+    #[test]
+    fn empty_graph_rejected_and_odd_cin_padding_is_explicit() {
+        let g = QnnGraph { layers: vec![], input: (1, 1, 1), classes: 0 };
+        assert_eq!(g.validate(), Err(GraphError::Empty));
+        assert_eq!(padded_c(1), 2);
+        assert_eq!(padded_c(16), 16);
     }
 }

@@ -1,13 +1,22 @@
-//! The QNN graph (mirroring `python/compile/model.py`'s SparqCNN) and
-//! its layer-by-layer scheduling onto the Sparq simulator.
+//! The QNN graph (mirroring `python/compile/model.py`'s SparqCNN), the
+//! dataflow compiler that turns it into one chained multi-layer
+//! program ([`compiled`]), and the per-layer schedule readout.
 //!
-//! The serving stack uses this to attach *hardware* cost to every
-//! request: PJRT executes the numerics (the AOT artifact), while this
-//! module answers "how many Sparq cycles would this inference take",
-//! layer by layer, using the same kernel builders the benchmarks use.
+//! Since the end-to-end dataflow refactor, `schedule` is no longer a
+//! cost model stitched from independent random tensors: for sub-byte
+//! precisions it compiles the whole network once
+//! ([`compiled::CompiledQnn`], cached in the shared
+//! [`crate::kernels::ProgramCache`] under a graph-level key), runs ONE
+//! real inference — activations flowing layer to layer through a
+//! planned activation arena, maxpool and GAP+FC executed as
+//! instruction streams — and reads the per-layer cycles off that run.
+//! The serving stack classifies through the same compiled network
+//! ([`crate::runtime::SimQnnModel`]).
 
+pub mod compiled;
 pub mod graph;
 pub mod schedule;
 
-pub use graph::{LayerDesc, QnnGraph};
+pub use compiled::{CompiledQnn, GoldenTrace, QnnNet, QnnRun};
+pub use graph::{GraphError, LayerDesc, QnnGraph};
 pub use schedule::{schedule, LayerCycles, QnnSchedule};

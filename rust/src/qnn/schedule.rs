@@ -1,17 +1,33 @@
-//! Layer-by-layer scheduling of a QNN onto the simulated processor:
-//! every conv layer is built with the same kernel builders the
-//! benchmarks use and run through the cycle model.
+//! Per-layer schedule readout of the QNN.
 //!
-//! Padding note: the network uses 'same' convs; the kernel library
-//! computes 'valid' convs, so each layer is scheduled over its padded
-//! input (H+f-1), exactly what an im2row-free implementation does with
-//! a zero-padded buffer.
+//! For sub-byte precisions this is no longer a cost model: the whole
+//! network compiles once into a chained multi-layer program
+//! ([`crate::qnn::compiled::CompiledQnn`], cached in the shared
+//! [`ProgramCache`] under a graph-level key) and `schedule` runs ONE
+//! real end-to-end inference — activations flow layer to layer through
+//! the planned activation arena, zero-padding/requantize/maxpool/
+//! GAP+FC execute as instruction streams — then reads the per-layer
+//! cycles off that run.  Cycle counts are data-independent (the
+//! timing model sees the instruction stream and `vl`, not the
+//! values), so one inference IS the schedule.
+//!
+//! The fp32 baseline keeps the legacy per-layer estimate (Ara has no
+//! integer requantize path to chain through): conv layers run as
+//! independent workloads, pool/head cost one streaming pass.  Its
+//! per-layer workloads now derive from the same single graph-level
+//! seed as the dataflow path (no more `0x5EED + li` per-layer
+//! scatter).
 
 use crate::arch::ProcessorConfig;
 use crate::kernels::{run_conv_cached, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload};
 use crate::qnn::graph::{LayerDesc, QnnGraph};
 use crate::sim::{MachinePool, SimError};
+use crate::testutil::Gen;
 use crate::ulppack::RegionMode;
+
+/// The default graph-level weight seed (one seed derives every weight
+/// in the network; recorded in [`QnnSchedule::seed`]).
+pub const DEFAULT_QNN_SEED: u64 = 0x5EED_C0DE;
 
 /// Precision configuration for a scheduled network.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,6 +61,10 @@ pub struct QnnSchedule {
     pub precision: QnnPrecision,
     pub layers: Vec<LayerCycles>,
     pub processor: String,
+    /// The graph-level weight seed the scheduled network was built
+    /// from — reproducibility: `QnnNet::from_seed(graph, precision,
+    /// seed)` reconstructs the exact same network.
+    pub seed: u64,
 }
 
 impl QnnSchedule {
@@ -63,7 +83,7 @@ impl QnnSchedule {
 }
 
 /// Pick the conv variant a layer runs with under `precision`.
-fn variant_for(layer: &LayerDesc, precision: QnnPrecision) -> Option<ConvVariant> {
+pub(crate) fn variant_for(layer: &LayerDesc, precision: QnnPrecision) -> Option<ConvVariant> {
     match *layer {
         LayerDesc::Conv { quantized, .. } => Some(match precision {
             QnnPrecision::Fp32 => ConvVariant::Fp32,
@@ -79,15 +99,13 @@ fn variant_for(layer: &LayerDesc, precision: QnnPrecision) -> Option<ConvVariant
     }
 }
 
-/// Schedule one inference of `graph` at `precision` on `cfg`.
-///
-/// Non-conv layers (pool, GAP+FC) are costed as a single memory-bound
-/// vector pass over their activations (they are <2% of the MACs).
+/// Schedule one inference of `graph` at `precision` on `cfg` with the
+/// default graph-level weight seed.
 ///
 /// One-shot convenience over [`schedule_cached`] with a transient cache
 /// and pool; callers that re-schedule (serving, sweeps) should hold a
-/// shared [`ProgramCache`]/[`MachinePool`] and call the cached form so
-/// every layer's instruction stream is emitted exactly once.
+/// shared [`ProgramCache`]/[`MachinePool`] so the network compiles
+/// exactly once.
 pub fn schedule(
     cfg: &ProcessorConfig,
     graph: &QnnGraph,
@@ -97,9 +115,7 @@ pub fn schedule(
 }
 
 /// [`schedule`] through a shared compiled-program cache and machine
-/// pool: layer programs compile once per (dims, variant, processor,
-/// weights) and re-execute on reset pooled machines with identical
-/// cycle counts.
+/// pool, at the default seed.
 pub fn schedule_cached(
     cfg: &ProcessorConfig,
     graph: &QnnGraph,
@@ -107,20 +123,62 @@ pub fn schedule_cached(
     cache: &ProgramCache,
     pool: &MachinePool,
 ) -> Result<QnnSchedule, SimError> {
+    schedule_seeded(cfg, graph, precision, DEFAULT_QNN_SEED, cache, pool)
+}
+
+/// The full form: schedule `graph` with the network weights derived
+/// from `seed`.  Sub-byte precisions run the real end-to-end dataflow
+/// program; fp32 keeps the legacy per-layer estimate.
+pub fn schedule_seeded(
+    cfg: &ProcessorConfig,
+    graph: &QnnGraph,
+    precision: QnnPrecision,
+    seed: u64,
+    cache: &ProgramCache,
+    pool: &MachinePool,
+) -> Result<QnnSchedule, SimError> {
+    graph.validate().map_err(|e| SimError::Graph(e.to_string()))?;
+    match precision {
+        QnnPrecision::SubByte { .. } => {
+            let cq = cache.get_or_compile_qnn(cfg, graph, precision, seed)?;
+            let image = cq.net.test_image(seed ^ 0x1AA6E);
+            let mut m = pool.acquire(cfg, cq.mem_bytes);
+            let run = cq.execute_fresh(&mut m, &image);
+            pool.release(m);
+            let run = run?;
+            Ok(QnnSchedule {
+                precision,
+                layers: cq.layer_cycles(&run),
+                processor: cfg.name.clone(),
+                seed,
+            })
+        }
+        QnnPrecision::Fp32 => schedule_fp32_legacy(cfg, graph, seed, cache, pool),
+    }
+}
+
+/// The pre-dataflow cost model, kept for the fp32 baseline only: conv
+/// layers as independent workloads (weights from the one graph seed),
+/// pool/head as a single memory-bound streaming pass.
+fn schedule_fp32_legacy(
+    cfg: &ProcessorConfig,
+    graph: &QnnGraph,
+    seed: u64,
+    cache: &ProgramCache,
+    pool: &MachinePool,
+) -> Result<QnnSchedule, SimError> {
     let mut layers = Vec::new();
-    for (li, layer) in graph.layers.iter().enumerate() {
-        match variant_for(layer, precision) {
+    let mut seeds = Gen::new(seed);
+    for layer in graph.layers.iter() {
+        match variant_for(layer, QnnPrecision::Fp32) {
             Some(variant) => {
                 let LayerDesc::Conv { c_in, c_out, h, w, f, .. } = *layer else { unreachable!() };
-                // 'same' padding -> schedule the padded 'valid' problem.
-                // in-channels are padded to even for the packed kernels
-                // (the python model's channel counts are already even
-                // except the 1-channel stem, which runs int16 anyway).
-                let c = if c_in % 2 == 1 { c_in + 1 } else { c_in };
-                let dims =
-                    ConvDims { c, h: h + f - 1, w: w + f - 1, co: c_out, fh: f, fw: f };
+                // 'same' padding -> schedule the padded 'valid' problem;
+                // odd in-channel counts get the explicit zero channel
+                let c = super::graph::padded_c(c_in);
+                let dims = ConvDims { c, h: h + f - 1, w: w + f - 1, co: c_out, fh: f, fw: f };
                 let (wb, ab) = variant.bits();
-                let wl = Workload::random(dims, wb, ab, 0x5EED + li as u64);
+                let wl = Workload::random(dims, wb, ab, seeds.next_u64());
                 let report =
                     run_conv_cached(cache, pool, cfg, &wl, variant, EngineOpts::default())?;
                 layers.push(LayerCycles {
@@ -132,9 +190,11 @@ pub fn schedule_cached(
             }
             None => {
                 // one streaming pass over the activations at the vector
-                // engine's memory bandwidth
+                // engine's memory bandwidth (4 B/element: this estimate
+                // is fp32-only now, so the former int16-flavoured 2 B
+                // per pooled element was off by half)
                 let bytes = match *layer {
-                    LayerDesc::MaxPool { c, h, w } => (c * h * w * 2) as u64,
+                    LayerDesc::MaxPool { c, h, w } => (c * h * w * 4) as u64,
                     LayerDesc::GapFc { c, .. } => (c * 64) as u64,
                     _ => unreachable!(),
                 };
@@ -149,7 +209,7 @@ pub fn schedule_cached(
             }
         }
     }
-    Ok(QnnSchedule { precision, layers, processor: cfg.name.clone() })
+    Ok(QnnSchedule { precision: QnnPrecision::Fp32, layers, processor: cfg.name.clone(), seed })
 }
 
 #[cfg(test)]
@@ -168,6 +228,14 @@ mod tests {
         assert_eq!(s.layers.len(), g.layers.len());
         assert!(s.total_cycles() > 0);
         assert_eq!(s.total_macs(), g.total_macs());
+        assert_eq!(s.seed, DEFAULT_QNN_SEED);
+        // dataflow, not estimate: the pool and head layers carry real
+        // executed vector streams now
+        let pool_row = s.layers.iter().find(|l| l.name == "maxpool2").unwrap();
+        assert_eq!(pool_row.variant, "maxpool2-vec");
+        let head = s.layers.iter().find(|l| l.name == "gap+fc").unwrap();
+        assert_eq!(head.variant, "gap+fc-vec");
+        assert!(pool_row.cycles > 0 && head.cycles > 0);
     }
 
     #[test]
@@ -195,6 +263,19 @@ mod tests {
     }
 
     #[test]
+    fn invalid_graph_rejected_before_scheduling() {
+        let mut g = QnnGraph::sparq_cnn();
+        g.layers[1] =
+            crate::qnn::LayerDesc::Conv { c_in: 8, c_out: 32, h: 16, w: 16, f: 3, quantized: true };
+        let r = schedule(
+            &ProcessorConfig::sparq(),
+            &g,
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+        );
+        assert!(matches!(r, Err(SimError::Graph(_))), "mismatched graphs must not schedule");
+    }
+
+    #[test]
     fn cached_reschedule_is_identical_and_hits() {
         let g = QnnGraph::sparq_cnn();
         let cfg = ProcessorConfig::sparq();
@@ -212,6 +293,25 @@ mod tests {
         let cold = schedule(&cfg, &g, prec).unwrap();
         assert_eq!(a.total_cycles(), cold.total_cycles());
         assert!(pool.stats().reused > 0);
+    }
+
+    #[test]
+    fn seed_changes_weights_but_schedule_shape_survives() {
+        let g = QnnGraph::sparq_cnn();
+        let cfg = ProcessorConfig::sparq();
+        let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let cache = ProgramCache::new();
+        let pool = MachinePool::new();
+        let a = schedule_seeded(&cfg, &g, prec, 1, &cache, &pool).unwrap();
+        let b = schedule_seeded(&cfg, &g, prec, 2, &cache, &pool).unwrap();
+        assert_eq!(a.seed, 1);
+        assert_eq!(b.seed, 2);
+        assert_eq!(a.layers.len(), b.layers.len());
+        // same graph, same instruction shapes -> identical cycles even
+        // though the weights differ (timing is data-independent)
+        assert_eq!(a.total_cycles(), b.total_cycles());
+        // two seeds = two distinct cached networks
+        assert_eq!(cache.stats().misses, 2);
     }
 
     #[test]

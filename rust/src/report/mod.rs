@@ -327,20 +327,22 @@ pub fn render_table1(rows: &[(String, f64, f64)]) -> String {
     s
 }
 
-/// The QNN cycle schedule table (per-layer simulated cost).
+/// The QNN cycle schedule table (per-layer cost read off one real
+/// end-to-end dataflow run for sub-byte precisions).
 pub fn render_schedule(s: &crate::qnn::QnnSchedule, fmax_ghz: f64) -> String {
     let mut out = format!(
-        "QNN schedule — {} at {} on {}\n{:<26} {:>12} {:>12} {:>14}\n",
-        QnnGraph::sparq_cnn().layers.len(),
+        "QNN schedule — {} layers at {} on {} (weight seed {:#x})\n{:<26} {:>12} {:>12} {:>22}\n",
+        s.layers.len(),
         s.precision.label(),
         s.processor,
+        s.seed,
         "layer",
         "cycles",
         "macs",
         "variant"
     );
     for l in &s.layers {
-        out += &format!("{:<26} {:>12} {:>12} {:>14}\n", l.name, l.cycles, l.macs, l.variant);
+        out += &format!("{:<26} {:>12} {:>12} {:>22}\n", l.name, l.cycles, l.macs, l.variant);
     }
     out += &format!(
         "total: {} cycles/image -> {:.0} images/s at {:.3} GHz\n",
@@ -351,12 +353,32 @@ pub fn render_schedule(s: &crate::qnn::QnnSchedule, fmax_ghz: f64) -> String {
     out
 }
 
-/// Re-export for the schedule driver.
+/// Re-export for the schedule driver: one-shot schedule of the
+/// SparqCNN (sub-byte precisions run the real end-to-end dataflow
+/// program; see `qnn::schedule`).
 pub fn qnn_schedule(
     cfg: &ProcessorConfig,
     precision: QnnPrecision,
 ) -> Result<crate::qnn::QnnSchedule, SimError> {
     schedule(cfg, &QnnGraph::sparq_cnn(), precision)
+}
+
+/// [`qnn_schedule`] against a caller-held [`SweepCtx`]: the compiled
+/// network is fetched from the shared cache (graph-level key) and the
+/// readout inference runs on a pooled machine — warm reruns compile
+/// nothing.
+pub fn qnn_schedule_with(
+    ctx: &SweepCtx,
+    cfg: &ProcessorConfig,
+    precision: QnnPrecision,
+) -> Result<crate::qnn::QnnSchedule, SimError> {
+    crate::qnn::schedule::schedule_cached(
+        cfg,
+        &QnnGraph::sparq_cnn(),
+        precision,
+        &ctx.cache,
+        &ctx.pool,
+    )
 }
 
 #[cfg(test)]
@@ -457,6 +479,20 @@ mod tests {
             let seq = run_conv(cfg, &wl, variant).unwrap();
             assert_eq!(row.cycles, seq.report.stats.cycles, "{} diverged", row.label);
         }
+    }
+
+    #[test]
+    fn warm_qnn_schedule_is_all_hits_and_identical() {
+        let ctx = SweepCtx::new();
+        let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let cold = qnn_schedule_with(&ctx, &ProcessorConfig::sparq(), prec).unwrap();
+        let misses = ctx.cache.stats().misses;
+        let warm = qnn_schedule_with(&ctx, &ProcessorConfig::sparq(), prec).unwrap();
+        assert_eq!(ctx.cache.stats().misses, misses, "warm qnn schedule recompiled");
+        assert_eq!(cold.total_cycles(), warm.total_cycles());
+        let rendered = render_schedule(&cold, 1.464);
+        assert!(rendered.contains("maxpool2-vec") && rendered.contains("gap+fc-vec"));
+        assert!(rendered.contains("weight seed"));
     }
 
     #[test]

@@ -16,11 +16,13 @@
 //!   for the real backend and is a `compile_error!` until it lands.
 //!
 //! * **Simulator** ([`simconv`], always available): compiles a sub-byte
-//!   conv2d once through the program cache and serves repeated
-//!   inferences on pooled machines — the compile-once/execute-many
-//!   runtime the coordinator's `SimConvExecutor` and the `sparq serve`
-//!   fallback use.  No artifacts, no python, bit-exact against the
-//!   golden models.
+//!   conv2d ([`SimConvModel`]) or the whole SparqCNN as one chained
+//!   dataflow program ([`SimQnnModel`] over
+//!   [`crate::qnn::compiled::CompiledQnn`]) once through the program
+//!   cache and serves repeated inferences on pooled machines — the
+//!   compile-once/execute-many runtime the coordinator's executors and
+//!   the `sparq serve` fallback use.  No artifacts, no python,
+//!   bit-exact against the golden models.
 
 // The feature exists as the designated slot for the PJRT backend, but
 // the backend itself is not in-tree (it needs the non-vendored `xla`
@@ -38,7 +40,7 @@ pub mod simconv;
 pub mod testset;
 
 pub use manifest::{Artifact, Manifest};
-pub use simconv::SimConvModel;
+pub use simconv::{SimConvModel, SimQnnModel};
 pub use testset::TestSet;
 
 use std::fmt;

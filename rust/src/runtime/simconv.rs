@@ -1,18 +1,23 @@
-//! The simulator-backed conv "model": the artifact of the offline
-//! build is a [`CompiledConv`] — compiled once (through a shared
-//! [`ProgramCache`]) and executed many times on pooled machines.  This
-//! is the runtime the serving coordinator's `SimConvExecutor` drives:
-//! real sub-byte conv2d numerics, bit-exact against the golden models
-//! in `kernels::workload`, with no PJRT artifacts and no python.
-//! Every `infer` runs the cached *micro-op* form of the program
+//! The simulator-backed models: a single conv ([`SimConvModel`]) and —
+//! since the dataflow refactor — the whole network
+//! ([`SimQnnModel`]), both compiled once (through a shared
+//! [`ProgramCache`]) and executed many times on pooled machines.
+//! These are the runtimes the serving coordinator's executors drive:
+//! real sub-byte numerics, bit-exact against the golden models
+//! (`kernels::workload` for the conv, `qnn::QnnNet::golden_forward`
+//! for the network), with no PJRT artifacts and no python.  Every
+//! `infer` runs the cached *micro-op* form of the program
 //! (`sim::CompiledProgram`, DESIGN.md §Perf): legality was validated
 //! at compile time and the inner loops execute word-parallel, so the
-//! per-request host cost is rebind + SWAR execution only.
+//! per-request host cost is input staging + SWAR execution only.
 
 use crate::arch::ProcessorConfig;
 use crate::kernels::{
     CompiledConv, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload,
 };
+use crate::qnn::compiled::CompiledQnn;
+use crate::qnn::graph::QnnGraph;
+use crate::qnn::schedule::QnnPrecision;
 use crate::sim::{MachinePool, RunReport, SimError};
 use crate::ulppack::act_level_max;
 use std::sync::Arc;
@@ -110,6 +115,66 @@ impl SimConvModel {
     }
 }
 
+/// A compiled, weight-frozen *whole network* ready to serve
+/// classification requests: the QnnGraph compiled once into a chained
+/// multi-layer program over a planned activation arena
+/// ([`CompiledQnn`]), fetched from the shared [`ProgramCache`] under
+/// its graph-level key.  Each request stages fresh activations into
+/// the arena; logits come straight out of it.
+pub struct SimQnnModel {
+    pub cq: Arc<CompiledQnn>,
+    pub cfg: ProcessorConfig,
+    amax: u64,
+}
+
+impl SimQnnModel {
+    /// Compile (or fetch from `cache`) the whole network.  The weights
+    /// derive from the one graph-level `seed` (standing in for a
+    /// trained checkpoint, as everywhere else in the reproduction).
+    pub fn compile(
+        cfg: &ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+        cache: &ProgramCache,
+    ) -> Result<SimQnnModel, SimError> {
+        let cq = cache.get_or_compile_qnn(cfg, graph, precision, seed)?;
+        let amax = act_level_max(cq.net.a_bits());
+        Ok(SimQnnModel { cq, cfg: cfg.clone(), amax })
+    }
+
+    /// Input image length (c * h * w levels, channel-first).
+    pub fn input_len(&self) -> usize {
+        self.cq.net.input_len()
+    }
+
+    pub fn classes(&self) -> usize {
+        self.cq.net.graph.classes as usize
+    }
+
+    /// Clamp + round one f32 into the activation level range.
+    pub fn quantize_level(&self, v: f32) -> u64 {
+        quantize(v, self.amax)
+    }
+
+    /// Run one full-network inference: quantize `input` to levels,
+    /// stage it into a pooled machine's arena, run every chained layer
+    /// stream, and read the logits back.  Returns (logits, total
+    /// simulated cycles of this inference).
+    pub fn infer(&self, pool: &MachinePool, input: &[f32]) -> Result<(Vec<i64>, u64), SimError> {
+        if input.len() != self.input_len() {
+            return Err(SimError::Unsupported("input length != c*h*w"));
+        }
+        let levels: Vec<u64> = input.iter().map(|&v| quantize(v, self.amax)).collect();
+        let mut m = pool.acquire(&self.cfg, self.cq.mem_bytes);
+        // acquire() already reset the machine
+        let result = self.cq.execute_fresh(&mut m, &levels);
+        pool.release(m);
+        let run = result?;
+        Ok((run.logits, run.total_cycles()))
+    }
+}
+
 /// Clamp + round one f32 into `[0, amax]` levels (NaN -> 0).  Shared
 /// by the inference rebind loop and the public `quantize_level`.
 fn quantize(v: f32, amax: u64) -> u64 {
@@ -194,5 +259,35 @@ mod tests {
             &cache,
         )
         .is_err());
+    }
+
+    #[test]
+    fn qnn_model_serves_the_golden_network() {
+        use crate::qnn::QnnGraph;
+        use crate::qnn::schedule::QnnPrecision;
+        let cache = ProgramCache::new();
+        let model = SimQnnModel::compile(
+            &ProcessorConfig::sparq(),
+            &QnnGraph::sparq_cnn(),
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+            0xFEED,
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(model.input_len(), 256);
+        assert_eq!(model.classes(), 4);
+        let pool = MachinePool::new();
+        let input: Vec<f32> = (0..model.input_len()).map(|i| (i % 4) as f32).collect();
+        let (logits, cycles) = model.infer(&pool, &input).unwrap();
+        assert!(cycles > 0);
+        // bit-exact against the host golden network on the quantized image
+        let levels: Vec<u64> = input.iter().map(|&v| model.quantize_level(v)).collect();
+        let golden = model.cq.net.golden_forward(&levels).unwrap();
+        assert_eq!(logits, golden.logits);
+        // repeated inference: identical logits and cycles, pooled machine
+        let (l2, c2) = model.infer(&pool, &input).unwrap();
+        assert_eq!(l2, logits);
+        assert_eq!(c2, cycles);
+        assert_eq!(pool.stats().reused, 1);
     }
 }

@@ -96,7 +96,9 @@ pub(crate) fn scalar_op(op: VOp, a: u64, x: u64, d: u64, sew: Sew, shift: u32) -
             let prod = f32::from_bits(a as u32) * f32::from_bits(x as u32);
             (f32::from_bits(d as u32) + prod).to_bits() as u64
         }
-        VOp::WAdduWv | VOp::SlideDown | VOp::SlideUp => unreachable!("handled separately"),
+        VOp::WAdduWv | VOp::NSrl | VOp::SlideDown | VOp::SlideUp => {
+            unreachable!("handled separately")
+        }
     }
 }
 
@@ -134,8 +136,12 @@ pub(crate) fn check_alignment(inst: &VInst, st: &ExecState) -> Result<(), SimErr
         let df = if inst.vop() == Some(VOp::WAdduWv) { f * 2 } else { f };
         check(vd, df)?;
     }
+    // narrowing ops read vs2 as a 2*LMUL-wide group (the dual of
+    // vwaddu.wv's wide destination); their builders only use the
+    // .wx/.wi forms, so every source register is the wide vs2
+    let sf = if inst.vop() == Some(VOp::NSrl) { f * 2 } else { f };
     for s in inst.srcs() {
-        check(s, f)?;
+        check(s, sf)?;
     }
     Ok(())
 }
@@ -205,8 +211,10 @@ fn execute_impl(
         VInst::OpVI { op, vd, vs2, imm } => {
             check_legal(op, cfg, st)?;
             check_alignment(inst, st)?;
-            let x = if matches!(op, VOp::Sll | VOp::Srl | VOp::Sra | VOp::SlideDown | VOp::SlideUp)
-            {
+            let x = if matches!(
+                op,
+                VOp::Sll | VOp::Srl | VOp::Sra | VOp::NSrl | VOp::SlideDown | VOp::SlideUp
+            ) {
                 imm as u8 as u64 // uimm5
             } else {
                 trunc(imm as i64 as u64, st.vtype.sew) // simm5, truncated at SEW
@@ -266,6 +274,24 @@ fn exec_arith(
                     let v = vrf.get(vs2, (i as u64 - off) as u32, sew);
                     vrf.set(vd, i, sew, v);
                 }
+            }
+            Ok(vl as u64)
+        }
+        VOp::NSrl => {
+            // vd(SEW)[i] = vs2(2*SEW)[i] >> sh — the builders use the
+            // .wx/.wi forms only (shift is a static stream constant)
+            let wide = sew.widened().ok_or(SimError::Unsupported("vnsrl at SEW=64"))?;
+            let sh = match src {
+                Src::Scalar(x) => x & (2 * sew.bits() as u64 - 1),
+                Src::Vec(_) => return Err(SimError::Unsupported("vnsrl .wv form")),
+            };
+            // ascending element order — the defined semantic all three
+            // engines share (for vd == vs2, the narrow write i ends at
+            // (i+1)*eb <= the next wide read's start (i+1)*2*eb, so the
+            // low-half overlap RVV allows is exact)
+            for i in 0..vl {
+                let a = vrf.get(vs2, i, wide);
+                vrf.set(vd, i, sew, trunc(a >> sh, sew));
             }
             Ok(vl as u64)
         }
@@ -551,6 +577,44 @@ mod tests {
         for i in 0..3 {
             assert_eq!(vrf.get(8, i, Sew::E32), 10 + 0xFFFF);
         }
+    }
+
+    #[test]
+    fn nsrl_narrows_wide_pairs() {
+        // the deinterleave idiom: at SEW=E16, vs2 is an E32 view; shift
+        // 0 extracts even E16 elements, shift 16 the odd ones
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        setvl(&mut st, &vrf, 4, Sew::E16);
+        for i in 0..8 {
+            vrf.set(8, i, Sew::E16, 100 + i as u64);
+        }
+        let even = VInst::OpVI { op: VOp::NSrl, vd: 0, vs2: 8, imm: 0 };
+        execute(&even, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        let odd = VInst::OpVI { op: VOp::NSrl, vd: 2, vs2: 8, imm: 16 };
+        execute(&odd, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        for i in 0..4 {
+            assert_eq!(vrf.get(0, i, Sew::E16), 100 + 2 * i as u64);
+            assert_eq!(vrf.get(2, i, Sew::E16), 101 + 2 * i as u64);
+        }
+        // true narrowing: a wide value's high half is dropped at shift 0
+        vrf.set(8, 0, Sew::E32, 0xABCD_1234);
+        execute(&even, &cfg, &mut st, &mut vrf, &mut mem).unwrap();
+        assert_eq!(vrf.get(0, 0, Sew::E16), 0x1234);
+        // .wv form is not modelled (builders use static shift amounts)
+        let vv = VInst::OpVV { op: VOp::NSrl, vd: 0, vs2: 8, vs1: 4 };
+        assert!(execute(&vv, &cfg, &mut st, &mut vrf, &mut mem).is_err());
+    }
+
+    #[test]
+    fn nsrl_misaligned_wide_source_traps() {
+        let (cfg, mut st, mut vrf, mut mem) = setup();
+        setvl(&mut st, &vrf, 4, Sew::E16);
+        // vs2 must be aligned to the 2*LMUL wide group
+        let i = VInst::OpVI { op: VOp::NSrl, vd: 0, vs2: 9, imm: 0 };
+        assert!(matches!(
+            execute(&i, &cfg, &mut st, &mut vrf, &mut mem),
+            Err(SimError::Misaligned { reg: 9, .. })
+        ));
     }
 
     #[test]

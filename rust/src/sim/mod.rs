@@ -43,6 +43,9 @@ pub enum SimError {
     /// A kernel builder constructed an instruction with no machine
     /// encoding (surfaced as a `Result` instead of a builder panic).
     Encode(EncodeError),
+    /// A QNN graph failed shape-chaining validation (`QnnGraph::
+    /// validate`): the dataflow compiler refuses to schedule it.
+    Graph(String),
 }
 
 impl fmt::Display for SimError {
@@ -67,6 +70,7 @@ impl fmt::Display for SimError {
             }
             SimError::Unsupported(what) => write!(f, "unsupported by this model: {what}"),
             SimError::Encode(ref e) => write!(f, "unencodable instruction: {e}"),
+            SimError::Graph(ref m) => write!(f, "invalid qnn graph: {m}"),
         }
     }
 }
@@ -256,18 +260,20 @@ impl Machine {
                 } else {
                     Unit::Valu
                 };
-                // widening ops move dest-width data
-                let ebytes = if op == VOp::WAdduWv {
+                // widening/narrowing ops move wide-width data
+                let ebytes = if op == VOp::WAdduWv || op == VOp::NSrl {
                     sew.widened().map(Sew::bytes).unwrap_or(8) as u64
                 } else {
                     sew.bytes() as u64
                 };
                 let dst_regs = if op == VOp::WAdduWv { lmul * 2 } else { lmul };
+                // narrowing ops read vs2 as a 2*LMUL group
+                let src_regs = if op == VOp::NSrl { lmul * 2 } else { lmul };
                 let mut buf = [0u8; 3];
                 let n = inst.srcs_into(&mut buf);
                 let mut srcs = [(0u8, 0u32); 3];
                 for (i, &r) in buf[..n].iter().enumerate() {
-                    srcs[i] = (r, lmul);
+                    srcs[i] = (r, src_regs);
                 }
                 let dst = inst.vd().map(|d| (d, dst_regs));
                 let busy = vl * ebytes;

@@ -143,6 +143,9 @@ enum Exec {
     MulLane { op: MulOp, sew: Sew, dst: usize, a: usize, x: Operand, shift: Shift, len: usize },
     /// `vwaddu.wv`: widening add-accumulate in reference element order.
     Wadd { dst: usize, src: usize, sew: Sew, vl: u32 },
+    /// `vnsrl.w{x,i}`: narrowing shift in reference element order
+    /// (shift amount resolved at compile time).
+    Nsrl { dst: usize, src: usize, sew: Sew, vl: u32, sh: u32 },
     /// Monomorphic per-element fallback over [`exec::scalar_op`].
     Gen { op: VOp, sew: Sew, vl: u32, dst: usize, a: usize, x: Operand, eb: usize, shift: Shift, reads_vd: bool },
 }
@@ -382,8 +385,10 @@ fn lower(
         VInst::OpVI { op, vd, vs2, imm } => {
             exec::check_legal(op, cfg, st)?;
             exec::check_alignment(inst, st)?;
-            let x = if matches!(op, VOp::Sll | VOp::Srl | VOp::Sra | VOp::SlideDown | VOp::SlideUp)
-            {
+            let x = if matches!(
+                op,
+                VOp::Sll | VOp::Srl | VOp::Sra | VOp::NSrl | VOp::SlideDown | VOp::SlideUp
+            ) {
                 imm as u8 as u64 // uimm5
             } else {
                 exec::trunc(imm as i64 as u64, st.vtype.sew) // simm5 at SEW
@@ -406,17 +411,19 @@ fn arith_acct(inst: &VInst, op: VOp, st: &ExecState, bpc: u64) -> Acct {
     } else {
         Unit::Valu
     };
-    let ebytes = if op == VOp::WAdduWv {
+    let ebytes = if op == VOp::WAdduWv || op == VOp::NSrl {
         sew.widened().map(Sew::bytes).unwrap_or(8) as u64
     } else {
         sew.bytes() as u64
     };
     let dst_regs = if op == VOp::WAdduWv { lmul * 2 } else { lmul };
+    // narrowing ops read vs2 as a 2*LMUL group (dual of the wide dst)
+    let src_regs = if op == VOp::NSrl { lmul * 2 } else { lmul };
     let mut buf = [0u8; 3];
     let n = inst.srcs_into(&mut buf);
     let mut srcs = [(0u8, 0u32); 3];
     for (i, &r) in buf[..n].iter().enumerate() {
-        srcs[i] = (r, lmul);
+        srcs[i] = (r, src_regs);
     }
     let busy = vl * ebytes;
     Acct::Vec {
@@ -505,6 +512,16 @@ fn lower_arith(
                 return Err(SimError::Unsupported("vwaddu.wv at SEW=64"));
             }
             done(Exec::Wadd { dst, src: a, sew, vl })
+        }
+        VOp::NSrl => {
+            if sew.widened().is_none() {
+                return Err(SimError::Unsupported("vnsrl at SEW=64"));
+            }
+            let sh = match src {
+                RawSrc::Scalar(x) => (x & (2 * sew.bits() as u64 - 1)) as u32,
+                RawSrc::Vec(_) => return Err(SimError::Unsupported("vnsrl .wv form")),
+            };
+            done(Exec::Nsrl { dst, src: a, sew, vl, sh })
         }
         VOp::Mv => match src {
             RawSrc::Scalar(x) => {
@@ -847,6 +864,10 @@ fn exec_uop(e: &Exec, st: &mut ExecState, vrf: &mut Vrf, mem: &mut Mem) -> Resul
             let b = vrf.flat_mut();
             exec_wadd(b, dst, src, sew, vl);
         }
+        Exec::Nsrl { dst, src, sew, vl, sh } => {
+            let b = vrf.flat_mut();
+            exec_nsrl(b, dst, src, sew, vl, sh);
+        }
         Exec::Gen { op, sew, vl, dst, a, x, eb, shift, reads_vd } => {
             let b = vrf.flat_mut();
             let sh = shift.resolve(st, sew);
@@ -930,6 +951,29 @@ fn exec_mul_lane(b: &mut [u8], op: MulOp, sew: Sew, dst: usize, a: usize, x: Ope
         Sew::E16 => per_op!(u16, 2),
         Sew::E32 => per_op!(u32, 4),
         Sew::E64 => per_op!(u64, 8),
+    }
+}
+
+/// `vnsrl.w{x,i}` in reference element order, monomorphic per SEW pair
+/// (ascending: narrow write `i` never clobbers a wide read `j > i`).
+fn exec_nsrl(b: &mut [u8], dst: usize, src: usize, sew: Sew, vl: u32, sh: u32) {
+    macro_rules! nsrl {
+        ($n:ty, $w:ty, $eb:expr) => {{
+            let eb: usize = $eb;
+            for i in 0..vl as usize {
+                let wo = src + i * 2 * eb;
+                let no = dst + i * eb;
+                let a = <$w>::from_le_bytes(b[wo..wo + 2 * eb].try_into().unwrap());
+                let v = (a >> sh) as $n;
+                b[no..no + eb].copy_from_slice(&v.to_le_bytes());
+            }
+        }};
+    }
+    match sew {
+        Sew::E8 => nsrl!(u8, u16, 1),
+        Sew::E16 => nsrl!(u16, u32, 2),
+        Sew::E32 => nsrl!(u32, u64, 4),
+        Sew::E64 => unreachable!("rejected at compile"),
     }
 }
 

@@ -92,6 +92,7 @@ fn arith(g: &mut Gen, st: &VState) -> VInst {
     }
     if st.sew != Sew::E64 {
         ops.push(VOp::WAdduWv);
+        ops.push(VOp::NSrl);
     }
     ops.extend([VOp::SlideDown, VOp::SlideUp]);
     let op = *g.pick(&ops);
@@ -102,6 +103,17 @@ fn arith(g: &mut Gen, st: &VState) -> VInst {
         let df = 2 * f;
         let vd = reg(g, df);
         return VInst::OpVV { op, vd, vs2, vs1: reg(g, f) };
+    }
+    if op == VOp::NSrl {
+        // vs2 is the 2*LMUL wide group; .wx/.wi only (static shift) —
+        // vd may overlap the wide source, the ascending order must hold
+        let vs2 = reg(g, 2 * f);
+        let sh = g.below(2 * st.sew.bits() as u64);
+        return if g.bool() && sh < 32 {
+            VInst::OpVI { op, vd, vs2, imm: sh as i8 }
+        } else {
+            VInst::OpVX { op, vd, vs2, rs1: if g.bool() { sh } else { g.next_u64() } }
+        };
     }
     if op.is_slide() {
         // .vx/.vi only (no .vv form); vslideup forbids vd == vs2

@@ -1,0 +1,182 @@
+//! Property test pinning the ISA against drift: for EVERY `VOp`
+//! variant (enumerated through an exhaustive `match` — adding an op
+//! without extending this test fails to compile) and every encodable
+//! operand form, `encode -> decode -> encode` must be a fixpoint,
+//! `decode` must reproduce the instruction modulo dynamic fields
+//! (addresses / scalar values / AVL, which live in scalar registers on
+//! real hardware), and `disasm` must render the op's mnemonic for
+//! both the original and the decoded instruction.
+
+use sparq::isa::{decode, disasm, encode, Lmul, Sew, VInst, VOp};
+use sparq::testutil::Prop;
+
+/// Every `VOp`, via an exhaustive match (the drift pin).
+fn all_vops() -> Vec<VOp> {
+    let known = [
+        VOp::Add,
+        VOp::Sub,
+        VOp::And,
+        VOp::Or,
+        VOp::Xor,
+        VOp::Sll,
+        VOp::Srl,
+        VOp::Sra,
+        VOp::Min,
+        VOp::Max,
+        VOp::Mv,
+        VOp::WAdduWv,
+        VOp::NSrl,
+        VOp::Mul,
+        VOp::Mulh,
+        VOp::Mulhu,
+        VOp::Macc,
+        VOp::Nmsac,
+        VOp::Macsr,
+        VOp::MacsrCfg,
+        VOp::FAdd,
+        VOp::FMul,
+        VOp::FMacc,
+        VOp::SlideDown,
+        VOp::SlideUp,
+    ];
+    // exhaustiveness: a new VOp variant makes this match non-exhaustive
+    for op in known {
+        match op {
+            VOp::Add
+            | VOp::Sub
+            | VOp::And
+            | VOp::Or
+            | VOp::Xor
+            | VOp::Sll
+            | VOp::Srl
+            | VOp::Sra
+            | VOp::Min
+            | VOp::Max
+            | VOp::Mv
+            | VOp::WAdduWv
+            | VOp::NSrl
+            | VOp::Mul
+            | VOp::Mulh
+            | VOp::Mulhu
+            | VOp::Macc
+            | VOp::Nmsac
+            | VOp::Macsr
+            | VOp::MacsrCfg
+            | VOp::FAdd
+            | VOp::FMul
+            | VOp::FMacc
+            | VOp::SlideDown
+            | VOp::SlideUp => {}
+        }
+    }
+    known.to_vec()
+}
+
+/// Ops with a .vi (OPIVI) encoding.
+fn has_vi(op: VOp) -> bool {
+    // the OPI space is exactly the set with immediate forms
+    sparq::isa::encode::funct6_opi(op).is_some()
+}
+
+fn check_roundtrip(inst: VInst) {
+    let Ok(word) = encode(&inst) else {
+        panic!("{inst}: constructible form must encode");
+    };
+    let back = decode(word).unwrap_or_else(|e| panic!("{inst} ({word:#010x}): {e}"));
+    // encode(decode(encode(i))) == encode(i): the fixpoint
+    assert_eq!(encode(&back).unwrap(), word, "{inst}: encode/decode not a fixpoint");
+    // register and immediate fields survive; dynamic fields decode to
+    // 0, and vmv.v.* hard-wires vs2 to v0 in the word (vmerge vm=1)
+    let vs2_of = |op: VOp, vs2: u8| if op == VOp::Mv { 0 } else { vs2 };
+    match (inst, back) {
+        (VInst::OpVV { op, vd, vs2, vs1 }, VInst::OpVV { op: o2, vd: d2, vs2: s2, vs1: s1 }) => {
+            assert_eq!((op, vd, vs2_of(op, vs2), vs1), (o2, d2, s2, s1), "{inst}");
+        }
+        (VInst::OpVX { op, vd, vs2, .. }, VInst::OpVX { op: o2, vd: d2, vs2: s2, rs1 }) => {
+            assert_eq!((op, vd, vs2_of(op, vs2), 0u64), (o2, d2, s2, rs1), "{inst}");
+        }
+        (VInst::OpVI { op, vd, vs2, imm }, VInst::OpVI { op: o2, vd: d2, vs2: s2, imm: i2 }) => {
+            assert_eq!((op, vd, vs2_of(op, vs2), imm), (o2, d2, s2, i2), "{inst}");
+        }
+        (a, b) => panic!("{a} decoded to a different form: {b}"),
+    }
+    // disassembly names the op for both the original and the decoded
+    let m = inst.vop().unwrap().mnemonic();
+    assert!(disasm(&inst).starts_with(m), "disasm({inst}) missing mnemonic {m}");
+    assert!(disasm(&back).starts_with(m), "disasm(decoded {back}) missing mnemonic {m}");
+}
+
+#[test]
+fn every_vop_roundtrips_in_every_encodable_form() {
+    for op in all_vops() {
+        check_roundtrip(VInst::OpVV { op, vd: 1, vs2: 2, vs1: 3 });
+        check_roundtrip(VInst::OpVX { op, vd: 1, vs2: 2, rs1: 0 });
+        if has_vi(op) {
+            check_roundtrip(VInst::OpVI { op, vd: 1, vs2: 2, imm: 5 });
+        } else {
+            assert!(
+                encode(&VInst::OpVI { op, vd: 1, vs2: 2, imm: 5 }).is_err(),
+                "{op:?}: .vi form must be a typed encode error"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_fields_roundtrip_over_every_op() {
+    Prop::new(0x15A_0B0B).runs(600).check(|g| {
+        let ops = all_vops();
+        let op = *g.pick(&ops);
+        let vd = g.below(32) as u8;
+        let vs2 = g.below(32) as u8;
+        match g.below(3) {
+            0 => check_roundtrip(VInst::OpVV { op, vd, vs2, vs1: g.below(32) as u8 }),
+            1 => check_roundtrip(VInst::OpVX { op, vd, vs2, rs1: 0 }),
+            _ => {
+                if has_vi(op) {
+                    // uimm5 for shifts/slides, simm5 for the rest
+                    let imm = if matches!(
+                        op,
+                        VOp::Sll | VOp::Srl | VOp::Sra | VOp::NSrl | VOp::SlideDown | VOp::SlideUp
+                    ) {
+                        g.below(32) as i8
+                    } else {
+                        g.irange(-16, 15) as i8
+                    };
+                    check_roundtrip(VInst::OpVI { op, vd, vs2, imm });
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn memory_and_config_forms_roundtrip_with_disasm() {
+    for eew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+        for v in [0u8, 7, 31] {
+            let l = VInst::Load { eew, vd: v, addr: 0 };
+            assert_eq!(decode(encode(&l).unwrap()).unwrap(), l);
+            assert!(disasm(&l).starts_with(&format!("vle{}", eew.bits())));
+            let s = VInst::Store { eew, vs3: v, addr: 0 };
+            assert_eq!(decode(encode(&s).unwrap()).unwrap(), s);
+            assert!(disasm(&s).starts_with(&format!("vse{}", eew.bits())));
+        }
+    }
+    for sew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+        for lmul in [Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8] {
+            let i = VInst::SetVl { avl: 0, sew, lmul };
+            assert_eq!(decode(encode(&i).unwrap()).unwrap(), i);
+            assert!(disasm(&i).contains(&format!("{sew},{lmul}")));
+        }
+    }
+}
+
+#[test]
+fn vmacsr_keeps_its_published_slot() {
+    // the paper's Fig. 3 placement (funct6 right after vmacc) and the
+    // vnsrl narrowing slot are part of the ISA contract
+    let mac = encode(&VInst::OpVX { op: VOp::Macsr, vd: 1, vs2: 2, rs1: 0 }).unwrap();
+    assert_eq!(mac >> 26, 0b101110);
+    let nsrl = encode(&VInst::OpVI { op: VOp::NSrl, vd: 1, vs2: 2, imm: 0 }).unwrap();
+    assert_eq!(nsrl >> 26, 0b101100);
+}

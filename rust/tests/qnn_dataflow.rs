@@ -1,0 +1,153 @@
+//! Cross-layer proof of the end-to-end dataflow executor
+//! (acceptance criteria of the multi-layer refactor):
+//!
+//! 1. every graph-layer boundary of an executed inference matches the
+//!    host golden network bit-for-bit,
+//! 2. `Server::infer` returns the golden argmax for a batch of test
+//!    images,
+//! 3. a second inference through the shared `ProgramCache` is all
+//!    hits with identical cycle counts.
+
+use sparq::arch::ProcessorConfig;
+use sparq::config::ServeConfig;
+use sparq::coordinator::{sim_qnn_factory, Server};
+use sparq::kernels::ProgramCache;
+use sparq::qnn::schedule::QnnPrecision;
+use sparq::qnn::{CompiledQnn, QnnGraph, QnnNet};
+use sparq::sim::{Machine, MachinePool};
+use std::sync::Arc;
+
+const SEED: u64 = 0x0DD_5EED;
+
+fn precisions() -> [QnnPrecision; 3] {
+    [
+        QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+        QnnPrecision::SubByte { w_bits: 3, a_bits: 3 },
+        QnnPrecision::SubByte { w_bits: 4, a_bits: 4 },
+    ]
+}
+
+#[test]
+fn every_layer_boundary_matches_the_golden_network() {
+    let cfg = ProcessorConfig::sparq();
+    let graph = QnnGraph::sparq_cnn();
+    for prec in precisions() {
+        let net = QnnNet::from_seed(&graph, prec, SEED).unwrap();
+        let cq = CompiledQnn::compile(&cfg, net).unwrap();
+        for image_seed in [1u64, 42, 0xFFFF_FFFF] {
+            let image = cq.net.test_image(image_seed);
+            let golden = cq.net.golden_forward(&image).unwrap();
+            let mut m = Machine::new(cfg.clone(), cq.mem_bytes);
+            let run = cq.execute(&mut m, &image).unwrap();
+            for li in 0..graph.layers.len() {
+                assert_eq!(
+                    cq.read_tap(&m, li).unwrap(),
+                    golden.layer_outs[li],
+                    "{} image {image_seed}: layer {li} ({}) diverged",
+                    prec.label(),
+                    graph.layers[li].name()
+                );
+            }
+            assert_eq!(run.logits, golden.logits, "{} logits", prec.label());
+            assert_eq!(run.argmax, golden.argmax, "{} argmax", prec.label());
+        }
+    }
+}
+
+#[test]
+fn server_infer_returns_the_golden_argmax_for_a_batch() {
+    let cfg = ProcessorConfig::sparq();
+    let graph = QnnGraph::sparq_cnn();
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let net = QnnNet::from_seed(&graph, prec, SEED).unwrap();
+    let cache = Arc::new(ProgramCache::new());
+    // pre-warm: compile the network once before the workers start, so
+    // both worker lookups are deterministic hits (without this the two
+    // workers race factory() and may both miss-compile concurrently)
+    cache.get_or_compile_qnn(&cfg, &graph, prec, SEED).unwrap();
+    let server = Server::start(
+        sim_qnn_factory(cfg.clone(), graph.clone(), prec, 4, SEED, Arc::clone(&cache)),
+        ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 64 },
+        1234,
+    )
+    .unwrap();
+
+    let n = 12;
+    let images: Vec<Vec<u64>> = (0..n).map(|i| net.test_image(100 + i as u64)).collect();
+    let mut pending = Vec::new();
+    for img in &images {
+        let fimg: Vec<f32> = img.iter().map(|&v| v as f32).collect();
+        pending.push(server.submit(fimg).expect("submit"));
+    }
+    for (img, rx) in images.iter().zip(pending) {
+        let golden = net.golden_forward(img).unwrap();
+        let r = rx.recv().unwrap().expect("infer");
+        assert_eq!(r.class, golden.argmax, "served classification diverged from golden");
+        let glogits: Vec<f32> = golden.logits.iter().map(|&v| v as f32).collect();
+        assert_eq!(r.logits, glogits, "served logits diverged from golden");
+        assert_eq!(r.sim_cycles, 1234);
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.completed as usize, n);
+    assert_eq!(snap.errors, 0);
+
+    // the network compiled exactly once (the pre-warm); both workers'
+    // lookups hit the shared entry
+    let cs = cache.stats();
+    assert_eq!(cs.entries, 1, "workers must share one compiled network");
+    assert_eq!(cs.misses, 1, "nothing may recompile after the pre-warm");
+    assert!(cs.hits >= 2, "both workers' lookups must hit");
+}
+
+#[test]
+fn second_inference_through_the_shared_cache_is_all_hits_with_identical_cycles() {
+    let cfg = ProcessorConfig::sparq();
+    let graph = QnnGraph::sparq_cnn();
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let cache = ProgramCache::new();
+    let pool = MachinePool::new();
+
+    let cq = cache.get_or_compile_qnn(&cfg, &graph, prec, SEED).unwrap();
+    let misses_after_compile = cache.stats().misses;
+    let image = cq.net.test_image(9);
+
+    let mut m = pool.acquire(&cfg, cq.mem_bytes);
+    let first = cq.execute_fresh(&mut m, &image).unwrap();
+    pool.release(m);
+
+    // second inference: the cache lookup must hit, nothing recompiles
+    let cq2 = cache.get_or_compile_qnn(&cfg, &graph, prec, SEED).unwrap();
+    assert!(Arc::ptr_eq(&cq, &cq2), "second lookup must return the same compiled network");
+    assert_eq!(cache.stats().misses, misses_after_compile, "second inference recompiled");
+    assert!(cache.stats().hits >= 1);
+
+    let mut m = pool.acquire(&cfg, cq2.mem_bytes);
+    let second = cq2.execute_fresh(&mut m, &image).unwrap();
+    pool.release(m);
+
+    assert_eq!(first.logits, second.logits);
+    assert_eq!(first.total_cycles(), second.total_cycles());
+    // stage-by-stage identical, not just in aggregate
+    let a: Vec<u64> = first.stage_reports.iter().map(|r| r.stats.cycles).collect();
+    let b: Vec<u64> = second.stage_reports.iter().map(|r| r.stats.cycles).collect();
+    assert_eq!(a, b);
+    assert_eq!(pool.stats().reused, 1, "the machine pool must recycle the arena machine");
+}
+
+#[test]
+fn distinct_images_produce_distinct_logits() {
+    // sanity against a degenerate pipeline (e.g. a requant shift that
+    // flattens everything to zero): different images must reach the
+    // head as different activations
+    let graph = QnnGraph::sparq_cnn();
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let net = QnnNet::from_seed(&graph, prec, SEED).unwrap();
+    let logit_sets: std::collections::HashSet<Vec<i64>> = (0..16)
+        .map(|i| net.golden_forward(&net.test_image(i)).unwrap().logits)
+        .collect();
+    assert!(logit_sets.len() > 1, "every image produced identical logits");
+    assert!(
+        logit_sets.iter().any(|l| l.iter().any(|&v| v > 0)),
+        "the network flattened every activation to zero"
+    );
+}
