@@ -1,0 +1,150 @@
+//! Mixed-precision ladder bench: the SparqCNN end-to-end at every
+//! uniform sub-byte precision plus the mixed stem/head configurations,
+//! each compiled with per-layer autotuned kernels, against the
+//! all-int16 reference network (the paper's speedup denominator).
+//! `--json` writes `BENCH_mixed.json` (per-layer variant choices,
+//! network img/s, tune/cache stats; CI uploads it next to
+//! `BENCH_qnn.json`).
+//!
+//! Asserted orderings (the paper's Fig. 4/5 shape at network scale):
+//! autotuned W2A2 strictly fewer cycles than W4A4, and both strictly
+//! fewer than all-int16.
+
+mod common;
+
+use common::{json_flag, Bench, Json};
+use sparq::kernels::ProgramCache;
+use sparq::power::LaneReport;
+use sparq::qnn::schedule::QnnPrecision;
+use sparq::qnn::{CompiledQnn, QnnGraph, QnnNet, VariantPolicy};
+use sparq::report::ladder_configs;
+use sparq::runtime::SimQnnModel;
+use sparq::sim::{Machine, MachinePool};
+use sparq::ProcessorConfig;
+
+const SEED: u64 = 0x3153_5EED;
+const REPS: usize = 12;
+
+fn main() {
+    let b = Bench::new("mixed_precision");
+    let cfg = ProcessorConfig::sparq();
+    let fmax = LaneReport::for_config(&cfg).fmax_ghz();
+    let cache = ProgramCache::new();
+    let pool = MachinePool::new();
+    let mut json = Json::new();
+    json.str("bench", "mixed_precision").int("reps", REPS as u64).num("fmax_ghz", fmax);
+
+    // the same rungs (and labels) report::precision_ladder sweeps
+    let configs = ladder_configs();
+
+    let mut rows = Vec::new();
+    for (label, graph, prec) in &configs {
+        let (cycles, layers) = b.section(label, || {
+            let sched = sparq::qnn::schedule::schedule_seeded(
+                &cfg, graph, *prec, SEED, &cache, &pool,
+            )
+            .expect("schedule");
+            // repeat inference through the serving model: all-hits,
+            // identical per-inference cycles
+            let model = SimQnnModel::compile(&cfg, graph, *prec, SEED, &cache).expect("model");
+            let img: Vec<f32> =
+                (0..model.input_len()).map(|i| ((i * 13) % 4) as f32).collect();
+            let mut cycles_each = Vec::with_capacity(REPS);
+            for _ in 0..REPS {
+                let (_, cyc) = model.infer(&pool, &img).expect("infer");
+                cycles_each.push(cyc);
+            }
+            assert!(
+                cycles_each.iter().all(|&c| c == cycles_each[0]),
+                "cycle counts must be identical across repeated inferences"
+            );
+            println!(
+                "  {label}: {} cycles/image -> {:.0} img/s at {fmax:.3} GHz",
+                sched.total_cycles(),
+                fmax * 1e9 / sched.total_cycles() as f64
+            );
+            let layer_rows: Vec<(String, u64, String)> = sched
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| (format!("L{i} {}", l.name), l.cycles, l.variant.clone()))
+                .collect();
+            for (name, lcyc, variant) in &layer_rows {
+                println!("    {name:<30} {lcyc:>12} cycles  {variant}");
+            }
+            (sched.total_cycles(), layer_rows)
+        });
+        rows.push((label.clone(), cycles, layers));
+    }
+
+    // the all-int16 reference network: same W2A2 weights, every conv
+    // forced onto the unpacked int16 kernel
+    let base = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let int16_cycles = b.section("all-int16 reference", || {
+        let net = QnnNet::from_seed(&QnnGraph::sparq_cnn(), base, SEED).expect("net");
+        let cq = CompiledQnn::compile_policy(&cfg, net, &cache, VariantPolicy::AllInt16)
+            .expect("compile");
+        let image = cq.net.test_image(1);
+        let mut m = Machine::new(cfg.clone(), cq.mem_bytes);
+        let run = cq.execute(&mut m, &image).expect("execute");
+        println!("  all-int16: {} cycles/image", run.total_cycles());
+        run.total_cycles()
+    });
+
+    let cyc = |label: &str| rows.iter().find(|r| r.0 == label).unwrap().1;
+    // the acceptance ordering: autotuned W2A2 < W4A4 < all-int16
+    assert!(
+        cyc("w2a2") < cyc("w4a4"),
+        "w2a2 ({}) must beat w4a4 ({})",
+        cyc("w2a2"),
+        cyc("w4a4")
+    );
+    assert!(
+        cyc("w4a4") < int16_cycles,
+        "w4a4 ({}) must beat all-int16 ({int16_cycles})",
+        cyc("w4a4")
+    );
+    let mixed = cyc("mixed w4a4-stem/w2a2");
+    assert!(
+        cyc("w2a2") < mixed && mixed < cyc("w4a4"),
+        "mixed ({mixed}) must land between w2a2 ({}) and w4a4 ({})",
+        cyc("w2a2"),
+        cyc("w4a4")
+    );
+
+    let cs = cache.stats();
+    println!(
+        "program cache: {} network compile(s), {} hits | autotune: {} measurement(s), {} memo hits",
+        cs.misses, cs.hits, cs.tune_misses, cs.tune_hits
+    );
+
+    if json_flag() {
+        json.obj("configs", |j| {
+            for (label, cycles, layers) in &rows {
+                j.obj(label, |j| {
+                    j.int("cycles_per_image", *cycles)
+                        .num("images_per_s_at_fmax", fmax * 1e9 / *cycles as f64)
+                        .num("speedup_vs_int16", int16_cycles as f64 / *cycles as f64)
+                        .obj("layers", |j| {
+                            for (name, cyc, variant) in layers {
+                                j.obj(name, |j| {
+                                    j.int("cycles", *cyc).str("variant", variant);
+                                });
+                            }
+                        });
+                });
+            }
+        });
+        json.int("int16_reference_cycles", int16_cycles);
+        json.obj("cache", |j| {
+            j.int("compiles", cs.misses)
+                .int("hits", cs.hits)
+                .int("tune_measurements", cs.tune_misses)
+                .int("tune_hits", cs.tune_hits)
+                .int("tune_entries", cs.tune_entries);
+        });
+        json.write("BENCH_mixed.json");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,266 @@
+//! Cached kernel autotuning: measure every candidate conv variant for
+//! a (processor, layer shape, precision) tuple on the simulator and
+//! memoize the ranking, so the dataflow compiler
+//! ([`crate::qnn::compiled::CompiledQnn`]) picks the *fastest legal*
+//! kernel per layer instead of a hand-picked one per network.
+//!
+//! ## Candidates
+//!
+//! For a quantized conv at (W, A):
+//!
+//! * `Vmacsr { .., RegionMode::Paper }` and `{ .., RegionMode::Strict }`
+//!   (only on processors implementing `vmacsr`),
+//! * `Native { .. }` — ULPPACK on stock RVV (also the only packed
+//!   scheme on Ara-like configs),
+//! * `Int16` — the unpacked baseline (always legal; never wins on
+//!   Sparq, but it is the reference the paper's speedups divide by and
+//!   a real fallback on precisions nothing else admits).
+//!
+//! The int16 stem has exactly one candidate (`Int16`).
+//!
+//! ## Measurement
+//!
+//! Each candidate is compiled for the processor and executed **once**
+//! on an arena-isolated probe machine (its own `Machine`, its own
+//! address space — never the shared activation arena).  The timing
+//! model is data-independent (cycles depend on the instruction stream
+//! and `vl`, not the values), so a zero-filled probe workload measures
+//! exactly the cycles the real layer will cost, and one probe
+//! execution is the whole measurement.  Candidates that do not compile
+//! (precision outside the container region, `vmacsr` on a machine
+//! without it) are recorded as rejected with their error text.
+//!
+//! ## Memoization
+//!
+//! Rankings live in the shared [`ProgramCache`] under a [`TuneKey`]
+//! (`kernels::cache`) — the same fingerprint-prefilter +
+//! exact-compare discipline as `ConvKey`/`QnnKey`.  Weights are *not*
+//! part of the key: timing is data-independent, so one ranking serves
+//! every network sharing the (cfg, shape, precision) tuple.  Repeat
+//! compilations of the same network are therefore all-hits at both the
+//! graph level (`QnnKey`) and, for new networks over known shapes, the
+//! tune level.
+
+use super::cache::ProgramCache;
+use super::conv_engine::{packed_out_elem, vmacsr_out_elem};
+use super::workload::{ConvDims, OutElem, Workload};
+use super::{compile_conv_opts, ConvVariant, EngineOpts};
+use crate::arch::ProcessorConfig;
+use crate::isa::Sew;
+use crate::qnn::graph::container_sew;
+use crate::sim::{Machine, SimError};
+use crate::ulppack::{region, RegionMode};
+
+/// One measured candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub variant: ConvVariant,
+    /// The builder label the variant compiles under (e.g.
+    /// `ULP-W2A2-vmacsr`).
+    pub label: String,
+    /// Measured cycles of one probe execution.
+    pub cycles: u64,
+}
+
+/// The memoized result of tuning one (cfg, shape, precision) tuple.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// Every candidate that compiled and ran, fastest first; ties keep
+    /// the candidate order (vmacsr-paper before strict before native
+    /// before int16), so the ranking is deterministic.
+    pub ranked: Vec<Candidate>,
+    /// Candidates that failed to compile or run: (variant label, error).
+    pub rejected: Vec<(String, String)>,
+}
+
+impl TuneOutcome {
+    /// The winner (the ranking is never empty — `Int16` always runs).
+    pub fn best(&self) -> &Candidate {
+        &self.ranked[0]
+    }
+}
+
+/// The candidate variants for a conv layer at resolved (W, A) on
+/// `cfg`, in deterministic tie-breaking order.
+pub fn candidate_variants(cfg: &ProcessorConfig, w_bits: u32, a_bits: u32, quantized: bool) -> Vec<ConvVariant> {
+    if !quantized {
+        return vec![ConvVariant::Int16];
+    }
+    let mut v = Vec::new();
+    if cfg.vmacsr {
+        v.push(ConvVariant::Vmacsr { w_bits, a_bits, mode: RegionMode::Paper });
+        v.push(ConvVariant::Vmacsr { w_bits, a_bits, mode: RegionMode::Strict });
+    }
+    v.push(ConvVariant::Native { w_bits, a_bits });
+    v.push(ConvVariant::Int16);
+    v
+}
+
+/// (input element width, output element) a candidate would move the
+/// layer's activations at — derived from the same region plans the
+/// engine compiles with, so the dataflow compiler can check boundary
+/// legality *before* committing arena addresses.  `None` when the
+/// variant cannot run the precision at all.
+pub fn variant_io(variant: ConvVariant, dims: ConvDims) -> Option<(Sew, OutElem)> {
+    match variant {
+        ConvVariant::Int16 => Some((Sew::E16, OutElem::U16)),
+        ConvVariant::Fp32 => Some((Sew::E32, OutElem::F32)),
+        ConvVariant::Vmacsr { w_bits, a_bits, mode } => {
+            let issues = dims.issues_per_output();
+            let plan = region::plan_vmacsr(w_bits, a_bits, issues, mode)?;
+            Some((
+                container_sew(plan.container),
+                vmacsr_out_elem(plan.container, plan.spill_every, issues),
+            ))
+        }
+        ConvVariant::Native { w_bits, a_bits } => {
+            let plan = region::plan_native(w_bits, a_bits)?;
+            // the native scheme always keeps a wide accumulator
+            Some((container_sew(plan.container), packed_out_elem(plan.container, true)))
+        }
+    }
+}
+
+/// A zero-filled workload of the right shape and precision: the probe
+/// the candidates are measured on (timing is data-independent, so
+/// zeros measure exactly what real data would).
+fn probe_workload(dims: ConvDims, w_bits: u32, a_bits: u32) -> Workload {
+    let hw = (dims.h * dims.w) as usize;
+    let fhw = (dims.fh * dims.fw) as usize;
+    Workload {
+        dims,
+        w_bits,
+        a_bits,
+        act: vec![vec![0; hw]; dims.c as usize],
+        wgt: vec![vec![vec![0; fhw]; dims.c as usize]; dims.co as usize],
+        act_f32: vec![],
+        wgt_f32: vec![],
+    }
+}
+
+/// Tune one conv layer: look the (cfg, dims, precision, opts) tuple up
+/// in `cache` (under its [`super::cache::TuneKey`]), measuring every
+/// candidate on a miss.  Errors only when *no* candidate runs.
+pub fn autotune_conv(
+    cache: &ProgramCache,
+    cfg: &ProcessorConfig,
+    dims: ConvDims,
+    w_bits: u32,
+    a_bits: u32,
+    quantized: bool,
+    opts: EngineOpts,
+) -> Result<std::sync::Arc<TuneOutcome>, SimError> {
+    let key = ProgramCache::tune_key(cfg, dims, w_bits, a_bits, quantized, opts);
+    cache.get_or_tune(key, || measure(cfg, dims, w_bits, a_bits, quantized, opts))
+}
+
+/// The uncached measurement: compile + probe-execute every candidate.
+fn measure(
+    cfg: &ProcessorConfig,
+    dims: ConvDims,
+    w_bits: u32,
+    a_bits: u32,
+    quantized: bool,
+    opts: EngineOpts,
+) -> Result<TuneOutcome, SimError> {
+    let mut ranked = Vec::new();
+    let mut rejected = Vec::new();
+    for variant in candidate_variants(cfg, w_bits, a_bits, quantized) {
+        let (wb, ab) = variant.bits();
+        let wl = probe_workload(dims, wb, ab);
+        // arena-isolated probe: a private machine with the candidate's
+        // own layout, never the shared activation arena
+        let run = compile_conv_opts(cfg, &wl, variant, opts).and_then(|cc| {
+            let mut m = Machine::new(cfg.clone(), cc.mem_bytes);
+            let report = cc.execute(&mut m, &wl)?;
+            Ok(Candidate { variant, label: report.label.clone(), cycles: report.stats.cycles })
+        });
+        match run {
+            Ok(c) => ranked.push(c),
+            Err(e) => rejected.push((variant.label(), e.to_string())),
+        }
+    }
+    if ranked.is_empty() {
+        return Err(SimError::Unsupported(
+            "no conv variant is legal for this precision on this processor",
+        ));
+    }
+    // stable: ties keep the candidate order (paper-mode vmacsr first)
+    ranked.sort_by_key(|c| c.cycles);
+    Ok(TuneOutcome { ranked, rejected })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ConvDims {
+        ConvDims { c: 8, h: 10, w: 10, co: 2, fh: 3, fw: 3 }
+    }
+
+    #[test]
+    fn vmacsr_wins_on_sparq_native_on_ara() {
+        let cache = ProgramCache::new();
+        let sparq = autotune_conv(&cache, &ProcessorConfig::sparq(), dims(), 2, 2, true, EngineOpts::default())
+            .unwrap();
+        assert!(
+            matches!(sparq.best().variant, ConvVariant::Vmacsr { mode: RegionMode::Paper, .. }),
+            "{:?}",
+            sparq.best()
+        );
+        // every candidate measured: 2 vmacsr modes + native + int16
+        assert_eq!(sparq.ranked.len() + sparq.rejected.len(), 4);
+        let ara = autotune_conv(&cache, &ProcessorConfig::ara(), dims(), 2, 2, true, EngineOpts::default())
+            .unwrap();
+        assert!(matches!(ara.best().variant, ConvVariant::Native { .. }), "{:?}", ara.best());
+    }
+
+    #[test]
+    fn int16_is_the_fallback_when_nothing_packs() {
+        // W4A4 on Ara: vmacsr absent, native impossible -> int16 serves
+        let cache = ProgramCache::new();
+        let t = autotune_conv(&cache, &ProcessorConfig::ara(), dims(), 4, 4, true, EngineOpts::default())
+            .unwrap();
+        assert_eq!(t.ranked.len(), 1);
+        assert!(matches!(t.best().variant, ConvVariant::Int16));
+        assert_eq!(t.rejected.len(), 1, "native W4A4 must be recorded as rejected");
+    }
+
+    #[test]
+    fn stem_has_one_candidate_and_outcomes_memoize() {
+        let cache = ProgramCache::new();
+        let cfg = ProcessorConfig::sparq();
+        let a = autotune_conv(&cache, &cfg, dims(), 8, 2, false, EngineOpts::default()).unwrap();
+        assert_eq!(a.ranked.len(), 1);
+        assert!(matches!(a.best().variant, ConvVariant::Int16));
+        let b = autotune_conv(&cache, &cfg, dims(), 8, 2, false, EngineOpts::default()).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "repeat tuning must hit the cache");
+        let s = cache.stats();
+        assert_eq!((s.tune_hits, s.tune_misses, s.tune_entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn variant_io_matches_the_region_plans() {
+        let d = dims(); // issues = 4*9 = 36
+        // W2A2 vmacsr: ULP container, 8-bit in; spill 21 < 36 -> wide u16
+        let (s, e) = variant_io(
+            ConvVariant::Vmacsr { w_bits: 2, a_bits: 2, mode: RegionMode::Paper },
+            d,
+        )
+        .unwrap();
+        assert_eq!((s, e), (Sew::E8, OutElem::U16));
+        // W4A4 vmacsr: LP, 16-bit in; spill 156 > 36 -> narrow u16 out
+        let (s, e) = variant_io(
+            ConvVariant::Vmacsr { w_bits: 4, a_bits: 4, mode: RegionMode::Paper },
+            d,
+        )
+        .unwrap();
+        assert_eq!((s, e), (Sew::E16, OutElem::U16));
+        // native W4A4: impossible
+        assert!(variant_io(ConvVariant::Native { w_bits: 4, a_bits: 4 }, d).is_none());
+        assert_eq!(
+            variant_io(ConvVariant::Int16, d).unwrap(),
+            (Sew::E16, OutElem::U16)
+        );
+    }
+}

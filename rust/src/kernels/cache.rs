@@ -21,6 +21,7 @@
 //! instance across workers via `Arc` while each worker keeps a private
 //! machine pool (DESIGN.md §"Compile once, execute many").
 
+use super::autotune::TuneOutcome;
 use super::conv_engine::{CompiledConv, EngineOpts};
 use super::workload::{ConvDims, Workload};
 use super::ConvVariant;
@@ -35,12 +36,21 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Cache counters (diagnostics).
+/// Cache counters (diagnostics).  Program lookups (conv + graph maps)
+/// and autotune lookups are counted separately: a network compile is
+/// one program miss however many layer shapes it tunes along the way,
+/// so the serving invariants ("second inference is all hits") stay
+/// crisp.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: u64,
+    /// Autotune ranking lookups served from the memo.
+    pub tune_hits: u64,
+    /// Autotune rankings measured (candidate probes executed).
+    pub tune_misses: u64,
+    pub tune_entries: u64,
 }
 
 /// The cache key: every compile input compared exactly, weight words
@@ -246,10 +256,21 @@ fn qnn_fingerprint(
     fp_cfg(&mut f, cfg);
     for layer in &graph.layers {
         match *layer {
-            LayerDesc::Conv { c_in, c_out, h, w, f: k, quantized } => {
+            LayerDesc::Conv { c_in, c_out, h, w, f: k, quantized, precision } => {
                 f.u32(0);
                 for v in [c_in, c_out, h, w, k, quantized as u32] {
                     f.u32(v);
+                }
+                // the per-layer (W, A) override: two otherwise-identical
+                // graphs differing in one layer's precision must
+                // fingerprint (and key) apart
+                match precision {
+                    None => f.u32(0),
+                    Some((pw, pa)) => {
+                        f.u32(1);
+                        f.u32(pw);
+                        f.u32(pa);
+                    }
                 }
             }
             LayerDesc::MaxPool { c, h, w } => {
@@ -281,15 +302,88 @@ fn qnn_fingerprint(
     f.0
 }
 
+/// The autotune memo key: processor, layer shape, resolved precision,
+/// stem/quantized flag, engine options — everything that shapes the
+/// candidate set and their measured cycles, and nothing more (weights
+/// are excluded: timing is data-independent, so one ranking serves
+/// every network over the tuple).  Same discipline as [`ConvKey`]: the
+/// fingerprint is the map hash and an equality pre-filter; the exact
+/// field compare decides.
+#[derive(Debug, Clone)]
+pub struct TuneKey {
+    fp: u64,
+    cfg: ProcessorConfig,
+    dims: ConvDims,
+    w_bits: u32,
+    a_bits: u32,
+    quantized: bool,
+    opts: EngineOpts,
+}
+
+impl TuneKey {
+    /// Forge the fingerprint (tests only): a collision must never
+    /// admit a hit — equality stays exact over every field.
+    #[cfg(test)]
+    pub(crate) fn with_forged_fp(mut self, fp: u64) -> TuneKey {
+        self.fp = fp;
+        self
+    }
+}
+
+impl PartialEq for TuneKey {
+    fn eq(&self, o: &TuneKey) -> bool {
+        self.fp == o.fp
+            && self.cfg == o.cfg
+            && self.dims == o.dims
+            && self.w_bits == o.w_bits
+            && self.a_bits == o.a_bits
+            && self.quantized == o.quantized
+            && self.opts == o.opts
+    }
+}
+
+impl Eq for TuneKey {}
+
+impl Hash for TuneKey {
+    fn hash<H: Hasher>(&self, h: &mut H) {
+        self.fp.hash(h);
+    }
+}
+
+fn tune_fingerprint(
+    cfg: &ProcessorConfig,
+    dims: ConvDims,
+    w_bits: u32,
+    a_bits: u32,
+    quantized: bool,
+    opts: EngineOpts,
+) -> u64 {
+    let mut f = Fnv1a::new();
+    fp_cfg(&mut f, cfg);
+    for v in [dims.c, dims.h, dims.w, dims.co, dims.fh, dims.fw] {
+        f.u32(v);
+    }
+    f.u32(w_bits);
+    f.u32(a_bits);
+    f.u32(quantized as u32);
+    f.u32(opts.runtime_weight_pack as u32);
+    f.u32(opts.runtime_act_pack as u32);
+    f.0
+}
+
 /// A concurrent map from conv content keys to compiled programs, plus
 /// a second map from graph-level keys to whole compiled networks
-/// ([`CompiledQnn`]) — the dataflow executor's compile-once cache.
+/// ([`CompiledQnn`]) and a third from [`TuneKey`]s to autotune
+/// rankings — the dataflow executor's compile-once cache.
 #[derive(Debug, Default)]
 pub struct ProgramCache {
     map: Mutex<HashMap<ConvKey, Arc<CompiledConv>>>,
     qnn_map: Mutex<HashMap<QnnKey, Arc<CompiledQnn>>>,
+    tune_map: Mutex<HashMap<TuneKey, Arc<TuneOutcome>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    tune_hits: AtomicU64,
+    tune_misses: AtomicU64,
 }
 
 impl ProgramCache {
@@ -361,8 +455,10 @@ impl ProgramCache {
 
     /// Look up the whole compiled network for (cfg, graph, precision,
     /// seed), compiling it once on a miss — graph validation, weight
-    /// derivation, arena planning and every layer stream included.
-    /// Counted in the same hit/miss stats as the conv entries.
+    /// derivation, per-layer autotuning (memoized under [`TuneKey`]s in
+    /// this same cache), arena planning and every layer stream
+    /// included.  Counted in the same hit/miss stats as the conv
+    /// entries (tune lookups count separately).
     pub fn get_or_compile_qnn(
         &self,
         cfg: &ProcessorConfig,
@@ -376,10 +472,52 @@ impl ProgramCache {
             return Ok(Arc::clone(cq));
         }
         let net = QnnNet::from_seed(graph, precision, seed)?;
-        let compiled = Arc::new(CompiledQnn::compile(cfg, net)?);
+        let compiled = Arc::new(CompiledQnn::compile_tuned(cfg, net, self)?);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.qnn_map.lock().unwrap();
         let entry = map.entry(key).or_insert(compiled);
+        Ok(Arc::clone(entry))
+    }
+
+    /// The autotune memo key `get_or_tune` uses (exposed for tests and
+    /// diagnostics).
+    pub fn tune_key(
+        cfg: &ProcessorConfig,
+        dims: ConvDims,
+        w_bits: u32,
+        a_bits: u32,
+        quantized: bool,
+        opts: EngineOpts,
+    ) -> TuneKey {
+        TuneKey {
+            fp: tune_fingerprint(cfg, dims, w_bits, a_bits, quantized, opts),
+            cfg: cfg.clone(),
+            dims,
+            w_bits,
+            a_bits,
+            quantized,
+            opts,
+        }
+    }
+
+    /// Look up an autotune ranking, measuring with `compute` on a
+    /// miss.  Measurement runs outside the lock; on a concurrent
+    /// double-measure the first inserted ranking wins and both callers
+    /// get the same `Arc` (the probes are deterministic, so the two
+    /// rankings are identical anyway).
+    pub fn get_or_tune(
+        &self,
+        key: TuneKey,
+        compute: impl FnOnce() -> Result<TuneOutcome, SimError>,
+    ) -> Result<Arc<TuneOutcome>, SimError> {
+        if let Some(t) = self.tune_map.lock().unwrap().get(&key) {
+            self.tune_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(t));
+        }
+        let outcome = Arc::new(compute()?);
+        self.tune_misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.tune_map.lock().unwrap();
+        let entry = map.entry(key).or_insert(outcome);
         Ok(Arc::clone(entry))
     }
 
@@ -389,13 +527,17 @@ impl ProgramCache {
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.map.lock().unwrap().len() as u64
                 + self.qnn_map.lock().unwrap().len() as u64,
+            tune_hits: self.tune_hits.load(Ordering::Relaxed),
+            tune_misses: self.tune_misses.load(Ordering::Relaxed),
+            tune_entries: self.tune_map.lock().unwrap().len() as u64,
         }
     }
 
-    /// Drop every cached program (keeps the counters).
+    /// Drop every cached program and tuning (keeps the counters).
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
         self.qnn_map.lock().unwrap().clear();
+        self.tune_map.lock().unwrap().clear();
     }
 }
 
@@ -510,5 +652,56 @@ mod tests {
         assert_eq!(cache.stats().entries, 1);
         cache.clear();
         assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn tune_key_separates_cfg_precision_and_opts() {
+        let d = ConvDims { c: 4, h: 6, w: 8, co: 2, fh: 3, fw: 3 };
+        let base = ProgramCache::tune_key(&ProcessorConfig::sparq(), d, 2, 2, true, EngineOpts::default());
+        let cfg = ProgramCache::tune_key(&ProcessorConfig::ara(), d, 2, 2, true, EngineOpts::default());
+        let prec = ProgramCache::tune_key(&ProcessorConfig::sparq(), d, 4, 4, true, EngineOpts::default());
+        let stem = ProgramCache::tune_key(&ProcessorConfig::sparq(), d, 2, 2, false, EngineOpts::default());
+        let opts = ProgramCache::tune_key(
+            &ProcessorConfig::sparq(),
+            d,
+            2,
+            2,
+            true,
+            EngineOpts { runtime_act_pack: false, runtime_weight_pack: false },
+        );
+        assert_ne!(base, cfg);
+        assert_ne!(base, prec);
+        assert_ne!(base, stem);
+        assert_ne!(base, opts);
+        let same = ProgramCache::tune_key(&ProcessorConfig::sparq(), d, 2, 2, true, EngineOpts::default());
+        assert_eq!(base, same);
+        assert_eq!(base.fp, same.fp, "equal inputs must fingerprint equal (Hash/Eq contract)");
+    }
+
+    #[test]
+    fn tune_fingerprint_is_a_prefilter_not_the_verdict() {
+        // a forged fingerprint collision must NOT alias two precisions
+        let d = ConvDims { c: 4, h: 6, w: 8, co: 2, fh: 3, fw: 3 };
+        let a = ProgramCache::tune_key(&ProcessorConfig::sparq(), d, 2, 2, true, EngineOpts::default());
+        let b = ProgramCache::tune_key(&ProcessorConfig::sparq(), d, 3, 3, true, EngineOpts::default());
+        let forged = b.clone().with_forged_fp(a.fp);
+        assert_ne!(a, forged, "a fingerprint collision must not alias different precisions");
+    }
+
+    #[test]
+    fn qnn_key_distinguishes_per_layer_overrides() {
+        // two graphs identical except one layer's (w_bits, a_bits)
+        // must occupy distinct entries
+        let cfg = ProcessorConfig::sparq();
+        let p = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let plain = QnnGraph::sparq_cnn();
+        let mixed = QnnGraph::sparq_cnn_mixed((4, 4), (2, 2));
+        let k1 = ProgramCache::qnn_key(&cfg, &plain, p, 7);
+        let k2 = ProgramCache::qnn_key(&cfg, &mixed, p, 7);
+        assert_ne!(k1, k2);
+        assert_ne!(k1.fp, k2.fp, "the override must reach the fingerprint");
+        // and only the deep conv differing still separates
+        let deep = QnnGraph::sparq_cnn_mixed((4, 4), (3, 3));
+        assert_ne!(ProgramCache::qnn_key(&cfg, &mixed, p, 7), ProgramCache::qnn_key(&cfg, &deep, p, 7));
     }
 }

@@ -549,8 +549,10 @@ fn compile_impl(
 }
 
 /// Output element of a packed conv: the wide accumulator's width when
-/// one is kept, u16 otherwise (LP with no spill needed).
-fn packed_out_elem(container: Container, has_wide: bool) -> OutElem {
+/// one is kept, u16 otherwise (LP with no spill needed).  `pub(crate)`
+/// so the graph validator and autotuner derive boundary widths from
+/// the same rule the engine stores with.
+pub(crate) fn packed_out_elem(container: Container, has_wide: bool) -> OutElem {
     if has_wide {
         match container {
             Container::Lp => OutElem::U32,

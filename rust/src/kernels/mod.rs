@@ -21,7 +21,10 @@
 //! ([`crate::qnn::compiled::CompiledQnn`]): zero-padding + requantize
 //! + narrow at every layer boundary, 2x2 maxpool via the `vnsrl`
 //! deinterleave idiom, and the GAP+FC head — executed layers, not
-//! bytes/cycle estimates.
+//! bytes/cycle estimates.  [`autotune`] measures the candidate
+//! variants per (processor, layer shape, precision) on the simulator
+//! and memoizes the ranking in the [`ProgramCache`], so the dataflow
+//! compiler serves the fastest legal kernel per layer.
 //!
 //! ## Compile once, execute many
 //!
@@ -38,6 +41,7 @@
 //! [`run_conv`] keeps the original one-shot build-and-run semantics.
 
 pub mod asm;
+pub mod autotune;
 pub mod cache;
 pub mod conv_engine;
 pub mod conv_fp32;
@@ -50,7 +54,8 @@ pub mod pool_fc;
 pub mod requant;
 pub mod workload;
 
-pub use cache::{CacheStats, ProgramCache};
+pub use autotune::TuneOutcome;
+pub use cache::{CacheStats, ProgramCache, TuneKey};
 pub use conv_engine::{CompiledConv, EngineOpts};
 pub use workload::{ConvDims, OutputRef, Workload};
 

@@ -25,6 +25,9 @@
 //!   `CompiledConv::execute` rebinds activations into a pooled machine,
 //!   and [`kernels::ProgramCache`] memoizes compilations behind a
 //!   content key (see DESIGN.md §"Compile once, execute many").
+//!   [`kernels::autotune`] measures the candidate variants per
+//!   (processor, layer shape, precision) and memoizes the ranking in
+//!   the same cache (DESIGN.md §"Mixed precision & autotuning").
 //! * [`power`] — the GF22FDX-calibrated analytical area/power/fmax model
 //!   behind Table II.
 //! * [`qnn`] — the quantized CNN graph, its shape-chaining validation,

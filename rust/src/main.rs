@@ -58,9 +58,10 @@ COMMANDS
   table1       QNN accuracy via the PJRT artifacts           [--artifacts DIR]
   table2       lane area / power / fmax model (Ara vs Sparq)
   utilization  MFPU utilization of the baselines             [--large]
-  qnn-cycles   per-layer simulated schedule                  [--precision w2a2|w3a3|w4a4|fp32]
+  qnn-cycles   per-layer simulated schedule                  [--precision wXaY|fp32] [--ladder]
+               (--ladder sweeps W1A1..W4A4 + mixed stem/head configs, autotuned)
   serve        batched serving demo (PJRT artifacts, or the  [--requests N] [--model NAME] [--config FILE]
-               cached-program simulator backend without them) [--precision w2a2|w3a3|w4a4]
+               cached-program simulator backend without them) [--precision wXaY|mixed]
   isa          vmacsr encoding explorer                      [hex words...]
 ";
 
@@ -169,6 +170,13 @@ fn evaluate(
 }
 
 fn cmd_qnn_cycles(rest: &[String]) -> Result<(), String> {
+    if flag(rest, "--ladder") {
+        let ctx = report::SweepCtx::new();
+        let rows = report::precision_ladder(&ctx).map_err(|e| e.to_string())?;
+        let fmax = sparq::power::LaneReport::for_config(&sparq::ProcessorConfig::sparq()).fmax_ghz();
+        print!("{}", report::render_ladder(&rows, fmax));
+        return Ok(());
+    }
     let prec = match opt(rest, "--precision").unwrap_or("w2a2") {
         "fp32" => QnnPrecision::Fp32,
         s => {
@@ -205,13 +213,27 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
         Some(f) => Config::load(f).map_err(|e| e.to_string())?.serve().map_err(|e| e.to_string())?,
         None => sparq::config::ServeConfig::default(),
     };
-    let (w_bits, a_bits) = match opt(rest, "--precision").unwrap_or("w2a2") {
-        "w3a3" => (3, 3),
-        "w4a4" => (4, 4),
-        _ => (2, 2),
+    // "mixed" = the W4A4 stem-adjacent / W2A2 deep configuration: the
+    // per-layer overrides flow through the same autotuned dataflow
+    // compiler as the uniform precisions.  Uniform precisions parse
+    // the generic wXaY form (same syntax `qnn-cycles` accepts); bad
+    // strings error instead of silently serving a default
+    let prec_arg = opt(rest, "--precision").unwrap_or("w2a2");
+    let (graph, precision) = if prec_arg == "mixed" {
+        (
+            QnnGraph::sparq_cnn_mixed((4, 4), (2, 2)),
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+        )
+    } else {
+        let s = prec_arg.trim_start_matches('w');
+        let (w, a) =
+            s.split_once('a').ok_or("serve precision must be 'mixed' or wXaY (e.g. w2a2)")?;
+        let precision = QnnPrecision::SubByte {
+            w_bits: w.parse().map_err(|_| "bad W bits")?,
+            a_bits: a.parse().map_err(|_| "bad A bits")?,
+        };
+        (QnnGraph::sparq_cnn(), precision)
     };
-    let precision = QnnPrecision::SubByte { w_bits, a_bits };
-    let graph = QnnGraph::sparq_cnn();
     let cfg = sparq::ProcessorConfig::sparq();
     let cache = Arc::new(ProgramCache::new());
     let seed = sparq::qnn::schedule::DEFAULT_QNN_SEED;
@@ -239,8 +261,9 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     .map_err(|e| e.to_string())?;
 
     println!(
-        "serving SparqCNN at W{w_bits}A{a_bits} on the simulated dataflow backend \
+        "serving SparqCNN at {} on the simulated dataflow backend \
          ({cyc} cycles/image), {} worker(s), {n} requests...",
+        if prec_arg == "mixed" { "mixed W4A4-stem/W2A2".to_string() } else { precision.label() },
         serve_cfg.workers
     );
     let (ic, ih, iw) = graph.input;

@@ -28,18 +28,38 @@
 //! golden network; every layer boundary of an executed inference
 //! matches it bit-for-bit (`rust/tests/qnn_dataflow.rs`), and repeated
 //! executions produce identical outputs *and* cycle counts.
+//!
+//! ## Mixed precision + autotuning
+//!
+//! Precision and kernel variant are per-layer properties now: each
+//! quantized conv resolves its `(w_bits, a_bits)` (layer override or
+//! network default, [`crate::qnn::graph::QnnGraph::conv_precisions`]),
+//! the compiler consults [`crate::kernels::autotune`] for the fastest
+//! measured variant on the target processor (memoized in the shared
+//! [`crate::kernels::ProgramCache`] under `TuneKey`s), and every
+//! requant boundary is re-derived from the *adjacent pair* of
+//! precisions — the producer's output element and worst-case value
+//! against the consumer's activation width.  The autotuner only
+//! substitutes variants that keep the boundary chain legal (at most
+//! one `vnsrl` narrowing step); the canonical chain was already
+//! validated by `QnnGraph::validate_for`.  The golden network
+//! dispatches per *chosen* variant ([`QnnNet::golden_forward_with`]),
+//! so mixed autotuned networks pin bit-for-bit exactly like uniform
+//! ones.
 
 use crate::arch::ProcessorConfig;
+use crate::kernels::autotune::{self, TuneOutcome};
 use crate::kernels::conv_engine::{self, LayoutAlloc};
 use crate::kernels::pool_fc::{self, gap_fc_host, maxpool2_host};
 use crate::kernels::requant::{self, requant_host, RequantSpec};
 use crate::kernels::workload::{golden_mod, golden_packed_vmacsr, ConvDims, OutElem, OutputRef, Workload};
-use crate::kernels::{asm::Asm, CompiledConv, EngineOpts};
-use crate::qnn::graph::{padded_c, LayerDesc, QnnGraph};
+use crate::kernels::{asm::Asm, CompiledConv, ConvVariant, EngineOpts, ProgramCache};
+use crate::qnn::graph::{padded_c, ConvPrec, LayerDesc, QnnGraph};
 use crate::qnn::schedule::{variant_for, QnnPrecision};
 use crate::sim::{CompiledProgram, Machine, Program, RunReport, SimError};
 use crate::testutil::Gen;
 use crate::ulppack::{act_level_max, region, weight_level_max, Container};
+use std::sync::Arc;
 
 /// Host-side network: the graph plus every weight tensor, all derived
 /// from ONE graph-level seed (recorded in `QnnSchedule` for
@@ -49,11 +69,15 @@ pub struct QnnNet {
     pub graph: QnnGraph,
     pub precision: QnnPrecision,
     pub seed: u64,
+    /// Per-conv resolved precisions (graph order): the layer override
+    /// or the network default; the stem resolves to 8-bit weights.
+    pub precs: Vec<ConvPrec>,
     /// Conv weight levels per *conv* layer (graph order), shaped
-    /// `[co][padded_c][f*f]`; the padded channel's weights are drawn
-    /// like any other but always multiply explicit zero activations.
+    /// `[co][padded_c][f*f]` and drawn in the layer's *resolved*
+    /// weight range; the padded channel's weights are drawn like any
+    /// other but always multiply explicit zero activations.
     pub conv_wgt: Vec<Vec<Vec<Vec<u64>>>>,
-    /// FC head weight levels, `[classes][c]`.
+    /// FC head weight levels, `[classes][c]` (network-default W bits).
     pub fc_wgt: Vec<Vec<u64>>,
 }
 
@@ -69,7 +93,11 @@ pub struct GoldenTrace {
 
 impl QnnNet {
     /// Derive every weight in the network from one seed (one `Gen`
-    /// stream, layers in graph order).
+    /// stream, layers in graph order).  Each conv's weights are drawn
+    /// in its *resolved* precision's range (layer override or network
+    /// default); out-of-range resolved precisions and overrides on the
+    /// stem are rejected with the typed [`crate::qnn::GraphError`]
+    /// (via `SimError::Graph`).
     pub fn from_seed(
         graph: &QnnGraph,
         precision: QnnPrecision,
@@ -81,13 +109,17 @@ impl QnnNet {
                 "the dataflow executor serves sub-byte precisions (fp32 keeps the legacy cost model)",
             ));
         };
+        let precs =
+            graph.conv_precisions(precision).map_err(|e| SimError::Graph(e.to_string()))?;
         let mut g = Gen::new(seed);
         let mut conv_wgt = Vec::new();
         let mut fc_wgt = Vec::new();
+        let mut pi = 0usize;
         for layer in &graph.layers {
             match *layer {
-                LayerDesc::Conv { c_in, c_out, f, quantized, .. } => {
-                    let wmax = if quantized { weight_level_max(w_bits) } else { weight_level_max(8) };
+                LayerDesc::Conv { c_in, c_out, f, .. } => {
+                    let wmax = weight_level_max(precs[pi].w_bits);
+                    pi += 1;
                     let cp = padded_c(c_in);
                     conv_wgt.push(
                         (0..c_out)
@@ -106,15 +138,26 @@ impl QnnNet {
                 LayerDesc::MaxPool { .. } => {}
             }
         }
-        Ok(QnnNet { graph: graph.clone(), precision, seed, conv_wgt, fc_wgt })
+        Ok(QnnNet { graph: graph.clone(), precision, seed, precs, conv_wgt, fc_wgt })
     }
 
-    /// Activation level bits (uniform across layer boundaries).
+    /// The network-default activation level bits: the input image's
+    /// range and the GAP+FC head's level domain.  Layer boundaries
+    /// requantize to each *consumer's* resolved width, which may
+    /// differ per layer in a mixed graph.
     pub fn a_bits(&self) -> u32 {
         match self.precision {
             QnnPrecision::SubByte { a_bits, .. } => a_bits,
             QnnPrecision::Fp32 => unreachable!("from_seed rejects fp32"),
         }
+    }
+
+    /// The canonical (non-tuned) variant assignment, one per conv
+    /// layer: vmacsr-paper for quantized convs, int16 for the stem —
+    /// what [`Self::golden_forward`] pins and what the autotuner's
+    /// winner equals on Sparq.
+    pub fn canonical_variants(&self) -> Vec<ConvVariant> {
+        self.graph.layers.iter().filter_map(|l| variant_for(l, self.precision)).collect()
     }
 
     /// Input image length in levels (c * h * w).
@@ -131,24 +174,43 @@ impl QnnNet {
     }
 
     /// The exact host-side forward pass the simulated program must
-    /// reproduce bit-for-bit at every layer boundary: hardware-accurate
-    /// conv models (mod-2^16 int16 stem, packed-vmacsr dataflow for
-    /// quantized layers), maxpool on sums, `min(amax, v >> rshift)`
-    /// requantization at every boundary, integer GAP+FC.
+    /// reproduce bit-for-bit at every layer boundary, under the
+    /// *canonical* variant assignment (vmacsr-paper quantized layers,
+    /// mod-2^16 int16 stem): hardware-accurate conv models, maxpool on
+    /// sums, `min(amax, v >> rshift)` requantization at every boundary
+    /// (each boundary at its consumer's resolved activation width),
+    /// integer GAP+FC.  For a compiled network's possibly-autotuned
+    /// assignment use [`Self::golden_forward_with`] /
+    /// [`CompiledQnn::golden`].
     pub fn golden_forward(&self, image: &[u64]) -> Result<GoldenTrace, SimError> {
+        self.golden_forward_with(image, &self.canonical_variants())
+    }
+
+    /// [`Self::golden_forward`] under an explicit per-conv variant
+    /// assignment (one entry per conv layer, graph order): the conv
+    /// model dispatches per variant — packed-vmacsr dataflow,
+    /// strict-exact native ULPPACK, or wrapping int16 — through the
+    /// same region plans and output-element rules the compiler bakes
+    /// streams with, so the boundary requant shifts cannot diverge.
+    pub fn golden_forward_with(
+        &self,
+        image: &[u64],
+        variants: &[ConvVariant],
+    ) -> Result<GoldenTrace, SimError> {
         assert_eq!(image.len(), self.input_len(), "image length != c*h*w");
-        let QnnPrecision::SubByte { w_bits, a_bits } = self.precision else {
+        assert_eq!(variants.len(), self.precs.len(), "one variant per conv layer");
+        let QnnPrecision::SubByte { a_bits: a_default, .. } = self.precision else {
             return Err(SimError::Unsupported("fp32 has no integer golden network"));
         };
-        let amax = act_level_max(a_bits);
+        let amax_default = act_level_max(a_default);
         let (c0, h0, w0) = self.graph.input;
 
         // the flowing value: dense levels (conv inputs are re-padded
         // per layer) or dense sums; bookkeeping mirrors the compiler.
         // Out-of-range input levels clamp exactly like `execute` does.
-        let mut levels: Vec<u64> = image.iter().map(|&v| v.min(amax)).collect();
+        let mut levels: Vec<u64> = image.iter().map(|&v| v.min(amax_default)).collect();
         let mut dims = (c0, h0, w0);
-        let mut max_val = amax;
+        let mut max_val = amax_default;
         let mut is_levels = true;
         let mut conv_ix = 0usize;
         let mut layer_outs = Vec::new();
@@ -156,10 +218,16 @@ impl QnnNet {
 
         for layer in &self.graph.layers {
             match *layer {
-                LayerDesc::Conv { c_in, c_out, h, w, f, quantized } => {
+                LayerDesc::Conv { c_in, c_out, h, w, f, .. } => {
+                    let p = self.precs[conv_ix];
+                    let variant = variants[conv_ix];
+                    // the boundary requantizes to THIS consumer's
+                    // resolved activation width — re-derived per
+                    // adjacent precision pair in a mixed graph
+                    let amax_l = act_level_max(p.a_bits);
                     if !is_levels {
-                        // boundary requant happens on entry to a conv
-                        levels = levels.iter().map(|&v| requant_host(v, requant::rshift_for(max_val, a_bits), amax)).collect();
+                        let rs = requant::rshift_for(max_val, p.a_bits);
+                        levels = levels.iter().map(|&v| requant_host(v, rs, amax_l)).collect();
                         is_levels = true;
                     }
                     let cp = padded_c(c_in);
@@ -176,7 +244,7 @@ impl QnnNet {
                         }
                     }
                     let d = ConvDims { c: cp, h: hp, w: wp, co: c_out, fh: f, fw: f };
-                    let (wb, ab) = if quantized { (w_bits, a_bits) } else { (8, a_bits) };
+                    let (wb, ab) = variant.bits();
                     let wl = Workload {
                         dims: d,
                         w_bits: wb,
@@ -186,38 +254,17 @@ impl QnnNet {
                         act_f32: vec![],
                         wgt_f32: vec![],
                     };
-                    // the hardware-accurate conv model + the element the
-                    // machine stores it in (the latter from the same
-                    // conv_engine helper `compile` resolves through, so
-                    // the boundary rshift cannot diverge)
-                    let (out, out_el) = if quantized {
-                        let plan = region::plan_vmacsr(
-                            w_bits,
-                            a_bits,
-                            d.issues_per_output(),
-                            crate::ulppack::RegionMode::Paper,
-                        )
-                        .ok_or(SimError::Unsupported("precision outside every container's region"))?;
-                        (
-                            golden_packed_vmacsr(&wl, plan.container, plan.spill_every),
-                            conv_engine::vmacsr_out_elem(
-                                plan.container,
-                                plan.spill_every,
-                                d.issues_per_output(),
-                            ),
-                        )
-                    } else {
-                        // the int16 stem wraps mod 2^16
-                        (golden_mod(&wl, 16), OutElem::U16)
-                    };
+                    // the hardware-accurate conv model for the chosen
+                    // variant + the element the machine stores it in
+                    // (from the same conv_engine rules `compile`
+                    // resolves through, so the boundary rshift cannot
+                    // diverge)
+                    let (out, out_el) = golden_conv(&wl, variant)?;
                     layer_outs.push(out.clone());
                     levels = out.iter().map(|&v| v as u64).collect();
                     dims = (c_out, h, w);
-                    max_val = (c_in as u64
-                        * (f * f) as u64
-                        * amax
-                        * if quantized { weight_level_max(w_bits) } else { weight_level_max(8) })
-                    .min(elem_cap(out_el));
+                    max_val =
+                        conv_out_max(c_in, f, amax_l, weight_level_max(p.w_bits), out_el);
                     is_levels = false;
                     conv_ix += 1;
                 }
@@ -229,10 +276,11 @@ impl QnnNet {
                     dims = (c, h / 2, w / 2);
                 }
                 LayerDesc::GapFc { c, .. } => {
-                    let rshift = requant_host_shift(is_levels, max_val, a_bits);
+                    // the head's level domain is the network default
+                    let rshift = requant_host_shift(is_levels, max_val, a_default);
                     let lv: Vec<i64> = levels
                         .iter()
-                        .map(|&v| requant_host(v, rshift, amax) as i64)
+                        .map(|&v| requant_host(v, rshift, amax_default) as i64)
                         .collect();
                     let hw = dims.1 * dims.2;
                     logits = gap_fc_host(&lv, c, hw, &self.fc_wgt);
@@ -243,6 +291,56 @@ impl QnnNet {
         let argmax = argmax_i64(&logits);
         Ok(GoldenTrace { layer_outs, logits, argmax })
     }
+}
+
+/// The host golden model of one conv layer under a concrete variant,
+/// plus the output element the machine stores it in — the single
+/// dispatch both [`QnnNet::golden_forward_with`] and the compiler's
+/// value-range bookkeeping share.
+fn golden_conv(wl: &Workload, variant: ConvVariant) -> Result<(Vec<i64>, OutElem), SimError> {
+    match variant {
+        // int16 wraps mod 2^16 (the stem, and the unpacked fallback)
+        ConvVariant::Int16 => Ok((golden_mod(wl, 16), OutElem::U16)),
+        ConvVariant::Vmacsr { w_bits, a_bits, mode } => {
+            let issues = wl.dims.issues_per_output();
+            let plan = region::plan_vmacsr(w_bits, a_bits, issues, mode)
+                .ok_or(SimError::Unsupported("precision outside every container's region"))?;
+            Ok((
+                golden_packed_vmacsr(wl, plan.container, plan.spill_every),
+                conv_engine::vmacsr_out_elem(plan.container, plan.spill_every, issues),
+            ))
+        }
+        ConvVariant::Native { w_bits, a_bits } => {
+            // native ULPPACK is strict-exact; the engine's
+            // wide-accumulator guard forbids reductions that could wrap
+            let plan = region::plan_native(w_bits, a_bits)
+                .ok_or(SimError::Unsupported("precision pair not natively packable"))?;
+            let out_el = conv_engine::packed_out_elem(plan.container, true);
+            let bits = match out_el {
+                OutElem::U16 => 16,
+                _ => 32,
+            };
+            Ok((golden_mod(wl, bits), out_el))
+        }
+        ConvVariant::Fp32 => Err(SimError::Unsupported("fp32 has no integer golden network")),
+    }
+}
+
+/// Element width in bits of a conv output element (the unit the graph
+/// validator's boundary chain is expressed in).
+fn out_bits(e: OutElem) -> u32 {
+    match e {
+        OutElem::U16 => 16,
+        OutElem::U32 | OutElem::F32 => 32,
+    }
+}
+
+/// Worst-case output value of a conv layer, capped at what its output
+/// element can physically hold — the bound both the compiler's
+/// `Flow::max_val` and the golden network share, so the boundary
+/// requant shift is identical by construction.
+fn conv_out_max(c_in: u32, f: u32, amax_in: u64, wmax: u64, out_el: OutElem) -> u64 {
+    (c_in as u64 * (f * f) as u64 * amax_in * wmax).min(elem_cap(out_el))
 }
 
 /// Requant shift on entry to a consumer: identity for values that are
@@ -336,6 +434,18 @@ struct InputDesc {
     pad: u32,
 }
 
+/// How the compiler assigns kernel variants to conv layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VariantPolicy {
+    /// Per-layer autotuning: the fastest measured chain-legal variant
+    /// from the [`crate::kernels::autotune`] ranking (the default).
+    Autotuned,
+    /// Every conv runs the unpacked int16 kernel — the paper's speedup
+    /// denominator as a whole network (benches only; boundaries are
+    /// trivially legal at uniform E16).
+    AllInt16,
+}
+
 /// The whole QNN compiled once: chained per-layer programs over one
 /// planned activation arena.  Execute any number of times on pooled
 /// machines; outputs and cycle counts are bit-identical per execution.
@@ -349,6 +459,12 @@ pub struct CompiledQnn {
     pub logits: OutputRef,
     /// Simulated-DRAM bytes a machine needs for the arena.
     pub mem_bytes: usize,
+    /// The chosen kernel variant per conv layer (graph order) — what
+    /// [`Self::golden`] pins the execution against.
+    pub variants: Vec<ConvVariant>,
+    /// The autotune ranking each conv choice came from (`None` under
+    /// a fixed [`VariantPolicy`]), for reports and bench JSON.
+    pub tuned: Vec<Option<Arc<TuneOutcome>>>,
     input: InputDesc,
 }
 
@@ -378,19 +494,49 @@ struct Flow {
 }
 
 impl CompiledQnn {
-    /// Compile `net`'s graph for `cfg`: plan the arena, compile every
-    /// conv in it, and emit the boundary/pool/head streams.
+    /// Compile `net`'s graph for `cfg` with per-layer autotuning
+    /// against a transient tune memo: plan the arena, compile every
+    /// conv in it, and emit the boundary/pool/head streams.  Callers
+    /// that compile repeatedly (serving, sweeps) should go through
+    /// [`ProgramCache::get_or_compile_qnn`] /
+    /// [`Self::compile_tuned`] so rankings memoize.
     pub fn compile(cfg: &ProcessorConfig, net: QnnNet) -> Result<CompiledQnn, SimError> {
+        Self::compile_tuned(cfg, net, &ProgramCache::new())
+    }
+
+    /// [`Self::compile`] with autotune rankings memoized in (and
+    /// served from) `cache` under their `TuneKey`s.
+    pub fn compile_tuned(
+        cfg: &ProcessorConfig,
+        net: QnnNet,
+        cache: &ProgramCache,
+    ) -> Result<CompiledQnn, SimError> {
+        Self::compile_policy(cfg, net, cache, VariantPolicy::Autotuned)
+    }
+
+    /// The full form: compile under an explicit [`VariantPolicy`].
+    pub fn compile_policy(
+        cfg: &ProcessorConfig,
+        net: QnnNet,
+        cache: &ProgramCache,
+        policy: VariantPolicy,
+    ) -> Result<CompiledQnn, SimError> {
         use crate::isa::Sew;
-        net.graph.validate().map_err(|e| SimError::Graph(e.to_string()))?;
+        net.graph
+            .validate_for(cfg, net.precision)
+            .map_err(|e| SimError::Graph(e.to_string()))?;
         let QnnPrecision::SubByte { w_bits, a_bits } = net.precision else {
             return Err(SimError::Unsupported("fp32 is served by the legacy cost model"));
         };
+        // the network-default activation width: the image range and
+        // the head's level domain (boundaries use per-layer widths)
         let amax = act_level_max(a_bits);
         let opts = EngineOpts::default();
         let mut la = LayoutAlloc::new();
         let mut stages: Vec<QnnStage> = Vec::new();
         let mut taps: Vec<LayerTap> = Vec::new();
+        let mut variants: Vec<ConvVariant> = Vec::new();
+        let mut tuned: Vec<Option<Arc<TuneOutcome>>> = Vec::new();
         let mut flow: Option<Flow> = None;
         let mut input: Option<InputDesc> = None;
         let mut logits: Option<OutputRef> = None;
@@ -398,12 +544,57 @@ impl CompiledQnn {
 
         for (li, layer) in net.graph.layers.iter().enumerate() {
             match *layer {
-                LayerDesc::Conv { c_in, c_out, h, w, f, quantized } => {
+                LayerDesc::Conv { c_in, c_out, h, w, f, .. } => {
+                    let p = net.precs[conv_ix];
                     let cp = padded_c(c_in);
                     let pad = (f - 1) / 2;
                     let d = ConvDims { c: cp, h: h + f - 1, w: w + f - 1, co: c_out, fh: f, fw: f };
-                    let variant = variant_for(layer, net.precision)
-                        .expect("conv layers always map to a variant");
+                    // pick the layer's kernel: the fastest measured
+                    // variant that (a) preserves the layer's canonical
+                    // OUTPUT element width — so the chain the validator
+                    // checked is exactly the chain that compiles, layer
+                    // by layer — and (b) loads its input at a width the
+                    // previous (canonical-width) output can narrow to in
+                    // one step.  The canonical candidate itself always
+                    // satisfies both, so whenever it compiles (it is in
+                    // every ranking) a pick exists.
+                    let (variant, outcome) = match policy {
+                        VariantPolicy::AllInt16 => (ConvVariant::Int16, None),
+                        VariantPolicy::Autotuned => {
+                            let outcome = autotune::autotune_conv(
+                                cache, cfg, d, p.w_bits, p.a_bits, p.quantized, opts,
+                            )?;
+                            let canon_out = if p.quantized {
+                                crate::qnn::graph::canonical_widths(
+                                    cfg,
+                                    p.w_bits,
+                                    p.a_bits,
+                                    d.issues_per_output(),
+                                )
+                                .expect("validate_for admitted this layer's precision")
+                                .1
+                            } else {
+                                16 // int16 stem: wrapping u16 sums
+                            };
+                            let prev = flow.map(|fl| fl.sew);
+                            let pick = outcome
+                                .ranked
+                                .iter()
+                                .find(|c| match autotune::variant_io(c.variant, d) {
+                                    Some((in_sew, out_el)) => {
+                                        out_bits(out_el) == canon_out
+                                            && prev.is_none_or(|pv| {
+                                                in_sew == pv || in_sew.widened() == Some(pv)
+                                            })
+                                    }
+                                    None => false,
+                                })
+                                .ok_or(SimError::Unsupported(
+                                    "no tuned conv variant chains at this layer boundary",
+                                ))?;
+                            (pick.variant, Some(Arc::clone(&outcome)))
+                        }
+                    };
                     let (wb, ab) = variant.bits();
                     let wl = Workload {
                         dims: d,
@@ -423,6 +614,15 @@ impl CompiledQnn {
                         2 => Sew::E16,
                         _ => Sew::E32,
                     };
+                    // the analytic widths the variant was picked by must
+                    // equal what the engine actually compiled
+                    if let Some((vio_sew, vio_elem)) = autotune::variant_io(variant, d) {
+                        debug_assert_eq!(vio_sew, in_sew, "variant_io input width diverged");
+                        debug_assert_eq!(vio_elem, cc.out.elem, "variant_io output elem diverged");
+                    }
+                    // this consumer's resolved activation width: the
+                    // boundary requant is re-derived per adjacent pair
+                    let amax_l = act_level_max(p.a_bits);
                     match flow {
                         None => {
                             // layer 0: the host stages the image here
@@ -448,8 +648,8 @@ impl CompiledQnn {
                                 dst_sew: in_sew,
                                 c_pad: cp,
                                 pad,
-                                rshift: requant::rshift_for(fl.max_val, a_bits),
-                                amax,
+                                rshift: requant::rshift_for(fl.max_val, p.a_bits),
+                                amax: amax_l,
                             };
                             if !(fl.sew == in_sew || in_sew.widened() == Some(fl.sew)) {
                                 return Err(SimError::Unsupported(
@@ -467,8 +667,8 @@ impl CompiledQnn {
                     // never exceeds u16::MAX, whatever the exact bound
                     // says) — this also keeps the boundary's requant
                     // shift below the wide element width for any graph
-                    let max_val = (c_in as u64 * (f * f) as u64 * amax * weight_level_max(wb))
-                        .min(elem_cap(out.elem));
+                    let max_val =
+                        conv_out_max(c_in, f, amax_l, weight_level_max(p.w_bits), out.elem);
                     flow = Some(Flow {
                         addr: out.addr,
                         sew: out_sew(out.elem),
@@ -479,6 +679,8 @@ impl CompiledQnn {
                     });
                     taps.push(LayerTap { out });
                     stages.push(QnnStage { layer: li, kind: StageKind::Conv(Box::new(cc)) });
+                    variants.push(variant);
+                    tuned.push(outcome);
                     conv_ix += 1;
                 }
                 LayerDesc::MaxPool { c, h, w } => {
@@ -577,8 +779,16 @@ impl CompiledQnn {
             taps,
             logits,
             mem_bytes,
+            variants,
+            tuned,
             input,
         })
+    }
+
+    /// The golden forward pass under THIS compilation's per-layer
+    /// variant choices — what the executed arena is pinned against.
+    pub fn golden(&self, image: &[u64]) -> Result<GoldenTrace, SimError> {
+        self.net.golden_forward_with(image, &self.variants)
     }
 
     /// Execute one inference: reset the machine, stage the image into
@@ -788,5 +998,85 @@ mod tests {
         assert_eq!(a.conv_wgt, b.conv_wgt);
         assert_eq!(a.fc_wgt, b.fc_wgt);
         assert_ne!(a.conv_wgt, c.conv_wgt);
+    }
+
+    #[test]
+    fn autotuned_choice_is_the_canonical_vmacsr_on_sparq() {
+        // on Sparq the measured winner per layer must be the canonical
+        // vmacsr-paper assignment (the golden_forward default), so the
+        // plain golden network keeps pinning autotuned compilations
+        let net = QnnNet::from_seed(&QnnGraph::sparq_cnn(), w2a2(), 3).unwrap();
+        let canonical = net.canonical_variants();
+        let cq = CompiledQnn::compile(&ProcessorConfig::sparq(), net).unwrap();
+        assert_eq!(cq.variants, canonical);
+        // the quantized layers carry full rankings (4 candidates
+        // measured or rejected), the stem a single-int16 one
+        assert_eq!(cq.tuned.len(), 3);
+        let stem = cq.tuned[0].as_ref().unwrap();
+        assert_eq!(stem.ranked.len(), 1);
+        for t in &cq.tuned[1..] {
+            let t = t.as_ref().unwrap();
+            assert_eq!(t.ranked.len() + t.rejected.len(), 4);
+            assert!(t.ranked.len() >= 2, "vmacsr + at least one fallback must run");
+        }
+    }
+
+    #[test]
+    fn mixed_precision_weights_follow_the_per_layer_resolution() {
+        let g = QnnGraph::sparq_cnn_mixed((4, 4), (2, 2));
+        let net = QnnNet::from_seed(&g, w2a2(), 5).unwrap();
+        // stem at 8-bit weights, conv2 at W4 levels (<= 14), conv3 at
+        // W2 levels (<= 2)
+        assert_eq!(net.precs.len(), 3);
+        let max_of = |t: &[Vec<Vec<u64>>]| {
+            t.iter().flatten().flatten().copied().max().unwrap()
+        };
+        assert!(max_of(&net.conv_wgt[1]) > 2, "W4 weights must use the wider range");
+        assert!(max_of(&net.conv_wgt[1]) <= 14);
+        assert!(max_of(&net.conv_wgt[2]) <= 2);
+    }
+
+    #[test]
+    fn mixed_network_executes_and_matches_its_golden() {
+        let g = QnnGraph::sparq_cnn_mixed((4, 4), (2, 2));
+        let net = QnnNet::from_seed(&g, w2a2(), 0x31BED).unwrap();
+        let cq = CompiledQnn::compile(&ProcessorConfig::sparq(), net).unwrap();
+        let image = cq.net.test_image(11);
+        let golden = cq.golden(&image).unwrap();
+        let mut m = Machine::new(cq.cfg.clone(), cq.mem_bytes);
+        let run = cq.execute(&mut m, &image).unwrap();
+        for li in 0..cq.net.graph.layers.len() {
+            assert_eq!(cq.read_tap(&m, li).unwrap(), golden.layer_outs[li], "layer {li}");
+        }
+        assert_eq!(run.logits, golden.logits);
+    }
+
+    #[test]
+    fn all_int16_policy_compiles_and_is_slower() {
+        let cache = ProgramCache::new();
+        let cfg = ProcessorConfig::sparq();
+        let tuned = CompiledQnn::compile_tuned(
+            &cfg,
+            QnnNet::from_seed(&QnnGraph::sparq_cnn(), w2a2(), 9).unwrap(),
+            &cache,
+        )
+        .unwrap();
+        let int16 = CompiledQnn::compile_policy(
+            &cfg,
+            QnnNet::from_seed(&QnnGraph::sparq_cnn(), w2a2(), 9).unwrap(),
+            &cache,
+            VariantPolicy::AllInt16,
+        )
+        .unwrap();
+        assert!(int16.variants.iter().all(|v| matches!(v, ConvVariant::Int16)));
+        let image = tuned.net.test_image(2);
+        let mut m = Machine::new(cfg.clone(), tuned.mem_bytes);
+        let fast = tuned.execute(&mut m, &image).unwrap();
+        let mut m = Machine::new(cfg.clone(), int16.mem_bytes);
+        let slow = int16.execute(&mut m, &image).unwrap();
+        // both pin against their own golden, and the autotuned network
+        // is strictly faster than the all-int16 denominator
+        assert_eq!(slow.logits, int16.golden(&image).unwrap().logits);
+        assert!(fast.total_cycles() < slow.total_cycles());
     }
 }

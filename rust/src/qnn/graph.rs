@@ -1,12 +1,49 @@
 //! Static description of the SparqCNN architecture (kept in lock-step
 //! with `python/compile/model.py` — the artifact manifest carries the
-//! same shapes and the integration tests cross-check them).
+//! same shapes and the integration tests cross-check them), plus the
+//! mixed-precision legality rules the dataflow compiler enforces.
+//!
+//! ## Per-layer precision
+//!
+//! A quantized conv may carry an optional `(w_bits, a_bits)` override
+//! (`precision`); layers without one inherit the network default
+//! ([`crate::qnn::schedule::QnnPrecision`]).  Legality is checked at
+//! two levels:
+//!
+//! * [`QnnGraph::validate`] — graph-intrinsic rules (shape chaining,
+//!   override ranges, overrides only on quantized layers), no
+//!   processor needed.
+//! * [`QnnGraph::validate_for`] — the full mixed-precision rules for a
+//!   concrete processor: every resolved precision must map to a legal
+//!   kernel variant (vmacsr-only precisions are rejected on Ara-like
+//!   configs with no `vmacsr`), and every requant boundary must narrow
+//!   to the next layer's activation element width in at most one
+//!   `vnsrl` step (a wide u32 producer cannot feed an 8-bit-container
+//!   consumer directly).  Boundary widths are derived from the
+//!   *canonical* variant assignment (the same region-calculus plan the
+//!   compiler and the golden network resolve through); the autotuner
+//!   may only substitute variants that keep the chain legal.
+
+use crate::arch::ProcessorConfig;
+use crate::isa::Sew;
+use crate::qnn::schedule::QnnPrecision;
+use crate::ulppack::region::{self, Container, RegionMode};
 
 /// One layer of the network.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerDesc {
     /// 'same' conv: C_in x H x W -> C_out x H x W with an FxF kernel.
-    Conv { c_in: u32, c_out: u32, h: u32, w: u32, f: u32, quantized: bool },
+    /// `precision` is the optional per-layer `(w_bits, a_bits)`
+    /// override; `None` inherits the network default.
+    Conv {
+        c_in: u32,
+        c_out: u32,
+        h: u32,
+        w: u32,
+        f: u32,
+        quantized: bool,
+        precision: Option<(u32, u32)>,
+    },
     /// 2x2 max pool (halves H and W).
     MaxPool { c: u32, h: u32, w: u32 },
     /// Global average pool + linear head.
@@ -58,7 +95,8 @@ impl LayerDesc {
     }
 }
 
-/// Why a [`QnnGraph`] failed shape-chaining validation.
+/// Why a [`QnnGraph`] failed shape-chaining or mixed-precision
+/// validation.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum GraphError {
     Empty,
@@ -73,6 +111,21 @@ pub enum GraphError {
     HeadNotLast { layer: usize },
     /// The head's class count disagrees with the graph's.
     ClassMismatch { head: u32, graph: u32 },
+    /// A resolved quantized-layer precision is outside the sub-byte
+    /// range the packed kernels support (W and A in 1..=4).
+    BadPrecision { layer: usize, w_bits: u32, a_bits: u32 },
+    /// A per-layer precision override on a non-quantized (int16 stem)
+    /// conv — the stem always runs 8-bit weights.
+    OverrideOnStem { layer: usize },
+    /// No kernel variant on this processor can run the layer's
+    /// resolved precision (e.g. W4A4 on an Ara-like config: vmacsr is
+    /// absent and the native ULPPACK scheme cannot admit the pair).
+    VariantUnsupported { layer: usize, w_bits: u32, a_bits: u32, processor: String },
+    /// A requant boundary would have to narrow by more than one
+    /// element-width step (the producer's wide output element vs the
+    /// consumer's container width under the canonical variant
+    /// assignment) — `vnsrl` narrows one step per boundary.
+    BoundaryWidth { layer: usize, from_bits: u32, to_bits: u32 },
 }
 
 impl std::fmt::Display for GraphError {
@@ -95,6 +148,24 @@ impl std::fmt::Display for GraphError {
             GraphError::ClassMismatch { head, graph } => {
                 write!(f, "head produces {head} classes but the graph declares {graph}")
             }
+            GraphError::BadPrecision { layer, w_bits, a_bits } => write!(
+                f,
+                "layer {layer}: resolved precision W{w_bits}A{a_bits} outside the sub-byte range 1..=4"
+            ),
+            GraphError::OverrideOnStem { layer } => write!(
+                f,
+                "layer {layer}: precision override on a non-quantized stem conv (the stem runs int16)"
+            ),
+            GraphError::VariantUnsupported { layer, w_bits, a_bits, ref processor } => write!(
+                f,
+                "layer {layer}: no kernel variant runs W{w_bits}A{a_bits} on '{processor}' \
+                 (vmacsr absent and the precision is outside the native ULPPACK region)"
+            ),
+            GraphError::BoundaryWidth { layer, from_bits, to_bits } => write!(
+                f,
+                "layer {layer}: requant boundary narrows {from_bits}-bit producer elements to \
+                 {to_bits}-bit consumer elements (more than one vnsrl step)"
+            ),
         }
     }
 }
@@ -125,16 +196,58 @@ impl QnnGraph {
     pub fn sparq_cnn() -> QnnGraph {
         QnnGraph {
             layers: vec![
-                LayerDesc::Conv { c_in: 1, c_out: 16, h: 16, w: 16, f: 3, quantized: false },
-                LayerDesc::Conv { c_in: 16, c_out: 32, h: 16, w: 16, f: 3, quantized: true },
+                LayerDesc::Conv {
+                    c_in: 1,
+                    c_out: 16,
+                    h: 16,
+                    w: 16,
+                    f: 3,
+                    quantized: false,
+                    precision: None,
+                },
+                LayerDesc::Conv {
+                    c_in: 16,
+                    c_out: 32,
+                    h: 16,
+                    w: 16,
+                    f: 3,
+                    quantized: true,
+                    precision: None,
+                },
                 LayerDesc::MaxPool { c: 32, h: 16, w: 16 },
-                LayerDesc::Conv { c_in: 32, c_out: 32, h: 8, w: 8, f: 3, quantized: true },
+                LayerDesc::Conv {
+                    c_in: 32,
+                    c_out: 32,
+                    h: 8,
+                    w: 8,
+                    f: 3,
+                    quantized: true,
+                    precision: None,
+                },
                 LayerDesc::MaxPool { c: 32, h: 8, w: 8 },
                 LayerDesc::GapFc { c: 32, classes: 4 },
             ],
             input: (1, 16, 16),
             classes: 4,
         }
+    }
+
+    /// The SparqCNN with per-layer precision overrides on the two
+    /// quantized convs: `stem_adj` on the stem-adjacent conv (layer 1)
+    /// and `deep` on the deeper conv (layer 3).  The paper's precision
+    /// ladder in mixed form — e.g. a W4A4 stem-adjacent conv keeping
+    /// early-layer fidelity over a W2A2 deep conv taking the 3.2x
+    /// throughput.
+    pub fn sparq_cnn_mixed(stem_adj: (u32, u32), deep: (u32, u32)) -> QnnGraph {
+        let mut g = QnnGraph::sparq_cnn();
+        let set = |l: &mut LayerDesc, p: (u32, u32)| {
+            if let LayerDesc::Conv { precision, .. } = l {
+                *precision = Some(p);
+            }
+        };
+        set(&mut g.layers[1], stem_adj);
+        set(&mut g.layers[3], deep);
+        g
     }
 
     pub fn total_macs(&self) -> u64 {
@@ -148,6 +261,12 @@ impl QnnGraph {
     /// class count.  Before this check existed, mismatched graphs
     /// scheduled silently against per-layer random tensors; the
     /// dataflow compiler refuses them instead.
+    ///
+    /// Also enforces the graph-intrinsic precision rules: an explicit
+    /// per-layer override must target a quantized conv and stay inside
+    /// the sub-byte range 1..=4.  The processor-dependent rules
+    /// (variant availability, boundary widths) live in
+    /// [`Self::validate_for`].
     pub fn validate(&self) -> Result<(), GraphError> {
         if self.layers.is_empty() {
             return Err(GraphError::Empty);
@@ -163,6 +282,12 @@ impl QnnGraph {
             match *layer {
                 LayerDesc::Conv { f, .. } if f % 2 == 0 => {
                     return Err(GraphError::EvenKernel { layer: li, f });
+                }
+                LayerDesc::Conv { quantized, precision: Some((w, a)), .. } => {
+                    if !quantized {
+                        return Err(GraphError::OverrideOnStem { layer: li });
+                    }
+                    check_subbyte_range(li, w, a)?;
                 }
                 LayerDesc::MaxPool { h, w, .. } if h % 2 != 0 || w % 2 != 0 => {
                     return Err(GraphError::OddPool { layer: li, h, w });
@@ -183,6 +308,153 @@ impl QnnGraph {
             cur = layer.out_dims();
         }
         Ok(())
+    }
+
+    /// Per-conv resolved `(w_bits, a_bits, quantized)` under `default`,
+    /// in graph order, with range checking of the *resolved* values
+    /// (an out-of-range network default is rejected exactly like an
+    /// out-of-range override).  The int16 stem resolves to 8-bit
+    /// weights and the network's activation width.  Under
+    /// [`QnnPrecision::Fp32`] the overrides are ignored (the fp32
+    /// baseline has no level domain — see `qnn::schedule`'s documented
+    /// fallback) and every conv resolves to (8, 8).
+    pub fn conv_precisions(&self, default: QnnPrecision) -> Result<Vec<ConvPrec>, GraphError> {
+        let mut out = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let LayerDesc::Conv { quantized, precision, .. } = *layer else { continue };
+            let (w, a) = match default {
+                QnnPrecision::Fp32 => (8, 8),
+                QnnPrecision::SubByte { w_bits, a_bits } => {
+                    if !quantized {
+                        if precision.is_some() {
+                            return Err(GraphError::OverrideOnStem { layer: li });
+                        }
+                        (8, a_bits)
+                    } else {
+                        let (w, a) = precision.unwrap_or((w_bits, a_bits));
+                        check_subbyte_range(li, w, a)?;
+                        (w, a)
+                    }
+                }
+            };
+            out.push(ConvPrec { layer: li, w_bits: w, a_bits: a, quantized });
+        }
+        Ok(out)
+    }
+
+    /// The full mixed-precision legality check for a concrete
+    /// processor (on top of [`Self::validate`]):
+    ///
+    /// 1. every resolved quantized precision must map to a legal
+    ///    canonical kernel variant on `cfg` — `vmacsr` where the
+    ///    processor has it, the native ULPPACK scheme otherwise;
+    ///    precisions only `vmacsr` can run (e.g. W4A4) are rejected on
+    ///    Ara-like configs with [`GraphError::VariantUnsupported`];
+    /// 2. every requant boundary must narrow to the consumer's element
+    ///    width in at most one `vnsrl` step
+    ///    ([`GraphError::BoundaryWidth`]), with producer/consumer
+    ///    widths derived from the same region-calculus plans the
+    ///    compiler and the golden network resolve through.
+    pub fn validate_for(&self, cfg: &ProcessorConfig, default: QnnPrecision) -> Result<(), GraphError> {
+        self.validate()?;
+        if matches!(default, QnnPrecision::Fp32) {
+            // the fp32 baseline never chains boundaries (legacy
+            // per-layer estimate); nothing processor-specific to check
+            return Ok(());
+        }
+        let precs = self.conv_precisions(default)?;
+        let mut precs = precs.iter();
+        // element width flowing between layers: a conv sets its output
+        // width, pools preserve it, the head always narrows legally
+        let mut flow: Option<u32> = None;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let LayerDesc::Conv { c_in, f, quantized, .. } = *layer else { continue };
+            let p = precs.next().expect("conv_precisions covers every conv");
+            debug_assert_eq!(p.layer, li);
+            let issues = (padded_c(c_in) as u64 / 2) * (f * f) as u64;
+            let (in_bits, out_bits) = if !quantized {
+                (16, 16) // int16 stem: E16 levels in, wrapping u16 sums out
+            } else {
+                canonical_widths(cfg, p.w_bits, p.a_bits, issues).ok_or(
+                    GraphError::VariantUnsupported {
+                        layer: li,
+                        w_bits: p.w_bits,
+                        a_bits: p.a_bits,
+                        processor: cfg.name.clone(),
+                    },
+                )?
+            };
+            if let Some(from) = flow {
+                // equal widths or one narrowing step (vnsrl halves)
+                if !(in_bits == from || 2 * in_bits == from) {
+                    return Err(GraphError::BoundaryWidth { layer: li, from_bits: from, to_bits: in_bits });
+                }
+            }
+            flow = Some(out_bits);
+        }
+        Ok(())
+    }
+}
+
+/// The one definition of the legal sub-byte range: a quantized conv's
+/// resolved (W, A) — explicit override or network default — must land
+/// in 1..=4.  Shared by [`QnnGraph::validate`] (override checking) and
+/// [`QnnGraph::conv_precisions`] (resolved checking) so the two entry
+/// points cannot drift.
+fn check_subbyte_range(layer: usize, w_bits: u32, a_bits: u32) -> Result<(), GraphError> {
+    if !(1..=4).contains(&w_bits) || !(1..=4).contains(&a_bits) {
+        return Err(GraphError::BadPrecision { layer, w_bits, a_bits });
+    }
+    Ok(())
+}
+
+/// One conv layer's resolved precision (see
+/// [`QnnGraph::conv_precisions`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvPrec {
+    /// Graph layer index.
+    pub layer: usize,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub quantized: bool,
+}
+
+/// (input element bits, output element bits) of the canonical variant
+/// for a quantized conv at (W, A) on `cfg`: the vmacsr plan where the
+/// processor implements `vmacsr`, the native ULPPACK plan otherwise;
+/// `None` when neither scheme admits the pair.  Kept in lock-step with
+/// the conv engine's element choices by `conv_engine::vmacsr_out_elem`
+/// / `packed_out_elem` (the compiler asserts agreement).
+pub(crate) fn canonical_widths(
+    cfg: &ProcessorConfig,
+    w_bits: u32,
+    a_bits: u32,
+    issues: u64,
+) -> Option<(u32, u32)> {
+    let (container, out_elem) = if cfg.vmacsr {
+        let plan = region::plan_vmacsr(w_bits, a_bits, issues, RegionMode::Paper)?;
+        (
+            plan.container,
+            crate::kernels::conv_engine::vmacsr_out_elem(plan.container, plan.spill_every, issues),
+        )
+    } else {
+        let plan = region::plan_native(w_bits, a_bits)?;
+        // the native scheme always keeps a wide accumulator
+        (plan.container, crate::kernels::conv_engine::packed_out_elem(plan.container, true))
+    };
+    let in_bits = container_sew(container).bits();
+    let out_bits = match out_elem {
+        crate::kernels::workload::OutElem::U16 => 16,
+        _ => 32,
+    };
+    Some((in_bits, out_bits))
+}
+
+/// The element width packed levels load at for a container.
+pub(crate) fn container_sew(c: Container) -> Sew {
+    match c {
+        Container::Lp => Sew::E16,
+        Container::Ulp => Sew::E8,
     }
 }
 
@@ -216,7 +488,15 @@ mod tests {
     fn mismatched_channels_rejected() {
         let mut g = QnnGraph::sparq_cnn();
         // conv2 claims 8 input channels; conv1 produces 16
-        g.layers[1] = LayerDesc::Conv { c_in: 8, c_out: 32, h: 16, w: 16, f: 3, quantized: true };
+        g.layers[1] = LayerDesc::Conv {
+            c_in: 8,
+            c_out: 32,
+            h: 16,
+            w: 16,
+            f: 3,
+            quantized: true,
+            precision: None,
+        };
         assert!(matches!(g.validate(), Err(GraphError::ShapeMismatch { layer: 1, .. })));
     }
 
@@ -224,7 +504,15 @@ mod tests {
     fn mismatched_spatial_dims_rejected() {
         let mut g = QnnGraph::sparq_cnn();
         // conv3 claims the pre-pool 16x16 extent
-        g.layers[3] = LayerDesc::Conv { c_in: 32, c_out: 32, h: 16, w: 16, f: 3, quantized: true };
+        g.layers[3] = LayerDesc::Conv {
+            c_in: 32,
+            c_out: 32,
+            h: 16,
+            w: 16,
+            f: 3,
+            quantized: true,
+            precision: None,
+        };
         assert!(matches!(g.validate(), Err(GraphError::ShapeMismatch { layer: 3, .. })));
     }
 
@@ -244,7 +532,15 @@ mod tests {
         };
         assert!(matches!(g.validate(), Err(GraphError::OddPool { layer: 0, .. })));
         let g = QnnGraph {
-            layers: vec![LayerDesc::Conv { c_in: 2, c_out: 4, h: 8, w: 8, f: 2, quantized: true }],
+            layers: vec![LayerDesc::Conv {
+                c_in: 2,
+                c_out: 4,
+                h: 8,
+                w: 8,
+                f: 2,
+                quantized: true,
+                precision: None,
+            }],
             input: (2, 8, 8),
             classes: 4,
         };
@@ -273,5 +569,122 @@ mod tests {
         assert_eq!(g.validate(), Err(GraphError::Empty));
         assert_eq!(padded_c(1), 2);
         assert_eq!(padded_c(16), 16);
+    }
+
+    fn w(bits: u32) -> QnnPrecision {
+        QnnPrecision::SubByte { w_bits: bits, a_bits: bits }
+    }
+
+    #[test]
+    fn override_out_of_range_rejected() {
+        let g = QnnGraph::sparq_cnn_mixed((5, 2), (2, 2));
+        assert_eq!(
+            g.validate(),
+            Err(GraphError::BadPrecision { layer: 1, w_bits: 5, a_bits: 2 })
+        );
+        let g = QnnGraph::sparq_cnn_mixed((2, 2), (2, 0));
+        assert_eq!(
+            g.validate(),
+            Err(GraphError::BadPrecision { layer: 3, w_bits: 2, a_bits: 0 })
+        );
+    }
+
+    #[test]
+    fn override_on_the_stem_rejected() {
+        let mut g = QnnGraph::sparq_cnn();
+        if let LayerDesc::Conv { precision, .. } = &mut g.layers[0] {
+            *precision = Some((2, 2));
+        }
+        assert_eq!(g.validate(), Err(GraphError::OverrideOnStem { layer: 0 }));
+    }
+
+    #[test]
+    fn resolved_default_out_of_range_rejected() {
+        let g = QnnGraph::sparq_cnn();
+        assert_eq!(
+            g.conv_precisions(w(5)),
+            Err(GraphError::BadPrecision { layer: 1, w_bits: 5, a_bits: 5 })
+        );
+        // overrides take precedence over the default in resolution
+        let m = QnnGraph::sparq_cnn_mixed((4, 4), (2, 2));
+        let ps = m.conv_precisions(w(3)).unwrap();
+        assert_eq!(ps.len(), 3);
+        assert_eq!((ps[0].w_bits, ps[0].a_bits, ps[0].quantized), (8, 3, false));
+        assert_eq!((ps[1].w_bits, ps[1].a_bits), (4, 4));
+        assert_eq!((ps[2].w_bits, ps[2].a_bits), (2, 2));
+        // fp32 ignores the overrides entirely (documented fallback)
+        let fp = m.conv_precisions(QnnPrecision::Fp32).unwrap();
+        assert!(fp.iter().all(|p| (p.w_bits, p.a_bits) == (8, 8)));
+    }
+
+    #[test]
+    fn mixed_sparq_cnn_passes_the_full_check() {
+        let g = QnnGraph::sparq_cnn_mixed((4, 4), (2, 2));
+        g.validate_for(&ProcessorConfig::sparq(), w(2)).unwrap();
+        let g = QnnGraph::sparq_cnn_mixed((2, 2), (4, 4));
+        g.validate_for(&ProcessorConfig::sparq(), w(2)).unwrap();
+    }
+
+    #[test]
+    fn vmacsr_only_precision_rejected_on_ara() {
+        // W4A4 is outside the native ULPPACK region: on a config with
+        // no vmacsr there is no variant left
+        let g = QnnGraph::sparq_cnn();
+        assert_eq!(
+            g.validate_for(&ProcessorConfig::ara(), w(4)),
+            Err(GraphError::VariantUnsupported {
+                layer: 1,
+                w_bits: 4,
+                a_bits: 4,
+                processor: "ara".into()
+            })
+        );
+        // W2A2 still runs on Ara via the native scheme
+        g.validate_for(&ProcessorConfig::ara(), w(2)).unwrap();
+        // and on Sparq vmacsr admits W4A4
+        g.validate_for(&ProcessorConfig::sparq(), w(4)).unwrap();
+    }
+
+    #[test]
+    fn boundary_narrowing_two_steps_rejected() {
+        // a W4A4 producer with enough issues to need the wide u32
+        // accumulator (spill cadence 156 < 18*9 = 162 issues) feeding a
+        // W2A2 consumer whose ULP container loads 8-bit elements:
+        // 32 -> 8 is two vnsrl steps, which no boundary stream can emit
+        let g = QnnGraph {
+            layers: vec![
+                LayerDesc::Conv {
+                    c_in: 36,
+                    c_out: 8,
+                    h: 8,
+                    w: 8,
+                    f: 3,
+                    quantized: true,
+                    precision: Some((4, 4)),
+                },
+                LayerDesc::Conv {
+                    c_in: 8,
+                    c_out: 4,
+                    h: 8,
+                    w: 8,
+                    f: 3,
+                    quantized: true,
+                    precision: Some((2, 2)),
+                },
+                LayerDesc::GapFc { c: 4, classes: 4 },
+            ],
+            input: (36, 8, 8),
+            classes: 4,
+        };
+        assert_eq!(
+            g.validate_for(&ProcessorConfig::sparq(), w(2)),
+            Err(GraphError::BoundaryWidth { layer: 1, from_bits: 32, to_bits: 8 })
+        );
+        // the same chain with a 16-bit-container consumer is legal
+        let mut ok = g.clone();
+        if let LayerDesc::Conv { precision, .. } = &mut ok.layers[1] {
+            *precision = Some((4, 4)); // LP: E16 in, one narrowing step
+        }
+        ok.validate_for(&ProcessorConfig::sparq(), w(2)).unwrap();
     }
 }

@@ -12,11 +12,18 @@
 //! instruction streams — and reads the per-layer cycles off that run.
 //! The serving stack classifies through the same compiled network
 //! ([`crate::runtime::SimQnnModel`]).
+//!
+//! Precision and kernel variant are per-layer properties: quantized
+//! convs may carry `(w_bits, a_bits)` overrides
+//! ([`graph::LayerDesc::Conv`]), legality is validated with typed
+//! errors ([`graph::QnnGraph::validate_for`]), and the compiler picks
+//! each layer's kernel from the cached autotune ranking
+//! ([`crate::kernels::autotune`]).
 
 pub mod compiled;
 pub mod graph;
 pub mod schedule;
 
-pub use compiled::{CompiledQnn, GoldenTrace, QnnNet, QnnRun};
-pub use graph::{GraphError, LayerDesc, QnnGraph};
+pub use compiled::{CompiledQnn, GoldenTrace, QnnNet, QnnRun, VariantPolicy};
+pub use graph::{ConvPrec, GraphError, LayerDesc, QnnGraph};
 pub use schedule::{schedule, LayerCycles, QnnSchedule};

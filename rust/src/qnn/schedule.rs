@@ -17,6 +17,20 @@
 //! per-layer workloads now derive from the same single graph-level
 //! seed as the dataflow path (no more `0x5EED + li` per-layer
 //! scatter).
+//!
+//! ## Per-layer precision resolution
+//!
+//! Every path that needs a layer's kernel resolves through
+//! [`variant_for`]: a quantized conv's `(w_bits, a_bits)` is its
+//! per-layer override when present, the network default otherwise
+//! ([`crate::qnn::graph::QnnGraph::conv_precisions`] is the shared
+//! resolution).  The fp32 legacy estimate routes through the same
+//! resolution with a **documented fallback**: under
+//! [`QnnPrecision::Fp32`] there is no level domain, so per-layer
+//! sub-byte overrides are ignored and every conv is costed as the
+//! uniform fp32 baseline — a mixed graph scheduled at fp32 reports
+//! exactly the same cycles as its override-free twin rather than
+//! mis-reporting a precision it cannot honour.
 
 use crate::arch::ProcessorConfig;
 use crate::kernels::{run_conv_cached, ConvDims, ConvVariant, EngineOpts, ProgramCache, Workload};
@@ -82,13 +96,19 @@ impl QnnSchedule {
     }
 }
 
-/// Pick the conv variant a layer runs with under `precision`.
+/// Pick the *canonical* conv variant a layer runs with under
+/// `precision`, honouring the layer's `(w_bits, a_bits)` override.
+/// This is the non-tuned assignment the golden network and the graph
+/// validator share; `kernels::autotune` may substitute a measured
+/// faster variant at compile time (boundary legality preserved).
+/// Under fp32 the overrides are ignored (see the module docs).
 pub(crate) fn variant_for(layer: &LayerDesc, precision: QnnPrecision) -> Option<ConvVariant> {
     match *layer {
-        LayerDesc::Conv { quantized, .. } => Some(match precision {
+        LayerDesc::Conv { quantized, precision: ovr, .. } => Some(match precision {
             QnnPrecision::Fp32 => ConvVariant::Fp32,
             QnnPrecision::SubByte { w_bits, a_bits } => {
                 if quantized {
+                    let (w_bits, a_bits) = ovr.unwrap_or((w_bits, a_bits));
                     ConvVariant::Vmacsr { w_bits, a_bits, mode: RegionMode::Paper }
                 } else {
                     ConvVariant::Int16 // the stem
@@ -265,8 +285,15 @@ mod tests {
     #[test]
     fn invalid_graph_rejected_before_scheduling() {
         let mut g = QnnGraph::sparq_cnn();
-        g.layers[1] =
-            crate::qnn::LayerDesc::Conv { c_in: 8, c_out: 32, h: 16, w: 16, f: 3, quantized: true };
+        g.layers[1] = crate::qnn::LayerDesc::Conv {
+            c_in: 8,
+            c_out: 32,
+            h: 16,
+            w: 16,
+            f: 3,
+            quantized: true,
+            precision: None,
+        };
         let r = schedule(
             &ProcessorConfig::sparq(),
             &g,
@@ -312,6 +339,59 @@ mod tests {
         assert_eq!(a.total_cycles(), b.total_cycles());
         // two seeds = two distinct cached networks
         assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn mixed_graph_schedules_between_its_uniform_endpoints() {
+        let cfg = ProcessorConfig::sparq();
+        let cache = ProgramCache::new();
+        let pool = MachinePool::new();
+        let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let lo = schedule_cached(&cfg, &QnnGraph::sparq_cnn(), prec, &cache, &pool).unwrap();
+        let hi = schedule_cached(
+            &cfg,
+            &QnnGraph::sparq_cnn(),
+            QnnPrecision::SubByte { w_bits: 4, a_bits: 4 },
+            &cache,
+            &pool,
+        )
+        .unwrap();
+        let mixed = schedule_cached(
+            &cfg,
+            &QnnGraph::sparq_cnn_mixed((4, 4), (2, 2)),
+            prec,
+            &cache,
+            &pool,
+        )
+        .unwrap();
+        assert!(
+            lo.total_cycles() < mixed.total_cycles() && mixed.total_cycles() < hi.total_cycles(),
+            "w2a2 {} !< mixed {} !< w4a4 {}",
+            lo.total_cycles(),
+            mixed.total_cycles(),
+            hi.total_cycles()
+        );
+        // the W4A4 stem-adjacent conv runs in the LP container, the
+        // W2A2 deep conv in ULP — visible in the variant labels
+        let row = |s: &QnnSchedule, i: usize| s.layers[i].variant.clone();
+        assert!(row(&mixed, 1).contains("W4A4"), "{}", row(&mixed, 1));
+        assert!(row(&mixed, 3).contains("W2A2"), "{}", row(&mixed, 3));
+    }
+
+    #[test]
+    fn fp32_ignores_overrides_and_does_not_misreport() {
+        // documented fallback: under fp32 the per-layer sub-byte
+        // overrides have no level domain to apply to, so a mixed graph
+        // costs exactly like its override-free twin
+        let cfg = ProcessorConfig::ara();
+        let plain = schedule(&cfg, &QnnGraph::sparq_cnn(), QnnPrecision::Fp32).unwrap();
+        let mixed =
+            schedule(&cfg, &QnnGraph::sparq_cnn_mixed((4, 4), (2, 2)), QnnPrecision::Fp32).unwrap();
+        assert_eq!(plain.total_cycles(), mixed.total_cycles());
+        for (p, m) in plain.layers.iter().zip(&mixed.layers) {
+            assert_eq!(p.cycles, m.cycles);
+            assert_eq!(p.variant, m.variant);
+        }
     }
 
     #[test]

@@ -353,6 +353,91 @@ pub fn render_schedule(s: &crate::qnn::QnnSchedule, fmax_ghz: f64) -> String {
     out
 }
 
+/// One rung of the precision ladder: a (graph, precision)
+/// configuration scheduled end-to-end.
+#[derive(Debug, Clone)]
+pub struct LadderRow {
+    pub label: String,
+    pub schedule: crate::qnn::QnnSchedule,
+}
+
+/// The precision-ladder configurations: the SparqCNN at every uniform
+/// sub-byte precision `w1a1`..`w4a4` plus the mixed stem/head
+/// configurations (higher-precision stem-adjacent conv over a
+/// lower-precision deep conv, and the reverse).  The single source of
+/// truth the report sweep AND `rust/benches/mixed_precision.rs` build
+/// from, so the two can never cover different rungs under the same
+/// labels.
+pub fn ladder_configs() -> Vec<(String, QnnGraph, QnnPrecision)> {
+    let mut configs: Vec<(String, QnnGraph, QnnPrecision)> = (1..=4u32)
+        .map(|b| {
+            (
+                format!("w{b}a{b}"),
+                QnnGraph::sparq_cnn(),
+                QnnPrecision::SubByte { w_bits: b, a_bits: b },
+            )
+        })
+        .collect();
+    let base = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    configs.push((
+        "mixed w4a4-stem/w2a2".into(),
+        QnnGraph::sparq_cnn_mixed((4, 4), (2, 2)),
+        base,
+    ));
+    configs.push((
+        "mixed w2a2-stem/w4a4".into(),
+        QnnGraph::sparq_cnn_mixed((2, 2), (4, 4)),
+        base,
+    ));
+    configs
+}
+
+/// The precision-ladder sweep over [`ladder_configs`].  Every rung
+/// runs the real autotuned dataflow program through the shared
+/// [`SweepCtx`] cache — tune rankings are memoized per layer shape, so
+/// the whole ladder re-measures nothing it has already seen.
+pub fn precision_ladder(ctx: &SweepCtx) -> Result<Vec<LadderRow>, SimError> {
+    let cfg = ProcessorConfig::sparq();
+    let mut rows = Vec::new();
+    for (label, graph, prec) in ladder_configs() {
+        let schedule =
+            crate::qnn::schedule::schedule_cached(&cfg, &graph, prec, &ctx.cache, &ctx.pool)?;
+        rows.push(LadderRow { label, schedule });
+    }
+    Ok(rows)
+}
+
+pub fn render_ladder(rows: &[LadderRow], fmax_ghz: f64) -> String {
+    let mut s = format!(
+        "Precision ladder — SparqCNN end-to-end (autotuned per-layer kernels, {:.3} GHz)\n\
+         {:<22} {:>12} {:>12} {:>10}\n",
+        fmax_ghz, "configuration", "cycles/img", "img/s", "speedup"
+    );
+    let base = rows
+        .iter()
+        .find(|r| r.label == "w4a4")
+        .map(|r| r.schedule.total_cycles())
+        .unwrap_or_else(|| rows[0].schedule.total_cycles());
+    for r in rows {
+        let cyc = r.schedule.total_cycles();
+        s += &format!(
+            "{:<22} {:>12} {:>12.0} {:>9.2}x\n",
+            r.label,
+            cyc,
+            r.schedule.throughput_at(fmax_ghz),
+            base as f64 / cyc as f64
+        );
+    }
+    s += "\nper-layer kernel choices:\n";
+    for r in rows {
+        s += &format!("  {}:\n", r.label);
+        for l in &r.schedule.layers {
+            s += &format!("    {:<26} {:>12} cycles  {}\n", l.name, l.cycles, l.variant);
+        }
+    }
+    s
+}
+
 /// Re-export for the schedule driver: one-shot schedule of the
 /// SparqCNN (sub-byte precisions run the real end-to-end dataflow
 /// program; see `qnn::schedule`).
@@ -493,6 +578,33 @@ mod tests {
         let rendered = render_schedule(&cold, 1.464);
         assert!(rendered.contains("maxpool2-vec") && rendered.contains("gap+fc-vec"));
         assert!(rendered.contains("weight seed"));
+    }
+
+    #[test]
+    fn precision_ladder_orders_like_the_paper() {
+        let ctx = SweepCtx::new();
+        let rows = precision_ladder(&ctx).unwrap();
+        assert_eq!(rows.len(), 6);
+        let cyc = |label: &str| {
+            rows.iter().find(|r| r.label == label).unwrap().schedule.total_cycles()
+        };
+        // the ladder: fewer bits, fewer cycles (ULP beats LP)
+        assert!(cyc("w1a1") <= cyc("w2a2"), "w1a1 must not lose to w2a2");
+        assert!(cyc("w2a2") < cyc("w4a4"), "the 3.2x point must beat the 1.7x point");
+        // mixed rungs land strictly between their uniform endpoints
+        let mixed = cyc("mixed w4a4-stem/w2a2");
+        assert!(cyc("w2a2") < mixed && mixed < cyc("w4a4"));
+        // a warm rerun is all graph-level hits with zero re-tuning
+        let s0 = ctx.cache.stats();
+        let again = precision_ladder(&ctx).unwrap();
+        let s1 = ctx.cache.stats();
+        assert_eq!(s0.misses, s1.misses, "warm ladder recompiled a network");
+        assert_eq!(s0.tune_misses, s1.tune_misses, "warm ladder re-tuned a layer");
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.schedule.total_cycles(), b.schedule.total_cycles());
+        }
+        let rendered = render_ladder(&rows, 1.464);
+        assert!(rendered.contains("mixed w4a4-stem/w2a2") && rendered.contains("vmacsr"));
     }
 
     #[test]

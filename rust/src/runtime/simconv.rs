@@ -121,6 +121,12 @@ impl SimConvModel {
 /// ([`CompiledQnn`]), fetched from the shared [`ProgramCache`] under
 /// its graph-level key.  Each request stages fresh activations into
 /// the arena; logits come straight out of it.
+///
+/// Mixed-precision graphs (per-layer `(w_bits, a_bits)` overrides)
+/// serve through the same path: the compiler resolves each layer's
+/// precision, autotunes its kernel variant (rankings memoized in the
+/// shared cache under `TuneKey`s), and repeat inference is all-hits at
+/// the graph level — no re-tuning, no re-compiling.
 pub struct SimQnnModel {
     pub cq: Arc<CompiledQnn>,
     pub cfg: ProcessorConfig,
@@ -289,5 +295,52 @@ mod tests {
         assert_eq!(l2, logits);
         assert_eq!(c2, cycles);
         assert_eq!(pool.stats().reused, 1);
+    }
+
+    #[test]
+    fn qnn_model_serves_a_mixed_precision_network_all_hits_on_repeat() {
+        use crate::qnn::schedule::QnnPrecision;
+        use crate::qnn::QnnGraph;
+        let cache = ProgramCache::new();
+        let graph = QnnGraph::sparq_cnn_mixed((4, 4), (2, 2));
+        let model = SimQnnModel::compile(
+            &ProcessorConfig::sparq(),
+            &graph,
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+            0xABAD,
+            &cache,
+        )
+        .unwrap();
+        let pool = MachinePool::new();
+        let input: Vec<f32> = (0..model.input_len()).map(|i| ((i * 7) % 4) as f32).collect();
+        let (logits, cycles) = model.infer(&pool, &input).unwrap();
+        // bit-exact against the golden network under the compiled
+        // per-layer variant choices
+        let levels: Vec<u64> = input.iter().map(|&v| model.quantize_level(v)).collect();
+        let golden = model.cq.golden(&levels).unwrap();
+        assert_eq!(logits, golden.logits);
+        // the two quantized layers really run different containers
+        let labels: Vec<String> =
+            model.cq.variants.iter().map(|v| v.label()).collect();
+        assert!(labels[1].contains("W4A4"), "{labels:?}");
+        assert!(labels[2].contains("W2A2"), "{labels:?}");
+        // a second model over the same (graph, precision, seed) is a
+        // pure graph-level hit: nothing re-tunes, nothing re-compiles
+        let before = cache.stats();
+        let again = SimQnnModel::compile(
+            &ProcessorConfig::sparq(),
+            &graph,
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+            0xABAD,
+            &cache,
+        )
+        .unwrap();
+        let after = cache.stats();
+        assert_eq!(after.misses, before.misses);
+        assert_eq!(after.tune_misses, before.tune_misses, "repeat compile re-tuned");
+        assert!(after.hits > before.hits);
+        let (l2, c2) = again.infer(&pool, &input).unwrap();
+        assert_eq!(l2, logits);
+        assert_eq!(c2, cycles);
     }
 }

@@ -138,6 +138,35 @@ fn execute_rejects_mismatched_machine_or_workload() {
 }
 
 #[test]
+fn per_layer_precision_overrides_occupy_distinct_cache_entries() {
+    // two graphs identical except one layer's (w_bits, a_bits): both
+    // the key objects and the live cache entries must stay apart
+    use sparq::qnn::schedule::QnnPrecision;
+    use sparq::qnn::QnnGraph;
+    let cfg = ProcessorConfig::sparq();
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let plain = QnnGraph::sparq_cnn();
+    let mixed = QnnGraph::sparq_cnn_mixed((4, 4), (2, 2));
+    assert_ne!(
+        ProgramCache::qnn_key(&cfg, &plain, prec, 7),
+        ProgramCache::qnn_key(&cfg, &mixed, prec, 7)
+    );
+
+    let cache = ProgramCache::new();
+    let a = cache.get_or_compile_qnn(&cfg, &plain, prec, 7).unwrap();
+    let b = cache.get_or_compile_qnn(&cfg, &mixed, prec, 7).unwrap();
+    assert!(!std::sync::Arc::ptr_eq(&a, &b), "override graphs must not share an entry");
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.entries), (0, 2, 2));
+    // the overridden layer's tuning is its own memo entry too: the
+    // graphs share the stem and the W2A2 deep conv shapes, but the
+    // W4A4 stem-adjacent layer adds a fourth (cfg, shape, precision)
+    assert_eq!(s.tune_entries, 4, "stem + w2a2@16x16 + w2a2@8x8 + w4a4@16x16");
+    assert_eq!(s.tune_misses, 4);
+    assert_eq!(s.tune_hits, 2, "shared shapes must hit the tune memo across graphs");
+}
+
+#[test]
 fn compiled_program_is_machine_free_and_reusable_across_machines() {
     let cfg = ProcessorConfig::sparq();
     let variant = ConvVariant::Vmacsr { w_bits: 3, a_bits: 3, mode: RegionMode::Strict };

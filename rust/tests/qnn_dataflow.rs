@@ -1,20 +1,26 @@
 //! Cross-layer proof of the end-to-end dataflow executor
-//! (acceptance criteria of the multi-layer refactor):
+//! (acceptance criteria of the multi-layer refactor and the
+//! mixed-precision compilation on top of it):
 //!
 //! 1. every graph-layer boundary of an executed inference matches the
-//!    host golden network bit-for-bit,
+//!    host golden network bit-for-bit — uniform AND mixed per-layer
+//!    precisions,
 //! 2. `Server::infer` returns the golden argmax for a batch of test
 //!    images,
 //! 3. a second inference through the shared `ProgramCache` is all
-//!    hits with identical cycle counts.
+//!    hits with identical cycle counts (mixed networks included, with
+//!    zero re-tuning),
+//! 4. illegal mixed graphs are rejected with the typed
+//!    `GraphError`/`SimError` — mismatched boundary widths,
+//!    vmacsr-only precisions on an Ara config, W/A outside 1..=4.
 
 use sparq::arch::ProcessorConfig;
 use sparq::config::ServeConfig;
 use sparq::coordinator::{sim_qnn_factory, Server};
 use sparq::kernels::ProgramCache;
 use sparq::qnn::schedule::QnnPrecision;
-use sparq::qnn::{CompiledQnn, QnnGraph, QnnNet};
-use sparq::sim::{Machine, MachinePool};
+use sparq::qnn::{CompiledQnn, GraphError, LayerDesc, QnnGraph, QnnNet};
+use sparq::sim::{Machine, MachinePool, SimError};
 use std::sync::Arc;
 
 const SEED: u64 = 0x0DD_5EED;
@@ -132,6 +138,181 @@ fn second_inference_through_the_shared_cache_is_all_hits_with_identical_cycles()
     let b: Vec<u64> = second.stage_reports.iter().map(|r| r.stats.cycles).collect();
     assert_eq!(a, b);
     assert_eq!(pool.stats().reused, 1, "the machine pool must recycle the arena machine");
+}
+
+#[test]
+fn mixed_precision_network_is_pinned_at_every_boundary_and_all_hits_on_repeat() {
+    // the acceptance configuration: W4A4 stem-adjacent conv, W2A2
+    // deeper conv, network default W2A2
+    let cfg = ProcessorConfig::sparq();
+    let graph = QnnGraph::sparq_cnn_mixed((4, 4), (2, 2));
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let cache = ProgramCache::new();
+    let pool = MachinePool::new();
+
+    let cq = cache.get_or_compile_qnn(&cfg, &graph, prec, SEED).unwrap();
+    // on Sparq the autotuned winners are the canonical vmacsr
+    // assignment, so the extended golden_forward (canonical variants)
+    // pins the autotuned execution directly
+    assert_eq!(cq.variants, cq.net.canonical_variants());
+    for image_seed in [2u64, 77, 0xDEAD_BEEF] {
+        let image = cq.net.test_image(image_seed);
+        let golden = cq.net.golden_forward(&image).unwrap();
+        assert_eq!(golden.layer_outs.len(), graph.layers.len());
+        let mut m = Machine::new(cfg.clone(), cq.mem_bytes);
+        let run = cq.execute(&mut m, &image).unwrap();
+        for li in 0..graph.layers.len() {
+            assert_eq!(
+                cq.read_tap(&m, li).unwrap(),
+                golden.layer_outs[li],
+                "mixed image {image_seed}: layer {li} ({}) diverged",
+                graph.layers[li].name()
+            );
+        }
+        assert_eq!(run.logits, golden.logits);
+        assert_eq!(run.argmax, golden.argmax);
+    }
+
+    // the W4A4 stem-adjacent layer really runs at W4A4 weights: its
+    // level range exceeds anything a W2 layer could hold
+    let wmax = cq.net.conv_wgt[1].iter().flatten().flatten().copied().max().unwrap();
+    assert!(wmax > 2 && wmax <= 14, "override weights out of the W4 range: {wmax}");
+    // ...while its uniform twin stays in the W2 range
+    let uniform = cache.get_or_compile_qnn(&cfg, &QnnGraph::sparq_cnn(), prec, SEED).unwrap();
+    let umax = uniform.net.conv_wgt[1].iter().flatten().flatten().copied().max().unwrap();
+    assert!(umax <= 2, "uniform W2 weights out of range: {umax}");
+
+    // repeat inference: pure graph-level hit, zero re-tuning,
+    // identical per-stage cycles
+    let stats_before = cache.stats();
+    let cq2 = cache.get_or_compile_qnn(&cfg, &graph, prec, SEED).unwrap();
+    assert!(Arc::ptr_eq(&cq, &cq2));
+    let stats_after = cache.stats();
+    assert_eq!(stats_after.misses, stats_before.misses);
+    assert_eq!(stats_after.tune_misses, stats_before.tune_misses, "repeat lookup re-tuned");
+    let image = cq.net.test_image(5);
+    let mut m = pool.acquire(&cfg, cq.mem_bytes);
+    let a = cq.execute_fresh(&mut m, &image).unwrap();
+    pool.release(m);
+    let mut m = pool.acquire(&cfg, cq.mem_bytes);
+    let b = cq2.execute_fresh(&mut m, &image).unwrap();
+    pool.release(m);
+    let ac: Vec<u64> = a.stage_reports.iter().map(|r| r.stats.cycles).collect();
+    let bc: Vec<u64> = b.stage_reports.iter().map(|r| r.stats.cycles).collect();
+    assert_eq!(ac, bc, "per-stage cycles must be identical across repeat inference");
+    assert_eq!(a.logits, b.logits);
+}
+
+#[test]
+fn mixed_boundary_width_mismatch_rejected_with_typed_error() {
+    // W4A4 producer with 162 packed issues: the LP plan spills to the
+    // wide u32 accumulator; its W2A2 consumer loads 8-bit ULP
+    // containers — a 32 -> 8 boundary is two vnsrl steps
+    let graph = QnnGraph {
+        layers: vec![
+            LayerDesc::Conv {
+                c_in: 36,
+                c_out: 8,
+                h: 8,
+                w: 8,
+                f: 3,
+                quantized: true,
+                precision: Some((4, 4)),
+            },
+            LayerDesc::Conv {
+                c_in: 8,
+                c_out: 4,
+                h: 8,
+                w: 8,
+                f: 3,
+                quantized: true,
+                precision: Some((2, 2)),
+            },
+            LayerDesc::GapFc { c: 4, classes: 4 },
+        ],
+        input: (36, 8, 8),
+        classes: 4,
+    };
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    // the typed GraphError from the validator...
+    assert_eq!(
+        graph.validate_for(&ProcessorConfig::sparq(), prec),
+        Err(GraphError::BoundaryWidth { layer: 1, from_bits: 32, to_bits: 8 })
+    );
+    // ...and the compiler surfaces it as SimError::Graph
+    let net = QnnNet::from_seed(&graph, prec, SEED).unwrap();
+    let r = CompiledQnn::compile(&ProcessorConfig::sparq(), net);
+    match r {
+        Err(SimError::Graph(msg)) => assert!(msg.contains("narrows"), "{msg}"),
+        other => panic!("expected SimError::Graph, got {other:?}"),
+    }
+}
+
+#[test]
+fn vmacsr_only_precision_on_ara_rejected_with_typed_error() {
+    // W4A4 needs vmacsr (no native plan): an Ara-like config without
+    // the instruction must refuse at validation, not at execution
+    let graph = QnnGraph::sparq_cnn();
+    let prec = QnnPrecision::SubByte { w_bits: 4, a_bits: 4 };
+    assert!(matches!(
+        graph.validate_for(&ProcessorConfig::ara(), prec),
+        Err(GraphError::VariantUnsupported { layer: 1, w_bits: 4, a_bits: 4, .. })
+    ));
+    let net = QnnNet::from_seed(&graph, prec, SEED).unwrap();
+    match CompiledQnn::compile(&ProcessorConfig::ara(), net) {
+        Err(SimError::Graph(msg)) => assert!(msg.contains("vmacsr"), "{msg}"),
+        other => panic!("expected SimError::Graph, got {other:?}"),
+    }
+    // a mixed override to a vmacsr-only precision is rejected the same
+    let mixed = QnnGraph::sparq_cnn_mixed((2, 2), (4, 4));
+    let base = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    assert!(matches!(
+        mixed.validate_for(&ProcessorConfig::ara(), base),
+        Err(GraphError::VariantUnsupported { layer: 3, .. })
+    ));
+}
+
+#[test]
+fn precision_outside_one_to_four_rejected_with_typed_error() {
+    // an explicit override out of range fails graph validation
+    let g = QnnGraph::sparq_cnn_mixed((5, 5), (2, 2));
+    assert_eq!(
+        g.validate(),
+        Err(GraphError::BadPrecision { layer: 1, w_bits: 5, a_bits: 5 })
+    );
+    match QnnNet::from_seed(&g, QnnPrecision::SubByte { w_bits: 2, a_bits: 2 }, SEED) {
+        Err(SimError::Graph(msg)) => assert!(msg.contains("1..=4"), "{msg}"),
+        other => panic!("expected SimError::Graph, got {other:?}"),
+    }
+    // and so does an out-of-range network default (resolved per layer)
+    let g = QnnGraph::sparq_cnn();
+    match QnnNet::from_seed(&g, QnnPrecision::SubByte { w_bits: 2, a_bits: 9 }, SEED) {
+        Err(SimError::Graph(msg)) => assert!(msg.contains("1..=4"), "{msg}"),
+        other => panic!("expected SimError::Graph, got {other:?}"),
+    }
+}
+
+#[test]
+fn whole_network_serves_on_ara_via_native_kernels() {
+    // scenario diversity: without vmacsr the autotuner falls back to
+    // the native ULPPACK scheme, and the whole dataflow network still
+    // executes and pins bit-for-bit under the chosen variants
+    let cfg = ProcessorConfig::ara();
+    let graph = QnnGraph::sparq_cnn();
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let net = QnnNet::from_seed(&graph, prec, SEED).unwrap();
+    let cq = CompiledQnn::compile(&cfg, net).unwrap();
+    // the quantized layers picked a native variant (no vmacsr on Ara)
+    let labels: Vec<String> = cq.variants.iter().map(|v| v.label()).collect();
+    assert!(labels[1].contains("W2A2") && !labels[1].contains("vmacsr"), "{labels:?}");
+    let image = cq.net.test_image(4);
+    let golden = cq.golden(&image).unwrap();
+    let mut m = Machine::new(cfg.clone(), cq.mem_bytes);
+    let run = cq.execute(&mut m, &image).unwrap();
+    for li in 0..graph.layers.len() {
+        assert_eq!(cq.read_tap(&m, li).unwrap(), golden.layer_outs[li], "ara layer {li}");
+    }
+    assert_eq!(run.logits, golden.logits);
 }
 
 #[test]

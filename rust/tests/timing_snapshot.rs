@@ -1,0 +1,195 @@
+//! Golden-timing snapshot: cycle counts for the canonical workload set
+//! — conv 3x3 at each sub-byte precision x each variant, the int16
+//! baseline, a requant boundary, a 2x2 maxpool, and the GAP+FC head —
+//! pinned against `rust/tests/data/timing_snapshot.txt`.  Any
+//! timing-model drift now fails THIS test loudly instead of silently
+//! skewing autotune decisions and bench JSONs.
+//!
+//! ## Update protocol
+//!
+//! The snapshot is a text file of `<key> <cycles>` lines.  To re-bless
+//! after an *intentional* timing-model change:
+//!
+//! ```text
+//! SPARQ_BLESS=1 cargo test --test timing_snapshot
+//! git add rust/tests/data/timing_snapshot.txt   # commit with the change
+//! ```
+//!
+//! Bootstrap: a file whose first line is `# UNBLESSED` (the committed
+//! placeholder in environments with no Rust toolchain to generate real
+//! literals) is rewritten in place with the measured values and the
+//! test passes with a loud notice; from then on — including the very
+//! next test invocation in the same checkout, which is why CI runs
+//! this test both inside tier-1 and as an explicit gate step — the
+//! comparison is strict.  Determinism is always enforced: the whole
+//! set is measured twice and must agree bit-for-bit before any
+//! comparison or bless happens.
+
+use sparq::arch::ProcessorConfig;
+use sparq::isa::Sew;
+use sparq::kernels::asm::Asm;
+use sparq::kernels::pool_fc::{emit_gap_fc, emit_maxpool2};
+use sparq::kernels::requant::{emit_requant, RequantSpec};
+use sparq::kernels::{run_conv, ConvDims, ConvVariant, Workload};
+use sparq::sim::Machine;
+use sparq::ulppack::{region, RegionMode};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/timing_snapshot.txt")
+}
+
+/// Run a standalone emitted stream on a fresh Sparq machine; cycles.
+fn run_stream(build: impl FnOnce(&mut Asm)) -> u64 {
+    let cfg = ProcessorConfig::sparq();
+    let mut m = Machine::new(cfg.clone(), 1 << 20);
+    let mut a = Asm::new("snapshot", cfg.vlen_bits);
+    build(&mut a);
+    m.run(&a.finish(0)).expect("snapshot stream must be legal").stats.cycles
+}
+
+/// The canonical workload set, measured.  Deterministic order and
+/// deterministic cycles (the timing model is data-independent, and the
+/// tensors are seeded).
+fn measure() -> Vec<(String, u64)> {
+    let cfg = ProcessorConfig::sparq();
+    let dims = ConvDims { c: 8, h: 10, w: 18, co: 2, fh: 3, fw: 3 };
+    let mut rows = Vec::new();
+
+    // conv 3x3: the int16 baseline + every diagonal precision on both
+    // packed variants (where the region calculus admits them)
+    let wl16 = Workload::random(dims, 8, 8, 0x7171);
+    let r = run_conv(&cfg, &wl16, ConvVariant::Int16).expect("int16 conv");
+    rows.push(("conv3x3-int16".to_string(), r.report.stats.cycles));
+    for b in 1..=4u32 {
+        let wl = Workload::random(dims, b, b, 0x7171 + b as u64);
+        let vm = ConvVariant::Vmacsr { w_bits: b, a_bits: b, mode: RegionMode::Paper };
+        let r = run_conv(&cfg, &wl, vm).expect("vmacsr conv");
+        rows.push((format!("conv3x3-w{b}a{b}-vmacsr"), r.report.stats.cycles));
+        if region::plan_native(b, b).is_some() {
+            let r = run_conv(&cfg, &wl, ConvVariant::Native { w_bits: b, a_bits: b })
+                .expect("native conv");
+            rows.push((format!("conv3x3-w{b}a{b}-native"), r.report.stats.cycles));
+        }
+    }
+
+    // a layer boundary: E32 sums -> E16 levels, 1-wide border, one
+    // padding channel (the shape the dataflow compiler emits)
+    let spec = RequantSpec {
+        src: 0x1000,
+        src_sew: Sew::E32,
+        c: 3,
+        h: 5,
+        w: 7,
+        dst: 0x8000,
+        dst_sew: Sew::E16,
+        c_pad: 4,
+        pad: 1,
+        rshift: 6,
+        amax: 15,
+    };
+    rows.push(("requant-e32-e16-pad1".to_string(), run_stream(|a| emit_requant(a, &spec))));
+
+    // 2x2 maxpool over 3x6x8 at E16
+    rows.push((
+        "maxpool2-3x6x8-e16".to_string(),
+        run_stream(|a| emit_maxpool2(a, 3, 6, 8, Sew::E16, 0x1000, 0x8000)),
+    ));
+
+    // GAP+FC head: 32 channels x 16 elements, 4 classes, E16 levels
+    let fc_wgt: Vec<Vec<u64>> =
+        (0..4u64).map(|k| (0..32u64).map(|c| (k * 7 + c) % 15).collect()).collect();
+    rows.push((
+        "gapfc-32x16-e16".to_string(),
+        run_stream(|a| emit_gap_fc(a, 32, 16, Sew::E16, 0x1000, &fc_wgt, 0xC000)),
+    ));
+
+    rows
+}
+
+fn render(rows: &[(String, u64)]) -> String {
+    let mut s = String::from(
+        "# Golden timing snapshot (cycles) — see rust/tests/timing_snapshot.rs\n\
+         # for the update protocol (SPARQ_BLESS=1 cargo test --test timing_snapshot).\n",
+    );
+    for (k, v) in rows {
+        let _ = writeln!(s, "{k} {v}");
+    }
+    s
+}
+
+fn parse(text: &str) -> Vec<(String, u64)> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .map(|l| {
+            let mut it = l.split_whitespace();
+            let k = it.next().expect("snapshot line key").to_string();
+            let v = it.next().expect("snapshot line cycles").parse().expect("snapshot cycles u64");
+            (k, v)
+        })
+        .collect()
+}
+
+#[test]
+fn timing_snapshot_is_pinned() {
+    let first = measure();
+    let second = measure();
+    assert_eq!(first, second, "timing measurement must be deterministic");
+
+    let path = snapshot_path();
+    let committed = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing snapshot file {} ({e}); commit the placeholder", path.display()));
+    let bless = std::env::var("SPARQ_BLESS").is_ok_and(|v| v == "1");
+    let unblessed = committed.lines().next().is_some_and(|l| l.trim() == "# UNBLESSED");
+
+    if bless || unblessed {
+        std::fs::write(&path, render(&first)).expect("write blessed snapshot");
+        eprintln!(
+            "timing_snapshot: {} {} with {} measured entries — commit it; comparisons are \
+             strict from the next run on",
+            if unblessed { "bootstrapped" } else { "re-blessed" },
+            path.display(),
+            first.len()
+        );
+        return;
+    }
+
+    let pinned = parse(&committed);
+    let got: std::collections::BTreeMap<_, _> = first.iter().cloned().collect();
+    let want: std::collections::BTreeMap<_, _> = pinned.iter().cloned().collect();
+    assert_eq!(
+        got, want,
+        "\ntiming model drifted from the committed snapshot. If the change is intentional, \
+         re-bless with `SPARQ_BLESS=1 cargo test --test timing_snapshot` and commit \
+         {}; otherwise find the regression before it skews autotune decisions and bench JSONs.",
+        snapshot_path().display()
+    );
+}
+
+#[test]
+fn snapshot_covers_the_canonical_set() {
+    // the set itself is part of the contract: every diagonal vmacsr
+    // point, the native points the region admits (W4A4 has none), the
+    // int16 baseline, and one of each boundary/pool/head stream
+    let rows = measure();
+    let keys: Vec<&str> = rows.iter().map(|(k, _)| k.as_str()).collect();
+    for must in [
+        "conv3x3-int16",
+        "conv3x3-w1a1-vmacsr",
+        "conv3x3-w2a2-vmacsr",
+        "conv3x3-w3a3-vmacsr",
+        "conv3x3-w4a4-vmacsr",
+        "conv3x3-w1a1-native",
+        "conv3x3-w2a2-native",
+        "conv3x3-w3a3-native",
+        "requant-e32-e16-pad1",
+        "maxpool2-3x6x8-e16",
+        "gapfc-32x16-e16",
+    ] {
+        assert!(keys.contains(&must), "snapshot set lost {must}");
+    }
+    assert!(!keys.contains(&"conv3x3-w4a4-native"), "W4A4 has no native plan");
+    // and every measured stream actually cost cycles
+    assert!(rows.iter().all(|(_, c)| *c > 0));
+}

@@ -1,0 +1,183 @@
+//! Property pins on the ULPPACK packing math the autotuner leans on:
+//! quantize -> pack -> unpack -> dot round-trips over **every** (W, A)
+//! in 1..=4 x 1..=4, both `RegionMode`s, and odd/even channel counts,
+//! all against scalar oracles:
+//!
+//! 1. `unpack(pack(levels))` recovers the levels exactly, for both the
+//!    activation layout and the swapped weight layout, on both
+//!    containers.
+//! 2. The packed-arithmetic dot (the hardware model
+//!    `golden_packed_vmacsr`, at the container + spill cadence the
+//!    region calculus plans) equals the exact integer conv
+//!    (`golden_exact`) whenever the plan guarantees exactness — which
+//!    is every Strict-mode plan, and every Paper-mode plan whose pair
+//!    also admits strictly.
+//! 3. Quantized levels always stay inside their (W, A) ranges, so the
+//!    dot-field capacity argument the plans rest on actually applies.
+//!
+//! Odd channel counts get the explicit always-zero padding channel
+//! (`qnn::graph::padded_c`) before packing — the same rule the
+//! dataflow compiler applies — and the oracle sees the zero channel
+//! too, so padding cannot silently change the dot.
+
+use sparq::kernels::workload::{golden_exact, golden_packed_vmacsr, ConvDims, Workload};
+use sparq::qnn::graph::padded_c;
+use sparq::testutil::{Gen, Prop};
+use sparq::ulppack::{
+    act_level_max, pack_activations, pack_weights, region, unpack_container, weight_level_max,
+    Container, Quantizer, RegionMode,
+};
+
+/// Quantize random floats into a levels workload with `c_real`
+/// channels padded to even, inside the (W, A) level ranges.
+fn quantized_workload(g: &mut Gen, w_bits: u32, a_bits: u32, c_real: u32) -> Workload {
+    let cp = padded_c(c_real);
+    let dims = ConvDims { c: cp, h: 5, w: 5, co: 2, fh: 3, fw: 3 };
+    let qa = Quantizer::for_activations(a_bits, 1.0);
+    let qw = Quantizer::for_weights(w_bits, 1.0);
+    let hw = (dims.h * dims.w) as usize;
+    let fhw = (dims.fh * dims.fw) as usize;
+    // real channels quantize floats; padding channels are explicit zeros
+    let act: Vec<Vec<u64>> = (0..cp)
+        .map(|c| {
+            (0..hw)
+                .map(|_| {
+                    let x = g.f32() * 1.2 - 0.1; // overshoot both ends
+                    if c < c_real {
+                        qa.act_level(x)
+                    } else {
+                        0
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let wgt: Vec<Vec<Vec<u64>>> = (0..dims.co)
+        .map(|_| {
+            (0..cp)
+                .map(|_| (0..fhw).map(|_| qw.weight_level(g.f32() * 2.4 - 1.2)).collect())
+                .collect()
+        })
+        .collect();
+    Workload { dims, w_bits, a_bits, act, wgt, act_f32: vec![], wgt_f32: vec![] }
+}
+
+#[test]
+fn pack_unpack_roundtrip_both_layouts_every_precision() {
+    Prop::new(0xF00D).runs(64).check(|g| {
+        let w_bits = g.range(1, 4) as u32;
+        let a_bits = g.range(1, 4) as u32;
+        let c_real = g.range(1, 6) as u32; // odd and even counts
+        let container = *g.pick(&[Container::Ulp, Container::Lp]);
+        let wl = quantized_workload(g, w_bits, a_bits, c_real);
+        // skip combinations whose levels cannot fit the subfields at
+        // all (e.g. A4 on ULP's 4-bit fields is fine: 15 fits; W4's 14
+        // fits too — nothing in 1..=4 overflows a 4-bit field, so this
+        // filter is vacuous but keeps the property honest if ranges grow)
+        let s = container.shift();
+        if act_level_max(a_bits) >= (1 << s) || weight_level_max(w_bits) >= (1 << s) {
+            return;
+        }
+        let pa = pack_activations(&wl.act, container);
+        for (pair, packed) in wl.act.chunks(2).zip(&pa) {
+            for (i, &p) in packed.iter().enumerate() {
+                let (lo, hi) = unpack_container(p, container);
+                assert_eq!((lo, hi), (pair[0][i], pair[1][i]), "activation layout");
+            }
+        }
+        // the weight layout swaps the halves: low field holds the ODD
+        // channel, high field the even one
+        let pw = pack_weights(&wl.wgt, container);
+        for (per_o, packed_o) in wl.wgt.iter().zip(&pw) {
+            for (pair, packed) in per_o.chunks(2).zip(packed_o) {
+                for (i, &p) in packed.iter().enumerate() {
+                    let (lo, hi) = unpack_container(p, container);
+                    assert_eq!((lo, hi), (pair[1][i], pair[0][i]), "weight layout swaps");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn quantized_levels_stay_in_range() {
+    Prop::new(0xA11).runs(64).check(|g| {
+        let w_bits = g.range(1, 4) as u32;
+        let a_bits = g.range(1, 4) as u32;
+        let wl = quantized_workload(g, w_bits, a_bits, g.range(1, 6) as u32);
+        let amax = act_level_max(a_bits);
+        let wmax = weight_level_max(w_bits);
+        assert!(wl.act.iter().flatten().all(|&v| v <= amax));
+        assert!(wl.wgt.iter().flatten().flatten().all(|&v| v <= wmax));
+    });
+}
+
+#[test]
+fn packed_dot_matches_the_scalar_oracle_wherever_the_plan_is_exact() {
+    // exhaustive over the whole precision grid x both modes x odd/even
+    // channel counts, a few random tensors each
+    for w_bits in 1..=4u32 {
+        for a_bits in 1..=4u32 {
+            for mode in [RegionMode::Strict, RegionMode::Paper] {
+                for c_real in [3u32, 4] {
+                    let seed = 0x5EED
+                        ^ ((w_bits as u64) << 8)
+                        ^ ((a_bits as u64) << 16)
+                        ^ ((c_real as u64) << 24)
+                        ^ (((mode == RegionMode::Paper) as u64) << 32);
+                    let mut g = Gen::new(seed);
+                    for _ in 0..3 {
+                        let wl = quantized_workload(&mut g, w_bits, a_bits, c_real);
+                        let issues = wl.dims.issues_per_output();
+                        let Some(plan) = region::plan_vmacsr(w_bits, a_bits, issues, mode) else {
+                            // no plan: only legal outside Paper mode
+                            // (Strict refuses pairs like W4A4)
+                            assert_eq!(
+                                mode,
+                                RegionMode::Strict,
+                                "paper mode must admit every 1..=4 pair on LP"
+                            );
+                            continue;
+                        };
+                        let packed =
+                            golden_packed_vmacsr(&wl, plan.container, plan.spill_every);
+                        let exact = golden_exact(&wl);
+                        if plan.exact {
+                            assert_eq!(
+                                packed, exact,
+                                "W{w_bits}A{a_bits} {mode:?} c={c_real}: exact plan diverged"
+                            );
+                        } else {
+                            // non-exact plans still produce in-range
+                            // container sums (the spill cadence bounds
+                            // the narrow accumulator by construction)
+                            assert_eq!(packed.len(), exact.len());
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn strict_plans_cover_the_paper_headline_points() {
+    // the pins the autotuner's candidate set relies on: W2A2 is exact
+    // on ULP (the 3.2x point), W4A4 only runs in Paper mode on LP (the
+    // 1.7x point), and every Strict plan self-reports exact
+    let issues = 8 * 9;
+    let p22 = region::plan_vmacsr(2, 2, issues, RegionMode::Paper).unwrap();
+    assert_eq!(p22.container, Container::Ulp);
+    assert!(p22.exact);
+    let p44 = region::plan_vmacsr(4, 4, issues, RegionMode::Paper).unwrap();
+    assert_eq!(p44.container, Container::Lp);
+    assert!(!p44.exact);
+    assert!(region::plan_vmacsr(4, 4, issues, RegionMode::Strict).is_none());
+    for w in 1..=4 {
+        for a in 1..=4 {
+            if let Some(p) = region::plan_vmacsr(w, a, issues, RegionMode::Strict) {
+                assert!(p.exact, "strict plans are exact by definition");
+            }
+        }
+    }
+}
