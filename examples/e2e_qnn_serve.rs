@@ -130,6 +130,62 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         summary.push((prec.label(), acc, cyc, speedup));
     }
 
+    // === the batched request path (DESIGN.md §Serving) ===
+    // The same W2A2 network compiled under the batch-4 arena layout:
+    // sharded submission queues, one batched execution per window, the
+    // per-batch weight-pack preamble amortized across the fill.  Served
+    // classifications stay bit-exact against the golden network.
+    {
+        use sparq::coordinator::QnnBatchServer;
+        let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let serve = ServeConfig { workers: 2, batch_window_us: 2_000, queue_depth: 256, batch: 4 };
+        let server =
+            QnnBatchServer::start(sparq_cfg.clone(), &graph, prec, seed, serve, &cache)?;
+        let net = QnnNet::from_seed(&graph, prec, seed)?;
+        let images: Vec<Vec<u64>> = (0..IMAGES).map(|i| net.test_image(2000 + i as u64)).collect();
+        let labels: Vec<usize> = images
+            .iter()
+            .map(|img| net.golden_forward(img).map(|t| t.argmax))
+            .collect::<Result<_, _>>()?;
+        let mut pending = Vec::new();
+        for (i, img) in images.iter().enumerate() {
+            let fimg: Vec<f32> = img.iter().map(|&v| v as f32).collect();
+            match server.submit(fimg) {
+                Ok(rx) => pending.push((i, rx)),
+                Err(e) => println!("request {i}: {e}"),
+            }
+        }
+        let mut correct = 0usize;
+        let mut served = 0usize;
+        for (j, rx) in pending {
+            if let Ok(Ok(r)) = rx.recv() {
+                served += 1;
+                correct += (r.class == labels[j]) as usize;
+            }
+        }
+        // every request must actually serve — a skipped/errored request
+        // would make the agreement check below vacuous
+        assert_eq!(served, IMAGES, "batched serving dropped requests");
+        let snap = server.shutdown();
+        let fills: Vec<String> =
+            snap.batch_fill.iter().map(|&(k, c)| format!("{k}x{c}")).collect();
+        println!(
+            "=== batched serving (batch-4 arena, 2 shard workers) ===\n  \
+             golden agreement {:.2}% over {served} images (must be 100)\n  \
+             {} batches (fill histogram: {}), queue depth max {}\n  \
+             latency p50/p99 = {}/{} us | p50/p99 = {}/{} simulated cycles\n",
+            100.0 * correct as f64 / served.max(1) as f64,
+            snap.batches,
+            fills.join(" "),
+            snap.queue_depth_max,
+            snap.p50_us,
+            snap.p99_us,
+            snap.p50_cycles,
+            snap.p99_cycles,
+        );
+        assert_eq!(correct, served, "batched serving must agree with the golden network");
+    }
+
     let cs = cache.stats();
     println!("=== summary (paper headline: 3.2x @ 2-bit, 1.7x @ 4-bit on conv2d) ===");
     println!(

@@ -1,0 +1,138 @@
+//! Batched serving throughput bench (DESIGN.md §Serving): the SparqCNN
+//! W2A2 compiled under the batch-B arena layout for B in {1, 2, 4, 8},
+//! served in full batches on the warm cache path.
+//!
+//! What it asserts (CI runs this as a smoke):
+//!
+//! * img/s at fmax is STRICTLY increasing from B=1 to B=8 — per-slot
+//!   cycles are batch-invariant, so the per-batch weight-pack preamble
+//!   is the only amortized term and the ordering is deterministic;
+//! * a warm rerun of the whole sweep is all graph-level cache hits
+//!   (nothing recompiles, nothing re-tunes);
+//! * the batched server path executes real batches (fill histogram,
+//!   queue metrics, deterministic cycle-latency percentiles).
+//!
+//! `--json` writes `BENCH_serve.json` next to the other BENCH files;
+//! `sparq bench-check` gates the cycle fields against
+//! `ci/bench_baselines/BENCH_serve.json`.
+
+mod common;
+
+use common::{json_flag, Bench, Json};
+use sparq::config::ServeConfig;
+use sparq::coordinator::QnnBatchServer;
+use sparq::power::LaneReport;
+use sparq::qnn::schedule::{QnnPrecision, DEFAULT_QNN_SEED};
+use sparq::qnn::QnnGraph;
+use sparq::report::{render_throughput, throughput_sweep, SweepCtx};
+use sparq::ProcessorConfig;
+
+const BATCHES: [u32; 4] = [1, 2, 4, 8];
+const IMAGES: usize = 32;
+
+fn main() {
+    let b = Bench::new("serve_throughput");
+    let cfg = ProcessorConfig::sparq();
+    let fmax = LaneReport::for_config(&cfg).fmax_ghz();
+    let ctx = SweepCtx::new();
+
+    // cold sweep compiles each batch layout once
+    let rows = b.section("sweep(cold)", || {
+        throughput_sweep(&ctx, &BATCHES, IMAGES).expect("throughput sweep")
+    });
+    print!("{}", render_throughput(&rows, fmax));
+
+    // warm rerun: all graph-level hits, bit-identical cycles
+    let misses = ctx.cache.stats().misses;
+    let warm = b.section("sweep(warm)", || {
+        throughput_sweep(&ctx, &BATCHES, IMAGES).expect("warm throughput sweep")
+    });
+    assert_eq!(
+        ctx.cache.stats().misses,
+        misses,
+        "warm sweep must be all cache hits (no recompilation)"
+    );
+    for (c, w) in rows.iter().zip(&warm) {
+        assert_eq!(c.slot_cycles, w.slot_cycles, "B={} slot cycles drifted", c.batch);
+        assert_eq!(c.preamble_cycles, w.preamble_cycles, "B={} preamble drifted", c.batch);
+    }
+
+    // the acceptance gate: strictly increasing img/s from B=1 to B=8
+    for pair in rows.windows(2) {
+        assert!(
+            pair[1].img_per_s_fmax > pair[0].img_per_s_fmax,
+            "img/s must strictly increase with batch: B={} {:.0} !> B={} {:.0}",
+            pair[1].batch,
+            pair[1].img_per_s_fmax,
+            pair[0].batch,
+            pair[0].img_per_s_fmax
+        );
+    }
+
+    // server smoke at B=8: real batches through the sharded queue
+    let snap = b.section("server(B=8)", || {
+        let server = QnnBatchServer::start(
+            cfg.clone(),
+            &QnnGraph::sparq_cnn(),
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+            DEFAULT_QNN_SEED,
+            ServeConfig { workers: 1, batch_window_us: 20_000, queue_depth: 64, batch: 8 },
+            &ctx.cache,
+        )
+        .expect("server start");
+        let image_len = server.image_len();
+        let mut pending = Vec::new();
+        for i in 0..48usize {
+            let img: Vec<f32> =
+                (0..image_len).map(|k| ((k as u64 * 7 + i as u64) % 4) as f32).collect();
+            match server.submit(img) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => panic!("submit {i}: {e}"),
+            }
+        }
+        let mut served = 0usize;
+        for rx in pending {
+            served += matches!(rx.recv(), Ok(Ok(_))) as usize;
+        }
+        assert_eq!(served, 48, "every submitted request must be served");
+        server.shutdown()
+    });
+    let mean_fill = if snap.batches > 0 {
+        snap.completed as f64 / snap.batches as f64
+    } else {
+        0.0
+    };
+    println!(
+        "server: {} requests in {} batches (mean fill {:.1}), p50/p99 = {}/{} cycles, queue depth max {}",
+        snap.completed, snap.batches, mean_fill, snap.p50_cycles, snap.p99_cycles, snap.queue_depth_max
+    );
+    assert!(snap.batches < snap.completed, "B=8 under flood must batch some requests");
+
+    if json_flag() {
+        let mut json = Json::new();
+        json.str("bench", "serve_throughput").int("images", IMAGES as u64).num("fmax_ghz", fmax);
+        json.obj("sweep", |j| {
+            for r in &rows {
+                j.obj(&format!("b{}", r.batch), |j| {
+                    j.int("slot_cycles", r.slot_cycles)
+                        .int("preamble_cycles", r.preamble_cycles)
+                        .num("cycles_per_image", r.cycles_per_image)
+                        .num("images_per_s_at_fmax", r.img_per_s_fmax)
+                        .num("host_images_per_s", r.wall_img_per_s);
+                });
+            }
+        });
+        json.obj("serve", |j| {
+            j.int("completed", snap.completed)
+                .int("batches", snap.batches)
+                .num("mean_fill", mean_fill)
+                .int("p50_cycles", snap.p50_cycles)
+                .int("p99_cycles", snap.p99_cycles)
+                .int("rejected", snap.rejected)
+                .int("queue_depth_max", snap.queue_depth_max.max(0) as u64);
+        });
+        json.write("BENCH_serve.json");
+    }
+
+    b.finish();
+}

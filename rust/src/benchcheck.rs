@@ -1,0 +1,500 @@
+//! The CI perf-regression gate: compare the cycle counts in freshly
+//! generated `BENCH_*.json` files against the baselines committed
+//! under `ci/bench_baselines/`.
+//!
+//! The simulator's cycle counts are DETERMINISTIC — same sources, same
+//! cycles, on any machine — so every numeric field whose key mentions
+//! `cycles` is compared at **tolerance 0**: any drift is a perf
+//! regression (or an un-blessed intentional change) and fails CI with
+//! a printed diff.  Wall-clock fields (`host_*`, `*_s`, throughput)
+//! are machine-dependent and are never compared.
+//!
+//! ## Bless protocol (recorded in ROADMAP.md "Open items")
+//!
+//! A baseline file containing `"unblessed": true` is a bootstrap
+//! placeholder: `bench-check` prints the measured values and passes.
+//! To bless (initially, or after an intentional cycle change):
+//!
+//! 1. `cargo bench --bench <name> -- --json` for every bench (CI's
+//!    bench-gate job does exactly this), or run
+//!    `sparq bench-check --bless` after generating the files locally;
+//! 2. copy the generated `BENCH_*.json` into `ci/bench_baselines/`;
+//! 3. commit them with the PR that changed the cycles, so the diff
+//!    reviewer sees the perf delta next to the code that caused it.
+//!
+//! The parser below is a minimal recursive-descent JSON reader (the
+//! crate is dependency-free); it accepts the full JSON grammar the
+//! bench writer and hand-edited baselines can produce.
+
+use std::fmt;
+
+/// A parsed JSON value (only what the gate needs: numbers keep their
+/// f64 value — cycle counts are u64 well below 2^53, so equality is
+/// exact).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Member lookup on objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document (typed error with byte offset).
+pub fn parse(text: &str) -> Result<Json, ParseError> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing characters after the document"));
+    }
+    Ok(v)
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub offset: usize,
+    pub message: &'static str,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, message: &'static str) -> ParseError {
+        ParseError { offset: self.pos, message }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8, what: &'static str) -> Result<(), ParseError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(what))
+        }
+    }
+
+    fn lit(&mut self, s: &'static str, v: Json) -> Result<Json, ParseError> {
+        if self.bytes[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, ParseError> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            _ => Err(self.err("expected a value")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, ParseError> {
+        self.eat(b'{', "expected '{'")?;
+        let mut members = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(members));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':', "expected ':' after member key")?;
+            self.ws();
+            let v = self.value()?;
+            members.push((k, v));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(members));
+                }
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, ParseError> {
+        self.eat(b'[', "expected '['")?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, ParseError> {
+        self.eat(b'"', "expected '\"'")?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or_else(|| self.err("unterminated escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                    .map_err(|_| self.err("invalid \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("invalid \\u escape"))?;
+                            self.pos += 4;
+                            // BMP only (the bench writer never emits
+                            // surrogate pairs); lone surrogates map to
+                            // the replacement character
+                            out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar (the input came from a
+                    // &str, so boundaries are valid)
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self.pos < self.bytes.len()
+                        && (self.bytes[self.pos] & 0xC0) == 0x80
+                    {
+                        self.pos += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.bytes[start..self.pos])
+                            .map_err(|_| self.err("invalid utf-8"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, ParseError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| self.err("invalid number"))
+    }
+}
+
+/// One divergence between a baseline and the current bench output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchDiff {
+    /// Dotted path of the drifted field (e.g. `sweep.b4.slot_cycles`).
+    pub field: String,
+    pub baseline: f64,
+    /// `None` = the field disappeared from the current output.
+    pub current: Option<f64>,
+}
+
+impl fmt::Display for BenchDiff {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.current {
+            Some(c) => write!(
+                f,
+                "{}: baseline {} -> current {} ({:+})",
+                self.field,
+                self.baseline,
+                c,
+                c - self.baseline
+            ),
+            None => write!(f, "{}: baseline {} -> MISSING in current output", self.field, self.baseline),
+        }
+    }
+}
+
+/// What comparing one bench file produced.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CheckOutcome {
+    /// The baseline is the `"unblessed": true` bootstrap placeholder:
+    /// nothing is gated yet (the bless protocol arms the gate).
+    Unblessed,
+    /// Every baseline cycle field matched exactly.
+    Match { fields: usize },
+    /// At least one cycle field drifted (CI fails).
+    Drift(Vec<BenchDiff>),
+}
+
+/// Is this key a deterministic cycle field (gated at tolerance 0)?
+/// Cycle *rates* are excluded: a key like `sim_cycles_per_s` divides
+/// deterministic cycles by host wall time, which is machine-dependent
+/// and must never be gated.
+fn is_cycle_key(key: &str) -> bool {
+    let k = key.to_ascii_lowercase();
+    k.contains("cycles") && !k.contains("per_s")
+}
+
+/// Collect every `(dotted path, value)` gated numeric field,
+/// depth-first in document order: a number is gated when its own key
+/// names cycles, or when it sits inside an array whose nearest key
+/// does (e.g. every element of `"layer_cycles": [..]`).
+pub fn cycle_fields(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    collect(doc, "", false, &mut out);
+    out
+}
+
+fn collect(v: &Json, path: &str, gated: bool, out: &mut Vec<(String, f64)>) {
+    match v {
+        Json::Num(n) => {
+            if gated {
+                out.push((path.to_string(), *n));
+            }
+        }
+        Json::Obj(members) => {
+            for (k, v) in members {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                // an object member's own key decides its gating
+                collect(v, &sub, is_cycle_key(k), out);
+            }
+        }
+        Json::Arr(items) => {
+            // array elements have no key: they inherit the array's
+            for (i, v) in items.iter().enumerate() {
+                collect(v, &format!("{path}[{i}]"), gated, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Is this baseline the `"unblessed": true` bootstrap placeholder?
+pub fn is_unblessed(baseline: &Json) -> bool {
+    matches!(baseline.get("unblessed"), Some(Json::Bool(true)))
+}
+
+/// Compare one baseline document against the current bench output:
+/// every cycle field in the BASELINE must exist in the current output
+/// with exactly the same value (cycles are deterministic — tolerance
+/// 0).  Fields only present in the current output are new benches'
+/// data and pass (they gate once blessed).
+pub fn compare(baseline: &Json, current: &Json) -> CheckOutcome {
+    if is_unblessed(baseline) {
+        return CheckOutcome::Unblessed;
+    }
+    let base = cycle_fields(baseline);
+    let cur: std::collections::HashMap<String, f64> = cycle_fields(current).into_iter().collect();
+    let mut diffs = Vec::new();
+    for (field, bval) in &base {
+        match cur.get(field) {
+            Some(&cval) if cval == *bval => {}
+            Some(&cval) => {
+                diffs.push(BenchDiff { field: field.clone(), baseline: *bval, current: Some(cval) })
+            }
+            None => diffs.push(BenchDiff { field: field.clone(), baseline: *bval, current: None }),
+        }
+    }
+    if diffs.is_empty() {
+        CheckOutcome::Match { fields: base.len() }
+    } else {
+        CheckOutcome::Drift(diffs)
+    }
+}
+
+/// Compare two raw JSON texts (convenience for the CLI and tests).
+pub fn compare_texts(baseline: &str, current: &str) -> Result<CheckOutcome, ParseError> {
+    Ok(compare(&parse(baseline)?, &parse(current)?))
+}
+
+/// The bench files the gate knows about (name, artifact filename).
+pub const BENCH_FILES: [&str; 4] =
+    ["BENCH_simspeed.json", "BENCH_qnn.json", "BENCH_mixed.json", "BENCH_serve.json"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: &str = r#"{
+        "bench": "serve_throughput",
+        "fmax_ghz": 1.464,
+        "sweep": {
+            "b1": {"slot_cycles": 41000, "preamble_cycles": 27648, "host_images_per_s": 812.5},
+            "b8": {"slot_cycles": 41000, "preamble_cycles": 27648, "cycles_per_image": 44456.0}
+        },
+        "serve": {"p50_cycles": 41000, "completed": 48, "sim_cycles_per_s": 3.1e9}
+    }"#;
+
+    #[test]
+    fn parser_roundtrips_the_bench_writer_grammar() {
+        let doc = parse(BASE).unwrap();
+        assert!(matches!(doc.get("bench"), Some(Json::Str(s)) if s == "serve_throughput"));
+        let fields = cycle_fields(&doc);
+        // host_images_per_s and completed are NOT cycle fields, and
+        // neither is the wall-derived rate sim_cycles_per_s
+        let names: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "sweep.b1.slot_cycles",
+                "sweep.b1.preamble_cycles",
+                "sweep.b8.slot_cycles",
+                "sweep.b8.preamble_cycles",
+                "sweep.b8.cycles_per_image",
+                "serve.p50_cycles",
+            ]
+        );
+        assert!(parse("{\"a\": [1, 2, {\"cycles\": 3}]}").is_ok());
+        assert!(parse("not json").is_err());
+        assert!(parse("{\"a\": 1} trailing").is_err());
+    }
+
+    #[test]
+    fn array_elements_under_a_cycle_key_are_gated() {
+        // the documented contract covers numbers inside cycle-named
+        // arrays too ("layer_cycles": [..]) — and drift in one element
+        // fails the gate
+        let base = r#"{"layer_cycles": [4100, 5200], "host_s": [0.5, 0.6]}"#;
+        let fields = cycle_fields(&parse(base).unwrap());
+        let names: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, vec!["layer_cycles[0]", "layer_cycles[1]"]);
+        let drift = base.replace("5200", "5201");
+        assert!(matches!(compare_texts(base, &drift).unwrap(), CheckOutcome::Drift(_)));
+        // a number inside an object inside a cycle-named key is judged
+        // by its OWN key (deep wall fields stay ungated)
+        let nested = r#"{"cycles_by_layer": {"stem": 10, "host_s": 0.5}}"#;
+        let f = cycle_fields(&parse(nested).unwrap());
+        assert!(f.is_empty(), "object members are gated by their own keys: {f:?}");
+    }
+
+    #[test]
+    fn identical_documents_match_on_every_cycle_field() {
+        match compare_texts(BASE, BASE).unwrap() {
+            CheckOutcome::Match { fields } => assert_eq!(fields, 6),
+            other => panic!("expected a match, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn a_drifted_cycle_count_fails_the_gate() {
+        // the acceptance demonstration: one drifted cycle field makes
+        // the gate fail with a printed diff — this is what makes CI red
+        let current = BASE.replace("\"slot_cycles\": 41000", "\"slot_cycles\": 41001");
+        match compare_texts(BASE, &current).unwrap() {
+            CheckOutcome::Drift(diffs) => {
+                assert_eq!(diffs.len(), 2, "both b1 and b8 slot_cycles drifted");
+                assert_eq!(diffs[0].field, "sweep.b1.slot_cycles");
+                assert_eq!(diffs[0].baseline, 41000.0);
+                assert_eq!(diffs[0].current, Some(41001.0));
+                assert!(diffs[0].to_string().contains("41001"));
+            }
+            other => panic!("drift must fail the gate, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tolerance_is_zero_on_cycles_and_wall_fields_are_ignored() {
+        // wall-clock drift passes (throughput AND cycle-rate fields);
+        // a 1-cycle drift does not
+        let wall_drift = BASE.replace("812.5", "9999.0").replace("3.1e9", "2.2e9");
+        assert!(matches!(
+            compare_texts(BASE, &wall_drift).unwrap(),
+            CheckOutcome::Match { .. }
+        ));
+        let cyc_drift = BASE.replace("\"p50_cycles\": 41000", "\"p50_cycles\": 40999");
+        assert!(matches!(compare_texts(BASE, &cyc_drift).unwrap(), CheckOutcome::Drift(_)));
+    }
+
+    #[test]
+    fn missing_cycle_field_is_a_drift() {
+        let current = BASE.replace("\"p50_cycles\": 41000, ", "");
+        match compare_texts(BASE, &current).unwrap() {
+            CheckOutcome::Drift(diffs) => {
+                assert!(diffs.iter().any(|d| d.field == "serve.p50_cycles" && d.current.is_none()));
+            }
+            other => panic!("missing field must fail, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unblessed_baselines_bootstrap_without_gating() {
+        let placeholder = r#"{"unblessed": true, "note": "bless me"}"#;
+        assert_eq!(compare_texts(placeholder, BASE).unwrap(), CheckOutcome::Unblessed);
+    }
+
+    #[test]
+    fn new_fields_in_current_output_do_not_fail() {
+        let grown = BASE.replace(
+            "\"completed\": 48",
+            "\"completed\": 48, \"p99_cycles\": 41000",
+        );
+        assert!(matches!(compare_texts(BASE, &grown).unwrap(), CheckOutcome::Match { .. }));
+    }
+}

@@ -154,6 +154,7 @@ impl Config {
             workers: self.get_u32("serve", "workers")?.unwrap_or(1) as usize,
             batch_window_us: self.get_u64("serve", "batch_window_us")?.unwrap_or(500),
             queue_depth: self.get_u32("serve", "queue_depth")?.unwrap_or(256) as usize,
+            batch: self.get_u32("serve", "batch")?.unwrap_or(4) as usize,
         })
     }
 }
@@ -164,11 +165,16 @@ pub struct ServeConfig {
     pub workers: usize,
     pub batch_window_us: u64,
     pub queue_depth: usize,
+    /// Activation slots per batched execution
+    /// (`coordinator::QnnBatchServer`; clamped to the compiled
+    /// `MAX_BATCH`).  The generic executor path takes its batch from
+    /// the executor instead.
+    pub batch: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 1, batch_window_us: 500, queue_depth: 256 }
+        ServeConfig { workers: 1, batch_window_us: 500, queue_depth: 256, batch: 4 }
     }
 }
 
@@ -213,6 +219,9 @@ queue_depth = 64
         assert_eq!(s.workers, 3);
         assert_eq!(s.queue_depth, 64);
         assert_eq!(s.batch_window_us, 500); // default
+        assert_eq!(s.batch, 4); // default
+        let c = Config::parse("[serve]\nbatch = 8").unwrap();
+        assert_eq!(c.serve().unwrap().batch, 8);
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! The batched QNN request path (DESIGN.md §Serving): a sharded,
+//! bounded submission queue in front of workers that execute
+//! *batch-B* compiled programs.
+//!
+//! Where the generic [`super::Server`] drives any [`super::Executor`]
+//! one image at a time, [`QnnBatchServer`] serves the whole SparqCNN
+//! through the batch-B arena layout
+//! ([`crate::qnn::compiled::CompiledQnn::compile_batched`]):
+//!
+//! * **Shard assignment.**  Each worker owns a private bounded queue
+//!   (its shard) — no shared-receiver lock.  `submit` assigns requests
+//!   round-robin and fails over to the other shards when the chosen
+//!   one is full; only when *every* shard is full does the caller see
+//!   typed backpressure ([`super::ServeError::QueueFull`]).
+//! * **Batching window.**  A worker takes its shard's first request,
+//!   drains up to `batch - 1` more within `batch_window_us`, then runs
+//!   ONE batched execution: every image staged into its own activation
+//!   slot, the per-batch weight-pack preamble paid once, each stage
+//!   stream replayed per slot with rebased addresses.
+//! * **Scatter.**  Per-image logits/cycles fan back out to each
+//!   request's completion channel; the [`Metrics`] sink records
+//!   per-request wall *and* simulated-cycle latency plus the executed
+//!   batch's fill.
+//!
+//! Per-image results are bit-identical to unbatched inference (the
+//! batch determinism tests in `rust/tests/serve_batch.rs` pin logits
+//! and cycles), so batching is purely a throughput/amortization
+//! decision.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{InferResult, Metrics, ServeError, Snapshot};
+use crate::arch::ProcessorConfig;
+use crate::config::ServeConfig;
+use crate::kernels::ProgramCache;
+use crate::qnn::compiled::{argmax_i64, MAX_BATCH};
+use crate::qnn::schedule::QnnPrecision;
+use crate::qnn::QnnGraph;
+use crate::runtime::SimQnnModel;
+use crate::sim::MachinePool;
+
+struct BatchRequest {
+    image: Vec<f32>,
+    resp: SyncSender<Result<InferResult, ServeError>>,
+    enqueued: Instant,
+}
+
+/// A running batched QNN inference server (simulator backend, no
+/// artifacts).  The network compiles once into the shared
+/// [`ProgramCache`] under its batched graph-level key; every worker
+/// shares the `Arc`'d model and owns a private [`MachinePool`].
+pub struct QnnBatchServer {
+    shards: Option<Vec<SyncSender<BatchRequest>>>,
+    rr: AtomicUsize,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    batch: usize,
+    image_len: usize,
+}
+
+impl QnnBatchServer {
+    /// Compile the batched network (or fetch it from `cache`) and
+    /// start `serve.workers` shard workers at batch size `serve.batch`
+    /// (clamped to `1..=`[`MAX_BATCH`]).
+    pub fn start(
+        cfg: ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+        serve: ServeConfig,
+        cache: &ProgramCache,
+    ) -> Result<QnnBatchServer, ServeError> {
+        let batch = serve.batch.clamp(1, MAX_BATCH as usize) as u32;
+        let model = Arc::new(
+            SimQnnModel::compile_batched(&cfg, graph, precision, seed, cache, batch)
+                .map_err(|e| ServeError::Worker(e.to_string()))?,
+        );
+        let workers = serve.workers.max(1);
+        // the queue budget splits across the shards (at least 1 each)
+        let shard_depth = (serve.queue_depth / workers).max(1);
+        let window = Duration::from_micros(serve.batch_window_us);
+        let metrics = Arc::new(Metrics::default());
+        let image_len = model.input_len();
+        let mut shards = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let (tx, rx) = sync_channel::<BatchRequest>(shard_depth);
+            shards.push(tx);
+            let metrics = Arc::clone(&metrics);
+            let model = Arc::clone(&model);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sparq-batch-worker-{wid}"))
+                    .spawn(move || worker_loop(rx, metrics, model, window))
+                    .map_err(|e| ServeError::Worker(e.to_string()))?,
+            );
+        }
+        Ok(QnnBatchServer {
+            shards: Some(shards),
+            rr: AtomicUsize::new(0),
+            metrics,
+            workers: handles,
+            batch: batch as usize,
+            image_len,
+        })
+    }
+
+    /// The compiled batch size workers execute at.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Per-image input length (c * h * w).
+    pub fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    /// Non-blocking submit: round-robin shard assignment with failover
+    /// — the request lands on the first non-full shard after its
+    /// assigned one; [`ServeError::QueueFull`] only when every shard
+    /// is at capacity (typed backpressure, recorded in the metrics).
+    pub fn submit(
+        &self,
+        image: Vec<f32>,
+    ) -> Result<Receiver<Result<InferResult, ServeError>>, ServeError> {
+        let shards = self.shards.as_ref().ok_or(ServeError::Closed)?;
+        let n = shards.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let (rtx, rrx) = sync_channel(1);
+        let mut req = BatchRequest { image, resp: rtx, enqueued: Instant::now() };
+        // gauge BEFORE the send: a worker may dequeue (and queue_dec)
+        // the instant try_send lands, and inc-after-send would let the
+        // gauge transiently read negative
+        self.metrics.queue_inc();
+        for k in 0..n {
+            match shards[(start + k) % n].try_send(req) {
+                Ok(()) => return Ok(rrx),
+                Err(TrySendError::Full(r)) => req = r,
+                Err(TrySendError::Disconnected(_)) => {
+                    self.metrics.queue_dec(1);
+                    return Err(ServeError::Closed);
+                }
+            }
+        }
+        self.metrics.queue_dec(1);
+        self.metrics.record_rejected();
+        Err(ServeError::QueueFull)
+    }
+
+    /// Blocking inference.
+    pub fn infer(&self, image: Vec<f32>) -> Result<InferResult, ServeError> {
+        let rx = self.submit(image)?;
+        rx.recv().map_err(|_| ServeError::Closed)?
+    }
+
+    /// Drain the shards, stop the workers, return the final metrics.
+    pub fn shutdown(mut self) -> Snapshot {
+        self.shards.take(); // close every shard; workers exit on disconnect
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<BatchRequest>,
+    metrics: Arc<Metrics>,
+    model: Arc<SimQnnModel>,
+    window: Duration,
+) {
+    let pool = MachinePool::new();
+    let batch = model.batch();
+    let per = model.input_len();
+    loop {
+        // take the shard's first request (blocking), then fill the
+        // batch greedily within the window
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // shard closed: shut down
+        };
+        metrics.queue_dec(1);
+        let mut reqs = vec![first];
+        let deadline = Instant::now() + window;
+        while reqs.len() < batch {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(r) => {
+                    metrics.queue_dec(1);
+                    reqs.push(r);
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // normalize request images to the model's input length (short
+        // images zero-pad, long ones truncate — same contract as the
+        // generic server's padded batch assembly).  Taken by value:
+        // the request only needs its channel/timestamp from here on,
+        // so the hot path pays no per-image copy.
+        let inputs: Vec<Vec<f32>> = reqs
+            .iter_mut()
+            .map(|r| {
+                let mut img = std::mem::take(&mut r.image);
+                img.resize(per, 0.0);
+                img
+            })
+            .collect();
+        // a poisoned batch must not kill the worker (same catch as the
+        // generic server)
+        let result: Result<_, String> =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                model.infer_batch(&pool, &inputs)
+            }))
+            .map_err(|p| super::panic_message(p.as_ref()))
+            .and_then(|r| r.map_err(|e| e.to_string()));
+        let fill = reqs.len() as u32;
+        match result {
+            Ok((per_image, _batch_cycles)) => {
+                let mut riders = Vec::with_capacity(reqs.len());
+                for (r, (logits, slot_cycles)) in reqs.into_iter().zip(per_image) {
+                    let class = argmax_i64(&logits);
+                    let lat = r.enqueued.elapsed().as_micros() as u64;
+                    riders.push((lat, slot_cycles));
+                    let _ = r.resp.send(Ok(InferResult {
+                        logits: logits.iter().map(|&v| v as f32).collect(),
+                        class,
+                        sim_cycles: slot_cycles,
+                        batch: fill,
+                    }));
+                }
+                metrics.record_batch(&riders, fill);
+            }
+            Err(e) => {
+                metrics.record_errors(reqs.len() as u64);
+                for r in reqs {
+                    let _ = r.resp.send(Err(ServeError::Worker(e.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::QnnNet;
+
+    fn w2a2() -> QnnPrecision {
+        QnnPrecision::SubByte { w_bits: 2, a_bits: 2 }
+    }
+
+    #[test]
+    fn serves_golden_classifications_through_the_batched_arena() {
+        let cache = ProgramCache::new();
+        let graph = QnnGraph::sparq_cnn();
+        let seed = 0xBA7C_5EED;
+        let serve =
+            ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 64, batch: 4 };
+        let server = QnnBatchServer::start(
+            ProcessorConfig::sparq(),
+            &graph,
+            w2a2(),
+            seed,
+            serve,
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(server.batch(), 4);
+        let net = QnnNet::from_seed(&graph, w2a2(), seed).unwrap();
+        let images: Vec<Vec<u64>> = (0..8).map(|i| net.test_image(500 + i)).collect();
+        let labels: Vec<usize> =
+            images.iter().map(|img| net.golden_forward(img).unwrap().argmax).collect();
+        let mut pending = Vec::new();
+        for img in &images {
+            let f: Vec<f32> = img.iter().map(|&v| v as f32).collect();
+            pending.push(server.submit(f).expect("submit"));
+        }
+        for (i, rx) in pending.into_iter().enumerate() {
+            let r = rx.recv().unwrap().expect("infer");
+            assert_eq!(r.class, labels[i], "image {i} classification diverged from golden");
+            assert!(r.sim_cycles > 0);
+            assert!(r.batch >= 1 && r.batch <= 4);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 8);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.batches, snap.batch_fill.iter().map(|&(_, n)| n).sum::<u64>());
+        assert!(snap.p50_cycles > 0, "cycle latency percentiles must be recorded");
+        assert_eq!(snap.queue_depth, 0, "all queued requests must have drained");
+    }
+
+    #[test]
+    fn start_surfaces_compile_errors_typed() {
+        // fp32 has no dataflow executor: the server must fail to start
+        // with a typed Worker error instead of spawning dead workers
+        let cache = ProgramCache::new();
+        let serve = ServeConfig::default();
+        let r = QnnBatchServer::start(
+            ProcessorConfig::sparq(),
+            &QnnGraph::sparq_cnn(),
+            QnnPrecision::Fp32,
+            1,
+            serve,
+            &cache,
+        );
+        assert!(matches!(r, Err(ServeError::Worker(_))));
+    }
+}

@@ -1,6 +1,8 @@
-//! Serving metrics: latency distribution, batch-size histogram,
-//! throughput — the numbers the e2e example reports.
+//! Serving metrics: latency distribution (wall *and* simulated
+//! cycles), batch-fill histogram, queue-depth gauge, throughput — the
+//! numbers the e2e example, `sparq serve` and the serve benches report.
 
+use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -9,12 +11,25 @@ use std::time::Instant;
 pub struct Metrics {
     inner: Mutex<Inner>,
     started: Instant,
+    /// Requests currently sitting in submission queues (gauge).
+    depth: AtomicI64,
+    /// High-water mark of the queue-depth gauge.
+    depth_max: AtomicI64,
 }
 
 #[derive(Debug, Default)]
 struct Inner {
     latencies_us: Vec<u64>,
     batch_sizes: Vec<u32>,
+    /// Per-request simulated-cycle latencies (the hardware cost the
+    /// request's inference was billed — slot cycles on the batched
+    /// path).
+    cycle_lats: Vec<u64>,
+    /// Executed-batch fill histogram: `fill_hist[k]` = batches that
+    /// ran with exactly `k` riders.
+    fill_hist: Vec<u64>,
+    /// Batches executed (the sum of `fill_hist`).
+    batches: u64,
     completed: u64,
     rejected: u64,
     /// Requests that got an error response instead of a result
@@ -26,17 +41,36 @@ struct Inner {
 
 impl Default for Metrics {
     fn default() -> Self {
-        Metrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            started: Instant::now(),
+            depth: AtomicI64::new(0),
+            depth_max: AtomicI64::new(0),
+        }
     }
 }
 
 impl Metrics {
     pub fn record(&self, latency_us: u64, batch: u32, sim_cycles: u64) {
         let mut g = self.inner.lock().unwrap();
-        g.latencies_us.push(latency_us);
-        g.batch_sizes.push(batch);
-        g.completed += 1;
-        g.sim_cycles += sim_cycles as u128;
+        record_one(&mut g, latency_us, batch, sim_cycles);
+    }
+
+    /// Record every rider of one executed batch under a single lock
+    /// (the batched worker's per-batch bookkeeping), plus the batch's
+    /// fill in the histogram.
+    pub fn record_batch(&self, riders: &[(u64, u64)], fill: u32) {
+        let mut g = self.inner.lock().unwrap();
+        for &(latency_us, sim_cycles) in riders {
+            record_one(&mut g, latency_us, fill, sim_cycles);
+        }
+        record_fill(&mut g, fill);
+    }
+
+    /// Record one executed batch's fill (size) in the histogram.
+    pub fn record_fill(&self, fill: u32) {
+        let mut g = self.inner.lock().unwrap();
+        record_fill(&mut g, fill);
     }
 
     pub fn record_rejected(&self) {
@@ -50,35 +84,77 @@ impl Metrics {
         self.inner.lock().unwrap().errors += n;
     }
 
+    /// A request entered a submission queue.
+    pub fn queue_inc(&self) {
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.depth_max.fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// `n` requests left a submission queue (a worker drained them).
+    pub fn queue_dec(&self, n: u64) {
+        self.depth.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
     /// Snapshot of the distribution so far.
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_us.clone();
         lat.sort_unstable();
-        let pct = |p: f64| -> u64 {
-            if lat.is_empty() {
+        let mut cyc = g.cycle_lats.clone();
+        cyc.sort_unstable();
+        let pct = |sorted: &[u64], p: f64| -> u64 {
+            if sorted.is_empty() {
                 return 0;
             }
-            let idx = ((lat.len() as f64 - 1.0) * p).round() as usize;
-            lat[idx]
+            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+            sorted[idx]
         };
         let elapsed = self.started.elapsed().as_secs_f64();
         Snapshot {
             completed: g.completed,
             rejected: g.rejected,
             errors: g.errors,
-            p50_us: pct(0.50),
-            p95_us: pct(0.95),
-            p99_us: pct(0.99),
+            p50_us: pct(&lat, 0.50),
+            p95_us: pct(&lat, 0.95),
+            p99_us: pct(&lat, 0.99),
+            p50_cycles: pct(&cyc, 0.50),
+            p99_cycles: pct(&cyc, 0.99),
             mean_batch: if g.batch_sizes.is_empty() {
                 0.0
             } else {
                 g.batch_sizes.iter().map(|&b| b as f64).sum::<f64>() / g.batch_sizes.len() as f64
             },
+            batch_fill: g
+                .fill_hist
+                .iter()
+                .enumerate()
+                .filter(|&(_, &n)| n > 0)
+                .map(|(k, &n)| (k as u32, n))
+                .collect(),
+            batches: g.batches,
+            queue_depth: self.depth.load(Ordering::Relaxed),
+            queue_depth_max: self.depth_max.load(Ordering::Relaxed),
             throughput_rps: if elapsed > 0.0 { g.completed as f64 / elapsed } else { 0.0 },
             total_sim_cycles: g.sim_cycles,
         }
     }
+}
+
+fn record_one(g: &mut Inner, latency_us: u64, batch: u32, sim_cycles: u64) {
+    g.latencies_us.push(latency_us);
+    g.batch_sizes.push(batch);
+    g.cycle_lats.push(sim_cycles);
+    g.completed += 1;
+    g.sim_cycles += sim_cycles as u128;
+}
+
+fn record_fill(g: &mut Inner, fill: u32) {
+    let k = fill as usize;
+    if g.fill_hist.len() <= k {
+        g.fill_hist.resize(k + 1, 0);
+    }
+    g.fill_hist[k] += 1;
+    g.batches += 1;
 }
 
 /// A point-in-time view of the metrics.
@@ -92,7 +168,20 @@ pub struct Snapshot {
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    /// Per-request latency in *simulated* cycles (deterministic; the
+    /// hardware-side dual of the wall percentiles).
+    pub p50_cycles: u64,
+    pub p99_cycles: u64,
     pub mean_batch: f64,
+    /// `(fill, batches)` pairs: how many executed batches carried
+    /// exactly `fill` riders (empty fills omitted).
+    pub batch_fill: Vec<(u32, u64)>,
+    /// Batches executed in total.
+    pub batches: u64,
+    /// Requests currently queued (gauge at snapshot time).
+    pub queue_depth: i64,
+    /// High-water mark of the queue-depth gauge.
+    pub queue_depth_max: i64,
     pub throughput_rps: f64,
     /// Simulated Sparq cycles attributed across completed requests.
     pub total_sim_cycles: u128,
@@ -106,7 +195,7 @@ mod tests {
     fn percentiles_over_known_distribution() {
         let m = Metrics::default();
         for i in 1..=100u64 {
-            m.record(i, 4, 10);
+            m.record(i, 4, 10 * i);
         }
         let s = m.snapshot();
         assert_eq!(s.completed, 100);
@@ -115,7 +204,10 @@ mod tests {
         assert_eq!(s.p95_us, 95);
         assert_eq!(s.p99_us, 99);
         assert_eq!(s.mean_batch, 4.0);
-        assert_eq!(s.total_sim_cycles, 1000);
+        // simulated-cycle percentiles ride the same machinery
+        assert_eq!(s.p50_cycles, 510);
+        assert_eq!(s.p99_cycles, 990);
+        assert_eq!(s.total_sim_cycles, (1..=100u128).map(|i| 10 * i).sum());
     }
 
     #[test]
@@ -123,7 +215,10 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.p99_us, 0);
+        assert_eq!(s.p99_cycles, 0);
         assert_eq!(s.mean_batch, 0.0);
+        assert!(s.batch_fill.is_empty());
+        assert_eq!(s.queue_depth, 0);
     }
 
     #[test]
@@ -141,5 +236,23 @@ mod tests {
         m.record_errors(1); // a worker init failure
         assert_eq!(m.snapshot().errors, 5);
         assert_eq!(m.snapshot().completed, 0);
+    }
+
+    #[test]
+    fn batch_fill_histogram_and_queue_gauge() {
+        let m = Metrics::default();
+        m.queue_inc();
+        m.queue_inc();
+        m.queue_inc();
+        m.queue_dec(2);
+        m.record_batch(&[(10, 100), (12, 100)], 2);
+        m.record_batch(&[(9, 100)], 1);
+        m.record_fill(2);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.batch_fill, vec![(1, 1), (2, 2)]);
+        assert_eq!(s.queue_depth, 1);
+        assert_eq!(s.queue_depth_max, 3);
     }
 }

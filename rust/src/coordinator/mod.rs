@@ -1,25 +1,37 @@
 //! The serving coordinator — the L3 stack around the QNN: bounded
-//! request queue (backpressure), dynamic batcher, worker threads,
+//! request queues (backpressure), dynamic batcher, worker threads,
 //! per-request metrics, and simulated-hardware cycle attribution from
-//! the `qnn` scheduler.  Three executors exist: the PJRT artifact path
-//! ([`PjrtExecutor`]), a single simulated conv ([`SimConvExecutor`]),
-//! and — since the dataflow refactor — the whole SparqCNN as one
-//! chained simulated program ([`SimQnnExecutor`]), which is what
-//! `sparq serve` uses when no artifacts are present.
+//! the `qnn` scheduler.
+//!
+//! Two request paths exist:
+//!
+//! * The generic [`Server`] drives any [`Executor`] (the PJRT artifact
+//!   path [`PjrtExecutor`], a single simulated conv
+//!   [`SimConvExecutor`], or the whole SparqCNN one image at a time
+//!   [`SimQnnExecutor`]) behind one shared bounded queue.
+//! * The batched QNN path ([`batch::QnnBatchServer`], DESIGN.md
+//!   §Serving) serves the batch-B compiled arena: per-worker *shard*
+//!   queues, a batching window that fills up to B activation slots,
+//!   ONE batched execution per window, and per-request scatter — what
+//!   `sparq serve --batch` and the `serve_throughput` bench run.
 //!
 //! Design notes:
-//! * PJRT handles are not `Send`, so each worker thread owns its *own*
-//!   compiled runtime (standard per-core replication for CPU serving).
+//! * PJRT handles are not `Send`, so each generic-path worker thread
+//!   owns its *own* compiled runtime (standard per-core replication
+//!   for CPU serving).  The simulator models are plain data, so the
+//!   batched path shares one `Arc`'d model instead.
 //! * The batcher is a greedy window: a worker takes the first request,
 //!   then drains up to `batch-1` more within `batch_window_us`, pads
 //!   the tail with zero images (the artifact's batch dimension is
 //!   static), executes once, and fans results back out.
-//! * Backpressure: the queue is a bounded `sync_channel`; `try_infer`
-//!   fails fast when it is full (callers see rejections, not latency
-//!   collapse).
+//! * Backpressure: queues are bounded `sync_channel`s; `submit` fails
+//!   fast with [`ServeError::QueueFull`] when capacity is exhausted
+//!   (callers see rejections, not latency collapse).
 
+pub mod batch;
 pub mod metrics;
 
+pub use batch::QnnBatchServer;
 pub use metrics::{Metrics, Snapshot};
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -132,13 +144,25 @@ impl Server {
     ) -> Result<Receiver<Result<InferResult, ServeError>>, ServeError> {
         let (rtx, rrx) = sync_channel(1);
         let req = Request { image, resp: rtx, enqueued: Instant::now() };
-        match self.tx.as_ref().ok_or(ServeError::Closed)?.try_send(req) {
+        // gauge BEFORE the send: a worker may dequeue (and queue_dec)
+        // the instant try_send lands, and inc-after-send would let the
+        // gauge transiently read negative
+        self.metrics.queue_inc();
+        let Some(tx) = self.tx.as_ref() else {
+            self.metrics.queue_dec(1);
+            return Err(ServeError::Closed);
+        };
+        match tx.try_send(req) {
             Ok(()) => Ok(rrx),
             Err(TrySendError::Full(_)) => {
+                self.metrics.queue_dec(1);
                 self.metrics.record_rejected();
                 Err(ServeError::QueueFull)
             }
-            Err(TrySendError::Disconnected(_)) => Err(ServeError::Closed),
+            Err(TrySendError::Disconnected(_)) => {
+                self.metrics.queue_dec(1);
+                Err(ServeError::Closed)
+            }
         }
     }
 
@@ -180,13 +204,17 @@ fn worker_loop(
                 Err(_) => return, // channel closed: shut down
             }
         };
+        metrics.queue_dec(1);
         let mut reqs = vec![first];
         let deadline = Instant::now() + window;
         while reqs.len() < batch {
             let g = rx.lock().unwrap();
             let left = deadline.saturating_duration_since(Instant::now());
             match g.recv_timeout(left) {
-                Ok(r) => reqs.push(r),
+                Ok(r) => {
+                    metrics.queue_dec(1);
+                    reqs.push(r);
+                }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
@@ -207,6 +235,10 @@ fn worker_loop(
         let bsz = reqs.len() as u32;
         match result {
             Ok(logits) => {
+                // fills count EXECUTED batches only (errored batches are
+                // tracked via `errors`) — same accounting as the batched
+                // QnnBatchServer path, so the histograms stay comparable
+                metrics.record_fill(bsz);
                 for (i, r) in reqs.into_iter().enumerate() {
                     let l = logits[i * classes..(i + 1) * classes].to_vec();
                     let class = argmax(&l);
@@ -231,7 +263,7 @@ fn worker_loop(
 }
 
 /// Best-effort text of a caught executor panic payload.
-fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         format!("executor panicked: {s}")
     } else if let Some(s) = p.downcast_ref::<String>() {
@@ -523,7 +555,7 @@ mod tests {
     }
 
     fn mock_server(workers: usize, window_us: u64, depth: usize) -> Server {
-        let cfg = ServeConfig { workers, batch_window_us: window_us, queue_depth: depth };
+        let cfg = ServeConfig { workers, batch_window_us: window_us, queue_depth: depth, ..Default::default() };
         Server::start(Box::new(|| Ok(Box::new(Mock { batch: 4, calls: 0 }))), cfg, 1234).unwrap()
     }
 
@@ -568,7 +600,7 @@ mod tests {
     fn backpressure_rejects_when_full() {
         // no worker consumes: factory that blocks forever is hard; use
         // depth 1 and a slow drip instead — fill the queue synchronously
-        let cfg = ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 1 };
+        let cfg = ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 1, ..Default::default() };
         let s = Server::start(
             Box::new(|| {
                 std::thread::sleep(std::time::Duration::from_millis(200));
@@ -652,7 +684,7 @@ mod tests {
 
     #[test]
     fn executor_panic_does_not_kill_the_worker() {
-        let cfg = ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 16 };
+        let cfg = ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 16, ..Default::default() };
         let s = Server::start(
             Box::new(|| Ok(Box::new(PanicsOnce { panicked: false }) as Box<dyn Executor>)),
             cfg,

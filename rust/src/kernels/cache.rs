@@ -211,10 +211,14 @@ fn weight_words(wl: &Workload, variant: ConvVariant) -> Vec<u64> {
 }
 
 /// The graph-level key for whole-network entries: the processor, every
-/// layer descriptor by value, the precision, and the weight seed (the
-/// network's weights derive deterministically from it).  Same
-/// discipline as [`ConvKey`]: the fingerprint is the map hash and an
-/// equality pre-filter; the exact field compare decides.
+/// layer descriptor by value, the precision, the weight seed (the
+/// network's weights derive deterministically from it), and the batch
+/// layout.  `batch` is 0 for the unbatched legacy layout and B >= 1
+/// for a [`CompiledQnn::compile_batched`] arena — the two emit
+/// different streams (the batched layout hoists the weight-pack pass
+/// into a preamble), so they must never alias.  Same discipline as
+/// [`ConvKey`]: the fingerprint is the map hash and an equality
+/// pre-filter; the exact field compare decides.
 #[derive(Debug, Clone)]
 pub struct QnnKey {
     fp: u64,
@@ -224,6 +228,8 @@ pub struct QnnKey {
     classes: u32,
     precision: QnnPrecision,
     seed: u64,
+    /// 0 = unbatched layout; B >= 1 = batched arena with B slots.
+    batch: u32,
 }
 
 impl PartialEq for QnnKey {
@@ -235,6 +241,7 @@ impl PartialEq for QnnKey {
             && self.classes == o.classes
             && self.precision == o.precision
             && self.seed == o.seed
+            && self.batch == o.batch
     }
 }
 
@@ -251,6 +258,7 @@ fn qnn_fingerprint(
     graph: &QnnGraph,
     precision: QnnPrecision,
     seed: u64,
+    batch: u32,
 ) -> u64 {
     let mut f = Fnv1a::new();
     fp_cfg(&mut f, cfg);
@@ -299,6 +307,7 @@ fn qnn_fingerprint(
         }
     }
     f.u64(seed);
+    f.u32(batch);
     f.0
 }
 
@@ -435,21 +444,35 @@ impl ProgramCache {
         Ok(Arc::clone(entry))
     }
 
-    /// The graph-level key `get_or_compile_qnn` uses.
+    /// The graph-level key `get_or_compile_qnn` uses (unbatched
+    /// layout, `batch = 0`).
     pub fn qnn_key(
         cfg: &ProcessorConfig,
         graph: &QnnGraph,
         precision: QnnPrecision,
         seed: u64,
     ) -> QnnKey {
+        Self::qnn_key_batched(cfg, graph, precision, seed, 0)
+    }
+
+    /// The graph-level key with an explicit batch layout (`batch = 0`
+    /// is the unbatched layout; `B >= 1` a batched arena).
+    pub fn qnn_key_batched(
+        cfg: &ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+        batch: u32,
+    ) -> QnnKey {
         QnnKey {
-            fp: qnn_fingerprint(cfg, graph, precision, seed),
+            fp: qnn_fingerprint(cfg, graph, precision, seed, batch),
             cfg: cfg.clone(),
             layers: graph.layers.clone(),
             input: graph.input,
             classes: graph.classes,
             precision,
             seed,
+            batch,
         }
     }
 
@@ -467,12 +490,49 @@ impl ProgramCache {
         seed: u64,
     ) -> Result<Arc<CompiledQnn>, SimError> {
         let key = Self::qnn_key(cfg, graph, precision, seed);
+        self.qnn_entry(key, || {
+            let net = QnnNet::from_seed(graph, precision, seed)?;
+            CompiledQnn::compile_tuned(cfg, net, self)
+        })
+    }
+
+    /// [`Self::get_or_compile_qnn`] for the batch-`batch` arena layout
+    /// ([`CompiledQnn::compile_batched`]): one cached program whose
+    /// machine holds `batch` per-image activation slots.  Keyed apart
+    /// from the unbatched entries — the layouts emit different streams.
+    pub fn get_or_compile_qnn_batched(
+        &self,
+        cfg: &ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+        batch: u32,
+    ) -> Result<Arc<CompiledQnn>, SimError> {
+        // validate BEFORE keying: batch = 0 is the legacy-layout
+        // sentinel in QnnKey, so an unvalidated 0 would alias the
+        // unbatched entry on a warm cache instead of erroring
+        if batch == 0 || batch > crate::qnn::compiled::MAX_BATCH {
+            return Err(SimError::Unsupported(
+                "batch size must be between 1 and MAX_BATCH (64)",
+            ));
+        }
+        let key = Self::qnn_key_batched(cfg, graph, precision, seed, batch);
+        self.qnn_entry(key, || {
+            let net = QnnNet::from_seed(graph, precision, seed)?;
+            CompiledQnn::compile_batched(cfg, net, self, batch)
+        })
+    }
+
+    fn qnn_entry(
+        &self,
+        key: QnnKey,
+        compile: impl FnOnce() -> Result<CompiledQnn, SimError>,
+    ) -> Result<Arc<CompiledQnn>, SimError> {
         if let Some(cq) = self.qnn_map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(cq));
         }
-        let net = QnnNet::from_seed(graph, precision, seed)?;
-        let compiled = Arc::new(CompiledQnn::compile_tuned(cfg, net, self)?);
+        let compiled = Arc::new(compile()?);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.qnn_map.lock().unwrap();
         let entry = map.entry(key).or_insert(compiled);
@@ -686,6 +746,35 @@ mod tests {
         let b = ProgramCache::tune_key(&ProcessorConfig::sparq(), d, 3, 3, true, EngineOpts::default());
         let forged = b.clone().with_forged_fp(a.fp);
         assert_ne!(a, forged, "a fingerprint collision must not alias different precisions");
+    }
+
+    #[test]
+    fn qnn_key_separates_batch_layouts() {
+        // the unbatched layout (batch = 0 sentinel), a batch-1 arena
+        // and a batch-8 arena are three distinct programs — the batched
+        // layouts hoist the weight-pack pass, so aliasing them would
+        // serve wrong cycle counts
+        let cfg = ProcessorConfig::sparq();
+        let g = QnnGraph::sparq_cnn();
+        let p = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let legacy = ProgramCache::qnn_key(&cfg, &g, p, 7);
+        let b1 = ProgramCache::qnn_key_batched(&cfg, &g, p, 7, 1);
+        let b8 = ProgramCache::qnn_key_batched(&cfg, &g, p, 7, 8);
+        assert_ne!(legacy, b1);
+        assert_ne!(b1, b8);
+        assert_ne!(legacy.fp, b8.fp, "batch must reach the fingerprint");
+        let cache = ProgramCache::new();
+        let a = cache.get_or_compile_qnn_batched(&cfg, &g, p, 7, 8).unwrap();
+        let b = cache.get_or_compile_qnn_batched(&cfg, &g, p, 7, 8).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "identical batched request must share the entry");
+        assert_eq!(a.batch, 8);
+        cache.get_or_compile_qnn(&cfg, &g, p, 7).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 2));
+        // batch = 0 must error even on a WARM cache — the sentinel
+        // would otherwise alias the legacy unbatched entry
+        assert!(cache.get_or_compile_qnn_batched(&cfg, &g, p, 7, 0).is_err());
+        assert_eq!(cache.stats().hits, s.hits, "batch=0 must not hit the legacy entry");
     }
 
     #[test]

@@ -329,7 +329,7 @@ pub fn compile(
     opts: EngineOpts,
     label: String,
 ) -> Result<CompiledConv, SimError> {
-    compile_impl(cfg, wl, inner, opts, label, true, &mut LayoutAlloc::new())
+    compile_impl(cfg, wl, inner, opts, label, true, &mut LayoutAlloc::new(), None)
 }
 
 /// [`compile`] against a caller-held arena allocator: the layer's
@@ -347,9 +347,29 @@ pub(crate) fn compile_in_arena(
     label: String,
     la: &mut LayoutAlloc,
 ) -> Result<CompiledConv, SimError> {
-    compile_impl(cfg, wl, inner, opts, label, true, la)
+    compile_impl(cfg, wl, inner, opts, label, true, la, None)
 }
 
+/// [`compile_in_arena`] with the runtime *weight*-packing scalar pass
+/// hoisted out of the stream: its slot count is added to `hoisted`
+/// instead of being emitted.  The batched QNN compiler
+/// (`qnn::compiled::CompiledQnn::compile_batched`) collects these into
+/// one per-batch preamble stage — weights are static across a batch,
+/// so packing them per image would bill the same scalar work B times.
+/// Activation packing (per-image data) always stays in the stream.
+pub(crate) fn compile_in_arena_hoisted(
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    inner: Inner,
+    opts: EngineOpts,
+    label: String,
+    la: &mut LayoutAlloc,
+    hoisted: &mut u64,
+) -> Result<CompiledConv, SimError> {
+    compile_impl(cfg, wl, inner, opts, label, true, la, Some(hoisted))
+}
+
+#[allow(clippy::too_many_arguments)]
 fn compile_impl(
     cfg: &ProcessorConfig,
     wl: &Workload,
@@ -358,6 +378,7 @@ fn compile_impl(
     label: String,
     with_uops: bool,
     la: &mut LayoutAlloc,
+    hoist_pack: Option<&mut u64>,
 ) -> Result<CompiledConv, SimError> {
     let d = wl.dims;
     let sew = inner.sew();
@@ -431,8 +452,14 @@ fn compile_impl(
     if inner.packed().is_some() {
         if opts.runtime_weight_pack {
             // scalar packing of weight containers: 2 loads + shift+or +
-            // store per container, all in the scalar core
-            a.scalar(ScalarKind::AddrCalc, d.co * channels * d.fh * d.fw * 4);
+            // store per container, all in the scalar core.  Under a
+            // batched compilation the caller hoists this per-model work
+            // into a per-batch preamble instead of paying it per image.
+            let slots = d.co * channels * d.fh * d.fw * 4;
+            match hoist_pack {
+                Some(h) => *h += slots as u64,
+                None => a.scalar(ScalarKind::AddrCalc, slots),
+            }
         }
         if opts.runtime_act_pack {
             pack_rt::emit_pack_activations(&mut a, &d, sew, x_addr, xp_base);
@@ -646,7 +673,7 @@ pub fn build(
     opts: EngineOpts,
     label: String,
 ) -> Result<(Program, OutputRef), SimError> {
-    let cc = compile_impl(&m.cfg, wl, inner, opts, label, false, &mut LayoutAlloc::new())?;
+    let cc = compile_impl(&m.cfg, wl, inner, opts, label, false, &mut LayoutAlloc::new(), None)?;
     bind(m, wl, &cc)?;
     Ok((cc.prog, cc.out))
 }

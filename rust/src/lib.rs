@@ -45,17 +45,24 @@
 //!   ([`runtime::simconv`]): a single conv, or the whole network
 //!   ([`runtime::SimQnnModel`]) classifying through the cached
 //!   dataflow program with no artifacts at all.
-//! * [`coordinator`] — the serving stack: request queue, dynamic
+//! * [`coordinator`] — the serving stack: request queues, dynamic
 //!   batcher, worker pool, latency metrics.  Workers share one
 //!   [`kernels::ProgramCache`] via `Arc` and own a private machine
-//!   pool each (compile-once/execute-many serving), whether they run
-//!   the single-conv executor or the full-network one.
+//!   pool each (compile-once/execute-many serving).  Two request
+//!   paths: the generic executor [`coordinator::Server`] and the
+//!   batched QNN path ([`coordinator::QnnBatchServer`], DESIGN.md
+//!   §Serving) over batch-B compiled arenas with sharded queues.
+//! * [`benchcheck`] — the CI perf-regression gate: parses
+//!   `BENCH_*.json` and compares every deterministic cycle field
+//!   against `ci/bench_baselines/` at tolerance 0 (`sparq
+//!   bench-check`).
 //! * [`report`] — paper-style table/figure printers (Fig. 4, Fig. 5,
 //!   Table I, Table II).
 //! * [`config`] — the hand-rolled key=value config system and presets.
 //! * [`testutil`] — a tiny property-testing harness (xorshift PRNG).
 
 pub mod arch;
+pub mod benchcheck;
 pub mod config;
 pub mod coordinator;
 pub mod isa;

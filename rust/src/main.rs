@@ -30,6 +30,7 @@ fn main() -> ExitCode {
         "utilization" => cmd_utilization(rest),
         "qnn-cycles" => cmd_qnn_cycles(rest),
         "serve" => cmd_serve(rest),
+        "bench-check" => cmd_bench_check(rest),
         "isa" => cmd_isa(rest),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -61,7 +62,11 @@ COMMANDS
   qnn-cycles   per-layer simulated schedule                  [--precision wXaY|fp32] [--ladder]
                (--ladder sweeps W1A1..W4A4 + mixed stem/head configs, autotuned)
   serve        batched serving demo (PJRT artifacts, or the  [--requests N] [--model NAME] [--config FILE]
-               cached-program simulator backend without them) [--precision wXaY|mixed]
+               cached-program simulator backend without them) [--precision wXaY|mixed] [--batch B]
+               (--batch B serves through the batch-B compiled arena: sharded
+               queues, one batched execution per window, fill/queue metrics)
+  bench-check  compare BENCH_*.json against the committed     [--baselines DIR] [--bless]
+               cycle baselines (tolerance 0 on cycle fields; CI gate)
   isa          vmacsr encoding explorer                      [hex words...]
 ";
 
@@ -202,17 +207,26 @@ fn cmd_qnn_cycles(rest: &[String]) -> Result<(), String> {
 /// compiled once into a chained multi-layer dataflow program (shared
 /// program cache, graph-level key) and every request classifies
 /// through it end-to-end on a per-worker machine pool (no artifacts,
-/// no PJRT).
+/// no PJRT).  `--batch B` switches to the batched request path
+/// (`coordinator::QnnBatchServer`): a batch-B arena, sharded queues,
+/// one batched execution per batching window.
 fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     use sparq::kernels::ProgramCache;
     use sparq::qnn::QnnGraph;
     use std::sync::Arc;
 
     let n: usize = opt(rest, "--requests").and_then(|s| s.parse().ok()).unwrap_or(64);
-    let serve_cfg = match opt(rest, "--config") {
+    let mut serve_cfg = match opt(rest, "--config") {
         Some(f) => Config::load(f).map_err(|e| e.to_string())?.serve().map_err(|e| e.to_string())?,
         None => sparq::config::ServeConfig::default(),
     };
+    let batched = flag(rest, "--batch");
+    if let Some(b) = opt(rest, "--batch") {
+        serve_cfg.batch = b.parse().map_err(|_| "bad --batch value")?;
+        if serve_cfg.batch == 0 {
+            return Err("--batch must be at least 1".into());
+        }
+    }
     // "mixed" = the W4A4 stem-adjacent / W2A2 deep configuration: the
     // per-layer overrides flow through the same autotuned dataflow
     // compiler as the uniform precisions.  Uniform precisions parse
@@ -237,6 +251,10 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     let cfg = sparq::ProcessorConfig::sparq();
     let cache = Arc::new(ProgramCache::new());
     let seed = sparq::qnn::schedule::DEFAULT_QNN_SEED;
+
+    if batched {
+        return cmd_serve_sim_batched(&cfg, &graph, precision, seed, serve_cfg, &cache, n, prec_arg);
+    }
 
     // per-image hardware cost from the same compiled network
     let cyc = {
@@ -303,6 +321,83 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// The batched request path: batch-B arena compilation + sharded
+/// submission queues ([`sparq::coordinator::QnnBatchServer`]).  Prints
+/// the new serving metrics — batch-fill histogram, queue-depth
+/// high-water, latency percentiles in wall time AND simulated cycles.
+#[allow(clippy::too_many_arguments)]
+fn cmd_serve_sim_batched(
+    cfg: &sparq::ProcessorConfig,
+    graph: &sparq::qnn::QnnGraph,
+    precision: QnnPrecision,
+    seed: u64,
+    serve_cfg: sparq::config::ServeConfig,
+    cache: &sparq::kernels::ProgramCache,
+    n: usize,
+    prec_arg: &str,
+) -> Result<(), String> {
+    let server = sparq::coordinator::QnnBatchServer::start(
+        cfg.clone(),
+        graph,
+        precision,
+        seed,
+        serve_cfg,
+        cache,
+    )
+    .map_err(|e| e.to_string())?;
+    println!(
+        "serving SparqCNN at {} through the batch-{} arena ({} shard worker(s), window {} us), {n} requests...",
+        if prec_arg == "mixed" { "mixed W4A4-stem/W2A2".to_string() } else { precision.label() },
+        server.batch(),
+        serve_cfg.workers.max(1),
+        serve_cfg.batch_window_us,
+    );
+    let image_len = server.image_len();
+    let mut pending = Vec::new();
+    let mut served = 0usize;
+    let mut rejected = 0usize;
+    for i in 0..n {
+        let image: Vec<f32> =
+            (0..image_len).map(|k| ((k as u64 * 31 + i as u64) % 4) as f32).collect();
+        match server.submit(image) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => {
+                rejected += 1;
+                println!("request {i}: {e}");
+            }
+        }
+        if pending.len() >= 32 {
+            for rx in pending.drain(..) {
+                served += matches!(rx.recv(), Ok(Ok(_))) as usize;
+            }
+        }
+    }
+    for rx in pending.drain(..) {
+        served += matches!(rx.recv(), Ok(Ok(_))) as usize;
+    }
+    let snap = server.shutdown();
+    let cs = cache.stats();
+    let fills: Vec<String> =
+        snap.batch_fill.iter().map(|&(k, c)| format!("{k}x{c}")).collect();
+    println!(
+        "done: {served}/{n} served, {rejected} rejected (typed backpressure)\n  \
+         latency p50/p95/p99: {}/{}/{} us | p50/p99 sim cycles: {}/{}\n  \
+         {} batches (fill histogram: {}), queue depth max {}\n  \
+         program cache: {} compile(s), {} hits for {served} batched inferences",
+        snap.p50_us,
+        snap.p95_us,
+        snap.p99_us,
+        snap.p50_cycles,
+        snap.p99_cycles,
+        snap.batches,
+        if fills.is_empty() { "-".to_string() } else { fills.join(" ") },
+        snap.queue_depth_max,
+        cs.misses,
+        cs.hits,
+    );
+    Ok(())
+}
+
 fn cmd_serve(rest: &[String]) -> Result<(), String> {
     let dir = opt(rest, "--artifacts")
         .map(std::path::PathBuf::from)
@@ -315,6 +410,15 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
             dir.display()
         );
         return cmd_serve_sim(rest);
+    }
+    if flag(rest, "--batch") {
+        // the batch-B arena is a simulator-backend feature; the PJRT
+        // path batches at the artifact's static batch size — say so
+        // instead of silently ignoring the flag
+        println!(
+            "note: --batch applies to the simulator serving backend only; \
+             the PJRT path batches at the artifact's static batch dimension"
+        );
     }
     let model = opt(rest, "--model").unwrap_or("qnn_w4a4").to_string();
     let n: usize = opt(rest, "--requests").and_then(|s| s.parse().ok()).unwrap_or(256);
@@ -385,6 +489,84 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         snap.total_sim_cycles,
         cyc
     );
+    Ok(())
+}
+
+/// The CI perf-regression gate: compare the cycle fields of freshly
+/// generated `BENCH_*.json` files (CWD) against the committed
+/// baselines (tolerance 0 — simulated cycles are deterministic).
+/// `--bless` copies the current files over the baselines instead
+/// (step 2 of the bless protocol in `benchcheck`'s module docs).
+fn cmd_bench_check(rest: &[String]) -> Result<(), String> {
+    use sparq::benchcheck::{self, CheckOutcome};
+    let dir = std::path::PathBuf::from(opt(rest, "--baselines").unwrap_or("ci/bench_baselines"));
+    if flag(rest, "--bless") {
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        for name in benchcheck::BENCH_FILES {
+            if std::path::Path::new(name).exists() {
+                std::fs::copy(name, dir.join(name)).map_err(|e| format!("blessing {name}: {e}"))?;
+                println!("blessed {name} -> {}", dir.join(name).display());
+            } else {
+                println!("skip {name}: not generated (run its bench with -- --json first)");
+            }
+        }
+        return Ok(());
+    }
+    let mut drifted = false;
+    let mut checked = 0usize;
+    for name in benchcheck::BENCH_FILES {
+        let base_path = dir.join(name);
+        let Ok(base) = std::fs::read_to_string(&base_path) else {
+            println!("skip {name}: no committed baseline at {}", base_path.display());
+            continue;
+        };
+        let Ok(cur) = std::fs::read_to_string(name) else {
+            // a BLESSED baseline with no fresh bench output means the
+            // gate would silently stop gating — that is a failure, not
+            // a skip (only un-blessed bootstrap placeholders pass)
+            let doc = benchcheck::parse(&base).map_err(|e| format!("{name}: {e}"))?;
+            if benchcheck::is_unblessed(&doc) {
+                println!("skip {name}: baseline is UNBLESSED and no bench output in CWD");
+            } else {
+                drifted = true;
+                println!(
+                    "{name}: MISSING bench output in CWD but {} is a blessed baseline — \
+                     run the bench with -- --json before bench-check",
+                    base_path.display()
+                );
+            }
+            continue;
+        };
+        checked += 1;
+        match benchcheck::compare_texts(&base, &cur).map_err(|e| format!("{name}: {e}"))? {
+            CheckOutcome::Unblessed => {
+                println!(
+                    "{name}: baseline is UNBLESSED — bootstrap pass; bless it with \
+                     `sparq bench-check --bless` + commit (protocol in ROADMAP.md)"
+                );
+            }
+            CheckOutcome::Match { fields } => {
+                println!("{name}: OK ({fields} cycle fields match the baseline exactly)");
+            }
+            CheckOutcome::Drift(diffs) => {
+                drifted = true;
+                println!("{name}: CYCLE DRIFT against {}:", base_path.display());
+                for d in &diffs {
+                    println!("  {d}");
+                }
+            }
+        }
+    }
+    if drifted {
+        return Err(
+            "cycle counts drifted from the committed baselines — either fix the \
+             regression or bless the new numbers (`sparq bench-check --bless` + commit)"
+                .into(),
+        );
+    }
+    if checked == 0 {
+        println!("bench-check: nothing to compare (no BENCH_*.json in CWD)");
+    }
     Ok(())
 }
 

@@ -402,9 +402,15 @@ impl QnnStage {
     }
 
     fn run(&self, m: &mut Machine) -> Result<RunReport, SimError> {
+        self.run_rebased(m, 0)
+    }
+
+    /// Run the stage against the activation slot at arena offset
+    /// `base` (the batched-execution rebind; 0 = the canonical slot).
+    fn run_rebased(&self, m: &mut Machine, base: u64) -> Result<RunReport, SimError> {
         match self.parts() {
-            (_, Some(cp)) => m.run_compiled(cp),
-            (prog, None) => m.run(prog),
+            (_, Some(cp)) => m.run_compiled_rebased(cp, base),
+            (prog, None) => m.run_rebased(prog, base),
         }
     }
 
@@ -449,6 +455,19 @@ pub enum VariantPolicy {
 /// The whole QNN compiled once: chained per-layer programs over one
 /// planned activation arena.  Execute any number of times on pooled
 /// machines; outputs and cycle counts are bit-identical per execution.
+///
+/// ## Batched layout (DESIGN.md §Serving)
+///
+/// [`Self::compile_batched`] plans the same arena but sizes the
+/// machine for `batch` disjoint per-image activation *slots*: slot 0
+/// is the canonical layout the streams were compiled against, slots
+/// 1..B are rebased copies at multiples of [`Self::slot_stride`].  One
+/// program serves all slots — [`Self::execute_batch`] stages up to B
+/// images and replays every stage per slot with the addresses rebased
+/// (`Machine::run_compiled_rebased`), so per-image outputs and cycles
+/// are bit-identical to a one-image execution.  The per-model runtime
+/// *weight*-packing scalar pass is hoisted into `preamble`, executed
+/// once per batch — the amortization that makes img/s grow with B.
 #[derive(Debug)]
 pub struct CompiledQnn {
     pub net: QnnNet,
@@ -457,7 +476,8 @@ pub struct CompiledQnn {
     /// One tap per graph layer (the executed layer boundaries).
     pub taps: Vec<LayerTap>,
     pub logits: OutputRef,
-    /// Simulated-DRAM bytes a machine needs for the arena.
+    /// Simulated-DRAM bytes a machine needs for the arena (covers all
+    /// `batch` slots).
     pub mem_bytes: usize,
     /// The chosen kernel variant per conv layer (graph order) — what
     /// [`Self::golden`] pins the execution against.
@@ -465,6 +485,15 @@ pub struct CompiledQnn {
     /// The autotune ranking each conv choice came from (`None` under
     /// a fixed [`VariantPolicy`]), for reports and bench JSON.
     pub tuned: Vec<Option<Arc<TuneOutcome>>>,
+    /// Activation slots this compilation's machine holds (1 for the
+    /// unbatched layout).
+    pub batch: u32,
+    /// Byte stride between consecutive activation slots (the aligned
+    /// single-image arena footprint).
+    pub slot_stride: u64,
+    /// Per-batch preamble (the hoisted weight-packing scalar pass) —
+    /// present only on batched compilations of packed networks.
+    pub preamble: Option<StageProg>,
     input: InputDesc,
 }
 
@@ -481,6 +510,43 @@ impl QnnRun {
         self.stage_reports.iter().map(|r| r.stats.cycles).sum()
     }
 }
+
+/// One batched execution: up to `batch` images through one program on
+/// one machine.  `runs[i]` is image `i`'s per-slot result, bit-identical
+/// (logits *and* cycles) to a one-image execution of the same program;
+/// the preamble is the per-batch weight-pack overhead shared by all of
+/// them.
+pub struct QnnBatchRun {
+    /// The per-batch preamble report (`None` when the compilation has
+    /// no hoisted pass — e.g. an all-int16 network).
+    pub preamble: Option<RunReport>,
+    /// One per staged image, submission order.
+    pub runs: Vec<QnnRun>,
+}
+
+impl QnnBatchRun {
+    /// Cycles of the shared per-batch preamble (0 when absent).
+    pub fn preamble_cycles(&self) -> u64 {
+        self.preamble.as_ref().map(|r| r.stats.cycles).unwrap_or(0)
+    }
+
+    /// Total simulated cycles of the whole batch: preamble + every
+    /// slot's chained stages.
+    pub fn total_cycles(&self) -> u64 {
+        self.preamble_cycles() + self.runs.iter().map(|r| r.total_cycles()).sum::<u64>()
+    }
+
+    /// Amortized cycles per image — strictly decreasing in the batch
+    /// fill whenever a preamble exists, since per-slot cycles are
+    /// batch-invariant.
+    pub fn cycles_per_image(&self) -> f64 {
+        self.total_cycles() as f64 / self.runs.len().max(1) as f64
+    }
+}
+
+/// Largest batch the batched arena layout will plan (bounds machine
+/// memory growth; serving configs validate against it).
+pub const MAX_BATCH: u32 = 64;
 
 /// The flowing inter-layer value during compilation: dense wide sums.
 #[derive(Clone, Copy)]
@@ -514,14 +580,46 @@ impl CompiledQnn {
         Self::compile_policy(cfg, net, cache, VariantPolicy::Autotuned)
     }
 
-    /// The full form: compile under an explicit [`VariantPolicy`].
+    /// The full form: compile under an explicit [`VariantPolicy`]
+    /// (unbatched layout).
     pub fn compile_policy(
         cfg: &ProcessorConfig,
         net: QnnNet,
         cache: &ProgramCache,
         policy: VariantPolicy,
     ) -> Result<CompiledQnn, SimError> {
+        Self::compile_full(cfg, net, cache, policy, None)
+    }
+
+    /// Compile the network with a batch-`batch` arena: one shared
+    /// program (weights baked into the streams, the weight-pack scalar
+    /// pass hoisted into a per-batch preamble) over `batch` per-image
+    /// activation slots.  Drive it with [`Self::execute_batch`].
+    /// `batch` must be in `1..=`[`MAX_BATCH`].
+    pub fn compile_batched(
+        cfg: &ProcessorConfig,
+        net: QnnNet,
+        cache: &ProgramCache,
+        batch: u32,
+    ) -> Result<CompiledQnn, SimError> {
+        Self::compile_full(cfg, net, cache, VariantPolicy::Autotuned, Some(batch))
+    }
+
+    fn compile_full(
+        cfg: &ProcessorConfig,
+        net: QnnNet,
+        cache: &ProgramCache,
+        policy: VariantPolicy,
+        batch: Option<u32>,
+    ) -> Result<CompiledQnn, SimError> {
         use crate::isa::Sew;
+        if let Some(b) = batch {
+            if b == 0 || b > MAX_BATCH {
+                return Err(SimError::Unsupported(
+                    "batch size must be between 1 and MAX_BATCH (64)",
+                ));
+            }
+        }
         net.graph
             .validate_for(cfg, net.precision)
             .map_err(|e| SimError::Graph(e.to_string()))?;
@@ -532,6 +630,17 @@ impl CompiledQnn {
         // the head's level domain (boundaries use per-layer widths)
         let amax = act_level_max(a_bits);
         let opts = EngineOpts::default();
+        // Batched layouts hoist the runtime weight-pack pass out of the
+        // per-slot streams, so candidates must be RANKED on slot-only
+        // cycles: probing with the pack disabled measures exactly the
+        // hoisted stream (the emitted instructions are identical), and
+        // the distinct EngineOpts keys the memo apart from unbatched
+        // rankings.  Unbatched compiles keep ranking with the pack
+        // in-stream, which is what they execute.
+        let tune_opts = match batch {
+            Some(_) => EngineOpts { runtime_weight_pack: false, ..opts },
+            None => opts,
+        };
         let mut la = LayoutAlloc::new();
         let mut stages: Vec<QnnStage> = Vec::new();
         let mut taps: Vec<LayerTap> = Vec::new();
@@ -541,6 +650,9 @@ impl CompiledQnn {
         let mut input: Option<InputDesc> = None;
         let mut logits: Option<OutputRef> = None;
         let mut conv_ix = 0usize;
+        // batched layout: weight-pack scalar slots hoisted out of the
+        // conv streams into one per-batch preamble
+        let mut hoisted = 0u64;
 
         for (li, layer) in net.graph.layers.iter().enumerate() {
             match *layer {
@@ -562,7 +674,7 @@ impl CompiledQnn {
                         VariantPolicy::AllInt16 => (ConvVariant::Int16, None),
                         VariantPolicy::Autotuned => {
                             let outcome = autotune::autotune_conv(
-                                cache, cfg, d, p.w_bits, p.a_bits, p.quantized, opts,
+                                cache, cfg, d, p.w_bits, p.a_bits, p.quantized, tune_opts,
                             )?;
                             let canon_out = if p.quantized {
                                 crate::qnn::graph::canonical_widths(
@@ -582,10 +694,17 @@ impl CompiledQnn {
                                 .iter()
                                 .find(|c| match autotune::variant_io(c.variant, d) {
                                     Some((in_sew, out_el)) => {
+                                        // (plain match, not Option::is_none_or:
+                                        // that API needs Rust 1.82 and the MSRV
+                                        // gate builds at 1.75)
                                         out_bits(out_el) == canon_out
-                                            && prev.is_none_or(|pv| {
-                                                in_sew == pv || in_sew.widened() == Some(pv)
-                                            })
+                                            && match prev {
+                                                None => true,
+                                                Some(pv) => {
+                                                    in_sew == pv
+                                                        || in_sew.widened() == Some(pv)
+                                                }
+                                            }
                                     }
                                     None => false,
                                 })
@@ -606,7 +725,14 @@ impl CompiledQnn {
                         wgt_f32: vec![],
                     };
                     let (inner, label) = variant.planned_inner(&wl)?;
-                    let cc = conv_engine::compile_in_arena(cfg, &wl, inner, opts, label, &mut la)?;
+                    let cc = match batch {
+                        Some(_) => conv_engine::compile_in_arena_hoisted(
+                            cfg, &wl, inner, opts, label, &mut la, &mut hoisted,
+                        )?,
+                        None => {
+                            conv_engine::compile_in_arena(cfg, &wl, inner, opts, label, &mut la)?
+                        }
+                    };
                     let (x_addr, _) = cc.input_region();
                     let ew = cc.input_elem_bytes();
                     let in_sew = match ew {
@@ -771,7 +897,22 @@ impl CompiledQnn {
         let logits = logits.ok_or(SimError::Unsupported(
             "the dataflow executor needs a gap+fc head as the last layer",
         ))?;
-        let mem_bytes = (la.brk() as usize).next_power_of_two().max(1 << 16);
+        // slot stride at the arena's strongest alignment (64), so every
+        // rebased access keeps the alignment the streams were checked at
+        let slot_stride = (la.brk() + 63) & !63;
+        let b = batch.unwrap_or(1);
+        let mem_bytes = ((la.brk() + (b as u64 - 1) * slot_stride) as usize)
+            .next_power_of_two()
+            .max(1 << 16);
+        let preamble = match batch {
+            Some(_) if hoisted > 0 => {
+                debug_assert!(hoisted <= u32::MAX as u64, "weight-pack slot count overflow");
+                let mut a = Asm::new("batch-preamble(weight-pack)", cfg.vlen_bits);
+                a.scalar(crate::isa::ScalarKind::AddrCalc, hoisted as u32);
+                Some(stage_prog(a.finish(0), cfg))
+            }
+            _ => None,
+        };
         Ok(CompiledQnn {
             net,
             cfg: cfg.clone(),
@@ -781,6 +922,9 @@ impl CompiledQnn {
             mem_bytes,
             variants,
             tuned,
+            batch: b,
+            slot_stride,
+            preamble,
             input,
         })
     }
@@ -801,29 +945,17 @@ impl CompiledQnn {
 
     /// [`Self::execute`] for a machine known to be freshly reset (the
     /// pooled-serving path: `MachinePool::acquire` already reset it).
+    ///
+    /// Runs the canonical slot only (no batch preamble); batched
+    /// compilations are driven through [`Self::execute_batch`], which
+    /// also accounts the shared per-batch weight-pack pass.
     pub fn execute_fresh(&self, m: &mut Machine, image: &[u64]) -> Result<QnnRun, SimError> {
         if m.cfg != self.cfg {
             return Err(SimError::Unsupported(
                 "machine configuration differs from the compiled network's",
             ));
         }
-        if image.len() != self.net.input_len() {
-            return Err(SimError::Unsupported("image length != c*h*w"));
-        }
-        let d = &self.input;
-        let amax = act_level_max(self.net.a_bits());
-        for ch in 0..d.c_real {
-            for r in 0..d.h {
-                for q in 0..d.w {
-                    let lv = image[((ch * d.h + r) * d.w + q) as usize].min(amax);
-                    let at = d.x_addr
-                        + ((ch as u64 * d.hp as u64 + (r + d.pad) as u64) * d.wp as u64
-                            + (q + d.pad) as u64)
-                            * d.ew;
-                    m.mem.store_uint(at, d.ew as u32, lv)?;
-                }
-            }
-        }
+        self.stage_image(m, image, 0)?;
         let mut stage_reports = Vec::with_capacity(self.stages.len());
         for st in &self.stages {
             stage_reports.push(st.run(m)?);
@@ -833,11 +965,109 @@ impl CompiledQnn {
         Ok(QnnRun { logits, argmax, stage_reports })
     }
 
+    /// Stage one image into the padded layer-0 input region of the
+    /// activation slot at arena offset `base`.
+    fn stage_image(&self, m: &mut Machine, image: &[u64], base: u64) -> Result<(), SimError> {
+        if image.len() != self.net.input_len() {
+            return Err(SimError::Unsupported("image length != c*h*w"));
+        }
+        let d = &self.input;
+        let amax = act_level_max(self.net.a_bits());
+        for ch in 0..d.c_real {
+            for r in 0..d.h {
+                for q in 0..d.w {
+                    let lv = image[((ch * d.h + r) * d.w + q) as usize].min(amax);
+                    let at = base
+                        + d.x_addr
+                        + ((ch as u64 * d.hp as u64 + (r + d.pad) as u64) * d.wp as u64
+                            + (q + d.pad) as u64)
+                            * d.ew;
+                    m.mem.store_uint(at, d.ew as u32, lv)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one *batch*: reset the machine, stage up to
+    /// [`Self::batch`] images into their activation slots, run the
+    /// per-batch preamble once, then replay every chained stage per
+    /// slot with rebased addresses (stage-major order, so each stage's
+    /// micro-op stream stays hot across the whole batch).  Per-image
+    /// logits and per-slot cycles are bit-identical to a one-image
+    /// execution of the same program; the preamble cycles are paid once
+    /// however full the batch is — that amortization is the batched
+    /// serving throughput gain (DESIGN.md §Serving).
+    pub fn execute_batch(
+        &self,
+        m: &mut Machine,
+        images: &[Vec<u64>],
+    ) -> Result<QnnBatchRun, SimError> {
+        m.reset_for(self.mem_bytes);
+        self.execute_batch_fresh(m, images)
+    }
+
+    /// [`Self::execute_batch`] for a machine known to be freshly reset
+    /// (the pooled-serving path: `MachinePool::acquire` already reset
+    /// it).
+    pub fn execute_batch_fresh(
+        &self,
+        m: &mut Machine,
+        images: &[Vec<u64>],
+    ) -> Result<QnnBatchRun, SimError> {
+        if m.cfg != self.cfg {
+            return Err(SimError::Unsupported(
+                "machine configuration differs from the compiled network's",
+            ));
+        }
+        if images.is_empty() || images.len() > self.batch as usize {
+            return Err(SimError::Unsupported(
+                "batch must stage between 1 and the compiled batch size images",
+            ));
+        }
+        for (slot, image) in images.iter().enumerate() {
+            self.stage_image(m, image, slot as u64 * self.slot_stride)?;
+        }
+        let preamble = match &self.preamble {
+            Some(p) => Some(match &p.compiled {
+                Some(cp) => m.run_compiled(cp)?,
+                None => m.run(&p.prog)?,
+            }),
+            None => None,
+        };
+        let mut reports: Vec<Vec<RunReport>> =
+            images.iter().map(|_| Vec::with_capacity(self.stages.len())).collect();
+        for st in &self.stages {
+            for (slot, per_slot) in reports.iter_mut().enumerate() {
+                per_slot.push(st.run_rebased(m, slot as u64 * self.slot_stride)?);
+            }
+        }
+        let mut runs = Vec::with_capacity(images.len());
+        for (slot, stage_reports) in reports.into_iter().enumerate() {
+            let out = OutputRef {
+                addr: self.logits.addr + slot as u64 * self.slot_stride,
+                ..self.logits
+            };
+            let logits = out.read_ints(&m.mem)?;
+            let argmax = argmax_i64(&logits);
+            runs.push(QnnRun { logits, argmax, stage_reports });
+        }
+        Ok(QnnBatchRun { preamble, runs })
+    }
+
     /// Read graph layer `li`'s executed output back from the arena
     /// (after an `execute` on `m`) — the boundary the golden network
     /// pins bit-for-bit.
     pub fn read_tap(&self, m: &Machine, li: usize) -> Result<Vec<i64>, SimError> {
-        self.taps[li].out.read_ints(&m.mem)
+        self.read_tap_slot(m, li, 0)
+    }
+
+    /// [`Self::read_tap`] against activation slot `slot` of a batched
+    /// execution.
+    pub fn read_tap_slot(&self, m: &Machine, li: usize, slot: u32) -> Result<Vec<i64>, SimError> {
+        let t = self.taps[li].out;
+        let out = OutputRef { addr: t.addr + slot as u64 * self.slot_stride, ..t };
+        out.read_ints(&m.mem)
     }
 
     /// Aggregate a run's stage reports into per-graph-layer cycles
@@ -1049,6 +1279,81 @@ mod tests {
             assert_eq!(cq.read_tap(&m, li).unwrap(), golden.layer_outs[li], "layer {li}");
         }
         assert_eq!(run.logits, golden.logits);
+    }
+
+    #[test]
+    fn batched_compile_lays_out_aligned_slots_and_hoists_weight_packing() {
+        let cache = ProgramCache::new();
+        let net = QnnNet::from_seed(&QnnGraph::sparq_cnn(), w2a2(), 2).unwrap();
+        let cq = CompiledQnn::compile_batched(&ProcessorConfig::sparq(), net, &cache, 4).unwrap();
+        assert_eq!(cq.batch, 4);
+        assert_eq!(cq.slot_stride % 64, 0, "slots must keep the arena alignment");
+        assert!(cq.mem_bytes as u64 >= 3 * cq.slot_stride, "memory must cover every slot");
+        // the quantized convs carry runtime weight packing, so the
+        // batched layout must have hoisted it into a preamble
+        let p = cq.preamble.as_ref().expect("packed network must hoist a preamble");
+        assert!(p.compiled.is_some());
+        // per-slot conv streams no longer bill the pack pass, the
+        // preamble does: a batch of 4 pays it once
+        let images: Vec<Vec<u64>> = (0..4).map(|i| cq.net.test_image(i)).collect();
+        let mut m = Machine::new(cq.cfg.clone(), cq.mem_bytes);
+        let run = cq.execute_batch(&mut m, &images).unwrap();
+        assert!(run.preamble_cycles() > 0);
+        assert_eq!(run.runs.len(), 4);
+        // batch-size bounds are typed errors
+        assert!(cq.execute_batch(&mut m, &[]).is_err());
+        let five: Vec<Vec<u64>> = (0..5).map(|i| cq.net.test_image(i)).collect();
+        assert!(cq.execute_batch(&mut m, &five).is_err());
+        assert!(matches!(
+            CompiledQnn::compile_batched(
+                &ProcessorConfig::sparq(),
+                QnnNet::from_seed(&QnnGraph::sparq_cnn(), w2a2(), 2).unwrap(),
+                &cache,
+                0,
+            ),
+            Err(SimError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn batched_slots_match_the_golden_network_and_one_image_runs() {
+        // every slot of a full batch pins bit-for-bit against the
+        // golden network AND against a singleton batch of the same
+        // image — outputs and per-slot cycles
+        let cache = ProgramCache::new();
+        let net = QnnNet::from_seed(&QnnGraph::sparq_cnn(), w2a2(), 0xBA7C).unwrap();
+        let cq = CompiledQnn::compile_batched(&ProcessorConfig::sparq(), net, &cache, 4).unwrap();
+        let images: Vec<Vec<u64>> = (0..4).map(|i| cq.net.test_image(100 + i)).collect();
+        let mut m = Machine::new(cq.cfg.clone(), cq.mem_bytes);
+        let batch = cq.execute_batch(&mut m, &images).unwrap();
+        for (slot, img) in images.iter().enumerate() {
+            let golden = cq.golden(img).unwrap();
+            assert_eq!(batch.runs[slot].logits, golden.logits, "slot {slot} logits");
+            // slots are disjoint arena regions, so every slot's layer
+            // taps coexist after the batch run
+            for li in 0..cq.net.graph.layers.len() {
+                assert_eq!(
+                    cq.read_tap_slot(&m, li, slot as u32).unwrap(),
+                    golden.layer_outs[li],
+                    "slot {slot} layer {li}"
+                );
+            }
+        }
+        // singleton batches: identical per-slot cycles and logits
+        let mut total_single = 0u64;
+        for (slot, img) in images.iter().enumerate() {
+            let mut m1 = Machine::new(cq.cfg.clone(), cq.mem_bytes);
+            let one = cq.execute_batch(&mut m1, std::slice::from_ref(img)).unwrap();
+            assert_eq!(one.runs[0].logits, batch.runs[slot].logits);
+            assert_eq!(
+                one.runs[0].total_cycles(),
+                batch.runs[slot].total_cycles(),
+                "slot {slot} cycles diverged from the singleton run"
+            );
+            total_single += one.total_cycles();
+        }
+        // exact amortization: the batch saves (B-1) preambles
+        assert_eq!(batch.total_cycles() + 3 * batch.preamble_cycles(), total_single);
     }
 
     #[test]

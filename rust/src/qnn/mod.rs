@@ -19,11 +19,19 @@
 //! errors ([`graph::QnnGraph::validate_for`]), and the compiler picks
 //! each layer's kernel from the cached autotune ranking
 //! ([`crate::kernels::autotune`]).
+//!
+//! Batched serving compiles the same graph under a batch-B arena
+//! ([`compiled::CompiledQnn::compile_batched`], DESIGN.md §Serving):
+//! one program, B per-image activation slots, per-slot execution via
+//! address rebasing, and the runtime weight-pack pass hoisted into a
+//! per-batch preamble.
 
 pub mod compiled;
 pub mod graph;
 pub mod schedule;
 
-pub use compiled::{CompiledQnn, GoldenTrace, QnnNet, QnnRun, VariantPolicy};
+pub use compiled::{
+    CompiledQnn, GoldenTrace, QnnBatchRun, QnnNet, QnnRun, VariantPolicy, MAX_BATCH,
+};
 pub use graph::{ConvPrec, GraphError, LayerDesc, QnnGraph};
 pub use schedule::{schedule, LayerCycles, QnnSchedule};

@@ -22,7 +22,10 @@
 //!   cache and serves repeated inferences on pooled machines — the
 //!   compile-once/execute-many runtime the coordinator's executors and
 //!   the `sparq serve` fallback use.  No artifacts, no python,
-//!   bit-exact against the golden models.
+//!   bit-exact against the golden models.  For batched serving,
+//!   [`SimQnnModel::compile_batched`] compiles the batch-B arena
+//!   layout and [`SimQnnModel::infer_batch`] stages up to B images
+//!   into one machine per execution (DESIGN.md §Serving).
 
 // The feature exists as the designated slot for the PJRT backend, but
 // the backend itself is not in-tree (it needs the non-vendored `xla`

@@ -149,6 +149,29 @@ impl SimQnnModel {
         Ok(SimQnnModel { cq, cfg: cfg.clone(), amax })
     }
 
+    /// [`Self::compile`] against the batch-`batch` arena layout
+    /// ([`crate::qnn::compiled::CompiledQnn::compile_batched`]): one
+    /// cached program whose machine holds `batch` per-image activation
+    /// slots, served through [`Self::infer_batch`].
+    pub fn compile_batched(
+        cfg: &ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+        cache: &ProgramCache,
+        batch: u32,
+    ) -> Result<SimQnnModel, SimError> {
+        let cq = cache.get_or_compile_qnn_batched(cfg, graph, precision, seed, batch)?;
+        let amax = act_level_max(cq.net.a_bits());
+        Ok(SimQnnModel { cq, cfg: cfg.clone(), amax })
+    }
+
+    /// Activation slots of the compiled arena (1 unless the model was
+    /// compiled with [`Self::compile_batched`]).
+    pub fn batch(&self) -> usize {
+        self.cq.batch as usize
+    }
+
     /// Input image length (c * h * w levels, channel-first).
     pub fn input_len(&self) -> usize {
         self.cq.net.input_len()
@@ -167,7 +190,17 @@ impl SimQnnModel {
     /// stage it into a pooled machine's arena, run every chained layer
     /// stream, and read the logits back.  Returns (logits, total
     /// simulated cycles of this inference).
+    ///
+    /// On a batch-compiled model this is a singleton batch through
+    /// [`Self::infer_batch`] — the weight-pack pass lives in the
+    /// per-batch preamble there, so routing through the slot-only
+    /// `execute_fresh` would under-report the single-image cost.
     pub fn infer(&self, pool: &MachinePool, input: &[f32]) -> Result<(Vec<i64>, u64), SimError> {
+        if self.cq.batch > 1 || self.cq.preamble.is_some() {
+            let (mut per_image, total) = self.infer_batch(pool, &[input.to_vec()])?;
+            let (logits, _slot_cycles) = per_image.pop().expect("singleton batch");
+            return Ok((logits, total));
+        }
         if input.len() != self.input_len() {
             return Err(SimError::Unsupported("input length != c*h*w"));
         }
@@ -178,6 +211,51 @@ impl SimQnnModel {
         pool.release(m);
         let run = result?;
         Ok((run.logits, run.total_cycles()))
+    }
+
+    /// Run one *batched* execution: quantize up to [`Self::batch`]
+    /// images, stage each into its own activation slot of one pooled
+    /// machine, and run the whole batch through the shared program
+    /// (per-batch weight-pack preamble paid once).  Returns one
+    /// `(logits, slot_cycles)` pair per image — slot cycles are
+    /// bit-identical to a one-image execution — plus the batch's total
+    /// simulated cycles (preamble included), which is what throughput
+    /// accounting divides by the fill.
+    #[allow(clippy::type_complexity)]
+    pub fn infer_batch(
+        &self,
+        pool: &MachinePool,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<(Vec<i64>, u64)>, u64), SimError> {
+        if inputs.is_empty() || inputs.len() > self.batch() {
+            return Err(SimError::Unsupported(
+                "batch must stage between 1 and the compiled batch size images",
+            ));
+        }
+        for input in inputs {
+            if input.len() != self.input_len() {
+                return Err(SimError::Unsupported("input length != c*h*w"));
+            }
+        }
+        let levels: Vec<Vec<u64>> = inputs
+            .iter()
+            .map(|input| input.iter().map(|&v| quantize(v, self.amax)).collect())
+            .collect();
+        let mut m = pool.acquire(&self.cfg, self.cq.mem_bytes);
+        // acquire() already reset the machine
+        let result = self.cq.execute_batch_fresh(&mut m, &levels);
+        pool.release(m);
+        let batch = result?;
+        let total = batch.total_cycles();
+        let per_image = batch
+            .runs
+            .into_iter()
+            .map(|run| {
+                let cycles = run.total_cycles();
+                (run.logits, cycles)
+            })
+            .collect();
+        Ok((per_image, total))
     }
 }
 
@@ -295,6 +373,69 @@ mod tests {
         assert_eq!(l2, logits);
         assert_eq!(c2, cycles);
         assert_eq!(pool.stats().reused, 1);
+    }
+
+    #[test]
+    fn batched_qnn_model_amortizes_the_preamble_and_matches_singles() {
+        use crate::qnn::schedule::QnnPrecision;
+        use crate::qnn::QnnGraph;
+        let cache = ProgramCache::new();
+        let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let model = SimQnnModel::compile_batched(
+            &ProcessorConfig::sparq(),
+            &QnnGraph::sparq_cnn(),
+            prec,
+            0xFEED,
+            &cache,
+            4,
+        )
+        .unwrap();
+        assert_eq!(model.batch(), 4);
+        let pool = MachinePool::new();
+        let inputs: Vec<Vec<f32>> = (0..4)
+            .map(|k| (0..model.input_len()).map(|i| ((i + k * 3) % 4) as f32).collect())
+            .collect();
+        let (per_image, total) = model.infer_batch(&pool, &inputs).unwrap();
+        assert_eq!(per_image.len(), 4);
+        // each slot matches the singleton batch of the same image,
+        // logits and cycles
+        let mut singles_total = 0u64;
+        for (k, input) in inputs.iter().enumerate() {
+            let (one, one_total) =
+                model.infer_batch(&pool, std::slice::from_ref(input)).unwrap();
+            assert_eq!(one[0].0, per_image[k].0, "image {k} logits diverged");
+            assert_eq!(one[0].1, per_image[k].1, "image {k} slot cycles diverged");
+            singles_total += one_total;
+        }
+        // the batch pays the weight-pack preamble once instead of 4x
+        assert!(total < singles_total, "batching must amortize the preamble");
+        // single-image infer() on a batched model routes through the
+        // singleton batch, so it reports the TRUE per-image cost
+        // (preamble included) — not the slot-only cycles
+        let (l0, c0) = model.infer(&pool, &inputs[0]).unwrap();
+        assert_eq!(l0, per_image[0].0);
+        assert!(c0 > per_image[0].1, "infer must include the preamble cycles");
+        // oversized and empty batches are typed errors
+        assert!(model.infer_batch(&pool, &[]).is_err());
+        let five = vec![inputs[0].clone(); 5];
+        assert!(model.infer_batch(&pool, &five).is_err());
+        // warm repeat: no recompilation at any batch size already seen
+        let before = cache.stats();
+        let again = SimQnnModel::compile_batched(
+            &ProcessorConfig::sparq(),
+            &QnnGraph::sparq_cnn(),
+            prec,
+            0xFEED,
+            &cache,
+            4,
+        )
+        .unwrap();
+        assert_eq!(cache.stats().misses, before.misses, "warm batched compile re-missed");
+        let (p2, t2) = again.infer_batch(&pool, &inputs).unwrap();
+        assert_eq!(t2, total);
+        for (a, b) in p2.iter().zip(&per_image) {
+            assert_eq!(a, b);
+        }
     }
 
     #[test]

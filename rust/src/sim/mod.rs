@@ -190,7 +190,19 @@ impl Machine {
     /// [`Machine::run_compiled`] instead — same results, far less host
     /// work per execution.
     pub fn run(&mut self, prog: &Program) -> Result<RunReport, SimError> {
-        self.run_interp(prog, true)
+        self.run_interp(prog, true, 0)
+    }
+
+    /// [`Machine::run`] with every memory address offset by `base` —
+    /// the interpreter-side dual of
+    /// [`uop::CompiledProgram`]-based rebasing
+    /// (`Machine::run_compiled_rebased`), used by the batched QNN
+    /// executor when a stage stream has no micro-op form.  `base` must
+    /// be a multiple of the arena allocation alignment (64); the
+    /// timing model never reads addresses, so the report is
+    /// bit-identical to the `base = 0` run.
+    pub fn run_rebased(&mut self, prog: &Program, base: u64) -> Result<RunReport, SimError> {
+        self.run_interp(prog, true, base)
     }
 
     /// [`Machine::run`] with every fast path disabled: the retained
@@ -198,14 +210,25 @@ impl Machine {
     /// pins both `run` and `run_compiled` to this oracle bit-for-bit
     /// (VRF, memory, and cycle counts).
     pub fn run_reference(&mut self, prog: &Program) -> Result<RunReport, SimError> {
-        self.run_interp(prog, false)
+        self.run_interp(prog, false, 0)
     }
 
-    fn run_interp(&mut self, prog: &Program, fast: bool) -> Result<RunReport, SimError> {
+    fn run_interp(&mut self, prog: &Program, fast: bool, base: u64) -> Result<RunReport, SimError> {
         let mut timing = Timing::new(&self.cfg);
         let mut st = Stats::default();
 
         for inst in &prog.insts {
+            // rebase memory operands only (registers and scalar
+            // operands are arena-independent)
+            let inst = &match *inst {
+                VInst::Load { eew, vd, addr } if base != 0 => {
+                    VInst::Load { eew, vd, addr: addr + base }
+                }
+                VInst::Store { eew, vs3, addr } if base != 0 => {
+                    VInst::Store { eew, vs3, addr: addr + base }
+                }
+                other => other,
+            };
             let ops = if fast {
                 exec::execute(inst, &self.cfg, &mut self.state, &mut self.vrf, &mut self.mem)?
             } else {
@@ -397,6 +420,39 @@ mod tests {
         assert!(m.mem.size() >= 1 << 22);
         let r3 = m.run(&p).unwrap();
         assert_eq!(r1.stats.cycles, r3.stats.cycles);
+    }
+
+    #[test]
+    fn rebased_runs_are_bit_identical_at_an_offset() {
+        // same program, interpreter and compiled engine, at base 0 and
+        // at a 64-aligned rebase: identical values land at the shifted
+        // addresses with identical cycle counts
+        let mut p = Program::new("rebase");
+        p.push(VInst::SetVl { avl: 8, sew: Sew::E16, lmul: Lmul::M1 });
+        p.push(VInst::Load { eew: Sew::E16, vd: 1, addr: 0x100 });
+        p.push(VInst::OpVX { op: VOp::Macc, vd: 2, vs2: 1, rs1: 3 });
+        p.push(VInst::Store { eew: Sew::E16, vs3: 2, addr: 0x200 });
+        const BASE: u64 = 0x4_0000; // 64-aligned slot offset
+        let data: Vec<u16> = (0..8).map(|i| i * 11 + 1).collect();
+
+        let mut m0 = machine();
+        m0.mem.write_u16s(0x100, &data).unwrap();
+        let r0 = m0.run(&p).unwrap();
+        let out0 = m0.mem.read_u16s(0x200, 8).unwrap();
+
+        let mut m1 = machine();
+        m1.mem.write_u16s(BASE + 0x100, &data).unwrap();
+        let r1 = m1.run_rebased(&p, BASE).unwrap();
+        assert_eq!(m1.mem.read_u16s(BASE + 0x200, 8).unwrap(), out0);
+        assert_eq!(r0.stats.cycles, r1.stats.cycles);
+
+        let cp = CompiledProgram::compile(&p, &ProcessorConfig::sparq()).unwrap();
+        let mut m2 = machine();
+        m2.mem.write_u16s(BASE + 0x100, &data).unwrap();
+        let r2 = m2.run_compiled_rebased(&cp, BASE).unwrap();
+        assert_eq!(m2.mem.read_u16s(BASE + 0x200, 8).unwrap(), out0);
+        assert_eq!(r0.stats.cycles, r2.stats.cycles);
+        assert_eq!(r0.stats.bytes_loaded, r2.stats.bytes_loaded);
     }
 
     #[test]

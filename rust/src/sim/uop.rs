@@ -265,6 +265,21 @@ impl Machine {
     /// the returned [`RunReport`] are bit-identical to
     /// [`Machine::run`] on the source [`Program`].
     pub fn run_compiled(&mut self, cp: &CompiledProgram) -> Result<RunReport, SimError> {
+        self.run_compiled_rebased(cp, 0)
+    }
+
+    /// [`Machine::run_compiled`] with every memory address offset by
+    /// `base` — the batched-arena rebind (DESIGN.md §Serving): one
+    /// compiled program executes against any of B disjoint per-image
+    /// activation slots.  `base` must be a multiple of the arena
+    /// allocation alignment (64) so every access keeps its alignment;
+    /// timing is byte-count-driven and address-independent, so the
+    /// report is bit-identical to the `base = 0` run.
+    pub fn run_compiled_rebased(
+        &mut self,
+        cp: &CompiledProgram,
+        base: u64,
+    ) -> Result<RunReport, SimError> {
         if self.cfg != cp.cfg {
             return Err(SimError::Unsupported(
                 "machine configuration differs from the compiled program's",
@@ -286,7 +301,7 @@ impl Machine {
         let mut timing = Timing::new(&self.cfg);
         let mut st = Stats::default();
         for u in &cp.uops {
-            exec_uop(&u.exec, &mut self.state, &mut self.vrf, &mut self.mem)?;
+            exec_uop(&u.exec, base, &mut self.state, &mut self.vrf, &mut self.mem)?;
             match u.acct {
                 Acct::Scalar { n } => {
                     timing.scalar(n);
@@ -761,8 +776,15 @@ fn swar_mul_prod(a: u64, x: u64, sh: u32, field: u64, lane_bits: u32) -> u64 {
 }
 
 /// One micro-op, functionally.  The only run-time inputs are the VRF
-/// bytes, the memory, and the vmacsr.cfg CSR.
-fn exec_uop(e: &Exec, st: &mut ExecState, vrf: &mut Vrf, mem: &mut Mem) -> Result<(), SimError> {
+/// bytes, the memory, the vmacsr.cfg CSR, and the caller's arena
+/// rebase offset (`base`, 0 outside batched execution).
+fn exec_uop(
+    e: &Exec,
+    base: u64,
+    st: &mut ExecState,
+    vrf: &mut Vrf,
+    mem: &mut Mem,
+) -> Result<(), SimError> {
     match *e {
         Exec::Nop => {}
         Exec::SetState { vl, vtype } => {
@@ -770,10 +792,10 @@ fn exec_uop(e: &Exec, st: &mut ExecState, vrf: &mut Vrf, mem: &mut Mem) -> Resul
             st.vtype = vtype;
         }
         Exec::Load { dst, addr, len } => {
-            vrf.flat_mut()[dst..dst + len].copy_from_slice(mem.read(addr, len)?);
+            vrf.flat_mut()[dst..dst + len].copy_from_slice(mem.read(addr + base, len)?);
         }
         Exec::Store { src, addr, len } => {
-            mem.write(addr, &vrf.flat()[src..src + len])?;
+            mem.write(addr + base, &vrf.flat()[src..src + len])?;
         }
         Exec::Fill { dst, len, splat } => {
             let le = splat.to_le_bytes();

@@ -62,6 +62,22 @@ impl Gen {
     }
 }
 
+/// Iteration count for the long-running fuzz/property suites
+/// (`rust/tests/exec_diff.rs`, `rust/tests/ulppack_props.rs`):
+/// `SPARQ_FUZZ_ITERS`, when set, replaces the suite's default case
+/// count — PR CI runs the cheap defaults, the nightly scheduled job
+/// sets it high for deep coverage.  Unparsable or zero values fall
+/// back to the default (a typo must not silently skip the suite).
+pub fn fuzz_iters(default: u32) -> u32 {
+    match std::env::var("SPARQ_FUZZ_ITERS") {
+        Ok(v) => match v.trim().parse::<u32>() {
+            Ok(n) if n > 0 => n,
+            _ => default,
+        },
+        Err(_) => default,
+    }
+}
+
 /// Property runner: `Prop::new(seed).runs(200).check(|g| { ... })`.
 pub struct Prop {
     seed: u64,

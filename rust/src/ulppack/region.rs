@@ -154,7 +154,12 @@ pub fn plan_vmacsr(
             spill_every: if needed { spill } else { u64::MAX },
             exact: admits(w_bits, a_bits, c, RegionMode::Strict),
         };
-        if best.as_ref().is_none_or(|(bc, _)| cost < *bc) {
+        // plain match, not Option::is_none_or (a 1.82 API; MSRV 1.75)
+        let better = match &best {
+            None => true,
+            Some((bc, _)) => cost < *bc,
+        };
+        if better {
             best = Some((cost, plan));
         }
     }
@@ -181,7 +186,12 @@ pub fn plan_native(w_bits: u32, a_bits: u32) -> Option<Plan> {
             spill_every: k,
             exact: true,
         };
-        if best.as_ref().is_none_or(|(bc, _)| cost < *bc) {
+        // plain match, not Option::is_none_or (a 1.82 API; MSRV 1.75)
+        let better = match &best {
+            None => true,
+            Some((bc, _)) => cost < *bc,
+        };
+        if better {
             best = Some((cost, plan));
         }
     }

@@ -12,10 +12,14 @@
 //! bytes moved, RAW stalls).  This is the contract that lets the
 //! serving stack run the word-parallel engine (DESIGN.md §Perf).
 
+//! Case count: 150 by default; the nightly CI job scales it up via
+//! `SPARQ_FUZZ_ITERS` (`testutil::fuzz_iters`) so the deep sweep never
+//! taxes PR latency.
+
 use sparq::arch::ProcessorConfig;
 use sparq::isa::{Lmul, ScalarKind, Sew, VInst, VOp};
 use sparq::sim::{CompiledProgram, Machine, Program, RunReport};
-use sparq::testutil::{Gen, Prop};
+use sparq::testutil::{fuzz_iters, Gen, Prop};
 
 const VLEN: u32 = 512; // small VRF: fast cases, frequent group reuse
 const MEM: usize = 1 << 14;
@@ -211,7 +215,7 @@ fn assert_reports_eq(a: &RunReport, b: &RunReport, what: &str) {
 #[test]
 fn compiled_and_fast_engines_match_the_reference_bit_for_bit() {
     let cfg = fuzz_cfg();
-    Prop::new(0xD1FF).runs(150).check(|g| {
+    Prop::new(0xD1FF).runs(fuzz_iters(150)).check(|g| {
         let (p, csr) = gen_program(g);
         let seed_bytes: Vec<u8> = {
             let n = (VLEN / 8 * 32) as usize + 4096;

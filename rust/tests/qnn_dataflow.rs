@@ -73,7 +73,7 @@ fn server_infer_returns_the_golden_argmax_for_a_batch() {
     cache.get_or_compile_qnn(&cfg, &graph, prec, SEED).unwrap();
     let server = Server::start(
         sim_qnn_factory(cfg.clone(), graph.clone(), prec, 4, SEED, Arc::clone(&cache)),
-        ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 64 },
+        ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 64, ..Default::default() },
         1234,
     )
     .unwrap();

@@ -1,0 +1,159 @@
+//! The batched serving layer end-to-end (DESIGN.md §Serving):
+//!
+//! * **Determinism** — a batch of B distinct images produces
+//!   bit-identical logits AND per-image cycles to B sequential
+//!   single-image inferences through the same batched program, and the
+//!   batch's only cycle saving is exactly the (B-1) amortized
+//!   weight-pack preambles.
+//! * **Backpressure** — flooding the sharded submission queues past
+//!   capacity yields typed `ServeError::QueueFull` rejections, counted
+//!   in the metrics, while every accepted request still completes.
+
+use sparq::config::ServeConfig;
+use sparq::coordinator::{QnnBatchServer, ServeError};
+use sparq::kernels::ProgramCache;
+use sparq::qnn::schedule::QnnPrecision;
+use sparq::qnn::{QnnGraph, QnnNet};
+use sparq::runtime::SimQnnModel;
+use sparq::sim::MachinePool;
+use sparq::ProcessorConfig;
+
+const SEED: u64 = 0x0BA7_C41D;
+
+fn w2a2() -> QnnPrecision {
+    QnnPrecision::SubByte { w_bits: 2, a_bits: 2 }
+}
+
+#[test]
+fn batch_of_b_is_bit_identical_to_b_sequential_single_inferences() {
+    const B: u32 = 4;
+    let cache = ProgramCache::new();
+    let cfg = ProcessorConfig::sparq();
+    let graph = QnnGraph::sparq_cnn();
+    let model = SimQnnModel::compile_batched(&cfg, &graph, w2a2(), SEED, &cache, B).unwrap();
+    let pool = MachinePool::new();
+
+    let net = QnnNet::from_seed(&graph, w2a2(), SEED).unwrap();
+    let images: Vec<Vec<u64>> = (0..B as u64).map(|i| net.test_image(77 + i)).collect();
+    let inputs: Vec<Vec<f32>> = images
+        .iter()
+        .map(|img| img.iter().map(|&v| v as f32).collect())
+        .collect();
+
+    // one batch of B distinct images
+    let (batched, batch_total) = model.infer_batch(&pool, &inputs).unwrap();
+    assert_eq!(batched.len(), B as usize);
+
+    // B sequential single-image inferences through the SAME program
+    let mut single_total = 0u64;
+    let mut preambles = Vec::new();
+    for (i, input) in inputs.iter().enumerate() {
+        let (one, one_total) = model.infer_batch(&pool, std::slice::from_ref(input)).unwrap();
+        // bit-identical logits AND per-image cycles
+        assert_eq!(one[0].0, batched[i].0, "image {i}: logits diverged");
+        assert_eq!(one[0].1, batched[i].1, "image {i}: cycles diverged");
+        preambles.push(one_total - one[0].1);
+        single_total += one_total;
+    }
+    // every sequential run paid the same preamble; the batch paid it once
+    assert!(preambles.iter().all(|&p| p == preambles[0]));
+    let preamble = preambles[0];
+    assert!(preamble > 0, "the packed network must carry a weight-pack preamble");
+    assert_eq!(
+        single_total - batch_total,
+        (B as u64 - 1) * preamble,
+        "the batch must save exactly B-1 preambles and nothing else"
+    );
+
+    // and each image still agrees with the host golden network
+    for (i, img) in images.iter().enumerate() {
+        let golden = net.golden_forward(img).unwrap();
+        assert_eq!(batched[i].0, golden.logits, "image {i} vs golden");
+    }
+}
+
+#[test]
+fn flooding_the_queue_past_capacity_is_typed_backpressure() {
+    // tiny queue, one worker, a long batching window: submissions from
+    // this thread are far faster than a simulated inference, so the
+    // shard must fill and later submissions must see QueueFull
+    let cache = ProgramCache::new();
+    let serve = ServeConfig { workers: 1, batch_window_us: 1_000, queue_depth: 2, batch: 2 };
+    let server = QnnBatchServer::start(
+        ProcessorConfig::sparq(),
+        &QnnGraph::sparq_cnn(),
+        w2a2(),
+        SEED,
+        serve,
+        &cache,
+    )
+    .unwrap();
+    let image_len = server.image_len();
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    // keep flooding until backpressure shows (bounded by the queue
+    // depth + in-flight batches, this terminates fast)
+    for i in 0..200usize {
+        match server.submit(vec![(i % 4) as f32; image_len]) {
+            Ok(rx) => pending.push(rx),
+            Err(ServeError::QueueFull) => {
+                rejected += 1;
+                if rejected >= 3 {
+                    break;
+                }
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(rejected >= 3, "the bounded shard never pushed back");
+    // every ACCEPTED request completes despite the flood
+    let accepted = pending.len();
+    for rx in pending {
+        let r = rx.recv().expect("worker vanished").expect("accepted request must serve");
+        assert!(r.batch >= 1 && r.batch <= 2);
+        assert!(r.sim_cycles > 0);
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.completed as usize, accepted);
+    assert!(snap.rejected >= 3, "rejections must be counted in the metrics");
+    assert_eq!(snap.errors, 0);
+    assert!(snap.queue_depth_max >= 1, "the depth gauge must have seen queued requests");
+    assert_eq!(snap.queue_depth, 0, "the queue must drain by shutdown");
+    // fill histogram covers every executed batch
+    assert_eq!(snap.batches, snap.batch_fill.iter().map(|&(_, n)| n).sum::<u64>());
+    assert!(snap.batch_fill.iter().all(|&(k, _)| k >= 1 && k <= 2));
+}
+
+#[test]
+fn concurrent_producers_share_batches_and_all_complete() {
+    use std::sync::Arc;
+    let cache = ProgramCache::new();
+    let serve = ServeConfig { workers: 2, batch_window_us: 20_000, queue_depth: 128, batch: 4 };
+    let server = Arc::new(
+        QnnBatchServer::start(
+            ProcessorConfig::sparq(),
+            &QnnGraph::sparq_cnn(),
+            w2a2(),
+            SEED,
+            serve,
+            &cache,
+        )
+        .unwrap(),
+    );
+    let image_len = server.image_len();
+    let mut handles = vec![];
+    for i in 0..16usize {
+        let s = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            s.infer(vec![(i % 4) as f32; image_len]).unwrap()
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let max_fill = results.iter().map(|r| r.batch).max().unwrap();
+    assert!(max_fill >= 2, "no batching happened under concurrent load");
+    let server = Arc::try_unwrap(server).ok().unwrap();
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, 16);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.batches < 16, "some requests must have shared a batch");
+}

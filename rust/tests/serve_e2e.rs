@@ -27,7 +27,7 @@ fn serves_the_testset_accurately() {
     let ts = TestSet::load(artifacts_dir().join("testset.bin")).expect("testset");
     let server = start_server(
         "qnn_w4a4",
-        ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 128 },
+        ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 128, ..Default::default() },
     );
     let n = 128.min(ts.n);
     let mut pending = Vec::new();

@@ -52,7 +52,7 @@ fn sim_backend_serves_exact_conv_numerics() {
             SEED,
             Arc::clone(&cache),
         ),
-        ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 64 },
+        ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 64, ..Default::default() },
         1234,
     )
     .unwrap();
@@ -94,7 +94,7 @@ fn sim_backend_batches_and_survives_load() {
                 SEED,
                 Arc::clone(&cache),
             ),
-            ServeConfig { workers: 2, batch_window_us: 5_000, queue_depth: 128 },
+            ServeConfig { workers: 2, batch_window_us: 5_000, queue_depth: 128, ..Default::default() },
             0,
         )
         .unwrap(),

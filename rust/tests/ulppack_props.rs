@@ -20,9 +20,12 @@
 //! dataflow compiler applies — and the oracle sees the zero channel
 //! too, so padding cannot silently change the dot.
 
+//! Case counts: cheap defaults on PR CI; the nightly scheduled job
+//! scales them via `SPARQ_FUZZ_ITERS` (`testutil::fuzz_iters`).
+
 use sparq::kernels::workload::{golden_exact, golden_packed_vmacsr, ConvDims, Workload};
 use sparq::qnn::graph::padded_c;
-use sparq::testutil::{Gen, Prop};
+use sparq::testutil::{fuzz_iters, Gen, Prop};
 use sparq::ulppack::{
     act_level_max, pack_activations, pack_weights, region, unpack_container, weight_level_max,
     Container, Quantizer, RegionMode,
@@ -64,7 +67,7 @@ fn quantized_workload(g: &mut Gen, w_bits: u32, a_bits: u32, c_real: u32) -> Wor
 
 #[test]
 fn pack_unpack_roundtrip_both_layouts_every_precision() {
-    Prop::new(0xF00D).runs(64).check(|g| {
+    Prop::new(0xF00D).runs(fuzz_iters(64)).check(|g| {
         let w_bits = g.range(1, 4) as u32;
         let a_bits = g.range(1, 4) as u32;
         let c_real = g.range(1, 6) as u32; // odd and even counts
@@ -101,7 +104,7 @@ fn pack_unpack_roundtrip_both_layouts_every_precision() {
 
 #[test]
 fn quantized_levels_stay_in_range() {
-    Prop::new(0xA11).runs(64).check(|g| {
+    Prop::new(0xA11).runs(fuzz_iters(64)).check(|g| {
         let w_bits = g.range(1, 4) as u32;
         let a_bits = g.range(1, 4) as u32;
         let wl = quantized_workload(g, w_bits, a_bits, g.range(1, 6) as u32);
@@ -126,7 +129,7 @@ fn packed_dot_matches_the_scalar_oracle_wherever_the_plan_is_exact() {
                         ^ ((c_real as u64) << 24)
                         ^ (((mode == RegionMode::Paper) as u64) << 32);
                     let mut g = Gen::new(seed);
-                    for _ in 0..3 {
+                    for _ in 0..fuzz_iters(3) {
                         let wl = quantized_workload(&mut g, w_bits, a_bits, c_real);
                         let issues = wl.dims.issues_per_output();
                         let Some(plan) = region::plan_vmacsr(w_bits, a_bits, issues, mode) else {
