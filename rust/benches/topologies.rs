@@ -1,0 +1,161 @@
+//! Graph-topology bench: the chain (SparqCNN), residual, depthwise
+//! and dense-head networks, each compiled as ONE cached dataflow
+//! program over the liveness-planned arena, at W2A2 and W4A4.
+//! Reports cycles/image, images/s at the modelled fmax, and the arena
+//! footprint (per-image slot bytes) against the pre-liveness
+//! append-only layout.  `--json` writes `BENCH_topo.json` next to the
+//! other BENCH files; CI smoke-runs and uploads it, and
+//! `sparq bench-check` gates the cycle fields once the baseline in
+//! `ci/bench_baselines/BENCH_topo.json` is blessed.
+//!
+//! Asserted invariants (the PR's acceptance shape):
+//! - per-topology cycle counts are identical across repeated
+//!   inferences AND across the liveness / append-only layouts (timing
+//!   is address-independent — reuse can only shrink the arena);
+//! - the liveness arena is never larger than append-only, and is
+//!   STRICTLY smaller on the residual network (the join keeps two
+//!   branches live, then both die and their ranges recycle).
+
+mod common;
+
+use common::{json_flag, Bench, Json};
+use sparq::kernels::ProgramCache;
+use sparq::power::LaneReport;
+use sparq::qnn::schedule::QnnPrecision;
+use sparq::qnn::{CompiledQnn, QnnGraph, QnnNet};
+use sparq::runtime::SimQnnModel;
+use sparq::sim::MachinePool;
+use sparq::ProcessorConfig;
+
+const SEED: u64 = 0x7090_5EED;
+const REPS: usize = 8;
+
+fn topologies() -> Vec<(&'static str, QnnGraph)> {
+    vec![
+        ("chain", QnnGraph::sparq_cnn()),
+        ("resnetlike", QnnGraph::sparq_resnetlike()),
+        ("mobilenetlike", QnnGraph::sparq_mobilenetlike()),
+        ("denselike", QnnGraph::sparq_denselike()),
+    ]
+}
+
+struct Row {
+    label: String,
+    cycles: u64,
+    layers: usize,
+    live_bytes: u64,
+    append_bytes: u64,
+}
+
+fn main() {
+    let b = Bench::new("topologies");
+    let cfg = ProcessorConfig::sparq();
+    let fmax = LaneReport::for_config(&cfg).fmax_ghz();
+    let cache = ProgramCache::new();
+    let pool = MachinePool::new();
+    let mut json = Json::new();
+    json.str("bench", "topologies").int("reps", REPS as u64).num("fmax_ghz", fmax);
+
+    let mut rows: Vec<Row> = Vec::new();
+    for prec in [
+        QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+        QnnPrecision::SubByte { w_bits: 4, a_bits: 4 },
+    ] {
+        for (topo, graph) in topologies() {
+            let label = format!("{topo} {}", prec.label());
+            let row = b.section(&label, || {
+                let model =
+                    SimQnnModel::compile(&cfg, &graph, prec, SEED, &cache).expect("model");
+                let image: Vec<f32> =
+                    (0..model.input_len()).map(|i| ((i * 7) % 4) as f32).collect();
+                let mut cycles_each = Vec::with_capacity(REPS);
+                for _ in 0..REPS {
+                    let (_, cyc) = model.infer(&pool, &image).expect("infer");
+                    cycles_each.push(cyc);
+                }
+                assert!(
+                    cycles_each.iter().all(|&c| c == cycles_each[0]),
+                    "{label}: cycle counts must be identical across repeated inferences"
+                );
+
+                // the pre-liveness layout: same streams, fresh offsets
+                // everywhere — cycles must match exactly, only the
+                // arena high-water mark may differ
+                let net = QnnNet::from_seed(&graph, prec, SEED).expect("net");
+                let ao = CompiledQnn::compile_append_only(&cfg, net, &cache).expect("ao");
+                let image_lv = model.cq.net.test_image(0);
+                let mut m = sparq::sim::Machine::new(cfg.clone(), ao.mem_bytes);
+                let ao_run = ao.execute(&mut m, &image_lv).expect("ao execute");
+                assert_eq!(
+                    ao_run.total_cycles(),
+                    {
+                        let mut m2 =
+                            sparq::sim::Machine::new(cfg.clone(), model.cq.mem_bytes);
+                        model.cq.execute(&mut m2, &image_lv).expect("live execute").total_cycles()
+                    },
+                    "{label}: liveness placement must not change cycle counts"
+                );
+                assert!(
+                    model.cq.slot_stride <= ao.slot_stride,
+                    "{label}: liveness arena grew past append-only"
+                );
+                if topo == "resnetlike" {
+                    assert!(
+                        model.cq.slot_stride < ao.slot_stride,
+                        "{label}: liveness must strictly shrink the residual arena"
+                    );
+                }
+
+                println!(
+                    "  {label}: {} cycles/image -> {:.0} img/s at {fmax:.3} GHz | arena {} B/slot (append-only {} B, {:.1}% saved)",
+                    cycles_each[0],
+                    fmax * 1e9 / cycles_each[0] as f64,
+                    model.cq.slot_stride,
+                    ao.slot_stride,
+                    100.0 * (1.0 - model.cq.slot_stride as f64 / ao.slot_stride as f64),
+                );
+                Row {
+                    label: label.clone(),
+                    cycles: cycles_each[0],
+                    layers: model.cq.taps.len(),
+                    live_bytes: model.cq.slot_stride,
+                    append_bytes: ao.slot_stride,
+                }
+            });
+            rows.push(row);
+        }
+    }
+
+    let cs = cache.stats();
+    println!(
+        "program cache: {} network compile(s), {} hits | autotune: {} measurement(s), {} memo hits",
+        cs.misses, cs.hits, cs.tune_misses, cs.tune_hits
+    );
+
+    if json_flag() {
+        json.obj("topologies", |j| {
+            for r in &rows {
+                j.obj(&r.label, |j| {
+                    j.int("cycles_per_image", r.cycles)
+                        .num("images_per_s_at_fmax", fmax * 1e9 / r.cycles as f64)
+                        .int("layer_count", r.layers as u64)
+                        .int("arena_slot_bytes", r.live_bytes)
+                        .int("arena_slot_bytes_append_only", r.append_bytes)
+                        .num(
+                            "arena_savings_frac",
+                            1.0 - r.live_bytes as f64 / r.append_bytes as f64,
+                        );
+                });
+            }
+        });
+        json.obj("cache", |j| {
+            j.int("compiles", cs.misses)
+                .int("hits", cs.hits)
+                .int("tune_measurements", cs.tune_misses)
+                .int("tune_hits", cs.tune_hits);
+        });
+        json.write("BENCH_topo.json");
+    }
+
+    b.finish();
+}

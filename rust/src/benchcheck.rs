@@ -375,8 +375,13 @@ pub fn compare_texts(baseline: &str, current: &str) -> Result<CheckOutcome, Pars
 }
 
 /// The bench files the gate knows about (name, artifact filename).
-pub const BENCH_FILES: [&str; 4] =
-    ["BENCH_simspeed.json", "BENCH_qnn.json", "BENCH_mixed.json", "BENCH_serve.json"];
+pub const BENCH_FILES: [&str; 5] = [
+    "BENCH_simspeed.json",
+    "BENCH_qnn.json",
+    "BENCH_mixed.json",
+    "BENCH_serve.json",
+    "BENCH_topo.json",
+];
 
 #[cfg(test)]
 mod tests {

@@ -211,9 +211,10 @@ fn weight_words(wl: &Workload, variant: ConvVariant) -> Vec<u64> {
 }
 
 /// The graph-level key for whole-network entries: the processor, every
-/// layer descriptor by value, the precision, the weight seed (the
-/// network's weights derive deterministically from it), and the batch
-/// layout.  `batch` is 0 for the unbatched legacy layout and B >= 1
+/// layer descriptor by value, the DAG edges (`preds` — two graphs with
+/// the same layer multiset but different wiring are different
+/// programs), the precision, the weight seed (the network's weights
+/// derive deterministically from it), and the batch layout.  `batch` is 0 for the unbatched legacy layout and B >= 1
 /// for a [`CompiledQnn::compile_batched`] arena — the two emit
 /// different streams (the batched layout hoists the weight-pack pass
 /// into a preamble), so they must never alias.  Same discipline as
@@ -224,6 +225,7 @@ pub struct QnnKey {
     fp: u64,
     cfg: ProcessorConfig,
     layers: Vec<LayerDesc>,
+    preds: Vec<Vec<usize>>,
     input: (u32, u32, u32),
     classes: u32,
     precision: QnnPrecision,
@@ -237,6 +239,7 @@ impl PartialEq for QnnKey {
         self.fp == o.fp
             && self.cfg == o.cfg
             && self.layers == o.layers
+            && self.preds == o.preds
             && self.input == o.input
             && self.classes == o.classes
             && self.precision == o.precision
@@ -292,6 +295,48 @@ fn qnn_fingerprint(
                 f.u32(c);
                 f.u32(classes);
             }
+            LayerDesc::Add { c, h, w } => {
+                f.u32(3);
+                for v in [c, h, w] {
+                    f.u32(v);
+                }
+            }
+            LayerDesc::DepthwiseConv { c, h, w, f: k, precision } => {
+                f.u32(4);
+                for v in [c, h, w, k] {
+                    f.u32(v);
+                }
+                match precision {
+                    None => f.u32(0),
+                    Some((pw, pa)) => {
+                        f.u32(1);
+                        f.u32(pw);
+                        f.u32(pa);
+                    }
+                }
+            }
+            LayerDesc::Dense { c_in, h, w, c_out, precision } => {
+                f.u32(5);
+                for v in [c_in, h, w, c_out] {
+                    f.u32(v);
+                }
+                match precision {
+                    None => f.u32(0),
+                    Some((pw, pa)) => {
+                        f.u32(1);
+                        f.u32(pw);
+                        f.u32(pa);
+                    }
+                }
+            }
+        }
+    }
+    // the DAG wiring: length-delimited edge lists per node, so two
+    // graphs sharing a layer multiset but not their edges never alias
+    for ps in &graph.preds {
+        f.u32(ps.len() as u32);
+        for &p in ps {
+            f.u32(p as u32);
         }
     }
     f.u32(graph.input.0);
@@ -468,6 +513,7 @@ impl ProgramCache {
             fp: qnn_fingerprint(cfg, graph, precision, seed, batch),
             cfg: cfg.clone(),
             layers: graph.layers.clone(),
+            preds: graph.preds.clone(),
             input: graph.input,
             classes: graph.classes,
             precision,
@@ -792,5 +838,26 @@ mod tests {
         // and only the deep conv differing still separates
         let deep = QnnGraph::sparq_cnn_mixed((4, 4), (3, 3));
         assert_ne!(ProgramCache::qnn_key(&cfg, &mixed, p, 7), ProgramCache::qnn_key(&cfg, &deep, p, 7));
+    }
+
+    #[test]
+    fn qnn_key_distinguishes_dag_wiring_and_new_node_kinds() {
+        let cfg = ProcessorConfig::sparq();
+        let p = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let res = QnnGraph::sparq_resnetlike();
+        // rewire the join's first edge from layer 1 to the stem: the
+        // layer multiset is untouched, only the edges differ
+        let mut rewired = res.clone();
+        rewired.preds[3] = vec![0, 2];
+        rewired.validate().unwrap();
+        let k1 = ProgramCache::qnn_key(&cfg, &res, p, 7);
+        let k2 = ProgramCache::qnn_key(&cfg, &rewired, p, 7);
+        assert_ne!(k1, k2);
+        assert_ne!(k1.fp, k2.fp, "the DAG edges must reach the fingerprint");
+        // the residual / depthwise / dense builders all key apart
+        let mobile = ProgramCache::qnn_key(&cfg, &QnnGraph::sparq_mobilenetlike(), p, 7);
+        let dense = ProgramCache::qnn_key(&cfg, &QnnGraph::sparq_denselike(), p, 7);
+        assert_ne!(k1, mobile);
+        assert_ne!(mobile, dense);
     }
 }

@@ -175,13 +175,31 @@ fn alloc_regs(a: &Asm, fh: u32, avl: u64, sew: Sew, wide: bool, tmp: bool) -> Re
 
 /// Mirror of the machine's bump allocator (`Mem::alloc` on a fresh
 /// memory: brk starts at 64), so `compile` can resolve addresses
-/// without a machine and `bind` can replay the identical sequence.
+/// without a machine and `bind` can replay the identical sequence —
+/// extended with tensor liveness for the multi-layer dataflow compiler
+/// (`qnn::compiled`), which threads ONE of these through every layer's
+/// `compile_in_arena` call so a whole network's tensors land in a
+/// single planned activation arena.
 ///
-/// The multi-layer dataflow compiler (`qnn::compiled`) threads ONE of
-/// these through every layer's `compile_in_arena` call, so a whole
-/// network's tensors land in a single planned activation arena.
+/// Liveness: when the arena planner knows a tensor's last reader has
+/// been planned (a conv's staged/packed activation scratch once its
+/// stage is emitted), it [`Self::free`]s the range; later allocations
+/// reuse freed ranges first-fit (lowest address first, align-aware,
+/// with fragment splitting and neighbour coalescing) before growing
+/// `brk`.  A compile that never frees — every standalone [`compile`] /
+/// [`bind`] pair — degenerates to the exact bump sequence a fresh
+/// machine performs, so straight-line layouts stay bit-identical to
+/// the pre-liveness planner unless the caller opts in.  Timing is
+/// address-independent (cycles depend on the instruction stream and
+/// vl only), so address reuse can never change a program's cycles.
 pub(crate) struct LayoutAlloc {
     brk: u64,
+    /// Dead ranges available for reuse: (base, len), sorted by base,
+    /// adjacent blocks coalesced.
+    free: Vec<(u64, u64)>,
+    /// `false` = the append-only planner (frees are ignored); used by
+    /// the liveness regression tests as the comparison baseline.
+    reuse: bool,
 }
 
 impl Default for LayoutAlloc {
@@ -192,17 +210,66 @@ impl Default for LayoutAlloc {
 
 impl LayoutAlloc {
     pub(crate) fn new() -> LayoutAlloc {
-        LayoutAlloc { brk: 64 }
+        LayoutAlloc { brk: 64, free: Vec::new(), reuse: true }
+    }
+
+    /// An allocator that ignores [`Self::free`] — the pre-liveness
+    /// append-only placement, kept as the regression baseline the
+    /// liveness planner must never exceed.
+    pub(crate) fn append_only() -> LayoutAlloc {
+        LayoutAlloc { reuse: false, ..LayoutAlloc::new() }
     }
 
     pub(crate) fn alloc(&mut self, bytes: u64, align: u64) -> u64 {
         debug_assert!(align.is_power_of_two());
+        // first-fit over the free list: reuse the lowest dead range an
+        // aligned carve fits in
+        for i in 0..self.free.len() {
+            let (fb, fl) = self.free[i];
+            let base = (fb + align - 1) & !(align - 1);
+            if base + bytes <= fb + fl {
+                self.free.remove(i);
+                if base > fb {
+                    self.insert_free(fb, base - fb);
+                }
+                let tail = (fb + fl) - (base + bytes);
+                if tail > 0 {
+                    self.insert_free(base + bytes, tail);
+                }
+                return base;
+            }
+        }
         let base = (self.brk + align - 1) & !(align - 1);
         self.brk = base + bytes;
         base
     }
 
-    /// High-water mark: total arena bytes allocated so far.
+    /// Mark a previously allocated range dead: its producer/consumer
+    /// stages are fully planned and nothing later reads it.  Later
+    /// allocations may reuse the range.
+    pub(crate) fn free(&mut self, base: u64, bytes: u64) {
+        if !self.reuse || bytes == 0 {
+            return;
+        }
+        self.insert_free(base, bytes);
+    }
+
+    fn insert_free(&mut self, base: u64, len: u64) {
+        let i = self.free.partition_point(|&(b, _)| b < base);
+        self.free.insert(i, (base, len));
+        // coalesce with the right then the left neighbour
+        if i + 1 < self.free.len() && self.free[i].0 + self.free[i].1 == self.free[i + 1].0 {
+            self.free[i].1 += self.free[i + 1].1;
+            self.free.remove(i + 1);
+        }
+        if i > 0 && self.free[i - 1].0 + self.free[i - 1].1 == self.free[i].0 {
+            self.free[i - 1].1 += self.free[i].1;
+            self.free.remove(i);
+        }
+    }
+
+    /// High-water mark: total arena bytes the layout ever needed
+    /// (freed ranges stay inside it).
     pub(crate) fn brk(&self) -> u64 {
         self.brk
     }
@@ -273,6 +340,20 @@ impl CompiledConv {
         self.layout.ew
     }
 
+    /// Arena ranges that are dead once this conv's stage has run: the
+    /// staged activation buffer (its producer wrote it, only this
+    /// stage reads it) and the packed-activation scratch (written and
+    /// read inside this stage).  The dataflow planner frees these; the
+    /// output buffer stays live (it is the layer tap and a downstream
+    /// boundary's source).
+    pub(crate) fn scratch_regions(&self) -> Vec<(u64, u64)> {
+        let mut v = vec![self.layout.x];
+        if let Some(xp) = self.layout.xp {
+            v.push(xp);
+        }
+        v
+    }
+
     /// Execute the cached program: reset the machine in place, rebind
     /// `wl`'s activation tensors at the compiled layout, and run.
     ///
@@ -329,7 +410,7 @@ pub fn compile(
     opts: EngineOpts,
     label: String,
 ) -> Result<CompiledConv, SimError> {
-    compile_impl(cfg, wl, inner, opts, label, true, &mut LayoutAlloc::new(), None)
+    compile_impl(cfg, wl, inner, opts, label, true, &mut LayoutAlloc::new(), None, None)
 }
 
 /// [`compile`] against a caller-held arena allocator: the layer's
@@ -347,7 +428,7 @@ pub(crate) fn compile_in_arena(
     label: String,
     la: &mut LayoutAlloc,
 ) -> Result<CompiledConv, SimError> {
-    compile_impl(cfg, wl, inner, opts, label, true, la, None)
+    compile_impl(cfg, wl, inner, opts, label, true, la, None, None)
 }
 
 /// [`compile_in_arena`] with the runtime *weight*-packing scalar pass
@@ -366,7 +447,30 @@ pub(crate) fn compile_in_arena_hoisted(
     la: &mut LayoutAlloc,
     hoisted: &mut u64,
 ) -> Result<CompiledConv, SimError> {
-    compile_impl(cfg, wl, inner, opts, label, true, la, Some(hoisted))
+    compile_impl(cfg, wl, inner, opts, label, true, la, Some(hoisted), None)
+}
+
+/// [`compile_in_arena`] with the output buffer placed at a
+/// caller-chosen arena address instead of freshly allocated.  The
+/// depthwise lowering (`qnn::compiled`) compiles C per-channel
+/// sub-convs and needs their outputs contiguous — it pre-allocates one
+/// C x H x W block and places sub-conv `ch`'s output at
+/// `block + ch*H*W*out_bytes`, so downstream stages (and the layer
+/// tap) see a single dense tensor.  `hoisted` as in
+/// [`compile_in_arena_hoisted`] (`None` = keep weight packing in the
+/// stream).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn compile_in_arena_placed(
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    inner: Inner,
+    opts: EngineOpts,
+    label: String,
+    la: &mut LayoutAlloc,
+    out_at: u64,
+    hoisted: Option<&mut u64>,
+) -> Result<CompiledConv, SimError> {
+    compile_impl(cfg, wl, inner, opts, label, true, la, hoisted, Some(out_at))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -379,6 +483,7 @@ fn compile_impl(
     with_uops: bool,
     la: &mut LayoutAlloc,
     hoist_pack: Option<&mut u64>,
+    out_at: Option<u64>,
 ) -> Result<CompiledConv, SimError> {
     let d = wl.dims;
     let sew = inner.sew();
@@ -431,7 +536,12 @@ fn compile_impl(
         OutElem::U32 | OutElem::F32 => 4,
     };
     let out_len = (d.co * ho * wo) as usize;
-    let out_addr = la.alloc(out_len as u64 * out_bytes, 64);
+    let out_addr = match out_at {
+        // caller-placed output (the depthwise contiguous block);
+        // never combined with `bind`, which replays allocations
+        Some(addr) => addr,
+        None => la.alloc(out_len as u64 * out_bytes, 64),
+    };
 
     // resolved weights for the .vx operands
     let wvals: Vec<Vec<Vec<u64>>> = match inner {
@@ -673,7 +783,8 @@ pub fn build(
     opts: EngineOpts,
     label: String,
 ) -> Result<(Program, OutputRef), SimError> {
-    let cc = compile_impl(&m.cfg, wl, inner, opts, label, false, &mut LayoutAlloc::new(), None)?;
+    let cc =
+        compile_impl(&m.cfg, wl, inner, opts, label, false, &mut LayoutAlloc::new(), None, None)?;
     bind(m, wl, &cc)?;
     Ok((cc.prog, cc.out))
 }
@@ -729,5 +840,60 @@ fn emit_store_row(
     } else {
         a.setvl(sw as u64, sew, regs.lmul);
         a.vse(sew, regs.acc[sl], dst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::LayoutAlloc;
+
+    #[test]
+    fn layout_alloc_without_frees_is_the_machine_bump_sequence() {
+        let mut la = LayoutAlloc::new();
+        assert_eq!(la.alloc(100, 64), 64);
+        assert_eq!(la.alloc(8, 64), 192); // 164 rounded up
+        assert_eq!(la.alloc(4, 4), 200);
+        assert_eq!(la.brk(), 204);
+    }
+
+    #[test]
+    fn freed_ranges_are_reused_first_fit_without_growing_the_high_water() {
+        let mut la = LayoutAlloc::new();
+        let a = la.alloc(128, 64);
+        let b = la.alloc(128, 64);
+        let c = la.alloc(64, 64);
+        let top = la.brk();
+        la.free(a, 128);
+        // fits in a's dead range: high water unchanged
+        assert_eq!(la.alloc(64, 64), a);
+        assert_eq!(la.brk(), top);
+        // the tail fragment of a's range serves the next small alloc
+        assert_eq!(la.alloc(64, 64), a + 64);
+        assert_eq!(la.brk(), top);
+        // nothing free is big enough now: fall back to the bump
+        let d = la.alloc(256, 64);
+        assert!(d >= top);
+        let _ = (b, c);
+    }
+
+    #[test]
+    fn adjacent_frees_coalesce() {
+        let mut la = LayoutAlloc::new();
+        let a = la.alloc(64, 64);
+        let b = la.alloc(64, 64);
+        let top = la.brk();
+        la.free(a, 64);
+        la.free(b, 64);
+        // a 128-byte alloc only fits if the two 64-byte blocks merged
+        assert_eq!(la.alloc(128, 64), a);
+        assert_eq!(la.brk(), top);
+    }
+
+    #[test]
+    fn append_only_mode_ignores_frees() {
+        let mut la = LayoutAlloc::append_only();
+        let a = la.alloc(64, 64);
+        la.free(a, 64);
+        assert!(la.alloc(64, 64) > a);
     }
 }

@@ -1,0 +1,201 @@
+//! The residual-join stage: requantize two producer branches into a
+//! common activation level domain and add them element-wise
+//! ([`crate::qnn::graph::LayerDesc::Add`]).
+//!
+//! Each branch arrives as the dense wide sums its producer conv left
+//! behind (u16 for ULP containers and the int16 stem, u32 for spilled
+//! LP layers).  The join cannot add raw sums — the branches may sit at
+//! different element widths and different magnitudes — so it applies
+//! the same `min(amax, v >> rshift)` requantization a layer boundary
+//! would to EACH branch first, then adds the aligned levels at E16:
+//!
+//! ```text
+//! # per strip, per branch (wide register group v8 / v16):
+//! vle{W}   v8, branch          # producer's dense sums
+//! vsrl.vx  v8, v8, rshift      # branch requantization shift
+//! vminu.vx v8, v8, amax        # clamp into the A-bit level range
+//! vnsrl.wx v0, v8, 0           # narrow to E16 (skipped when W == 16)
+//! # then:
+//! vadd.vv  v0, v0, v4          # the join
+//! vse16    v0, dst
+//! ```
+//!
+//! The output is a dense `c x h x w` E16 tensor of values in
+//! `0 ..= 2*amax`; the downstream consumer's ordinary boundary requant
+//! (`kernels::requant`) renormalizes it into that layer's own level
+//! range.  The clamp runs at the wide width *before* the narrowing
+//! shift, exactly like `emit_requant`, so nothing truncates silently.
+//!
+//! The host golden model is [`add_requant_host`]; the golden network
+//! applies it per element and the dataflow tests pin the emitted
+//! stream to it bit-for-bit.
+
+use super::asm::{strips, Asm};
+use super::requant::requant_host;
+use crate::isa::{Lmul, Sew, VOp, VType};
+
+/// One residual join: the two producer branches (dense tensors of
+/// `len` elements each, at 16- or 32-bit widths) and the common level
+/// domain they are requantized into before the add.
+#[derive(Debug, Clone, Copy)]
+pub struct AddSpec {
+    /// First branch: dense sums at `a_sew`, requantized by `a_rshift`.
+    pub a_src: u64,
+    pub a_sew: Sew,
+    pub a_rshift: u32,
+    /// Second branch.
+    pub b_src: u64,
+    pub b_sew: Sew,
+    pub b_rshift: u32,
+    /// Level clamp both branches share: `level = min(amax, v >> rshift)`.
+    pub amax: u64,
+    /// Join output: dense `len` elements at E16, values `0..=2*amax`.
+    pub dst: u64,
+    /// Elements per branch (= c * h * w).
+    pub len: u32,
+}
+
+/// Emit the requantize-both-branches + `vadd.vv` stream for one join.
+/// Branch widths must be E16 or E32 (every packed/stem producer's
+/// output element; one `vnsrl` step max, like any boundary).
+pub fn emit_add_requant(a: &mut Asm, s: &AddSpec) {
+    for sew in [s.a_sew, s.b_sew] {
+        assert!(
+            matches!(sew, Sew::E16 | Sew::E32),
+            "join branches are 16- or 32-bit producer elements, got {sew}"
+        );
+    }
+    // strip at the widest view so both branches fit M1 register groups
+    let max_strip = VType::new(Sew::E32, Lmul::M1).vlmax(a.vlen_bits()).max(1);
+    // requantize one branch; returns the register holding E16 levels.
+    // wide groups v8/v16 (even: a vnsrl source spans 2 registers at
+    // M1), narrow results v0/v4.
+    let branch = |a: &mut Asm, sew: Sew, src: u64, rshift: u32, wide: u8, narrow: u8, s0: u32, sw: u32| -> u8 {
+        let eb = sew.bytes() as u64;
+        a.setvl(sw as u64, sew, Lmul::M1);
+        a.vle(sew, wide, src + s0 as u64 * eb);
+        if rshift > 0 {
+            a.vx(VOp::Srl, wide, wide, rshift as u64);
+        }
+        a.vx(VOp::Min, wide, wide, s.amax);
+        if sew == Sew::E16 {
+            wide
+        } else {
+            a.setvl(sw as u64, Sew::E16, Lmul::M1);
+            a.vx(VOp::NSrl, narrow, wide, 0);
+            narrow
+        }
+    };
+    for (s0, sw) in strips(s.len, max_strip) {
+        let ra = branch(a, s.a_sew, s.a_src, s.a_rshift, 8, 0, s0, sw);
+        let rb = branch(a, s.b_sew, s.b_src, s.b_rshift, 16, 4, s0, sw);
+        a.setvl(sw as u64, Sew::E16, Lmul::M1);
+        a.vv(VOp::Add, 0, ra, rb);
+        a.vse(Sew::E16, 0, s.dst + s0 as u64 * 2);
+        a.loop_overhead();
+    }
+}
+
+/// Host-side golden of one joined element: each branch requantized
+/// into the common domain, then added.  Bounded by `2*amax`, so the
+/// E16 store can never wrap.
+pub fn add_requant_host(va: u64, a_rshift: u32, vb: u64, b_rshift: u32, amax: u64) -> u64 {
+    requant_host(va, a_rshift, amax) + requant_host(vb, b_rshift, amax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ProcessorConfig;
+    use crate::sim::Machine;
+    use crate::testutil::Gen;
+
+    fn run_spec(spec: &AddSpec, a_vals: &[u64], b_vals: &[u64]) -> Vec<u64> {
+        let cfg = ProcessorConfig::sparq();
+        let mut m = Machine::new(cfg.clone(), 1 << 20);
+        let ab = spec.a_sew.bytes() as u64;
+        for (i, &v) in a_vals.iter().enumerate() {
+            m.mem.store_uint(spec.a_src + i as u64 * ab, ab as u32, v).unwrap();
+        }
+        let bb = spec.b_sew.bytes() as u64;
+        for (i, &v) in b_vals.iter().enumerate() {
+            m.mem.store_uint(spec.b_src + i as u64 * bb, bb as u32, v).unwrap();
+        }
+        // poison the destination so every element is provably written
+        for i in 0..spec.len as u64 {
+            m.mem.store_uint(spec.dst + i * 2, 2, 0x5555).unwrap();
+        }
+        let mut a = Asm::new("add-requant", cfg.vlen_bits);
+        emit_add_requant(&mut a, spec);
+        let prog = a.finish(0);
+        m.run(&prog).unwrap();
+        (0..spec.len as u64).map(|i| m.mem.load_uint(spec.dst + i * 2, 2).unwrap()).collect()
+    }
+
+    fn golden(spec: &AddSpec, a_vals: &[u64], b_vals: &[u64]) -> Vec<u64> {
+        a_vals
+            .iter()
+            .zip(b_vals)
+            .map(|(&va, &vb)| add_requant_host(va, spec.a_rshift, vb, spec.b_rshift, spec.amax))
+            .collect()
+    }
+
+    #[test]
+    fn mixed_width_join_matches_host() {
+        // a u32 (spilled LP) branch joining a u16 branch — multiple
+        // strips at VLEN=512/E32
+        let spec = AddSpec {
+            a_src: 0x1000,
+            a_sew: Sew::E32,
+            a_rshift: 9,
+            b_src: 0x4000,
+            b_sew: Sew::E16,
+            b_rshift: 5,
+            amax: 3,
+            dst: 0x8000,
+            len: 61,
+        };
+        let mut g = Gen::new(0x101D_0ADD);
+        let a_vals: Vec<u64> = (0..spec.len).map(|_| g.below(1 << 14)).collect();
+        let b_vals: Vec<u64> = (0..spec.len).map(|_| g.below(1 << 11)).collect();
+        assert_eq!(run_spec(&spec, &a_vals, &b_vals), golden(&spec, &a_vals, &b_vals));
+    }
+
+    #[test]
+    fn equal_width_join_matches_host() {
+        let spec = AddSpec {
+            a_src: 0x1000,
+            a_sew: Sew::E16,
+            a_rshift: 4,
+            b_src: 0x2000,
+            b_sew: Sew::E16,
+            b_rshift: 4,
+            amax: 15,
+            dst: 0x3000,
+            len: 40,
+        };
+        let mut g = Gen::new(77);
+        let a_vals: Vec<u64> = (0..spec.len).map(|_| g.below(1 << 10)).collect();
+        let b_vals: Vec<u64> = (0..spec.len).map(|_| g.below(1 << 10)).collect();
+        assert_eq!(run_spec(&spec, &a_vals, &b_vals), golden(&spec, &a_vals, &b_vals));
+    }
+
+    #[test]
+    fn clamp_applies_per_branch_before_the_add() {
+        // both branches at the clamp ceiling: the result is 2*amax,
+        // not a wrapped or doubly-clamped value
+        let spec = AddSpec {
+            a_src: 0x100,
+            a_sew: Sew::E32,
+            a_rshift: 0,
+            b_src: 0x200,
+            b_sew: Sew::E16,
+            b_rshift: 0,
+            amax: 7,
+            dst: 0x300,
+            len: 2,
+        };
+        let got = run_spec(&spec, &[0xFFFF_FFFF, 3], &[0xFFFF, 4]);
+        assert_eq!(got, vec![14, 7]);
+    }
+}

@@ -11,68 +11,73 @@
 //! im2col row (cc, ki, i) is the input plane (cc) shifted by (ki, i) —
 //! with unit-stride rows this is a strided copy the VLSU can stream;
 //! the GEMM is then a pure vmacsr reduction with zero slides.
+//!
+//! Beyond the ablation, this kernel backs the DAG compiler's `Dense`
+//! node ([`crate::qnn::graph::LayerDesc::Dense`]): a fully-connected
+//! head is a full-extent 'valid' conv (fh = h, fw = w, ho = wo = 1),
+//! where im2col degenerates to flattening — the one shape where the
+//! paper's footprint argument doesn't bite.  [`compile_in_arena`]
+//! builds that form against a [`LayoutAlloc`] arena (activations
+//! rebind per run, like the conv engine), and [`golden_packed_gemm`]
+//! is the host-side bit-exact mirror of the GEMM's accumulation order
+//! (cc → ki → i, which differs from the direct kernel's ki → c → i —
+//! outside the overflow-free region the two orders wrap differently).
 
 use super::asm::{strips, Asm};
-use super::conv_engine::EngineOpts;
+use super::conv_engine::{EngineOpts, LayoutAlloc};
 use super::pack_rt;
-use super::workload::{OutElem, OutputRef, Workload};
+use super::workload::{ConvDims, OutElem, OutputRef, Workload};
+use crate::arch::ProcessorConfig;
 use crate::isa::{Lmul, ScalarKind, Sew, VOp, VType};
 use crate::sim::{Machine, Program, SimError};
 use crate::ulppack::{self, region, Container, RegionMode};
 
-/// Build the packed im2col + GEMM conv at (W, A) with `vmacsr`.
-pub fn build(
-    m: &mut Machine,
-    wl: &Workload,
-    w_bits: u32,
-    a_bits: u32,
-    mode: RegionMode,
-) -> Result<(Program, OutputRef), SimError> {
-    let d = wl.dims;
-    let plan = region::plan_vmacsr(w_bits, a_bits, d.issues_per_output(), mode)
-        .ok_or(SimError::Unsupported("precision pair outside every container's region"))?;
-    let cont = plan.container;
-    let sew = match cont {
+fn container_sew(cont: Container) -> Sew {
+    match cont {
         Container::Lp => Sew::E16,
         Container::Ulp => Sew::E8,
-    };
+    }
+}
+
+/// Emit the three passes against already-placed tensors: runtime
+/// activation packing (x -> xp), the im2col strided copy (xp -> col),
+/// and the vmacsr GEMM (col -> out, u32).  Shared by the one-shot
+/// [`build`] and the arena-resident [`compile_in_arena`].
+#[allow(clippy::too_many_arguments)]
+fn emit_streams(
+    a: &mut Asm,
+    d: &ConvDims,
+    cont: Container,
+    spill_every: u64,
+    wp: &[Vec<Vec<u64>>],
+    opts: &EngineOpts,
+    x_addr: u64,
+    xp_addr: u64,
+    col_addr: u64,
+    out_addr: u64,
+    mut hoisted_wslots: Option<&mut u64>,
+) {
+    let sew = container_sew(cont);
     let ew = sew.bytes() as u64;
     let (ho, wo) = (d.ho(), d.wo());
     let n = (ho * wo) as u64; // GEMM N dimension
     let cp = d.c / 2;
-    let k_rows = (cp * d.fh * d.fw) as u64; // GEMM K dimension
-
-    // ---- stage tensors ----
     let plane = d.h as u64 * d.w as u64;
-    let x_addr = m.mem.alloc(d.c as u64 * plane * ew, 64)?;
-    for (c, row) in wl.act.iter().enumerate() {
-        let base = x_addr + c as u64 * plane * ew;
-        for (i, &v) in row.iter().enumerate() {
-            m.mem.store_uint(base + i as u64 * ew, ew as u32, v)?;
-        }
-    }
-    let xp_addr = m.mem.alloc(cp as u64 * plane * ew, 64)?;
-    // the im2col matrix: K x N packed containers — the footprint the
-    // paper's direct kernel avoids
-    let col_addr = m.mem.alloc(k_rows * n * ew, 64)?;
-    let out_elem = OutElem::U32;
-    let out_len = (d.co * ho * wo) as usize;
-    let out_addr = m.mem.alloc(out_len as u64 * 4, 64)?;
-    let wp = ulppack::pack_weights(&wl.wgt, cont);
-
-    let mut a = Asm::new(format!("{}-W{w_bits}A{a_bits}-im2col-gemm", cont.name()), m.cfg.vlen_bits);
 
     // ---- pass 1: runtime activation packing (same as the direct path)
-    let opts = EngineOpts::default();
     if opts.runtime_weight_pack {
-        a.scalar(ScalarKind::AddrCalc, d.co * cp * d.fh * d.fw * 4);
+        let slots = d.co * cp * d.fh * d.fw * 4;
+        match hoisted_wslots.as_deref_mut() {
+            Some(h) => *h += slots as u64,
+            None => a.scalar(ScalarKind::AddrCalc, slots),
+        }
     }
-    pack_rt::emit_pack_activations(&mut a, &d, sew, x_addr, xp_addr);
+    pack_rt::emit_pack_activations(a, d, sew, x_addr, xp_addr);
 
     // ---- pass 2: im2col — stream each shifted plane row into the
     // column matrix (row-of-patches layout: K-major, N contiguous)
     let lmul_cp = a.lmul_for(2, wo as u64, sew);
-    let vlmax_cp = VType::new(sew, lmul_cp).vlmax(m.cfg.vlen_bits);
+    let vlmax_cp = VType::new(sew, lmul_cp).vlmax(a.vlen_bits());
     let mut krow = 0u64;
     for cc in 0..cp {
         for ki in 0..d.fh {
@@ -97,8 +102,7 @@ pub fn build(
     // ---- pass 3: GEMM — out[o] = sum_k w[o][k] * col[k], vmacsr'd
     // per N-strip with a narrow accumulator + wide spills
     let lmul = Lmul::M1;
-    let vlmax = VType::new(sew, lmul).vlmax(m.cfg.vlen_bits);
-    let spill_every = plan.spill_every;
+    let vlmax = VType::new(sew, lmul).vlmax(a.vlen_bits());
     // registers: acc=v0, wide=v2/3, load=v4
     for o in 0..d.co {
         for (s0, sw) in strips(n as u32, vlmax) {
@@ -146,16 +150,182 @@ pub fn build(
             a.loop_overhead();
         }
     }
+}
 
-    let out = OutputRef { addr: out_addr, elem: out_elem, len: out_len };
+/// Build the packed im2col + GEMM conv at (W, A) with `vmacsr`,
+/// staging the workload's activations host-side (the one-shot
+/// ablation path).
+pub fn build(
+    m: &mut Machine,
+    wl: &Workload,
+    w_bits: u32,
+    a_bits: u32,
+    mode: RegionMode,
+) -> Result<(Program, OutputRef), SimError> {
+    let d = wl.dims;
+    let plan = region::plan_vmacsr(w_bits, a_bits, d.issues_per_output(), mode)
+        .ok_or(SimError::Unsupported("precision pair outside every container's region"))?;
+    let cont = plan.container;
+    let sew = container_sew(cont);
+    let ew = sew.bytes() as u64;
+    let (ho, wo) = (d.ho(), d.wo());
+    let n = (ho * wo) as u64;
+    let cp = d.c / 2;
+    let k_rows = (cp * d.fh * d.fw) as u64;
+
+    // ---- stage tensors ----
+    let plane = d.h as u64 * d.w as u64;
+    let x_addr = m.mem.alloc(d.c as u64 * plane * ew, 64)?;
+    for (c, row) in wl.act.iter().enumerate() {
+        let base = x_addr + c as u64 * plane * ew;
+        for (i, &v) in row.iter().enumerate() {
+            m.mem.store_uint(base + i as u64 * ew, ew as u32, v)?;
+        }
+    }
+    let xp_addr = m.mem.alloc(cp as u64 * plane * ew, 64)?;
+    // the im2col matrix: K x N packed containers — the footprint the
+    // paper's direct kernel avoids
+    let col_addr = m.mem.alloc(k_rows * n * ew, 64)?;
+    let out_len = (d.co * ho * wo) as usize;
+    let out_addr = m.mem.alloc(out_len as u64 * 4, 64)?;
+    let wp = ulppack::pack_weights(&wl.wgt, cont);
+
+    let mut a = Asm::new(format!("{}-W{w_bits}A{a_bits}-im2col-gemm", cont.name()), m.cfg.vlen_bits);
+    let opts = EngineOpts::default();
+    emit_streams(&mut a, &d, cont, plan.spill_every, &wp, &opts, x_addr, xp_addr, col_addr, out_addr, None);
+
+    let out = OutputRef { addr: out_addr, elem: OutElem::U32, len: out_len };
     Ok((a.finish(d.macs()), out))
+}
+
+/// An im2col+GEMM stage compiled against an arena: weights baked in,
+/// activations written at runtime into `x` by the upstream boundary
+/// stage (unpacked levels, `d.c` planes at `x_sew`).
+pub(crate) struct CompiledGemm {
+    pub prog: Program,
+    /// u32 output, `co * ho * wo` elements — never freed (taps).
+    pub out: OutputRef,
+    /// The unpacked activation landing zone the boundary stage fills.
+    pub x: (u64, u64),
+    pub x_sew: Sew,
+    /// Dead once this stage has run: the packed planes + the column
+    /// matrix.  The liveness planner may hand them to later stages.
+    pub scratch: Vec<(u64, u64)>,
+    pub label: String,
+    pub container: Container,
+}
+
+/// Compile the GEMM form against `la` without staging activations —
+/// the DAG compiler's `Dense` path.  Layout mirrors [`build`]
+/// (x, xp, col, out in that order); `hoisted_wslots` accumulates the
+/// weight-pack AddrCalc slots into the program-wide prologue counter
+/// exactly like the conv engine's hoisted mode.
+pub(crate) fn compile_in_arena(
+    cfg: &ProcessorConfig,
+    wl: &Workload,
+    w_bits: u32,
+    a_bits: u32,
+    mode: RegionMode,
+    opts: &EngineOpts,
+    la: &mut LayoutAlloc,
+    hoisted_wslots: Option<&mut u64>,
+) -> Result<CompiledGemm, SimError> {
+    let d = wl.dims;
+    let plan = region::plan_vmacsr(w_bits, a_bits, d.issues_per_output(), mode)
+        .ok_or(SimError::Unsupported("precision pair outside every container's region"))?;
+    let cont = plan.container;
+    let sew = container_sew(cont);
+    let ew = sew.bytes() as u64;
+    let (ho, wo) = (d.ho(), d.wo());
+    let n = (ho * wo) as u64;
+    let cp = d.c / 2;
+    let k_rows = (cp * d.fh * d.fw) as u64;
+    let plane = d.h as u64 * d.w as u64;
+
+    let x_bytes = d.c as u64 * plane * ew;
+    let x_addr = la.alloc(x_bytes, 64);
+    let xp_bytes = cp as u64 * plane * ew;
+    let xp_addr = la.alloc(xp_bytes, 64);
+    let col_bytes = k_rows * n * ew;
+    let col_addr = la.alloc(col_bytes, 64);
+    let out_len = (d.co * ho * wo) as usize;
+    let out_addr = la.alloc(out_len as u64 * 4, 64);
+    let wp = ulppack::pack_weights(&wl.wgt, cont);
+
+    let label = format!("{}-W{w_bits}A{a_bits}-im2col-gemm", cont.name());
+    let mut a = Asm::new(label.clone(), cfg.vlen_bits);
+    emit_streams(&mut a, &d, cont, plan.spill_every, &wp, opts, x_addr, xp_addr, col_addr, out_addr, hoisted_wslots);
+
+    Ok(CompiledGemm {
+        prog: a.finish(d.macs()),
+        out: OutputRef { addr: out_addr, elem: OutElem::U32, len: out_len },
+        x: (x_addr, x_bytes),
+        x_sew: sew,
+        scratch: vec![(xp_addr, xp_bytes), (col_addr, col_bytes)],
+        label,
+        container: cont,
+    })
+}
+
+/// Host-side bit-exact mirror of the GEMM's packed accumulation: the
+/// container-wrapping narrow accumulator spilled every `spill_every`
+/// issues into a wide accumulator that itself wraps at 2x the
+/// container width (E16 for ULP, E32 for LP — the register the final
+/// store reads).  Loop order cc -> ki -> i, matching [`emit_streams`]
+/// pass 3, NOT the direct kernel's ki -> c -> i
+/// (`golden_packed_vmacsr`): inside the overflow-free region both
+/// reduce to the exact dot, outside it they wrap differently.
+pub fn golden_packed_gemm(
+    wl: &Workload,
+    w_bits: u32,
+    a_bits: u32,
+    mode: RegionMode,
+) -> Option<Vec<u64>> {
+    let d = &wl.dims;
+    let plan = region::plan_vmacsr(w_bits, a_bits, d.issues_per_output(), mode)?;
+    let cont = plan.container;
+    let spill_every = plan.spill_every;
+    let s = cont.shift();
+    let cmask = (1u64 << cont.bits()) - 1;
+    let wmask = (1u64 << (2 * cont.bits())) - 1;
+    let xp = ulppack::pack_activations(&wl.act, cont);
+    let wp = ulppack::pack_weights(&wl.wgt, cont);
+    let (ho, wo) = (d.ho() as usize, d.wo() as usize);
+    let cp = d.c as usize / 2;
+    let mut out = Vec::with_capacity(d.co as usize * ho * wo);
+    for o in 0..d.co as usize {
+        for r in 0..ho {
+            for q in 0..wo {
+                let mut wide = 0u64;
+                let mut narrow = 0u64;
+                let mut since = 0u64;
+                for cc in 0..cp {
+                    for ki in 0..d.fh as usize {
+                        for i in 0..d.fw as usize {
+                            let x = xp[cc][(r + ki) * d.w as usize + q + i];
+                            let w = wp[o][cc][ki * d.fw as usize + i];
+                            let prod = x.wrapping_mul(w) & cmask;
+                            narrow = (narrow + (prod >> s)) & cmask;
+                            since += 1;
+                            if since >= spill_every {
+                                since = 0;
+                                wide = (wide + narrow) & wmask;
+                                narrow = 0;
+                            }
+                        }
+                    }
+                }
+                out.push((wide + narrow) & wmask);
+            }
+        }
+    }
+    Some(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::ProcessorConfig;
-    use crate::kernels::workload::{golden_exact, ConvDims};
+    use crate::kernels::workload::golden_exact;
     use crate::kernels::{run_conv, ConvVariant};
 
     fn run(wl: &Workload, w: u32, a: u32) -> (Vec<i64>, crate::sim::RunReport) {
@@ -179,6 +349,113 @@ mod tests {
         let wl = Workload::random(d, 2, 2, 4);
         let (got, _) = run(&wl, 2, 2);
         assert_eq!(got, golden_exact(&wl));
+    }
+
+    #[test]
+    fn odd_channel_count_pads_with_a_zero_plane_and_matches_the_scalar_dot() {
+        // 5 real input channels padded to 6 with a zero plane — the
+        // oracle here is the raw scalar quantized dot over the 5 REAL
+        // channels only, written out by hand: a zeroed activation
+        // plane must contribute exactly nothing, whatever its weights
+        let d = ConvDims { c: 6, h: 7, w: 9, co: 3, fh: 3, fw: 3 };
+        let mut wl = Workload::random(d, 2, 2, 33);
+        for v in wl.act[5].iter_mut() {
+            *v = 0;
+        }
+        let (got, _) = run(&wl, 2, 2);
+        let mut want = Vec::new();
+        for o in 0..d.co as usize {
+            for r in 0..d.ho() as usize {
+                for q in 0..d.wo() as usize {
+                    let mut acc = 0i64;
+                    for c in 0..5usize {
+                        for ki in 0..d.fh as usize {
+                            for i in 0..d.fw as usize {
+                                let x = wl.act[c][(r + ki) * d.w as usize + q + i] as i64;
+                                let w = wl.wgt[o][c][ki * d.fw as usize + i] as i64;
+                                acc += x * w;
+                            }
+                        }
+                    }
+                    want.push(acc);
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn strict_mode_golden_mirror_reduces_to_the_exact_oracle() {
+        for (d, w, a, seed) in [
+            (ConvDims { c: 6, h: 9, w: 11, co: 2, fh: 3, fw: 3 }, 3, 3, 21),
+            (ConvDims { c: 8, h: 8, w: 10, co: 2, fh: 3, fw: 3 }, 2, 2, 4),
+        ] {
+            let wl = Workload::random(d, w, a, seed);
+            let got: Vec<i64> = golden_packed_gemm(&wl, w, a, RegionMode::Strict)
+                .unwrap()
+                .into_iter()
+                .map(|v| v as i64)
+                .collect();
+            assert_eq!(got, golden_exact(&wl));
+        }
+    }
+
+    #[test]
+    fn paper_mode_gemm_is_pinned_to_the_packed_golden_mirror() {
+        // W4A4 exists only in Paper mode; accumulation may wrap, and
+        // the host mirror must reproduce the wrap bit for bit
+        let d = ConvDims { c: 8, h: 8, w: 8, co: 2, fh: 3, fw: 3 };
+        let wl = Workload::random(d, 4, 4, 7);
+        let mut m = Machine::new(ProcessorConfig::sparq(), wl.mem_bytes() * 8);
+        let (prog, out) = build(&mut m, &wl, 4, 4, RegionMode::Paper).unwrap();
+        m.run(&prog).unwrap();
+        let got = out.read_ints(&m.mem).unwrap();
+        let want: Vec<i64> = golden_packed_gemm(&wl, 4, 4, RegionMode::Paper)
+            .unwrap()
+            .into_iter()
+            .map(|v| v as i64)
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn arena_compile_matches_the_one_shot_build() {
+        // same streams, arena-placed: execute by hand-staging x at the
+        // arena offset the boundary stage would write
+        let d = ConvDims { c: 6, h: 5, w: 5, co: 4, fh: 5, fw: 5 }; // dense-like: full extent
+        let wl = Workload::random(d, 4, 4, 11);
+        let mut la = LayoutAlloc::new();
+        let cg = compile_in_arena(
+            &ProcessorConfig::sparq(),
+            &wl,
+            4,
+            4,
+            RegionMode::Paper,
+            &EngineOpts::default(),
+            &mut la,
+            None,
+        )
+        .unwrap();
+        let mut m = Machine::new(ProcessorConfig::sparq(), (la.brk() as usize).max(1 << 16));
+        let ew = cg.x_sew.bytes() as u64;
+        let plane = (d.h * d.w) as u64;
+        for (c, row) in wl.act.iter().enumerate() {
+            for (i, &v) in row.iter().enumerate() {
+                m.mem
+                    .store_uint(cg.x.0 + (c as u64 * plane + i as u64) * ew, ew as u32, v)
+                    .unwrap();
+            }
+        }
+        m.run(&cg.prog).unwrap();
+        let got = cg.out.read_ints(&m.mem).unwrap();
+        let want: Vec<i64> = golden_packed_gemm(&wl, 4, 4, RegionMode::Paper)
+            .unwrap()
+            .into_iter()
+            .map(|v| v as i64)
+            .collect();
+        assert_eq!(got, want);
+        assert_eq!(cg.out.len, d.co as usize);
+        assert!(!cg.scratch.is_empty());
     }
 
     #[test]

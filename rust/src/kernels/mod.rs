@@ -16,12 +16,14 @@
 //! Golden models live in [`workload`]; each variant's module tests pin
 //! its outputs to them bit-for-bit.
 //!
-//! Beyond the conv variants, [`requant`] and [`pool_fc`] emit the
-//! *inter-layer* streams of the dataflow QNN executor
+//! Beyond the conv variants, [`requant`], [`eltwise`] and [`pool_fc`]
+//! emit the *inter-layer* streams of the dataflow QNN executor
 //! ([`crate::qnn::compiled::CompiledQnn`]): zero-padding + requantize
-//! + narrow at every layer boundary, 2x2 maxpool via the `vnsrl`
-//! deinterleave idiom, and the GAP+FC head — executed layers, not
-//! bytes/cycle estimates.  [`autotune`] measures the candidate
+//! + narrow at every layer boundary, the requantizing `vadd.vv`
+//! residual join, 2x2 maxpool via the `vnsrl` deinterleave idiom, and
+//! the GAP+FC head — executed layers, not bytes/cycle estimates.
+//! [`im2col_gemm`] lowers `Dense` heads as an im2col copy + packed
+//! GEMM over the same region-calculus plans.  [`autotune`] measures the candidate
 //! variants per (processor, layer shape, precision) on the simulator
 //! and memoizes the ranking in the [`ProgramCache`], so the dataflow
 //! compiler serves the fastest legal kernel per layer.
@@ -48,6 +50,7 @@ pub mod conv_fp32;
 pub mod conv_int16;
 pub mod conv_native;
 pub mod conv_vmacsr;
+pub mod eltwise;
 pub mod im2col_gemm;
 pub mod pack_rt;
 pub mod pool_fc;

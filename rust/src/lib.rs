@@ -30,15 +30,17 @@
 //!   the same cache (DESIGN.md §"Mixed precision & autotuning").
 //! * [`power`] — the GF22FDX-calibrated analytical area/power/fmax model
 //!   behind Table II.
-//! * [`qnn`] — the quantized CNN graph, its shape-chaining validation,
-//!   and the dataflow compiler ([`qnn::compiled::CompiledQnn`],
-//!   DESIGN.md §Dataflow) that turns the whole network into ONE chained
-//!   multi-layer program over a planned activation arena — per-layer
-//!   convs whose inputs rebind to the previous layer's output region,
-//!   zero-padding/requantize/maxpool/GAP+FC as real instruction
-//!   streams, cached whole in the [`ProgramCache`] under a graph-level
-//!   key.  `qnn::schedule` reads per-layer cycles off one real
-//!   end-to-end run.
+//! * [`qnn`] — the quantized CNN graph (explicit `preds` edges: chains,
+//!   residual joins, depthwise and dense-head DAGs), its DAG-aware
+//!   shape/precision validation, and the dataflow compiler
+//!   ([`qnn::compiled::CompiledQnn`], DESIGN.md §Graph programs) that
+//!   turns the whole network into ONE chained multi-layer program over
+//!   a liveness-planned activation arena — per-layer convs whose
+//!   inputs rebind to the producing layer's output region,
+//!   zero-padding/requantize/maxpool/eltwise-join/GAP+FC as real
+//!   instruction streams, cached whole in the [`ProgramCache`] under a
+//!   graph-level key.  `qnn::schedule` reads per-layer cycles off one
+//!   real end-to-end run.
 //! * [`runtime`] — artifact loading and execution backends: the PJRT
 //!   path (behind the off-by-default `pjrt` feature; the `xla` crate is
 //!   not vendored) and the simulator-backed models

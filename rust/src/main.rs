@@ -60,11 +60,15 @@ COMMANDS
   table2       lane area / power / fmax model (Ara vs Sparq)
   utilization  MFPU utilization of the baselines             [--large]
   qnn-cycles   per-layer simulated schedule                  [--precision wXaY|fp32] [--ladder]
-               (--ladder sweeps W1A1..W4A4 + mixed stem/head configs, autotuned)
+               (--ladder sweeps W1A1..W4A4, mixed stem/head, and the
+               resnetlike/mobilenetlike/denselike DAG rungs, autotuned)
   serve        batched serving demo (PJRT artifacts, or the  [--requests N] [--model NAME] [--config FILE]
                cached-program simulator backend without them) [--precision wXaY|mixed] [--batch B]
-               (--batch B serves through the batch-B compiled arena: sharded
-               queues, one batched execution per window, fill/queue metrics)
+               (--batch B serves through the batch-B compiled arena: sharded  [--topology T]
+               queues, one batched execution per window, fill/queue metrics;
+               --topology chain|resnetlike|mobilenetlike|denselike picks the
+               simulated network graph — DAG topologies compile to the same
+               one-program liveness-planned arena as the chain)
   bench-check  compare BENCH_*.json against the committed     [--baselines DIR] [--bless]
                cycle baselines (tolerance 0 on cycle fields; CI gate)
   isa          vmacsr encoding explorer                      [hex words...]
@@ -203,13 +207,14 @@ fn cmd_qnn_cycles(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Serve the whole SparqCNN on the simulator backend: the network is
-/// compiled once into a chained multi-layer dataflow program (shared
-/// program cache, graph-level key) and every request classifies
-/// through it end-to-end on a per-worker machine pool (no artifacts,
-/// no PJRT).  `--batch B` switches to the batched request path
-/// (`coordinator::QnnBatchServer`): a batch-B arena, sharded queues,
-/// one batched execution per batching window.
+/// Serve a whole network on the simulator backend: the graph picked
+/// by `--topology` (the SparqCNN chain by default, or the residual /
+/// depthwise / dense-head DAGs) is compiled once into one multi-layer
+/// dataflow program (shared program cache, graph-level key) and every
+/// request classifies through it end-to-end on a per-worker machine
+/// pool (no artifacts, no PJRT).  `--batch B` switches to the batched
+/// request path (`coordinator::QnnBatchServer`): a batch-B arena,
+/// sharded queues, one batched execution per batching window.
 fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     use sparq::kernels::ProgramCache;
     use sparq::qnn::QnnGraph;
@@ -231,9 +236,16 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     // per-layer overrides flow through the same autotuned dataflow
     // compiler as the uniform precisions.  Uniform precisions parse
     // the generic wXaY form (same syntax `qnn-cycles` accepts); bad
-    // strings error instead of silently serving a default
+    // strings error instead of silently serving a default.
+    // `--topology` swaps the served network graph — the residual,
+    // depthwise and dense-head DAGs compile through the same cached
+    // one-program path as the chain
     let prec_arg = opt(rest, "--precision").unwrap_or("w2a2");
+    let topo = opt(rest, "--topology").unwrap_or("chain");
     let (graph, precision) = if prec_arg == "mixed" {
+        if topo != "chain" {
+            return Err("--precision mixed applies to the chain topology only".into());
+        }
         (
             QnnGraph::sparq_cnn_mixed((4, 4), (2, 2)),
             QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
@@ -246,14 +258,28 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
             w_bits: w.parse().map_err(|_| "bad W bits")?,
             a_bits: a.parse().map_err(|_| "bad A bits")?,
         };
-        (QnnGraph::sparq_cnn(), precision)
+        let graph = match topo {
+            "chain" => QnnGraph::sparq_cnn(),
+            "resnetlike" => QnnGraph::sparq_resnetlike(),
+            "mobilenetlike" => QnnGraph::sparq_mobilenetlike(),
+            "denselike" => QnnGraph::sparq_denselike(),
+            other => {
+                return Err(format!(
+                    "unknown --topology '{other}' \
+                     (expected chain, resnetlike, mobilenetlike or denselike)"
+                ))
+            }
+        };
+        (graph, precision)
     };
     let cfg = sparq::ProcessorConfig::sparq();
     let cache = Arc::new(ProgramCache::new());
     let seed = sparq::qnn::schedule::DEFAULT_QNN_SEED;
 
     if batched {
-        return cmd_serve_sim_batched(&cfg, &graph, precision, seed, serve_cfg, &cache, n, prec_arg);
+        return cmd_serve_sim_batched(
+            &cfg, &graph, precision, seed, serve_cfg, &cache, n, prec_arg, topo,
+        );
     }
 
     // per-image hardware cost from the same compiled network
@@ -279,7 +305,7 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     .map_err(|e| e.to_string())?;
 
     println!(
-        "serving SparqCNN at {} on the simulated dataflow backend \
+        "serving the {topo} network at {} on the simulated dataflow backend \
          ({cyc} cycles/image), {} worker(s), {n} requests...",
         if prec_arg == "mixed" { "mixed W4A4-stem/W2A2".to_string() } else { precision.label() },
         serve_cfg.workers
@@ -335,6 +361,7 @@ fn cmd_serve_sim_batched(
     cache: &sparq::kernels::ProgramCache,
     n: usize,
     prec_arg: &str,
+    topo: &str,
 ) -> Result<(), String> {
     let server = sparq::coordinator::QnnBatchServer::start(
         cfg.clone(),
@@ -346,7 +373,7 @@ fn cmd_serve_sim_batched(
     )
     .map_err(|e| e.to_string())?;
     println!(
-        "serving SparqCNN at {} through the batch-{} arena ({} shard worker(s), window {} us), {n} requests...",
+        "serving the {topo} network at {} through the batch-{} arena ({} shard worker(s), window {} us), {n} requests...",
         if prec_arg == "mixed" { "mixed W4A4-stem/W2A2".to_string() } else { precision.label() },
         server.batch(),
         serve_cfg.workers.max(1),

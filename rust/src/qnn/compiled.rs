@@ -1,25 +1,39 @@
 //! `CompiledQnn` — the whole network compiled once into a chained
-//! multi-layer program over a single planned activation arena
-//! (DESIGN.md §Dataflow).
+//! multi-layer program over a single liveness-planned activation arena
+//! (DESIGN.md §Graph programs).
 //!
 //! Before this refactor, `qnn::schedule` was only a cost model: every
 //! conv layer ran on an independent random tensor, activations never
 //! flowed layer to layer, and maxpool/GAP+FC cycles were a fabricated
 //! bytes/cycle formula.  Now:
 //!
-//! * A layout planner walks the shape-chained graph and allocates one
-//!   arena with the same bump-allocator discipline the conv engine
-//!   uses — each conv's padded input buffer, packed-copy buffer and
-//!   wide output buffer, plus the pool/requant/logits buffers, are
-//!   fixed addresses baked into every stream.
+//! * The compiler walks the graph in its deterministic topological
+//!   order ([`QnnGraph::topo_order`]) — residual `Add` joins,
+//!   depthwise convs and `Dense` GEMM layers included, not just
+//!   straight chains — and allocates one arena through the
+//!   free-list-backed [`LayoutAlloc`]: buffers that are provably dead
+//!   (a conv's padded input and packed copy once its stage is planned,
+//!   a GEMM's column matrix, the head's level buffer) are returned to
+//!   the allocator and reused by later stages, while every layer's
+//!   output stays live to the end (the taps contract).  Straight-line
+//!   chains keep bit-identical outputs and cycles — timing is
+//!   address-independent — and every topology's high-water mark is
+//!   never larger than the append-only placement
+//!   ([`CompiledQnn::compile_append_only`] keeps that baseline
+//!   compilable for the regression tests).
 //! * Each conv layer is a [`CompiledConv`] compiled *in the arena*
 //!   (`conv_engine::compile_in_arena`) whose input region is exactly
 //!   where the previous layer's requantize stream writes — inputs
 //!   rebind to the previous layer's output region, not to host-staged
 //!   tensors.
 //! * Layer boundaries are real instruction streams: zero-padding and
-//!   requantize+narrow via [`crate::kernels::requant`], maxpool and
-//!   GAP+FC via [`crate::kernels::pool_fc`].  Nothing is estimated.
+//!   requantize+narrow via [`crate::kernels::requant`], the
+//!   requantizing `vadd.vv` residual join via
+//!   [`crate::kernels::eltwise`], maxpool and GAP+FC via
+//!   [`crate::kernels::pool_fc`], depthwise convs as C per-channel
+//!   packed sub-convs sharing one autotune entry, and `Dense` layers
+//!   as an im2col + packed GEMM ([`crate::kernels::im2col_gemm`]).
+//!   Nothing is estimated.
 //! * The compiled network is cached whole in
 //!   [`crate::kernels::ProgramCache`] under a graph-level key
 //!   (processor + layers + precision + weight seed).
@@ -50,6 +64,8 @@
 use crate::arch::ProcessorConfig;
 use crate::kernels::autotune::{self, TuneOutcome};
 use crate::kernels::conv_engine::{self, LayoutAlloc};
+use crate::kernels::eltwise;
+use crate::kernels::im2col_gemm;
 use crate::kernels::pool_fc::{self, gap_fc_host, maxpool2_host};
 use crate::kernels::requant::{self, requant_host, RequantSpec};
 use crate::kernels::workload::{golden_mod, golden_packed_vmacsr, ConvDims, OutElem, OutputRef, Workload};
@@ -58,7 +74,7 @@ use crate::qnn::graph::{padded_c, ConvPrec, LayerDesc, QnnGraph};
 use crate::qnn::schedule::{variant_for, QnnPrecision};
 use crate::sim::{CompiledProgram, Machine, Program, RunReport, SimError};
 use crate::testutil::Gen;
-use crate::ulppack::{act_level_max, region, weight_level_max, Container};
+use crate::ulppack::{act_level_max, region, weight_level_max, Container, RegionMode};
 use std::sync::Arc;
 
 /// Host-side network: the graph plus every weight tensor, all derived
@@ -72,10 +88,13 @@ pub struct QnnNet {
     /// Per-conv resolved precisions (graph order): the layer override
     /// or the network default; the stem resolves to 8-bit weights.
     pub precs: Vec<ConvPrec>,
-    /// Conv weight levels per *conv* layer (graph order), shaped
-    /// `[co][padded_c][f*f]` and drawn in the layer's *resolved*
-    /// weight range; the padded channel's weights are drawn like any
-    /// other but always multiply explicit zero activations.
+    /// Weight levels per *conv-like* layer (graph order, one entry per
+    /// `precs` row), drawn in the layer's *resolved* weight range.
+    /// Shapes: `Conv` is `[co][padded_c][f*f]`, `DepthwiseConv` is
+    /// `[c][2][f*f]` (each channel's filter plus its padded zero
+    /// channel's), `Dense` is `[c_out][padded_c][h*w]`.  Padded
+    /// channels' weights are drawn like any other but always multiply
+    /// explicit zero activations.
     pub conv_wgt: Vec<Vec<Vec<Vec<u64>>>>,
     /// FC head weight levels, `[classes][c]` (network-default W bits).
     pub fc_wgt: Vec<Vec<u64>>,
@@ -131,11 +150,38 @@ impl QnnNet {
                             .collect(),
                     );
                 }
+                LayerDesc::DepthwiseConv { c, f, .. } => {
+                    let wmax = weight_level_max(precs[pi].w_bits);
+                    pi += 1;
+                    conv_wgt.push(
+                        (0..c)
+                            .map(|_| {
+                                (0..2)
+                                    .map(|_| g.vec_below((f * f) as usize, wmax + 1))
+                                    .collect()
+                            })
+                            .collect(),
+                    );
+                }
+                LayerDesc::Dense { c_in, h, w, c_out, .. } => {
+                    let wmax = weight_level_max(precs[pi].w_bits);
+                    pi += 1;
+                    let cp = padded_c(c_in);
+                    conv_wgt.push(
+                        (0..c_out)
+                            .map(|_| {
+                                (0..cp)
+                                    .map(|_| g.vec_below((h * w) as usize, wmax + 1))
+                                    .collect()
+                            })
+                            .collect(),
+                    );
+                }
                 LayerDesc::GapFc { c, classes } => {
                     let wmax = weight_level_max(w_bits);
                     fc_wgt = (0..classes).map(|_| g.vec_below(c as usize, wmax + 1)).collect();
                 }
-                LayerDesc::MaxPool { .. } => {}
+                LayerDesc::MaxPool { .. } | LayerDesc::Add { .. } => {}
             }
         }
         Ok(QnnNet { graph: graph.clone(), precision, seed, precs, conv_wgt, fc_wgt })
@@ -152,7 +198,7 @@ impl QnnNet {
         }
     }
 
-    /// The canonical (non-tuned) variant assignment, one per conv
+    /// The canonical (non-tuned) variant assignment, one per conv-like
     /// layer: vmacsr-paper for quantized convs, int16 for the stem —
     /// what [`Self::golden_forward`] pins and what the autotuner's
     /// winner equals on Sparq.
@@ -186,50 +232,88 @@ impl QnnNet {
         self.golden_forward_with(image, &self.canonical_variants())
     }
 
-    /// [`Self::golden_forward`] under an explicit per-conv variant
-    /// assignment (one entry per conv layer, graph order): the conv
-    /// model dispatches per variant — packed-vmacsr dataflow,
+    /// [`Self::golden_forward`] under an explicit per-layer variant
+    /// assignment (one entry per conv-like layer, graph order): the
+    /// conv model dispatches per variant — packed-vmacsr dataflow,
     /// strict-exact native ULPPACK, or wrapping int16 — through the
     /// same region plans and output-element rules the compiler bakes
     /// streams with, so the boundary requant shifts cannot diverge.
+    /// The walk follows the graph's deterministic topological order,
+    /// keeping one flowing state per *node* (a DAG has live branches,
+    /// not one running value): the node's dense output, its worst-case
+    /// value, and the activation level domain its branch carries (what
+    /// a downstream residual join requantizes into).
     pub fn golden_forward_with(
         &self,
         image: &[u64],
         variants: &[ConvVariant],
     ) -> Result<GoldenTrace, SimError> {
         assert_eq!(image.len(), self.input_len(), "image length != c*h*w");
-        assert_eq!(variants.len(), self.precs.len(), "one variant per conv layer");
+        assert_eq!(variants.len(), self.precs.len(), "one variant per conv-like layer");
         let QnnPrecision::SubByte { a_bits: a_default, .. } = self.precision else {
             return Err(SimError::Unsupported("fp32 has no integer golden network"));
         };
         let amax_default = act_level_max(a_default);
-        let (c0, h0, w0) = self.graph.input;
 
-        // the flowing value: dense levels (conv inputs are re-padded
-        // per layer) or dense sums; bookkeeping mirrors the compiler.
-        // Out-of-range input levels clamp exactly like `execute` does.
-        let mut levels: Vec<u64> = image.iter().map(|&v| v.min(amax_default)).collect();
-        let mut dims = (c0, h0, w0);
-        let mut max_val = amax_default;
-        let mut is_levels = true;
-        let mut conv_ix = 0usize;
-        let mut layer_outs = Vec::new();
+        /// One node's flowing output (mirrors the compiler's `Flow`).
+        #[derive(Clone)]
+        struct GNode {
+            vals: Vec<u64>,
+            dims: (u32, u32, u32),
+            max_val: u64,
+            is_levels: bool,
+            /// Activation level domain of this branch (a conv's own
+            /// resolved `a_bits`; joins preserve it) — what `Add`
+            /// requantizes both branches into.
+            domain: u32,
+        }
+        // out-of-range input levels clamp exactly like `execute` does
+        let input_node = GNode {
+            vals: image.iter().map(|&v| v.min(amax_default)).collect(),
+            dims: self.graph.input,
+            max_val: amax_default,
+            is_levels: true,
+            domain: a_default,
+        };
+        let order = self.graph.topo_order().map_err(|e| SimError::Graph(e.to_string()))?;
+        let n = self.graph.layers.len();
+        let mut nodes: Vec<Option<GNode>> = vec![None; n];
+        let mut layer_outs: Vec<Vec<i64>> = vec![Vec::new(); n];
         let mut logits: Vec<i64> = Vec::new();
+        let prec_ix_of =
+            |li: usize| self.precs.iter().position(|p| p.layer == li).expect("precs cover layer");
+        // requantize a producer's output into `a_bits` levels on entry
+        // to a consumer (identity when it is already levels — the raw
+        // input image, which `execute` stages pre-clamped)
+        let entry_levels = |s: &GNode, a_bits: u32| -> Vec<u64> {
+            if s.is_levels {
+                s.vals.clone()
+            } else {
+                let rs = requant::rshift_for(s.max_val, a_bits);
+                let amax_l = act_level_max(a_bits);
+                s.vals.iter().map(|&v| requant_host(v, rs, amax_l)).collect()
+            }
+        };
 
-        for layer in &self.graph.layers {
+        for &li in &order {
+            let layer = &self.graph.layers[li];
+            let ps = self.graph.preds_of(li);
+            // clone the (first) producer's state — the graph input for
+            // the root node
+            let src = match ps.first() {
+                Some(&p) => nodes[p].clone().expect("topo order visits producers first"),
+                None => input_node.clone(),
+            };
             match *layer {
                 LayerDesc::Conv { c_in, c_out, h, w, f, .. } => {
-                    let p = self.precs[conv_ix];
-                    let variant = variants[conv_ix];
+                    let cix = prec_ix_of(li);
+                    let p = self.precs[cix];
+                    let variant = variants[cix];
                     // the boundary requantizes to THIS consumer's
                     // resolved activation width — re-derived per
                     // adjacent precision pair in a mixed graph
                     let amax_l = act_level_max(p.a_bits);
-                    if !is_levels {
-                        let rs = requant::rshift_for(max_val, p.a_bits);
-                        levels = levels.iter().map(|&v| requant_host(v, rs, amax_l)).collect();
-                        is_levels = true;
-                    }
+                    let levels = entry_levels(&src, p.a_bits);
                     let cp = padded_c(c_in);
                     let pad = (f - 1) / 2;
                     let (hp, wp) = (h + f - 1, w + f - 1);
@@ -250,7 +334,7 @@ impl QnnNet {
                         w_bits: wb,
                         a_bits: ab,
                         act,
-                        wgt: self.conv_wgt[conv_ix].clone(),
+                        wgt: self.conv_wgt[cix].clone(),
                         act_f32: vec![],
                         wgt_f32: vec![],
                     };
@@ -260,31 +344,149 @@ impl QnnNet {
                     // resolves through, so the boundary rshift cannot
                     // diverge)
                     let (out, out_el) = golden_conv(&wl, variant)?;
-                    layer_outs.push(out.clone());
-                    levels = out.iter().map(|&v| v as u64).collect();
-                    dims = (c_out, h, w);
-                    max_val =
-                        conv_out_max(c_in, f, amax_l, weight_level_max(p.w_bits), out_el);
-                    is_levels = false;
-                    conv_ix += 1;
+                    let vals = out.iter().map(|&v| v as u64).collect();
+                    layer_outs[li] = out;
+                    nodes[li] = Some(GNode {
+                        vals,
+                        dims: (c_out, h, w),
+                        max_val: conv_out_max(c_in, f, amax_l, weight_level_max(p.w_bits), out_el),
+                        is_levels: false,
+                        domain: p.a_bits,
+                    });
+                }
+                LayerDesc::DepthwiseConv { c, h, w, f, .. } => {
+                    let cix = prec_ix_of(li);
+                    let p = self.precs[cix];
+                    let variant = variants[cix];
+                    let amax_l = act_level_max(p.a_bits);
+                    let levels = entry_levels(&src, p.a_bits);
+                    let pad = (f - 1) / 2;
+                    let (hp, wp) = (h + f - 1, w + f - 1);
+                    let d = ConvDims { c: 2, h: hp, w: wp, co: 1, fh: f, fw: f };
+                    let (wb, ab) = variant.bits();
+                    // C per-channel sub-convs: the channel's padded
+                    // plane paired with an explicit zero channel,
+                    // exactly the group the compiler lowers to
+                    let mut out: Vec<i64> = Vec::with_capacity((c * h * w) as usize);
+                    let mut out_el = OutElem::U16;
+                    for ch in 0..c as usize {
+                        let mut act = vec![vec![0u64; (hp * wp) as usize]; 2];
+                        for r in 0..h as usize {
+                            for q in 0..w as usize {
+                                act[0][(r + pad as usize) * wp as usize + q + pad as usize] =
+                                    levels[(ch * h as usize + r) * w as usize + q];
+                            }
+                        }
+                        let wl = Workload {
+                            dims: d,
+                            w_bits: wb,
+                            a_bits: ab,
+                            act,
+                            wgt: vec![self.conv_wgt[cix][ch].clone()],
+                            act_f32: vec![],
+                            wgt_f32: vec![],
+                        };
+                        let (o, el) = golden_conv(&wl, variant)?;
+                        out_el = el;
+                        out.extend(o);
+                    }
+                    let vals = out.iter().map(|&v| v as u64).collect();
+                    layer_outs[li] = out;
+                    nodes[li] = Some(GNode {
+                        vals,
+                        dims: (c, h, w),
+                        // one real channel contributes per output
+                        max_val: conv_out_max(1, f, amax_l, weight_level_max(p.w_bits), out_el),
+                        is_levels: false,
+                        domain: p.a_bits,
+                    });
+                }
+                LayerDesc::Dense { c_in, h, w, c_out, .. } => {
+                    let cix = prec_ix_of(li);
+                    let p = self.precs[cix];
+                    let variant = variants[cix];
+                    let ConvVariant::Vmacsr { mode, .. } = variant else {
+                        return Err(SimError::Unsupported(
+                            "dense layers are vmacsr-only (im2col GEMM)",
+                        ));
+                    };
+                    let amax_l = act_level_max(p.a_bits);
+                    let levels = entry_levels(&src, p.a_bits);
+                    let cp = padded_c(c_in);
+                    let plane = (h * w) as usize;
+                    // full-extent 'valid' conv: no spatial padding,
+                    // explicit zero channel when c_in is odd
+                    let mut act = vec![vec![0u64; plane]; cp as usize];
+                    for ch in 0..c_in as usize {
+                        act[ch].copy_from_slice(&levels[ch * plane..(ch + 1) * plane]);
+                    }
+                    let d = ConvDims { c: cp, h, w, co: c_out, fh: h, fw: w };
+                    let (wb, ab) = variant.bits();
+                    let wl = Workload {
+                        dims: d,
+                        w_bits: wb,
+                        a_bits: ab,
+                        act,
+                        wgt: self.conv_wgt[cix].clone(),
+                        act_f32: vec![],
+                        wgt_f32: vec![],
+                    };
+                    // the GEMM's own accumulation-order mirror, NOT the
+                    // direct kernel's (they wrap differently outside
+                    // the overflow-free region)
+                    let vals = im2col_gemm::golden_packed_gemm(&wl, wb, ab, mode).ok_or(
+                        SimError::Unsupported("precision pair outside every container's region"),
+                    )?;
+                    layer_outs[li] = vals.iter().map(|&v| v as i64).collect();
+                    nodes[li] = Some(GNode {
+                        vals,
+                        dims: (c_out, 1, 1),
+                        max_val: dense_out_max(c_in, h * w, amax_l, weight_level_max(p.w_bits)),
+                        is_levels: false,
+                        domain: p.a_bits,
+                    });
+                }
+                LayerDesc::Add { c, h, w } => {
+                    let b_src =
+                        nodes[ps[1]].clone().expect("topo order visits producers first");
+                    // validate_for checked the branch domains agree
+                    let dom = src.domain;
+                    let amax_j = act_level_max(dom);
+                    let ra = requant_host_shift(src.is_levels, src.max_val, dom);
+                    let rb = requant_host_shift(b_src.is_levels, b_src.max_val, dom);
+                    let vals: Vec<u64> = src
+                        .vals
+                        .iter()
+                        .zip(&b_src.vals)
+                        .map(|(&va, &vb)| eltwise::add_requant_host(va, ra, vb, rb, amax_j))
+                        .collect();
+                    layer_outs[li] = vals.iter().map(|&v| v as i64).collect();
+                    nodes[li] = Some(GNode {
+                        vals,
+                        dims: (c, h, w),
+                        max_val: 2 * amax_j,
+                        is_levels: false,
+                        domain: dom,
+                    });
                 }
                 LayerDesc::MaxPool { c, h, w } => {
-                    let vals: Vec<i64> = levels.iter().map(|&v| v as i64).collect();
+                    let vals: Vec<i64> = src.vals.iter().map(|&v| v as i64).collect();
                     let out = maxpool2_host(&vals, c, h, w);
-                    layer_outs.push(out.clone());
-                    levels = out.iter().map(|&v| v as u64).collect();
-                    dims = (c, h / 2, w / 2);
+                    let vals = out.iter().map(|&v| v as u64).collect();
+                    layer_outs[li] = out;
+                    nodes[li] = Some(GNode { vals, dims: (c, h / 2, w / 2), ..src });
                 }
                 LayerDesc::GapFc { c, .. } => {
                     // the head's level domain is the network default
-                    let rshift = requant_host_shift(is_levels, max_val, a_default);
-                    let lv: Vec<i64> = levels
+                    let rshift = requant_host_shift(src.is_levels, src.max_val, a_default);
+                    let lv: Vec<i64> = src
+                        .vals
                         .iter()
                         .map(|&v| requant_host(v, rshift, amax_default) as i64)
                         .collect();
-                    let hw = dims.1 * dims.2;
+                    let hw = src.dims.1 * src.dims.2;
                     logits = gap_fc_host(&lv, c, hw, &self.fc_wgt);
-                    layer_outs.push(logits.clone());
+                    layer_outs[li] = logits.clone();
                 }
             }
         }
@@ -343,6 +545,45 @@ fn conv_out_max(c_in: u32, f: u32, amax_in: u64, wmax: u64, out_el: OutElem) -> 
     (c_in as u64 * (f * f) as u64 * amax_in * wmax).min(elem_cap(out_el))
 }
 
+/// [`conv_out_max`] for a `Dense` layer: a full-extent reduction over
+/// `c_in` planes of `hw` levels each, always into u32 output elements.
+fn dense_out_max(c_in: u32, hw: u32, amax_in: u64, wmax: u64) -> u64 {
+    (c_in as u64 * hw as u64 * amax_in * wmax).min(elem_cap(OutElem::U32))
+}
+
+/// The autotuner pick for one conv-like layer: the fastest measured
+/// candidate that (a) preserves the layer's canonical OUTPUT element
+/// width — so the chain the validator checked is exactly the chain
+/// that compiles, layer by layer — and (b) loads its input at a width
+/// the producer's (canonical-width) output can narrow to in one
+/// `vnsrl` step.  The canonical candidate itself always satisfies
+/// both, so whenever it compiles (it is in every ranking) a pick
+/// exists.
+fn pick_chained(
+    outcome: &TuneOutcome,
+    d: ConvDims,
+    canon_out: u32,
+    prev: Option<crate::isa::Sew>,
+) -> Result<ConvVariant, SimError> {
+    outcome
+        .ranked
+        .iter()
+        .find(|c| match autotune::variant_io(c.variant, d) {
+            Some((in_sew, out_el)) => {
+                // (plain match, not Option::is_none_or: that API needs
+                // Rust 1.82 and the MSRV gate builds at 1.75)
+                out_bits(out_el) == canon_out
+                    && match prev {
+                        None => true,
+                        Some(pv) => in_sew == pv || in_sew.widened() == Some(pv),
+                    }
+            }
+            None => false,
+        })
+        .map(|c| c.variant)
+        .ok_or(SimError::Unsupported("no tuned conv variant chains at this layer boundary"))
+}
+
 /// Requant shift on entry to a consumer: identity for values that are
 /// already levels, `rshift_for` on wide sums.
 fn requant_host_shift(is_levels: bool, max_val: u64, a_bits: u32) -> u32 {
@@ -368,9 +609,16 @@ pub enum StageKind {
     /// Inter-layer boundary: zero-fill + requantize + place.
     Boundary(StageProg),
     /// The conv layer proper (arena-compiled; its input region is the
-    /// previous boundary stream's destination — the rebind).
+    /// previous boundary stream's destination — the rebind).  A
+    /// depthwise layer contributes C of these, one per channel.
     Conv(Box<CompiledConv>),
     Pool(StageProg),
+    /// The requantizing `vadd.vv` residual join
+    /// ([`crate::kernels::eltwise`]).
+    Eltwise(StageProg),
+    /// A `Dense` layer's im2col + packed GEMM stream
+    /// ([`crate::kernels::im2col_gemm`], arena-compiled).
+    Gemm(StageProg),
     GapFc(StageProg),
 }
 
@@ -387,9 +635,11 @@ impl QnnStage {
     fn parts(&self) -> (&Program, Option<&CompiledProgram>) {
         match &self.kind {
             StageKind::Conv(cc) => (&cc.prog, cc.compiled.as_ref()),
-            StageKind::Boundary(p) | StageKind::Pool(p) | StageKind::GapFc(p) => {
-                (&p.prog, p.compiled.as_ref())
-            }
+            StageKind::Boundary(p)
+            | StageKind::Pool(p)
+            | StageKind::Eltwise(p)
+            | StageKind::Gemm(p)
+            | StageKind::GapFc(p) => (&p.prog, p.compiled.as_ref()),
         }
     }
 
@@ -548,7 +798,9 @@ impl QnnBatchRun {
 /// memory growth; serving configs validate against it).
 pub const MAX_BATCH: u32 = 64;
 
-/// The flowing inter-layer value during compilation: dense wide sums.
+/// One node's flowing output during compilation: its dense wide sums
+/// in the arena.  The DAG walk keeps one per *layer* (branches feeding
+/// a residual join stay live side by side), indexed by graph layer.
 #[derive(Clone, Copy)]
 struct Flow {
     addr: u64,
@@ -557,6 +809,10 @@ struct Flow {
     h: u32,
     w: u32,
     max_val: u64,
+    /// Activation level domain of this branch (the producing conv's
+    /// resolved `a_bits`; pools inherit it, joins preserve it) — what
+    /// an `Add` consumer requantizes both branches into.
+    domain: u32,
 }
 
 impl CompiledQnn {
@@ -588,7 +844,22 @@ impl CompiledQnn {
         cache: &ProgramCache,
         policy: VariantPolicy,
     ) -> Result<CompiledQnn, SimError> {
-        Self::compile_full(cfg, net, cache, policy, None)
+        Self::compile_full(cfg, net, cache, policy, None, true)
+    }
+
+    /// [`Self::compile_tuned`] with the pre-liveness append-only arena
+    /// placement: every buffer at a fresh offset, no dead-range reuse.
+    /// Streams execute with bit-identical outputs and cycle counts to
+    /// the liveness layout (timing is address-independent) — only the
+    /// addresses and the arena high-water mark ([`Self::slot_stride`])
+    /// differ.  Kept compilable as the baseline the arena-liveness
+    /// regression tests compare against.
+    pub fn compile_append_only(
+        cfg: &ProcessorConfig,
+        net: QnnNet,
+        cache: &ProgramCache,
+    ) -> Result<CompiledQnn, SimError> {
+        Self::compile_full(cfg, net, cache, VariantPolicy::Autotuned, None, false)
     }
 
     /// Compile the network with a batch-`batch` arena: one shared
@@ -602,7 +873,7 @@ impl CompiledQnn {
         cache: &ProgramCache,
         batch: u32,
     ) -> Result<CompiledQnn, SimError> {
-        Self::compile_full(cfg, net, cache, VariantPolicy::Autotuned, Some(batch))
+        Self::compile_full(cfg, net, cache, VariantPolicy::Autotuned, Some(batch), true)
     }
 
     fn compile_full(
@@ -611,6 +882,7 @@ impl CompiledQnn {
         cache: &ProgramCache,
         policy: VariantPolicy,
         batch: Option<u32>,
+        liveness: bool,
     ) -> Result<CompiledQnn, SimError> {
         use crate::isa::Sew;
         if let Some(b) = batch {
@@ -641,35 +913,47 @@ impl CompiledQnn {
             Some(_) => EngineOpts { runtime_weight_pack: false, ..opts },
             None => opts,
         };
-        let mut la = LayoutAlloc::new();
+        // liveness planning: dead buffers return to the free list and
+        // later stages reuse them; the append-only baseline never does
+        let mut la = if liveness { LayoutAlloc::new() } else { LayoutAlloc::append_only() };
+        let order =
+            net.graph.topo_order().map_err(|e| SimError::Graph(e.to_string()))?;
+        let n = net.graph.layers.len();
         let mut stages: Vec<QnnStage> = Vec::new();
-        let mut taps: Vec<LayerTap> = Vec::new();
-        let mut variants: Vec<ConvVariant> = Vec::new();
-        let mut tuned: Vec<Option<Arc<TuneOutcome>>> = Vec::new();
-        let mut flow: Option<Flow> = None;
+        // per-layer results, indexed by graph position (the walk runs
+        // in topo order, which may differ on a DAG)
+        let mut taps: Vec<Option<LayerTap>> = vec![None; n];
+        let mut variants: Vec<Option<ConvVariant>> = vec![None; net.precs.len()];
+        let mut tuned: Vec<Option<Arc<TuneOutcome>>> = vec![None; net.precs.len()];
+        // one flowing output per *node*: residual branches stay live
+        // side by side until their join consumes them
+        let mut flows: Vec<Option<Flow>> = vec![None; n];
         let mut input: Option<InputDesc> = None;
         let mut logits: Option<OutputRef> = None;
-        let mut conv_ix = 0usize;
         // batched layout: weight-pack scalar slots hoisted out of the
         // conv streams into one per-batch preamble
         let mut hoisted = 0u64;
+        let prec_ix_of = |li: usize| {
+            net.precs
+                .iter()
+                .position(|p| p.layer == li)
+                .expect("conv_precisions covers every conv-like layer")
+        };
 
-        for (li, layer) in net.graph.layers.iter().enumerate() {
+        for &li in &order {
+            let layer = &net.graph.layers[li];
+            let ps = net.graph.preds_of(li);
+            let inflow: Option<Flow> =
+                ps.first().map(|&p| flows[p].expect("topo order visits producers first"));
             match *layer {
                 LayerDesc::Conv { c_in, c_out, h, w, f, .. } => {
-                    let p = net.precs[conv_ix];
+                    let cix = prec_ix_of(li);
+                    let p = net.precs[cix];
                     let cp = padded_c(c_in);
                     let pad = (f - 1) / 2;
                     let d = ConvDims { c: cp, h: h + f - 1, w: w + f - 1, co: c_out, fh: f, fw: f };
                     // pick the layer's kernel: the fastest measured
-                    // variant that (a) preserves the layer's canonical
-                    // OUTPUT element width — so the chain the validator
-                    // checked is exactly the chain that compiles, layer
-                    // by layer — and (b) loads its input at a width the
-                    // previous (canonical-width) output can narrow to in
-                    // one step.  The canonical candidate itself always
-                    // satisfies both, so whenever it compiles (it is in
-                    // every ranking) a pick exists.
+                    // chain-legal variant (see `pick_chained`)
                     let (variant, outcome) = match policy {
                         VariantPolicy::AllInt16 => (ConvVariant::Int16, None),
                         VariantPolicy::Autotuned => {
@@ -688,30 +972,9 @@ impl CompiledQnn {
                             } else {
                                 16 // int16 stem: wrapping u16 sums
                             };
-                            let prev = flow.map(|fl| fl.sew);
-                            let pick = outcome
-                                .ranked
-                                .iter()
-                                .find(|c| match autotune::variant_io(c.variant, d) {
-                                    Some((in_sew, out_el)) => {
-                                        // (plain match, not Option::is_none_or:
-                                        // that API needs Rust 1.82 and the MSRV
-                                        // gate builds at 1.75)
-                                        out_bits(out_el) == canon_out
-                                            && match prev {
-                                                None => true,
-                                                Some(pv) => {
-                                                    in_sew == pv
-                                                        || in_sew.widened() == Some(pv)
-                                                }
-                                            }
-                                    }
-                                    None => false,
-                                })
-                                .ok_or(SimError::Unsupported(
-                                    "no tuned conv variant chains at this layer boundary",
-                                ))?;
-                            (pick.variant, Some(Arc::clone(&outcome)))
+                            let pick =
+                                pick_chained(&outcome, d, canon_out, inflow.map(|fl| fl.sew))?;
+                            (pick, Some(Arc::clone(&outcome)))
                         }
                     };
                     let (wb, ab) = variant.bits();
@@ -720,7 +983,7 @@ impl CompiledQnn {
                         w_bits: wb,
                         a_bits: ab,
                         act: vec![vec![0; (d.h * d.w) as usize]; cp as usize],
-                        wgt: net.conv_wgt[conv_ix].clone(),
+                        wgt: net.conv_wgt[cix].clone(),
                         act_f32: vec![],
                         wgt_f32: vec![],
                     };
@@ -749,7 +1012,7 @@ impl CompiledQnn {
                     // this consumer's resolved activation width: the
                     // boundary requant is re-derived per adjacent pair
                     let amax_l = act_level_max(p.a_bits);
-                    match flow {
+                    match inflow {
                         None => {
                             // layer 0: the host stages the image here
                             input = Some(InputDesc {
@@ -795,22 +1058,28 @@ impl CompiledQnn {
                     // shift below the wide element width for any graph
                     let max_val =
                         conv_out_max(c_in, f, amax_l, weight_level_max(p.w_bits), out.elem);
-                    flow = Some(Flow {
+                    flows[li] = Some(Flow {
                         addr: out.addr,
                         sew: out_sew(out.elem),
                         c: c_out,
                         h,
                         w,
                         max_val,
+                        domain: p.a_bits,
                     });
-                    taps.push(LayerTap { out });
+                    taps[li] = Some(LayerTap { out });
+                    // the padded input and packed copy die once this
+                    // stage has run; the output (a tap) stays live
+                    let scratch = cc.scratch_regions();
                     stages.push(QnnStage { layer: li, kind: StageKind::Conv(Box::new(cc)) });
-                    variants.push(variant);
-                    tuned.push(outcome);
-                    conv_ix += 1;
+                    for (base, bytes) in scratch {
+                        la.free(base, bytes);
+                    }
+                    variants[cix] = Some(variant);
+                    tuned[cix] = outcome;
                 }
                 LayerDesc::MaxPool { c, h, w } => {
-                    let fl = flow.ok_or(SimError::Unsupported(
+                    let fl = inflow.ok_or(SimError::Unsupported(
                         "the dataflow executor needs a conv before the first pool",
                     ))?;
                     let eb = fl.sew.bytes() as u64;
@@ -826,12 +1095,264 @@ impl CompiledQnn {
                     let p = stage_prog(a.finish(0), cfg);
                     stages.push(QnnStage { layer: li, kind: StageKind::Pool(p) });
                     let out = OutputRef { addr: dst, elem: out_elem(fl.sew), len: out_len as usize };
-                    taps.push(LayerTap { out });
-                    flow = Some(Flow { addr: dst, sew: fl.sew, c, h: h / 2, w: w / 2, ..fl });
+                    taps[li] = Some(LayerTap { out });
+                    flows[li] = Some(Flow { addr: dst, sew: fl.sew, c, h: h / 2, w: w / 2, ..fl });
+                }
+                LayerDesc::Add { c, h, w } => {
+                    let fa = flows[ps[0]].expect("topo order visits producers first");
+                    let fb = flows[ps[1]].expect("topo order visits producers first");
+                    // the common level domain both branches requantize
+                    // into (validate_for checked they agree)
+                    let dom = fa.domain;
+                    let amax_j = act_level_max(dom);
+                    let len = c as u64 * h as u64 * w as u64;
+                    let dst = la.alloc(len * 2, 64);
+                    let spec = eltwise::AddSpec {
+                        a_src: fa.addr,
+                        a_sew: fa.sew,
+                        a_rshift: requant::rshift_for(fa.max_val, dom),
+                        b_src: fb.addr,
+                        b_sew: fb.sew,
+                        b_rshift: requant::rshift_for(fb.max_val, dom),
+                        amax: amax_j,
+                        dst,
+                        len: len as u32,
+                    };
+                    let mut a = Asm::new("add-join-vec", cfg.vlen_bits);
+                    eltwise::emit_add_requant(&mut a, &spec);
+                    stages.push(QnnStage {
+                        layer: li,
+                        kind: StageKind::Eltwise(stage_prog(a.finish(0), cfg)),
+                    });
+                    let out = OutputRef { addr: dst, elem: OutElem::U16, len: len as usize };
+                    taps[li] = Some(LayerTap { out });
+                    // joined levels are bounded by 2*amax; the consumer's
+                    // ordinary boundary requant renormalizes them
+                    flows[li] = Some(Flow {
+                        addr: dst,
+                        sew: Sew::E16,
+                        c,
+                        h,
+                        w,
+                        max_val: 2 * amax_j,
+                        domain: dom,
+                    });
+                }
+                LayerDesc::DepthwiseConv { c, h, w, f, .. } => {
+                    let cix = prec_ix_of(li);
+                    let p = net.precs[cix];
+                    let fl = inflow.ok_or(SimError::Unsupported(
+                        "the dataflow executor needs a conv as the first layer",
+                    ))?;
+                    let pad = (f - 1) / 2;
+                    // C per-channel sub-convs over one padded channel
+                    // pair (the real plane + an explicit zero channel),
+                    // all sharing ONE autotune entry for these dims
+                    let d = ConvDims { c: 2, h: h + f - 1, w: w + f - 1, co: 1, fh: f, fw: f };
+                    let (variant, outcome) = match policy {
+                        VariantPolicy::AllInt16 => (ConvVariant::Int16, None),
+                        VariantPolicy::Autotuned => {
+                            let outcome = autotune::autotune_conv(
+                                cache, cfg, d, p.w_bits, p.a_bits, true, tune_opts,
+                            )?;
+                            let canon_out = crate::qnn::graph::canonical_widths(
+                                cfg,
+                                p.w_bits,
+                                p.a_bits,
+                                d.issues_per_output(),
+                            )
+                            .expect("validate_for admitted this layer's precision")
+                            .1;
+                            let pick = pick_chained(&outcome, d, canon_out, Some(fl.sew))?;
+                            (pick, Some(Arc::clone(&outcome)))
+                        }
+                    };
+                    let (wb, ab) = variant.bits();
+                    let (in_sew, out_el) = autotune::variant_io(variant, d)
+                        .ok_or(SimError::Unsupported("precision pair outside every container's region"))?;
+                    if !(fl.sew == in_sew || in_sew.widened() == Some(fl.sew)) {
+                        return Err(SimError::Unsupported(
+                            "layer boundary narrows by more than one element width",
+                        ));
+                    }
+                    let amax_l = act_level_max(p.a_bits);
+                    let rshift = requant::rshift_for(fl.max_val, p.a_bits);
+                    let plane = h as u64 * w as u64;
+                    let outb = out_sew(out_el).bytes() as u64;
+                    let src_eb = fl.sew.bytes() as u64;
+                    // one contiguous per-channel output block: channel
+                    // ch's sub-conv output is placed at its dense slot,
+                    // so the layer's tap reads like any conv's
+                    let out_base = la.alloc(c as u64 * plane * outb, 64);
+                    let mut bnd =
+                        Asm::new(format!("boundary->{}", layer.name()), cfg.vlen_bits);
+                    let mut ccs: Vec<CompiledConv> = Vec::with_capacity(c as usize);
+                    let mut scratch: Vec<(u64, u64)> = Vec::new();
+                    for ch in 0..c {
+                        let wl = Workload {
+                            dims: d,
+                            w_bits: wb,
+                            a_bits: ab,
+                            act: vec![vec![0; (d.h * d.w) as usize]; 2],
+                            wgt: vec![net.conv_wgt[cix][ch as usize].clone()],
+                            act_f32: vec![],
+                            wgt_f32: vec![],
+                        };
+                        let (inner, label) = variant.planned_inner(&wl)?;
+                        let cc = conv_engine::compile_in_arena_placed(
+                            cfg,
+                            &wl,
+                            inner,
+                            opts,
+                            label,
+                            &mut la,
+                            out_base + ch as u64 * plane * outb,
+                            match batch {
+                                Some(_) => Some(&mut hoisted),
+                                None => None,
+                            },
+                        )?;
+                        debug_assert_eq!(cc.input_elem_bytes(), in_sew.bytes() as u64);
+                        let (x_addr, _) = cc.input_region();
+                        // this channel's slice of the producer plane,
+                        // requantized into the sub-conv's 2-channel
+                        // padded input (channel 1 stays zero-filled)
+                        let spec = RequantSpec {
+                            src: fl.addr + ch as u64 * plane * src_eb,
+                            src_sew: fl.sew,
+                            c: 1,
+                            h,
+                            w,
+                            dst: x_addr,
+                            dst_sew: in_sew,
+                            c_pad: 2,
+                            pad,
+                            rshift,
+                            amax: amax_l,
+                        };
+                        requant::emit_requant(&mut bnd, &spec);
+                        scratch.extend(cc.scratch_regions());
+                        ccs.push(cc);
+                    }
+                    stages.push(boundary_stage(li, bnd.finish(0), cfg));
+                    for cc in ccs {
+                        stages.push(QnnStage { layer: li, kind: StageKind::Conv(Box::new(cc)) });
+                    }
+                    for (base, bytes) in scratch {
+                        la.free(base, bytes);
+                    }
+                    let out = OutputRef {
+                        addr: out_base,
+                        elem: out_el,
+                        len: (c as u64 * plane) as usize,
+                    };
+                    taps[li] = Some(LayerTap { out });
+                    flows[li] = Some(Flow {
+                        addr: out_base,
+                        sew: out_sew(out_el),
+                        c,
+                        h,
+                        w,
+                        // one real channel contributes per output
+                        max_val: conv_out_max(1, f, amax_l, weight_level_max(p.w_bits), out_el),
+                        domain: p.a_bits,
+                    });
+                    variants[cix] = Some(variant);
+                    tuned[cix] = outcome;
+                }
+                LayerDesc::Dense { c_in, h, w, c_out, .. } => {
+                    let cix = prec_ix_of(li);
+                    let p = net.precs[cix];
+                    let fl = inflow.ok_or(SimError::Unsupported(
+                        "the dataflow executor needs a conv as the first layer",
+                    ))?;
+                    if policy == VariantPolicy::AllInt16 {
+                        return Err(SimError::Unsupported(
+                            "dense layers are vmacsr-only (im2col GEMM has no int16 form)",
+                        ));
+                    }
+                    let cp = padded_c(c_in);
+                    let d = ConvDims { c: cp, h, w, co: c_out, fh: h, fw: w };
+                    let wl = Workload {
+                        dims: d,
+                        w_bits: p.w_bits,
+                        a_bits: p.a_bits,
+                        act: vec![vec![0; (h * w) as usize]; cp as usize],
+                        wgt: net.conv_wgt[cix].clone(),
+                        act_f32: vec![],
+                        wgt_f32: vec![],
+                    };
+                    let cg = im2col_gemm::compile_in_arena(
+                        cfg,
+                        &wl,
+                        p.w_bits,
+                        p.a_bits,
+                        RegionMode::Paper,
+                        &opts,
+                        &mut la,
+                        match batch {
+                            Some(_) => Some(&mut hoisted),
+                            None => None,
+                        },
+                    )?;
+                    let in_sew = cg.x_sew;
+                    if !(fl.sew == in_sew || in_sew.widened() == Some(fl.sew)) {
+                        return Err(SimError::Unsupported(
+                            "layer boundary narrows by more than one element width",
+                        ));
+                    }
+                    let amax_l = act_level_max(p.a_bits);
+                    // boundary requant into the GEMM's unpacked landing
+                    // zone: dense planes, no spatial padding, explicit
+                    // zero channel when c_in is odd
+                    let spec = RequantSpec {
+                        src: fl.addr,
+                        src_sew: fl.sew,
+                        c: fl.c,
+                        h: fl.h,
+                        w: fl.w,
+                        dst: cg.x.0,
+                        dst_sew: in_sew,
+                        c_pad: cp,
+                        pad: 0,
+                        rshift: requant::rshift_for(fl.max_val, p.a_bits),
+                        amax: amax_l,
+                    };
+                    let mut a =
+                        Asm::new(format!("boundary->{}", layer.name()), cfg.vlen_bits);
+                    requant::emit_requant(&mut a, &spec);
+                    stages.push(boundary_stage(li, a.finish(0), cfg));
+                    let out = cg.out;
+                    stages.push(QnnStage {
+                        layer: li,
+                        kind: StageKind::Gemm(stage_prog(cg.prog, cfg)),
+                    });
+                    // the landing zone, packed planes and column matrix
+                    // all die with this stage; the output is a tap
+                    la.free(cg.x.0, cg.x.1);
+                    for (base, bytes) in cg.scratch {
+                        la.free(base, bytes);
+                    }
+                    taps[li] = Some(LayerTap { out });
+                    flows[li] = Some(Flow {
+                        addr: out.addr,
+                        sew: Sew::E32,
+                        c: c_out,
+                        h: 1,
+                        w: 1,
+                        max_val: dense_out_max(c_in, h * w, amax_l, weight_level_max(p.w_bits)),
+                        domain: p.a_bits,
+                    });
+                    variants[cix] = Some(ConvVariant::Vmacsr {
+                        w_bits: p.w_bits,
+                        a_bits: p.a_bits,
+                        mode: RegionMode::Paper,
+                    });
+                    tuned[cix] = None;
                 }
                 LayerDesc::GapFc { c, classes } => {
                     use crate::isa::Sew;
-                    let fl = flow.ok_or(SimError::Unsupported(
+                    let fl = inflow.ok_or(SimError::Unsupported(
                         "the dataflow executor needs a conv before the head",
                     ))?;
                     if classes > 4 {
@@ -884,8 +1405,11 @@ impl CompiledQnn {
                     pool_fc::emit_gap_fc(&mut a, c, hw, Sew::E16, lv_addr, &net.fc_wgt, lg_addr);
                     let p = stage_prog(a.finish(layer.macs()), cfg);
                     stages.push(QnnStage { layer: li, kind: StageKind::GapFc(p) });
+                    // the head consumed its level buffer (the logits
+                    // stay live — they are the result)
+                    la.free(lv_addr, c as u64 * hw as u64 * 2);
                     let out = OutputRef { addr: lg_addr, elem: OutElem::U32, len: classes as usize };
-                    taps.push(LayerTap { out });
+                    taps[li] = Some(LayerTap { out });
                     logits = Some(out);
                 }
             }
@@ -897,6 +1421,12 @@ impl CompiledQnn {
         let logits = logits.ok_or(SimError::Unsupported(
             "the dataflow executor needs a gap+fc head as the last layer",
         ))?;
+        let taps: Vec<LayerTap> =
+            taps.into_iter().map(|t| t.expect("every layer leaves a tap")).collect();
+        let variants: Vec<ConvVariant> = variants
+            .into_iter()
+            .map(|v| v.expect("every conv-like layer picked a variant"))
+            .collect();
         // slot stride at the arena's strongest alignment (64), so every
         // rebased access keeps the alignment the streams were checked at
         let slot_stride = (la.brk() + 63) & !63;
@@ -1354,6 +1884,92 @@ mod tests {
         }
         // exact amortization: the batch saves (B-1) preambles
         assert_eq!(batch.total_cycles() + 3 * batch.preamble_cycles(), total_single);
+    }
+
+    #[test]
+    fn dag_networks_execute_and_pin_their_golden_boundaries() {
+        // the three DAG topologies — residual join, depthwise +
+        // pointwise, dense head — compile to one chained program and
+        // pin bit-for-bit at EVERY node boundary, exactly like the
+        // straight chain does
+        for graph in
+            [QnnGraph::sparq_resnetlike(), QnnGraph::sparq_mobilenetlike(), QnnGraph::sparq_denselike()]
+        {
+            let net = QnnNet::from_seed(&graph, w2a2(), 0xDA6).unwrap();
+            let cq = CompiledQnn::compile(&ProcessorConfig::sparq(), net).unwrap();
+            assert_eq!(cq.taps.len(), cq.net.graph.layers.len());
+            assert!(cq.stages.iter().all(|s| s.has_uops()));
+            let image = cq.net.test_image(17);
+            let golden = cq.golden(&image).unwrap();
+            let mut m = Machine::new(cq.cfg.clone(), cq.mem_bytes);
+            let run = cq.execute(&mut m, &image).unwrap();
+            for li in 0..cq.net.graph.layers.len() {
+                assert_eq!(
+                    cq.read_tap(&m, li).unwrap(),
+                    golden.layer_outs[li],
+                    "layer {li} ({}) diverged",
+                    cq.net.graph.layers[li].name()
+                );
+            }
+            assert_eq!(run.logits, golden.logits);
+            assert_eq!(run.argmax, golden.argmax);
+            assert!(run.total_cycles() > 0);
+        }
+    }
+
+    #[test]
+    fn liveness_reuses_dead_ranges_without_changing_outputs_or_cycles() {
+        // the arena-liveness regression: against the append-only
+        // baseline placement, the free-list layout (a) never needs MORE
+        // arena bytes, (b) strictly shrinks the residual net (its
+        // freed conv scratch is big enough for later stages to land
+        // in), and (c) leaves outputs AND per-stage cycles bit-identical
+        // everywhere — timing is address-independent
+        let cache = ProgramCache::new();
+        let cfg = ProcessorConfig::sparq();
+        let nets = [
+            ("chain", QnnGraph::sparq_cnn()),
+            ("resnetlike", QnnGraph::sparq_resnetlike()),
+            ("mobilenetlike", QnnGraph::sparq_mobilenetlike()),
+            ("denselike", QnnGraph::sparq_denselike()),
+        ];
+        for (name, graph) in nets {
+            let live = CompiledQnn::compile_tuned(
+                &cfg,
+                QnnNet::from_seed(&graph, w2a2(), 0x11FE).unwrap(),
+                &cache,
+            )
+            .unwrap();
+            let ao = CompiledQnn::compile_append_only(
+                &cfg,
+                QnnNet::from_seed(&graph, w2a2(), 0x11FE).unwrap(),
+                &cache,
+            )
+            .unwrap();
+            assert!(
+                live.slot_stride <= ao.slot_stride,
+                "{name}: liveness grew the arena ({} > {})",
+                live.slot_stride,
+                ao.slot_stride
+            );
+            if name == "resnetlike" {
+                assert!(
+                    live.slot_stride < ao.slot_stride,
+                    "resnetlike must strictly shrink under liveness ({} vs {})",
+                    live.slot_stride,
+                    ao.slot_stride
+                );
+            }
+            let image = live.net.test_image(23);
+            let mut m = Machine::new(cfg.clone(), live.mem_bytes);
+            let lr = live.execute(&mut m, &image).unwrap();
+            let mut m = Machine::new(cfg.clone(), ao.mem_bytes);
+            let ar = ao.execute(&mut m, &image).unwrap();
+            assert_eq!(lr.logits, ar.logits, "{name}: logits diverged");
+            let lc: Vec<u64> = lr.stage_reports.iter().map(|r| r.stats.cycles).collect();
+            let ac: Vec<u64> = ar.stage_reports.iter().map(|r| r.stats.cycles).collect();
+            assert_eq!(lc, ac, "{name}: per-stage cycles diverged under address reuse");
+        }
     }
 
     #[test]

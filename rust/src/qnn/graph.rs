@@ -1,25 +1,42 @@
-//! Static description of the SparqCNN architecture (kept in lock-step
-//! with `python/compile/model.py` — the artifact manifest carries the
-//! same shapes and the integration tests cross-check them), plus the
-//! mixed-precision legality rules the dataflow compiler enforces.
+//! Static description of QNN architectures as a DAG (the SparqCNN
+//! chain from `python/compile/model.py` plus residual, depthwise-
+//! separable and dense-headed variants), and the mixed-precision
+//! legality rules the dataflow compiler enforces.
+//!
+//! ## Graph shape
+//!
+//! A [`QnnGraph`] is a list of [`LayerDesc`] nodes plus an explicit
+//! edge list: `preds[i]` names the producer node(s) layer `i`
+//! consumes.  Exactly one node has no predecessors — it consumes the
+//! graph input.  [`LayerDesc::Add`] (the residual join) takes exactly
+//! two predecessors; every other kind takes one.  Compilation and the
+//! golden network walk the graph in the deterministic Kahn topological
+//! order of [`QnnGraph::topo_order`] (lowest index first, so linear
+//! chains keep their declaration order and stay bit-identical with the
+//! pre-DAG compiler).
 //!
 //! ## Per-layer precision
 //!
-//! A quantized conv may carry an optional `(w_bits, a_bits)` override
-//! (`precision`); layers without one inherit the network default
+//! A quantized conv-like layer ([`LayerDesc::Conv`],
+//! [`LayerDesc::DepthwiseConv`], [`LayerDesc::Dense`]) may carry an
+//! optional `(w_bits, a_bits)` override (`precision`); layers without
+//! one inherit the network default
 //! ([`crate::qnn::schedule::QnnPrecision`]).  Legality is checked at
 //! two levels:
 //!
-//! * [`QnnGraph::validate`] — graph-intrinsic rules (shape chaining,
-//!   override ranges, overrides only on quantized layers), no
-//!   processor needed.
+//! * [`QnnGraph::validate`] — graph-intrinsic rules (DAG shape
+//!   chaining, cycle rejection, fan-in arity, override ranges,
+//!   overrides only on quantized layers), no processor needed.
 //! * [`QnnGraph::validate_for`] — the full mixed-precision rules for a
 //!   concrete processor: every resolved precision must map to a legal
 //!   kernel variant (vmacsr-only precisions are rejected on Ara-like
-//!   configs with no `vmacsr`), and every requant boundary must narrow
-//!   to the next layer's activation element width in at most one
-//!   `vnsrl` step (a wide u32 producer cannot feed an 8-bit-container
-//!   consumer directly).  Boundary widths are derived from the
+//!   configs with no `vmacsr`; `Dense` is vmacsr-only), every requant
+//!   boundary must narrow to the next layer's activation element width
+//!   in at most one `vnsrl` step, and the two branches of an `Add`
+//!   join must live in the same activation level domain
+//!   ([`GraphError::JoinPrecision`] — a W2-quantized branch cannot be
+//!   summed with a W4-quantized branch without an explicit requant,
+//!   which no join stage emits).  Boundary widths are derived from the
 //!   *canonical* variant assignment (the same region-calculus plan the
 //!   compiler and the golden network resolve through); the autotuner
 //!   may only substitute variants that keep the chain legal.
@@ -34,7 +51,8 @@ use crate::ulppack::region::{self, Container, RegionMode};
 pub enum LayerDesc {
     /// 'same' conv: C_in x H x W -> C_out x H x W with an FxF kernel.
     /// `precision` is the optional per-layer `(w_bits, a_bits)`
-    /// override; `None` inherits the network default.
+    /// override; `None` inherits the network default.  A pointwise
+    /// (1x1) conv is this kind with `f: 1`.
     Conv {
         c_in: u32,
         c_out: u32,
@@ -48,6 +66,18 @@ pub enum LayerDesc {
     MaxPool { c: u32, h: u32, w: u32 },
     /// Global average pool + linear head.
     GapFc { c: u32, classes: u32 },
+    /// Residual join: element-wise add of two equal-shape branches,
+    /// each requantized into the common activation level domain first
+    /// (kernels/eltwise.rs).  Always takes exactly two predecessors.
+    Add { c: u32, h: u32, w: u32 },
+    /// Depthwise 'same' conv: one FxF filter per channel (C x H x W ->
+    /// C x H x W), always quantized, lowered as C per-channel packed
+    /// sub-convs sharing one autotune entry.
+    DepthwiseConv { c: u32, h: u32, w: u32, f: u32, precision: Option<(u32, u32)> },
+    /// Dense / GEMM layer over the flattened C_in x H x W input
+    /// (kernels/im2col_gemm.rs as a full-extent 'valid' conv with
+    /// Ho = Wo = 1), always quantized, vmacsr-only.
+    Dense { c_in: u32, h: u32, w: u32, c_out: u32, precision: Option<(u32, u32)> },
 }
 
 impl LayerDesc {
@@ -59,6 +89,14 @@ impl LayerDesc {
             }
             LayerDesc::MaxPool { .. } => 0,
             LayerDesc::GapFc { c, classes } => (c * classes) as u64,
+            // the join is adds only, no multiplies
+            LayerDesc::Add { .. } => 0,
+            LayerDesc::DepthwiseConv { c, h, w, f, .. } => {
+                c as u64 * h as u64 * w as u64 * (f * f) as u64
+            }
+            LayerDesc::Dense { c_in, h, w, c_out, .. } => {
+                c_in as u64 * h as u64 * w as u64 * c_out as u64
+            }
         }
     }
 
@@ -70,6 +108,11 @@ impl LayerDesc {
             ),
             LayerDesc::MaxPool { .. } => "maxpool2".into(),
             LayerDesc::GapFc { .. } => "gap+fc".into(),
+            LayerDesc::Add { .. } => "add [join]".into(),
+            LayerDesc::DepthwiseConv { c, f, .. } => format!("dwconv {c} {f}x{f} [sub-byte]"),
+            LayerDesc::Dense { c_in, h, w, c_out, .. } => {
+                format!("dense {}->{c_out} [sub-byte]", c_in * h * w)
+            }
         }
     }
 
@@ -81,16 +124,31 @@ impl LayerDesc {
             // GAP+FC consumes whatever spatial extent it is handed;
             // validate() checks the channel count only
             LayerDesc::GapFc { c, .. } => (c, 0, 0),
+            LayerDesc::Add { c, h, w } => (c, h, w),
+            LayerDesc::DepthwiseConv { c, h, w, .. } => (c, h, w),
+            LayerDesc::Dense { c_in, h, w, .. } => (c_in, h, w),
         }
     }
 
     /// (c, h, w) this layer produces ('same' convs preserve h x w;
-    /// GAP+FC produces the logits vector).
+    /// GAP+FC and Dense produce flat vectors).
     pub fn out_dims(&self) -> (u32, u32, u32) {
         match *self {
             LayerDesc::Conv { c_out, h, w, .. } => (c_out, h, w),
             LayerDesc::MaxPool { c, h, w } => (c, h / 2, w / 2),
             LayerDesc::GapFc { classes, .. } => (classes, 1, 1),
+            LayerDesc::Add { c, h, w } => (c, h, w),
+            LayerDesc::DepthwiseConv { c, h, w, .. } => (c, h, w),
+            LayerDesc::Dense { c_out, .. } => (c_out, 1, 1),
+        }
+    }
+
+    /// How many input edges this kind requires (the residual join
+    /// takes two; everything else one).
+    pub fn fan_in(&self) -> usize {
+        match *self {
+            LayerDesc::Add { .. } => 2,
+            _ => 1,
         }
     }
 }
@@ -100,8 +158,8 @@ impl LayerDesc {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum GraphError {
     Empty,
-    /// Layer `layer`'s declared input dims do not equal the previous
-    /// layer's output dims.
+    /// Layer `layer`'s declared input dims do not equal its
+    /// producer's output dims (for `Add`, either producer's).
     ShapeMismatch { layer: usize, expected: (u32, u32, u32), got: (u32, u32, u32) },
     /// 2x2 pooling needs even spatial dims.
     OddPool { layer: usize, h: u32, w: u32 },
@@ -119,13 +177,27 @@ pub enum GraphError {
     OverrideOnStem { layer: usize },
     /// No kernel variant on this processor can run the layer's
     /// resolved precision (e.g. W4A4 on an Ara-like config: vmacsr is
-    /// absent and the native ULPPACK scheme cannot admit the pair).
+    /// absent and the native ULPPACK scheme cannot admit the pair;
+    /// `Dense` always needs vmacsr).
     VariantUnsupported { layer: usize, w_bits: u32, a_bits: u32, processor: String },
     /// A requant boundary would have to narrow by more than one
     /// element-width step (the producer's wide output element vs the
     /// consumer's container width under the canonical variant
     /// assignment) — `vnsrl` narrows one step per boundary.
     BoundaryWidth { layer: usize, from_bits: u32, to_bits: u32 },
+    /// Layer `layer` is part of a dependency cycle (or names an
+    /// unresolvable input edge — a self-loop or an out-of-range
+    /// predecessor index): no topological order exists.
+    Cycle { layer: usize },
+    /// Layer `layer` has the wrong number of input edges for its kind
+    /// (`Add` joins take exactly two; every other layer one; only the
+    /// single graph-input node may have zero).
+    FanInMismatch { layer: usize, expected: usize, got: usize },
+    /// The two branches of an `Add` join resolved to different
+    /// activation level domains (`a` vs `b` activation bits): summing
+    /// W2-quantized levels with W4-quantized levels without an
+    /// explicit requant would mix scales, and no join stage emits one.
+    JoinPrecision { layer: usize, a: u32, b: u32 },
 }
 
 impl std::fmt::Display for GraphError {
@@ -134,7 +206,7 @@ impl std::fmt::Display for GraphError {
             GraphError::Empty => write!(f, "graph has no layers"),
             GraphError::ShapeMismatch { layer, expected, got } => write!(
                 f,
-                "layer {layer}: input dims {got:?} != previous layer's output {expected:?}"
+                "layer {layer}: input dims {got:?} != producer's output {expected:?}"
             ),
             GraphError::OddPool { layer, h, w } => {
                 write!(f, "layer {layer}: 2x2 maxpool over odd dims {h}x{w}")
@@ -166,6 +238,19 @@ impl std::fmt::Display for GraphError {
                 "layer {layer}: requant boundary narrows {from_bits}-bit producer elements to \
                  {to_bits}-bit consumer elements (more than one vnsrl step)"
             ),
+            GraphError::Cycle { layer } => write!(
+                f,
+                "layer {layer}: dependency cycle (no topological order resolves its input edges)"
+            ),
+            GraphError::FanInMismatch { layer, expected, got } => write!(
+                f,
+                "layer {layer}: expects {expected} input edge(s), got {got}"
+            ),
+            GraphError::JoinPrecision { layer, a, b } => write!(
+                f,
+                "layer {layer}: add join over branches in different activation level domains \
+                 (A{a} vs A{b}) — joining W2/W4-style mixed branches needs a requant no join emits"
+            ),
         }
     }
 }
@@ -182,20 +267,37 @@ pub fn padded_c(c: u32) -> u32 {
     }
 }
 
-/// The whole network.
+/// The whole network: nodes plus explicit input edges.  `preds[i]`
+/// are the producer indices of layer `i`; the single node with no
+/// predecessors consumes the graph input.  Linear networks are built
+/// with [`QnnGraph::chain`]; the fields stay public so tests and
+/// callers can reshape graphs, with [`QnnGraph::validate`] as the
+/// gatekeeper (`preds.len()` must equal `layers.len()`).
 #[derive(Debug, Clone)]
 pub struct QnnGraph {
     pub layers: Vec<LayerDesc>,
+    /// Input edges: `preds[i]` = indices of the layer(s) feeding layer
+    /// `i`.  Empty = consumes the graph input.
+    pub preds: Vec<Vec<usize>>,
     pub input: (u32, u32, u32),
     pub classes: u32,
 }
 
 impl QnnGraph {
+    /// A straight-line chain: layer `i` consumes layer `i-1`, layer 0
+    /// the graph input — the pre-DAG implicit topology, made explicit.
+    pub fn chain(layers: Vec<LayerDesc>, input: (u32, u32, u32), classes: u32) -> QnnGraph {
+        let preds = (0..layers.len())
+            .map(|i| if i == 0 { Vec::new() } else { vec![i - 1] })
+            .collect();
+        QnnGraph { layers, preds, input, classes }
+    }
+
     /// The SparqCNN from `python/compile/model.py`: 16x16 single-channel
     /// inputs, 4 classes; conv2/conv3 carry the sub-byte precision.
     pub fn sparq_cnn() -> QnnGraph {
-        QnnGraph {
-            layers: vec![
+        QnnGraph::chain(
+            vec![
                 LayerDesc::Conv {
                     c_in: 1,
                     c_out: 16,
@@ -227,9 +329,9 @@ impl QnnGraph {
                 LayerDesc::MaxPool { c: 32, h: 8, w: 8 },
                 LayerDesc::GapFc { c: 32, classes: 4 },
             ],
-            input: (1, 16, 16),
-            classes: 4,
-        }
+            (1, 16, 16),
+            4,
+        )
     }
 
     /// The SparqCNN with per-layer precision overrides on the two
@@ -250,37 +352,231 @@ impl QnnGraph {
         g
     }
 
+    /// A ResNet-style residual block on the SparqCNN scaffold: two
+    /// quantized convs whose output rejoins the block input through an
+    /// `Add` (layer 3 consumes layers 1 AND 2), then the usual
+    /// pool/conv/pool/head tail.
+    pub fn sparq_resnetlike() -> QnnGraph {
+        let conv = |c_in, c_out, h, w| LayerDesc::Conv {
+            c_in,
+            c_out,
+            h,
+            w,
+            f: 3,
+            quantized: true,
+            precision: None,
+        };
+        let mut g = QnnGraph::chain(
+            vec![
+                LayerDesc::Conv {
+                    c_in: 1,
+                    c_out: 16,
+                    h: 16,
+                    w: 16,
+                    f: 3,
+                    quantized: false,
+                    precision: None,
+                },
+                conv(16, 16, 16, 16),
+                conv(16, 16, 16, 16),
+                LayerDesc::Add { c: 16, h: 16, w: 16 },
+                LayerDesc::MaxPool { c: 16, h: 16, w: 16 },
+                conv(16, 32, 8, 8),
+                LayerDesc::MaxPool { c: 32, h: 8, w: 8 },
+                LayerDesc::GapFc { c: 32, classes: 4 },
+            ],
+            (1, 16, 16),
+            4,
+        );
+        // the residual edge: the join reads both the block input
+        // (layer 1) and the block body (layer 2)
+        g.preds[3] = vec![1, 2];
+        g
+    }
+
+    /// A MobileNet-style depthwise-separable network: two
+    /// depthwise-conv + pointwise-conv (1x1) blocks between the stem
+    /// and the head.
+    pub fn sparq_mobilenetlike() -> QnnGraph {
+        let pw = |c_in, c_out, h, w| LayerDesc::Conv {
+            c_in,
+            c_out,
+            h,
+            w,
+            f: 1,
+            quantized: true,
+            precision: None,
+        };
+        QnnGraph::chain(
+            vec![
+                LayerDesc::Conv {
+                    c_in: 1,
+                    c_out: 8,
+                    h: 16,
+                    w: 16,
+                    f: 3,
+                    quantized: false,
+                    precision: None,
+                },
+                LayerDesc::DepthwiseConv { c: 8, h: 16, w: 16, f: 3, precision: None },
+                pw(8, 16, 16, 16),
+                LayerDesc::MaxPool { c: 16, h: 16, w: 16 },
+                LayerDesc::DepthwiseConv { c: 16, h: 8, w: 8, f: 3, precision: None },
+                pw(16, 32, 8, 8),
+                LayerDesc::MaxPool { c: 32, h: 8, w: 8 },
+                LayerDesc::GapFc { c: 32, classes: 4 },
+            ],
+            (1, 16, 16),
+            4,
+        )
+    }
+
+    /// A dense/GEMM-headed network: a small conv trunk flattened into
+    /// a `Dense` layer (im2col GEMM) before the GAP+FC head.
+    pub fn sparq_denselike() -> QnnGraph {
+        QnnGraph::chain(
+            vec![
+                LayerDesc::Conv {
+                    c_in: 1,
+                    c_out: 8,
+                    h: 8,
+                    w: 8,
+                    f: 3,
+                    quantized: false,
+                    precision: None,
+                },
+                LayerDesc::Conv {
+                    c_in: 8,
+                    c_out: 16,
+                    h: 8,
+                    w: 8,
+                    f: 3,
+                    quantized: true,
+                    precision: None,
+                },
+                LayerDesc::MaxPool { c: 16, h: 8, w: 8 },
+                LayerDesc::Dense { c_in: 16, h: 4, w: 4, c_out: 16, precision: None },
+                LayerDesc::GapFc { c: 16, classes: 4 },
+            ],
+            (1, 8, 8),
+            4,
+        )
+    }
+
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(LayerDesc::macs).sum()
     }
 
-    /// Shape-chaining validation: every layer's declared input dims
-    /// must equal the previous layer's output dims (the graph input for
-    /// layer 0), pools need even spatial dims, 'same' convs odd
-    /// kernels, and the GAP+FC head must be last and agree on the
-    /// class count.  Before this check existed, mismatched graphs
-    /// scheduled silently against per-layer random tensors; the
-    /// dataflow compiler refuses them instead.
+    /// Layer `i`'s input edges (empty slice when `preds` is shorter
+    /// than `layers` — validate() then treats the node as a second
+    /// graph input and rejects it).
+    pub fn preds_of(&self, i: usize) -> &[usize] {
+        self.preds.get(i).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// The deterministic topological order compilation and the golden
+    /// network walk in: Kahn's algorithm with a lowest-index-first
+    /// ready queue, so a linear chain keeps its declaration order.
+    /// [`GraphError::Cycle`] when no order exists (a cycle, a
+    /// self-loop, or an out-of-range predecessor index).
+    pub fn topo_order(&self) -> Result<Vec<usize>, GraphError> {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let n = self.layers.len();
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for &p in self.preds_of(i) {
+                if p >= n || p == i {
+                    return Err(GraphError::Cycle { layer: i });
+                }
+                indeg[i] += 1;
+                succ[p].push(i);
+            }
+        }
+        let mut ready: BinaryHeap<Reverse<usize>> =
+            (0..n).filter(|&i| indeg[i] == 0).map(Reverse).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut placed = vec![false; n];
+        while let Some(Reverse(i)) = ready.pop() {
+            order.push(i);
+            placed[i] = true;
+            for &s in &succ[i] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push(Reverse(s));
+                }
+            }
+        }
+        if order.len() != n {
+            let layer = (0..n).find(|&i| !placed[i]).unwrap();
+            return Err(GraphError::Cycle { layer });
+        }
+        Ok(order)
+    }
+
+    /// Shape-chaining validation over the DAG: a topological order
+    /// must exist ([`GraphError::Cycle`]), every node must have the
+    /// fan-in its kind requires with exactly one graph-input node
+    /// ([`GraphError::FanInMismatch`]), and every node's declared
+    /// input dims must equal its producer's output dims (both
+    /// producers for `Add`).  Pools need even spatial dims, 'same'
+    /// convs odd kernels, and the GAP+FC head must be last and agree
+    /// on the class count.
     ///
     /// Also enforces the graph-intrinsic precision rules: an explicit
-    /// per-layer override must target a quantized conv and stay inside
-    /// the sub-byte range 1..=4.  The processor-dependent rules
-    /// (variant availability, boundary widths) live in
+    /// per-layer override must target a quantized layer and stay
+    /// inside the sub-byte range 1..=4.  The processor-dependent rules
+    /// (variant availability, boundary widths, join domains) live in
     /// [`Self::validate_for`].
     pub fn validate(&self) -> Result<(), GraphError> {
         if self.layers.is_empty() {
             return Err(GraphError::Empty);
         }
-        let mut cur = self.input;
+        let order = self.topo_order()?;
+        let n = self.layers.len();
+        // fan-in arity: exactly one input node, everyone else exactly
+        // what their kind requires
+        let mut input_node: Option<usize> = None;
         for (li, layer) in self.layers.iter().enumerate() {
+            let got = self.preds_of(li).len();
+            if got == 0 {
+                if input_node.is_some() || layer.fan_in() != 1 {
+                    return Err(GraphError::FanInMismatch {
+                        layer: li,
+                        expected: layer.fan_in(),
+                        got: 0,
+                    });
+                }
+                input_node = Some(li);
+            } else if got != layer.fan_in() {
+                return Err(GraphError::FanInMismatch {
+                    layer: li,
+                    expected: layer.fan_in(),
+                    got,
+                });
+            }
+        }
+        // shape chaining in topo order
+        let mut outs = vec![(0u32, 0u32, 0u32); n];
+        for &li in &order {
+            let layer = &self.layers[li];
+            let ps = self.preds_of(li);
+            let cur = if ps.is_empty() { self.input } else { outs[ps[0]] };
             let (ic, ih, iw) = layer.in_dims();
             let expected_spatial = !matches!(layer, LayerDesc::GapFc { .. });
             let got = if expected_spatial { (ic, ih, iw) } else { (ic, cur.1, cur.2) };
             if got != cur {
                 return Err(GraphError::ShapeMismatch { layer: li, expected: cur, got });
             }
+            if matches!(layer, LayerDesc::Add { .. }) {
+                let other = outs[ps[1]];
+                if other != got {
+                    return Err(GraphError::ShapeMismatch { layer: li, expected: other, got });
+                }
+            }
             match *layer {
-                LayerDesc::Conv { f, .. } if f % 2 == 0 => {
+                LayerDesc::Conv { f, .. } | LayerDesc::DepthwiseConv { f, .. } if f % 2 == 0 => {
                     return Err(GraphError::EvenKernel { layer: li, f });
                 }
                 LayerDesc::Conv { quantized, precision: Some((w, a)), .. } => {
@@ -289,11 +585,15 @@ impl QnnGraph {
                     }
                     check_subbyte_range(li, w, a)?;
                 }
+                LayerDesc::DepthwiseConv { precision: Some((w, a)), .. }
+                | LayerDesc::Dense { precision: Some((w, a)), .. } => {
+                    check_subbyte_range(li, w, a)?;
+                }
                 LayerDesc::MaxPool { h, w, .. } if h % 2 != 0 || w % 2 != 0 => {
                     return Err(GraphError::OddPool { layer: li, h, w });
                 }
                 LayerDesc::GapFc { classes, .. } => {
-                    if li != self.layers.len() - 1 {
+                    if li != n - 1 || order.last() != Some(&li) {
                         return Err(GraphError::HeadNotLast { layer: li });
                     }
                     if classes != self.classes {
@@ -305,23 +605,30 @@ impl QnnGraph {
                 }
                 _ => {}
             }
-            cur = layer.out_dims();
+            outs[li] = layer.out_dims();
         }
         Ok(())
     }
 
-    /// Per-conv resolved `(w_bits, a_bits, quantized)` under `default`,
-    /// in graph order, with range checking of the *resolved* values
-    /// (an out-of-range network default is rejected exactly like an
-    /// out-of-range override).  The int16 stem resolves to 8-bit
-    /// weights and the network's activation width.  Under
-    /// [`QnnPrecision::Fp32`] the overrides are ignored (the fp32
-    /// baseline has no level domain — see `qnn::schedule`'s documented
-    /// fallback) and every conv resolves to (8, 8).
+    /// Per conv-like layer ([`LayerDesc::Conv`],
+    /// [`LayerDesc::DepthwiseConv`], [`LayerDesc::Dense`]) resolved
+    /// `(w_bits, a_bits, quantized)` under `default`, in graph order,
+    /// with range checking of the *resolved* values (an out-of-range
+    /// network default is rejected exactly like an out-of-range
+    /// override).  The int16 stem resolves to 8-bit weights and the
+    /// network's activation width.  Under [`QnnPrecision::Fp32`] the
+    /// overrides are ignored (the fp32 baseline has no level domain —
+    /// see `qnn::schedule`'s documented fallback) and every layer
+    /// resolves to (8, 8).
     pub fn conv_precisions(&self, default: QnnPrecision) -> Result<Vec<ConvPrec>, GraphError> {
         let mut out = Vec::new();
         for (li, layer) in self.layers.iter().enumerate() {
-            let LayerDesc::Conv { quantized, precision, .. } = *layer else { continue };
+            let (quantized, precision) = match *layer {
+                LayerDesc::Conv { quantized, precision, .. } => (quantized, precision),
+                LayerDesc::DepthwiseConv { precision, .. } => (true, precision),
+                LayerDesc::Dense { precision, .. } => (true, precision),
+                _ => continue,
+            };
             let (w, a) = match default {
                 QnnPrecision::Fp32 => (8, 8),
                 QnnPrecision::SubByte { w_bits, a_bits } => {
@@ -348,13 +655,17 @@ impl QnnGraph {
     /// 1. every resolved quantized precision must map to a legal
     ///    canonical kernel variant on `cfg` — `vmacsr` where the
     ///    processor has it, the native ULPPACK scheme otherwise;
-    ///    precisions only `vmacsr` can run (e.g. W4A4) are rejected on
-    ///    Ara-like configs with [`GraphError::VariantUnsupported`];
+    ///    precisions only `vmacsr` can run (e.g. W4A4, or any `Dense`
+    ///    layer) are rejected on Ara-like configs with
+    ///    [`GraphError::VariantUnsupported`];
     /// 2. every requant boundary must narrow to the consumer's element
     ///    width in at most one `vnsrl` step
     ///    ([`GraphError::BoundaryWidth`]), with producer/consumer
     ///    widths derived from the same region-calculus plans the
-    ///    compiler and the golden network resolve through.
+    ///    compiler and the golden network resolve through;
+    /// 3. the two branches of every `Add` join must carry the same
+    ///    resolved activation bit-width
+    ///    ([`GraphError::JoinPrecision`]).
     pub fn validate_for(&self, cfg: &ProcessorConfig, default: QnnPrecision) -> Result<(), GraphError> {
         self.validate()?;
         if matches!(default, QnnPrecision::Fp32) {
@@ -363,40 +674,111 @@ impl QnnGraph {
             return Ok(());
         }
         let precs = self.conv_precisions(default)?;
-        let mut precs = precs.iter();
-        // element width flowing between layers: a conv sets its output
-        // width, pools preserve it, the head always narrows legally
-        let mut flow: Option<u32> = None;
-        for (li, layer) in self.layers.iter().enumerate() {
-            let LayerDesc::Conv { c_in, f, quantized, .. } = *layer else { continue };
-            let p = precs.next().expect("conv_precisions covers every conv");
-            debug_assert_eq!(p.layer, li);
-            let issues = (padded_c(c_in) as u64 / 2) * (f * f) as u64;
-            let (in_bits, out_bits) = if !quantized {
-                (16, 16) // int16 stem: E16 levels in, wrapping u16 sums out
-            } else {
-                canonical_widths(cfg, p.w_bits, p.a_bits, issues).ok_or(
-                    GraphError::VariantUnsupported {
+        let prec_of = |li: usize| precs.iter().find(|p| p.layer == li);
+        let default_a = match default {
+            QnnPrecision::SubByte { a_bits, .. } => a_bits,
+            QnnPrecision::Fp32 => unreachable!(),
+        };
+        let order = self.topo_order()?;
+        // per-node (output element bits, activation level domain) —
+        // a conv's output width under the canonical variant, and the
+        // a_bits its activations were quantized at (joins must agree)
+        let n = self.layers.len();
+        let mut flows: Vec<Option<(u32, u32)>> = vec![None; n];
+        for &li in &order {
+            let ps = self.preds_of(li);
+            let inflow = ps.first().and_then(|&p| flows[p]);
+            let boundary = |in_bits: u32| -> Result<(), GraphError> {
+                if let Some((from, _)) = inflow {
+                    // equal widths or one narrowing step (vnsrl halves)
+                    if !(in_bits == from || 2 * in_bits == from) {
+                        return Err(GraphError::BoundaryWidth {
+                            layer: li,
+                            from_bits: from,
+                            to_bits: in_bits,
+                        });
+                    }
+                }
+                Ok(())
+            };
+            match self.layers[li] {
+                LayerDesc::Conv { c_in, f, quantized, .. } => {
+                    let p = prec_of(li).expect("conv_precisions covers every conv");
+                    let issues = (padded_c(c_in) as u64 / 2) * (f * f) as u64;
+                    let (in_bits, out_bits) = if !quantized {
+                        (16, 16) // int16 stem: E16 levels in, wrapping u16 sums out
+                    } else {
+                        canonical_widths(cfg, p.w_bits, p.a_bits, issues).ok_or(
+                            GraphError::VariantUnsupported {
+                                layer: li,
+                                w_bits: p.w_bits,
+                                a_bits: p.a_bits,
+                                processor: cfg.name.clone(),
+                            },
+                        )?
+                    };
+                    boundary(in_bits)?;
+                    flows[li] = Some((out_bits, p.a_bits));
+                }
+                LayerDesc::DepthwiseConv { f, .. } => {
+                    // per-channel sub-conv: one padded channel pair
+                    let p = prec_of(li).expect("conv_precisions covers every dwconv");
+                    let issues = (f * f) as u64;
+                    let (in_bits, out_bits) = canonical_widths(cfg, p.w_bits, p.a_bits, issues)
+                        .ok_or(GraphError::VariantUnsupported {
+                            layer: li,
+                            w_bits: p.w_bits,
+                            a_bits: p.a_bits,
+                            processor: cfg.name.clone(),
+                        })?;
+                    boundary(in_bits)?;
+                    flows[li] = Some((out_bits, p.a_bits));
+                }
+                LayerDesc::Dense { c_in, h, w, .. } => {
+                    // vmacsr-only (im2col GEMM); always a u32 output
+                    let p = prec_of(li).expect("conv_precisions covers every dense");
+                    let issues = (padded_c(c_in) as u64 / 2) * (h * w) as u64;
+                    let unsupported = GraphError::VariantUnsupported {
                         layer: li,
                         w_bits: p.w_bits,
                         a_bits: p.a_bits,
                         processor: cfg.name.clone(),
-                    },
-                )?
-            };
-            if let Some(from) = flow {
-                // equal widths or one narrowing step (vnsrl halves)
-                if !(in_bits == from || 2 * in_bits == from) {
-                    return Err(GraphError::BoundaryWidth { layer: li, from_bits: from, to_bits: in_bits });
+                    };
+                    if !cfg.vmacsr {
+                        return Err(unsupported);
+                    }
+                    let plan = region::plan_vmacsr(p.w_bits, p.a_bits, issues, RegionMode::Paper)
+                        .ok_or(unsupported)?;
+                    boundary(container_sew(plan.container).bits())?;
+                    flows[li] = Some((32, p.a_bits));
                 }
+                LayerDesc::Add { .. } => {
+                    // branches feeding a join are always compiled
+                    // producers in practice; a raw-input branch
+                    // defaults to the network activation domain
+                    let a = flows[ps[0]].unwrap_or((16, default_a));
+                    let b = flows[ps[1]].unwrap_or((16, default_a));
+                    if a.1 != b.1 {
+                        return Err(GraphError::JoinPrecision { layer: li, a: a.1, b: b.1 });
+                    }
+                    // the join stage requants each branch (one vnsrl
+                    // step max — producers are 16- or 32-bit) and adds
+                    // at E16
+                    flows[li] = Some((16, a.1));
+                }
+                LayerDesc::MaxPool { .. } => {
+                    flows[li] = inflow;
+                }
+                // the head requants to E16 levels: 16- and 32-bit
+                // producers both narrow legally
+                LayerDesc::GapFc { .. } => {}
             }
-            flow = Some(out_bits);
         }
         Ok(())
     }
 }
 
-/// The one definition of the legal sub-byte range: a quantized conv's
+/// The one definition of the legal sub-byte range: a quantized layer's
 /// resolved (W, A) — explicit override or network default — must land
 /// in 1..=4.  Shared by [`QnnGraph::validate`] (override checking) and
 /// [`QnnGraph::conv_precisions`] (resolved checking) so the two entry
@@ -408,7 +790,7 @@ fn check_subbyte_range(layer: usize, w_bits: u32, a_bits: u32) -> Result<(), Gra
     Ok(())
 }
 
-/// One conv layer's resolved precision (see
+/// One conv-like layer's resolved precision (see
 /// [`QnnGraph::conv_precisions`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvPrec {
@@ -470,6 +852,8 @@ mod tests {
         // conv2: 16*32*16*16*9
         assert_eq!(g.layers[1].macs(), 16 * 32 * 16 * 16 * 9);
         assert!(g.total_macs() > 1_000_000);
+        // the chain edges are explicit now
+        assert_eq!(g.preds, vec![vec![], vec![0], vec![1], vec![2], vec![3], vec![4]]);
     }
 
     #[test]
@@ -477,11 +861,130 @@ mod tests {
         let g = QnnGraph::sparq_cnn();
         assert!(g.layers[0].name().contains("[stem]"));
         assert!(g.layers[1].name().contains("[sub-byte]"));
+        assert!(QnnGraph::sparq_resnetlike().layers[3].name().contains("[join]"));
+        assert!(QnnGraph::sparq_mobilenetlike().layers[1].name().contains("dwconv"));
+        assert!(QnnGraph::sparq_denselike().layers[3].name().contains("dense 256->16"));
     }
 
     #[test]
     fn sparq_cnn_validates() {
         QnnGraph::sparq_cnn().validate().unwrap();
+    }
+
+    #[test]
+    fn dag_builders_validate_on_sparq_at_every_uniform_precision() {
+        for g in [
+            QnnGraph::sparq_resnetlike(),
+            QnnGraph::sparq_mobilenetlike(),
+            QnnGraph::sparq_denselike(),
+        ] {
+            g.validate().unwrap();
+            for bits in 1..=4 {
+                g.validate_for(&ProcessorConfig::sparq(), w(bits)).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn topo_order_keeps_chains_in_declaration_order() {
+        let g = QnnGraph::sparq_cnn();
+        assert_eq!(g.topo_order().unwrap(), vec![0, 1, 2, 3, 4, 5]);
+        // the residual graph is already declared in a valid order,
+        // and the lowest-index-first queue preserves it
+        let r = QnnGraph::sparq_resnetlike();
+        assert_eq!(r.topo_order().unwrap(), (0..r.layers.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn self_loop_and_cycle_rejected() {
+        let mut g = QnnGraph::sparq_cnn();
+        g.preds[2] = vec![2]; // self-loop
+        assert_eq!(g.validate(), Err(GraphError::Cycle { layer: 2 }));
+        let mut g = QnnGraph::sparq_cnn();
+        g.preds[1] = vec![3]; // 1 <- 3 while 3 <- 2 <- 1: a real cycle
+        assert_eq!(g.validate(), Err(GraphError::Cycle { layer: 1 }));
+        // out-of-range predecessor: no order can resolve it
+        let mut g = QnnGraph::sparq_cnn();
+        g.preds[4] = vec![99];
+        assert_eq!(g.validate(), Err(GraphError::Cycle { layer: 4 }));
+    }
+
+    #[test]
+    fn fan_in_arity_enforced() {
+        // an Add with one input edge
+        let mut g = QnnGraph::sparq_resnetlike();
+        g.preds[3] = vec![2];
+        assert_eq!(
+            g.validate(),
+            Err(GraphError::FanInMismatch { layer: 3, expected: 2, got: 1 })
+        );
+        // a conv with two
+        let mut g = QnnGraph::sparq_cnn();
+        g.preds[3] = vec![2, 1];
+        assert_eq!(
+            g.validate(),
+            Err(GraphError::FanInMismatch { layer: 3, expected: 1, got: 2 })
+        );
+        // two graph-input nodes
+        let mut g = QnnGraph::sparq_cnn();
+        g.preds[1] = vec![];
+        assert!(matches!(g.validate(), Err(GraphError::FanInMismatch { got: 0, .. })));
+    }
+
+    #[test]
+    fn residual_shape_mismatch_rejected_at_the_join() {
+        let mut g = QnnGraph::sparq_resnetlike();
+        // the body branch now widens to 32 channels: still a valid
+        // conv chain, but the join's two producers no longer agree
+        g.layers[2] = LayerDesc::Conv {
+            c_in: 16,
+            c_out: 32,
+            h: 16,
+            w: 16,
+            f: 3,
+            quantized: true,
+            precision: None,
+        };
+        assert_eq!(
+            g.validate(),
+            Err(GraphError::ShapeMismatch {
+                layer: 3,
+                expected: (32, 16, 16),
+                got: (16, 16, 16)
+            })
+        );
+    }
+
+    #[test]
+    fn join_of_mismatched_precisions_rejected() {
+        let mut g = QnnGraph::sparq_resnetlike();
+        if let LayerDesc::Conv { precision, .. } = &mut g.layers[1] {
+            *precision = Some((4, 4));
+        }
+        if let LayerDesc::Conv { precision, .. } = &mut g.layers[2] {
+            *precision = Some((2, 2));
+        }
+        g.validate().unwrap(); // intrinsically fine...
+        assert_eq!(
+            // ...but W4-joins-W2 without a requant is not
+            g.validate_for(&ProcessorConfig::sparq(), w(2)),
+            Err(GraphError::JoinPrecision { layer: 3, a: 4, b: 2 })
+        );
+        // equal overrides on both branches are legal
+        if let LayerDesc::Conv { precision, .. } = &mut g.layers[2] {
+            *precision = Some((4, 4));
+        }
+        g.validate_for(&ProcessorConfig::sparq(), w(2)).unwrap();
+    }
+
+    #[test]
+    fn dense_is_vmacsr_only() {
+        let g = QnnGraph::sparq_denselike();
+        assert!(matches!(
+            g.validate_for(&ProcessorConfig::ara(), w(2)),
+            Err(GraphError::VariantUnsupported { layer: 3, .. })
+        ));
+        g.validate_for(&ProcessorConfig::sparq(), w(2)).unwrap();
     }
 
     #[test]
@@ -525,14 +1028,10 @@ mod tests {
 
     #[test]
     fn odd_pool_and_even_kernel_rejected() {
-        let g = QnnGraph {
-            layers: vec![LayerDesc::MaxPool { c: 2, h: 5, w: 4 }],
-            input: (2, 5, 4),
-            classes: 4,
-        };
+        let g = QnnGraph::chain(vec![LayerDesc::MaxPool { c: 2, h: 5, w: 4 }], (2, 5, 4), 4);
         assert!(matches!(g.validate(), Err(GraphError::OddPool { layer: 0, .. })));
-        let g = QnnGraph {
-            layers: vec![LayerDesc::Conv {
+        let g = QnnGraph::chain(
+            vec![LayerDesc::Conv {
                 c_in: 2,
                 c_out: 4,
                 h: 8,
@@ -541,10 +1040,16 @@ mod tests {
                 quantized: true,
                 precision: None,
             }],
-            input: (2, 8, 8),
-            classes: 4,
-        };
+            (2, 8, 8),
+            4,
+        );
         assert!(matches!(g.validate(), Err(GraphError::EvenKernel { layer: 0, f: 2 })));
+        let g = QnnGraph::chain(
+            vec![LayerDesc::DepthwiseConv { c: 2, h: 8, w: 8, f: 4, precision: None }],
+            (2, 8, 8),
+            4,
+        );
+        assert!(matches!(g.validate(), Err(GraphError::EvenKernel { layer: 0, f: 4 })));
     }
 
     #[test]
@@ -552,20 +1057,20 @@ mod tests {
         let mut g = QnnGraph::sparq_cnn();
         g.classes = 10;
         assert_eq!(g.validate(), Err(GraphError::ClassMismatch { head: 4, graph: 10 }));
-        let g = QnnGraph {
-            layers: vec![
+        let g = QnnGraph::chain(
+            vec![
                 LayerDesc::GapFc { c: 2, classes: 4 },
                 LayerDesc::MaxPool { c: 4, h: 1, w: 1 },
             ],
-            input: (2, 4, 4),
-            classes: 4,
-        };
+            (2, 4, 4),
+            4,
+        );
         assert!(matches!(g.validate(), Err(GraphError::HeadNotLast { layer: 0 })));
     }
 
     #[test]
     fn empty_graph_rejected_and_odd_cin_padding_is_explicit() {
-        let g = QnnGraph { layers: vec![], input: (1, 1, 1), classes: 0 };
+        let g = QnnGraph::chain(vec![], (1, 1, 1), 0);
         assert_eq!(g.validate(), Err(GraphError::Empty));
         assert_eq!(padded_c(1), 2);
         assert_eq!(padded_c(16), 16);
@@ -586,6 +1091,15 @@ mod tests {
         assert_eq!(
             g.validate(),
             Err(GraphError::BadPrecision { layer: 3, w_bits: 2, a_bits: 0 })
+        );
+        // dense/depthwise overrides are range-checked the same way
+        let mut g = QnnGraph::sparq_denselike();
+        if let LayerDesc::Dense { precision, .. } = &mut g.layers[3] {
+            *precision = Some((7, 2));
+        }
+        assert_eq!(
+            g.validate(),
+            Err(GraphError::BadPrecision { layer: 3, w_bits: 7, a_bits: 2 })
         );
     }
 
@@ -615,6 +1129,10 @@ mod tests {
         // fp32 ignores the overrides entirely (documented fallback)
         let fp = m.conv_precisions(QnnPrecision::Fp32).unwrap();
         assert!(fp.iter().all(|p| (p.w_bits, p.a_bits) == (8, 8)));
+        // depthwise and dense layers are covered in graph order
+        let ps = QnnGraph::sparq_mobilenetlike().conv_precisions(w(2)).unwrap();
+        assert_eq!(ps.iter().map(|p| p.layer).collect::<Vec<_>>(), vec![0, 1, 2, 4, 5]);
+        assert!(ps.iter().skip(1).all(|p| p.quantized));
     }
 
     #[test]
@@ -643,6 +1161,13 @@ mod tests {
         g.validate_for(&ProcessorConfig::ara(), w(2)).unwrap();
         // and on Sparq vmacsr admits W4A4
         g.validate_for(&ProcessorConfig::sparq(), w(4)).unwrap();
+        // a depthwise layer is rejected identically when only vmacsr
+        // admits its precision
+        let g = QnnGraph::sparq_mobilenetlike();
+        assert!(matches!(
+            g.validate_for(&ProcessorConfig::ara(), w(4)),
+            Err(GraphError::VariantUnsupported { layer: 1, .. })
+        ));
     }
 
     #[test]
@@ -651,8 +1176,8 @@ mod tests {
         // accumulator (spill cadence 156 < 18*9 = 162 issues) feeding a
         // W2A2 consumer whose ULP container loads 8-bit elements:
         // 32 -> 8 is two vnsrl steps, which no boundary stream can emit
-        let g = QnnGraph {
-            layers: vec![
+        let g = QnnGraph::chain(
+            vec![
                 LayerDesc::Conv {
                     c_in: 36,
                     c_out: 8,
@@ -673,9 +1198,9 @@ mod tests {
                 },
                 LayerDesc::GapFc { c: 4, classes: 4 },
             ],
-            input: (36, 8, 8),
-            classes: 4,
-        };
+            (36, 8, 8),
+            4,
+        );
         assert_eq!(
             g.validate_for(&ProcessorConfig::sparq(), w(2)),
             Err(GraphError::BoundaryWidth { layer: 1, from_bits: 32, to_bits: 8 })

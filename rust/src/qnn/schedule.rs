@@ -115,6 +115,22 @@ pub(crate) fn variant_for(layer: &LayerDesc, precision: QnnPrecision) -> Option<
                 }
             }
         }),
+        LayerDesc::DepthwiseConv { precision: ovr, .. } => Some(match precision {
+            QnnPrecision::Fp32 => ConvVariant::Fp32,
+            QnnPrecision::SubByte { w_bits, a_bits } => {
+                let (w_bits, a_bits) = ovr.unwrap_or((w_bits, a_bits));
+                ConvVariant::Vmacsr { w_bits, a_bits, mode: RegionMode::Paper }
+            }
+        }),
+        LayerDesc::Dense { precision: ovr, .. } => match precision {
+            // vmacsr-only (validate_for rejects it on Ara-likes); the
+            // fp32 legacy estimate has no kernel for it either
+            QnnPrecision::Fp32 => None,
+            QnnPrecision::SubByte { w_bits, a_bits } => {
+                let (w_bits, a_bits) = ovr.unwrap_or((w_bits, a_bits));
+                Some(ConvVariant::Vmacsr { w_bits, a_bits, mode: RegionMode::Paper })
+            }
+        },
         _ => None,
     }
 }
@@ -192,18 +208,29 @@ fn schedule_fp32_legacy(
     for layer in graph.layers.iter() {
         match variant_for(layer, QnnPrecision::Fp32) {
             Some(variant) => {
-                let LayerDesc::Conv { c_in, c_out, h, w, f, .. } = *layer else { unreachable!() };
                 // 'same' padding -> schedule the padded 'valid' problem;
                 // odd in-channel counts get the explicit zero channel
-                let c = super::graph::padded_c(c_in);
-                let dims = ConvDims { c, h: h + f - 1, w: w + f - 1, co: c_out, fh: f, fw: f };
+                let (dims, repeat) = match *layer {
+                    LayerDesc::Conv { c_in, c_out, h, w, f, .. } => {
+                        let c = super::graph::padded_c(c_in);
+                        (ConvDims { c, h: h + f - 1, w: w + f - 1, co: c_out, fh: f, fw: f }, 1)
+                    }
+                    // depthwise: one (real + zero channel) group costed
+                    // once, multiplied by the channel count — timing is
+                    // data-independent, so the groups are identical
+                    LayerDesc::DepthwiseConv { c, h, w, f, .. } => (
+                        ConvDims { c: 2, h: h + f - 1, w: w + f - 1, co: 1, fh: f, fw: f },
+                        c as u64,
+                    ),
+                    _ => unreachable!(),
+                };
                 let (wb, ab) = variant.bits();
                 let wl = Workload::random(dims, wb, ab, seeds.next_u64());
                 let report =
                     run_conv_cached(cache, pool, cfg, &wl, variant, EngineOpts::default())?;
                 layers.push(LayerCycles {
                     name: layer.name(),
-                    cycles: report.stats.cycles,
+                    cycles: report.stats.cycles * repeat,
                     macs: layer.macs(),
                     variant: variant.label(),
                 });
@@ -216,6 +243,13 @@ fn schedule_fp32_legacy(
                 let bytes = match *layer {
                     LayerDesc::MaxPool { c, h, w } => (c * h * w * 4) as u64,
                     LayerDesc::GapFc { c, .. } => (c * 64) as u64,
+                    // residual join: two branch loads + one store
+                    LayerDesc::Add { c, h, w } => (c * h * w * 4 * 3) as u64,
+                    LayerDesc::Dense { .. } => {
+                        return Err(SimError::Unsupported(
+                            "dense head is vmacsr-only; the fp32 legacy estimate has no kernel for it",
+                        ))
+                    }
                     _ => unreachable!(),
                 };
                 let cycles = bytes.div_ceil(cfg.mem_bytes_per_cycle as u64)
@@ -392,6 +426,39 @@ mod tests {
             assert_eq!(p.cycles, m.cycles);
             assert_eq!(p.variant, m.variant);
         }
+    }
+
+    #[test]
+    fn dag_topologies_schedule_end_to_end() {
+        let cfg = ProcessorConfig::sparq();
+        for g in [
+            QnnGraph::sparq_resnetlike(),
+            QnnGraph::sparq_mobilenetlike(),
+            QnnGraph::sparq_denselike(),
+        ] {
+            let s =
+                schedule(&cfg, &g, QnnPrecision::SubByte { w_bits: 2, a_bits: 2 }).unwrap();
+            assert_eq!(s.layers.len(), g.layers.len());
+            assert!(s.total_cycles() > 0);
+            assert_eq!(s.total_macs(), g.total_macs());
+        }
+    }
+
+    #[test]
+    fn fp32_legacy_costs_residual_and_depthwise_graphs() {
+        let cfg = ProcessorConfig::ara();
+        let r = schedule(&cfg, &QnnGraph::sparq_resnetlike(), QnnPrecision::Fp32).unwrap();
+        assert_eq!(r.layers.len(), QnnGraph::sparq_resnetlike().layers.len());
+        let join = r.layers.iter().find(|l| l.name.contains("add")).unwrap();
+        assert_eq!(join.variant, "streaming");
+        assert!(join.cycles > 0);
+        let m = schedule(&cfg, &QnnGraph::sparq_mobilenetlike(), QnnPrecision::Fp32).unwrap();
+        assert!(m.total_cycles() > 0);
+        // the dense head has no fp32 kernel — typed error, no estimate
+        assert!(matches!(
+            schedule(&cfg, &QnnGraph::sparq_denselike(), QnnPrecision::Fp32),
+            Err(SimError::Unsupported(_))
+        ));
     }
 
     #[test]

@@ -362,12 +362,13 @@ pub struct LadderRow {
 }
 
 /// The precision-ladder configurations: the SparqCNN at every uniform
-/// sub-byte precision `w1a1`..`w4a4` plus the mixed stem/head
+/// sub-byte precision `w1a1`..`w4a4`, the mixed stem/head
 /// configurations (higher-precision stem-adjacent conv over a
-/// lower-precision deep conv, and the reverse).  The single source of
-/// truth the report sweep AND `rust/benches/mixed_precision.rs` build
-/// from, so the two can never cover different rungs under the same
-/// labels.
+/// lower-precision deep conv, and the reverse), and the three DAG
+/// topologies (residual, depthwise+pointwise, dense-head) at the W2A2
+/// base precision.  The single source of truth the report sweep AND
+/// `rust/benches/mixed_precision.rs` build from, so the two can never
+/// cover different rungs under the same labels.
 pub fn ladder_configs() -> Vec<(String, QnnGraph, QnnPrecision)> {
     let mut configs: Vec<(String, QnnGraph, QnnPrecision)> = (1..=4u32)
         .map(|b| {
@@ -389,6 +390,9 @@ pub fn ladder_configs() -> Vec<(String, QnnGraph, QnnPrecision)> {
         QnnGraph::sparq_cnn_mixed((2, 2), (4, 4)),
         base,
     ));
+    configs.push(("resnetlike w2a2".into(), QnnGraph::sparq_resnetlike(), base));
+    configs.push(("mobilenetlike w2a2".into(), QnnGraph::sparq_mobilenetlike(), base));
+    configs.push(("denselike w2a2".into(), QnnGraph::sparq_denselike(), base));
     configs
 }
 
@@ -697,7 +701,7 @@ mod tests {
     fn precision_ladder_orders_like_the_paper() {
         let ctx = SweepCtx::new();
         let rows = precision_ladder(&ctx).unwrap();
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), 9);
         let cyc = |label: &str| {
             rows.iter().find(|r| r.label == label).unwrap().schedule.total_cycles()
         };
@@ -707,6 +711,10 @@ mod tests {
         // mixed rungs land strictly between their uniform endpoints
         let mixed = cyc("mixed w4a4-stem/w2a2");
         assert!(cyc("w2a2") < mixed && mixed < cyc("w4a4"));
+        // the DAG topologies schedule and report real cycle counts
+        assert!(cyc("resnetlike w2a2") > 0);
+        assert!(cyc("mobilenetlike w2a2") > 0);
+        assert!(cyc("denselike w2a2") > 0);
         // a warm rerun is all graph-level hits with zero re-tuning
         let s0 = ctx.cache.stats();
         let again = precision_ladder(&ctx).unwrap();
@@ -718,6 +726,7 @@ mod tests {
         }
         let rendered = render_ladder(&rows, 1.464);
         assert!(rendered.contains("mixed w4a4-stem/w2a2") && rendered.contains("vmacsr"));
+        assert!(rendered.contains("resnetlike w2a2"), "DAG rungs missing from the report");
     }
 
     #[test]

@@ -286,6 +286,64 @@ fn hot_conv_shapes_match_across_engines() {
 }
 
 #[test]
+fn hot_join_and_im2col_shapes_match_across_engines() {
+    // the DAG compiler's two new inter-layer streams: the requantizing
+    // `vadd.vv` residual join (mixed E32/E16 branch widths, the exact
+    // stream `kernels::eltwise` emits) and the im2col strided copy's
+    // load/store churn — all three engines must agree bit-for-bit
+    use sparq::kernels::asm::Asm;
+    use sparq::kernels::eltwise::{emit_add_requant, AddSpec};
+    let cfg = fuzz_cfg();
+    let mut progs = Vec::new();
+    for (a_sew, b_sew, len) in [(Sew::E32, Sew::E16, 96u32), (Sew::E16, Sew::E16, 61)] {
+        let mut a = Asm::new("join-shape", cfg.vlen_bits);
+        emit_add_requant(
+            &mut a,
+            &AddSpec {
+                a_src: 0x100,
+                a_sew,
+                a_rshift: 3,
+                b_src: 0x900,
+                b_sew,
+                b_rshift: 1,
+                amax: 3,
+                dst: 0x1100,
+                len,
+            },
+        );
+        progs.push(a.finish(0));
+    }
+    for sew in [Sew::E8, Sew::E16] {
+        // im2col row streaming: unit-stride vle/vse pairs hopping
+        // between row-shifted sources and K-major destinations
+        let mut p = Program::new("im2col-shape");
+        p.push(VInst::SetVl { avl: 48, sew, lmul: Lmul::M2 });
+        for r in 0..6u64 {
+            p.push(VInst::Load { eew: sew, vd: 0, addr: 0x40 + r * 0x90 });
+            p.push(VInst::Store { eew: sew, vs3: 0, addr: 0x1800 + r * 0x60 });
+        }
+        progs.push(p);
+    }
+    let seed_bytes: Vec<u8> = {
+        let n = (VLEN / 8 * 32) as usize + 4096;
+        (0..n).map(|i| (i as u32).wrapping_mul(2246822519) as u8).collect()
+    };
+    for p in progs {
+        let mut m_ref = machine_with_state(&cfg, &seed_bytes);
+        let mut m_fast = machine_with_state(&cfg, &seed_bytes);
+        let mut m_uop = machine_with_state(&cfg, &seed_bytes);
+        let r_ref = m_ref.run_reference(&p).unwrap();
+        let r_fast = m_fast.run(&p).unwrap();
+        let cp = CompiledProgram::compile(&p, &cfg).unwrap();
+        let r_uop = m_uop.run_compiled(&cp).unwrap();
+        assert_eq!(snapshot(&mut m_ref), snapshot(&mut m_fast), "{}", p.label);
+        assert_eq!(snapshot(&mut m_ref), snapshot(&mut m_uop), "{}", p.label);
+        assert_reports_eq(&r_ref, &r_fast, &p.label);
+        assert_reports_eq(&r_ref, &r_uop, &p.label);
+    }
+}
+
+#[test]
 fn group_past_v31_is_a_typed_compile_error() {
     // An EEW=64 load under an e8 vtype spans 8x the checked group: the
     // interpreter only catches this via debug_assert/slice panics; the

@@ -12,7 +12,11 @@
 //!    zero re-tuning),
 //! 4. illegal mixed graphs are rejected with the typed
 //!    `GraphError`/`SimError` — mismatched boundary widths,
-//!    vmacsr-only precisions on an Ara config, W/A outside 1..=4.
+//!    vmacsr-only precisions on an Ara config, W/A outside 1..=4,
+//! 5. DAG topologies (residual `Add` joins, depthwise + pointwise
+//!    convs, `Dense` im2col-GEMM heads) pin bit-for-bit at every node
+//!    boundary, serve batched, and reject malformed DAGs (cycles,
+//!    wrong join fan-in, mixed-domain joins) with typed errors.
 
 use sparq::arch::ProcessorConfig;
 use sparq::config::ServeConfig;
@@ -208,8 +212,8 @@ fn mixed_boundary_width_mismatch_rejected_with_typed_error() {
     // W4A4 producer with 162 packed issues: the LP plan spills to the
     // wide u32 accumulator; its W2A2 consumer loads 8-bit ULP
     // containers — a 32 -> 8 boundary is two vnsrl steps
-    let graph = QnnGraph {
-        layers: vec![
+    let graph = QnnGraph::chain(
+        vec![
             LayerDesc::Conv {
                 c_in: 36,
                 c_out: 8,
@@ -230,9 +234,9 @@ fn mixed_boundary_width_mismatch_rejected_with_typed_error() {
             },
             LayerDesc::GapFc { c: 4, classes: 4 },
         ],
-        input: (36, 8, 8),
-        classes: 4,
-    };
+        (36, 8, 8),
+        4,
+    );
     let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
     // the typed GraphError from the validator...
     assert_eq!(
@@ -313,6 +317,158 @@ fn whole_network_serves_on_ara_via_native_kernels() {
         assert_eq!(cq.read_tap(&m, li).unwrap(), golden.layer_outs[li], "ara layer {li}");
     }
     assert_eq!(run.logits, golden.logits);
+}
+
+#[test]
+fn dag_topologies_pin_every_node_boundary_at_uniform_precisions() {
+    // residual, depthwise+pointwise and dense-head topologies, each at
+    // the ULP (W2A2) and LP (W4A4) uniform precisions: every node
+    // boundary of an executed inference equals the golden DAG walk
+    let cfg = ProcessorConfig::sparq();
+    let graphs = [
+        ("resnetlike", QnnGraph::sparq_resnetlike()),
+        ("mobilenetlike", QnnGraph::sparq_mobilenetlike()),
+        ("denselike", QnnGraph::sparq_denselike()),
+    ];
+    for (name, graph) in &graphs {
+        for prec in [
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+            QnnPrecision::SubByte { w_bits: 4, a_bits: 4 },
+        ] {
+            let net = QnnNet::from_seed(graph, prec, SEED).unwrap();
+            let cq = CompiledQnn::compile(&cfg, net).unwrap();
+            for image_seed in [3u64, 0xBEEF] {
+                let image = cq.net.test_image(image_seed);
+                let golden = cq.golden(&image).unwrap();
+                let mut m = Machine::new(cfg.clone(), cq.mem_bytes);
+                let run = cq.execute(&mut m, &image).unwrap();
+                for li in 0..graph.layers.len() {
+                    assert_eq!(
+                        cq.read_tap(&m, li).unwrap(),
+                        golden.layer_outs[li],
+                        "{name} {} image {image_seed}: layer {li} ({}) diverged",
+                        prec.label(),
+                        graph.layers[li].name()
+                    );
+                }
+                assert_eq!(run.logits, golden.logits, "{name} {} logits", prec.label());
+                assert_eq!(run.argmax, golden.argmax, "{name} {} argmax", prec.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn dag_topologies_serve_batched_with_bit_identical_slots() {
+    // a batched compilation of each DAG topology: every slot of a full
+    // batch pins against the golden network, and the whole network is
+    // a single cache entry on repeat lookups
+    let cfg = ProcessorConfig::sparq();
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let cache = ProgramCache::new();
+    for graph in [
+        QnnGraph::sparq_resnetlike(),
+        QnnGraph::sparq_mobilenetlike(),
+        QnnGraph::sparq_denselike(),
+    ] {
+        let net = QnnNet::from_seed(&graph, prec, SEED).unwrap();
+        let cq = CompiledQnn::compile_batched(&cfg, net, &cache, 3).unwrap();
+        let images: Vec<Vec<u64>> = (0..3).map(|i| cq.net.test_image(50 + i)).collect();
+        let mut m = Machine::new(cfg.clone(), cq.mem_bytes);
+        let batch = cq.execute_batch(&mut m, &images).unwrap();
+        assert_eq!(batch.runs.len(), 3);
+        for (slot, img) in images.iter().enumerate() {
+            let golden = cq.golden(img).unwrap();
+            assert_eq!(batch.runs[slot].logits, golden.logits, "slot {slot} logits");
+            for li in 0..graph.layers.len() {
+                assert_eq!(
+                    cq.read_tap_slot(&m, li, slot as u32).unwrap(),
+                    golden.layer_outs[li],
+                    "slot {slot} layer {li} ({})",
+                    graph.layers[li].name()
+                );
+            }
+        }
+        // packed networks hoist their weight-pack pass per batch
+        assert!(batch.preamble_cycles() > 0, "packed DAG must hoist a preamble");
+    }
+}
+
+#[test]
+fn dag_server_infers_the_residual_network_end_to_end() {
+    // the serving stack is topology-agnostic: a residual DAG serves
+    // through the same worker/cache path as the chain
+    let cfg = ProcessorConfig::sparq();
+    let graph = QnnGraph::sparq_resnetlike();
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let net = QnnNet::from_seed(&graph, prec, SEED).unwrap();
+    let cache = Arc::new(ProgramCache::new());
+    cache.get_or_compile_qnn(&cfg, &graph, prec, SEED).unwrap();
+    let server = Server::start(
+        sim_qnn_factory(cfg, graph, prec, 4, SEED, Arc::clone(&cache)),
+        ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 16, ..Default::default() },
+        99,
+    )
+    .unwrap();
+    let images: Vec<Vec<u64>> = (0..6).map(|i| net.test_image(7 + i)).collect();
+    let pending: Vec<_> = images
+        .iter()
+        .map(|img| {
+            let fimg: Vec<f32> = img.iter().map(|&v| v as f32).collect();
+            server.submit(fimg).expect("submit")
+        })
+        .collect();
+    for (img, rx) in images.iter().zip(pending) {
+        let golden = net.golden_forward(img).unwrap();
+        let r = rx.recv().unwrap().expect("infer");
+        assert_eq!(r.class, golden.argmax, "served residual classification diverged");
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.errors, 0);
+    assert_eq!(cache.stats().entries, 1, "one compiled network for all workers");
+}
+
+#[test]
+fn malformed_dags_are_rejected_with_typed_errors_end_to_end() {
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    // a self-loop: no topological order exists
+    let mut g = QnnGraph::sparq_cnn();
+    g.preds[2] = vec![2];
+    assert_eq!(g.validate(), Err(GraphError::Cycle { layer: 2 }));
+    match QnnNet::from_seed(&g, prec, SEED) {
+        Err(SimError::Graph(msg)) => assert!(msg.contains("cycle"), "{msg}"),
+        other => panic!("expected SimError::Graph, got {other:?}"),
+    }
+    // an Add with one input edge: wrong fan-in
+    let mut g = QnnGraph::sparq_resnetlike();
+    g.preds[3] = vec![2];
+    assert!(matches!(
+        g.validate(),
+        Err(GraphError::FanInMismatch { layer: 3, expected: 2, got: 1 })
+    ));
+    match QnnNet::from_seed(&g, prec, SEED) {
+        Err(SimError::Graph(msg)) => assert!(msg.contains("input edge"), "{msg}"),
+        other => panic!("expected SimError::Graph, got {other:?}"),
+    }
+    // a residual join whose branches resolve to different activation
+    // domains: W4A4 on one branch, the W2A2 default on the other.
+    // Resolution happens against the processor, so this surfaces at
+    // compile (validate_for), not at weight drawing.
+    let mut g = QnnGraph::sparq_resnetlike();
+    if let LayerDesc::Conv { precision, .. } = &mut g.layers[2] {
+        *precision = Some((4, 4));
+    } else {
+        panic!("resnetlike layer 2 must be the body conv");
+    }
+    assert!(matches!(
+        g.validate_for(&ProcessorConfig::sparq(), prec),
+        Err(GraphError::JoinPrecision { layer: 3, .. })
+    ));
+    let net = QnnNet::from_seed(&g, prec, SEED).unwrap();
+    match CompiledQnn::compile(&ProcessorConfig::sparq(), net) {
+        Err(SimError::Graph(msg)) => assert!(msg.contains("join"), "{msg}"),
+        other => panic!("expected SimError::Graph, got {other:?}"),
+    }
 }
 
 #[test]
