@@ -77,7 +77,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 seed,
                 Arc::clone(&cache),
             ),
-            ServeConfig { workers: 2, batch_window_us: 300, queue_depth: 256 },
+            ServeConfig { workers: 2, batch_window_us: 300, queue_depth: 256, ..Default::default() },
             cyc,
         )?;
 
@@ -138,7 +138,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     {
         use sparq::coordinator::QnnBatchServer;
         let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
-        let serve = ServeConfig { workers: 2, batch_window_us: 2_000, queue_depth: 256, batch: 4 };
+        let serve = ServeConfig {
+            workers: 2,
+            batch_window_us: 2_000,
+            queue_depth: 256,
+            batch: 4,
+            ..ServeConfig::default()
+        };
         let server =
             QnnBatchServer::start(sparq_cfg.clone(), &graph, prec, seed, serve, &cache)?;
         let net = QnnNet::from_seed(&graph, prec, seed)?;

@@ -76,7 +76,13 @@ fn main() {
             &QnnGraph::sparq_cnn(),
             QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
             DEFAULT_QNN_SEED,
-            ServeConfig { workers: 1, batch_window_us: 20_000, queue_depth: 64, batch: 8 },
+            ServeConfig {
+                workers: 1,
+                batch_window_us: 20_000,
+                queue_depth: 64,
+                batch: 8,
+                ..ServeConfig::default()
+            },
             &ctx.cache,
         )
         .expect("server start");

@@ -14,6 +14,11 @@
 //! workers = 2
 //! batch_window_us = 500
 //! queue_depth = 256
+//! deadline_us = 0          # 0 = no default per-request deadline
+//! restart_budget = 8       # supervisor respawns before degraded
+//! restart_backoff_us = 200 # base respawn backoff (doubles per failure)
+//! breaker_threshold = 3    # consecutive shard errors before ejection
+//! probation_us = 50000     # how long an ejected shard sits out
 //! ```
 
 use crate::arch::ProcessorConfig;
@@ -155,6 +160,11 @@ impl Config {
             batch_window_us: self.get_u64("serve", "batch_window_us")?.unwrap_or(500),
             queue_depth: self.get_u32("serve", "queue_depth")?.unwrap_or(256) as usize,
             batch: self.get_u32("serve", "batch")?.unwrap_or(4) as usize,
+            deadline_us: self.get_u64("serve", "deadline_us")?.unwrap_or(0),
+            restart_budget: self.get_u32("serve", "restart_budget")?.unwrap_or(8),
+            restart_backoff_us: self.get_u64("serve", "restart_backoff_us")?.unwrap_or(200),
+            breaker_threshold: self.get_u32("serve", "breaker_threshold")?.unwrap_or(3),
+            probation_us: self.get_u64("serve", "probation_us")?.unwrap_or(50_000),
         })
     }
 }
@@ -170,11 +180,36 @@ pub struct ServeConfig {
     /// `MAX_BATCH`).  The generic executor path takes its batch from
     /// the executor instead.
     pub batch: usize,
+    /// Default per-request deadline in microseconds; `0` disables it.
+    /// `submit_with_deadline` overrides per request.
+    pub deadline_us: u64,
+    /// How many worker respawns the supervisor may spend over the
+    /// server's lifetime before it declares the pool degraded.
+    pub restart_budget: u32,
+    /// Base backoff between respawn attempts for one worker slot,
+    /// microseconds (doubles per consecutive failure, capped).
+    pub restart_backoff_us: u64,
+    /// Consecutive failed batches on one shard before the circuit
+    /// breaker ejects it (`QnnBatchServer`); `0` disables the breaker.
+    pub breaker_threshold: u32,
+    /// How long an ejected shard sits out before it is probed again,
+    /// microseconds.
+    pub probation_us: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 1, batch_window_us: 500, queue_depth: 256, batch: 4 }
+        ServeConfig {
+            workers: 1,
+            batch_window_us: 500,
+            queue_depth: 256,
+            batch: 4,
+            deadline_us: 0,
+            restart_budget: 8,
+            restart_backoff_us: 200,
+            breaker_threshold: 3,
+            probation_us: 50_000,
+        }
     }
 }
 
@@ -220,8 +255,23 @@ queue_depth = 64
         assert_eq!(s.queue_depth, 64);
         assert_eq!(s.batch_window_us, 500); // default
         assert_eq!(s.batch, 4); // default
-        let c = Config::parse("[serve]\nbatch = 8").unwrap();
-        assert_eq!(c.serve().unwrap().batch, 8);
+        assert_eq!(s.deadline_us, 0); // default: no deadline
+        assert_eq!(s.restart_budget, 8);
+        assert_eq!(s.restart_backoff_us, 200);
+        assert_eq!(s.breaker_threshold, 3);
+        assert_eq!(s.probation_us, 50_000);
+        let c = Config::parse(
+            "[serve]\nbatch = 8\ndeadline_us = 2000\nrestart_budget = 2\n\
+             restart_backoff_us = 500\nbreaker_threshold = 5\nprobation_us = 10000",
+        )
+        .unwrap();
+        let s = c.serve().unwrap();
+        assert_eq!(s.batch, 8);
+        assert_eq!(s.deadline_us, 2000);
+        assert_eq!(s.restart_budget, 2);
+        assert_eq!(s.restart_backoff_us, 500);
+        assert_eq!(s.breaker_threshold, 5);
+        assert_eq!(s.probation_us, 10_000);
     }
 
     #[test]

@@ -22,18 +22,43 @@
 //!   per-request wall *and* simulated-cycle latency plus the executed
 //!   batch's fill.
 //!
+//! Robustness (DESIGN.md §Robustness):
+//!
+//! * **Shard failover.**  A request whose batch fails with a transient
+//!   `Worker` error is retried ONCE on a different shard
+//!   (`attempts`-guarded, counted in `Metrics::retries`); only the
+//!   second failure reaches the client typed.
+//! * **Circuit breaker.**  Per-shard consecutive-error counters eject a
+//!   persistently failing shard for a probation window
+//!   (`breaker_threshold` / `probation_us` in `ServeConfig`); routing
+//!   skips ejected shards, re-admits them when probation expires (the
+//!   next request is the probe), and a success heals the shard.  If
+//!   every live shard is ejected, routing falls back to alive-only.
+//! * **Typed refusals.**  Wrong-length images are rejected at submit
+//!   time ([`super::ServeError::BadInput`]) — never truncated or
+//!   padded; when every shard worker has died, submit fails fast with
+//!   [`super::ServeError::NoWorkers`] instead of queueing forever.
+//! * **Graceful drain.**  `shutdown_with_deadline` rejects new work,
+//!   finishes queued work until the deadline, sheds the rest typed,
+//!   and reports [`super::DrainStats`].
+//! * **Deterministic chaos.**  `start_chaos` threads a seeded
+//!   [`FaultPlan`] into every shard worker; each executed batch
+//!   consults the plan (panic / typed error / kill / delay / corrupt
+//!   logits), so the chaos suite replays bit-identically.
+//!
 //! Per-image results are bit-identical to unbatched inference (the
 //! batch determinism tests in `rust/tests/serve_batch.rs` pin logits
 //! and cycles), so batching is purely a throughput/amortization
 //! decision.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::{InferResult, Metrics, ServeError, Snapshot};
+use super::fault::{self, FaultAction, FaultPlan};
+use super::{DrainStats, InferResult, Metrics, ServeError, Snapshot};
 use crate::arch::ProcessorConfig;
 use crate::config::ServeConfig;
 use crate::kernels::ProgramCache;
@@ -47,6 +72,81 @@ struct BatchRequest {
     image: Vec<f32>,
     resp: SyncSender<Result<InferResult, ServeError>>,
     enqueued: Instant,
+    /// Absolute deadline; shed typed pre-execution once passed.
+    deadline: Option<Instant>,
+    /// Failover retries already spent (max 1).
+    attempts: u8,
+}
+
+/// Per-shard breaker/liveness state.
+#[derive(Debug)]
+struct ShardState {
+    /// The shard's worker thread is running (cleared on exit).
+    alive: AtomicBool,
+    /// Consecutive failed batches (a success resets it).
+    consecutive: AtomicU32,
+    /// Failed batches on this shard, total.
+    errors: AtomicU64,
+    /// Times the breaker ejected this shard.
+    trips: AtomicU64,
+    /// While `Some(t)` with `t` in the future, routing skips the shard
+    /// (pass 1); expiry re-admits it and a success clears the field.
+    ejected_until: Mutex<Option<Instant>>,
+}
+
+impl ShardState {
+    fn new() -> ShardState {
+        ShardState {
+            alive: AtomicBool::new(true),
+            consecutive: AtomicU32::new(0),
+            errors: AtomicU64::new(0),
+            trips: AtomicU64::new(0),
+            ejected_until: Mutex::new(None),
+        }
+    }
+
+    fn ejected(&self, now: Instant) -> bool {
+        self.ejected_until.lock().unwrap().is_some_and(|t| now < t)
+    }
+}
+
+/// State shared by the server handle and every shard worker (workers
+/// need the sender list to fail requests over to another shard).
+struct BatchShared {
+    shards: Vec<ShardState>,
+    /// `None` once shutdown began: new submits see `Closed`, workers
+    /// exit when their queue drains.
+    txs: RwLock<Option<Vec<SyncSender<BatchRequest>>>>,
+    metrics: Arc<Metrics>,
+    /// Graceful-drain deadline (see `shutdown_with_deadline`).
+    drain_by: RwLock<Option<Instant>>,
+    /// Consecutive errors before ejection; 0 disables the breaker.
+    breaker_threshold: u32,
+    probation: Duration,
+}
+
+/// Per-shard health view (see [`QnnBatchServer::health`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardHealth {
+    pub alive: bool,
+    /// Failed batches on this shard, total.
+    pub errors: u64,
+    /// Consecutive failed batches right now.
+    pub consecutive_errors: u32,
+    /// Times the breaker ejected this shard.
+    pub trips: u64,
+    /// Currently sitting out a probation window.
+    pub ejected: bool,
+}
+
+/// Pool-level health of the batched server.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchHealth {
+    pub shards: Vec<ShardHealth>,
+    /// Shards alive right now.
+    pub alive: usize,
+    /// Breaker ejections across all shards.
+    pub breaker_trips: u64,
 }
 
 /// A running batched QNN inference server (simulator backend, no
@@ -54,12 +154,13 @@ struct BatchRequest {
 /// [`ProgramCache`] under its batched graph-level key; every worker
 /// shares the `Arc`'d model and owns a private [`MachinePool`].
 pub struct QnnBatchServer {
-    shards: Option<Vec<SyncSender<BatchRequest>>>,
+    shared: Arc<BatchShared>,
     rr: AtomicUsize,
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     batch: usize,
     image_len: usize,
+    default_deadline: Option<Duration>,
 }
 
 impl QnnBatchServer {
@@ -74,6 +175,21 @@ impl QnnBatchServer {
         serve: ServeConfig,
         cache: &ProgramCache,
     ) -> Result<QnnBatchServer, ServeError> {
+        QnnBatchServer::start_chaos(cfg, graph, precision, seed, serve, cache, None)
+    }
+
+    /// [`QnnBatchServer::start`] with a fault-injection plan threaded
+    /// into every shard worker — each executed batch consults the plan
+    /// once (DESIGN.md §Robustness).  `None` serves clean.
+    pub fn start_chaos(
+        cfg: ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+        serve: ServeConfig,
+        cache: &ProgramCache,
+        plan: Option<Arc<FaultPlan>>,
+    ) -> Result<QnnBatchServer, ServeError> {
         let batch = serve.batch.clamp(1, MAX_BATCH as usize) as u32;
         let model = Arc::new(
             SimQnnModel::compile_batched(&cfg, graph, precision, seed, cache, batch)
@@ -85,27 +201,55 @@ impl QnnBatchServer {
         let window = Duration::from_micros(serve.batch_window_us);
         let metrics = Arc::new(Metrics::default());
         let image_len = model.input_len();
-        let mut shards = Vec::with_capacity(workers);
-        let mut handles = Vec::with_capacity(workers);
-        for wid in 0..workers {
+        let mut txs = Vec::with_capacity(workers);
+        let mut rxs = Vec::with_capacity(workers);
+        for _ in 0..workers {
             let (tx, rx) = sync_channel::<BatchRequest>(shard_depth);
-            shards.push(tx);
-            let metrics = Arc::clone(&metrics);
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let shared = Arc::new(BatchShared {
+            shards: (0..workers).map(|_| ShardState::new()).collect(),
+            txs: RwLock::new(Some(txs)),
+            metrics: Arc::clone(&metrics),
+            drain_by: RwLock::new(None),
+            breaker_threshold: serve.breaker_threshold,
+            probation: Duration::from_micros(serve.probation_us.max(1)),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for (wid, rx) in rxs.into_iter().enumerate() {
+            let shared = Arc::clone(&shared);
             let model = Arc::clone(&model);
+            let plan = plan.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("sparq-batch-worker-{wid}"))
-                    .spawn(move || worker_loop(rx, metrics, model, window))
+                    .spawn(move || {
+                        worker_loop(&rx, wid, &shared, &model, window, plan);
+                        // Exit path (kill or shutdown): mark the shard
+                        // dead, then fail queued work over to the live
+                        // shards.  A request that races into the queue
+                        // after this drain is dropped with the channel
+                        // — its client sees a typed `Closed`, never a
+                        // hang.
+                        shared.shards[wid].alive.store(false, Ordering::SeqCst);
+                        while let Ok(req) = rx.try_recv() {
+                            shared.metrics.queue_dec(1);
+                            fail_over(&shared, wid, req, "shard worker exited");
+                        }
+                    })
                     .map_err(|e| ServeError::Worker(e.to_string()))?,
             );
         }
         Ok(QnnBatchServer {
-            shards: Some(shards),
+            shared,
             rr: AtomicUsize::new(0),
             metrics,
             workers: handles,
             batch: batch as usize,
             image_len,
+            default_deadline: (serve.deadline_us > 0)
+                .then(|| Duration::from_micros(serve.deadline_us)),
         })
     }
 
@@ -119,31 +263,67 @@ impl QnnBatchServer {
         self.image_len
     }
 
-    /// Non-blocking submit: round-robin shard assignment with failover
-    /// — the request lands on the first non-full shard after its
-    /// assigned one; [`ServeError::QueueFull`] only when every shard
-    /// is at capacity (typed backpressure, recorded in the metrics).
+    /// Non-blocking submit with the config-level default deadline.
     pub fn submit(
         &self,
         image: Vec<f32>,
     ) -> Result<Receiver<Result<InferResult, ServeError>>, ServeError> {
-        let shards = self.shards.as_ref().ok_or(ServeError::Closed)?;
-        let n = shards.len();
+        self.submit_with_deadline(image, self.default_deadline)
+    }
+
+    /// Non-blocking submit with an explicit per-request deadline:
+    /// round-robin shard assignment, skipping dead and breaker-ejected
+    /// shards (ejected-but-alive shards are a second-pass fallback so
+    /// an all-ejected pool still serves); [`ServeError::QueueFull`]
+    /// only when every candidate shard is at capacity.  Wrong-length
+    /// images are refused typed ([`ServeError::BadInput`]); a fully
+    /// dead pool fails fast ([`ServeError::NoWorkers`]).
+    pub fn submit_with_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<InferResult, ServeError>>, ServeError> {
+        if image.len() != self.image_len {
+            self.metrics.record_bad_input();
+            return Err(ServeError::BadInput { got: image.len(), want: self.image_len });
+        }
+        let g = self.shared.txs.read().unwrap();
+        let Some(txs) = g.as_ref() else {
+            return Err(ServeError::Closed);
+        };
+        if !self.shared.shards.iter().any(|s| s.alive.load(Ordering::SeqCst)) {
+            self.metrics.record_no_workers(1);
+            return Err(ServeError::NoWorkers);
+        }
+        let n = txs.len();
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
         let (rtx, rrx) = sync_channel(1);
-        let mut req = BatchRequest { image, resp: rtx, enqueued: Instant::now() };
+        let now = Instant::now();
+        let mut req = BatchRequest {
+            image,
+            resp: rtx,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            attempts: 0,
+        };
         // gauge BEFORE the send: a worker may dequeue (and queue_dec)
         // the instant try_send lands, and inc-after-send would let the
         // gauge transiently read negative
         self.metrics.queue_inc();
-        for k in 0..n {
-            match shards[(start + k) % n].try_send(req) {
-                Ok(()) => return Ok(rrx),
-                Err(TrySendError::Full(r)) => req = r,
-                Err(TrySendError::Disconnected(_)) => {
-                    self.metrics.queue_dec(1);
-                    return Err(ServeError::Closed);
+        for pass in 0..2 {
+            for k in 0..n {
+                let i = (start + k) % n;
+                let st = &self.shared.shards[i];
+                if !st.alive.load(Ordering::SeqCst) {
+                    continue;
                 }
+                if pass == 0 && st.ejected(now) {
+                    continue;
+                }
+                req = match txs[i].try_send(req) {
+                    Ok(()) => return Ok(rrx),
+                    Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => r,
+                };
             }
         }
         self.metrics.queue_dec(1);
@@ -157,25 +337,121 @@ impl QnnBatchServer {
         rx.recv().map_err(|_| ServeError::Closed)?
     }
 
-    /// Drain the shards, stop the workers, return the final metrics.
+    /// Bounded-time inference: the request carries `timeout` as its
+    /// deadline; returns [`ServeError::Deadline`] if no response
+    /// arrives within it.  Never blocks longer than `timeout`.
+    pub fn infer_timeout(
+        &self,
+        image: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<InferResult, ServeError> {
+        let rx = self.submit_with_deadline(image, Some(timeout))?;
+        match rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err(ServeError::Deadline),
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Shard/breaker health right now.
+    pub fn health(&self) -> BatchHealth {
+        let now = Instant::now();
+        let shards: Vec<ShardHealth> = self
+            .shared
+            .shards
+            .iter()
+            .map(|s| ShardHealth {
+                alive: s.alive.load(Ordering::SeqCst),
+                errors: s.errors.load(Ordering::SeqCst),
+                consecutive_errors: s.consecutive.load(Ordering::SeqCst),
+                trips: s.trips.load(Ordering::SeqCst),
+                ejected: s.ejected(now),
+            })
+            .collect();
+        let alive = shards.iter().filter(|s| s.alive).count();
+        let breaker_trips = shards.iter().map(|s| s.trips).sum();
+        BatchHealth { shards, alive, breaker_trips }
+    }
+
+    /// Drain the shards fully, stop the workers, return the final
+    /// metrics (the original unbounded drain).
     pub fn shutdown(mut self) -> Snapshot {
-        self.shards.take(); // close every shard; workers exit on disconnect
+        self.stop_workers();
+        self.metrics.snapshot()
+    }
+
+    /// Graceful bounded drain: stop accepting work immediately, let
+    /// queued work finish until `deadline`, shed the rest typed with
+    /// [`ServeError::Closed`], and report what happened.  In-flight
+    /// batches run to completion, so the wall time is bounded by the
+    /// deadline plus one batch execution.
+    pub fn shutdown_with_deadline(mut self, deadline: Duration) -> (Snapshot, DrainStats) {
+        let t0 = Instant::now();
+        let before = self.metrics.snapshot();
+        *self.shared.drain_by.write().unwrap() = Some(t0 + deadline);
+        self.stop_workers();
+        let after = self.metrics.snapshot();
+        let stats = DrainStats {
+            completed: after.completed.saturating_sub(before.completed),
+            shed: after.drain_shed.saturating_sub(before.drain_shed),
+            wall_us: t0.elapsed().as_micros() as u64,
+        };
+        (after, stats)
+    }
+
+    fn stop_workers(&mut self) {
+        // close every shard; workers exit once their queue drains
+        self.shared.txs.write().unwrap().take();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.metrics.snapshot()
     }
 }
 
+/// Re-queue `req` on any live shard other than `from` (ejected shards
+/// are a second-pass fallback).  If no shard can take it, the request
+/// fails typed with the originating error.
+fn fail_over(shared: &BatchShared, from: usize, mut req: BatchRequest, err: &str) {
+    {
+        let g = shared.txs.read().unwrap();
+        if let Some(txs) = g.as_ref() {
+            let now = Instant::now();
+            shared.metrics.queue_inc();
+            for pass in 0..2 {
+                for (i, tx) in txs.iter().enumerate() {
+                    if i == from || !shared.shards[i].alive.load(Ordering::SeqCst) {
+                        continue;
+                    }
+                    if pass == 0 && shared.shards[i].ejected(now) {
+                        continue;
+                    }
+                    req = match tx.try_send(req) {
+                        Ok(()) => {
+                            shared.metrics.record_retries(1);
+                            return;
+                        }
+                        Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => r,
+                    };
+                }
+            }
+            shared.metrics.queue_dec(1);
+        }
+    }
+    shared.metrics.record_errors(1);
+    let _ = req.resp.send(Err(ServeError::Worker(err.to_string())));
+}
+
 fn worker_loop(
-    rx: Receiver<BatchRequest>,
-    metrics: Arc<Metrics>,
-    model: Arc<SimQnnModel>,
+    rx: &Receiver<BatchRequest>,
+    wid: usize,
+    shared: &Arc<BatchShared>,
+    model: &Arc<SimQnnModel>,
     window: Duration,
+    plan: Option<Arc<FaultPlan>>,
 ) {
     let pool = MachinePool::new();
     let batch = model.batch();
-    let per = model.input_len();
+    let metrics = &shared.metrics;
     loop {
         // take the shard's first request (blocking), then fill the
         // batch greedily within the window
@@ -185,9 +461,9 @@ fn worker_loop(
         };
         metrics.queue_dec(1);
         let mut reqs = vec![first];
-        let deadline = Instant::now() + window;
+        let wdl = Instant::now() + window;
         while reqs.len() < batch {
-            let left = deadline.saturating_duration_since(Instant::now());
+            let left = wdl.saturating_duration_since(Instant::now());
             match rx.recv_timeout(left) {
                 Ok(r) => {
                     metrics.queue_dec(1);
@@ -197,30 +473,86 @@ fn worker_loop(
             }
         }
 
-        // normalize request images to the model's input length (short
-        // images zero-pad, long ones truncate — same contract as the
-        // generic server's padded batch assembly).  Taken by value:
-        // the request only needs its channel/timestamp from here on,
-        // so the hot path pays no per-image copy.
-        let inputs: Vec<Vec<f32>> = reqs
-            .iter_mut()
-            .map(|r| {
-                let mut img = std::mem::take(&mut r.image);
-                img.resize(per, 0.0);
-                img
-            })
-            .collect();
-        // a poisoned batch must not kill the worker (same catch as the
-        // generic server)
-        let result: Result<_, String> =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                model.infer_batch(&pool, &inputs)
-            }))
-            .map_err(|p| super::panic_message(p.as_ref()))
-            .and_then(|r| r.map_err(|e| e.to_string()));
+        // Graceful drain: past the drain deadline, queued work is shed
+        // typed instead of executed.
+        if let Some(dl) = *shared.drain_by.read().unwrap() {
+            if Instant::now() > dl {
+                metrics.record_drain_shed(reqs.len() as u64);
+                for r in reqs {
+                    let _ = r.resp.send(Err(ServeError::Closed));
+                }
+                continue;
+            }
+        }
+
+        // Deadline shedding: expired requests are answered typed and
+        // never executed.
+        let now = Instant::now();
+        let mut shed = 0u64;
+        reqs.retain(|r| match r.deadline {
+            Some(d) if now > d => {
+                shed += 1;
+                let _ = r.resp.send(Err(ServeError::Deadline));
+                false
+            }
+            _ => true,
+        });
+        if shed > 0 {
+            metrics.record_deadline_shed(shed);
+        }
+        if reqs.is_empty() {
+            continue;
+        }
+
+        // One fault-plan consult per executed batch.
+        let injected =
+            plan.as_ref().map(|p| p.next_for(wid)).unwrap_or(FaultAction::None);
+        if let FaultAction::Delay(us) = injected {
+            std::thread::sleep(Duration::from_micros(us));
+        }
+
         let fill = reqs.len() as u32;
+        // `submit` validated every image length, so images stage into
+        // the arena exactly as sent — no truncation, no padding.
+        let result: Result<(Vec<(Vec<i64>, u64)>, u64), String> = match injected {
+            FaultAction::Error => Err(format!("chaos: injected error (shard {wid})")),
+            FaultAction::Kill => Err(format!("{} (shard {wid})", fault::KILL_SENTINEL)),
+            _ => {
+                let inputs: Vec<Vec<f32>> =
+                    reqs.iter_mut().map(|r| std::mem::take(&mut r.image)).collect();
+                // a poisoned batch must not kill the worker (same catch
+                // as the generic server)
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if injected == FaultAction::Panic {
+                        panic!("chaos: injected panic (shard {wid})");
+                    }
+                    model.infer_batch(&pool, &inputs)
+                }))
+                .map_err(|p| super::panic_message(p.as_ref()))
+                .and_then(|r| r.map_err(|e| e.to_string()));
+                if res.is_err() {
+                    // restore the images so a failover retry re-executes
+                    // the real request, not an empty one
+                    for (r, img) in reqs.iter_mut().zip(inputs) {
+                        r.image = img;
+                    }
+                }
+                res
+            }
+        };
+        let st = &shared.shards[wid];
         match result {
-            Ok((per_image, _batch_cycles)) => {
+            Ok((mut per_image, _batch_cycles)) => {
+                if injected == FaultAction::CorruptLogits {
+                    for (logits, _) in per_image.iter_mut() {
+                        if let Some(first) = logits.first_mut() {
+                            *first = i64::MIN;
+                        }
+                    }
+                }
+                // a success heals the breaker
+                st.consecutive.store(0, Ordering::SeqCst);
+                *st.ejected_until.lock().unwrap() = None;
                 let mut riders = Vec::with_capacity(reqs.len());
                 for (r, (logits, slot_cycles)) in reqs.into_iter().zip(per_image) {
                     let class = argmax_i64(&logits);
@@ -236,9 +568,29 @@ fn worker_loop(
                 metrics.record_batch(&riders, fill);
             }
             Err(e) => {
-                metrics.record_errors(reqs.len() as u64);
-                for r in reqs {
-                    let _ = r.resp.send(Err(ServeError::Worker(e.clone())));
+                st.errors.fetch_add(1, Ordering::SeqCst);
+                let consecutive = st.consecutive.fetch_add(1, Ordering::SeqCst) + 1;
+                if shared.breaker_threshold > 0 && consecutive >= shared.breaker_threshold {
+                    *st.ejected_until.lock().unwrap() =
+                        Some(Instant::now() + shared.probation);
+                    st.trips.fetch_add(1, Ordering::SeqCst);
+                    metrics.record_breaker_trip();
+                }
+                let killed = fault::is_kill(&e);
+                for mut r in reqs {
+                    if r.attempts == 0 {
+                        // transient failure: one retry on another shard
+                        r.attempts = 1;
+                        fail_over(shared, wid, r, &e);
+                    } else {
+                        metrics.record_errors(1);
+                        let _ = r.resp.send(Err(ServeError::Worker(e.clone())));
+                    }
+                }
+                if killed {
+                    // the spawn closure marks the shard dead and fails
+                    // queued work over to the surviving shards
+                    return;
                 }
             }
         }
@@ -259,8 +611,13 @@ mod tests {
         let cache = ProgramCache::new();
         let graph = QnnGraph::sparq_cnn();
         let seed = 0xBA7C_5EED;
-        let serve =
-            ServeConfig { workers: 2, batch_window_us: 200, queue_depth: 64, batch: 4 };
+        let serve = ServeConfig {
+            workers: 2,
+            batch_window_us: 200,
+            queue_depth: 64,
+            batch: 4,
+            ..ServeConfig::default()
+        };
         let server = QnnBatchServer::start(
             ProcessorConfig::sparq(),
             &graph,
@@ -309,5 +666,56 @@ mod tests {
             &cache,
         );
         assert!(matches!(r, Err(ServeError::Worker(_))));
+    }
+
+    #[test]
+    fn wrong_length_image_is_rejected_typed() {
+        let cache = ProgramCache::new();
+        let serve = ServeConfig { workers: 1, batch: 2, ..ServeConfig::default() };
+        let server = QnnBatchServer::start(
+            ProcessorConfig::sparq(),
+            &QnnGraph::sparq_cnn(),
+            w2a2(),
+            7,
+            serve,
+            &cache,
+        )
+        .unwrap();
+        let want = server.image_len();
+        match server.submit(vec![0.5; want + 1]) {
+            Err(ServeError::BadInput { got, want: w }) => {
+                assert_eq!(got, want + 1);
+                assert_eq!(w, want);
+            }
+            other => panic!("expected BadInput, got {other:?}"),
+        }
+        match server.submit(vec![0.5; 1]) {
+            Err(ServeError::BadInput { got: 1, .. }) => {}
+            other => panic!("expected BadInput, got {other:?}"),
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.bad_input, 2);
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.queue_depth, 0);
+    }
+
+    #[test]
+    fn health_starts_clean() {
+        let cache = ProgramCache::new();
+        let serve = ServeConfig { workers: 2, batch: 2, ..ServeConfig::default() };
+        let server = QnnBatchServer::start(
+            ProcessorConfig::sparq(),
+            &QnnGraph::sparq_cnn(),
+            w2a2(),
+            7,
+            serve,
+            &cache,
+        )
+        .unwrap();
+        let h = server.health();
+        assert_eq!(h.alive, 2);
+        assert_eq!(h.breaker_trips, 0);
+        assert!(h.shards.iter().all(|s| s.alive && !s.ejected && s.errors == 0));
+        server.shutdown();
     }
 }

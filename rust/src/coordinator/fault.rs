@@ -1,0 +1,409 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Chaos testing is only useful if a failing run can be replayed
+//! bit-identically, so everything here is a pure function of a seed and
+//! a call index — there is no wall-clock or OS randomness anywhere in
+//! the decision path.
+//!
+//! Two decision layers compose inside a [`FaultPlan`]:
+//!
+//! * **Rules** ([`FaultRule`]) match on a worker id and that worker's
+//!   *local* call index (its 1st, 2nd, ... executed batch).  Rules are
+//!   checked first and are the tool for targeted scenarios ("shard 0
+//!   errors on its first three batches").
+//! * **A seeded spec** ([`ChaosSpec`]) draws from a splitmix64 hash of
+//!   `(seed, global call index)` against per-mille rates.  Because the
+//!   draw depends only on the *global* index — not on which worker
+//!   happened to pick the request up — the multiset of injected faults
+//!   over N calls is identical across runs even though thread
+//!   interleaving is not.
+//!
+//! The injection point is [`ChaosExecutor`], a wrapper implementing
+//! [`Executor`] around any inner executor; [`chaos_factory`] lifts the
+//! wrap over an [`ExecutorFactory`] so `Server::start` needs no changes
+//! to run under chaos.  The batched path consults the plan directly
+//! (see `coordinator::batch`).
+//!
+//! Worker death cannot be modelled by a panic (the worker loop catches
+//! panics by design), so a killed worker is signalled by a sentinel
+//! error string ([`KILL_SENTINEL`], tested via [`is_kill`]) that the
+//! worker loop translates into "reply, then exit the thread" — which is
+//! exactly what the supervisor exists to repair.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{Executor, ExecutorFactory};
+
+/// Error-message marker meaning "the worker owning this executor must
+/// die after replying".  Checked by both worker loops via [`is_kill`].
+pub const KILL_SENTINEL: &str = "chaos: kill worker";
+
+/// True if `msg` carries the worker-kill sentinel.
+pub fn is_kill(msg: &str) -> bool {
+    msg.contains(KILL_SENTINEL)
+}
+
+/// Upper bound on distinct per-worker call counters a plan tracks.
+/// Worker ids wrap modulo this; respawned workers get fresh ids from
+/// [`chaos_factory`], so targeted rules only ever address the first
+/// generation deterministically.
+const MAX_WORKERS: usize = 64;
+
+/// What to inject at one executor call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Execute normally.
+    None,
+    /// Panic inside the executor (caught by the worker loop; the batch
+    /// fails typed, the worker survives).
+    Panic,
+    /// Return a typed `Err` without executing.
+    Error,
+    /// Return the kill-sentinel `Err`; the worker replies and exits.
+    Kill,
+    /// Sleep this many microseconds, then execute normally (drives
+    /// deadline shedding and drain tests).
+    Delay(u64),
+    /// Execute normally, then overwrite the first logit of each image
+    /// with a NaN/minimum sentinel (exercises NaN-safe argmax).
+    CorruptLogits,
+}
+
+/// Which of a worker's local calls a [`FaultRule`] fires on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallSel {
+    /// Exactly the n-th local call (0-based).
+    Nth(u64),
+    /// Every k-th local call (`n % k == 0`); `k == 0` never matches.
+    Every(u64),
+    /// Local calls in `[lo, hi)`.
+    Range(u64, u64),
+    /// Every call.
+    Always,
+}
+
+impl CallSel {
+    fn matches(&self, n: u64) -> bool {
+        match *self {
+            CallSel::Nth(k) => n == k,
+            CallSel::Every(k) => k != 0 && n % k == 0,
+            CallSel::Range(lo, hi) => n >= lo && n < hi,
+            CallSel::Always => true,
+        }
+    }
+}
+
+/// A targeted injection: fire `action` when `when` matches the local
+/// call index of `worker` (or of any worker if `worker` is `None`).
+/// First matching rule wins; rules shadow the seeded spec.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    pub worker: Option<usize>,
+    pub when: CallSel,
+    pub action: FaultAction,
+}
+
+/// Background fault rates in per-mille of executor calls, drawn
+/// deterministically from the plan seed and the global call index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub kill_per_mille: u16,
+    pub panic_per_mille: u16,
+    pub error_per_mille: u16,
+    pub delay_per_mille: u16,
+    /// Sleep length for `Delay` draws, microseconds.
+    pub delay_us: u64,
+    pub corrupt_per_mille: u16,
+}
+
+impl ChaosSpec {
+    /// No background faults (rules only).
+    pub fn quiet() -> ChaosSpec {
+        ChaosSpec {
+            kill_per_mille: 0,
+            panic_per_mille: 0,
+            error_per_mille: 0,
+            delay_per_mille: 0,
+            delay_us: 0,
+            corrupt_per_mille: 0,
+        }
+    }
+
+    /// An aggressive mix used by the chaos suite: ~4% kills, ~4%
+    /// panics, ~4% typed errors, ~1% 100µs delays, ~2% corrupt logits.
+    pub fn storm() -> ChaosSpec {
+        ChaosSpec {
+            kill_per_mille: 40,
+            panic_per_mille: 40,
+            error_per_mille: 40,
+            delay_per_mille: 10,
+            delay_us: 100,
+            corrupt_per_mille: 20,
+        }
+    }
+
+    /// The action this spec injects at global call `n` under `seed`.
+    /// Pure: same `(seed, n)` always yields the same action.
+    fn action(&self, seed: u64, n: u64) -> FaultAction {
+        let total = self.kill_per_mille
+            + self.panic_per_mille
+            + self.error_per_mille
+            + self.delay_per_mille
+            + self.corrupt_per_mille;
+        if total == 0 {
+            return FaultAction::None;
+        }
+        let draw = (splitmix(seed ^ n.wrapping_mul(0x9e37_79b9_7f4a_7c15)) % 1000) as u16;
+        let mut edge = self.kill_per_mille;
+        if draw < edge {
+            return FaultAction::Kill;
+        }
+        edge += self.panic_per_mille;
+        if draw < edge {
+            return FaultAction::Panic;
+        }
+        edge += self.error_per_mille;
+        if draw < edge {
+            return FaultAction::Error;
+        }
+        edge += self.delay_per_mille;
+        if draw < edge {
+            return FaultAction::Delay(self.delay_us);
+        }
+        edge += self.corrupt_per_mille;
+        if draw < edge {
+            return FaultAction::CorruptLogits;
+        }
+        FaultAction::None
+    }
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// A replayable fault schedule shared (via `Arc`) by every chaos
+/// executor of one server.  Carries one global call counter (feeds the
+/// seeded spec) and per-worker counters (feed the rules), so both
+/// decision layers are deterministic under thread interleaving.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: Option<ChaosSpec>,
+    rules: Vec<FaultRule>,
+    calls: AtomicU64,
+    worker_calls: Vec<AtomicU64>,
+}
+
+impl FaultPlan {
+    /// Background chaos at the given rates, replayable from `seed`.
+    pub fn seeded(seed: u64, spec: ChaosSpec) -> FaultPlan {
+        FaultPlan {
+            seed,
+            spec: Some(spec),
+            rules: Vec::new(),
+            calls: AtomicU64::new(0),
+            worker_calls: (0..MAX_WORKERS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Targeted rules only, no background faults.
+    pub fn from_rules(rules: Vec<FaultRule>) -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            spec: None,
+            rules,
+            calls: AtomicU64::new(0),
+            worker_calls: (0..MAX_WORKERS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Add a targeted rule (checked before the seeded spec).
+    pub fn with_rule(mut self, rule: FaultRule) -> FaultPlan {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Total executor calls consumed so far (shed requests never
+    /// consume a call — the chaos suite asserts on this).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    /// Consume one call on behalf of `worker` and return the action to
+    /// inject.  Advances both the global and the worker-local counter.
+    pub fn next_for(&self, worker: usize) -> FaultAction {
+        let g = self.calls.fetch_add(1, Ordering::SeqCst);
+        let p = self.worker_calls[worker % MAX_WORKERS].fetch_add(1, Ordering::SeqCst);
+        self.decide(worker, g, p)
+    }
+
+    /// Pure decision: rules on `(worker, local)` first, then the
+    /// seeded spec on `global`.
+    fn decide(&self, worker: usize, global: u64, local: u64) -> FaultAction {
+        for r in &self.rules {
+            let worker_ok = match r.worker {
+                Some(w) => w == worker,
+                None => true,
+            };
+            if worker_ok && r.when.matches(local) {
+                return r.action;
+            }
+        }
+        match self.spec {
+            Some(spec) => spec.action(self.seed, global),
+            None => FaultAction::None,
+        }
+    }
+}
+
+/// An [`Executor`] wrapper that consults a shared [`FaultPlan`] before
+/// each `run`.  `Panic`/`Error`/`Kill` replace the inner call entirely;
+/// `Delay` sleeps first; `CorruptLogits` poisons the first logit of
+/// each image in an otherwise-successful result.
+pub struct ChaosExecutor {
+    inner: Box<dyn Executor>,
+    plan: Arc<FaultPlan>,
+    worker: usize,
+}
+
+impl ChaosExecutor {
+    pub fn new(inner: Box<dyn Executor>, plan: Arc<FaultPlan>, worker: usize) -> ChaosExecutor {
+        ChaosExecutor { inner, plan, worker }
+    }
+}
+
+impl Executor for ChaosExecutor {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn image_len(&self) -> usize {
+        self.inner.image_len()
+    }
+
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+
+    fn run(&mut self, batch: &[f32]) -> Result<Vec<f32>, String> {
+        match self.plan.next_for(self.worker) {
+            FaultAction::None => self.inner.run(batch),
+            FaultAction::Panic => panic!("chaos: injected panic (worker {})", self.worker),
+            FaultAction::Error => Err(format!("chaos: injected error (worker {})", self.worker)),
+            FaultAction::Kill => Err(format!("{} (worker {})", KILL_SENTINEL, self.worker)),
+            FaultAction::Delay(us) => {
+                std::thread::sleep(Duration::from_micros(us));
+                self.inner.run(batch)
+            }
+            FaultAction::CorruptLogits => {
+                let mut logits = self.inner.run(batch)?;
+                let classes = self.classes().max(1);
+                let mut i = 0;
+                while i < logits.len() {
+                    logits[i] = f32::NAN;
+                    i += classes;
+                }
+                Ok(logits)
+            }
+        }
+    }
+}
+
+/// Wrap an executor factory so every worker it builds runs under the
+/// shared `plan`.  Worker ids are assigned in construction order
+/// (respawned workers get fresh ids), so targeted rules address the
+/// initial generation 0..N-1 deterministically.
+pub fn chaos_factory(inner: ExecutorFactory, plan: Arc<FaultPlan>) -> ExecutorFactory {
+    let next_id = Arc::new(AtomicUsize::new(0));
+    Box::new(move || {
+        let worker = next_id.fetch_add(1, Ordering::SeqCst);
+        let exec = inner()?;
+        Ok(Box::new(ChaosExecutor::new(exec, Arc::clone(&plan), worker)) as Box<dyn Executor>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plan_replays_identically() {
+        let a = FaultPlan::seeded(42, ChaosSpec::storm());
+        let b = FaultPlan::seeded(42, ChaosSpec::storm());
+        let seq_a: Vec<FaultAction> = (0..256).map(|_| a.next_for(0)).collect();
+        let seq_b: Vec<FaultAction> = (0..256).map(|_| b.next_for(0)).collect();
+        assert_eq!(seq_a, seq_b);
+        assert_eq!(a.calls(), 256);
+    }
+
+    #[test]
+    fn seeded_draws_ignore_worker_id() {
+        // The spec layer keys on the global index only, so the same
+        // global sequence is injected no matter which worker consumes
+        // each call — this is what makes storm totals replayable.
+        let a = FaultPlan::seeded(7, ChaosSpec::storm());
+        let b = FaultPlan::seeded(7, ChaosSpec::storm());
+        let seq_a: Vec<FaultAction> = (0..128).map(|i| a.next_for(i % 2)).collect();
+        let seq_b: Vec<FaultAction> = (0..128).map(|i| b.next_for((i + 1) % 2)).collect();
+        assert_eq!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = FaultPlan::seeded(1, ChaosSpec::storm());
+        let b = FaultPlan::seeded(2, ChaosSpec::storm());
+        let seq_a: Vec<FaultAction> = (0..256).map(|_| a.next_for(0)).collect();
+        let seq_b: Vec<FaultAction> = (0..256).map(|_| b.next_for(0)).collect();
+        assert_ne!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn storm_rates_land_near_per_mille_budget() {
+        let plan = FaultPlan::seeded(123, ChaosSpec::storm());
+        let mut faults = 0u32;
+        for _ in 0..4000 {
+            if plan.next_for(0) != FaultAction::None {
+                faults += 1;
+            }
+        }
+        // storm() budgets 150‰; allow a generous window around it.
+        assert!((300..=900).contains(&faults), "faults = {faults}");
+    }
+
+    #[test]
+    fn rules_match_worker_local_indices() {
+        let plan = FaultPlan::from_rules(vec![
+            FaultRule { worker: Some(0), when: CallSel::Range(0, 2), action: FaultAction::Error },
+            FaultRule { worker: Some(1), when: CallSel::Nth(1), action: FaultAction::Kill },
+        ]);
+        // Interleave workers; rules must see each worker's own count.
+        assert_eq!(plan.next_for(0), FaultAction::Error); // w0 local 0
+        assert_eq!(plan.next_for(1), FaultAction::None); // w1 local 0
+        assert_eq!(plan.next_for(0), FaultAction::Error); // w0 local 1
+        assert_eq!(plan.next_for(1), FaultAction::Kill); // w1 local 1
+        assert_eq!(plan.next_for(0), FaultAction::None); // w0 local 2
+    }
+
+    #[test]
+    fn rule_selectors_cover_every_and_always() {
+        assert!(CallSel::Every(3).matches(0));
+        assert!(!CallSel::Every(3).matches(2));
+        assert!(CallSel::Every(3).matches(6));
+        assert!(!CallSel::Every(0).matches(0));
+        assert!(CallSel::Always.matches(u64::MAX));
+        assert!(CallSel::Range(2, 4).matches(3));
+        assert!(!CallSel::Range(2, 4).matches(4));
+    }
+
+    #[test]
+    fn kill_sentinel_roundtrips() {
+        assert!(is_kill(&format!("{KILL_SENTINEL} (worker 3)")));
+        assert!(!is_kill("conv compile failed"));
+    }
+}

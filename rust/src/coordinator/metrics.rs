@@ -36,6 +36,21 @@ struct Inner {
     /// (executor errors and caught executor panics count once per
     /// request in the failed batch; a worker init failure counts 1).
     errors: u64,
+    /// Requests shed by a worker because their deadline had already
+    /// passed at dequeue time (never executed).
+    deadline_shed: u64,
+    /// Requests rejected at submit time for a wrong-length image.
+    bad_input: u64,
+    /// Requests re-queued onto a different shard after a transient
+    /// worker error (batched path failover).
+    retries: u64,
+    /// Circuit-breaker ejections of a persistently failing shard.
+    breaker_trips: u64,
+    /// Queued requests shed during a deadline-bounded drain.
+    drain_shed: u64,
+    /// Requests refused (at submit or by the terminal queue drain)
+    /// because the worker pool was empty with no restart budget left.
+    no_workers: u64,
     sim_cycles: u128,
 }
 
@@ -84,6 +99,39 @@ impl Metrics {
         self.inner.lock().unwrap().errors += n;
     }
 
+    /// `n` requests were shed unexecuted because their deadline had
+    /// passed before a worker could start them.
+    pub fn record_deadline_shed(&self, n: u64) {
+        self.inner.lock().unwrap().deadline_shed += n;
+    }
+
+    /// A submit was refused for a wrong-length image.
+    pub fn record_bad_input(&self) {
+        self.inner.lock().unwrap().bad_input += 1;
+    }
+
+    /// `n` requests were re-queued onto a different shard after a
+    /// transient worker error.
+    pub fn record_retries(&self, n: u64) {
+        self.inner.lock().unwrap().retries += n;
+    }
+
+    /// The circuit breaker ejected a shard.
+    pub fn record_breaker_trip(&self) {
+        self.inner.lock().unwrap().breaker_trips += 1;
+    }
+
+    /// `n` queued requests were shed by a deadline-bounded drain.
+    pub fn record_drain_shed(&self, n: u64) {
+        self.inner.lock().unwrap().drain_shed += n;
+    }
+
+    /// `n` requests were refused because the worker pool was empty
+    /// with no restart budget left.
+    pub fn record_no_workers(&self, n: u64) {
+        self.inner.lock().unwrap().no_workers += n;
+    }
+
     /// A request entered a submission queue.
     pub fn queue_inc(&self) {
         let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
@@ -114,6 +162,12 @@ impl Metrics {
             completed: g.completed,
             rejected: g.rejected,
             errors: g.errors,
+            deadline_shed: g.deadline_shed,
+            bad_input: g.bad_input,
+            retries: g.retries,
+            breaker_trips: g.breaker_trips,
+            drain_shed: g.drain_shed,
+            no_workers: g.no_workers,
             p50_us: pct(&lat, 0.50),
             p95_us: pct(&lat, 0.95),
             p99_us: pct(&lat, 0.99),
@@ -165,6 +219,21 @@ pub struct Snapshot {
     /// Requests that received an error response (plus 1 per worker
     /// init failure) — comparable against `completed`.
     pub errors: u64,
+    /// Requests shed unexecuted because their deadline had passed
+    /// before a worker could start them.
+    pub deadline_shed: u64,
+    /// Submits refused for a wrong-length image.
+    pub bad_input: u64,
+    /// Requests re-queued onto a different shard after a transient
+    /// worker error (batched path failover).
+    pub retries: u64,
+    /// Circuit-breaker shard ejections.
+    pub breaker_trips: u64,
+    /// Queued requests shed by a deadline-bounded drain.
+    pub drain_shed: u64,
+    /// Requests refused because the worker pool was empty with no
+    /// restart budget left.
+    pub no_workers: u64,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
@@ -185,6 +254,20 @@ pub struct Snapshot {
     pub throughput_rps: f64,
     /// Simulated Sparq cycles attributed across completed requests.
     pub total_sim_cycles: u128,
+}
+
+/// What a deadline-bounded drain (`shutdown_with_deadline`) did: how
+/// many queued requests finished vs were shed, and how long the drain
+/// took on the wall clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DrainStats {
+    /// Requests completed between the drain starting and finishing.
+    pub completed: u64,
+    /// Queued requests shed with `ServeError::Closed` once the drain
+    /// deadline passed.
+    pub shed: u64,
+    /// Wall time the drain took, microseconds.
+    pub wall_us: u64,
 }
 
 #[cfg(test)]
@@ -236,6 +319,28 @@ mod tests {
         m.record_errors(1); // a worker init failure
         assert_eq!(m.snapshot().errors, 5);
         assert_eq!(m.snapshot().completed, 0);
+    }
+
+    #[test]
+    fn robustness_counters() {
+        let m = Metrics::default();
+        m.record_deadline_shed(3);
+        m.record_bad_input();
+        m.record_bad_input();
+        m.record_retries(2);
+        m.record_breaker_trip();
+        m.record_drain_shed(5);
+        m.record_no_workers(4);
+        let s = m.snapshot();
+        assert_eq!(s.deadline_shed, 3);
+        assert_eq!(s.bad_input, 2);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.drain_shed, 5);
+        assert_eq!(s.no_workers, 4);
+        // None of these count as completions or worker errors.
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.errors, 0);
     }
 
     #[test]

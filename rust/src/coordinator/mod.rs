@@ -27,15 +27,41 @@
 //! * Backpressure: queues are bounded `sync_channel`s; `submit` fails
 //!   fast with [`ServeError::QueueFull`] when capacity is exhausted
 //!   (callers see rejections, not latency collapse).
+//!
+//! Robustness substrate (DESIGN.md §Robustness): every failure mode is
+//! typed, bounded, observable, and deterministically testable.
+//!
+//! * Every submit is validated (`ServeError::BadInput` for wrong-length
+//!   images — nothing is silently truncated or zero-padded) and may
+//!   carry a deadline (`submit_with_deadline` / `infer_timeout`);
+//!   workers shed already-expired requests with `ServeError::Deadline`
+//!   *before* execution.
+//! * A supervisor thread watches per-worker liveness (heartbeat
+//!   counters + a drop-guard dead flag), respawns dead workers under a
+//!   restart budget with exponential backoff, and terminally drains the
+//!   queue with `ServeError::NoWorkers` once the pool is empty and the
+//!   budget is spent — `submit` fails fast instead of queueing forever,
+//!   and `health()` exposes alive/restarts/degraded.
+//! * The batched path adds shard failover (one retry on a different
+//!   shard) and a circuit breaker with probation re-admit
+//!   (`batch::QnnBatchServer`).
+//! * `shutdown_with_deadline` drains gracefully: new work is rejected,
+//!   queued work finishes until the deadline and is shed typed after
+//!   it, and [`metrics::DrainStats`] reports what happened.
+//! * All of it is testable bit-identically via the seeded
+//!   fault-injection harness in [`fault`] (`rust/tests/serve_faults.rs`).
 
 pub mod batch;
+pub mod fault;
 pub mod metrics;
 
 pub use batch::QnnBatchServer;
-pub use metrics::{Metrics, Snapshot};
+pub use fault::{chaos_factory, CallSel, ChaosSpec, FaultAction, FaultPlan, FaultRule};
+pub use metrics::{DrainStats, Metrics, Snapshot};
 
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -47,6 +73,15 @@ pub enum ServeError {
     QueueFull,
     Closed,
     Worker(String),
+    /// The request's deadline passed before a result was produced —
+    /// either shed by a worker pre-execution or timed out client-side.
+    Deadline,
+    /// The worker pool is empty and the restart budget is spent; the
+    /// request was refused instead of queueing forever.
+    NoWorkers,
+    /// The image length does not match the model's input length; the
+    /// request was refused at submit time (never truncated or padded).
+    BadInput { got: usize, want: usize },
 }
 
 impl fmt::Display for ServeError {
@@ -55,6 +90,11 @@ impl fmt::Display for ServeError {
             ServeError::QueueFull => write!(f, "queue full (backpressure)"),
             ServeError::Closed => write!(f, "server is shut down"),
             ServeError::Worker(e) => write!(f, "worker failed: {e}"),
+            ServeError::Deadline => write!(f, "deadline exceeded"),
+            ServeError::NoWorkers => write!(f, "no live workers (restart budget spent)"),
+            ServeError::BadInput { got, want } => {
+                write!(f, "bad input: image length {got}, model wants {want}")
+            }
         }
     }
 }
@@ -76,6 +116,115 @@ struct Request {
     image: Vec<f32>,
     resp: SyncSender<Result<InferResult, ServeError>>,
     enqueued: Instant,
+    /// Absolute deadline; a worker sheds the request unexecuted with
+    /// [`ServeError::Deadline`] once this has passed.
+    deadline: Option<Instant>,
+}
+
+/// How often an idle worker wakes to tick its heartbeat, and how often
+/// the supervisor scans the pool.
+const HEARTBEAT_POLL: Duration = Duration::from_millis(20);
+const SUPERVISOR_POLL: Duration = Duration::from_micros(200);
+
+/// Per-worker-slot liveness state shared with the supervisor.
+#[derive(Debug, Default)]
+struct SlotState {
+    /// The worker's loop is running (set after a successful factory
+    /// call, cleared by the drop guard on any exit path).
+    alive: AtomicBool,
+    /// A thread for this slot has been spawned but has not finished
+    /// initialising yet (gates double-respawn).
+    starting: AtomicBool,
+    /// Monotone liveness counter, ticked once per worker loop
+    /// iteration (exposed via [`Health::heartbeats`]).
+    heartbeat: AtomicU64,
+}
+
+/// Supervision state shared by workers, the supervisor thread, and the
+/// server handle.
+#[derive(Debug)]
+struct Supervision {
+    slots: Vec<SlotState>,
+    /// Live workers right now (guard-accurate).
+    live: AtomicI64,
+    /// Respawn attempts the supervisor has made.
+    restarts: AtomicU64,
+    /// Respawns the supervisor may still spend.
+    budget_left: AtomicI64,
+    /// Latched once the pool died with no budget left.
+    degraded: AtomicBool,
+    /// Tells the supervisor to exit.
+    stop: AtomicBool,
+    /// Graceful-drain deadline: once set and passed, workers shed
+    /// queued work with [`ServeError::Closed`] instead of executing.
+    drain_by: RwLock<Option<Instant>>,
+}
+
+impl Supervision {
+    fn new(workers: usize, restart_budget: u32) -> Supervision {
+        Supervision {
+            slots: (0..workers).map(|_| SlotState::default()).collect(),
+            live: AtomicI64::new(0),
+            restarts: AtomicU64::new(0),
+            budget_left: AtomicI64::new(restart_budget as i64),
+            degraded: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            drain_by: RwLock::new(None),
+        }
+    }
+
+    /// A worker finished initialising and entered its loop.
+    fn worker_up(&self, slot: usize) {
+        self.live.fetch_add(1, Ordering::SeqCst);
+        self.slots[slot].alive.store(true, Ordering::SeqCst);
+        self.slots[slot].starting.store(false, Ordering::SeqCst);
+    }
+
+    /// True once no worker can ever serve again: pool empty, nothing
+    /// starting, and no restart budget left.  Monotone — the budget
+    /// never replenishes, so once true it stays true.
+    fn pool_dead(&self) -> bool {
+        self.live.load(Ordering::SeqCst) <= 0
+            && self.budget_left.load(Ordering::SeqCst) <= 0
+            && self.slots.iter().all(|s| !s.starting.load(Ordering::SeqCst))
+    }
+
+    fn drain_deadline(&self) -> Option<Instant> {
+        *self.drain_by.read().unwrap()
+    }
+}
+
+/// Marks the slot dead on *any* worker exit (return, kill, unwind), so
+/// the supervisor's view is accurate without cooperation from the exit
+/// path.
+struct WorkerGuard {
+    sup: Arc<Supervision>,
+    slot: usize,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        self.sup.slots[self.slot].alive.store(false, Ordering::SeqCst);
+        self.sup.live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Point-in-time pool health (see [`Server::health`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Health {
+    /// Worker slots the server was configured with.
+    pub configured: usize,
+    /// Workers alive right now.
+    pub alive: usize,
+    /// Respawn attempts the supervisor has made.
+    pub restarts: u64,
+    /// Respawns the supervisor may still spend.
+    pub restart_budget_left: u32,
+    /// True when capacity is below the configured pool (or the pool is
+    /// dead for good).
+    pub degraded: bool,
+    /// Per-slot heartbeat counters (monotone while the slot is alive).
+    pub heartbeats: Vec<u64>,
 }
 
 /// The model-execution backend a worker drives.  The production
@@ -100,50 +249,182 @@ pub type ExecutorFactory = Box<dyn Fn() -> Result<Box<dyn Executor>, String> + S
 pub struct Server {
     tx: Option<SyncSender<Request>>,
     pub metrics: Arc<Metrics>,
-    workers: Vec<JoinHandle<()>>,
+    sup: Arc<Supervision>,
+    /// Worker handles; the supervisor pushes respawned workers here.
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    supervisor: Option<JoinHandle<()>>,
+    /// Learned from the first worker's init ack; `submit` validates
+    /// image lengths against it.
+    image_len: usize,
+    default_deadline: Option<Duration>,
 }
 
 impl Server {
     /// Start `cfg.workers` workers; `sim_cycles_per_image` is the
     /// hardware cost the qnn scheduler attributes to one inference.
+    ///
+    /// Blocks until every worker's `factory()` has resolved.  Fails
+    /// with [`ServeError::NoWorkers`] if *zero* workers come up; a
+    /// partially-failed pool starts degraded and the supervisor keeps
+    /// trying to fill the failed slots under the restart budget.
     pub fn start(
         factory: ExecutorFactory,
         cfg: ServeConfig,
         sim_cycles_per_image: u64,
     ) -> Result<Server, ServeError> {
+        let workers_n = cfg.workers.max(1);
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
         let factory = Arc::new(factory);
-        let mut workers = Vec::new();
-        for wid in 0..cfg.workers.max(1) {
+        let sup = Arc::new(Supervision::new(workers_n, cfg.restart_budget));
+        let window = Duration::from_micros(cfg.batch_window_us);
+        let handles = Arc::new(Mutex::new(Vec::new()));
+
+        // Workers ack their init result (the factory runs *in* the
+        // worker thread — executors are not Send), so start can fail
+        // typed instead of silently shrinking the pool.
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel::<Result<usize, String>>();
+        for slot in 0..workers_n {
+            sup.slots[slot].starting.store(true, Ordering::SeqCst);
+            match spawn_worker(
+                slot,
+                &rx,
+                &metrics,
+                &factory,
+                &sup,
+                window,
+                sim_cycles_per_image,
+                Some(ack_tx.clone()),
+            ) {
+                Ok(h) => handles.lock().unwrap().push(h),
+                Err(e) => {
+                    sup.slots[slot].starting.store(false, Ordering::SeqCst);
+                    let _ = ack_tx.send(Err(e.to_string()));
+                }
+            }
+        }
+        drop(ack_tx);
+        let mut image_len = None;
+        let mut first_err = None;
+        for ack in ack_rx.iter() {
+            match ack {
+                Ok(len) => {
+                    image_len.get_or_insert(len);
+                }
+                Err(e) => {
+                    metrics.record_errors(1);
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        let Some(image_len) = image_len else {
+            // zero workers came up: fail fast, don't hand out a server
+            // that queues forever
+            if let Some(e) = first_err {
+                eprintln!("server start: every worker failed to initialise: {e}");
+            }
+            sup.stop.store(true, Ordering::SeqCst);
+            for w in handles.lock().unwrap().drain(..) {
+                let _ = w.join();
+            }
+            return Err(ServeError::NoWorkers);
+        };
+
+        let supervisor = {
+            let sup = Arc::clone(&sup);
             let rx = Arc::clone(&rx);
             let metrics = Arc::clone(&metrics);
             let factory = Arc::clone(&factory);
-            let window = Duration::from_micros(cfg.batch_window_us);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("sparq-worker-{wid}"))
-                    .spawn(move || worker_loop(rx, metrics, factory, window, sim_cycles_per_image))
-                    .map_err(|e| ServeError::Worker(e.to_string()))?,
-            );
-        }
-        Ok(Server { tx: Some(tx), metrics, workers })
+            let handles = Arc::clone(&handles);
+            let backoff = Duration::from_micros(cfg.restart_backoff_us.max(1));
+            std::thread::Builder::new()
+                .name("sparq-supervisor".into())
+                .spawn(move || {
+                    supervisor_loop(
+                        sup,
+                        rx,
+                        metrics,
+                        factory,
+                        handles,
+                        window,
+                        sim_cycles_per_image,
+                        backoff,
+                    )
+                })
+                .map_err(|e| ServeError::Worker(e.to_string()))?
+        };
+
+        Ok(Server {
+            tx: Some(tx),
+            metrics,
+            sup,
+            workers: handles,
+            supervisor: Some(supervisor),
+            image_len,
+            default_deadline: (cfg.deadline_us > 0)
+                .then(|| Duration::from_micros(cfg.deadline_us)),
+        })
     }
 
-    /// Blocking inference.
+    /// Blocking inference (honours the config-level default deadline,
+    /// if any, on the worker side only — the call itself blocks until
+    /// a response arrives or the server dies).
     pub fn infer(&self, image: Vec<f32>) -> Result<InferResult, ServeError> {
         let rx = self.submit(image)?;
         rx.recv().map_err(|_| ServeError::Closed)?
     }
 
-    /// Non-blocking submit; the receiver yields the result later.
+    /// Bounded-time inference: the request carries `timeout` as its
+    /// deadline and the call returns [`ServeError::Deadline`] if no
+    /// response arrives within it.  Never blocks longer than `timeout`.
+    pub fn infer_timeout(
+        &self,
+        image: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<InferResult, ServeError> {
+        let rx = self.submit_with_deadline(image, Some(timeout))?;
+        match rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err(ServeError::Deadline),
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Non-blocking submit with the config-level default deadline; the
+    /// receiver yields the result later.
     pub fn submit(
         &self,
         image: Vec<f32>,
     ) -> Result<Receiver<Result<InferResult, ServeError>>, ServeError> {
+        self.submit_with_deadline(image, self.default_deadline)
+    }
+
+    /// Non-blocking submit with an explicit per-request deadline
+    /// (`None` = no deadline).  Validates the image length
+    /// ([`ServeError::BadInput`]) and fails fast with
+    /// [`ServeError::NoWorkers`] when the pool is dead for good.
+    pub fn submit_with_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<InferResult, ServeError>>, ServeError> {
+        if image.len() != self.image_len {
+            self.metrics.record_bad_input();
+            return Err(ServeError::BadInput { got: image.len(), want: self.image_len });
+        }
+        if self.sup.pool_dead() {
+            self.metrics.record_no_workers(1);
+            return Err(ServeError::NoWorkers);
+        }
         let (rtx, rrx) = sync_channel(1);
-        let req = Request { image, resp: rtx, enqueued: Instant::now() };
+        let now = Instant::now();
+        let req = Request {
+            image,
+            resp: rtx,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+        };
         // gauge BEFORE the send: a worker may dequeue (and queue_dec)
         // the instant try_send lands, and inc-after-send would let the
         // gauge transiently read negative
@@ -166,50 +447,217 @@ impl Server {
         }
     }
 
-    /// Drain the queue, stop the workers, return the final metrics.
+    /// Pool health right now.
+    pub fn health(&self) -> Health {
+        let alive = self.sup.live.load(Ordering::SeqCst).max(0) as usize;
+        let configured = self.sup.slots.len();
+        Health {
+            configured,
+            alive,
+            restarts: self.sup.restarts.load(Ordering::SeqCst),
+            restart_budget_left: self.sup.budget_left.load(Ordering::SeqCst).max(0) as u32,
+            degraded: self.sup.degraded.load(Ordering::SeqCst) || alive < configured,
+            heartbeats: self
+                .sup
+                .slots
+                .iter()
+                .map(|s| s.heartbeat.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+
+    /// Drain the queue fully, stop the workers, return the final
+    /// metrics (the original unbounded drain).
     pub fn shutdown(mut self) -> Snapshot {
-        self.tx.take(); // close the channel; workers exit on disconnect
-        for w in self.workers.drain(..) {
+        self.stop_threads();
+        self.metrics.snapshot()
+    }
+
+    /// Graceful bounded drain: stop accepting work immediately, let
+    /// queued work finish until `deadline`, shed whatever is still
+    /// queued after it with [`ServeError::Closed`], and report what
+    /// happened.  In-flight batches run to completion (execution is
+    /// not preempted), so the wall time is bounded by the deadline
+    /// plus one batch execution.
+    pub fn shutdown_with_deadline(mut self, deadline: Duration) -> (Snapshot, DrainStats) {
+        let t0 = Instant::now();
+        let before = self.metrics.snapshot();
+        *self.sup.drain_by.write().unwrap() = Some(t0 + deadline);
+        self.stop_threads();
+        let after = self.metrics.snapshot();
+        let stats = DrainStats {
+            completed: after.completed.saturating_sub(before.completed),
+            shed: after.drain_shed.saturating_sub(before.drain_shed),
+            wall_us: t0.elapsed().as_micros() as u64,
+        };
+        (after, stats)
+    }
+
+    fn stop_threads(&mut self) {
+        self.tx.take(); // close the channel; workers exit once drained
+        self.sup.stop.store(true, Ordering::SeqCst);
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
+        // The workers vec is stable now: only the supervisor pushed.
+        for w in self.workers.lock().unwrap().drain(..) {
             let _ = w.join();
         }
-        self.metrics.snapshot()
+    }
+}
+
+/// Spawn one worker thread for `slot`.  The factory runs *inside* the
+/// thread (executors are not `Send`); on success the slot is marked
+/// alive and guarded, and `ack` (when present — server start) carries
+/// `Ok(image_len)` or the factory error.
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    slot: usize,
+    rx: &Arc<Mutex<Receiver<Request>>>,
+    metrics: &Arc<Metrics>,
+    factory: &Arc<ExecutorFactory>,
+    sup: &Arc<Supervision>,
+    window: Duration,
+    sim_cycles_per_image: u64,
+    ack: Option<std::sync::mpsc::Sender<Result<usize, String>>>,
+) -> std::io::Result<JoinHandle<()>> {
+    let rx = Arc::clone(rx);
+    let metrics = Arc::clone(metrics);
+    let factory = Arc::clone(factory);
+    let sup = Arc::clone(sup);
+    std::thread::Builder::new().name(format!("sparq-worker-{slot}")).spawn(move || {
+        let exec = match factory() {
+            Ok(e) => e,
+            Err(e) => {
+                sup.slots[slot].starting.store(false, Ordering::SeqCst);
+                match ack {
+                    Some(a) => {
+                        let _ = a.send(Err(e));
+                    }
+                    None => {
+                        metrics.record_errors(1);
+                        eprintln!("worker {slot} respawn: executor init failed: {e}");
+                    }
+                }
+                return;
+            }
+        };
+        sup.worker_up(slot);
+        let _guard = WorkerGuard { sup: Arc::clone(&sup), slot };
+        if let Some(a) = ack {
+            let _ = a.send(Ok(exec.image_len()));
+        }
+        worker_loop(exec, slot, &rx, &metrics, &sup, window, sim_cycles_per_image);
+    })
+}
+
+/// The supervisor: scans the pool every [`SUPERVISOR_POLL`], respawns
+/// dead slots under the restart budget with per-slot exponential
+/// backoff, and — once the pool is dead for good — latches `degraded`
+/// and terminally drains the queue with [`ServeError::NoWorkers`] so
+/// no submitted request is ever stranded.
+#[allow(clippy::too_many_arguments)]
+fn supervisor_loop(
+    sup: Arc<Supervision>,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    metrics: Arc<Metrics>,
+    factory: Arc<ExecutorFactory>,
+    handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    window: Duration,
+    sim_cycles_per_image: u64,
+    backoff: Duration,
+) {
+    let n = sup.slots.len();
+    let mut next_try = vec![Instant::now(); n];
+    // Spawn attempts since the slot was last seen alive (drives the
+    // backoff doubling while a factory keeps failing).
+    let mut attempts = vec![0u32; n];
+    while !sup.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(SUPERVISOR_POLL);
+        let now = Instant::now();
+        for slot in 0..n {
+            let s = &sup.slots[slot];
+            if s.alive.load(Ordering::SeqCst) {
+                attempts[slot] = 0;
+                continue;
+            }
+            if s.starting.load(Ordering::SeqCst) || now < next_try[slot] {
+                continue;
+            }
+            if sup.budget_left.load(Ordering::SeqCst) <= 0 {
+                continue;
+            }
+            sup.budget_left.fetch_sub(1, Ordering::SeqCst);
+            s.starting.store(true, Ordering::SeqCst);
+            match spawn_worker(
+                slot,
+                &rx,
+                &metrics,
+                &factory,
+                &sup,
+                window,
+                sim_cycles_per_image,
+                None,
+            ) {
+                Ok(h) => {
+                    sup.restarts.fetch_add(1, Ordering::SeqCst);
+                    handles.lock().unwrap().push(h);
+                }
+                Err(_) => s.starting.store(false, Ordering::SeqCst),
+            }
+            attempts[slot] = attempts[slot].saturating_add(1);
+            next_try[slot] = now + backoff * 2u32.saturating_pow(attempts[slot].min(6));
+        }
+        if sup.pool_dead() {
+            sup.degraded.store(true, Ordering::SeqCst);
+            // Nobody will ever drain the queue again: answer whatever
+            // is in it typed instead of leaving clients to hang.
+            let g = rx.lock().unwrap();
+            let mut drained = 0u64;
+            while let Ok(req) = g.try_recv() {
+                let _ = req.resp.send(Err(ServeError::NoWorkers));
+                drained += 1;
+            }
+            drop(g);
+            if drained > 0 {
+                metrics.queue_dec(drained);
+                metrics.record_no_workers(drained);
+            }
+        }
     }
 }
 
 fn worker_loop(
-    rx: Arc<std::sync::Mutex<Receiver<Request>>>,
-    metrics: Arc<Metrics>,
-    factory: Arc<ExecutorFactory>,
+    mut exec: Box<dyn Executor>,
+    slot: usize,
+    rx: &Arc<Mutex<Receiver<Request>>>,
+    metrics: &Arc<Metrics>,
+    sup: &Arc<Supervision>,
     window: Duration,
     sim_cycles_per_image: u64,
 ) {
-    let mut exec = match factory() {
-        Ok(e) => e,
-        Err(e) => {
-            metrics.record_errors(1);
-            eprintln!("executor init failed: {e}");
-            return;
-        }
-    };
     let batch = exec.batch();
     let per = exec.image_len();
     let classes = exec.classes();
 
     loop {
-        // take the first request (blocking), then greedily batch
+        sup.slots[slot].heartbeat.fetch_add(1, Ordering::Relaxed);
+        // take the first request (bounded wait so heartbeats tick while
+        // idle), then greedily batch
         let first = {
             let g = rx.lock().unwrap();
-            match g.recv() {
+            match g.recv_timeout(HEARTBEAT_POLL) {
                 Ok(r) => r,
-                Err(_) => return, // channel closed: shut down
+                Err(RecvTimeoutError::Timeout) => continue, // heartbeat tick
+                Err(RecvTimeoutError::Disconnected) => return, // channel closed: shut down
             }
         };
         metrics.queue_dec(1);
         let mut reqs = vec![first];
-        let deadline = Instant::now() + window;
+        let wdl = Instant::now() + window;
         while reqs.len() < batch {
             let g = rx.lock().unwrap();
-            let left = deadline.saturating_duration_since(Instant::now());
+            let left = wdl.saturating_duration_since(Instant::now());
             match g.recv_timeout(left) {
                 Ok(r) => {
                     metrics.queue_dec(1);
@@ -220,7 +668,40 @@ fn worker_loop(
             }
         }
 
-        // assemble the padded batch
+        // Graceful drain: past the drain deadline, queued work is shed
+        // typed instead of executed.
+        if let Some(dl) = sup.drain_deadline() {
+            if Instant::now() > dl {
+                metrics.record_drain_shed(reqs.len() as u64);
+                for r in reqs {
+                    let _ = r.resp.send(Err(ServeError::Closed));
+                }
+                continue;
+            }
+        }
+
+        // Deadline shedding: an expired request is answered typed and
+        // never executed (it would be wasted work — the client is gone).
+        let now = Instant::now();
+        let mut shed = 0u64;
+        reqs.retain(|r| match r.deadline {
+            Some(d) if now > d => {
+                shed += 1;
+                let _ = r.resp.send(Err(ServeError::Deadline));
+                false
+            }
+            _ => true,
+        });
+        if shed > 0 {
+            metrics.record_deadline_shed(shed);
+        }
+        if reqs.is_empty() {
+            continue;
+        }
+
+        // assemble the padded batch (submit validated every image is
+        // exactly `image_len` long; the min() is belt-and-braces for a
+        // heterogeneous-executor misconfiguration)
         let mut data = vec![0f32; batch * per];
         for (i, r) in reqs.iter().enumerate() {
             let n = r.image.len().min(per);
@@ -254,8 +735,15 @@ fn worker_loop(
             }
             Err(e) => {
                 metrics.record_errors(reqs.len() as u64);
+                let killed = fault::is_kill(&e);
                 for r in reqs {
                     let _ = r.resp.send(Err(ServeError::Worker(e.clone())));
+                }
+                if killed {
+                    // A chaos kill models a crashed worker: reply, then
+                    // die — the drop guard flips the slot dead and the
+                    // supervisor takes it from there.
+                    return;
                 }
             }
         }
@@ -273,8 +761,13 @@ pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// NaN-safe argmax.  `total_cmp` gives a total order (NaN sorts above
+/// +inf), so a corrupt logit can never panic the worker thread — the
+/// old `partial_cmp(..).unwrap()` here was a latent capacity leak: one
+/// NaN logit killed the worker outside `catch_unwind`, silently and
+/// permanently shrinking the pool.
 fn argmax(xs: &[f32]) -> usize {
-    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
+    xs.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap_or(0)
 }
 
 /// PJRT-backed executor over a named artifact.
@@ -596,24 +1089,46 @@ mod tests {
         assert_eq!(s.shutdown().completed, 8);
     }
 
+    /// Executes like Mock but takes `delay` per batch (pins the worker
+    /// so queues fill / deadlines expire deterministically).
+    struct SlowMock {
+        delay: Duration,
+    }
+
+    impl Executor for SlowMock {
+        fn batch(&self) -> usize {
+            1
+        }
+        fn image_len(&self) -> usize {
+            4
+        }
+        fn classes(&self) -> usize {
+            2
+        }
+        fn run(&mut self, data: &[f32]) -> Result<Vec<f32>, String> {
+            std::thread::sleep(self.delay);
+            let s: f32 = data.iter().sum();
+            Ok(vec![s, -s])
+        }
+    }
+
     #[test]
     fn backpressure_rejects_when_full() {
-        // no worker consumes: factory that blocks forever is hard; use
-        // depth 1 and a slow drip instead — fill the queue synchronously
-        let cfg = ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 1, ..Default::default() };
+        // a slow executor pins the single worker while the depth-1
+        // queue fills; submits past that are typed rejections
+        let cfg =
+            ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 1, ..Default::default() };
         let s = Server::start(
             Box::new(|| {
-                std::thread::sleep(std::time::Duration::from_millis(200));
-                Ok(Box::new(Mock { batch: 4, calls: 0 }) as Box<dyn Executor>)
+                Ok(Box::new(SlowMock { delay: Duration::from_millis(100) }) as Box<dyn Executor>)
             }),
             cfg,
             0,
         )
         .unwrap();
-        // while the worker is still initialising, flood the queue
         let mut rejected = false;
         let mut pending = vec![];
-        for _ in 0..8 {
+        for _ in 0..16 {
             match s.submit(vec![0.0; 4]) {
                 Ok(rx) => pending.push(rx),
                 Err(ServeError::QueueFull) => {
@@ -629,6 +1144,185 @@ mod tests {
         }
         let snap = s.shutdown();
         assert!(snap.rejected >= 1);
+    }
+
+    #[test]
+    fn argmax_is_nan_safe() {
+        // total order: positive NaN sorts above every number
+        assert_eq!(argmax(&[f32::NAN, 1.0]), 0);
+        assert_eq!(argmax(&[1.0, f32::NAN]), 1);
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    /// Returns a NaN logit for every image.
+    struct NanMock;
+
+    impl Executor for NanMock {
+        fn batch(&self) -> usize {
+            1
+        }
+        fn image_len(&self) -> usize {
+            4
+        }
+        fn classes(&self) -> usize {
+            2
+        }
+        fn run(&mut self, _data: &[f32]) -> Result<Vec<f32>, String> {
+            Ok(vec![f32::NAN, 1.0])
+        }
+    }
+
+    #[test]
+    fn nan_logits_do_not_kill_the_worker() {
+        // regression: argmax used partial_cmp().unwrap() outside
+        // catch_unwind — one NaN logit killed the worker for good
+        let cfg =
+            ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 16, ..Default::default() };
+        let s = Server::start(Box::new(|| Ok(Box::new(NanMock) as Box<dyn Executor>)), cfg, 0)
+            .unwrap();
+        let first = s.infer(vec![1.0; 4]).expect("NaN logits must not fail the request");
+        assert!(first.logits[0].is_nan());
+        assert_eq!(first.class, 0); // NaN sorts above 1.0 in total order
+        // the worker survived: a second request still serves
+        s.infer(vec![2.0; 4]).expect("worker must survive NaN logits");
+        assert_eq!(s.health().alive, 1);
+        let snap = s.shutdown();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn wrong_length_image_is_rejected_typed() {
+        let s = mock_server(1, 10, 16);
+        match s.infer(vec![0.5; 3]) {
+            Err(ServeError::BadInput { got: 3, want: 4 }) => {}
+            other => panic!("expected BadInput, got {other:?}"),
+        }
+        match s.infer(vec![0.5; 5]) {
+            Err(ServeError::BadInput { got: 5, want: 4 }) => {}
+            other => panic!("expected BadInput, got {other:?}"),
+        }
+        // valid-length traffic is unaffected
+        s.infer(vec![1.0; 4]).unwrap();
+        let snap = s.shutdown();
+        assert_eq!(snap.bad_input, 2);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn start_fails_typed_when_every_worker_fails_init() {
+        let cfg = ServeConfig { workers: 2, ..Default::default() };
+        let r = Server::start(Box::new(|| Err("no such model".into())), cfg, 0);
+        match r {
+            Err(ServeError::NoWorkers) => {}
+            Ok(_) => panic!("start must fail when zero workers come up"),
+            Err(e) => panic!("expected NoWorkers, got {e:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_init_failure_starts_degraded_but_serves() {
+        use std::sync::atomic::AtomicUsize;
+        let calls = Arc::new(AtomicUsize::new(0));
+        let cfg = ServeConfig { workers: 2, restart_budget: 0, ..Default::default() };
+        let s = Server::start(
+            Box::new(move || {
+                if calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Err("first worker loses".into())
+                } else {
+                    Ok(Box::new(Mock { batch: 4, calls: 0 }) as Box<dyn Executor>)
+                }
+            }),
+            cfg,
+            0,
+        )
+        .expect("one worker up is enough to start");
+        let h = s.health();
+        assert_eq!(h.configured, 2);
+        assert_eq!(h.alive, 1);
+        assert!(h.degraded);
+        s.infer(vec![1.0; 4]).expect("the surviving worker serves");
+        let snap = s.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.errors, 1); // the failed init
+    }
+
+    #[test]
+    fn expired_requests_are_shed_not_executed() {
+        // worker busy for 50ms on the first request; the second carries
+        // a 1ms deadline and must come back Deadline, never executed
+        let cfg =
+            ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 16, ..Default::default() };
+        let s = Server::start(
+            Box::new(|| {
+                Ok(Box::new(SlowMock { delay: Duration::from_millis(50) }) as Box<dyn Executor>)
+            }),
+            cfg,
+            0,
+        )
+        .unwrap();
+        let r1 = s.submit_with_deadline(vec![1.0; 4], None).unwrap();
+        std::thread::sleep(Duration::from_millis(5)); // let the worker take r1
+        let r2 = s.submit_with_deadline(vec![2.0; 4], Some(Duration::from_millis(1))).unwrap();
+        assert!(r1.recv().unwrap().is_ok());
+        match r2.recv().unwrap() {
+            Err(ServeError::Deadline) => {}
+            other => panic!("expected Deadline, got {other:?}"),
+        }
+        let snap = s.shutdown();
+        assert_eq!(snap.deadline_shed, 1);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn infer_timeout_bounds_the_client_wait() {
+        let cfg =
+            ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 16, ..Default::default() };
+        let s = Server::start(
+            Box::new(|| {
+                Ok(Box::new(SlowMock { delay: Duration::from_millis(300) }) as Box<dyn Executor>)
+            }),
+            cfg,
+            0,
+        )
+        .unwrap();
+        let _busy = s.submit(vec![1.0; 4]).unwrap(); // pins the worker
+        std::thread::sleep(Duration::from_millis(5));
+        let t0 = Instant::now();
+        match s.infer_timeout(vec![2.0; 4], Duration::from_millis(10)) {
+            Err(ServeError::Deadline) => {}
+            other => panic!("expected Deadline, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_millis(250), "client wait was not bounded");
+        s.shutdown();
+    }
+
+    #[test]
+    fn drain_with_deadline_sheds_queued_work_typed() {
+        let cfg =
+            ServeConfig { workers: 1, batch_window_us: 10, queue_depth: 64, ..Default::default() };
+        let s = Server::start(
+            Box::new(|| {
+                Ok(Box::new(SlowMock { delay: Duration::from_millis(20) }) as Box<dyn Executor>)
+            }),
+            cfg,
+            0,
+        )
+        .unwrap();
+        let pending: Vec<_> = (0..10).map(|_| s.submit(vec![1.0; 4]).unwrap()).collect();
+        let (snap, stats) = s.shutdown_with_deadline(Duration::from_millis(30));
+        // every request resolved exactly one way: executed or shed
+        assert_eq!(stats.completed + stats.shed, 10, "{stats:?}");
+        assert!(stats.shed > 0, "a 30ms drain cannot finish 10x20ms of work");
+        assert!(stats.completed >= 1, "work in flight at drain start still completes");
+        assert_eq!(snap.drain_shed, stats.shed);
+        for rx in pending {
+            match rx.recv().unwrap() {
+                Ok(_) | Err(ServeError::Closed) => {}
+                other => panic!("expected Ok or Closed, got {other:?}"),
+            }
+        }
     }
 
     #[test]

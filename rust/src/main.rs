@@ -65,10 +65,13 @@ COMMANDS
   serve        batched serving demo (PJRT artifacts, or the  [--requests N] [--model NAME] [--config FILE]
                cached-program simulator backend without them) [--precision wXaY|mixed] [--batch B]
                (--batch B serves through the batch-B compiled arena: sharded  [--topology T]
-               queues, one batched execution per window, fill/queue metrics;
+               queues, one batched execution per window, fill/queue metrics;  [--deadline-us D] [--chaos-seed S]
                --topology chain|resnetlike|mobilenetlike|denselike picks the
                simulated network graph — DAG topologies compile to the same
-               one-program liveness-planned arena as the chain)
+               one-program liveness-planned arena as the chain;
+               --deadline-us D sheds requests older than D typed, --chaos-seed S
+               injects a replayable storm of worker faults on the simulator
+               backend to demo supervision/failover — see DESIGN.md §Robustness)
   bench-check  compare BENCH_*.json against the committed     [--baselines DIR] [--bless]
                cycle baselines (tolerance 0 on cycle fields; CI gate)
   isa          vmacsr encoding explorer                      [hex words...]
@@ -232,6 +235,22 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
             return Err("--batch must be at least 1".into());
         }
     }
+    if let Some(d) = opt(rest, "--deadline-us") {
+        serve_cfg.deadline_us = d.parse().map_err(|_| "bad --deadline-us value")?;
+    }
+    // A seeded storm of injected worker faults (kills, panics, errors,
+    // delays) — the same seed replays the same fault sequence, so the
+    // demo doubles as a reproducible supervision/failover exercise.
+    let plan: Option<Arc<sparq::coordinator::FaultPlan>> = match opt(rest, "--chaos-seed") {
+        Some(s) => {
+            let chaos_seed: u64 = s.parse().map_err(|_| "bad --chaos-seed value")?;
+            Some(Arc::new(sparq::coordinator::FaultPlan::seeded(
+                chaos_seed,
+                sparq::coordinator::ChaosSpec::storm(),
+            )))
+        }
+        None => None,
+    };
     // "mixed" = the W4A4 stem-adjacent / W2A2 deep configuration: the
     // per-layer overrides flow through the same autotuned dataflow
     // compiler as the uniform precisions.  Uniform precisions parse
@@ -278,7 +297,7 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
 
     if batched {
         return cmd_serve_sim_batched(
-            &cfg, &graph, precision, seed, serve_cfg, &cache, n, prec_arg, topo,
+            &cfg, &graph, precision, seed, serve_cfg, &cache, n, prec_arg, topo, plan,
         );
     }
 
@@ -290,19 +309,19 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
             .total_cycles()
     };
 
-    let server = sparq::coordinator::Server::start(
-        sparq::coordinator::sim_qnn_factory(
-            cfg.clone(),
-            graph.clone(),
-            precision,
-            4,
-            seed,
-            Arc::clone(&cache),
-        ),
-        serve_cfg,
-        cyc,
-    )
-    .map_err(|e| e.to_string())?;
+    let mut factory = sparq::coordinator::sim_qnn_factory(
+        cfg.clone(),
+        graph.clone(),
+        precision,
+        4,
+        seed,
+        Arc::clone(&cache),
+    );
+    if let Some(p) = &plan {
+        factory = sparq::coordinator::chaos_factory(factory, Arc::clone(p));
+    }
+    let server =
+        sparq::coordinator::Server::start(factory, serve_cfg, cyc).map_err(|e| e.to_string())?;
 
     println!(
         "serving the {topo} network at {} on the simulated dataflow backend \
@@ -330,6 +349,7 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     for rx in pending.drain(..) {
         served += matches!(rx.recv(), Ok(Ok(_))) as usize;
     }
+    let health = server.health();
     let snap = server.shutdown();
     let cs = cache.stats();
     println!(
@@ -343,6 +363,15 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
         cs.misses,
         serve_cfg.workers.max(1),
         cs.hits,
+    );
+    println!(
+        "  robustness: {} restart(s) (budget left {}), {} deadline-shed, {} bad-input, {} fast-failed{}",
+        health.restarts,
+        health.restart_budget_left,
+        snap.deadline_shed,
+        snap.bad_input,
+        snap.no_workers,
+        if health.degraded { " — pool DEGRADED" } else { "" },
     );
     Ok(())
 }
@@ -362,14 +391,16 @@ fn cmd_serve_sim_batched(
     n: usize,
     prec_arg: &str,
     topo: &str,
+    plan: Option<std::sync::Arc<sparq::coordinator::FaultPlan>>,
 ) -> Result<(), String> {
-    let server = sparq::coordinator::QnnBatchServer::start(
+    let server = sparq::coordinator::QnnBatchServer::start_chaos(
         cfg.clone(),
         graph,
         precision,
         seed,
         serve_cfg,
         cache,
+        plan,
     )
     .map_err(|e| e.to_string())?;
     println!(
@@ -402,6 +433,7 @@ fn cmd_serve_sim_batched(
     for rx in pending.drain(..) {
         served += matches!(rx.recv(), Ok(Ok(_))) as usize;
     }
+    let health = server.health();
     let snap = server.shutdown();
     let cs = cache.stats();
     let fills: Vec<String> =
@@ -421,6 +453,18 @@ fn cmd_serve_sim_batched(
         snap.queue_depth_max,
         cs.misses,
         cs.hits,
+    );
+    println!(
+        "  robustness: {}/{} shard(s) up, {} failover retr{}, {} breaker trip(s), \
+         {} deadline-shed, {} bad-input, {} fast-failed",
+        health.alive,
+        health.shards.len(),
+        snap.retries,
+        if snap.retries == 1 { "y" } else { "ies" },
+        snap.breaker_trips,
+        snap.deadline_shed,
+        snap.bad_input,
+        snap.no_workers,
     );
     Ok(())
 }
@@ -449,10 +493,13 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     }
     let model = opt(rest, "--model").unwrap_or("qnn_w4a4").to_string();
     let n: usize = opt(rest, "--requests").and_then(|s| s.parse().ok()).unwrap_or(256);
-    let serve_cfg = match opt(rest, "--config") {
+    let mut serve_cfg = match opt(rest, "--config") {
         Some(f) => Config::load(f).map_err(|e| e.to_string())?.serve().map_err(|e| e.to_string())?,
         None => sparq::config::ServeConfig::default(),
     };
+    if let Some(d) = opt(rest, "--deadline-us") {
+        serve_cfg.deadline_us = d.parse().map_err(|_| "bad --deadline-us value")?;
+    }
 
     // hardware-cost attribution from the simulator
     let prec = match model.as_str() {

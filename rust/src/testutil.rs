@@ -69,7 +69,19 @@ impl Gen {
 /// sets it high for deep coverage.  Unparsable or zero values fall
 /// back to the default (a typo must not silently skip the suite).
 pub fn fuzz_iters(default: u32) -> u32 {
-    match std::env::var("SPARQ_FUZZ_ITERS") {
+    scaled_iters("SPARQ_FUZZ_ITERS", default)
+}
+
+/// Load scale for the chaos/fault-injection suite
+/// (`rust/tests/serve_faults.rs`): `SPARQ_CHAOS_ITERS`, when set,
+/// replaces the suite's default request count — same contract as
+/// [`fuzz_iters`], elevated by the nightly deep-fuzz CI job.
+pub fn chaos_iters(default: u32) -> u32 {
+    scaled_iters("SPARQ_CHAOS_ITERS", default)
+}
+
+fn scaled_iters(var: &str, default: u32) -> u32 {
+    match std::env::var(var) {
         Ok(v) => match v.trim().parse::<u32>() {
             Ok(n) if n > 0 => n,
             _ => default,

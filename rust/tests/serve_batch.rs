@@ -78,7 +78,13 @@ fn flooding_the_queue_past_capacity_is_typed_backpressure() {
     // this thread are far faster than a simulated inference, so the
     // shard must fill and later submissions must see QueueFull
     let cache = ProgramCache::new();
-    let serve = ServeConfig { workers: 1, batch_window_us: 1_000, queue_depth: 2, batch: 2 };
+    let serve = ServeConfig {
+        workers: 1,
+        batch_window_us: 1_000,
+        queue_depth: 2,
+        batch: 2,
+        ..ServeConfig::default()
+    };
     let server = QnnBatchServer::start(
         ProcessorConfig::sparq(),
         &QnnGraph::sparq_cnn(),
@@ -128,7 +134,13 @@ fn flooding_the_queue_past_capacity_is_typed_backpressure() {
 fn concurrent_producers_share_batches_and_all_complete() {
     use std::sync::Arc;
     let cache = ProgramCache::new();
-    let serve = ServeConfig { workers: 2, batch_window_us: 20_000, queue_depth: 128, batch: 4 };
+    let serve = ServeConfig {
+        workers: 2,
+        batch_window_us: 20_000,
+        queue_depth: 128,
+        batch: 4,
+        ..ServeConfig::default()
+    };
     let server = Arc::new(
         QnnBatchServer::start(
             ProcessorConfig::sparq(),

@@ -54,27 +54,35 @@ fn bad_model_name_fails_fast() {
         eprintln!("SKIP: run `make artifacts` first");
         return;
     }
-    let server = start_server("qnn_nonexistent", ServeConfig::default());
-    // the worker dies during init; requests must not hang forever
-    match server.submit(vec![0.0; 256]) {
-        Ok(rx) => {
-            // channel closes when the worker exits
-            let r = rx.recv_timeout(std::time::Duration::from_secs(30));
-            assert!(matches!(r, Err(_) | Ok(Err(ServeError::Worker(_)))));
-        }
-        Err(_) => {} // also acceptable: queue rejected
+    // every worker's init fails: start must refuse typed instead of
+    // handing out a server whose queue nothing will ever drain
+    let dir = artifacts_dir();
+    let r = Server::start(
+        Box::new(move || {
+            Ok(Box::new(PjrtExecutor::new(&dir, "qnn_nonexistent")?) as Box<dyn Executor>)
+        }),
+        ServeConfig::default(),
+        42,
+    );
+    match r {
+        Err(ServeError::NoWorkers) => {}
+        Ok(_) => panic!("start must fail when no worker initialises"),
+        Err(e) => panic!("expected NoWorkers, got {e:?}"),
     }
-    server.shutdown();
 }
 
 #[test]
-fn short_image_is_zero_padded_not_crashing() {
+fn short_image_is_rejected_typed() {
     if !artifacts_present() {
         eprintln!("SKIP: run `make artifacts` first");
         return;
     }
     let server = start_server("qnn_w3a3", ServeConfig::default());
-    let r = server.infer(vec![0.5; 10]).expect("infer"); // 10 < 256 floats
-    assert_eq!(r.logits.len(), 4);
-    server.shutdown();
+    // 10 < 256 floats: refused at submit — never silently zero-padded
+    match server.infer(vec![0.5; 10]) {
+        Err(ServeError::BadInput { got: 10, want }) => assert_eq!(want, 256),
+        other => panic!("expected BadInput, got {other:?}"),
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.bad_input, 1);
 }
