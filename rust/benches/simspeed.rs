@@ -3,21 +3,27 @@
 //! instructions/s) on the Fig. 4 inner loop, so optimization work has a
 //! stable number to move.
 //!
-//! Three acceptance sections:
+//! Four acceptance sections:
 //!
 //! * per-variant host throughput through the full compiled path;
 //! * `compiled vs seed path` — the same E8 vmacsr inner-loop program
 //!   executed by the interpreting `Machine::run` (the seed engine) and
 //!   by the pre-compiled SWAR `Machine::run_compiled`, with identical
 //!   memory and cycle counts asserted;
+//! * `fused plan vs per-uop engine` — the superinstruction-fusion
+//!   check: the same E8 vmacsr inner loop through the fused
+//!   `run_compiled` plan and the retained per-uop
+//!   `run_compiled_unfused` engine, identical per-rep cycles and
+//!   memory asserted, host-time reduction gated at >= 5x;
 //! * `cached vs uncached` — the compile-once/execute-many check: a
 //!   Fig. 4-style repeated sweep through the program cache + machine
 //!   pool must beat rebuild-every-call bit-identically.
 //!
 //! `-- --json` additionally writes `BENCH_simspeed.json` (host
 //! element-ops/s, sim-Mcycles/s, cached-vs-uncached ratio per variant,
-//! compiled-vs-seed speedup) so the perf trajectory is tracked across
-//! PRs; CI uploads it as an artifact.
+//! compiled-vs-seed speedup, fused-vs-uops speedup + gated sim cycles)
+//! so the perf trajectory is tracked across PRs; CI uploads it as an
+//! artifact.
 
 mod common;
 
@@ -76,8 +82,11 @@ fn main() {
             let wl = Workload::random(dims, 2, 2, 9);
             let cc = compile_conv(&cfg, &wl, variant).expect("compile");
             let cp = cc.compiled.as_ref().expect("legal stream must pre-compile");
-            let (bulk, swar, generic) = cp.strategy_counts();
-            println!("  strategy mix: {bulk} bulk | {swar} swar | {generic} generic micro-ops");
+            let sc = cp.strategy_counts();
+            println!(
+                "  strategy mix: {} bulk | {} swar | {} generic | {} fused micro-ops",
+                sc.bulk, sc.swar, sc.generic, sc.fused
+            );
 
             // two machines, identically bound once; each engine re-runs
             // the same stream in place (state drift is identical on
@@ -122,6 +131,93 @@ fn main() {
                 ce / se
             );
             (seed_s, comp_s, se, ce)
+        });
+
+    // ---- fused execution plan vs the retained per-uop engine ----
+    let (unf_s, fus_s, fused_cycles_per_rep, plan_blocks, fused_blocks, fused_uops) =
+        b.section("fused plan vs per-uop engine (E8 vmacsr inner loop)", || {
+            use sparq::isa::{Lmul, Sew, VOp};
+            use sparq::kernels::asm::Asm;
+            let reps = if large { 60 } else { 20 };
+            let cfg = ProcessorConfig::sparq();
+            // the conv inner-loop idiom, distilled: short-vl E8 strips
+            // (load -> vmacsr x4 -> slide -> 4 contiguous spills) where
+            // per-uop dispatch + accounting dominates host time — the
+            // shape superinstruction fusion exists for
+            let mut a = Asm::new("fused-inner-loop", cfg.vlen_bits);
+            a.setvl(8, Sew::E8, Lmul::M1);
+            let (in_base, out_base) = (0x1000u64, 0x8000u64);
+            let iters = 400u64;
+            for it in 0..iters {
+                a.vle(Sew::E8, 8, in_base + it * 8);
+                for k in 0..4u8 {
+                    a.vmacsr_weight(k, 8, 0x9E + k as u64);
+                }
+                a.vi(VOp::SlideDown, 8, 8, 1);
+                for k in 0..4u64 {
+                    a.vse(Sew::E8, k as u8, out_base + it * 32 + k * 8);
+                }
+                a.loop_overhead();
+            }
+            let prog = a.finish(0);
+            let cp = sparq::sim::CompiledProgram::compile(&prog, &cfg).expect("compile");
+            let (plan_blocks, fused_blocks, fused_uops, _) = cp.plan_stats();
+            let sc = cp.strategy_counts();
+            println!(
+                "  plan: {plan_blocks} blocks, {fused_blocks} fused ({fused_uops} uops) | mix {} bulk | {} swar | {} fused",
+                sc.bulk, sc.swar, sc.fused
+            );
+            assert!(fused_blocks >= iters, "every iteration's spill run must fuse");
+
+            // identically-bound machines; each engine re-runs the same
+            // stream in place (the accumulator drift is identical on
+            // both sides), with one untimed warm-up run each
+            let mut m_fus = Machine::new(cfg.clone(), 1 << 16);
+            let mut m_unf = Machine::new(cfg.clone(), 1 << 16);
+            let input: Vec<u8> =
+                (0..(iters as usize * 8)).map(|i| (i as u32).wrapping_mul(2654435761) as u8).collect();
+            m_fus.mem.write(in_base, &input).expect("bind input");
+            m_unf.mem.write(in_base, &input).expect("bind input");
+            m_fus.run_compiled(&cp).expect("warm-up");
+            m_unf.run_compiled_unfused(&cp).expect("warm-up");
+
+            let t = Instant::now();
+            let mut unf_cycles = Vec::new();
+            for _ in 0..reps {
+                let r = m_unf.run_compiled_unfused(&cp).expect("unfused run");
+                unf_cycles.push(r.stats.cycles);
+            }
+            let unf_s = t.elapsed().as_secs_f64();
+
+            let t = Instant::now();
+            let mut fus_cycles = Vec::new();
+            let mut fused_seen = (0u64, 0u64);
+            for _ in 0..reps {
+                let r = m_fus.run_compiled(&cp).expect("fused run");
+                fus_cycles.push(r.stats.cycles);
+                fused_seen = (r.fused.blocks, r.fused.uops);
+            }
+            let fus_s = t.elapsed().as_secs_f64();
+
+            // the non-negotiable invariant: identical simulated cycles
+            // (rep by rep) and identical memory, fused or not
+            assert_eq!(unf_cycles, fus_cycles, "fusion moved cycle counts");
+            assert_eq!(
+                m_unf.mem.read(0, m_unf.mem.size()).unwrap(),
+                m_fus.mem.read(0, m_fus.mem.size()).unwrap(),
+                "fusion changed memory"
+            );
+            assert_eq!(fused_seen, (fused_blocks, fused_uops), "report fused counters");
+            let speedup = unf_s / fus_s;
+            println!(
+                "  {reps} reps | per-uop {unf_s:.3}s | fused plan {fus_s:.3}s | {speedup:.2}x host speedup ({} sim cycles/rep)",
+                fus_cycles[0]
+            );
+            assert!(
+                speedup >= 5.0,
+                "fused plan must cut host time >= 5x on the inner loop (got {speedup:.2}x)"
+            );
+            (unf_s, fus_s, fus_cycles[0], plan_blocks as u64, fused_blocks, fused_uops)
         });
 
     // ---- compile-once/execute-many vs rebuild-every-call ----
@@ -200,6 +296,15 @@ fn main() {
                 .num("seed_element_ops_per_s", seed_eops)
                 .num("compiled_element_ops_per_s", comp_eops)
                 .num("speedup", comp_eops / seed_eops);
+        });
+        json.obj("fused_vs_uops", |j| {
+            j.num("unfused_s", unf_s)
+                .num("fused_s", fus_s)
+                .num("host_speedup", unf_s / fus_s)
+                .int("sim_cycles", fused_cycles_per_rep)
+                .int("plan_blocks", plan_blocks)
+                .int("fused_blocks", fused_blocks)
+                .int("fused_uops", fused_uops);
         });
         json.obj("cached_vs_uncached", |j| {
             j.num("uncached_s", t_uncached)

@@ -43,10 +43,12 @@
 //! * [`CompiledConv::execute`] = reset + bind + run: re-executing a
 //!   cached program on rebound tensors is bit-identical (outputs and
 //!   cycle counts) to a cold build, which the cache-correctness tests
-//!   pin.  The run step uses the pre-compiled micro-op form
-//!   ([`crate::sim::CompiledProgram`], DESIGN.md §Perf): legality and
-//!   alignment were checked at compile time, and the inner loops
-//!   execute word-parallel instead of element-at-a-time.
+//!   pin.  The run step walks the pre-compiled micro-op form's fused
+//!   execution plan ([`crate::sim::CompiledProgram`], DESIGN.md §Perf):
+//!   legality and alignment were checked at compile time, contiguous
+//!   load/store/copy/fill runs execute as one sweep per run instead of
+//!   per-instruction, and the cycle totals were precomputed when the
+//!   plan was built.
 //!
 //! [`build`] is compile + bind on the caller's machine — the original
 //! single-shot API the variant modules and their tests use.

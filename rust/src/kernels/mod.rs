@@ -31,13 +31,14 @@
 //! ## Compile once, execute many
 //!
 //! [`compile_conv`] builds a [`CompiledConv`] (instruction stream +
-//! tensor layout + the pre-compiled micro-op form, see
-//! [`crate::sim::CompiledProgram`] and DESIGN.md §Perf) once per
-//! (dims, variant, processor, opts, weights) tuple;
+//! tensor layout + the pre-compiled micro-op form with its fused
+//! execution plan, see [`crate::sim::CompiledProgram`] and DESIGN.md
+//! §Perf) once per (dims, variant, processor, opts, weights) tuple;
 //! [`CompiledConv::execute`] rebinds activation data into a reset
-//! machine and re-runs the micro-ops word-parallel with bit-identical
+//! machine and walks the fused plan — bulk runs as one sweep per run,
+//! cycle totals precomputed at compile time — with bit-identical
 //! outputs and cycle counts.  [`ProgramCache`] memoizes compilations —
-//! including the micro-op form — behind a content key and
+//! including the fused form — behind a content key and
 //! [`crate::sim::MachinePool`] recycles machines, which is what the
 //! serving stack and the bench sweeps use ([`run_conv_cached`]).
 //! [`run_conv`] keeps the original one-shot build-and-run semantics.

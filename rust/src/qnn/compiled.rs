@@ -622,8 +622,9 @@ pub enum StageKind {
     GapFc(StageProg),
 }
 
-/// An emitted stream plus its pre-compiled micro-op form (present
-/// whenever the stream is legal for the processor — always on Sparq).
+/// An emitted stream plus its pre-compiled micro-op form — carrying
+/// its fused execution plan, DESIGN.md §Perf — (present whenever the
+/// stream is legal for the processor — always on Sparq).
 #[derive(Debug)]
 pub struct StageProg {
     pub prog: Program,
@@ -714,8 +715,10 @@ pub enum VariantPolicy {
 /// 1..B are rebased copies at multiples of [`Self::slot_stride`].  One
 /// program serves all slots — [`Self::execute_batch`] stages up to B
 /// images and replays every stage per slot with the addresses rebased
-/// (`Machine::run_compiled_rebased`), so per-image outputs and cycles
-/// are bit-identical to a one-image execution.  The per-model runtime
+/// (`Machine::run_compiled_rebased`, which walks the stage's fused
+/// execution plan applying the slot offset once per fused block), so
+/// per-image outputs and cycles are bit-identical to a one-image
+/// execution.  The per-model runtime
 /// *weight*-packing scalar pass is hoisted into `preamble`, executed
 /// once per batch — the amortization that makes img/s grow with B.
 #[derive(Debug)]
@@ -1523,7 +1526,7 @@ impl CompiledQnn {
     /// [`Self::batch`] images into their activation slots, run the
     /// per-batch preamble once, then replay every chained stage per
     /// slot with rebased addresses (stage-major order, so each stage's
-    /// micro-op stream stays hot across the whole batch).  Per-image
+    /// fused execution plan stays hot across the whole batch).  Per-image
     /// logits and per-slot cycles are bit-identical to a one-image
     /// execution of the same program; the preamble cycles are paid once
     /// however full the batch is — that amortization is the batched

@@ -79,6 +79,14 @@ impl Mem {
         Ok(())
     }
 
+    /// The whole backing store, mutably — the fused store-run fast
+    /// path (`sim::uop`): one merged bounds check for the run's span,
+    /// then raw per-member copies.  `write` has no side effect beyond
+    /// the byte copy, so bypassing it is behaviour-preserving.
+    pub(crate) fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
     /// Unsigned element load of `bytes` in {1,2,4,8}.
     pub fn load_uint(&self, addr: u64, bytes: u32) -> Result<u64, MemError> {
         let s = self.read(addr, bytes as usize)?;

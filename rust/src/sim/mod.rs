@@ -2,14 +2,17 @@
 //! (see [`exec`]) married to a cycle-approximate timing model
 //! ([`timing`]) with per-unit utilization accounting ([`stats`]).
 //!
-//! Two execution engines share those semantics (DESIGN.md §Perf):
+//! Several execution engines share those semantics (DESIGN.md §Perf):
 //! [`Machine::run`] interprets the trace instruction by instruction,
-//! while [`Machine::run_compiled`] executes a [`uop::CompiledProgram`]
-//! — legality/alignment checked once at compile time, elements
-//! processed many-per-`u64`-word (SWAR) — with bit-identical outputs
-//! and cycle counts.  [`Machine::run_reference`] is the pure
-//! per-element oracle both are differentially fuzzed against
-//! (`rust/tests/exec_diff.rs`).
+//! while [`Machine::run_compiled`] walks a [`uop::CompiledProgram`]'s
+//! fused execution plan — legality/alignment checked once at compile
+//! time, elements processed many-per-`u64`-word (SWAR), recurring bulk
+//! runs fused into one sweep per run, and the whole-run [`Stats`]
+//! precomputed at compile time — with bit-identical outputs and cycle
+//! counts.  [`Machine::run_compiled_unfused`] is the retained per-uop
+//! engine (the fused plan's bench baseline), and
+//! [`Machine::run_reference`] is the pure per-element oracle all of
+//! them are differentially fuzzed against (`rust/tests/exec_diff.rs`).
 
 pub mod exec;
 pub mod mem;
@@ -25,8 +28,8 @@ use exec::ExecState;
 use mem::{Mem, MemError};
 use stats::Stats;
 pub use pool::MachinePool;
-pub use stats::RunReport;
-pub use uop::CompiledProgram;
+pub use stats::{FusedCounts, RunReport};
+pub use uop::{CompiledProgram, StrategyCounts};
 use std::fmt;
 use timing::Timing;
 use vrf::Vrf;
@@ -245,7 +248,12 @@ impl Machine {
         }
         st.cycles = timing.cycles();
         st.raw_stall_cycles = timing.raw_stalls;
-        Ok(RunReport { stats: st, macs: prog.macs, label: prog.label.clone() })
+        Ok(RunReport {
+            stats: st,
+            macs: prog.macs,
+            label: prog.label.clone(),
+            fused: stats::FusedCounts::default(),
+        })
     }
 
     /// Timing-side accounting for one instruction.

@@ -69,6 +69,19 @@ impl Stats {
     }
 }
 
+/// Superinstruction-fusion counters from the plan engine
+/// (`Machine::run_compiled`): how much of the stream executed as fused
+/// multi-uop blocks instead of per-uop dispatch.  Zero/`Default` for
+/// the interpreting engines and the retained per-uop engine
+/// (`Machine::run_compiled_unfused`), which never fuse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FusedCounts {
+    /// Multi-member fused blocks executed.
+    pub blocks: u64,
+    /// Bulk micro-ops those blocks absorbed.
+    pub uops: u64,
+}
+
 /// A finished run plus the kernel-declared work, ready for reporting.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -78,6 +91,9 @@ pub struct RunReport {
     pub macs: u64,
     /// Human label ("int16-conv2d", "ULP-conv2d", ...).
     pub label: String,
+    /// Fused-block execution counters (diagnostics; never part of the
+    /// bit-identity contract between engines).
+    pub fused: FusedCounts,
 }
 
 impl RunReport {
@@ -115,7 +131,7 @@ mod tests {
     fn ops_per_cycle_counts_mac_as_two() {
         let mut s = Stats::default();
         s.cycles = 100;
-        let r = RunReport { stats: s, macs: 400, label: "x".into() };
+        let r = RunReport { stats: s, macs: 400, label: "x".into(), fused: FusedCounts::default() };
         assert!((r.ops_per_cycle() - 8.0).abs() < 1e-12);
     }
 
@@ -125,6 +141,7 @@ mod tests {
             stats: Stats { cycles, ..Default::default() },
             macs: 10,
             label: String::new(),
+            fused: FusedCounts::default(),
         };
         assert!((mk(50).speedup_over(&mk(100)) - 2.0).abs() < 1e-12);
     }

@@ -21,6 +21,20 @@
 //! The model is *not* RTL-cycle-exact; it reproduces the throughput
 //! ratios and utilization numbers the paper reports (§V-A), which is
 //! what the evaluation needs.  See DESIGN.md §2 for the argument.
+//!
+//! ## Data independence (the execution-plan contract)
+//!
+//! Every input to this model — unit, byte counts, register-group ids —
+//! is known at *compile* time; [`Timing`] never reads run-time data,
+//! addresses, or the architectural state.  Given the same accounting
+//! call sequence it produces the same cycle numbers, deterministically.
+//! The fused execution plan (`sim::uop`) depends on this: it replays
+//! the accounting stream once at compile time, stores per-block cycle
+//! advances and the whole-run totals, and `Machine::run_compiled`
+//! returns those precomputed numbers without touching a [`Timing`] at
+//! all.  Any future input to this model that depends on run-time data
+//! would break that contract and must move the plan engine back to
+//! live accounting.
 
 use crate::arch::{ProcessorConfig, Unit};
 
@@ -243,5 +257,22 @@ mod tests {
         tm.scalar(5);
         let (s, _) = tm.vector(Unit::Valu, 64, 0, Some((1, 1)), &[]);
         assert!(s >= 5);
+    }
+
+    /// The data-independence contract the fused execution plan rests
+    /// on: the same accounting call sequence yields the same numbers,
+    /// every time (see the module docs).
+    #[test]
+    fn identical_call_sequences_time_identically() {
+        let run = || {
+            let mut tm = t();
+            tm.scalar(3);
+            tm.vector(Unit::Vlsu, 256, 256, Some((1, 1)), &[]);
+            tm.vector(Unit::Mfpu, 1024, 0, Some((2, 2)), &[(1, 1)]);
+            tm.scalar(1);
+            tm.vector(Unit::Valu, 64, 0, Some((4, 1)), &[(2, 2)]);
+            (tm.cycles(), tm.raw_stalls)
+        };
+        assert_eq!(run(), run());
     }
 }

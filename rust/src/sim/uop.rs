@@ -27,12 +27,37 @@
 //!   [`exec::scalar_op`] semantics for the cold ops (mulh/min/max/sra,
 //!   fp, overlapping slides, widening adds).
 //!
-//! [`Machine::run_compiled`] then executes micro-ops with zero
-//! per-element dispatch and feeds [`Timing`] from the precomputed byte
-//! counts.  The invariant — pinned by `rust/tests/exec_diff.rs` and
-//! every conv golden test — is that outputs, memory, *and cycle
-//! counts* are bit-identical to the interpreting [`Machine::run`] and
-//! to the per-element [`Machine::run_reference`] oracle.
+//! ## Superinstruction fusion + flat execution plans
+//!
+//! On top of the micro-op stream, compile time builds an `ExecPlan`:
+//!
+//! * **Nop compaction** — scalar-slot micro-ops have no architectural
+//!   effect; the plan's step stream drops them entirely (their
+//!   dispatch cycles live on in the precomputed totals).
+//! * **Superinstruction fusion** — an idempotent pass collapses
+//!   recurring bulk runs into fused blocks executed as one sweep per
+//!   *run*: loads/stores contiguous in memory (one span bounds check +
+//!   raw per-member copies, the requant zero-fill and im2col idioms),
+//!   and fills/copies contiguous in the flat VRF (one merged word
+//!   sweep).  A `vsetvli` absorbed inside a run is applied once after
+//!   the block — members never read the live state.
+//! * **Precomputed timing** — [`Timing`] consumes only the
+//!   compile-time `Acct` values, never run-time data (see the
+//!   `sim::timing` module docs), so the *entire* [`Stats`] of a
+//!   successful run is a compile-time constant.  The plan replays the
+//!   acct stream once at build time, records a cycle total per block,
+//!   and [`Machine::run_compiled`] returns the precomputed totals —
+//!   execution is data movement plus pointer arithmetic, no per-uop
+//!   accounting at all.
+//!
+//! The PR-2 per-uop engine is retained as
+//! [`Machine::run_compiled_unfused`] (it re-derives timing at run
+//! time), both as the bench baseline for the fused plan and as a
+//! fourth engine in the differential fuzz matrix.  The invariant —
+//! pinned by `rust/tests/exec_diff.rs` (including its fusion-boundary
+//! corpus) and every conv golden test — is that outputs, memory, *and
+//! cycle counts* are bit-identical across all engines, unbatched and
+//! rebased.
 //!
 //! ## Why ascending word loops are exact under group overlap
 //!
@@ -47,7 +72,7 @@
 
 use super::exec::{self, ExecState};
 use super::mem::Mem;
-use super::stats::{RunReport, Stats};
+use super::stats::{FusedCounts, RunReport, Stats};
 use super::timing::Timing;
 use super::vrf::Vrf;
 use super::{Machine, Program, SimError};
@@ -64,6 +89,25 @@ pub enum Strategy {
     Swar,
     /// Monomorphic per-element loop (cold ops, overlapping slides).
     Generic,
+}
+
+/// Named micro-op counts per execution strategy (the former anonymous
+/// `(bulk, swar, generic)` 3-tuple, grown a `fused` lane).  A bulk
+/// micro-op absorbed into a multi-member fused block moves from the
+/// `bulk` lane to the `fused` lane, so the four lanes still sum to the
+/// number of strategy-bearing micro-ops in the stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StrategyCounts {
+    /// Bulk byte moves dispatched per uop (incl. slides, which never
+    /// fuse).
+    pub bulk: usize,
+    /// Word-parallel SWAR lanes.
+    pub swar: usize,
+    /// Monomorphic per-element loops.
+    pub generic: usize,
+    /// Bulk micro-ops executing as members of fused superinstruction
+    /// blocks.
+    pub fused: usize,
 }
 
 /// Fully resolved shift amount for the vmacsr family.
@@ -168,19 +212,23 @@ struct Uop {
 }
 
 /// A trace pre-compiled for one processor configuration: legality,
-/// alignment, vtype folding, operand resolution and strategy selection
-/// all done once.  Execute it any number of times with
-/// [`Machine::run_compiled`] — bit-identical (outputs and cycle
-/// counts) to [`Machine::run`] on the original [`Program`].
+/// alignment, vtype folding, operand resolution, strategy selection,
+/// superinstruction fusion and the full timing replay all done once.
+/// Execute it any number of times with [`Machine::run_compiled`] —
+/// bit-identical (outputs and cycle counts) to [`Machine::run`] on the
+/// original [`Program`].
 #[derive(Debug, Clone)]
 pub struct CompiledProgram {
     uops: Vec<Uop>,
+    /// The fused flat execution plan (Nop-compacted steps, fused
+    /// blocks, precomputed per-block cycles and run totals).
+    plan: ExecPlan,
     /// The configuration the stream was validated against
     /// (`run_compiled` rejects a machine with any other config).
     pub cfg: ProcessorConfig,
     pub macs: u64,
     pub label: String,
-    counts: [usize; 3],
+    counts: StrategyCounts,
     /// True when some vector instruction was lowered under the
     /// *initial* (default) vtype/vl — i.e. before the stream's first
     /// `vsetvli`.  Such a program is only valid on a machine whose
@@ -201,7 +249,7 @@ impl CompiledProgram {
         let bpc = cfg.bytes_per_cycle() as u64;
         let mut st = ExecState::default();
         let mut uops = Vec::with_capacity(prog.insts.len());
-        let mut counts = [0usize; 3];
+        let mut counts = StrategyCounts::default();
         let mut saw_setvl = false;
         let mut needs_default_entry = false;
         for inst in &prog.insts {
@@ -212,13 +260,21 @@ impl CompiledProgram {
             needs_default_entry |=
                 !saw_setvl && !matches!(inst, VInst::Scalar { .. });
             let uop = lower(inst, cfg, &mut st, vlenb, bpc)?;
-            if let Some(s) = strategy_of(&uop.exec) {
-                counts[s as usize] += 1;
+            match strategy_of(&uop.exec) {
+                Some(Strategy::Bulk) => counts.bulk += 1,
+                Some(Strategy::Swar) => counts.swar += 1,
+                Some(Strategy::Generic) => counts.generic += 1,
+                None => {}
             }
             uops.push(uop);
         }
+        let plan = ExecPlan::build(&uops, cfg);
+        // every fused member is a bulk op: move them to the fused lane
+        counts.fused = plan.fused_uops as usize;
+        counts.bulk -= counts.fused;
         Ok(CompiledProgram {
             uops,
+            plan,
             cfg: cfg.clone(),
             macs: prog.macs,
             label: prog.label.clone(),
@@ -235,11 +291,301 @@ impl CompiledProgram {
         self.uops.is_empty()
     }
 
-    /// (bulk, swar, generic) micro-op counts — how much of the stream
-    /// landed on each strategy (diagnostics and perf tests).
-    pub fn strategy_counts(&self) -> (usize, usize, usize) {
-        (self.counts[0], self.counts[1], self.counts[2])
+    /// Micro-op counts per strategy — how much of the stream landed on
+    /// each engine lane (diagnostics and perf tests).
+    pub fn strategy_counts(&self) -> StrategyCounts {
+        self.counts
     }
+
+    /// Execution-plan shape: `(blocks, fused_blocks, fused_uops,
+    /// block_cycle_sum)`.  The per-block cycle advances are precomputed
+    /// at compile time and partition the run, so `block_cycle_sum`
+    /// equals the precomputed cycle total — the invariant the plan
+    /// engine's constant-time timing rests on (pinned by unit tests).
+    pub fn plan_stats(&self) -> (usize, u64, u64, u64) {
+        let sum = self.plan.blocks.iter().map(|b| b.cycles).sum();
+        (self.plan.blocks.len(), self.plan.fused_blocks, self.plan.fused_uops, sum)
+    }
+}
+
+// ---------------------------------------------------------------- plan
+
+/// The flat execution plan of one compiled program: a Nop-compacted
+/// step stream partitioned into blocks, with the whole-run [`Stats`]
+/// precomputed.  Built once at compile time; executing it is pure data
+/// movement.
+#[derive(Debug, Clone)]
+struct ExecPlan {
+    /// The functional steps, with `Exec::Nop` dropped (scalar slots
+    /// have no architectural effect; their cycles live in `totals`).
+    steps: Vec<Exec>,
+    /// Partition of `steps` (lo/hi are step indices) into per-step
+    /// `Seq` stretches and fused runs.
+    blocks: Vec<Block>,
+    /// Stats of one complete successful run — a compile-time constant
+    /// because [`Timing`] never reads run-time data (the acct stream
+    /// is replayed once at build time).
+    totals: Stats,
+    /// Multi-member fused blocks in the plan.
+    fused_blocks: u64,
+    /// Bulk micro-ops absorbed by those blocks.
+    fused_uops: u64,
+}
+
+/// One plan block: a step range plus how to execute it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Block {
+    lo: u32,
+    hi: u32,
+    /// Timing-horizon advance across this block (precomputed; the
+    /// per-block aggregate behind `CompiledProgram::plan_stats`).
+    cycles: u64,
+    /// Last `vsetvli` absorbed into a fused run, applied once after
+    /// the block (run members never read the live vl/vtype).
+    state: Option<(u32, VType)>,
+    kind: BlockKind,
+}
+
+/// How a block executes.  The fused kinds hold the precomputed merged
+/// ranges; rebase offsets are applied once per block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum BlockKind {
+    /// Step-by-step dispatch of `steps[lo..hi]`.
+    Seq,
+    /// Loads contiguous in memory: one span read, one copy per member
+    /// (member dsts are arbitrary; they are written in member order).
+    LoadRun { addr: u64, total: usize },
+    /// Stores contiguous in memory: one merged bounds check, then raw
+    /// member copies (member srcs are arbitrary — the zero-fill idiom
+    /// stores the same register repeatedly).
+    StoreRun { addr: u64, total: usize },
+    /// Broadcasts of one splat word to a contiguous flat-VRF range.
+    FillRun { dst: usize, len: usize, splat: u64 },
+    /// Register copies contiguous on both sides (constant src-dst
+    /// delta, a multiple of VLENB — exact under overlap, see the
+    /// module docs).
+    CopyRun { dst: usize, src: usize, len: usize },
+}
+
+impl ExecPlan {
+    fn build(uops: &[Uop], cfg: &ProcessorConfig) -> ExecPlan {
+        // 1. compact: drop Nops, remember each step's source uop index
+        let mut steps = Vec::with_capacity(uops.len());
+        let mut step_uop = Vec::with_capacity(uops.len());
+        for (i, u) in uops.iter().enumerate() {
+            if !matches!(u.exec, Exec::Nop) {
+                steps.push(u.exec.clone());
+                step_uop.push(i as u32);
+            }
+        }
+        // 2. singleton Seq blocks, then the (idempotent) fusion pass
+        let singles: Vec<Block> = (0..steps.len() as u32)
+            .map(|i| Block { lo: i, hi: i + 1, cycles: 0, state: None, kind: BlockKind::Seq })
+            .collect();
+        let mut blocks = fuse(&steps, singles);
+        // 3. replay the acct stream exactly once: per-block cycle
+        //    advances plus the whole-run totals.  Each block accounts
+        //    its own uops and any Nops compacted out before them; the
+        //    last block also absorbs the trailing Nops.
+        let mut timing = Timing::new(cfg);
+        let mut totals = Stats::default();
+        let mut fused_blocks = 0u64;
+        let mut fused_uops = 0u64;
+        let mut next_uop = 0usize;
+        let nblocks = blocks.len();
+        for (bi, b) in blocks.iter_mut().enumerate() {
+            let end_uop = if bi + 1 == nblocks {
+                uops.len()
+            } else {
+                step_uop[b.hi as usize - 1] as usize + 1
+            };
+            let h0 = timing.cycles();
+            for u in &uops[next_uop..end_uop] {
+                account_uop(u, &mut timing, &mut totals);
+            }
+            b.cycles = timing.cycles() - h0;
+            next_uop = end_uop;
+            if b.kind != BlockKind::Seq {
+                fused_blocks += 1;
+                fused_uops += steps[b.lo as usize..b.hi as usize]
+                    .iter()
+                    .filter(|e| run_seed(e).is_some())
+                    .count() as u64;
+            }
+        }
+        // all-Nop (or empty) programs have no steps and no blocks —
+        // account the whole stream here instead
+        for u in &uops[next_uop..] {
+            account_uop(u, &mut timing, &mut totals);
+        }
+        totals.cycles = timing.cycles();
+        totals.raw_stall_cycles = timing.raw_stalls;
+        ExecPlan { steps, blocks, totals, fused_blocks, fused_uops }
+    }
+}
+
+/// Can this step seed a fused run (and with which merged range)?
+fn run_seed(e: &Exec) -> Option<BlockKind> {
+    match *e {
+        Exec::Load { addr, len, .. } => Some(BlockKind::LoadRun { addr, total: len }),
+        Exec::Store { addr, len, .. } => Some(BlockKind::StoreRun { addr, total: len }),
+        Exec::Fill { dst, len, splat } => Some(BlockKind::FillRun { dst, len, splat }),
+        Exec::Copy { dst, src, len } => Some(BlockKind::CopyRun { dst, src, len }),
+        _ => None,
+    }
+}
+
+/// Try to absorb `e` as the next member of a run, growing the merged
+/// range.  The rules are the exactness arguments documented in
+/// DESIGN.md §Perf: loads/stores need only *memory* contiguity (their
+/// VRF sides are applied in member order), while fills/copies need
+/// flat-VRF contiguity, which pins every interior member boundary to a
+/// multiple of VLENB (a multiple of 8) — so the merged word sweep
+/// writes exactly the bytes the per-member sweeps would.
+fn run_extend(kind: &mut BlockKind, e: &Exec) -> bool {
+    match (kind, e) {
+        (BlockKind::LoadRun { addr, total }, &Exec::Load { addr: a, len, .. })
+            if addr.checked_add(*total as u64) == Some(a) =>
+        {
+            *total += len;
+            true
+        }
+        (BlockKind::StoreRun { addr, total }, &Exec::Store { addr: a, len, .. })
+            if addr.checked_add(*total as u64) == Some(a) =>
+        {
+            *total += len;
+            true
+        }
+        (BlockKind::FillRun { dst, len, splat }, &Exec::Fill { dst: d, len: l, splat: s })
+            if d == *dst + *len && s == *splat && *len % 8 == 0 =>
+        {
+            *len += l;
+            true
+        }
+        (BlockKind::CopyRun { dst, src, len }, &Exec::Copy { dst: d, src: sc, len: l })
+            if d == *dst + *len && sc == *src + *len && *len % 8 == 0 =>
+        {
+            *len += l;
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Emit a block, merging adjacent `Seq` blocks (their step ranges are
+/// contiguous by construction; cycle advances add).
+fn push_block(out: &mut Vec<Block>, b: Block) {
+    if b.kind == BlockKind::Seq {
+        if let Some(last) = out.last_mut() {
+            if last.kind == BlockKind::Seq && last.hi == b.lo {
+                last.hi = b.hi;
+                last.cycles += b.cycles;
+                return;
+            }
+        }
+    }
+    out.push(b);
+}
+
+/// The superinstruction fusion pass.  Input: blocks partitioning the
+/// step stream (initially all singleton `Seq`).  Output: the same
+/// partition with contiguous bulk runs collapsed into fused blocks and
+/// adjacent `Seq` blocks merged.  `vsetvli` steps between members are
+/// absorbed (last one wins, applied after the block); a pending one
+/// not followed by a committing member is left outside the run.
+///
+/// The pass is idempotent by construction: only *singleton* `Seq`
+/// blocks seed or extend runs, multi-step `Seq` and fused blocks pass
+/// through untouched, and the output never contains two adjacent
+/// blocks that could still merge (they would have merged here) — so
+/// `fuse(steps, fuse(steps, x)) == fuse(steps, x)`, pinned by a unit
+/// test.
+fn fuse(steps: &[Exec], blocks: Vec<Block>) -> Vec<Block> {
+    let mut out: Vec<Block> = Vec::with_capacity(blocks.len());
+    let mut i = 0;
+    while i < blocks.len() {
+        let b = &blocks[i];
+        let seed = if b.kind == BlockKind::Seq && b.hi == b.lo + 1 {
+            run_seed(&steps[b.lo as usize])
+        } else {
+            None
+        };
+        let Some(mut kind) = seed else {
+            push_block(&mut out, blocks[i].clone());
+            i += 1;
+            continue;
+        };
+        let mut members = 1u32;
+        let mut hi = b.hi;
+        let mut state: Option<(u32, VType)> = None;
+        let mut pend: Option<(u32, VType)> = None;
+        let mut last = i; // block index of the last committed member
+        let mut j = i + 1;
+        while j < blocks.len() {
+            let c = &blocks[j];
+            if c.kind != BlockKind::Seq || c.hi != c.lo + 1 {
+                break;
+            }
+            match steps[c.lo as usize] {
+                Exec::SetState { vl, vtype } => pend = Some((vl, vtype)),
+                ref e => {
+                    if !run_extend(&mut kind, e) {
+                        break;
+                    }
+                    members += 1;
+                    hi = c.hi;
+                    if pend.is_some() {
+                        state = pend.take();
+                    }
+                    last = j;
+                }
+            }
+            j += 1;
+        }
+        if members >= 2 {
+            out.push(Block { lo: b.lo, hi, cycles: 0, state, kind });
+            i = last + 1;
+        } else {
+            push_block(&mut out, blocks[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+/// The per-uop accounting the retained engine runs at execution time
+/// and the plan builder replays at compile time.  It consumes only the
+/// precomputed [`Acct`] — never run-time data — which is exactly why
+/// the plan's totals can be precomputed (see the `sim::timing` module
+/// docs for the contract).
+#[inline]
+fn account_uop(u: &Uop, timing: &mut Timing, st: &mut Stats) {
+    match u.acct {
+        Acct::Scalar { n } => {
+            timing.scalar(n);
+            st.add_scalar_slots(n as u64);
+        }
+        Acct::Mem { bytes, reg, lmul, load } => {
+            let store_src = [(reg, lmul)];
+            let (dst, srcs): (Option<(u8, u32)>, &[(u8, u32)]) = if load {
+                (Some((reg, lmul)), &[])
+            } else {
+                (None, &store_src)
+            };
+            let (s, e) = timing.vector(Unit::Vlsu, bytes, bytes, dst, srcs);
+            st.add_busy(Unit::Vlsu, e - s);
+            if load {
+                st.bytes_loaded += bytes;
+            } else {
+                st.bytes_stored += bytes;
+            }
+        }
+        Acct::Vec { unit, busy, busy_cycles, dst, ref srcs, nsrcs } => {
+            timing.vector(unit, busy, 0, dst, &srcs[..nsrcs as usize]);
+            st.add_busy(unit, busy_cycles);
+        }
+    }
+    st.element_ops += u.ops;
 }
 
 /// Strategy of one micro-op; `None` for pure bookkeeping (scalar
@@ -257,29 +603,95 @@ fn strategy_of(e: &Exec) -> Option<Strategy> {
     }
 }
 
-impl Machine {
-    /// Execute a pre-compiled program: the hot path of
-    /// compile-once/execute-many serving.  Zero per-instruction
-    /// validation, zero per-element dispatch; [`Timing`] is fed from
-    /// the byte counts resolved at compile time.  Outputs, memory and
-    /// the returned [`RunReport`] are bit-identical to
-    /// [`Machine::run`] on the source [`Program`].
-    pub fn run_compiled(&mut self, cp: &CompiledProgram) -> Result<RunReport, SimError> {
-        self.run_compiled_rebased(cp, 0)
+/// Execute a `Seq` stretch of the step stream one micro-op at a time —
+/// also the exact-partial-state fallback when a fused run's merged
+/// bounds check fails.
+fn exec_seq(
+    steps: &[Exec],
+    base: u64,
+    st: &mut ExecState,
+    vrf: &mut Vrf,
+    mem: &mut Mem,
+) -> Result<(), SimError> {
+    for e in steps {
+        exec_uop(e, base, st, vrf, mem)?;
     }
+    Ok(())
+}
 
-    /// [`Machine::run_compiled`] with every memory address offset by
-    /// `base` — the batched-arena rebind (DESIGN.md §Serving): one
-    /// compiled program executes against any of B disjoint per-image
-    /// activation slots.  `base` must be a multiple of the arena
-    /// allocation alignment (64) so every access keeps its alignment;
-    /// timing is byte-count-driven and address-independent, so the
-    /// report is bit-identical to the `base = 0` run.
-    pub fn run_compiled_rebased(
-        &mut self,
-        cp: &CompiledProgram,
-        base: u64,
-    ) -> Result<RunReport, SimError> {
+/// Execute one plan block.  Fused kinds do their whole run as one
+/// sweep (with the rebase offset applied once); the absorbed `vsetvli`
+/// state, if any, is applied after the block.  A fused memory run
+/// whose *merged* span faults replays per-step: the span is the exact
+/// union of the member intervals, so some member faults too, and the
+/// replay reproduces the interpreter's partial state and first error.
+fn exec_block(
+    b: &Block,
+    steps: &[Exec],
+    base: u64,
+    st: &mut ExecState,
+    vrf: &mut Vrf,
+    mem: &mut Mem,
+) -> Result<(), SimError> {
+    let (lo, hi) = (b.lo as usize, b.hi as usize);
+    match b.kind {
+        BlockKind::Seq => return exec_seq(&steps[lo..hi], base, st, vrf, mem),
+        BlockKind::LoadRun { addr, total } => match mem.read(addr + base, total) {
+            Ok(span) => {
+                let flat = vrf.flat_mut();
+                for e in &steps[lo..hi] {
+                    if let Exec::Load { dst, addr: a, len } = *e {
+                        let off = (a - addr) as usize;
+                        flat[dst..dst + len].copy_from_slice(&span[off..off + len]);
+                    }
+                }
+            }
+            Err(_) => return exec_seq(&steps[lo..hi], base, st, vrf, mem),
+        },
+        BlockKind::StoreRun { addr, total } => {
+            if mem.read(addr + base, total).is_err() {
+                return exec_seq(&steps[lo..hi], base, st, vrf, mem);
+            }
+            let data = mem.bytes_mut();
+            let flat = vrf.flat();
+            for e in &steps[lo..hi] {
+                if let Exec::Store { src, addr: a, len } = *e {
+                    let o = (a + base) as usize;
+                    data[o..o + len].copy_from_slice(&flat[src..src + len]);
+                }
+            }
+        }
+        BlockKind::FillRun { dst, len, splat } => {
+            // member boundaries are multiples of 8 (run_extend), so the
+            // merged sweep's chunk grid coincides with each member's
+            let le = splat.to_le_bytes();
+            for chunk in vrf.flat_mut()[dst..dst + len].chunks_mut(8) {
+                chunk.copy_from_slice(&le[..chunk.len()]);
+            }
+        }
+        BlockKind::CopyRun { dst, src, len } => {
+            let bts = vrf.flat_mut();
+            let words = len / 8;
+            for w in 0..words {
+                let o = w * 8;
+                let v = rd64(bts, src + o);
+                wr64(bts, dst + o, v);
+            }
+            for i in words * 8..len {
+                bts[dst + i] = bts[src + i];
+            }
+        }
+    }
+    if let Some((vl, vtype)) = b.state {
+        st.vl = vl;
+        st.vtype = vtype;
+    }
+    Ok(())
+}
+
+impl Machine {
+    /// The shared entry contract of every compiled-program engine.
+    fn check_compiled_entry(&self, cp: &CompiledProgram) -> Result<(), SimError> {
         if self.cfg != cp.cfg {
             return Err(SimError::Unsupported(
                 "machine configuration differs from the compiled program's",
@@ -298,40 +710,78 @@ impl Machine {
                 "compiled program uses vector state before its first vsetvli: run it on a reset machine",
             ));
         }
+        Ok(())
+    }
+
+    /// Execute a pre-compiled program: the hot path of
+    /// compile-once/execute-many serving.  Walks the fused execution
+    /// plan — one sweep per fused run, step dispatch for the rest, and
+    /// the precomputed [`Stats`] returned as-is ([`Timing`] never
+    /// reads run-time data, so a successful run's stats are a
+    /// compile-time constant).  Outputs, memory and the returned
+    /// [`RunReport`] are bit-identical to [`Machine::run`] on the
+    /// source [`Program`].
+    pub fn run_compiled(&mut self, cp: &CompiledProgram) -> Result<RunReport, SimError> {
+        self.run_compiled_rebased(cp, 0)
+    }
+
+    /// [`Machine::run_compiled`] with every memory address offset by
+    /// `base` — the batched-arena rebind (DESIGN.md §Serving): one
+    /// compiled program executes against any of B disjoint per-image
+    /// activation slots.  `base` must be a multiple of the arena
+    /// allocation alignment (64) so every access keeps its alignment;
+    /// the offset is applied once per fused block, not per access.
+    /// Timing is byte-count-driven and address-independent, so the
+    /// report is bit-identical to the `base = 0` run.
+    pub fn run_compiled_rebased(
+        &mut self,
+        cp: &CompiledProgram,
+        base: u64,
+    ) -> Result<RunReport, SimError> {
+        self.check_compiled_entry(cp)?;
+        for b in &cp.plan.blocks {
+            exec_block(b, &cp.plan.steps, base, &mut self.state, &mut self.vrf, &mut self.mem)?;
+        }
+        Ok(RunReport {
+            stats: cp.plan.totals.clone(),
+            macs: cp.macs,
+            label: cp.label.clone(),
+            fused: FusedCounts { blocks: cp.plan.fused_blocks, uops: cp.plan.fused_uops },
+        })
+    }
+
+    /// The retained PR-2 per-uop engine: dispatches every micro-op
+    /// individually and re-derives [`Timing`] at run time.  Kept as
+    /// the host-time baseline the fused plan is benched against
+    /// (`benches/simspeed.rs`) and as an extra engine in the
+    /// differential fuzz matrix; bit-identical (outputs, memory,
+    /// stats) to [`Machine::run_compiled`].
+    pub fn run_compiled_unfused(&mut self, cp: &CompiledProgram) -> Result<RunReport, SimError> {
+        self.run_compiled_unfused_rebased(cp, 0)
+    }
+
+    /// [`Machine::run_compiled_unfused`] with the batched-arena rebase
+    /// (see [`Machine::run_compiled_rebased`]).
+    pub fn run_compiled_unfused_rebased(
+        &mut self,
+        cp: &CompiledProgram,
+        base: u64,
+    ) -> Result<RunReport, SimError> {
+        self.check_compiled_entry(cp)?;
         let mut timing = Timing::new(&self.cfg);
         let mut st = Stats::default();
         for u in &cp.uops {
             exec_uop(&u.exec, base, &mut self.state, &mut self.vrf, &mut self.mem)?;
-            match u.acct {
-                Acct::Scalar { n } => {
-                    timing.scalar(n);
-                    st.add_scalar_slots(n as u64);
-                }
-                Acct::Mem { bytes, reg, lmul, load } => {
-                    let store_src = [(reg, lmul)];
-                    let (dst, srcs): (Option<(u8, u32)>, &[(u8, u32)]) = if load {
-                        (Some((reg, lmul)), &[])
-                    } else {
-                        (None, &store_src)
-                    };
-                    let (s, e) = timing.vector(Unit::Vlsu, bytes, bytes, dst, srcs);
-                    st.add_busy(Unit::Vlsu, e - s);
-                    if load {
-                        st.bytes_loaded += bytes;
-                    } else {
-                        st.bytes_stored += bytes;
-                    }
-                }
-                Acct::Vec { unit, busy, busy_cycles, dst, ref srcs, nsrcs } => {
-                    timing.vector(unit, busy, 0, dst, &srcs[..nsrcs as usize]);
-                    st.add_busy(unit, busy_cycles);
-                }
-            }
-            st.element_ops += u.ops;
+            account_uop(u, &mut timing, &mut st);
         }
         st.cycles = timing.cycles();
         st.raw_stall_cycles = timing.raw_stalls;
-        Ok(RunReport { stats: st, macs: cp.macs, label: cp.label.clone() })
+        Ok(RunReport {
+            stats: st,
+            macs: cp.macs,
+            label: cp.label.clone(),
+            fused: FusedCounts::default(),
+        })
     }
 }
 
@@ -1033,16 +1483,25 @@ mod tests {
     fn roundtrip(p: &Program, cfg: &ProcessorConfig) -> (RunReport, Vec<u8>, RunReport, Vec<u8>) {
         let mut a = Machine::new(cfg.clone(), 1 << 16);
         let mut b = Machine::new(cfg.clone(), 1 << 16);
-        // seed both VRFs with the same pseudo-random bytes
+        let mut u = Machine::new(cfg.clone(), 1 << 16);
+        // seed all VRFs with the same pseudo-random bytes
         let n = (cfg.vlen_bits / 8 * 32) as usize;
         let fill: Vec<u8> = (0..n).map(|i| (i as u32).wrapping_mul(2654435761) as u8).collect();
         a.vrf().slice_mut(0, n).copy_from_slice(&fill);
         b.vrf().slice_mut(0, n).copy_from_slice(&fill);
+        u.vrf().slice_mut(0, n).copy_from_slice(&fill);
         a.mem.write(0, &[7u8; 256]).unwrap();
         b.mem.write(0, &[7u8; 256]).unwrap();
+        u.mem.write(0, &[7u8; 256]).unwrap();
         let ra = a.run(p).unwrap();
         let cp = CompiledProgram::compile(p, cfg).unwrap();
         let rb = b.run_compiled(&cp).unwrap();
+        // the retained per-uop engine rides along: it must agree with
+        // the fused plan bit for bit
+        let ru = u.run_compiled_unfused(&cp).unwrap();
+        assert_eq!(ru.stats.cycles, rb.stats.cycles, "unfused engine cycles diverged");
+        assert_eq!(ru.stats.unit_table(), rb.stats.unit_table());
+        assert_eq!(u.vrf().slice(0, n), b.vrf().slice(0, n), "unfused engine VRF diverged");
         let va = a.vrf().slice(0, n).to_vec();
         let vb = b.vrf().slice(0, n).to_vec();
         (ra, va, rb, vb)
@@ -1086,7 +1545,150 @@ mod tests {
         p.push(VInst::OpVV { op: VOp::Add, vd: 3, vs2: 1, vs1: 2 }); // swar
         p.push(VInst::OpVX { op: VOp::Mulhu, vd: 4, vs2: 1, rs1: 3 }); // generic
         let cp = CompiledProgram::compile(&p, &c).unwrap();
-        assert_eq!(cp.strategy_counts(), (1, 2, 1));
+        assert_eq!(
+            cp.strategy_counts(),
+            StrategyCounts { bulk: 1, swar: 2, generic: 1, fused: 0 }
+        );
+    }
+
+    /// The requant zero-fill idiom: a broadcast followed by a run of
+    /// contiguous stores of the same register.  The run must fuse into
+    /// one `StoreRun` block — absorbing a re-issued `vsetvli` between
+    /// members but not the trailing one — and replay bit-identically
+    /// to the interpreter, memory and stats included.
+    #[test]
+    fn contiguous_store_run_fuses_and_replays_bit_identically() {
+        let c = cfg();
+        let mut p = Program::new("zfill");
+        p.push(VInst::SetVl { avl: 16, sew: Sew::E8, lmul: Lmul::M1 });
+        p.push(VInst::OpVI { op: VOp::Mv, vd: 1, vs2: 0, imm: 0 });
+        for k in 0..3u64 {
+            p.push(VInst::Store { eew: Sew::E8, vs3: 1, addr: 0x100 + 16 * k });
+        }
+        // a vsetvli *inside* the run (same vl, so addresses stay
+        // contiguous) is absorbed and applied once after the block
+        p.push(VInst::SetVl { avl: 16, sew: Sew::E8, lmul: Lmul::M1 });
+        for k in 3..6u64 {
+            p.push(VInst::Store { eew: Sew::E8, vs3: 1, addr: 0x100 + 16 * k });
+        }
+        // a trailing vsetvli after the last member stays outside it
+        p.push(VInst::SetVl { avl: 17, sew: Sew::E8, lmul: Lmul::M1 });
+        let cp = CompiledProgram::compile(&p, &c).unwrap();
+        let (blocks, fused_blocks, fused_uops, _) = cp.plan_stats();
+        assert_eq!(fused_blocks, 1, "one store run expected ({blocks} blocks)");
+        assert_eq!(fused_uops, 6);
+        let sc = cp.strategy_counts();
+        assert_eq!((sc.fused, sc.bulk), (6, 1), "6 stores fused, the fill alone stays bulk");
+
+        let mut a = Machine::new(c.clone(), 1 << 16);
+        let mut b = Machine::new(c.clone(), 1 << 16);
+        a.mem.write(0x100, &[0xAB; 96]).unwrap();
+        b.mem.write(0x100, &[0xAB; 96]).unwrap();
+        let ra = a.run(&p).unwrap();
+        let rb = b.run_compiled(&cp).unwrap();
+        assert_eq!(a.mem.read(0, 512).unwrap(), b.mem.read(0, 512).unwrap());
+        assert_eq!(ra.stats.cycles, rb.stats.cycles);
+        assert_eq!(ra.stats.unit_table(), rb.stats.unit_table());
+        assert_eq!(ra.stats.bytes_stored, rb.stats.bytes_stored);
+        assert_eq!((rb.fused.blocks, rb.fused.uops), (1, 6));
+        assert_eq!(b.vl(), 17, "trailing vsetvli executed after the fused block");
+        assert_eq!(a.vl(), b.vl());
+    }
+
+    /// Fusion is idempotent: running the pass over an already-fused
+    /// plan changes nothing (blocks, ranges, kinds, cycles).
+    #[test]
+    fn fusing_an_already_fused_plan_is_a_no_op() {
+        let c = cfg();
+        let mut p = Program::new("idem");
+        p.push(VInst::SetVl { avl: 16, sew: Sew::E8, lmul: Lmul::M1 });
+        // a fused load run, a lone (unfusable) load, a SWAR op, and a
+        // fused store run, with scalar slots sprinkled through
+        for k in 0..4u64 {
+            p.push(VInst::Load { eew: Sew::E8, vd: 1 + k as u8, addr: 0x40 + 16 * k });
+        }
+        p.push(VInst::Scalar { kind: ScalarKind::LoopCtl, n: 1 });
+        p.push(VInst::Load { eew: Sew::E8, vd: 9, addr: 0x300 });
+        p.push(VInst::OpVV { op: VOp::Add, vd: 5, vs2: 1, vs1: 2 });
+        for k in 0..3u64 {
+            p.push(VInst::Store { eew: Sew::E8, vs3: 5, addr: 0x200 + 16 * k });
+        }
+        let cp = CompiledProgram::compile(&p, &c).unwrap();
+        assert!(cp.plan.fused_blocks >= 2, "both runs should fuse");
+        let refused = fuse(&cp.plan.steps, cp.plan.blocks.clone());
+        assert_eq!(refused, cp.plan.blocks);
+    }
+
+    /// The fused engine enforces the same entry contract as the
+    /// per-uop one (`run_compiled_rejects_mismatched_machine`).
+    #[test]
+    fn fused_plan_rejects_mismatched_machine() {
+        let c = cfg();
+        let mut p = Program::new("fused-mismatch");
+        p.push(VInst::SetVl { avl: 16, sew: Sew::E8, lmul: Lmul::M1 });
+        p.push(VInst::Load { eew: Sew::E8, vd: 1, addr: 0 });
+        p.push(VInst::Load { eew: Sew::E8, vd: 2, addr: 16 });
+        let cp = CompiledProgram::compile(&p, &c).unwrap();
+        assert_eq!(cp.plan.fused_blocks, 1);
+        let mut m = Machine::new(ProcessorConfig::ara(), 1 << 12);
+        assert!(m.run_compiled(&cp).is_err());
+        assert!(m.run_compiled_unfused(&cp).is_err());
+    }
+
+    /// When a fused run's merged span faults, the engine must fall
+    /// back to per-member dispatch and reproduce the interpreter's
+    /// partial memory state and first error exactly.
+    #[test]
+    fn merged_store_run_bounds_failure_matches_the_interpreter_exactly() {
+        let c = cfg();
+        let mem_size = 1 << 12; // stores run off the 4 KiB edge
+        let mut p = Program::new("oob-run");
+        p.push(VInst::SetVl { avl: 16, sew: Sew::E8, lmul: Lmul::M1 });
+        p.push(VInst::OpVI { op: VOp::Mv, vd: 1, vs2: 0, imm: 5 });
+        p.push(VInst::Store { eew: Sew::E8, vs3: 1, addr: 4064 });
+        p.push(VInst::Store { eew: Sew::E8, vs3: 1, addr: 4080 });
+        p.push(VInst::Store { eew: Sew::E8, vs3: 1, addr: 4096 }); // faults
+        let cp = CompiledProgram::compile(&p, &c).unwrap();
+        assert_eq!(cp.plan.fused_blocks, 1, "the run fuses before the fault is known");
+        let mut a = Machine::new(c.clone(), mem_size);
+        let mut b = Machine::new(c.clone(), mem_size);
+        let mut u = Machine::new(c.clone(), mem_size);
+        let ea = a.run(&p).unwrap_err();
+        let eb = b.run_compiled(&cp).unwrap_err();
+        let eu = u.run_compiled_unfused(&cp).unwrap_err();
+        assert_eq!(ea, eb);
+        assert_eq!(ea, eu);
+        // the two in-bounds members landed before the fault, on every
+        // engine
+        assert_eq!(a.mem.read(4064, 32).unwrap(), &[5u8; 32][..]);
+        assert_eq!(a.mem.read(4064, 32).unwrap(), b.mem.read(4064, 32).unwrap());
+        assert_eq!(a.mem.read(4064, 32).unwrap(), u.mem.read(4064, 32).unwrap());
+    }
+
+    /// The per-block cycle advances partition the precomputed run
+    /// total — the invariant behind constant-time timing in the plan
+    /// engine — and the precomputed total equals a live run's.
+    #[test]
+    fn block_cycles_partition_the_precomputed_total() {
+        let c = cfg();
+        let mut p = Program::new("cycles");
+        p.push(VInst::SetVl { avl: 32, sew: Sew::E8, lmul: Lmul::M1 });
+        for k in 0..3u64 {
+            p.push(VInst::Load { eew: Sew::E8, vd: 1 + k as u8, addr: 32 * k });
+        }
+        p.push(VInst::OpVX { op: VOp::Macsr, vd: 4, vs2: 1, rs1: 3 });
+        p.push(VInst::Scalar { kind: ScalarKind::LoopCtl, n: 2 });
+        p.push(VInst::Store { eew: Sew::E8, vs3: 4, addr: 0x400 });
+        p.push(VInst::Store { eew: Sew::E8, vs3: 4, addr: 0x420 });
+        let cp = CompiledProgram::compile(&p, &c).unwrap();
+        let (_, fused_blocks, _, block_sum) = cp.plan_stats();
+        assert!(fused_blocks >= 1);
+        let mut m = Machine::new(c, 1 << 16);
+        let r = m.run_compiled(&cp).unwrap();
+        assert_eq!(block_sum, r.stats.cycles);
+        let mut mu = Machine::new(cp.cfg.clone(), 1 << 16);
+        let ru = mu.run_compiled_unfused(&cp).unwrap();
+        assert_eq!(ru.stats.cycles, r.stats.cycles, "live timing equals the precomputed total");
     }
 
     #[test]

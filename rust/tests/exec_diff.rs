@@ -1,20 +1,25 @@
-//! Differential fuzzing of the three execution engines: randomized
+//! Differential fuzzing of the four execution engines: randomized
 //! programs (all `VOp`s x SEW x LMUL x identical/disjoint/partially-
 //! overlapping register groups, plus loads/stores/slides/vsetvli
 //! churn) run through
 //!
-//! * `Machine::run_reference` — the retained per-element oracle,
-//! * `Machine::run`           — the interpreter with its VX fast paths,
-//! * `Machine::run_compiled`  — the pre-compiled SWAR micro-op engine,
+//! * `Machine::run_reference`        — the retained per-element oracle,
+//! * `Machine::run`                  — the interpreter with its VX fast paths,
+//! * `Machine::run_compiled`         — the fused-execution-plan engine,
+//! * `Machine::run_compiled_unfused` — the retained per-uop SWAR engine,
 //!
 //! and every run must agree bit-for-bit on the VRF, the memory, *and*
 //! the `RunReport` (cycles, element ops, per-unit busy/inst counters,
 //! bytes moved, RAW stalls).  This is the contract that lets the
-//! serving stack run the word-parallel engine (DESIGN.md §Perf).
+//! serving stack run the fused plan engine (DESIGN.md §Perf).  The
+//! fusion-boundary corpus below additionally hammers the fusion pass
+//! itself: contiguous load/store/fill/copy runs with absorbed vsetvli
+//! churn, length-1 runs, deliberate contiguity gaps and generic
+//! interrupters, unbatched and rebased.
 
-//! Case count: 150 by default; the nightly CI job scales it up via
-//! `SPARQ_FUZZ_ITERS` (`testutil::fuzz_iters`) so the deep sweep never
-//! taxes PR latency.
+//! Case count: 150 by default (fusion corpus 120); the nightly CI job
+//! scales both up via `SPARQ_FUZZ_ITERS` (`testutil::fuzz_iters`) so
+//! the deep sweep never taxes PR latency.
 
 use sparq::arch::ProcessorConfig;
 use sparq::isa::{Lmul, ScalarKind, Sew, VInst, VOp};
@@ -225,26 +230,184 @@ fn compiled_and_fast_engines_match_the_reference_bit_for_bit() {
         let mut m_ref = machine_with_state(&cfg, &seed_bytes);
         let mut m_fast = machine_with_state(&cfg, &seed_bytes);
         let mut m_uop = machine_with_state(&cfg, &seed_bytes);
+        let mut m_unf = machine_with_state(&cfg, &seed_bytes);
         m_ref.set_shift_csr(csr);
         m_fast.set_shift_csr(csr);
         m_uop.set_shift_csr(csr);
+        m_unf.set_shift_csr(csr);
 
         let r_ref = m_ref.run_reference(&p).unwrap_or_else(|e| panic!("reference: {e}\n{p:?}"));
         let r_fast = m_fast.run(&p).unwrap_or_else(|e| panic!("interpreter: {e}\n{p:?}"));
         let cp = CompiledProgram::compile(&p, &cfg)
             .unwrap_or_else(|e| panic!("uop compile: {e}\n{p:?}"));
         let r_uop = m_uop.run_compiled(&cp).unwrap_or_else(|e| panic!("uop run: {e}\n{p:?}"));
+        let r_unf =
+            m_unf.run_compiled_unfused(&cp).unwrap_or_else(|e| panic!("unfused run: {e}\n{p:?}"));
 
         let s_ref = snapshot(&mut m_ref);
         let s_fast = snapshot(&mut m_fast);
         let s_uop = snapshot(&mut m_uop);
+        let s_unf = snapshot(&mut m_unf);
         assert_eq!(s_ref.0, s_fast.0, "interpreter VRF diverged\n{p:?}");
         assert_eq!(s_ref.1, s_fast.1, "interpreter memory diverged\n{p:?}");
         assert_eq!(s_ref.0, s_uop.0, "compiled VRF diverged\n{p:?}");
         assert_eq!(s_ref.1, s_uop.1, "compiled memory diverged\n{p:?}");
+        assert_eq!(s_ref.0, s_unf.0, "unfused VRF diverged\n{p:?}");
+        assert_eq!(s_ref.1, s_unf.1, "unfused memory diverged\n{p:?}");
         assert_reports_eq(&r_ref, &r_fast, "interpreter");
         assert_reports_eq(&r_ref, &r_uop, "compiled");
+        assert_reports_eq(&r_ref, &r_unf, "unfused");
     });
+}
+
+// ---------------------------------------------------------- fusion corpus
+
+/// One run-shaped segment for the fusion-boundary corpus: a contiguous
+/// load/store run (with scalar slots, re-issued `vsetvli`s and
+/// occasional contiguity *gaps* between members), a fill run over
+/// ascending registers, or a copy run.  Length-1 "runs" fall out of
+/// `members == 1`.
+fn fusion_segment(g: &mut Gen, p: &mut Program, st: &mut VState) {
+    let vlenb = (VLEN / 8) as usize;
+    match g.below(4) {
+        0 | 1 => {
+            // contiguous memory run at the current vtype
+            p.push(setvl(g, st));
+            let eew = st.sew;
+            let n = st.vl as usize * eew.bytes() as usize;
+            let f = st.lmul.factor();
+            let regs: Vec<u8> = (0..32 / f).map(|k| (k * f) as u8).collect();
+            let members = g.range(1, 6) as usize;
+            // keep every member (gaps included) below MEM/2 so the
+            // rebased replay at BASE = MEM/2 stays in bounds
+            let span = 2 * members * n;
+            let addr0 = g.below((MEM / 2 - span) as u64 + 1);
+            let store = g.bool();
+            let mut addr = addr0;
+            for i in 0..members {
+                if i > 0 {
+                    if g.below(4) == 0 {
+                        p.push(VInst::Scalar {
+                            kind: ScalarKind::LoopCtl,
+                            n: g.range(1, 3) as u32,
+                        });
+                    }
+                    if g.below(5) == 0 {
+                        // same-vl vsetvli inside the run: absorbed
+                        p.push(VInst::SetVl { avl: st.vl as u64, sew: st.sew, lmul: st.lmul });
+                    }
+                    if g.below(6) == 0 {
+                        addr += n as u64; // gap: the run must split here
+                    }
+                }
+                let r = *g.pick(&regs);
+                p.push(if store {
+                    VInst::Store { eew, vs3: r, addr }
+                } else {
+                    VInst::Load { eew, vd: r, addr }
+                });
+                addr += n as u64;
+            }
+        }
+        2 => {
+            // fill run: full-group broadcasts to ascending registers
+            let avl = vlenb as u64;
+            p.push(VInst::SetVl { avl, sew: Sew::E8, lmul: Lmul::M1 });
+            st.sew = Sew::E8;
+            st.lmul = Lmul::M1;
+            st.vlmax = avl as u32;
+            st.vl = avl as u32;
+            let b = g.below(27) as u8;
+            let k = g.range(1, 5) as u8;
+            let imm = g.irange(-4, 7) as i8;
+            for i in 0..k {
+                // occasional splat mismatch: the run must split there
+                let imm = if g.below(8) == 0 { g.irange(-16, 15) as i8 } else { imm };
+                p.push(VInst::OpVI { op: VOp::Mv, vd: b + i, vs2: 0, imm });
+            }
+        }
+        _ => {
+            // copy run: vmv.v.v over ascending groups, overlap allowed
+            let avl = vlenb as u64;
+            p.push(VInst::SetVl { avl, sew: Sew::E8, lmul: Lmul::M1 });
+            st.sew = Sew::E8;
+            st.lmul = Lmul::M1;
+            st.vlmax = avl as u32;
+            st.vl = avl as u32;
+            let k = g.range(1, 5) as u8;
+            let d = g.below((32 - k as u64) + 1) as u8;
+            let s = g.below((32 - k as u64) + 1) as u8;
+            for i in 0..k {
+                p.push(VInst::OpVV { op: VOp::Mv, vd: d + i, vs2: 0, vs1: s + i });
+            }
+        }
+    }
+    // occasionally a generic op right at the segment edge
+    if g.below(3) == 0 {
+        let f = st.lmul.factor();
+        let r = |g: &mut Gen| (g.below((32 / f) as u64) as u32 * f) as u8;
+        p.push(VInst::OpVX { op: VOp::Mulhu, vd: r(g), vs2: r(g), rs1: g.next_u64() });
+    }
+}
+
+fn gen_run_heavy_program(g: &mut Gen) -> Program {
+    let mut p = Program::new("fusion-fuzz");
+    let mut st = VState { sew: Sew::E8, lmul: Lmul::M1, vl: 0, vlmax: 0 };
+    p.push(setvl(g, &mut st));
+    for _ in 0..g.range(3, 7) {
+        fusion_segment(g, &mut p, &mut st);
+    }
+    p
+}
+
+/// The fusion-boundary corpus: run-heavy programs executed on all four
+/// engines, unbatched and rebased into the upper half of memory, with
+/// bit-identical VRF/memory/stats everywhere.  Scaled by
+/// `SPARQ_FUZZ_ITERS` like the main fuzz.  The corpus must actually
+/// exercise fusion: the aggregate fused-uop count over all cases is
+/// asserted nonzero.
+#[test]
+fn fusion_boundary_corpus_matches_across_engines_and_rebases() {
+    let cfg = fuzz_cfg();
+    const BASE: u64 = (MEM / 2) as u64; // 64-aligned slot offset
+    let mut total_fused = 0u64;
+    Prop::new(0xF0_5E).runs(fuzz_iters(120)).check(|g| {
+        let p = gen_run_heavy_program(g);
+        let seed_bytes: Vec<u8> = {
+            let n = (VLEN / 8 * 32) as usize + 4096;
+            (0..n).map(|_| g.next_u64() as u8).collect()
+        };
+        let cp = CompiledProgram::compile(&p, &cfg)
+            .unwrap_or_else(|e| panic!("fusion compile: {e}\n{p:?}"));
+
+        let mut m_ref = machine_with_state(&cfg, &seed_bytes);
+        let mut m_uop = machine_with_state(&cfg, &seed_bytes);
+        let mut m_unf = machine_with_state(&cfg, &seed_bytes);
+        let r_ref = m_ref.run_reference(&p).unwrap_or_else(|e| panic!("reference: {e}\n{p:?}"));
+        let r_uop = m_uop.run_compiled(&cp).unwrap_or_else(|e| panic!("fused run: {e}\n{p:?}"));
+        let r_unf =
+            m_unf.run_compiled_unfused(&cp).unwrap_or_else(|e| panic!("unfused: {e}\n{p:?}"));
+        assert_eq!(snapshot(&mut m_ref), snapshot(&mut m_uop), "fused diverged\n{p:?}");
+        assert_eq!(snapshot(&mut m_ref), snapshot(&mut m_unf), "unfused diverged\n{p:?}");
+        assert_reports_eq(&r_ref, &r_uop, "fused");
+        assert_reports_eq(&r_ref, &r_unf, "unfused");
+        total_fused += r_uop.fused.uops;
+
+        // rebased into the upper half: fused vs unfused engine-to-
+        // engine (the interpreter's rebase path is covered elsewhere)
+        let mut b_uop = machine_with_state(&cfg, &seed_bytes);
+        let mut b_unf = machine_with_state(&cfg, &seed_bytes);
+        let rb_uop = b_uop
+            .run_compiled_rebased(&cp, BASE)
+            .unwrap_or_else(|e| panic!("rebased fused: {e}\n{p:?}"));
+        let rb_unf = b_unf
+            .run_compiled_unfused_rebased(&cp, BASE)
+            .unwrap_or_else(|e| panic!("rebased unfused: {e}\n{p:?}"));
+        assert_eq!(snapshot(&mut b_uop), snapshot(&mut b_unf), "rebased diverged\n{p:?}");
+        assert_reports_eq(&rb_uop, &rb_unf, "rebased");
+        assert_eq!(r_uop.stats.cycles, rb_uop.stats.cycles, "rebase moved cycles\n{p:?}");
+    });
+    assert!(total_fused > 0, "fusion corpus never produced a fused block");
 }
 
 #[test]
@@ -277,8 +440,8 @@ fn hot_conv_shapes_match_across_engines() {
         let mut m_uop = machine_with_state(&cfg, &seed_bytes);
         let r_ref = m_ref.run_reference(&p).unwrap();
         let cp = CompiledProgram::compile(&p, &cfg).unwrap();
-        let (_, swar, _) = cp.strategy_counts();
-        assert!(swar > 0, "conv shape must land on the SWAR strategy");
+        let sc = cp.strategy_counts();
+        assert!(sc.swar > 0, "conv shape must land on the SWAR strategy");
         let r_uop = m_uop.run_compiled(&cp).unwrap();
         assert_eq!(snapshot(&mut m_ref), snapshot(&mut m_uop), "{sew:?} vl={vl}");
         assert_reports_eq(&r_ref, &r_uop, "conv shape");
