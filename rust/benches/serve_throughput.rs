@@ -10,16 +10,25 @@
 //! * a warm rerun of the whole sweep is all graph-level cache hits
 //!   (nothing recompiles, nothing re-tunes);
 //! * the batched server path executes real batches (fill histogram,
-//!   queue metrics, deterministic cycle-latency percentiles).
+//!   queue metrics, deterministic cycle-latency percentiles);
+//! * the slot-reservation front door (`coordinator::ring`) sustains
+//!   >= 1M submits/s into a stub consumer, and at low paced load one
+//!   shared ring fills strictly better batches than the old layout of
+//!   N private per-shard queues.
 //!
 //! `--json` writes `BENCH_serve.json` next to the other BENCH files;
 //! `sparq bench-check` gates the cycle fields against
-//! `ci/bench_baselines/BENCH_serve.json`.
+//! `ci/bench_baselines/BENCH_serve.json` (the front-door numbers are
+//! wall-clock, deliberately not cycle-keyed, so the tolerance-0 gate
+//! ignores them).
 
 mod common;
 
+use std::time::{Duration, Instant};
+
 use common::{json_flag, Bench, Json};
 use sparq::config::ServeConfig;
+use sparq::coordinator::ring::{BatchRing, Pop, PushError};
 use sparq::coordinator::QnnBatchServer;
 use sparq::power::LaneReport;
 use sparq::qnn::schedule::{QnnPrecision, DEFAULT_QNN_SEED};
@@ -69,7 +78,7 @@ fn main() {
         );
     }
 
-    // server smoke at B=8: real batches through the sharded queue
+    // server smoke at B=8: real batches through the front-door ring
     let snap = b.section("server(B=8)", || {
         let server = QnnBatchServer::start(
             cfg.clone(),
@@ -114,6 +123,87 @@ fn main() {
     );
     assert!(snap.batches < snap.completed, "B=8 under flood must batch some requests");
 
+    // front door, raw: 4 producers hammer one ring of 64-slot frames
+    // into a stub consumer — the slot-reservation claim path must
+    // sustain >= 1M submits/s end to end (every submit delivered)
+    const PRODUCERS: usize = 4;
+    const PER: usize = 250_000;
+    let submits = (PRODUCERS * PER) as u64;
+    let submits_per_s = b.section("front_door(submits)", || {
+        let ring: BatchRing<u64> = BatchRing::new(64, 64, Duration::from_micros(100));
+        let ring_ref = &ring;
+        std::thread::scope(|s| {
+            let consumer = s.spawn(move || {
+                let mut n = 0u64;
+                loop {
+                    match ring_ref.pop(Duration::from_millis(5)) {
+                        Pop::Batch(items, _) => n += items.len() as u64,
+                        Pop::Idle => {}
+                        Pop::Closed => return n,
+                    }
+                }
+            });
+            let t0 = Instant::now();
+            let producers: Vec<_> = (0..PRODUCERS)
+                .map(|p| {
+                    s.spawn(move || {
+                        for k in 0..PER {
+                            let mut v = (p * PER + k) as u64;
+                            loop {
+                                match ring_ref.push(v) {
+                                    Ok(_) => break,
+                                    Err((PushError::Full, back)) => {
+                                        v = back;
+                                        std::thread::yield_now();
+                                    }
+                                    Err((PushError::Closed, _)) => {
+                                        unreachable!("nobody closes mid-bench")
+                                    }
+                                }
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for p in producers {
+                p.join().unwrap();
+            }
+            let wall = t0.elapsed();
+            ring.close();
+            let received = consumer.join().unwrap();
+            assert_eq!(received, submits, "every submit must be delivered exactly once");
+            submits as f64 / wall.as_secs_f64()
+        })
+    });
+    println!("front door: {submits} submits at {submits_per_s:.0} submits/s");
+    assert!(
+        submits_per_s >= 1_000_000.0,
+        "the slot-reservation front door must sustain >= 1M submits/s (got {submits_per_s:.0})"
+    );
+
+    // front door, fill: the same paced trickle (one rider every 200us,
+    // window 5ms) through ONE shared ring vs round-robin over 4
+    // private rings — the old per-shard layout splits the offered load
+    // N ways, so each private ring sees a quarter of the arrival rate
+    // and its mean batch fill must be strictly worse
+    let ring_fill = b.section("front_door(fill shared)", || {
+        let rings = [BatchRing::new(8, 8, Duration::from_millis(5))];
+        paced_mean_fill(&rings, 96, Duration::from_micros(200))
+    });
+    let sharded_fill = b.section("front_door(fill sharded)", || {
+        let rings: Vec<BatchRing<u64>> =
+            (0..4).map(|_| BatchRing::new(8, 8, Duration::from_millis(5))).collect();
+        paced_mean_fill(&rings, 96, Duration::from_micros(200))
+    });
+    println!(
+        "front door: mean batch fill {ring_fill:.2} shared vs {sharded_fill:.2} sharded at low load"
+    );
+    assert!(
+        ring_fill > sharded_fill,
+        "one shared ring must fill strictly better batches than split queues \
+         ({ring_fill:.2} !> {sharded_fill:.2})"
+    );
+
     if json_flag() {
         let mut json = Json::new();
         json.str("bench", "serve_throughput").int("images", IMAGES as u64).num("fmax_ghz", fmax);
@@ -137,8 +227,62 @@ fn main() {
                 .int("rejected", snap.rejected)
                 .int("queue_depth_max", snap.queue_depth_max.max(0) as u64);
         });
+        // wall-clock numbers: informational, never cycle-gated
+        json.obj("front_door", |j| {
+            j.int("submits", submits)
+                .num("submits_per_s", submits_per_s)
+                .num("ring_mean_fill", ring_fill)
+                .num("sharded_mean_fill", sharded_fill);
+        });
         json.write("BENCH_serve.json");
     }
 
     b.finish();
+}
+
+/// Trickle `n` riders round-robin into `rings` (one every `gap`), one
+/// dedicated consumer per ring, and return the mean batch fill across
+/// every executed batch.  Every rider must be delivered.
+fn paced_mean_fill(rings: &[BatchRing<u64>], n: usize, gap: Duration) -> f64 {
+    std::thread::scope(|s| {
+        let consumers: Vec<_> = rings
+            .iter()
+            .map(|r| {
+                s.spawn(move || {
+                    let mut batches = 0u64;
+                    let mut items = 0u64;
+                    loop {
+                        match r.pop(Duration::from_millis(5)) {
+                            Pop::Batch(b, _) => {
+                                batches += 1;
+                                items += b.len() as u64;
+                            }
+                            Pop::Idle => {}
+                            Pop::Closed => return (batches, items),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for i in 0..n {
+            rings[i % rings.len()]
+                .push(i as u64)
+                .unwrap_or_else(|_| panic!("a low-load push must never be refused"));
+            std::thread::sleep(gap);
+        }
+        // let the trailing window seal naturally before closing so the
+        // tail partials are windowed the same way on both layouts
+        std::thread::sleep(Duration::from_millis(5));
+        for r in rings {
+            r.close();
+        }
+        let (mut batches, mut items) = (0u64, 0u64);
+        for c in consumers {
+            let (b, i) = c.join().unwrap();
+            batches += b;
+            items += i;
+        }
+        assert_eq!(items as usize, n, "every paced rider must be delivered");
+        items as f64 / batches.max(1) as f64
+    })
 }

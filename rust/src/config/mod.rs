@@ -14,6 +14,7 @@
 //! workers = 2
 //! batch_window_us = 500
 //! queue_depth = 256
+//! ring_frames = 0          # 0 = derive from queue_depth / batch
 //! deadline_us = 0          # 0 = no default per-request deadline
 //! restart_budget = 8       # supervisor respawns before degraded
 //! restart_backoff_us = 200 # base respawn backoff (doubles per failure)
@@ -159,6 +160,7 @@ impl Config {
             workers: self.get_u32("serve", "workers")?.unwrap_or(1) as usize,
             batch_window_us: self.get_u64("serve", "batch_window_us")?.unwrap_or(500),
             queue_depth: self.get_u32("serve", "queue_depth")?.unwrap_or(256) as usize,
+            ring_frames: self.get_u32("serve", "ring_frames")?.unwrap_or(0) as usize,
             batch: self.get_u32("serve", "batch")?.unwrap_or(4) as usize,
             deadline_us: self.get_u64("serve", "deadline_us")?.unwrap_or(0),
             restart_budget: self.get_u32("serve", "restart_budget")?.unwrap_or(8),
@@ -175,6 +177,11 @@ pub struct ServeConfig {
     pub workers: usize,
     pub batch_window_us: u64,
     pub queue_depth: usize,
+    /// Batch frames in the lock-free front-door ring
+    /// (`coordinator::ring::BatchRing`; rounded up to a power of two).
+    /// `0` derives the frame count from `queue_depth / batch` so the
+    /// ring carries the same rider budget as the old sharded queues.
+    pub ring_frames: usize,
     /// Activation slots per batched execution
     /// (`coordinator::QnnBatchServer`; clamped to the compiled
     /// `MAX_BATCH`).  The generic executor path takes its batch from
@@ -203,6 +210,7 @@ impl Default for ServeConfig {
             workers: 1,
             batch_window_us: 500,
             queue_depth: 256,
+            ring_frames: 0,
             batch: 4,
             deadline_us: 0,
             restart_budget: 8,
@@ -254,6 +262,7 @@ queue_depth = 64
         assert_eq!(s.workers, 3);
         assert_eq!(s.queue_depth, 64);
         assert_eq!(s.batch_window_us, 500); // default
+        assert_eq!(s.ring_frames, 0); // default: derived from queue_depth
         assert_eq!(s.batch, 4); // default
         assert_eq!(s.deadline_us, 0); // default: no deadline
         assert_eq!(s.restart_budget, 8);
@@ -261,12 +270,13 @@ queue_depth = 64
         assert_eq!(s.breaker_threshold, 3);
         assert_eq!(s.probation_us, 50_000);
         let c = Config::parse(
-            "[serve]\nbatch = 8\ndeadline_us = 2000\nrestart_budget = 2\n\
+            "[serve]\nbatch = 8\nring_frames = 32\ndeadline_us = 2000\nrestart_budget = 2\n\
              restart_backoff_us = 500\nbreaker_threshold = 5\nprobation_us = 10000",
         )
         .unwrap();
         let s = c.serve().unwrap();
         assert_eq!(s.batch, 8);
+        assert_eq!(s.ring_frames, 32);
         assert_eq!(s.deadline_us, 2000);
         assert_eq!(s.restart_budget, 2);
         assert_eq!(s.restart_backoff_us, 500);

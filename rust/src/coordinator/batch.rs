@@ -1,50 +1,67 @@
-//! The batched QNN request path (DESIGN.md §Serving): a sharded,
-//! bounded submission queue in front of workers that execute
-//! *batch-B* compiled programs.
+//! The batched QNN request path (DESIGN.md §Serving): a lock-free
+//! slot-reservation front door ([`super::ring::BatchRing`]) feeding
+//! workers that execute *batch-B* compiled programs.
 //!
 //! Where the generic [`super::Server`] drives any [`super::Executor`]
 //! one image at a time, [`QnnBatchServer`] serves the whole SparqCNN
 //! through the batch-B arena layout
 //! ([`crate::qnn::compiled::CompiledQnn::compile_batched`]):
 //!
-//! * **Shard assignment.**  Each worker owns a private bounded queue
-//!   (its shard) — no shared-receiver lock.  `submit` assigns requests
-//!   round-robin and fails over to the other shards when the chosen
-//!   one is full; only when *every* shard is full does the caller see
-//!   typed backpressure ([`super::ServeError::QueueFull`]).
-//! * **Batching window.**  A worker takes its shard's first request,
-//!   drains up to `batch - 1` more within `batch_window_us`, then runs
-//!   ONE batched execution: every image staged into its own activation
-//!   slot, the per-batch weight-pack preamble paid once, each stage
-//!   stream replayed per slot with rebased addresses.
+//! * **Slot reservation.**  `submit` claims a slot in the current open
+//!   batch frame with one CAS and moves the image into the slot in
+//!   place — no per-shard queue, no channel copy, no round-robin
+//!   submitter.  Every producer feeds the *same* open batch, so
+//!   batches fill as fast as load arrives (the old N-queue design
+//!   split low offered load N ways and ran every batch underfilled).
+//!   Only when every frame of the ring is claimed-and-unconsumed does
+//!   the caller see typed backpressure ([`super::ServeError::QueueFull`]).
+//! * **Seal and dispatch.**  A frame seals the instant its last slot
+//!   is written or its batching window (`batch_window_us`) expires —
+//!   the two contenders race on a single CAS (see `coordinator/ring.rs`).
+//!   Any idle worker consumes the sealed frame and runs ONE batched
+//!   execution: every image staged into its own activation slot, the
+//!   per-batch weight-pack preamble paid once, each stage stream
+//!   replayed per slot with rebased addresses.
 //! * **Scatter.**  Per-image logits/cycles fan back out to each
 //!   request's completion channel; the [`Metrics`] sink records
 //!   per-request wall *and* simulated-cycle latency plus the executed
-//!   batch's fill.
+//!   batch's fill and how it sealed (last writer vs window).
 //!
 //! Robustness (DESIGN.md §Robustness):
 //!
-//! * **Shard failover.**  A request whose batch fails with a transient
-//!   `Worker` error is retried ONCE on a different shard
-//!   (`attempts`-guarded, counted in `Metrics::retries`); only the
-//!   second failure reaches the client typed.
-//! * **Circuit breaker.**  Per-shard consecutive-error counters eject a
-//!   persistently failing shard for a probation window
-//!   (`breaker_threshold` / `probation_us` in `ServeConfig`); routing
-//!   skips ejected shards, re-admits them when probation expires (the
-//!   next request is the probe), and a success heals the shard.  If
-//!   every live shard is ejected, routing falls back to alive-only.
+//! * **Failover.**  A request whose batch fails with a transient
+//!   `Worker` error is re-queued ONCE into the ring
+//!   (`attempts`-guarded, counted in `Metrics::retries`); any worker —
+//!   possibly the one that just failed — may pick up the retry, and
+//!   only the second failure reaches the client typed.  Requests whose
+//!   deadline passed during the failed execution are shed typed
+//!   ([`super::ServeError::Deadline`]) instead of burning a slot, and
+//!   once a drain has begun they are answered
+//!   [`super::ServeError::Closed`] and counted in `drain_shed`.
+//! * **Circuit breaker.**  Per-worker consecutive-error counters eject
+//!   a persistently failing worker for a probation window
+//!   (`breaker_threshold` / `probation_us` in `ServeConfig`); an
+//!   ejected worker *pauses consuming* from the shared ring while any
+//!   non-ejected worker is alive, re-admits itself when probation
+//!   expires (its next batch is the probe), and a success heals it.
+//!   If every live worker is ejected, they keep serving (alive-only
+//!   fallback), so an all-ejected pool never strands the ring.
 //! * **Typed refusals.**  Wrong-length images are rejected at submit
 //!   time ([`super::ServeError::BadInput`]) — never truncated or
-//!   padded; when every shard worker has died, submit fails fast with
-//!   [`super::ServeError::NoWorkers`] instead of queueing forever.
-//! * **Graceful drain.**  `shutdown_with_deadline` rejects new work,
-//!   finishes queued work until the deadline, sheds the rest typed,
-//!   and reports [`super::DrainStats`].
+//!   padded; when every worker has died, submit fails fast with
+//!   [`super::ServeError::NoWorkers`] instead of queueing forever, and
+//!   the last worker out closes and drains the ring so no rider hangs.
+//! * **Graceful drain.**  `shutdown_with_deadline` closes the ring
+//!   immediately (new submits see `Closed`), finishes queued work
+//!   until the deadline, sheds the rest typed, and reports
+//!   [`super::DrainStats`].
 //! * **Deterministic chaos.**  `start_chaos` threads a seeded
-//!   [`FaultPlan`] into every shard worker; each executed batch
-//!   consults the plan (panic / typed error / kill / delay / corrupt
-//!   logits), so the chaos suite replays bit-identically.
+//!   [`FaultPlan`] into every worker; each *executed batch* consults
+//!   the plan exactly once (panic / typed error / slow error / kill /
+//!   delay / corrupt logits) — the plan's global counter makes the
+//!   injected multiset a function of the seed alone, so chaos replays
+//!   bit-identically even though batch composition over a shared ring
+//!   is scheduling-dependent.
 //!
 //! Per-image results are bit-identical to unbatched inference (the
 //! batch determinism tests in `rust/tests/serve_batch.rs` pin logits
@@ -52,12 +69,13 @@
 //! decision.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::fault::{self, FaultAction, FaultPlan};
+use super::ring::{BatchRing, Pop, PushError};
 use super::{DrainStats, InferResult, Metrics, ServeError, Snapshot};
 use crate::arch::ProcessorConfig;
 use crate::config::ServeConfig;
@@ -67,6 +85,12 @@ use crate::qnn::schedule::QnnPrecision;
 use crate::qnn::QnnGraph;
 use crate::runtime::SimQnnModel;
 use crate::sim::MachinePool;
+
+/// How long one `pop` waits for riders before re-checking worker
+/// eligibility (breaker pauses, shutdown).
+const POP_POLL: Duration = Duration::from_millis(1);
+/// How long an ejected worker sleeps between eligibility re-checks.
+const EJECT_POLL: Duration = Duration::from_micros(200);
 
 struct BatchRequest {
     image: Vec<f32>,
@@ -78,19 +102,21 @@ struct BatchRequest {
     attempts: u8,
 }
 
-/// Per-shard breaker/liveness state.
+/// Per-worker breaker/liveness state ("shard" survives in the public
+/// health vocabulary: one shard == one batch worker).
 #[derive(Debug)]
 struct ShardState {
-    /// The shard's worker thread is running (cleared on exit).
+    /// The worker thread is running (cleared on exit).
     alive: AtomicBool,
     /// Consecutive failed batches (a success resets it).
     consecutive: AtomicU32,
-    /// Failed batches on this shard, total.
+    /// Failed batches on this worker, total.
     errors: AtomicU64,
-    /// Times the breaker ejected this shard.
+    /// Times the breaker ejected this worker.
     trips: AtomicU64,
-    /// While `Some(t)` with `t` in the future, routing skips the shard
-    /// (pass 1); expiry re-admits it and a success clears the field.
+    /// While `Some(t)` with `t` in the future, the worker pauses
+    /// consuming (while any non-ejected peer is alive); expiry
+    /// re-admits it and a success clears the field.
     ejected_until: Mutex<Option<Instant>>,
 }
 
@@ -110,19 +136,35 @@ impl ShardState {
     }
 }
 
-/// State shared by the server handle and every shard worker (workers
-/// need the sender list to fail requests over to another shard).
+/// State shared by the server handle and every worker.
 struct BatchShared {
     shards: Vec<ShardState>,
-    /// `None` once shutdown began: new submits see `Closed`, workers
-    /// exit when their queue drains.
-    txs: RwLock<Option<Vec<SyncSender<BatchRequest>>>>,
+    /// The lock-free front door: one ring of batch frames every
+    /// producer claims slots in and every worker consumes from.
+    ring: BatchRing<BatchRequest>,
     metrics: Arc<Metrics>,
+    /// Workers still running (the last one out closes + drains the
+    /// ring so no rider is ever stranded).
+    live: AtomicUsize,
+    /// A graceful shutdown began: riders flushed out of the ring are
+    /// drain-shed (`Closed`), not dead-pool refusals (`NoWorkers`).
+    stopping: AtomicBool,
     /// Graceful-drain deadline (see `shutdown_with_deadline`).
-    drain_by: RwLock<Option<Instant>>,
+    drain_by: Mutex<Option<Instant>>,
     /// Consecutive errors before ejection; 0 disables the breaker.
     breaker_threshold: u32,
     probation: Duration,
+}
+
+impl BatchShared {
+    /// Someone other than `me` is alive and not sitting out probation
+    /// (the breaker pause condition: an ejected worker only pauses
+    /// while a healthy peer can cover the ring).
+    fn other_can_serve(&self, me: usize, now: Instant) -> bool {
+        self.shards.iter().enumerate().any(|(i, s)| {
+            i != me && s.alive.load(Ordering::SeqCst) && !s.ejected(now)
+        })
+    }
 }
 
 /// Per-shard health view (see [`QnnBatchServer::health`]).
@@ -155,7 +197,6 @@ pub struct BatchHealth {
 /// shares the `Arc`'d model and owns a private [`MachinePool`].
 pub struct QnnBatchServer {
     shared: Arc<BatchShared>,
-    rr: AtomicUsize,
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     batch: usize,
@@ -165,7 +206,7 @@ pub struct QnnBatchServer {
 
 impl QnnBatchServer {
     /// Compile the batched network (or fetch it from `cache`) and
-    /// start `serve.workers` shard workers at batch size `serve.batch`
+    /// start `serve.workers` batch workers at batch size `serve.batch`
     /// (clamped to `1..=`[`MAX_BATCH`]).
     pub fn start(
         cfg: ProcessorConfig,
@@ -179,7 +220,7 @@ impl QnnBatchServer {
     }
 
     /// [`QnnBatchServer::start`] with a fault-injection plan threaded
-    /// into every shard worker — each executed batch consults the plan
+    /// into every worker — each executed batch consults the plan
     /// once (DESIGN.md §Robustness).  `None` serves clean.
     pub fn start_chaos(
         cfg: ProcessorConfig,
@@ -196,28 +237,29 @@ impl QnnBatchServer {
                 .map_err(|e| ServeError::Worker(e.to_string()))?,
         );
         let workers = serve.workers.max(1);
-        // the queue budget splits across the shards (at least 1 each)
-        let shard_depth = (serve.queue_depth / workers).max(1);
+        // the ring carries the old queue budget: `queue_depth` riders
+        // split into batch-sized frames (explicit `ring_frames` wins;
+        // BatchRing rounds up to a power of two, floor 2)
+        let frames = if serve.ring_frames > 0 {
+            serve.ring_frames
+        } else {
+            (serve.queue_depth / (batch as usize)).max(2)
+        };
         let window = Duration::from_micros(serve.batch_window_us);
         let metrics = Arc::new(Metrics::default());
         let image_len = model.input_len();
-        let mut txs = Vec::with_capacity(workers);
-        let mut rxs = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            let (tx, rx) = sync_channel::<BatchRequest>(shard_depth);
-            txs.push(tx);
-            rxs.push(rx);
-        }
         let shared = Arc::new(BatchShared {
             shards: (0..workers).map(|_| ShardState::new()).collect(),
-            txs: RwLock::new(Some(txs)),
+            ring: BatchRing::new(frames, batch as usize, window),
             metrics: Arc::clone(&metrics),
-            drain_by: RwLock::new(None),
+            live: AtomicUsize::new(workers),
+            stopping: AtomicBool::new(false),
+            drain_by: Mutex::new(None),
             breaker_threshold: serve.breaker_threshold,
             probation: Duration::from_micros(serve.probation_us.max(1)),
         });
         let mut handles = Vec::with_capacity(workers);
-        for (wid, rx) in rxs.into_iter().enumerate() {
+        for wid in 0..workers {
             let shared = Arc::clone(&shared);
             let model = Arc::clone(&model);
             let plan = plan.clone();
@@ -225,17 +267,16 @@ impl QnnBatchServer {
                 std::thread::Builder::new()
                     .name(format!("sparq-batch-worker-{wid}"))
                     .spawn(move || {
-                        worker_loop(&rx, wid, &shared, &model, window, plan);
-                        // Exit path (kill or shutdown): mark the shard
-                        // dead, then fail queued work over to the live
-                        // shards.  A request that races into the queue
-                        // after this drain is dropped with the channel
-                        // — its client sees a typed `Closed`, never a
+                        worker_loop(wid, &shared, &model, plan);
+                        // Exit path (kill or shutdown): mark the worker
+                        // dead; the LAST worker out closes the ring and
+                        // answers every remaining rider typed — a
+                        // request that raced past the liveness check in
+                        // `submit` sees `Closed`/`NoWorkers`, never a
                         // hang.
                         shared.shards[wid].alive.store(false, Ordering::SeqCst);
-                        while let Ok(req) = rx.try_recv() {
-                            shared.metrics.queue_dec(1);
-                            fail_over(&shared, wid, req, "shard worker exited");
+                        if shared.live.fetch_sub(1, Ordering::SeqCst) == 1 {
+                            terminal_drain(&shared);
                         }
                     })
                     .map_err(|e| ServeError::Worker(e.to_string()))?,
@@ -243,7 +284,6 @@ impl QnnBatchServer {
         }
         Ok(QnnBatchServer {
             shared,
-            rr: AtomicUsize::new(0),
             metrics,
             workers: handles,
             batch: batch as usize,
@@ -263,6 +303,11 @@ impl QnnBatchServer {
         self.image_len
     }
 
+    /// Batch frames in the front-door ring.
+    pub fn ring_frames(&self) -> usize {
+        self.shared.ring.frames()
+    }
+
     /// Non-blocking submit with the config-level default deadline.
     pub fn submit(
         &self,
@@ -271,11 +316,10 @@ impl QnnBatchServer {
         self.submit_with_deadline(image, self.default_deadline)
     }
 
-    /// Non-blocking submit with an explicit per-request deadline:
-    /// round-robin shard assignment, skipping dead and breaker-ejected
-    /// shards (ejected-but-alive shards are a second-pass fallback so
-    /// an all-ejected pool still serves); [`ServeError::QueueFull`]
-    /// only when every candidate shard is at capacity.  Wrong-length
+    /// Non-blocking submit with an explicit per-request deadline: one
+    /// CAS claims a slot in the current open batch frame and the image
+    /// moves into it in place.  [`ServeError::QueueFull`] only when
+    /// every frame of the ring is claimed-and-unconsumed.  Wrong-length
     /// images are refused typed ([`ServeError::BadInput`]); a fully
     /// dead pool fails fast ([`ServeError::NoWorkers`]).
     pub fn submit_with_deadline(
@@ -287,48 +331,38 @@ impl QnnBatchServer {
             self.metrics.record_bad_input();
             return Err(ServeError::BadInput { got: image.len(), want: self.image_len });
         }
-        let g = self.shared.txs.read().unwrap();
-        let Some(txs) = g.as_ref() else {
-            return Err(ServeError::Closed);
-        };
         if !self.shared.shards.iter().any(|s| s.alive.load(Ordering::SeqCst)) {
             self.metrics.record_no_workers(1);
             return Err(ServeError::NoWorkers);
         }
-        let n = txs.len();
-        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        if self.shared.ring.is_closed() {
+            return Err(ServeError::Closed);
+        }
         let (rtx, rrx) = sync_channel(1);
         let now = Instant::now();
-        let mut req = BatchRequest {
+        let req = BatchRequest {
             image,
             resp: rtx,
             enqueued: now,
             deadline: deadline.map(|d| now + d),
             attempts: 0,
         };
-        // gauge BEFORE the send: a worker may dequeue (and queue_dec)
-        // the instant try_send lands, and inc-after-send would let the
-        // gauge transiently read negative
+        // gauge BEFORE the push: a worker may consume (and queue_dec)
+        // the instant the slot write lands, and inc-after-push would
+        // let the gauge transiently read negative
         self.metrics.queue_inc();
-        for pass in 0..2 {
-            for k in 0..n {
-                let i = (start + k) % n;
-                let st = &self.shared.shards[i];
-                if !st.alive.load(Ordering::SeqCst) {
-                    continue;
-                }
-                if pass == 0 && st.ejected(now) {
-                    continue;
-                }
-                req = match txs[i].try_send(req) {
-                    Ok(()) => return Ok(rrx),
-                    Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => r,
-                };
+        match self.shared.ring.push(req) {
+            Ok(_) => Ok(rrx),
+            Err((PushError::Closed, _)) => {
+                self.metrics.queue_dec(1);
+                Err(ServeError::Closed)
+            }
+            Err((PushError::Full, _)) => {
+                self.metrics.queue_dec(1);
+                self.metrics.record_rejected();
+                Err(ServeError::QueueFull)
             }
         }
-        self.metrics.queue_dec(1);
-        self.metrics.record_rejected();
-        Err(ServeError::QueueFull)
     }
 
     /// Blocking inference.
@@ -373,7 +407,7 @@ impl QnnBatchServer {
         BatchHealth { shards, alive, breaker_trips }
     }
 
-    /// Drain the shards fully, stop the workers, return the final
+    /// Drain the ring fully, stop the workers, return the final
     /// metrics (the original unbounded drain).
     pub fn shutdown(mut self) -> Snapshot {
         self.stop_workers();
@@ -388,7 +422,7 @@ impl QnnBatchServer {
     pub fn shutdown_with_deadline(mut self, deadline: Duration) -> (Snapshot, DrainStats) {
         let t0 = Instant::now();
         let before = self.metrics.snapshot();
-        *self.shared.drain_by.write().unwrap() = Some(t0 + deadline);
+        *self.shared.drain_by.lock().unwrap() = Some(t0 + deadline);
         self.stop_workers();
         let after = self.metrics.snapshot();
         let stats = DrainStats {
@@ -400,82 +434,103 @@ impl QnnBatchServer {
     }
 
     fn stop_workers(&mut self) {
-        // close every shard; workers exit once their queue drains
-        self.shared.txs.write().unwrap().take();
+        // close the front door; workers drain the sealed/filling
+        // frames (pop only reports Closed once the ring is empty) and
+        // exit
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        self.shared.ring.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-/// Re-queue `req` on any live shard other than `from` (ejected shards
-/// are a second-pass fallback).  If no shard can take it, the request
-/// fails typed with the originating error.
-fn fail_over(shared: &BatchShared, from: usize, mut req: BatchRequest, err: &str) {
-    {
-        let g = shared.txs.read().unwrap();
-        if let Some(txs) = g.as_ref() {
-            let now = Instant::now();
-            shared.metrics.queue_inc();
-            for pass in 0..2 {
-                for (i, tx) in txs.iter().enumerate() {
-                    if i == from || !shared.shards[i].alive.load(Ordering::SeqCst) {
-                        continue;
+/// The last worker out flushes every rider still in the ring so no
+/// client ever hangs on a response channel: during a graceful
+/// shutdown the riders are drain-shed typed (`Closed`), after a
+/// chaos kill of the whole pool they are dead-pool refusals
+/// (`NoWorkers`).
+fn terminal_drain(shared: &BatchShared) {
+    shared.ring.close();
+    let stopping = shared.stopping.load(Ordering::SeqCst);
+    loop {
+        match shared.ring.pop(Duration::ZERO) {
+            Pop::Batch(reqs, _) => {
+                shared.metrics.queue_dec(reqs.len() as u64);
+                for r in reqs {
+                    if stopping {
+                        shared.metrics.record_drain_shed(1);
+                        let _ = r.resp.send(Err(ServeError::Closed));
+                    } else {
+                        shared.metrics.record_no_workers(1);
+                        let _ = r.resp.send(Err(ServeError::NoWorkers));
                     }
-                    if pass == 0 && shared.shards[i].ejected(now) {
-                        continue;
-                    }
-                    req = match tx.try_send(req) {
-                        Ok(()) => {
-                            shared.metrics.record_retries(1);
-                            return;
-                        }
-                        Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => r,
-                    };
                 }
             }
-            shared.metrics.queue_dec(1);
+            Pop::Idle | Pop::Closed => return,
         }
     }
-    shared.metrics.record_errors(1);
-    let _ = req.resp.send(Err(ServeError::Worker(err.to_string())));
+}
+
+/// Re-queue `req` into the ring after a failed batch.  Expired
+/// requests are shed typed at failover time (no queue slot burned);
+/// once a drain has begun the ring is closed and the rider is
+/// drain-shed `Closed`, not mislabelled a worker error.  Only when
+/// the ring is genuinely full does the originating error reach the
+/// client.
+fn fail_over(shared: &BatchShared, req: BatchRequest, err: &str) {
+    if let Some(d) = req.deadline {
+        if Instant::now() > d {
+            shared.metrics.record_deadline_shed(1);
+            let _ = req.resp.send(Err(ServeError::Deadline));
+            return;
+        }
+    }
+    shared.metrics.queue_inc();
+    match shared.ring.push(req) {
+        Ok(_) => shared.metrics.record_retries(1),
+        Err((PushError::Closed, req)) => {
+            shared.metrics.queue_dec(1);
+            shared.metrics.record_drain_shed(1);
+            let _ = req.resp.send(Err(ServeError::Closed));
+        }
+        Err((PushError::Full, req)) => {
+            shared.metrics.queue_dec(1);
+            shared.metrics.record_errors(1);
+            let _ = req.resp.send(Err(ServeError::Worker(err.to_string())));
+        }
+    }
 }
 
 fn worker_loop(
-    rx: &Receiver<BatchRequest>,
     wid: usize,
     shared: &Arc<BatchShared>,
     model: &Arc<SimQnnModel>,
-    window: Duration,
     plan: Option<Arc<FaultPlan>>,
 ) {
     let pool = MachinePool::new();
-    let batch = model.batch();
     let metrics = &shared.metrics;
     loop {
-        // take the shard's first request (blocking), then fill the
-        // batch greedily within the window
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // shard closed: shut down
-        };
-        metrics.queue_dec(1);
-        let mut reqs = vec![first];
-        let wdl = Instant::now() + window;
-        while reqs.len() < batch {
-            let left = wdl.saturating_duration_since(Instant::now());
-            match rx.recv_timeout(left) {
-                Ok(r) => {
-                    metrics.queue_dec(1);
-                    reqs.push(r);
-                }
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
-            }
+        // Breaker pause: an ejected worker stops consuming from the
+        // shared ring while a healthy peer can cover it (probation
+        // expiry re-admits it; if everyone is ejected it keeps
+        // serving so the ring never strands).
+        let st = &shared.shards[wid];
+        if st.ejected(Instant::now()) && shared.other_can_serve(wid, Instant::now()) {
+            std::thread::sleep(EJECT_POLL);
+            continue;
         }
+        let (mut reqs, meta) = match shared.ring.pop(POP_POLL) {
+            Pop::Batch(reqs, meta) => (reqs, meta),
+            Pop::Idle => continue,
+            Pop::Closed => return, // drained shutdown
+        };
+        metrics.queue_dec(reqs.len() as u64);
+        metrics.record_seal(meta.sealed_by_window);
 
         // Graceful drain: past the drain deadline, queued work is shed
         // typed instead of executed.
-        if let Some(dl) = *shared.drain_by.read().unwrap() {
+        if let Some(dl) = *shared.drain_by.lock().unwrap() {
             if Instant::now() > dl {
                 metrics.record_drain_shed(reqs.len() as u64);
                 for r in reqs {
@@ -516,31 +571,30 @@ fn worker_loop(
         // the arena exactly as sent — no truncation, no padding.
         let result: Result<(Vec<(Vec<i64>, u64)>, u64), String> = match injected {
             FaultAction::Error => Err(format!("chaos: injected error (shard {wid})")),
+            FaultAction::SlowError(us) => {
+                // a failure that burns real time first: by the time
+                // failover runs, rider deadlines may have passed
+                std::thread::sleep(Duration::from_micros(us));
+                Err(format!("chaos: injected slow error (shard {wid})"))
+            }
             FaultAction::Kill => Err(format!("{} (shard {wid})", fault::KILL_SENTINEL)),
             _ => {
-                let inputs: Vec<Vec<f32>> =
-                    reqs.iter_mut().map(|r| std::mem::take(&mut r.image)).collect();
+                let inputs: Vec<&[f32]> =
+                    reqs.iter().map(|r| r.image.as_slice()).collect();
                 // a poisoned batch must not kill the worker (same catch
-                // as the generic server)
-                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // as the generic server); the images stay owned by the
+                // requests, so a failover retry re-executes the real
+                // request with zero restore bookkeeping
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     if injected == FaultAction::Panic {
                         panic!("chaos: injected panic (shard {wid})");
                     }
-                    model.infer_batch(&pool, &inputs)
+                    model.infer_batch_refs(&pool, &inputs)
                 }))
                 .map_err(|p| super::panic_message(p.as_ref()))
-                .and_then(|r| r.map_err(|e| e.to_string()));
-                if res.is_err() {
-                    // restore the images so a failover retry re-executes
-                    // the real request, not an empty one
-                    for (r, img) in reqs.iter_mut().zip(inputs) {
-                        r.image = img;
-                    }
-                }
-                res
+                .and_then(|r| r.map_err(|e| e.to_string()))
             }
         };
-        let st = &shared.shards[wid];
         match result {
             Ok((mut per_image, _batch_cycles)) => {
                 if injected == FaultAction::CorruptLogits {
@@ -579,17 +633,17 @@ fn worker_loop(
                 let killed = fault::is_kill(&e);
                 for mut r in reqs {
                     if r.attempts == 0 {
-                        // transient failure: one retry on another shard
+                        // transient failure: one retry through the ring
                         r.attempts = 1;
-                        fail_over(shared, wid, r, &e);
+                        fail_over(shared, r, &e);
                     } else {
                         metrics.record_errors(1);
                         let _ = r.resp.send(Err(ServeError::Worker(e.clone())));
                     }
                 }
                 if killed {
-                    // the spawn closure marks the shard dead and fails
-                    // queued work over to the surviving shards
+                    // the spawn closure marks this worker dead; the
+                    // last worker out closes and drains the ring
                     return;
                 }
             }
@@ -628,6 +682,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(server.batch(), 4);
+        assert_eq!(server.ring_frames(), 16, "queue_depth / batch frames");
         let net = QnnNet::from_seed(&graph, w2a2(), seed).unwrap();
         let images: Vec<Vec<u64>> = (0..8).map(|i| net.test_image(500 + i)).collect();
         let labels: Vec<usize> =
@@ -647,6 +702,11 @@ mod tests {
         assert_eq!(snap.completed, 8);
         assert_eq!(snap.errors, 0);
         assert_eq!(snap.batches, snap.batch_fill.iter().map(|&(_, n)| n).sum::<u64>());
+        assert_eq!(
+            snap.batches,
+            snap.seals_full + snap.seals_window,
+            "every consumed batch records how it sealed"
+        );
         assert!(snap.p50_cycles > 0, "cycle latency percentiles must be recorded");
         assert_eq!(snap.queue_depth, 0, "all queued requests must have drained");
     }
@@ -716,6 +776,29 @@ mod tests {
         assert_eq!(h.alive, 2);
         assert_eq!(h.breaker_trips, 0);
         assert!(h.shards.iter().all(|s| s.alive && !s.ejected && s.errors == 0));
+        server.shutdown();
+    }
+
+    #[test]
+    fn explicit_ring_frames_override_wins() {
+        let cache = ProgramCache::new();
+        let serve = ServeConfig {
+            workers: 1,
+            batch: 2,
+            queue_depth: 256,
+            ring_frames: 3,
+            ..ServeConfig::default()
+        };
+        let server = QnnBatchServer::start(
+            ProcessorConfig::sparq(),
+            &QnnGraph::sparq_cnn(),
+            w2a2(),
+            7,
+            serve,
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(server.ring_frames(), 4, "explicit frames round up to a power of two");
         server.shutdown();
     }
 }

@@ -61,6 +61,11 @@ pub enum FaultAction {
     Panic,
     /// Return a typed `Err` without executing.
     Error,
+    /// Sleep this many microseconds, then return a typed `Err` without
+    /// executing — a failure that burns real time first, so rider
+    /// deadlines can expire *before* failover runs (drives the
+    /// failover shed/drain regression tests).
+    SlowError(u64),
     /// Return the kill-sentinel `Err`; the worker replies and exits.
     Kill,
     /// Sleep this many microseconds, then execute normally (drives
@@ -71,11 +76,19 @@ pub enum FaultAction {
     CorruptLogits,
 }
 
-/// Which of a worker's local calls a [`FaultRule`] fires on.
+/// Which of a worker's calls a [`FaultRule`] fires on.  All selectors
+/// except [`CallSel::GlobalNth`] address the worker's *local* call
+/// index; `GlobalNth` addresses the plan-wide global index, which is
+/// the tool for "whoever executes the k-th batch" scenarios on the
+/// shared-ring path (batch-to-worker assignment there is a scheduling
+/// race, so local indices cannot target "the first batch served").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CallSel {
     /// Exactly the n-th local call (0-based).
     Nth(u64),
+    /// Exactly the n-th *global* call (0-based), whichever worker
+    /// consumes it.
+    GlobalNth(u64),
     /// Every k-th local call (`n % k == 0`); `k == 0` never matches.
     Every(u64),
     /// Local calls in `[lo, hi)`.
@@ -85,11 +98,12 @@ pub enum CallSel {
 }
 
 impl CallSel {
-    fn matches(&self, n: u64) -> bool {
+    fn matches_at(&self, global: u64, local: u64) -> bool {
         match *self {
-            CallSel::Nth(k) => n == k,
-            CallSel::Every(k) => k != 0 && n % k == 0,
-            CallSel::Range(lo, hi) => n >= lo && n < hi,
+            CallSel::Nth(k) => local == k,
+            CallSel::GlobalNth(k) => global == k,
+            CallSel::Every(k) => k != 0 && local % k == 0,
+            CallSel::Range(lo, hi) => local >= lo && local < hi,
             CallSel::Always => true,
         }
     }
@@ -251,7 +265,7 @@ impl FaultPlan {
                 Some(w) => w == worker,
                 None => true,
             };
-            if worker_ok && r.when.matches(local) {
+            if worker_ok && r.when.matches_at(global, local) {
                 return r.action;
             }
         }
@@ -264,8 +278,9 @@ impl FaultPlan {
 
 /// An [`Executor`] wrapper that consults a shared [`FaultPlan`] before
 /// each `run`.  `Panic`/`Error`/`Kill` replace the inner call entirely;
-/// `Delay` sleeps first; `CorruptLogits` poisons the first logit of
-/// each image in an otherwise-successful result.
+/// `SlowError` sleeps and then fails typed; `Delay` sleeps first;
+/// `CorruptLogits` poisons the first logit of each image in an
+/// otherwise-successful result.
 pub struct ChaosExecutor {
     inner: Box<dyn Executor>,
     plan: Arc<FaultPlan>,
@@ -296,6 +311,10 @@ impl Executor for ChaosExecutor {
             FaultAction::None => self.inner.run(batch),
             FaultAction::Panic => panic!("chaos: injected panic (worker {})", self.worker),
             FaultAction::Error => Err(format!("chaos: injected error (worker {})", self.worker)),
+            FaultAction::SlowError(us) => {
+                std::thread::sleep(Duration::from_micros(us));
+                Err(format!("chaos: injected slow error (worker {})", self.worker))
+            }
             FaultAction::Kill => Err(format!("{} (worker {})", KILL_SENTINEL, self.worker)),
             FaultAction::Delay(us) => {
                 std::thread::sleep(Duration::from_micros(us));
@@ -392,13 +411,42 @@ mod tests {
 
     #[test]
     fn rule_selectors_cover_every_and_always() {
-        assert!(CallSel::Every(3).matches(0));
-        assert!(!CallSel::Every(3).matches(2));
-        assert!(CallSel::Every(3).matches(6));
-        assert!(!CallSel::Every(0).matches(0));
-        assert!(CallSel::Always.matches(u64::MAX));
-        assert!(CallSel::Range(2, 4).matches(3));
-        assert!(!CallSel::Range(2, 4).matches(4));
+        assert!(CallSel::Every(3).matches_at(9, 0));
+        assert!(!CallSel::Every(3).matches_at(9, 2));
+        assert!(CallSel::Every(3).matches_at(9, 6));
+        assert!(!CallSel::Every(0).matches_at(9, 0));
+        assert!(CallSel::Always.matches_at(9, u64::MAX));
+        assert!(CallSel::Range(2, 4).matches_at(9, 3));
+        assert!(!CallSel::Range(2, 4).matches_at(9, 4));
+        // GlobalNth is the one selector keyed on the global index
+        assert!(CallSel::GlobalNth(9).matches_at(9, 0));
+        assert!(!CallSel::GlobalNth(9).matches_at(8, 9));
+    }
+
+    #[test]
+    fn global_nth_fires_on_the_global_call_whoever_consumes_it() {
+        let plan = FaultPlan::from_rules(vec![FaultRule {
+            worker: None,
+            when: CallSel::GlobalNth(2),
+            action: FaultAction::Kill,
+        }]);
+        // workers interleave arbitrarily; only the third global call
+        // (whichever worker it lands on) draws the kill
+        assert_eq!(plan.next_for(1), FaultAction::None); // global 0
+        assert_eq!(plan.next_for(0), FaultAction::None); // global 1
+        assert_eq!(plan.next_for(1), FaultAction::Kill); // global 2
+        assert_eq!(plan.next_for(1), FaultAction::None); // global 3
+    }
+
+    #[test]
+    fn slow_error_rule_is_decided_like_any_action() {
+        let plan = FaultPlan::from_rules(vec![FaultRule {
+            worker: Some(0),
+            when: CallSel::Nth(0),
+            action: FaultAction::SlowError(250),
+        }]);
+        assert_eq!(plan.next_for(0), FaultAction::SlowError(250));
+        assert_eq!(plan.next_for(0), FaultAction::None);
     }
 
     #[test]

@@ -1,35 +1,108 @@
 //! Serving metrics: latency distribution (wall *and* simulated
 //! cycles), batch-fill histogram, queue-depth gauge, throughput — the
 //! numbers the e2e example, `sparq serve` and the serve benches report.
+//!
+//! Latency histories are **bounded**: percentiles come from a
+//! fixed-capacity reservoir sample ([`SAMPLE_CAP`] values per series,
+//! Algorithm R with a deterministic xorshift stream), so a server that
+//! lives for millions of requests holds a few pages of history instead
+//! of growing without bound, and `snapshot()` sorts at most
+//! [`SAMPLE_CAP`] values under the mutex instead of the entire run.
+//! Every *counter* stays exact — `completed`, `total_sim_cycles`,
+//! `mean_batch` (an exact running sum, not a sample), the fill
+//! histogram and all robustness counters never lose a count.  Below
+//! the cap the reservoir holds every value, so small runs report exact
+//! percentiles.
 
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Values retained per latency series for percentile estimation.
+/// Below this cap percentiles are exact; above it they are a uniform
+/// sample of the whole run (Algorithm R), so long-run percentiles stay
+/// stable while memory stays flat.
+pub const SAMPLE_CAP: usize = 4096;
+
+/// Fixed-capacity uniform sample of an unbounded stream (Vitter's
+/// Algorithm R).  The replacement stream is a deterministic
+/// xorshift64*, so identical record sequences produce identical
+/// samples — snapshot percentiles are replayable.
+#[derive(Debug)]
+struct Reservoir {
+    /// Values offered so far (exact).
+    seen: u64,
+    samples: Vec<u64>,
+    rng: u64,
+}
+
+impl Reservoir {
+    fn new(seed: u64) -> Reservoir {
+        Reservoir { seen: 0, samples: Vec::new(), rng: seed | 1 }
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn offer(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < SAMPLE_CAP {
+            self.samples.push(v);
+        } else {
+            // keep each of the `seen` values with probability cap/seen
+            let j = self.next() % self.seen;
+            if (j as usize) < SAMPLE_CAP {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    /// A sorted copy of the sample (at most [`SAMPLE_CAP`] values).
+    fn sorted(&self) -> Vec<u64> {
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        s
+    }
+}
 
 /// Thread-safe metrics sink shared between workers and the caller.
 #[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<Inner>,
     started: Instant,
-    /// Requests currently sitting in submission queues (gauge).
+    /// Requests currently sitting in the submission ring (gauge).
     depth: AtomicI64,
     /// High-water mark of the queue-depth gauge.
     depth_max: AtomicI64,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct Inner {
-    latencies_us: Vec<u64>,
-    batch_sizes: Vec<u32>,
-    /// Per-request simulated-cycle latencies (the hardware cost the
-    /// request's inference was billed — slot cycles on the batched
-    /// path).
-    cycle_lats: Vec<u64>,
+    /// Wall-latency reservoir (bounded; see the module docs).
+    latencies_us: Reservoir,
+    /// Per-request simulated-cycle latency reservoir (the hardware
+    /// cost the request's inference was billed — slot cycles on the
+    /// batched path).
+    cycle_lats: Reservoir,
+    /// Exact running sum of per-request batch sizes (`mean_batch` =
+    /// sum / completed — no history needed).
+    batch_size_sum: u64,
     /// Executed-batch fill histogram: `fill_hist[k]` = batches that
     /// ran with exactly `k` riders.
     fill_hist: Vec<u64>,
     /// Batches executed (the sum of `fill_hist`).
     batches: u64,
+    /// Batches sealed by their last writer (the frame filled).
+    seals_full: u64,
+    /// Batches sealed by window expiry or close (underfilled frames
+    /// dispatched so latency stays bounded).
+    seals_window: u64,
     completed: u64,
     rejected: u64,
     /// Requests that got an error response instead of a result
@@ -41,8 +114,8 @@ struct Inner {
     deadline_shed: u64,
     /// Requests rejected at submit time for a wrong-length image.
     bad_input: u64,
-    /// Requests re-queued onto a different shard after a transient
-    /// worker error (batched path failover).
+    /// Requests re-queued after a transient worker error (batched
+    /// path failover).
     retries: u64,
     /// Circuit-breaker ejections of a persistently failing shard.
     breaker_trips: u64,
@@ -52,6 +125,32 @@ struct Inner {
     /// because the worker pool was empty with no restart budget left.
     no_workers: u64,
     sim_cycles: u128,
+}
+
+impl Default for Inner {
+    fn default() -> Inner {
+        Inner {
+            // distinct fixed seeds: the two reservoirs must not make
+            // correlated keep/evict decisions
+            latencies_us: Reservoir::new(0x9E37_79B9_7F4A_7C15),
+            cycle_lats: Reservoir::new(0xD1B5_4A32_D192_ED03),
+            batch_size_sum: 0,
+            fill_hist: Vec::new(),
+            batches: 0,
+            seals_full: 0,
+            seals_window: 0,
+            completed: 0,
+            rejected: 0,
+            errors: 0,
+            deadline_shed: 0,
+            bad_input: 0,
+            retries: 0,
+            breaker_trips: 0,
+            drain_shed: 0,
+            no_workers: 0,
+            sim_cycles: 0,
+        }
+    }
 }
 
 impl Default for Metrics {
@@ -88,6 +187,17 @@ impl Metrics {
         record_fill(&mut g, fill);
     }
 
+    /// A consumed batch frame sealed by window expiry/close
+    /// (`by_window`) or by its last writer filling it.
+    pub fn record_seal(&self, by_window: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if by_window {
+            g.seals_window += 1;
+        } else {
+            g.seals_full += 1;
+        }
+    }
+
     pub fn record_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
@@ -110,8 +220,7 @@ impl Metrics {
         self.inner.lock().unwrap().bad_input += 1;
     }
 
-    /// `n` requests were re-queued onto a different shard after a
-    /// transient worker error.
+    /// `n` requests were re-queued after a transient worker error.
     pub fn record_retries(&self, n: u64) {
         self.inner.lock().unwrap().retries += n;
     }
@@ -132,24 +241,24 @@ impl Metrics {
         self.inner.lock().unwrap().no_workers += n;
     }
 
-    /// A request entered a submission queue.
+    /// A request entered the submission ring.
     pub fn queue_inc(&self) {
         let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
         self.depth_max.fetch_max(d, Ordering::Relaxed);
     }
 
-    /// `n` requests left a submission queue (a worker drained them).
+    /// `n` requests left the submission ring (a worker drained them).
     pub fn queue_dec(&self, n: u64) {
         self.depth.fetch_sub(n as i64, Ordering::Relaxed);
     }
 
-    /// Snapshot of the distribution so far.
+    /// Snapshot of the distribution so far.  Percentiles are exact
+    /// below [`SAMPLE_CAP`] recorded requests and reservoir estimates
+    /// above it; every counter is exact regardless.
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
-        let mut lat = g.latencies_us.clone();
-        lat.sort_unstable();
-        let mut cyc = g.cycle_lats.clone();
-        cyc.sort_unstable();
+        let lat = g.latencies_us.sorted();
+        let cyc = g.cycle_lats.sorted();
         let pct = |sorted: &[u64], p: f64| -> u64 {
             if sorted.is_empty() {
                 return 0;
@@ -173,10 +282,10 @@ impl Metrics {
             p99_us: pct(&lat, 0.99),
             p50_cycles: pct(&cyc, 0.50),
             p99_cycles: pct(&cyc, 0.99),
-            mean_batch: if g.batch_sizes.is_empty() {
+            mean_batch: if g.completed == 0 {
                 0.0
             } else {
-                g.batch_sizes.iter().map(|&b| b as f64).sum::<f64>() / g.batch_sizes.len() as f64
+                g.batch_size_sum as f64 / g.completed as f64
             },
             batch_fill: g
                 .fill_hist
@@ -186,6 +295,8 @@ impl Metrics {
                 .map(|(k, &n)| (k as u32, n))
                 .collect(),
             batches: g.batches,
+            seals_full: g.seals_full,
+            seals_window: g.seals_window,
             queue_depth: self.depth.load(Ordering::Relaxed),
             queue_depth_max: self.depth_max.load(Ordering::Relaxed),
             throughput_rps: if elapsed > 0.0 { g.completed as f64 / elapsed } else { 0.0 },
@@ -195,9 +306,9 @@ impl Metrics {
 }
 
 fn record_one(g: &mut Inner, latency_us: u64, batch: u32, sim_cycles: u64) {
-    g.latencies_us.push(latency_us);
-    g.batch_sizes.push(batch);
-    g.cycle_lats.push(sim_cycles);
+    g.latencies_us.offer(latency_us);
+    g.cycle_lats.offer(sim_cycles);
+    g.batch_size_sum += batch as u64;
     g.completed += 1;
     g.sim_cycles += sim_cycles as u128;
 }
@@ -224,8 +335,8 @@ pub struct Snapshot {
     pub deadline_shed: u64,
     /// Submits refused for a wrong-length image.
     pub bad_input: u64,
-    /// Requests re-queued onto a different shard after a transient
-    /// worker error (batched path failover).
+    /// Requests re-queued after a transient worker error (batched
+    /// path failover).
     pub retries: u64,
     /// Circuit-breaker shard ejections.
     pub breaker_trips: u64,
@@ -247,6 +358,10 @@ pub struct Snapshot {
     pub batch_fill: Vec<(u32, u64)>,
     /// Batches executed in total.
     pub batches: u64,
+    /// Consumed batch frames sealed by their last writer (filled).
+    pub seals_full: u64,
+    /// Consumed batch frames sealed by window expiry or close.
+    pub seals_window: u64,
     /// Requests currently queued (gauge at snapshot time).
     pub queue_depth: i64,
     /// High-water mark of the queue-depth gauge.
@@ -282,7 +397,9 @@ mod tests {
         }
         let s = m.snapshot();
         assert_eq!(s.completed, 100);
-        // index = round(99 * p): p50 -> lat[50] = 51, etc.
+        // below the cap the reservoir holds every value, so the
+        // percentiles stay exact: index = round(99 * p): p50 ->
+        // lat[50] = 51, etc.
         assert_eq!(s.p50_us, 51);
         assert_eq!(s.p95_us, 95);
         assert_eq!(s.p99_us, 99);
@@ -302,6 +419,7 @@ mod tests {
         assert_eq!(s.mean_batch, 0.0);
         assert!(s.batch_fill.is_empty());
         assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.seals_full + s.seals_window, 0);
     }
 
     #[test]
@@ -359,5 +477,68 @@ mod tests {
         assert_eq!(s.batch_fill, vec![(1, 1), (2, 2)]);
         assert_eq!(s.queue_depth, 1);
         assert_eq!(s.queue_depth_max, 3);
+    }
+
+    #[test]
+    fn seal_counters_split_full_vs_window() {
+        let m = Metrics::default();
+        m.record_seal(false);
+        m.record_seal(false);
+        m.record_seal(true);
+        let s = m.snapshot();
+        assert_eq!(s.seals_full, 2);
+        assert_eq!(s.seals_window, 1);
+    }
+
+    /// The satellite bugfix pinned: a long-lived server's history is
+    /// bounded at [`SAMPLE_CAP`] values per series while every counter
+    /// stays exact and the percentiles stay stable estimates of the
+    /// true distribution.
+    #[test]
+    fn long_run_history_is_bounded_with_stable_percentiles() {
+        let m = Metrics::default();
+        const N: u64 = 150_000;
+        // deterministic uniform 1..=1000 sweep, cycles = 10x wall
+        for i in 0..N {
+            let v = (i % 1000) + 1;
+            m.record(v, 4, 10 * v);
+        }
+        {
+            let g = m.inner.lock().unwrap();
+            assert_eq!(g.latencies_us.samples.len(), SAMPLE_CAP, "wall history must cap");
+            assert_eq!(g.cycle_lats.samples.len(), SAMPLE_CAP, "cycle history must cap");
+            assert_eq!(g.latencies_us.seen, N, "the sample must still count every value");
+        }
+        let s = m.snapshot();
+        // exact counters survive the sampling untouched
+        assert_eq!(s.completed, N);
+        assert_eq!(s.mean_batch, 4.0);
+        let expect_cycles: u128 =
+            (0..N as u128).map(|i| 10 * ((i % 1000) + 1)).sum();
+        assert_eq!(s.total_sim_cycles, expect_cycles);
+        // percentile estimates stay near the true uniform quantiles
+        // (4096 samples of U(1,1000): p50 within +-100 is > 10 sigma)
+        assert!(
+            (400..=600).contains(&s.p50_us),
+            "p50 {} drifted off a uniform 1..=1000 distribution",
+            s.p50_us
+        );
+        assert!(s.p99_us >= 950 && s.p99_us <= 1000, "p99 {} off the tail", s.p99_us);
+        assert!(
+            (4000..=6000).contains(&s.p50_cycles),
+            "cycle p50 {} drifted",
+            s.p50_cycles
+        );
+        // the sample is deterministic: an identical run snapshots
+        // identical percentiles
+        let m2 = Metrics::default();
+        for i in 0..N {
+            let v = (i % 1000) + 1;
+            m2.record(v, 4, 10 * v);
+        }
+        let s2 = m2.snapshot();
+        assert_eq!(s.p50_us, s2.p50_us);
+        assert_eq!(s.p99_us, s2.p99_us);
+        assert_eq!(s.p50_cycles, s2.p50_cycles);
     }
 }

@@ -10,22 +10,29 @@
 //!   [`SimConvExecutor`], or the whole SparqCNN one image at a time
 //!   [`SimQnnExecutor`]) behind one shared bounded queue.
 //! * The batched QNN path ([`batch::QnnBatchServer`], DESIGN.md
-//!   §Serving) serves the batch-B compiled arena: per-worker *shard*
-//!   queues, a batching window that fills up to B activation slots,
-//!   ONE batched execution per window, and per-request scatter — what
-//!   `sparq serve --batch` and the `serve_throughput` bench run.
+//!   §Serving) serves the batch-B compiled arena behind a lock-free
+//!   slot-reservation front door ([`ring::BatchRing`]): producers CAS
+//!   a slot in the current open batch frame and write their image in
+//!   place, frames seal when they fill or their window expires, and
+//!   any worker dispatches a sealed frame as ONE batched execution
+//!   with per-request scatter — what `sparq serve --batch` and the
+//!   `serve_throughput` bench run.
 //!
 //! Design notes:
 //! * PJRT handles are not `Send`, so each generic-path worker thread
 //!   owns its *own* compiled runtime (standard per-core replication
 //!   for CPU serving).  The simulator models are plain data, so the
 //!   batched path shares one `Arc`'d model instead.
-//! * The batcher is a greedy window: a worker takes the first request,
-//!   then drains up to `batch-1` more within `batch_window_us`, pads
-//!   the tail with zero images (the artifact's batch dimension is
-//!   static), executes once, and fans results back out.
-//! * Backpressure: queues are bounded `sync_channel`s; `submit` fails
-//!   fast with [`ServeError::QueueFull`] when capacity is exhausted
+//! * Batching on the generic path is a greedy window: a worker takes
+//!   the first request, then drains up to `batch-1` more within
+//!   `batch_window_us`, pads the tail with zero images (the artifact's
+//!   batch dimension is static), executes once, and fans results back
+//!   out.  On the batched path the window lives in the ring: frames
+//!   assemble *as requests arrive* and the window-expiry-vs-last-writer
+//!   seal race is one CAS (`coordinator/ring.rs`).
+//! * Backpressure: the generic queue is a bounded `sync_channel`, the
+//!   ring is a bounded frame budget; either way `submit` fails fast
+//!   with [`ServeError::QueueFull`] when capacity is exhausted
 //!   (callers see rejections, not latency collapse).
 //!
 //! Robustness substrate (DESIGN.md §Robustness): every failure mode is
@@ -42,8 +49,9 @@
 //!   queue with `ServeError::NoWorkers` once the pool is empty and the
 //!   budget is spent — `submit` fails fast instead of queueing forever,
 //!   and `health()` exposes alive/restarts/degraded.
-//! * The batched path adds shard failover (one retry on a different
-//!   shard) and a circuit breaker with probation re-admit
+//! * The batched path adds failover (one retry back through the ring)
+//!   and a circuit breaker whose ejected workers pause consuming while
+//!   a healthy peer covers, with probation re-admit
 //!   (`batch::QnnBatchServer`).
 //! * `shutdown_with_deadline` drains gracefully: new work is rejected,
 //!   queued work finishes until the deadline and is shed typed after
@@ -54,6 +62,7 @@
 pub mod batch;
 pub mod fault;
 pub mod metrics;
+pub mod ring;
 
 pub use batch::QnnBatchServer;
 pub use fault::{chaos_factory, CallSel, ChaosSpec, FaultAction, FaultPlan, FaultRule};

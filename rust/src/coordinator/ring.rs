@@ -1,0 +1,868 @@
+//! Lock-free slot-reservation batch assembly (DESIGN.md §Serving).
+//!
+//! [`BatchRing`] replaces the per-shard `sync_channel` front door of
+//! the batched server: instead of N private queues that each fill
+//! slowly (underfilled batches at low load) and serialize producers
+//! behind channel locks at high load, every producer reserves a slot
+//! in the *current open batch frame* with one CAS and writes its
+//! payload into that slot in place.  A power-of-two ring of frames
+//! lets producers move on to the next frame the instant one fills or
+//! seals, while consumers dispatch sealed frames concurrently.
+//!
+//! ## Frame life cycle
+//!
+//! Every frame cycles `open → filling → sealed → executing →
+//! recycled`, driven entirely by one packed `AtomicU64` state word:
+//!
+//! ```text
+//! bits  0..10   written   slots whose payload write has landed
+//! bits 10..20   claimed   slots reserved by producers (<= batch)
+//! bits 20..22   phase     0 = OPEN, 1 = SEALED, 2 = EXECUTING
+//! bit  22       window    sealed by window expiry / close, not by
+//!                         the last writer (diagnostic)
+//! bits 23..64   gen       the frame's current sequence number,
+//!                         modulo 2^41 (ABA guard across recycling)
+//! ```
+//!
+//! Packing everything into one word is what makes the races cheap to
+//! reason about: *every* transition is a single CAS that verifies the
+//! generation, the phase, and both fill counters at once.  The
+//! transition rules live in pure functions ([`claim_transition`],
+//! [`seal_transition`], [`consume_transition`]) shared by the runtime
+//! CAS loops and the hand-rolled loom-style model checker in the test
+//! module, which enumerates thread interleavings over the same rules.
+//!
+//! * **Claim** (producer): `(gen, OPEN, claimed < B)` →
+//!   `claimed + 1`.  The CAS (morally a `fetch_add` on the claimed
+//!   field, but gen/phase-checked so a stale producer can never
+//!   pollute a recycled frame) hands the producer exclusive ownership
+//!   of slot index `claimed`.
+//! * **Write** (producer): move the payload into the owned slot, then
+//!   blindly `fetch_add` the written field — legal even if the frame
+//!   sealed meanwhile, because a sealed frame is only *consumed* once
+//!   `written == claimed`.
+//! * **Seal**: `(gen, OPEN, claimed >= 1)` → `SEALED`.  Two
+//!   contenders race here — the writer that filled the last slot and
+//!   a consumer whose batching window expired — and the single CAS is
+//!   the whole conflict resolution: exactly one wins, the loser's CAS
+//!   fails on the phase bits.
+//! * **Consume** (consumer): once `SEALED` with `written == claimed`,
+//!   CAS to `EXECUTING`; the winner advances the ring tail, drains the
+//!   slots, and recycles the frame with `gen + frames` in one store.
+//!
+//! ## Shutdown
+//!
+//! `close` flips the closed flag and then waits for the submitter
+//! count to quiesce, after which no new claim can start (every
+//! producer increments the count *before* re-checking the flag, so a
+//! zero count observed after the flag is set proves quiescence — the
+//! SeqCst total order makes the argument airtight).  Consumers seal
+//! non-empty frames immediately once closed, so a drain never waits
+//! out a batching window.
+//!
+//! Slot payloads travel through `Mutex<Option<T>>` cells, but the
+//! mutexes are uncontended *by construction*: the claim CAS gives the
+//! producer exclusive write ownership, and the consume CAS plus the
+//! `written == claimed` gate give the consumer a happens-after on
+//! every write.  The mutex is only there to make the transfer safe
+//! Rust instead of `UnsafeCell` — it never blocks.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+const WRITTEN_SHIFT: u32 = 0;
+const CLAIMED_SHIFT: u32 = 10;
+const PHASE_SHIFT: u32 = 20;
+const GEN_SHIFT: u32 = 23;
+const FIELD_MASK: u64 = (1 << 10) - 1;
+const PHASE_MASK: u64 = 0b11 << PHASE_SHIFT;
+const WINDOW_BIT: u64 = 1 << 22;
+/// Generations wrap modulo 2^41 — an ABA hazard would need a producer
+/// to sleep across 2^41 frame lives of the same index.
+const GEN_MASK: u64 = (1 << 41) - 1;
+
+const PHASE_OPEN: u64 = 0;
+const PHASE_SEALED: u64 = 1;
+const PHASE_EXECUTING: u64 = 2;
+
+/// Largest batch the 10-bit fill counters support (the serving stack
+/// clamps to `MAX_BATCH = 64` well below this).
+pub const MAX_RING_BATCH: usize = 512;
+
+#[inline]
+fn written_of(s: u64) -> u64 {
+    (s >> WRITTEN_SHIFT) & FIELD_MASK
+}
+
+#[inline]
+fn claimed_of(s: u64) -> u64 {
+    (s >> CLAIMED_SHIFT) & FIELD_MASK
+}
+
+#[inline]
+fn phase_of(s: u64) -> u64 {
+    (s & PHASE_MASK) >> PHASE_SHIFT
+}
+
+#[inline]
+fn gen_of(s: u64) -> u64 {
+    s >> GEN_SHIFT
+}
+
+/// A fresh OPEN word for generation `gen` (zero claims, zero writes).
+#[inline]
+fn fresh(gen: u64) -> u64 {
+    (gen & GEN_MASK) << GEN_SHIFT
+}
+
+/// Producer claim: an OPEN frame with room yields `(slot, new_word)`.
+#[inline]
+fn claim_transition(s: u64, batch: u64) -> Option<(u64, u64)> {
+    if phase_of(s) != PHASE_OPEN || claimed_of(s) >= batch {
+        return None;
+    }
+    Some((claimed_of(s), s + (1 << CLAIMED_SHIFT)))
+}
+
+/// Seal: an OPEN frame with at least one claim freezes its claims.
+/// Both the last writer and the window-expiry consumer funnel through
+/// this rule; the CAS in [`BatchRing::try_seal`] picks the winner.
+#[inline]
+fn seal_transition(s: u64, by_window: bool) -> Option<u64> {
+    if phase_of(s) != PHASE_OPEN || claimed_of(s) == 0 {
+        return None;
+    }
+    let mut ns = (s & !PHASE_MASK) | (PHASE_SEALED << PHASE_SHIFT);
+    if by_window {
+        ns |= WINDOW_BIT;
+    }
+    Some(ns)
+}
+
+/// Consume: a SEALED frame whose writes have all landed moves to
+/// EXECUTING (the winning consumer owns the slots from here on).
+#[inline]
+fn consume_transition(s: u64) -> Option<u64> {
+    if phase_of(s) != PHASE_SEALED || written_of(s) != claimed_of(s) {
+        return None;
+    }
+    Some((s & !PHASE_MASK) | (PHASE_EXECUTING << PHASE_SHIFT))
+}
+
+struct Frame<T> {
+    state: AtomicU64,
+    /// One cell per batch slot.  Uncontended by construction (see the
+    /// module docs) — the mutex only makes the ownership transfer
+    /// expressible in safe Rust.
+    slots: Box<[Mutex<Option<T>>]>,
+}
+
+/// Why a push was refused (the payload rides back with the error).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// Every frame of the ring is claimed-and-unconsumed: typed
+    /// backpressure, never blocking.
+    Full,
+    /// [`BatchRing::close`] ran; no new work is accepted.
+    Closed,
+}
+
+/// What one sealed batch looked like when it was consumed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchMeta {
+    /// The frame's sequence number (monotone across the ring).
+    pub seq: u64,
+    /// Riders in the batch (`1..=batch`).
+    pub fill: u32,
+    /// Sealed by window expiry or close, not by the last writer.
+    pub sealed_by_window: bool,
+}
+
+/// One [`BatchRing::pop`] outcome.
+#[derive(Debug)]
+pub enum Pop<T> {
+    /// A sealed batch, drained in slot order.
+    Batch(Vec<T>, BatchMeta),
+    /// No riders appeared within the poll budget.
+    Idle,
+    /// The ring is closed and fully drained.
+    Closed,
+}
+
+/// Adaptive wait: spin briefly, then yield, then sleep in 50 µs steps
+/// (windows down at 50 µs stay meaningful; nothing here parks forever).
+struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    fn new() -> Backoff {
+        Backoff { step: 0 }
+    }
+
+    fn snooze(&mut self) {
+        if self.step < 64 {
+            std::hint::spin_loop();
+        } else if self.step < 192 {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        self.step = self.step.saturating_add(1);
+    }
+}
+
+/// The lock-free batch-assembly ring (see the module docs).  Generic
+/// over the payload so the serving path carries requests while the
+/// bench and the concurrency suite drive it with plain integers.
+pub struct BatchRing<T> {
+    frames: Box<[Frame<T>]>,
+    mask: u64,
+    batch: usize,
+    window: Duration,
+    /// Producer cursor: the sequence number producers try to claim in.
+    head: AtomicU64,
+    /// Consumer cursor: the next sequence number to consume.
+    tail: AtomicU64,
+    closed: AtomicBool,
+    /// Producers currently inside `push` (the close/drain quiescence
+    /// counter).
+    submitters: AtomicU64,
+}
+
+impl<T> BatchRing<T> {
+    /// A ring of `frames` batch frames (rounded up to a power of two,
+    /// at least 2) of `batch` slots each.  `window` is the batching
+    /// window consumers enforce on partially filled frames; zero
+    /// seals every non-empty frame immediately.
+    pub fn new(frames: usize, batch: usize, window: Duration) -> BatchRing<T> {
+        assert!(batch >= 1 && batch <= MAX_RING_BATCH, "batch must be in 1..={MAX_RING_BATCH}");
+        let n = frames.clamp(2, 1 << 16).next_power_of_two();
+        let frames: Vec<Frame<T>> = (0..n)
+            .map(|i| Frame {
+                state: AtomicU64::new(fresh(i as u64)),
+                slots: (0..batch).map(|_| Mutex::new(None)).collect(),
+            })
+            .collect();
+        BatchRing {
+            frames: frames.into_boxed_slice(),
+            mask: (n - 1) as u64,
+            batch,
+            window,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            submitters: AtomicU64::new(0),
+        }
+    }
+
+    /// Frames in the ring (power of two).
+    pub fn frames(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Slots per frame.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Total rider capacity (`frames * batch`).
+    pub fn capacity(&self) -> usize {
+        self.frames.len() * self.batch
+    }
+
+    /// The ring stopped accepting work.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Reserve a slot in the current open frame and move `item` into
+    /// it.  Returns the frame's sequence number, or the item back with
+    /// a typed refusal — never blocks on a full ring.
+    pub fn push(&self, item: T) -> Result<u64, (PushError, T)> {
+        self.submitters.fetch_add(1, Ordering::SeqCst);
+        let r = self.push_inner(item);
+        self.submitters.fetch_sub(1, Ordering::SeqCst);
+        r
+    }
+
+    fn push_inner(&self, item: T) -> Result<u64, (PushError, T)> {
+        let mut bo = Backoff::new();
+        loop {
+            if self.closed.load(Ordering::SeqCst) {
+                return Err((PushError::Closed, item));
+            }
+            let seq = self.head.load(Ordering::SeqCst);
+            let f = &self.frames[(seq & self.mask) as usize];
+            let s = f.state.load(Ordering::SeqCst);
+            let g = gen_of(s);
+            if g != seq & GEN_MASK {
+                if g == seq.wrapping_add(self.frames.len() as u64) & GEN_MASK {
+                    // The frame's `seq` life was sealed and consumed
+                    // (a window seal can outrun every producer) before
+                    // anyone advanced head past it — move on.
+                    let _ = self.head.compare_exchange(
+                        seq,
+                        seq.wrapping_add(1),
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    );
+                    continue;
+                }
+                if self.head.load(Ordering::SeqCst) != seq {
+                    // Stale head view; chase it.
+                    continue;
+                }
+                // The frame still holds its previous life: the ring
+                // has `frames` outstanding batches — typed Full.
+                return Err((PushError::Full, item));
+            }
+            match claim_transition(s, self.batch as u64) {
+                None => {
+                    // Sealed or fully claimed: help head forward and
+                    // retry on the next frame.  Losing this CAS to a
+                    // racing producer is fine — both chase the result.
+                    let _ = self.head.compare_exchange(
+                        seq,
+                        seq.wrapping_add(1),
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    );
+                    continue;
+                }
+                Some((slot, ns)) => {
+                    if f.state
+                        .compare_exchange(s, ns, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_err()
+                    {
+                        // Another producer claimed (or a seal landed)
+                        // first; re-read and retry.
+                        bo.snooze();
+                        continue;
+                    }
+                    // Slot `slot` is exclusively ours: move the item
+                    // in, then publish the write.
+                    *f.slots[slot as usize].lock().unwrap() = Some(item);
+                    let after =
+                        f.state.fetch_add(1 << WRITTEN_SHIFT, Ordering::SeqCst) + 1;
+                    // The writer that filled the last slot seals; the
+                    // window-expiry consumer is the other contender
+                    // and exactly one CAS wins.
+                    if claimed_of(after) >= self.batch as u64 {
+                        self.try_seal(f, after, false);
+                    }
+                    return Ok(seq);
+                }
+            }
+        }
+    }
+
+    /// Drive `seal_transition` to a verdict: retry while the word
+    /// keeps changing under an OPEN phase (claims/writes landing),
+    /// stop as soon as the frame is sealed (by us or a racer).
+    /// Returns whether OUR seal won.
+    fn try_seal(&self, f: &Frame<T>, mut s: u64, by_window: bool) -> bool {
+        loop {
+            let Some(ns) = seal_transition(s, by_window) else {
+                return false;
+            };
+            match f.state.compare_exchange(s, ns, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return true,
+                Err(cur) => s = cur,
+            }
+        }
+    }
+
+    /// Consume the next sealed batch.  Waits past `poll` only while
+    /// the tail frame is non-empty (a non-empty frame is guaranteed to
+    /// seal — by its last writer, by our window expiry, or by close —
+    /// and returning early would restart the window clock).  An empty
+    /// tail frame at the poll deadline yields [`Pop::Idle`];
+    /// closed-and-drained yields [`Pop::Closed`].
+    pub fn pop(&self, poll: Duration) -> Pop<T> {
+        let give_up = Instant::now() + poll;
+        let mut window_seq = 0u64;
+        let mut window_start: Option<Instant> = None;
+        let mut bo = Backoff::new();
+        loop {
+            let seq = self.tail.load(Ordering::SeqCst);
+            let f = &self.frames[(seq & self.mask) as usize];
+            let s = f.state.load(Ordering::SeqCst);
+            if gen_of(s) != seq & GEN_MASK {
+                // Another consumer recycled this frame between our
+                // tail read and state read; chase the new tail.
+                bo.snooze();
+                continue;
+            }
+            match phase_of(s) {
+                PHASE_OPEN if claimed_of(s) == 0 => {
+                    if self.closed.load(Ordering::SeqCst)
+                        && self.submitters.load(Ordering::SeqCst) == 0
+                    {
+                        // Quiescence proof: any claim landing after
+                        // this state re-read would come from a
+                        // submitter that registered after our zero
+                        // read, and such a submitter must see the
+                        // closed flag (SeqCst total order) — so an
+                        // unchanged empty word means drained for good.
+                        if f.state.load(Ordering::SeqCst) == s {
+                            return Pop::Closed;
+                        }
+                        continue;
+                    }
+                    if Instant::now() >= give_up {
+                        return Pop::Idle;
+                    }
+                    window_start = None;
+                    bo.snooze();
+                }
+                PHASE_OPEN => {
+                    // Filling.  Closed short-circuits the window so
+                    // drains never idle; otherwise seal when the
+                    // window (measured from when WE first saw the
+                    // frame non-empty) expires.
+                    if self.closed.load(Ordering::SeqCst) {
+                        self.try_seal(f, s, true);
+                        continue;
+                    }
+                    if window_start.is_none() || window_seq != seq {
+                        window_seq = seq;
+                        window_start = Some(Instant::now());
+                    }
+                    if window_start.unwrap().elapsed() >= self.window {
+                        self.try_seal(f, s, true);
+                        continue;
+                    }
+                    bo.snooze();
+                }
+                PHASE_SEALED => {
+                    let Some(ns) = consume_transition(s) else {
+                        // A claimed slot's write is still in flight
+                        // (its producer is between claim and publish —
+                        // a handful of instructions).
+                        bo.snooze();
+                        continue;
+                    };
+                    if f.state
+                        .compare_exchange(s, ns, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_err()
+                    {
+                        continue; // another consumer won the frame
+                    }
+                    // Ours.  Advance the tail first so other consumers
+                    // move to the next frame while we drain.
+                    let _ = self.tail.compare_exchange(
+                        seq,
+                        seq.wrapping_add(1),
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    );
+                    let fill = claimed_of(s) as usize;
+                    let mut items = Vec::with_capacity(fill);
+                    for slot in &f.slots[..fill] {
+                        items.push(
+                            slot.lock().unwrap().take().expect("sealed slot must hold an item"),
+                        );
+                    }
+                    let meta = BatchMeta {
+                        seq,
+                        fill: fill as u32,
+                        sealed_by_window: s & WINDOW_BIT != 0,
+                    };
+                    // Recycle for lap `seq + frames` in one store (we
+                    // are the frame's only owner here).
+                    let next_gen = seq.wrapping_add(self.frames.len() as u64);
+                    f.state.store(fresh(next_gen), Ordering::SeqCst);
+                    return Pop::Batch(items, meta);
+                }
+                _ => {
+                    // EXECUTING: the winning consumer's tail bump is
+                    // imminent.
+                    bo.snooze();
+                }
+            }
+        }
+    }
+
+    /// Stop accepting work and wait for in-flight submitters to
+    /// finish.  After `close` returns, no new claim can start; riders
+    /// already claimed stay in the ring for consumers to drain.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.quiesce();
+    }
+
+    /// Wait until no producer is inside `push`.  `push` never blocks,
+    /// so this terminates promptly.
+    pub fn quiesce(&self) {
+        let mut bo = Backoff::new();
+        while self.submitters.load(Ordering::SeqCst) != 0 {
+            bo.snooze();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_word_fields_roundtrip() {
+        let s = fresh(12345) + (3 << CLAIMED_SHIFT) + (2 << WRITTEN_SHIFT);
+        assert_eq!(gen_of(s), 12345);
+        assert_eq!(claimed_of(s), 3);
+        assert_eq!(written_of(s), 2);
+        assert_eq!(phase_of(s), PHASE_OPEN);
+        let sealed = seal_transition(s, true).unwrap();
+        assert_eq!(phase_of(sealed), PHASE_SEALED);
+        assert_ne!(sealed & WINDOW_BIT, 0);
+        assert_eq!(claimed_of(sealed), 3);
+        assert_eq!(gen_of(sealed), 12345);
+        // not consumable until written == claimed
+        assert!(consume_transition(sealed).is_none());
+        let done = sealed + 1;
+        let exec = consume_transition(done).unwrap();
+        assert_eq!(phase_of(exec), PHASE_EXECUTING);
+        // and never twice
+        assert!(consume_transition(exec).is_none());
+        assert!(seal_transition(exec, false).is_none());
+        assert!(claim_transition(exec, 8).is_none());
+    }
+
+    #[test]
+    fn geometry_is_power_of_two_with_floor() {
+        let r: BatchRing<u8> = BatchRing::new(0, 4, Duration::ZERO);
+        assert_eq!(r.frames(), 2);
+        let r: BatchRing<u8> = BatchRing::new(5, 4, Duration::ZERO);
+        assert_eq!(r.frames(), 8);
+        assert_eq!(r.capacity(), 32);
+        assert_eq!(r.batch(), 4);
+    }
+
+    #[test]
+    fn full_frame_is_sealed_by_its_last_writer() {
+        let r: BatchRing<u32> = BatchRing::new(2, 3, Duration::from_secs(10));
+        for v in 0..3 {
+            r.push(v).unwrap();
+        }
+        // the huge window proves the seal came from the last writer
+        match r.pop(Duration::ZERO) {
+            Pop::Batch(items, meta) => {
+                assert_eq!(items, vec![0, 1, 2]);
+                assert_eq!(meta.fill, 3);
+                assert_eq!(meta.seq, 0);
+                assert!(!meta.sealed_by_window, "a full frame seals via its last writer");
+            }
+            other => panic!("expected a batch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn window_expiry_seals_a_partial_frame() {
+        let r: BatchRing<u32> = BatchRing::new(2, 8, Duration::from_millis(1));
+        r.push(7).unwrap();
+        r.push(8).unwrap();
+        match r.pop(Duration::from_secs(5)) {
+            Pop::Batch(items, meta) => {
+                assert_eq!(items, vec![7, 8]);
+                assert_eq!(meta.fill, 2);
+                assert!(meta.sealed_by_window);
+            }
+            other => panic!("expected a batch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn exhausted_ring_pushes_back_typed_and_recovers() {
+        // no consumer: 2 frames x 2 slots accept exactly 4 riders
+        let r: BatchRing<u32> = BatchRing::new(2, 2, Duration::from_secs(10));
+        for v in 0..4 {
+            assert!(r.push(v).is_ok(), "rider {v} must fit");
+        }
+        match r.push(99) {
+            Err((PushError::Full, item)) => assert_eq!(item, 99),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // a late consumer recovers every rider exactly once, in order
+        let mut got = Vec::new();
+        for _ in 0..2 {
+            match r.pop(Duration::ZERO) {
+                Pop::Batch(items, meta) => {
+                    assert_eq!(meta.fill, 2);
+                    got.extend(items);
+                }
+                other => panic!("expected a batch, got {other:?}"),
+            }
+        }
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        // and the freed frames accept work again
+        assert!(r.push(5).is_ok());
+    }
+
+    #[test]
+    fn close_refuses_new_work_and_seals_immediately() {
+        // window far longer than the test: only `close` can seal
+        let r: BatchRing<u32> = BatchRing::new(4, 8, Duration::from_secs(60));
+        for v in 0..3 {
+            r.push(v).unwrap();
+        }
+        r.close();
+        match r.push(99) {
+            Err((PushError::Closed, item)) => assert_eq!(item, 99),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        match r.pop(Duration::ZERO) {
+            Pop::Batch(items, meta) => {
+                assert_eq!(items, vec![0, 1, 2]);
+                assert!(meta.sealed_by_window, "a close seal counts as a window seal");
+            }
+            other => panic!("expected the drained batch, got {other:?}"),
+        }
+        assert!(matches!(r.pop(Duration::ZERO), Pop::Closed));
+        assert!(matches!(r.pop(Duration::ZERO), Pop::Closed));
+    }
+
+    #[test]
+    fn empty_open_ring_idles_within_poll_budget() {
+        let r: BatchRing<u32> = BatchRing::new(2, 2, Duration::ZERO);
+        assert!(matches!(r.pop(Duration::ZERO), Pop::Idle));
+        assert!(matches!(r.pop(Duration::from_micros(100)), Pop::Idle));
+    }
+
+    /// Hand-rolled loom-style model checker: exhaustively enumerate
+    /// thread interleavings of the *same* transition rules the runtime
+    /// CAS loops use ([`claim_transition`] / [`seal_transition`] /
+    /// [`consume_transition`]) over one frame word, and assert the
+    /// state-machine invariants on every leaf:
+    ///
+    /// * claims never exceed the batch, writes never exceed claims;
+    /// * exactly one sealer wins (last writer XOR window consumer);
+    /// * the consumer only ever takes a frame whose every claimed slot
+    ///   has been written — no torn batch is observable.
+    mod model {
+        use super::super::{
+            claim_transition, claimed_of, consume_transition, phase_of, seal_transition,
+            written_of, PHASE_OPEN, PHASE_SEALED, WINDOW_BIT, WRITTEN_SHIFT,
+        };
+
+        const BATCH: u64 = 2;
+
+        /// One simulated producer: claim -> write slot -> publish ->
+        /// (maybe) seal, exactly mirroring `push_inner`'s step
+        /// structure between atomic accesses.
+        #[derive(Clone, Copy, PartialEq)]
+        enum Producer {
+            Claim,
+            Write(u64),
+            Publish(u64),
+            SealIfLast,
+            Done,
+        }
+
+        /// The window-expiry consumer side: one seal attempt, then
+        /// (once sealed by anyone) one consume attempt.
+        #[derive(Clone, Copy, PartialEq)]
+        enum Consumer {
+            WindowSeal,
+            Consume,
+            Done { consumed_fill: Option<u64> },
+        }
+
+        #[derive(Clone)]
+        struct World {
+            word: u64,
+            /// Models the slot cells: which slots hold a payload.
+            slot_written: [bool; BATCH as usize],
+            producers: [Producer; BATCH as usize],
+            consumer: Consumer,
+            window_seal_won: bool,
+            last_writer_seal_won: bool,
+        }
+
+        impl World {
+            fn new() -> World {
+                World {
+                    word: 0, // fresh(0): gen 0, OPEN, no claims
+                    slot_written: [false; BATCH as usize],
+                    producers: [Producer::Claim; BATCH as usize],
+                    consumer: Consumer::WindowSeal,
+                    window_seal_won: false,
+                    last_writer_seal_won: false,
+                }
+            }
+
+            fn invariants(&self) {
+                assert!(claimed_of(self.word) <= BATCH, "claims exceeded the batch");
+                assert!(
+                    written_of(self.word) <= claimed_of(self.word),
+                    "writes exceeded claims"
+                );
+                assert!(
+                    !(self.window_seal_won && self.last_writer_seal_won),
+                    "two sealers won the same frame"
+                );
+            }
+
+            /// Step producer `i` once.  Returns false if it was done.
+            fn step_producer(&mut self, i: usize) -> bool {
+                match self.producers[i] {
+                    Producer::Claim => match claim_transition(self.word, BATCH) {
+                        // the model CAS never fails: each DFS step is
+                        // one uninterrupted atomic access
+                        Some((slot, ns)) => {
+                            self.word = ns;
+                            self.producers[i] = Producer::Write(slot);
+                        }
+                        None => self.producers[i] = Producer::Done,
+                    },
+                    Producer::Write(slot) => {
+                        self.slot_written[slot as usize] = true;
+                        self.producers[i] = Producer::Publish(slot);
+                    }
+                    Producer::Publish(_) => {
+                        self.word += 1 << WRITTEN_SHIFT;
+                        self.producers[i] = if claimed_of(self.word) >= BATCH {
+                            Producer::SealIfLast
+                        } else {
+                            Producer::Done
+                        };
+                    }
+                    Producer::SealIfLast => {
+                        if let Some(ns) = seal_transition(self.word, false) {
+                            self.word = ns;
+                            self.last_writer_seal_won = true;
+                        }
+                        self.producers[i] = Producer::Done;
+                    }
+                    Producer::Done => return false,
+                }
+                true
+            }
+
+            fn step_consumer(&mut self) -> bool {
+                match self.consumer {
+                    Consumer::WindowSeal => {
+                        if claimed_of(self.word) >= 1 {
+                            if let Some(ns) = seal_transition(self.word, true) {
+                                self.word = ns;
+                                self.window_seal_won = true;
+                            }
+                            self.consumer = Consumer::Consume;
+                        } else if phase_of(self.word) != PHASE_OPEN {
+                            self.consumer = Consumer::Consume;
+                        } else {
+                            // nothing to seal yet; stay (bounded by
+                            // the DFS: this step only repeats while
+                            // other threads still have steps)
+                        }
+                    }
+                    Consumer::Consume => {
+                        if let Some(ns) = consume_transition(self.word) {
+                            let fill = claimed_of(ns);
+                            // the gate: every claimed slot's payload
+                            // must be visible to the consumer
+                            for s in 0..fill as usize {
+                                assert!(
+                                    self.slot_written[s],
+                                    "consumed a slot before its write landed"
+                                );
+                            }
+                            self.word = ns;
+                            self.consumer = Consumer::Done { consumed_fill: Some(fill) };
+                        } else if phase_of(self.word) == PHASE_SEALED {
+                            // sealed but a write is in flight: spin
+                            // (same bounded-repeat note as above)
+                        } else if phase_of(self.word) == PHASE_OPEN {
+                            // seal lost to nothing yet — retry the
+                            // window seal
+                            self.consumer = Consumer::WindowSeal;
+                        } else {
+                            self.consumer = Consumer::Done { consumed_fill: None };
+                        }
+                    }
+                    Consumer::Done { .. } => return false,
+                }
+                true
+            }
+
+            fn done(&self) -> bool {
+                self.producers.iter().all(|p| matches!(p, Producer::Done))
+                    && matches!(self.consumer, Consumer::Done { .. })
+            }
+
+            /// Leaf check: if everything claimed was sealed and
+            /// consumed, the books must balance.
+            fn finale(&self) {
+                let claimed = claimed_of(self.word);
+                assert_eq!(
+                    written_of(self.word),
+                    claimed,
+                    "every claim must eventually publish"
+                );
+                if let Consumer::Done { consumed_fill: Some(fill) } = self.consumer {
+                    assert_eq!(fill, claimed, "the consumer must take the frozen fill");
+                    assert_eq!(
+                        self.window_seal_won,
+                        self.word & WINDOW_BIT != 0,
+                        "the window bit must record which sealer won"
+                    );
+                }
+                if claimed > 0 && phase_of(self.word) != PHASE_OPEN {
+                    assert!(
+                        self.window_seal_won ^ self.last_writer_seal_won,
+                        "exactly one sealer must win a sealed frame"
+                    );
+                }
+            }
+        }
+
+        /// DFS over every interleaving.  A thread whose step is a pure
+        /// spin (no state change, no progress) is only re-scheduled
+        /// when some other thread can still move, so the search is
+        /// finite.
+        fn explore(w: &World, depth: u32, leaves: &mut u64) {
+            assert!(depth < 64, "model runaway");
+            w.invariants();
+            if w.done() {
+                w.finale();
+                *leaves += 1;
+                return;
+            }
+            let mut moved = false;
+            for i in 0..BATCH as usize {
+                let mut next = w.clone();
+                if next.step_producer(i) {
+                    let progressed = next.word != w.word
+                        || next.producers[i] != w.producers[i]
+                        || next.slot_written != w.slot_written;
+                    if progressed {
+                        moved = true;
+                        explore(&next, depth + 1, leaves);
+                    }
+                }
+            }
+            {
+                let mut next = w.clone();
+                if next.step_consumer() {
+                    let progressed =
+                        next.word != w.word || next.consumer != w.consumer;
+                    if progressed {
+                        moved = true;
+                        explore(&next, depth + 1, leaves);
+                    }
+                }
+            }
+            // Everyone left is spinning on someone else's progress —
+            // with no runnable thread that would be a deadlock.
+            assert!(moved, "model deadlock: no thread can make progress");
+        }
+
+        #[test]
+        fn every_interleaving_of_claim_write_seal_consume_is_sound() {
+            let mut leaves = 0u64;
+            explore(&World::new(), 0, &mut leaves);
+            assert!(leaves > 100, "the model must branch substantially (got {leaves})");
+        }
+    }
+}

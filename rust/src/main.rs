@@ -64,8 +64,11 @@ COMMANDS
                resnetlike/mobilenetlike/denselike DAG rungs, autotuned)
   serve        batched serving demo (PJRT artifacts, or the  [--requests N] [--model NAME] [--config FILE]
                cached-program simulator backend without them) [--precision wXaY|mixed] [--batch B]
-               (--batch B serves through the batch-B compiled arena: sharded  [--topology T]
-               queues, one batched execution per window, fill/queue metrics;  [--deadline-us D] [--chaos-seed S]
+               (--batch B serves through the batch-B compiled arena behind a    [--topology T] [--ring-frames R]
+               lock-free slot-reservation ring: producers CAS into the open     [--deadline-us D] [--chaos-seed S]
+               batch frame, frames seal on fill or window expiry, any worker
+               dispatches — fill/seal/queue metrics; --ring-frames R sizes the
+               ring (0 derives it from queue_depth / batch);
                --topology chain|resnetlike|mobilenetlike|denselike picks the
                simulated network graph — DAG topologies compile to the same
                one-program liveness-planned arena as the chain;
@@ -216,8 +219,9 @@ fn cmd_qnn_cycles(rest: &[String]) -> Result<(), String> {
 /// dataflow program (shared program cache, graph-level key) and every
 /// request classifies through it end-to-end on a per-worker machine
 /// pool (no artifacts, no PJRT).  `--batch B` switches to the batched
-/// request path (`coordinator::QnnBatchServer`): a batch-B arena,
-/// sharded queues, one batched execution per batching window.
+/// request path (`coordinator::QnnBatchServer`): a batch-B arena fed
+/// by the lock-free slot-reservation ring, one batched execution per
+/// sealed frame.
 fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     use sparq::kernels::ProgramCache;
     use sparq::qnn::QnnGraph;
@@ -237,6 +241,9 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     }
     if let Some(d) = opt(rest, "--deadline-us") {
         serve_cfg.deadline_us = d.parse().map_err(|_| "bad --deadline-us value")?;
+    }
+    if let Some(r) = opt(rest, "--ring-frames") {
+        serve_cfg.ring_frames = r.parse().map_err(|_| "bad --ring-frames value")?;
     }
     // A seeded storm of injected worker faults (kills, panics, errors,
     // delays) — the same seed replays the same fault sequence, so the
@@ -376,10 +383,12 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// The batched request path: batch-B arena compilation + sharded
-/// submission queues ([`sparq::coordinator::QnnBatchServer`]).  Prints
-/// the new serving metrics — batch-fill histogram, queue-depth
-/// high-water, latency percentiles in wall time AND simulated cycles.
+/// The batched request path: batch-B arena compilation + the
+/// lock-free slot-reservation ring front door
+/// ([`sparq::coordinator::QnnBatchServer`]).  Prints the serving
+/// metrics — batch-fill histogram, full-vs-window seal split,
+/// queue-depth high-water, latency percentiles in wall time AND
+/// simulated cycles.
 #[allow(clippy::too_many_arguments)]
 fn cmd_serve_sim_batched(
     cfg: &sparq::ProcessorConfig,
@@ -404,10 +413,12 @@ fn cmd_serve_sim_batched(
     )
     .map_err(|e| e.to_string())?;
     println!(
-        "serving the {topo} network at {} through the batch-{} arena ({} shard worker(s), window {} us), {n} requests...",
+        "serving the {topo} network at {} through the batch-{} arena \
+         ({} worker(s) on a {}-frame ring, window {} us), {n} requests...",
         if prec_arg == "mixed" { "mixed W4A4-stem/W2A2".to_string() } else { precision.label() },
         server.batch(),
         serve_cfg.workers.max(1),
+        server.ring_frames(),
         serve_cfg.batch_window_us,
     );
     let image_len = server.image_len();
@@ -441,7 +452,7 @@ fn cmd_serve_sim_batched(
     println!(
         "done: {served}/{n} served, {rejected} rejected (typed backpressure)\n  \
          latency p50/p95/p99: {}/{}/{} us | p50/p99 sim cycles: {}/{}\n  \
-         {} batches (fill histogram: {}), queue depth max {}\n  \
+         {} batches (fill histogram: {}; {} sealed full, {} by window), queue depth max {}\n  \
          program cache: {} compile(s), {} hits for {served} batched inferences",
         snap.p50_us,
         snap.p95_us,
@@ -450,6 +461,8 @@ fn cmd_serve_sim_batched(
         snap.p99_cycles,
         snap.batches,
         if fills.is_empty() { "-".to_string() } else { fills.join(" ") },
+        snap.seals_full,
+        snap.seals_window,
         snap.queue_depth_max,
         cs.misses,
         cs.hits,

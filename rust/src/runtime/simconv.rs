@@ -197,7 +197,7 @@ impl SimQnnModel {
     /// `execute_fresh` would under-report the single-image cost.
     pub fn infer(&self, pool: &MachinePool, input: &[f32]) -> Result<(Vec<i64>, u64), SimError> {
         if self.cq.batch > 1 || self.cq.preamble.is_some() {
-            let (mut per_image, total) = self.infer_batch(pool, &[input.to_vec()])?;
+            let (mut per_image, total) = self.infer_batch_refs(pool, &[input])?;
             let (logits, _slot_cycles) = per_image.pop().expect("singleton batch");
             return Ok((logits, total));
         }
@@ -226,6 +226,19 @@ impl SimQnnModel {
         &self,
         pool: &MachinePool,
         inputs: &[Vec<f32>],
+    ) -> Result<(Vec<(Vec<i64>, u64)>, u64), SimError> {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        self.infer_batch_refs(pool, &refs)
+    }
+
+    /// [`Self::infer_batch`] over borrowed images — the batched server
+    /// stages requests straight out of their ring slots without
+    /// cloning or taking ownership of the image buffers.
+    #[allow(clippy::type_complexity)]
+    pub fn infer_batch_refs(
+        &self,
+        pool: &MachinePool,
+        inputs: &[&[f32]],
     ) -> Result<(Vec<(Vec<i64>, u64)>, u64), SimError> {
         if inputs.is_empty() || inputs.len() > self.batch() {
             return Err(SimError::Unsupported(

@@ -5,9 +5,10 @@
 //!   single-image inferences through the same batched program, and the
 //!   batch's only cycle saving is exactly the (B-1) amortized
 //!   weight-pack preambles.
-//! * **Backpressure** — flooding the sharded submission queues past
-//!   capacity yields typed `ServeError::QueueFull` rejections, counted
-//!   in the metrics, while every accepted request still completes.
+//! * **Backpressure** — flooding the slot-reservation ring until every
+//!   frame is claimed-and-unconsumed yields typed
+//!   `ServeError::QueueFull` rejections, counted in the metrics, while
+//!   every accepted request still completes.
 
 use sparq::config::ServeConfig;
 use sparq::coordinator::{QnnBatchServer, ServeError};
@@ -74,9 +75,10 @@ fn batch_of_b_is_bit_identical_to_b_sequential_single_inferences() {
 
 #[test]
 fn flooding_the_queue_past_capacity_is_typed_backpressure() {
-    // tiny queue, one worker, a long batching window: submissions from
-    // this thread are far faster than a simulated inference, so the
-    // shard must fill and later submissions must see QueueFull
+    // tiny ring (queue_depth 2 / batch 2 -> 2 frames), one worker, a
+    // long batching window: submissions from this thread are far faster
+    // than a simulated inference, so every frame ends up
+    // claimed-and-unconsumed and later submissions must see QueueFull
     let cache = ProgramCache::new();
     let serve = ServeConfig {
         workers: 1,

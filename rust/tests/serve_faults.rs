@@ -245,22 +245,24 @@ fn w2a2() -> QnnPrecision {
     QnnPrecision::SubByte { w_bits: 2, a_bits: 2 }
 }
 
-/// One breaker scenario run: shard 0 fails its first three batches,
-/// heals on the fourth.  Returns (per-request ok flags, trips, retries,
-/// shard-0 errors).
+/// One single-worker breaker scenario run: the worker fails its first
+/// two batches (trip at threshold 2), heals on the third.  A single
+/// worker over the shared ring makes every local call index
+/// deterministic, so the scenario replays exactly.  Returns
+/// (per-request outcomes, trips, retries, worker-0 errors).
 fn run_breaker(cache: &ProgramCache) -> (Vec<bool>, u64, u64, u64) {
     let plan = Arc::new(FaultPlan::from_rules(vec![FaultRule {
         worker: Some(0),
-        when: CallSel::Range(0, 3),
+        when: CallSel::Range(0, 2),
         action: FaultAction::Error,
     }]));
     let serve = ServeConfig {
-        workers: 2,
+        workers: 1,
         batch: 1,
         batch_window_us: 50,
         queue_depth: 16,
         breaker_threshold: 2,
-        probation_us: 100_000,
+        probation_us: 60_000_000, // the alive-only fallback keeps serving anyway
         ..ServeConfig::default()
     };
     let server = QnnBatchServer::start_chaos(
@@ -275,32 +277,30 @@ fn run_breaker(cache: &ProgramCache) -> (Vec<bool>, u64, u64, u64) {
     .unwrap();
     let image = vec![1.0; server.image_len()];
     let mut oks = Vec::new();
-    let mut infer_seq = |count: usize, oks: &mut Vec<bool>| {
-        for _ in 0..count {
-            let rx = server.submit(image.clone()).expect("submit");
-            let r = rx.recv_timeout(Duration::from_secs(10)).expect("request hung");
-            oks.push(r.is_ok());
-        }
-    };
-    // rr walks shards round-robin from 0; batch 1 + sequential client
-    // makes every shard-0 local call index deterministic:
-    //   req1 -> shard0 p0 Error -> failover Ok     (consecutive 1)
-    //   req2 -> shard1 Ok
-    //   req3 -> shard0 p1 Error -> EJECT, failover (trip 1)
-    //   req4 -> shard1 Ok
-    //   req5 -> starts at shard0, ejected -> shard1 Ok
-    infer_seq(5, &mut oks);
-    std::thread::sleep(Duration::from_millis(130)); // probation expires
-    //   req6 -> shard1 Ok
-    //   req7 -> shard0 probe, p2 Error -> re-EJECT (trip 2), failover
-    infer_seq(2, &mut oks);
-    std::thread::sleep(Duration::from_millis(130)); // probation expires again
-    //   req8 -> shard1 Ok
-    //   req9 -> shard0 probe, p3 clean -> Ok, breaker heals
-    infer_seq(2, &mut oks);
+    // batch 1 + one worker + a sequential client pin the local call
+    // indices:
+    //   req1 -> call 0 Error -> failover re-queues (retry 1)
+    //        -> call 1 Error -> trip at threshold 2, retry exhausted,
+    //           the client sees the SECOND failure typed
+    //   req2 -> call 2 clean -> Ok, the success heals the breaker
+    //   req3 -> call 3 clean -> Ok
+    let r1 = server.submit(image.clone()).expect("submit");
+    match r1.recv_timeout(Duration::from_secs(10)).expect("request hung") {
+        Err(ServeError::Worker(msg)) => assert!(msg.contains("injected error"), "{msg}"),
+        other => panic!("the retry-exhausted request must surface typed, got {other:?}"),
+    }
+    oks.push(false);
+    for _ in 0..2 {
+        let rx = server.submit(image.clone()).expect("submit");
+        let r = rx.recv_timeout(Duration::from_secs(10)).expect("request hung");
+        oks.push(r.is_ok());
+    }
     let h = server.health();
     assert!(h.shards[0].alive);
-    assert!(!h.shards[0].ejected, "a clean probe must re-admit the shard");
+    assert!(
+        !h.shards[0].ejected,
+        "a success must clear the probation window, not just the counter"
+    );
     assert_eq!(h.shards[0].consecutive_errors, 0, "a success must heal the breaker");
     let shard0_errors = h.shards[0].errors;
     let snap = server.shutdown();
@@ -308,13 +308,13 @@ fn run_breaker(cache: &ProgramCache) -> (Vec<bool>, u64, u64, u64) {
 }
 
 #[test]
-fn breaker_ejects_failing_shard_and_readmits_it_on_probation() {
+fn breaker_trips_at_threshold_and_a_success_heals_it() {
     let cache = ProgramCache::new();
     let (oks, trips, retries, shard0_errors) = run_breaker(&cache);
-    assert!(oks.iter().all(|&ok| ok), "failover must hide every shard-0 failure: {oks:?}");
-    assert_eq!(trips, 2, "eject once at threshold, once more on the failed probe");
-    assert_eq!(retries, 3, "each of shard 0's three failures fails over exactly once");
-    assert_eq!(shard0_errors, 3);
+    assert_eq!(oks, vec![false, true, true]);
+    assert_eq!(trips, 1, "two consecutive failures trip a threshold-2 breaker once");
+    assert_eq!(retries, 1, "the first failure fails over exactly once");
+    assert_eq!(shard0_errors, 2);
     // replay: the rule-driven scenario is deterministic end to end
     // (the second start hits the program cache, so it is cheap)
     let (oks2, trips2, retries2, shard0_errors2) = run_breaker(&cache);
@@ -323,11 +323,90 @@ fn breaker_ejects_failing_shard_and_readmits_it_on_probation() {
 }
 
 #[test]
-fn killed_shard_fails_over_and_stays_dead() {
+fn ejected_worker_pauses_and_probation_readmits_it() {
+    // worker 0 fails every batch it executes; threshold 1 ejects it on
+    // the first failure.  While worker 1 is healthy the ejected worker
+    // must PAUSE consuming from the shared ring (clients keep getting
+    // Ok answers via failover), and probation expiry must re-admit it —
+    // its next consumed batch is the probe, which fails again here and
+    // re-trips the breaker.
     let cache = ProgramCache::new();
     let plan = Arc::new(FaultPlan::from_rules(vec![FaultRule {
         worker: Some(0),
-        when: CallSel::Nth(0),
+        when: CallSel::Always,
+        action: FaultAction::Error,
+    }]));
+    let serve = ServeConfig {
+        workers: 2,
+        batch: 1,
+        batch_window_us: 50,
+        queue_depth: 16,
+        breaker_threshold: 1,
+        probation_us: 500_000,
+        ..ServeConfig::default()
+    };
+    let server = QnnBatchServer::start_chaos(
+        ProcessorConfig::sparq(),
+        &QnnGraph::sparq_cnn(),
+        w2a2(),
+        7,
+        serve,
+        &cache,
+        Some(plan),
+    )
+    .unwrap();
+    let image = vec![1.0; server.image_len()];
+    // which worker consumes each batch is a scheduling race over the
+    // shared ring, so poll: submit until worker 0 has eaten (and
+    // failed) at least one batch.  Failover must hide every failure.
+    let t0 = Instant::now();
+    while server.health().shards[0].errors == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker 0 never consumed a batch");
+        let rx = server.submit(image.clone()).expect("submit");
+        let r = rx.recv_timeout(Duration::from_secs(10)).expect("request hung");
+        assert!(r.is_ok(), "failover must hide the ejected worker's failure: {r:?}");
+    }
+    let errors_before = server.health().shards[0].errors;
+    assert!(server.health().breaker_trips >= 1, "a threshold-1 breaker trips on first failure");
+    // while ejected (probation 500ms) the worker consumes nothing:
+    // a burst of requests all succeeds and its error count freezes
+    for _ in 0..8 {
+        let rx = server.submit(image.clone()).expect("submit");
+        let r = rx.recv_timeout(Duration::from_secs(10)).expect("request hung");
+        assert!(r.is_ok(), "worker 1 serves alone while 0 sits out: {r:?}");
+    }
+    assert_eq!(
+        server.health().shards[0].errors,
+        errors_before,
+        "an ejected worker must not consume from the ring while a healthy peer can"
+    );
+    // probation expiry re-admits it: its next batch is the probe
+    std::thread::sleep(Duration::from_millis(600));
+    let t1 = Instant::now();
+    while server.health().shards[0].errors == errors_before {
+        assert!(t1.elapsed() < Duration::from_secs(10), "probation never re-admitted worker 0");
+        let rx = server.submit(image.clone()).expect("submit");
+        let r = rx.recv_timeout(Duration::from_secs(10)).expect("request hung");
+        assert!(r.is_ok(), "failover must hide the probe failure too: {r:?}");
+    }
+    let h = server.health();
+    assert!(h.shards[0].errors > errors_before, "the probe reached the failing worker");
+    assert!(h.breaker_trips >= 2, "the failed probe re-trips the breaker");
+    let snap = server.shutdown();
+    assert_eq!(snap.errors, 0, "no failure ever reached a client typed");
+    assert!(snap.retries >= 2, "every worker-0 failure failed over");
+}
+
+#[test]
+fn killed_shard_fails_over_and_stays_dead() {
+    // `GlobalNth(0)` kills whichever worker executes the first batch —
+    // over a shared ring "the worker that got the request" is a
+    // scheduling race, so the kill targets the global call index, not
+    // a worker id.  The rider fails over to the survivor.
+    let cache = ProgramCache::new();
+    let plan = Arc::new(FaultPlan::from_rules(vec![FaultRule {
+        worker: None,
+        when: CallSel::GlobalNth(0),
         action: FaultAction::Kill,
     }]));
     let serve = ServeConfig {
@@ -348,19 +427,125 @@ fn killed_shard_fails_over_and_stays_dead() {
     )
     .unwrap();
     let image = vec![1.0; server.image_len()];
-    // req1 lands on shard 0, which dies mid-batch; the request must
-    // fail over to shard 1 and come back Ok — never hang, never error
+    // req1's batch is killed mid-execution; the request must fail over
+    // to the surviving worker and come back Ok — never hang, never err
     for i in 0..4 {
         let rx = server.submit(image.clone()).expect("submit");
         let r = rx.recv_timeout(Duration::from_secs(10)).expect("request hung");
         assert!(r.is_ok(), "request {i} must survive the shard kill: {r:?}");
     }
+    // the death is asynchronous (the worker unwinds after answering)
+    let t0 = Instant::now();
+    while server.health().alive != 1 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "the killed worker never went down");
+        std::thread::sleep(Duration::from_millis(1));
+    }
     let h = server.health();
     assert_eq!(h.alive, 1, "the killed shard stays dead (no supervisor on the batch path)");
-    assert!(!h.shards[0].alive);
+    assert_eq!(h.shards.iter().filter(|s| !s.alive).count(), 1);
     let snap = server.shutdown();
     assert!(snap.retries >= 1, "the killed batch's request must have failed over");
     assert_eq!(snap.errors, 0, "failover hid the kill from every client");
+}
+
+#[test]
+fn failover_sheds_expired_requests_typed() {
+    // regression: fail_over used to re-queue requests whose deadline
+    // had already passed during the failed execution — they burned a
+    // ring slot only to be shed on the next pop.  An expired rider must
+    // be answered `Deadline` (counted in deadline_shed) AT failover
+    // time; only live riders re-enter the ring.
+    let cache = ProgramCache::new();
+    let plan = Arc::new(FaultPlan::from_rules(vec![FaultRule {
+        worker: Some(0),
+        when: CallSel::Nth(0),
+        action: FaultAction::SlowError(50_000), // 50ms burn, then fail
+    }]));
+    let serve = ServeConfig {
+        workers: 1,
+        batch: 2,
+        batch_window_us: 100_000,
+        queue_depth: 16,
+        ..ServeConfig::default()
+    };
+    let server = QnnBatchServer::start_chaos(
+        ProcessorConfig::sparq(),
+        &QnnGraph::sparq_cnn(),
+        w2a2(),
+        7,
+        serve,
+        &cache,
+        Some(plan),
+    )
+    .unwrap();
+    let image = vec![1.0; server.image_len()];
+    // both riders land in the same batch-2 frame (the second write
+    // seals it); the injected slow error outlives B's 20ms deadline
+    let rx_a = server.submit_with_deadline(image.clone(), None).expect("submit a");
+    let rx_b = server
+        .submit_with_deadline(image.clone(), Some(Duration::from_millis(20)))
+        .expect("submit b");
+    match rx_b.recv_timeout(Duration::from_secs(10)).expect("b hung") {
+        Err(ServeError::Deadline) => {}
+        other => panic!("the expired rider must be shed typed at failover, got {other:?}"),
+    }
+    let a = rx_a.recv_timeout(Duration::from_secs(10)).expect("a hung");
+    assert!(a.is_ok(), "the live rider's retry must serve: {a:?}");
+    let snap = server.shutdown();
+    assert_eq!(snap.retries, 1, "only the live rider re-enters the ring");
+    assert_eq!(snap.deadline_shed, 1, "the expired rider is a deadline shed, not an error");
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.drain_shed, 0);
+}
+
+#[test]
+fn drain_reclassifies_failover_as_closed() {
+    // regression: a request failing over DURING a graceful drain used
+    // to be answered `Worker("shard worker exited")` and counted in
+    // `errors` — a drained request is not a worker fault.  With the
+    // ring closed at failover time the rider must be answered `Closed`
+    // and counted in `drain_shed`.
+    let cache = ProgramCache::new();
+    let plan = Arc::new(FaultPlan::from_rules(vec![FaultRule {
+        worker: Some(0),
+        when: CallSel::Nth(0),
+        action: FaultAction::SlowError(100_000), // outlives the drain deadline
+    }]));
+    let serve = ServeConfig {
+        workers: 1,
+        batch: 2,
+        batch_window_us: 100_000,
+        queue_depth: 16,
+        ..ServeConfig::default()
+    };
+    let server = QnnBatchServer::start_chaos(
+        ProcessorConfig::sparq(),
+        &QnnGraph::sparq_cnn(),
+        w2a2(),
+        7,
+        serve,
+        &cache,
+        Some(plan),
+    )
+    .unwrap();
+    let image = vec![1.0; server.image_len()];
+    let rx_a = server.submit(image.clone()).expect("submit a");
+    let rx_b = server.submit(image.clone()).expect("submit b");
+    // let the worker consume the sealed frame and enter the 100ms burn
+    std::thread::sleep(Duration::from_millis(10));
+    let (snap, stats) = server.shutdown_with_deadline(Duration::from_millis(20));
+    for (name, rx) in [("a", rx_a), ("b", rx_b)] {
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap_or_else(|_| panic!("{name} hung")) {
+            Err(ServeError::Closed) => {}
+            other => panic!("rider {name} must be drain-shed Closed, got {other:?}"),
+        }
+    }
+    assert_eq!(stats.shed, 2, "both riders resolve as drain sheds");
+    assert_eq!(snap.drain_shed, 2);
+    assert_eq!(snap.completed, 0);
+    assert_eq!(snap.errors, 0, "a drained request is not a worker error");
+    assert_eq!(snap.retries, 0, "a closed ring accepts no failover re-queue");
 }
 
 #[test]
