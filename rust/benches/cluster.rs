@@ -1,0 +1,227 @@
+//! Multi-core cluster capacity bench (DESIGN.md §Cluster): the full
+//! (cores × batch × precision) capacity grid served through round-robin
+//! `coordinator::cluster::QnnCluster` frames, plus the determinism and
+//! serving smokes that make the grid trustworthy.
+//!
+//! What it asserts (CI runs this as a smoke):
+//!
+//! * cluster img/s at fmax is STRICTLY increasing in cores for every
+//!   fixed (batch, precision) cell with batch >= cores — the makespan
+//!   is max-over-cores + a small fixed shard/merge overhead, so adding
+//!   cores must help whenever there are enough slots to spread;
+//! * a warm rerun of the whole grid is all graph-level cache hits and
+//!   reproduces every makespan bit-for-bit;
+//! * K-core sharding is bit-identical to the 1-core path: same logits,
+//!   same per-slot cycles as a direct `infer_batch_refs` call, and the
+//!   K=1 makespan pays zero overhead;
+//! * work-steal sharding agrees with round-robin on every per-request
+//!   output (the account may differ — scheduling-dependent);
+//! * the batched server actually serves through a K-core cluster
+//!   (`ServeConfig::cores`) with zero core failures on the clean path.
+//!
+//! `--json` writes `BENCH_cluster.json` next to the other BENCH files;
+//! `sparq bench-check` gates the cycle fields against
+//! `ci/bench_baselines/BENCH_cluster.json` at tolerance 0 (img/s and
+//! host wall numbers are deliberately not cycle-keyed).
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{json_flag, Bench, Json};
+use sparq::config::ServeConfig;
+use sparq::coordinator::cluster::{shard_merge_overhead, QnnCluster, ShardPolicy};
+use sparq::coordinator::QnnBatchServer;
+use sparq::power::LaneReport;
+use sparq::qnn::schedule::{QnnPrecision, DEFAULT_QNN_SEED};
+use sparq::qnn::QnnGraph;
+use sparq::report::{capacity_grid, render_capacity, SweepCtx};
+use sparq::runtime::SimQnnModel;
+use sparq::{MachinePool, ProcessorConfig};
+
+const CORES: [usize; 4] = [1, 2, 4, 8];
+const BATCHES: [u32; 2] = [4, 8];
+const IMAGES: usize = 16;
+
+fn main() {
+    let b = Bench::new("cluster");
+    let cfg = ProcessorConfig::sparq();
+    let fmax = LaneReport::for_config(&cfg).fmax_ghz();
+    let ctx = SweepCtx::new();
+    let precisions: [(&str, QnnPrecision); 2] = [
+        ("w2a2", QnnPrecision::SubByte { w_bits: 2, a_bits: 2 }),
+        ("w4a4", QnnPrecision::SubByte { w_bits: 4, a_bits: 4 }),
+    ];
+
+    // cold grid compiles each (precision, batch) layout once; every
+    // core count reuses the same compiled model
+    let rows = b.section("grid(cold)", || {
+        capacity_grid(&ctx, &CORES, &BATCHES, &precisions, IMAGES).expect("capacity grid")
+    });
+    print!("{}", render_capacity(&rows, fmax));
+
+    // the acceptance gate: img/s strictly increasing in cores for every
+    // fixed (precision, batch) cell with batch >= cores
+    for (plabel, _) in &precisions {
+        for &batch in &BATCHES {
+            let cells: Vec<_> = rows
+                .iter()
+                .filter(|r| {
+                    r.precision == *plabel && r.batch == batch && batch as usize >= r.cores
+                })
+                .collect();
+            for pair in cells.windows(2) {
+                assert!(
+                    pair[1].img_per_s_fmax > pair[0].img_per_s_fmax,
+                    "{plabel} B={batch}: img/s must strictly increase with cores \
+                     (K={} {:.0} !> K={} {:.0})",
+                    pair[1].cores,
+                    pair[1].img_per_s_fmax,
+                    pair[0].cores,
+                    pair[0].img_per_s_fmax
+                );
+            }
+        }
+    }
+
+    // warm rerun: all graph-level hits, bit-identical makespans
+    let misses = ctx.cache.stats().misses;
+    let warm = b.section("grid(warm)", || {
+        capacity_grid(&ctx, &CORES, &BATCHES, &precisions, IMAGES).expect("warm capacity grid")
+    });
+    assert_eq!(
+        ctx.cache.stats().misses,
+        misses,
+        "warm grid must be all cache hits (no recompilation)"
+    );
+    for (c, w) in rows.iter().zip(&warm) {
+        assert_eq!(
+            c.makespan_cycles, w.makespan_cycles,
+            "{} B={} K={}: makespan drifted on the warm rerun",
+            c.precision, c.batch, c.cores
+        );
+    }
+
+    // K-vs-1 bit-identity: one compiled model, a direct batched call,
+    // a 1-core cluster, and a 4-core cluster must agree on every logit
+    // vector and every per-slot cycle count
+    b.section("bit_identity(K=4 vs K=1 vs direct)", || {
+        let graph = QnnGraph::sparq_cnn();
+        let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let model = Arc::new(
+            SimQnnModel::compile_batched(&cfg, &graph, prec, DEFAULT_QNN_SEED, &ctx.cache, 8)
+                .expect("compile batch-8 model"),
+        );
+        let inputs: Vec<Vec<f32>> = (0..8usize)
+            .map(|i| {
+                (0..model.input_len()).map(|k| ((k as u64 * 13 + i as u64) % 4) as f32).collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let pool = MachinePool::new();
+        let (direct, _) = model.infer_batch_refs(&pool, &refs).expect("direct batched call");
+        let one = QnnCluster::new(Arc::clone(&model), 1, ShardPolicy::RoundRobin);
+        let four = QnnCluster::new(Arc::clone(&model), 4, ShardPolicy::RoundRobin);
+        let run1 = one.infer_frame(&refs).expect("1-core frame");
+        let run4 = four.infer_frame(&refs).expect("4-core frame");
+        for (i, d) in direct.iter().enumerate() {
+            let r1 = run1.results[i].as_ref().expect("clean 1-core slot");
+            let r4 = run4.results[i].as_ref().expect("clean 4-core slot");
+            assert_eq!(d, r1, "slot {i}: 1-core cluster must match the direct call");
+            assert_eq!(d, r4, "slot {i}: 4-core cluster must match the direct call");
+        }
+        assert_eq!(run1.account.overhead_cycles, 0, "K=1 pays zero shard/merge overhead");
+        assert_eq!(run4.account.overhead_cycles, shard_merge_overhead(4));
+        for run in [&run1, &run4] {
+            let busiest =
+                run.account.per_core.iter().map(|c| c.cycles).max().expect("cores present");
+            assert_eq!(
+                run.account.makespan_cycles,
+                busiest + run.account.overhead_cycles,
+                "makespan must be max-over-cores plus the fixed overhead"
+            );
+        }
+        assert!(
+            run4.account.makespan_cycles < run1.account.makespan_cycles,
+            "4-core makespan must beat 1-core on a full 8-slot frame"
+        );
+
+        // work-steal agrees with round-robin on every output
+        let steal = QnnCluster::new(Arc::clone(&model), 4, ShardPolicy::WorkSteal);
+        let runs = steal.infer_frame(&refs).expect("work-steal frame");
+        for (i, d) in direct.iter().enumerate() {
+            let rs = runs.results[i].as_ref().expect("clean work-steal slot");
+            assert_eq!(&rs.0, &d.0, "slot {i}: work-steal logits must match round-robin");
+            assert_eq!(rs.1, d.1, "slot {i}: work-steal slot cycles must match round-robin");
+        }
+    });
+    println!("bit identity: K=4 and work-steal both match the 1-core path exactly");
+
+    // server smoke: the batched server serving through a 4-core cluster
+    let snap = b.section("server(cores=4)", || {
+        let server = QnnBatchServer::start(
+            cfg.clone(),
+            &QnnGraph::sparq_cnn(),
+            QnnPrecision::SubByte { w_bits: 2, a_bits: 2 },
+            DEFAULT_QNN_SEED,
+            ServeConfig {
+                workers: 1,
+                batch_window_us: 20_000,
+                queue_depth: 64,
+                batch: 8,
+                cores: 4,
+                ..ServeConfig::default()
+            },
+            &ctx.cache,
+        )
+        .expect("server start");
+        assert_eq!(server.cores(), 4, "the serve config must reach the cluster");
+        let image_len = server.image_len();
+        let mut pending = Vec::new();
+        for i in 0..32usize {
+            let img: Vec<f32> =
+                (0..image_len).map(|k| ((k as u64 * 7 + i as u64) % 4) as f32).collect();
+            pending.push(server.submit(img).unwrap_or_else(|e| panic!("submit {i}: {e}")));
+        }
+        let mut served = 0usize;
+        for rx in pending {
+            served += matches!(rx.recv(), Ok(Ok(_))) as usize;
+        }
+        assert_eq!(served, 32, "every submitted request must be served");
+        let health = server.health();
+        assert_eq!(health.cores_alive, 4, "all four cores must stay up on the clean path");
+        server.shutdown()
+    });
+    println!(
+        "server: {} requests in {} batches over 4 cores, {} core failure(s)",
+        snap.completed, snap.batches, snap.core_failures
+    );
+    assert_eq!(snap.completed, 32);
+    assert_eq!(snap.core_failures, 0, "the clean path must not record core failures");
+
+    if json_flag() {
+        let mut json = Json::new();
+        json.str("bench", "cluster").int("images", IMAGES as u64).num("fmax_ghz", fmax);
+        json.obj("grid", |j| {
+            for r in &rows {
+                j.obj(&format!("c{}_b{}_{}", r.cores, r.batch, r.precision), |j| {
+                    j.int("makespan_cycles", r.makespan_cycles)
+                        .int("slot_cycles", r.slot_cycles)
+                        .int("preamble_cycles", r.preamble_cycles)
+                        .int("overhead_cycles", r.overhead_cycles)
+                        .num("cycles_per_image", r.cycles_per_image)
+                        .num("images_per_s_at_fmax", r.img_per_s_fmax)
+                        .num("host_images_per_s", r.wall_img_per_s);
+                });
+            }
+        });
+        json.obj("serve", |j| {
+            j.int("completed", snap.completed)
+                .int("batches", snap.batches)
+                .int("core_failures", snap.core_failures);
+        });
+        json.write("BENCH_cluster.json");
+    }
+
+    b.finish();
+}

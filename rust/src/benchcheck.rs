@@ -375,12 +375,13 @@ pub fn compare_texts(baseline: &str, current: &str) -> Result<CheckOutcome, Pars
 }
 
 /// The bench files the gate knows about (name, artifact filename).
-pub const BENCH_FILES: [&str; 5] = [
+pub const BENCH_FILES: [&str; 6] = [
     "BENCH_simspeed.json",
     "BENCH_qnn.json",
     "BENCH_mixed.json",
     "BENCH_serve.json",
     "BENCH_topo.json",
+    "BENCH_cluster.json",
 ];
 
 #[cfg(test)]

@@ -20,6 +20,8 @@
 //! restart_backoff_us = 200 # base respawn backoff (doubles per failure)
 //! breaker_threshold = 3    # consecutive shard errors before ejection
 //! probation_us = 50000     # how long an ejected shard sits out
+//! cores = 1                # simulated cores per dispatched batch frame
+//! work_steal = false       # work-stealing shard policy (default round-robin)
 //! ```
 
 use crate::arch::ProcessorConfig;
@@ -167,6 +169,8 @@ impl Config {
             restart_backoff_us: self.get_u64("serve", "restart_backoff_us")?.unwrap_or(200),
             breaker_threshold: self.get_u32("serve", "breaker_threshold")?.unwrap_or(3),
             probation_us: self.get_u64("serve", "probation_us")?.unwrap_or(50_000),
+            cores: self.get_u32("serve", "cores")?.unwrap_or(1) as usize,
+            work_steal: self.get_bool("serve", "work_steal")?.unwrap_or(false),
         })
     }
 }
@@ -202,6 +206,15 @@ pub struct ServeConfig {
     /// How long an ejected shard sits out before it is probed again,
     /// microseconds.
     pub probation_us: u64,
+    /// Simulated cores per dispatched batch frame
+    /// (`coordinator::cluster::QnnCluster`): each sealed frame is
+    /// sharded across this many per-core machine pools executing
+    /// host-parallel.  `1` (the default) is the plain batched path.
+    pub cores: usize,
+    /// Use the work-stealing shard policy instead of static
+    /// round-robin (outputs identical; core assignment — and thus the
+    /// per-core cycles account — becomes load-dependent).
+    pub work_steal: bool,
 }
 
 impl Default for ServeConfig {
@@ -217,6 +230,8 @@ impl Default for ServeConfig {
             restart_backoff_us: 200,
             breaker_threshold: 3,
             probation_us: 50_000,
+            cores: 1,
+            work_steal: false,
         }
     }
 }
@@ -269,9 +284,12 @@ queue_depth = 64
         assert_eq!(s.restart_backoff_us, 200);
         assert_eq!(s.breaker_threshold, 3);
         assert_eq!(s.probation_us, 50_000);
+        assert_eq!(s.cores, 1); // default: plain batched path
+        assert!(!s.work_steal); // default: round-robin sharding
         let c = Config::parse(
             "[serve]\nbatch = 8\nring_frames = 32\ndeadline_us = 2000\nrestart_budget = 2\n\
-             restart_backoff_us = 500\nbreaker_threshold = 5\nprobation_us = 10000",
+             restart_backoff_us = 500\nbreaker_threshold = 5\nprobation_us = 10000\n\
+             cores = 4\nwork_steal = true",
         )
         .unwrap();
         let s = c.serve().unwrap();
@@ -282,6 +300,8 @@ queue_depth = 64
         assert_eq!(s.restart_backoff_us, 500);
         assert_eq!(s.breaker_threshold, 5);
         assert_eq!(s.probation_us, 10_000);
+        assert_eq!(s.cores, 4);
+        assert!(s.work_steal);
     }
 
     #[test]

@@ -22,6 +22,15 @@
 //!   execution: every image staged into its own activation slot, the
 //!   per-batch weight-pack preamble paid once, each stage stream
 //!   replayed per slot with rebased addresses.
+//! * **Cluster dispatch.**  The execution itself goes through a
+//!   [`super::cluster::QnnCluster`] shared by every worker: with
+//!   `ServeConfig::cores == 1` (the default) that is exactly the old
+//!   single-pool batched execution, bit-identical in logits *and*
+//!   cycles; with `--cores K` the frame is sharded across K per-core
+//!   machine pools executing host-parallel and merged back into
+//!   request order (DESIGN.md §Cluster).  Per-slot results are
+//!   batch-layout-invariant, so the K-core scatter is bit-identical to
+//!   the 1-core run of the same frame.
 //! * **Scatter.**  Per-image logits/cycles fan back out to each
 //!   request's completion channel; the [`Metrics`] sink records
 //!   per-request wall *and* simulated-cycle latency plus the executed
@@ -61,7 +70,14 @@
 //!   delay / corrupt logits) — the plan's global counter makes the
 //!   injected multiset a function of the seed alone, so chaos replays
 //!   bit-identically even though batch composition over a shared ring
-//!   is scheduling-dependent.
+//!   is scheduling-dependent.  `start_chaos_cores` adds a *second,
+//!   independent* plan consulted inside the cluster once per core
+//!   execution with the core id as the plan's worker index, so chaos
+//!   can target individual cores: a killed core fails only its shard's
+//!   riders (typed, failed over through the ring) and stays out of
+//!   every later shard map, while the worker and the surviving cores
+//!   keep serving.  Only when the *whole cluster* is dead does the
+//!   worker exit and the terminal drain answer the stragglers.
 //!
 //! Per-image results are bit-identical to unbatched inference (the
 //! batch determinism tests in `rust/tests/serve_batch.rs` pin logits
@@ -74,6 +90,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::cluster::{self, ClusterRun, CoreHealth, QnnCluster, ShardPolicy};
 use super::fault::{self, FaultAction, FaultPlan};
 use super::ring::{BatchRing, Pop, PushError};
 use super::{DrainStats, InferResult, Metrics, ServeError, Snapshot};
@@ -84,7 +101,6 @@ use crate::qnn::compiled::{argmax_i64, MAX_BATCH};
 use crate::qnn::schedule::QnnPrecision;
 use crate::qnn::QnnGraph;
 use crate::runtime::SimQnnModel;
-use crate::sim::MachinePool;
 
 /// How long one `pop` waits for riders before re-checking worker
 /// eligibility (breaker pauses, shutdown).
@@ -142,6 +158,15 @@ struct BatchShared {
     /// The lock-free front door: one ring of batch frames every
     /// producer claims slots in and every worker consumes from.
     ring: BatchRing<BatchRequest>,
+    /// The K-core execution layer every worker dispatches sealed
+    /// frames through (K == 1 is the plain batched path, bit-identical
+    /// to pre-cluster serving).  Core liveness is global: a core a
+    /// chaos plan kills is dead for every worker.
+    cluster: Arc<QnnCluster>,
+    /// Per-core fault plan, consulted inside the cluster once per core
+    /// execution (the worker-level `plan` is separate and still
+    /// consulted once per executed batch).
+    core_plan: Option<Arc<FaultPlan>>,
     metrics: Arc<Metrics>,
     /// Workers still running (the last one out closes + drains the
     /// ring so no rider is ever stranded).
@@ -189,12 +214,17 @@ pub struct BatchHealth {
     pub alive: usize,
     /// Breaker ejections across all shards.
     pub breaker_trips: u64,
+    /// Per-core liveness/counters of the execution cluster.
+    pub cores: Vec<CoreHealth>,
+    /// Cluster cores alive right now.
+    pub cores_alive: usize,
 }
 
 /// A running batched QNN inference server (simulator backend, no
 /// artifacts).  The network compiles once into the shared
 /// [`ProgramCache`] under its batched graph-level key; every worker
-/// shares the `Arc`'d model and owns a private [`MachinePool`].
+/// shares the `Arc`'d model through one [`QnnCluster`] whose per-core
+/// [`crate::sim::MachinePool`]s execute the dispatched frames.
 pub struct QnnBatchServer {
     shared: Arc<BatchShared>,
     pub metrics: Arc<Metrics>,
@@ -231,6 +261,26 @@ impl QnnBatchServer {
         cache: &ProgramCache,
         plan: Option<Arc<FaultPlan>>,
     ) -> Result<QnnBatchServer, ServeError> {
+        QnnBatchServer::start_chaos_cores(cfg, graph, precision, seed, serve, cache, plan, None)
+    }
+
+    /// [`QnnBatchServer::start_chaos`] plus a *per-core* fault plan:
+    /// the cluster consults `core_plan.next_for(core_id)` once per
+    /// core execution, so `FaultRule { worker: Some(core), .. }`
+    /// targets a specific core of the K-core cluster (DESIGN.md
+    /// §Cluster).  The worker-level `plan` is independent and still
+    /// consulted once per executed batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_chaos_cores(
+        cfg: ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+        serve: ServeConfig,
+        cache: &ProgramCache,
+        plan: Option<Arc<FaultPlan>>,
+        core_plan: Option<Arc<FaultPlan>>,
+    ) -> Result<QnnBatchServer, ServeError> {
         let batch = serve.batch.clamp(1, MAX_BATCH as usize) as u32;
         let model = Arc::new(
             SimQnnModel::compile_batched(&cfg, graph, precision, seed, cache, batch)
@@ -248,9 +298,18 @@ impl QnnBatchServer {
         let window = Duration::from_micros(serve.batch_window_us);
         let metrics = Arc::new(Metrics::default());
         let image_len = model.input_len();
+        let policy =
+            if serve.work_steal { ShardPolicy::WorkSteal } else { ShardPolicy::RoundRobin };
+        let qcluster = Arc::new(QnnCluster::new(
+            Arc::clone(&model),
+            serve.cores.clamp(1, cluster::MAX_CORES),
+            policy,
+        ));
         let shared = Arc::new(BatchShared {
             shards: (0..workers).map(|_| ShardState::new()).collect(),
             ring: BatchRing::new(frames, batch as usize, window),
+            cluster: qcluster,
+            core_plan,
             metrics: Arc::clone(&metrics),
             live: AtomicUsize::new(workers),
             stopping: AtomicBool::new(false),
@@ -261,13 +320,12 @@ impl QnnBatchServer {
         let mut handles = Vec::with_capacity(workers);
         for wid in 0..workers {
             let shared = Arc::clone(&shared);
-            let model = Arc::clone(&model);
             let plan = plan.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("sparq-batch-worker-{wid}"))
                     .spawn(move || {
-                        worker_loop(wid, &shared, &model, plan);
+                        worker_loop(wid, &shared, plan);
                         // Exit path (kill or shutdown): mark the worker
                         // dead; the LAST worker out closes the ring and
                         // answers every remaining rider typed — a
@@ -306,6 +364,16 @@ impl QnnBatchServer {
     /// Batch frames in the front-door ring.
     pub fn ring_frames(&self) -> usize {
         self.shared.ring.frames()
+    }
+
+    /// Configured cluster width (simulated cores per dispatched frame).
+    pub fn cores(&self) -> usize {
+        self.shared.cluster.cores()
+    }
+
+    /// The cluster's shard policy.
+    pub fn shard_policy(&self) -> ShardPolicy {
+        self.shared.cluster.policy()
     }
 
     /// Non-blocking submit with the config-level default deadline.
@@ -404,7 +472,9 @@ impl QnnBatchServer {
             .collect();
         let alive = shards.iter().filter(|s| s.alive).count();
         let breaker_trips = shards.iter().map(|s| s.trips).sum();
-        BatchHealth { shards, alive, breaker_trips }
+        let cores = self.shared.cluster.core_health();
+        let cores_alive = cores.iter().filter(|c| c.alive).count();
+        BatchHealth { shards, alive, breaker_trips, cores, cores_alive }
     }
 
     /// Drain the ring fully, stop the workers, return the final
@@ -502,13 +572,7 @@ fn fail_over(shared: &BatchShared, req: BatchRequest, err: &str) {
     }
 }
 
-fn worker_loop(
-    wid: usize,
-    shared: &Arc<BatchShared>,
-    model: &Arc<SimQnnModel>,
-    plan: Option<Arc<FaultPlan>>,
-) {
-    let pool = MachinePool::new();
+fn worker_loop(wid: usize, shared: &Arc<BatchShared>, plan: Option<Arc<FaultPlan>>) {
     let metrics = &shared.metrics;
     loop {
         // Breaker pause: an ejected worker stops consuming from the
@@ -569,7 +633,7 @@ fn worker_loop(
         let fill = reqs.len() as u32;
         // `submit` validated every image length, so images stage into
         // the arena exactly as sent — no truncation, no padding.
-        let result: Result<(Vec<(Vec<i64>, u64)>, u64), String> = match injected {
+        let result: Result<ClusterRun, String> = match injected {
             FaultAction::Error => Err(format!("chaos: injected error (shard {wid})")),
             FaultAction::SlowError(us) => {
                 // a failure that burns real time first: by the time
@@ -584,42 +648,93 @@ fn worker_loop(
                 // a poisoned batch must not kill the worker (same catch
                 // as the generic server); the images stay owned by the
                 // requests, so a failover retry re-executes the real
-                // request with zero restore bookkeeping
+                // request with zero restore bookkeeping.  The cluster
+                // catches per-core panics internally — this outer catch
+                // guards the worker-level injected panic and the
+                // dispatch path itself.
                 std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     if injected == FaultAction::Panic {
                         panic!("chaos: injected panic (shard {wid})");
                     }
-                    model.infer_batch_refs(&pool, &inputs)
+                    shared.cluster.infer_frame_chaos(&inputs, shared.core_plan.as_deref())
                 }))
                 .map_err(|p| super::panic_message(p.as_ref()))
                 .and_then(|r| r.map_err(|e| e.to_string()))
             }
         };
         match result {
-            Ok((mut per_image, _batch_cycles)) => {
+            Ok(mut run) => {
                 if injected == FaultAction::CorruptLogits {
-                    for (logits, _) in per_image.iter_mut() {
-                        if let Some(first) = logits.first_mut() {
-                            *first = i64::MIN;
+                    for res in run.results.iter_mut() {
+                        if let Ok((logits, _)) = res {
+                            if let Some(first) = logits.first_mut() {
+                                *first = i64::MIN;
+                            }
                         }
                     }
                 }
-                // a success heals the breaker
-                st.consecutive.store(0, Ordering::SeqCst);
-                *st.ejected_until.lock().unwrap() = None;
-                let mut riders = Vec::with_capacity(reqs.len());
-                for (r, (logits, slot_cycles)) in reqs.into_iter().zip(per_image) {
-                    let class = argmax_i64(&logits);
-                    let lat = r.enqueued.elapsed().as_micros() as u64;
-                    riders.push((lat, slot_cycles));
-                    let _ = r.resp.send(Ok(InferResult {
-                        logits: logits.iter().map(|&v| v as f32).collect(),
-                        class,
-                        sim_cycles: slot_cycles,
-                        batch: fill,
-                    }));
+                // Breaker bookkeeping is per *frame*: a fully clean
+                // run heals this worker, any failed core counts one
+                // failed batch against it (the core failures
+                // themselves are tracked in the cluster and in
+                // `Metrics::core_failures`).
+                if run.failed_cores.is_empty() {
+                    st.consecutive.store(0, Ordering::SeqCst);
+                    *st.ejected_until.lock().unwrap() = None;
+                } else {
+                    metrics.record_core_failures(run.failed_cores.len() as u64);
+                    st.errors.fetch_add(1, Ordering::SeqCst);
+                    let consecutive = st.consecutive.fetch_add(1, Ordering::SeqCst) + 1;
+                    if shared.breaker_threshold > 0 && consecutive >= shared.breaker_threshold
+                    {
+                        *st.ejected_until.lock().unwrap() =
+                            Some(Instant::now() + shared.probation);
+                        st.trips.fetch_add(1, Ordering::SeqCst);
+                        metrics.record_breaker_trip();
+                    }
                 }
-                metrics.record_batch(&riders, fill);
+                // Per-request scatter: successful shards answer their
+                // riders exactly as before; a failed core's riders
+                // fail over through the ring (once) or reach the
+                // client typed.
+                let mut riders = Vec::with_capacity(reqs.len());
+                let mut cluster_killed = false;
+                for (mut r, res) in reqs.into_iter().zip(run.results) {
+                    match res {
+                        Ok((logits, slot_cycles)) => {
+                            let class = argmax_i64(&logits);
+                            let lat = r.enqueued.elapsed().as_micros() as u64;
+                            riders.push((lat, slot_cycles));
+                            let _ = r.resp.send(Ok(InferResult {
+                                logits: logits.iter().map(|&v| v as f32).collect(),
+                                class,
+                                sim_cycles: slot_cycles,
+                                batch: fill,
+                            }));
+                        }
+                        Err(e) => {
+                            cluster_killed |= fault::is_kill(&e);
+                            if r.attempts == 0 {
+                                r.attempts = 1;
+                                fail_over(shared, r, &e);
+                            } else {
+                                metrics.record_errors(1);
+                                let _ = r.resp.send(Err(ServeError::Worker(e)));
+                            }
+                        }
+                    }
+                }
+                if !riders.is_empty() {
+                    metrics.record_batch(&riders, fill);
+                }
+                // A killed core only stops THIS core; the worker keeps
+                // serving on the survivors.  Once the last core is
+                // dead the cluster can never serve again, so the
+                // worker exits (the spawn closure marks it dead and
+                // the last worker out terminally drains the ring).
+                if cluster_killed && shared.cluster.live_cores() == 0 {
+                    return;
+                }
             }
             Err(e) => {
                 st.errors.fetch_add(1, Ordering::SeqCst);
@@ -777,6 +892,45 @@ mod tests {
         assert_eq!(h.breaker_trips, 0);
         assert!(h.shards.iter().all(|s| s.alive && !s.ejected && s.errors == 0));
         server.shutdown();
+    }
+
+    #[test]
+    fn cluster_cores_config_reaches_the_server() {
+        let cache = ProgramCache::new();
+        let serve = ServeConfig {
+            workers: 1,
+            batch: 4,
+            batch_window_us: 200,
+            cores: 3,
+            ..ServeConfig::default()
+        };
+        let server = QnnBatchServer::start(
+            ProcessorConfig::sparq(),
+            &QnnGraph::sparq_cnn(),
+            w2a2(),
+            7,
+            serve,
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(server.cores(), 3);
+        assert_eq!(server.shard_policy(), ShardPolicy::RoundRobin);
+        let h = server.health();
+        assert_eq!(h.cores_alive, 3);
+        assert!(h.cores.iter().all(|c| c.alive && c.failures == 0));
+        let mut pending = Vec::new();
+        for i in 0..6usize {
+            let f: Vec<f32> =
+                (0..server.image_len()).map(|j| ((i + j) % 4) as f32).collect();
+            pending.push(server.submit(f).expect("submit"));
+        }
+        for rx in pending {
+            rx.recv().unwrap().expect("sharded infer");
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 6);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.core_failures, 0);
     }
 
     #[test]

@@ -1,0 +1,517 @@
+//! Multi-core cluster scale-out (DESIGN.md §Cluster): one sealed batch
+//! frame sharded across K simulated Sparq cores executing host-parallel.
+//!
+//! The paper evaluates Sparq as a single 4-lane core; serving "millions
+//! of users" takes many of them.  [`QnnCluster`] is that layer: it owns
+//! K per-core [`MachinePool`]s around one shared `Arc`'d batch-compiled
+//! model (per-slot results are batch-layout-invariant, so every core
+//! can execute any shard of the frame against the same compiled
+//! program), fans a frame's requests across the live cores via
+//! `std::thread::scope`, and merges the results into request order plus
+//! one deterministic cycles account.
+//!
+//! **Shard policy.**  [`ShardPolicy::RoundRobin`] (the default) assigns
+//! request `i` of the frame to live core `i mod K` — a pure function of
+//! the request index, so the shard map, the per-core cycle loads, and
+//! the merged makespan are all bit-reproducible.
+//! [`ShardPolicy::WorkSteal`] (behind `ServeConfig::work_steal`) lets
+//! cores grab fixed-size index chunks from a shared atomic cursor —
+//! useful when per-request cost is uneven (e.g. mixed-precision
+//! traffic), at the price of a scheduling-dependent chunk→core map.
+//! Both policies produce **bit-identical per-request outputs** (logits
+//! and per-slot cycles do not depend on which core ran the slot); only
+//! the *account* of a work-stealing run depends on the race.
+//!
+//! **Merged cycles account.**  K cores run in parallel, so the cluster
+//! finishes a frame when its busiest core does:
+//!
+//! ```text
+//! makespan = max over cores of (per-core batch cycles)
+//!          + shard_merge_overhead(fan)
+//! ```
+//!
+//! where the fan is the number of live cores the frame was sharded
+//! across and [`shard_merge_overhead`] is a fixed linear model
+//! ([`SHARD_CYCLES_PER_CORE`] + [`MERGE_CYCLES_PER_CORE`] per core,
+//! zero at fan 1 so a 1-core cluster is bit-identical — cycles
+//! included — to a plain batched execution).  Every term is
+//! deterministic simulated arithmetic, so cluster numbers stay
+//! `sparq bench-check`-gateable at tolerance 0 (BENCH_cluster.json).
+//!
+//! **Robustness per core** (the PR-7 contract): a core execution that
+//! fails — injected via a per-core [`FaultPlan`] consulted once per
+//! core execution with the *core id* as the plan's worker index, or a
+//! real executor panic — fails only *its shard's* requests, each with a
+//! typed error string; the other cores' riders scatter normally.  A
+//! killed core is marked dead and excluded from every later shard map
+//! (its riders fail over through the serving ring exactly like a
+//! killed worker's), and a cluster whose last core died answers every
+//! request with the kill sentinel so the serving layer can terminally
+//! drain instead of hanging clients.  Under round-robin with a single
+//! consumer the per-core local call indices are deterministic, so
+//! per-core chaos replays bit-identically.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::fault::{self, FaultAction, FaultPlan};
+use crate::arch::ProcessorConfig;
+use crate::kernels::ProgramCache;
+use crate::qnn::schedule::QnnPrecision;
+use crate::qnn::QnnGraph;
+use crate::runtime::SimQnnModel;
+use crate::sim::{MachinePool, SimError};
+
+/// Hard cap on cluster width — mirrors `fault::MAX_WORKERS` so a
+/// per-core [`FaultRule`](super::FaultRule) can always address every
+/// core by id.
+pub const MAX_CORES: usize = 64;
+
+/// Fixed cycles to scatter one core's shard descriptor (slot indices +
+/// arena base) from the frame dispatcher to a core.
+pub const SHARD_CYCLES_PER_CORE: u64 = 48;
+
+/// Fixed cycles to gather one core's results back into request order
+/// at the merge barrier.
+pub const MERGE_CYCLES_PER_CORE: u64 = 16;
+
+/// The fixed shard/merge overhead model: distributing a frame across
+/// `fan` cores and merging the results costs `fan * (SHARD + MERGE)`
+/// cycles, and a fan of one costs nothing — a 1-core cluster is
+/// bit-identical (cycles included) to a plain batched execution.
+pub fn shard_merge_overhead(fan: usize) -> u64 {
+    if fan <= 1 {
+        0
+    } else {
+        fan as u64 * (SHARD_CYCLES_PER_CORE + MERGE_CYCLES_PER_CORE)
+    }
+}
+
+/// How a sealed frame's requests are assigned to live cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Request `i` goes to live core `i mod K`: a pure function of the
+    /// request index, fully deterministic (the gated default).
+    RoundRobin,
+    /// Cores grab fixed-size index chunks from a shared atomic cursor;
+    /// the chunk→core map is a scheduling race, but per-request
+    /// outputs are bit-identical to round-robin's (asserted in
+    /// `rust/tests/cluster_determinism.rs`).
+    WorkSteal,
+}
+
+impl ShardPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardPolicy::RoundRobin => "round-robin",
+            ShardPolicy::WorkSteal => "work-steal",
+        }
+    }
+}
+
+/// Per-request cluster outcome: `(logits, slot_cycles)` or a typed
+/// error string (kill-sentinel-bearing when the core was killed).
+pub type CoreResult = Result<(Vec<i64>, u64), String>;
+
+/// One core's slice of a frame's merged cycles account.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreAccount {
+    pub core: usize,
+    /// Requests this core executed (or failed) this frame.
+    pub requests: u32,
+    /// Batched executions this core ran this frame (1 under
+    /// round-robin when it had work; possibly more under stealing).
+    pub executions: u32,
+    /// Total simulated cycles this core spent on the frame (per-batch
+    /// preamble included once per execution; 0 if idle or failed —
+    /// failed executions bill no deterministic cycles).
+    pub cycles: u64,
+}
+
+/// The merged deterministic cycles account of one frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterAccount {
+    /// One entry per configured core (idle cores appear zeroed).
+    pub per_core: Vec<CoreAccount>,
+    /// Live cores the frame was sharded across.
+    pub sharded_across: usize,
+    /// `shard_merge_overhead(sharded_across)`.
+    pub overhead_cycles: u64,
+    /// `max over cores of per-core cycles + overhead_cycles` — when
+    /// the cluster is done with the frame.
+    pub makespan_cycles: u64,
+}
+
+/// What [`QnnCluster::infer_frame`] returns: per-request results in
+/// the frame's original request order plus the merged account.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterRun {
+    /// One entry per input, in request order.
+    pub results: Vec<CoreResult>,
+    pub account: ClusterAccount,
+    /// Cores whose execution(s) failed this frame, ascending.
+    pub failed_cores: Vec<usize>,
+}
+
+/// Point-in-time liveness/counters of one cluster core.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreHealth {
+    pub core: usize,
+    pub alive: bool,
+    /// Batched executions this core has run, total.
+    pub executions: u64,
+    /// Failed executions on this core, total.
+    pub failures: u64,
+}
+
+/// One simulated core: a private machine pool (no cross-core lock
+/// traffic on the arena path) plus liveness and counters.
+struct CoreState {
+    pool: MachinePool,
+    alive: AtomicBool,
+    executions: AtomicU64,
+    failures: AtomicU64,
+}
+
+impl CoreState {
+    fn new() -> CoreState {
+        CoreState {
+            pool: MachinePool::new(),
+            alive: AtomicBool::new(true),
+            executions: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+        }
+    }
+}
+
+/// What one core thread brings back from a frame.
+struct CoreOut {
+    core: usize,
+    /// `(original request index, result)` pairs.
+    results: Vec<(usize, CoreResult)>,
+    cycles: u64,
+    executions: u32,
+    requests: u32,
+    failed: bool,
+}
+
+/// A K-core execution cluster around one batch-compiled QNN: shard a
+/// sealed frame across the live cores, execute host-parallel, merge
+/// deterministically.  See the module docs for the model.
+pub struct QnnCluster {
+    model: Arc<SimQnnModel>,
+    cores: Vec<CoreState>,
+    policy: ShardPolicy,
+}
+
+impl QnnCluster {
+    /// Wrap an already-compiled batched model in a `cores`-wide
+    /// cluster (clamped to `1..=`[`MAX_CORES`]).  Cheap: the model is
+    /// shared, only the per-core pools are allocated.
+    pub fn new(model: Arc<SimQnnModel>, cores: usize, policy: ShardPolicy) -> QnnCluster {
+        let cores = cores.clamp(1, MAX_CORES);
+        QnnCluster { model, cores: (0..cores).map(|_| CoreState::new()).collect(), policy }
+    }
+
+    /// Compile the batched network (or fetch it from `cache`) and wrap
+    /// it in a cluster.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile(
+        cfg: &ProcessorConfig,
+        graph: &QnnGraph,
+        precision: QnnPrecision,
+        seed: u64,
+        cache: &ProgramCache,
+        batch: u32,
+        cores: usize,
+        policy: ShardPolicy,
+    ) -> Result<QnnCluster, SimError> {
+        let model =
+            Arc::new(SimQnnModel::compile_batched(cfg, graph, precision, seed, cache, batch)?);
+        Ok(QnnCluster::new(model, cores, policy))
+    }
+
+    /// Configured cluster width.
+    pub fn cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Cores alive right now.
+    pub fn live_cores(&self) -> usize {
+        self.cores.iter().filter(|c| c.alive.load(Ordering::SeqCst)).count()
+    }
+
+    pub fn policy(&self) -> ShardPolicy {
+        self.policy
+    }
+
+    /// The shared compiled model (its `batch()` bounds the frame size).
+    pub fn model(&self) -> &Arc<SimQnnModel> {
+        &self.model
+    }
+
+    /// Per-core liveness and counters.
+    pub fn core_health(&self) -> Vec<CoreHealth> {
+        self.cores
+            .iter()
+            .enumerate()
+            .map(|(i, c)| CoreHealth {
+                core: i,
+                alive: c.alive.load(Ordering::SeqCst),
+                executions: c.executions.load(Ordering::SeqCst),
+                failures: c.failures.load(Ordering::SeqCst),
+            })
+            .collect()
+    }
+
+    /// Execute one frame clean (no fault plan).
+    pub fn infer_frame(&self, inputs: &[&[f32]]) -> Result<ClusterRun, SimError> {
+        self.infer_frame_chaos(inputs, None)
+    }
+
+    /// Execute one frame with an optional per-core fault plan: each
+    /// core execution consults `plan.next_for(core_id)` exactly once,
+    /// so `FaultRule { worker: Some(core), .. }` targets a specific
+    /// core of the cluster (DESIGN.md §Cluster).
+    ///
+    /// Shards `inputs` across the live cores under the cluster's
+    /// policy, executes host-parallel, and merges into request order.
+    /// A frame-level `Err` only occurs for an invalid frame (empty or
+    /// larger than the compiled batch); per-core failures come back as
+    /// typed per-request error strings in [`ClusterRun::results`].
+    pub fn infer_frame_chaos(
+        &self,
+        inputs: &[&[f32]],
+        plan: Option<&FaultPlan>,
+    ) -> Result<ClusterRun, SimError> {
+        if inputs.is_empty() || inputs.len() > self.model.batch() {
+            // surface the model's own typed frame-validation error
+            match self.model.infer_batch_refs(&self.cores[0].pool, inputs) {
+                Err(e) => return Err(e),
+                Ok(_) => unreachable!("an invalid frame must fail model validation"),
+            }
+        }
+        let n = inputs.len();
+        let live: Vec<usize> = (0..self.cores.len())
+            .filter(|&c| self.cores[c].alive.load(Ordering::SeqCst))
+            .collect();
+        if live.is_empty() {
+            // a fully dead cluster cannot serve: every request gets the
+            // kill sentinel so the serving layer terminally drains
+            // instead of hanging clients
+            let msg = format!("{} (cluster: no live cores)", fault::KILL_SENTINEL);
+            return Ok(ClusterRun {
+                results: (0..n).map(|_| Err(msg.clone())).collect(),
+                account: ClusterAccount {
+                    per_core: (0..self.cores.len())
+                        .map(|core| CoreAccount { core, requests: 0, executions: 0, cycles: 0 })
+                        .collect(),
+                    sharded_across: 0,
+                    overhead_cycles: 0,
+                    makespan_cycles: 0,
+                },
+                failed_cores: Vec::new(),
+            });
+        }
+        let outs: Vec<CoreOut> = match self.policy {
+            ShardPolicy::RoundRobin => {
+                // request i -> live core i mod K: the shard map is a
+                // pure function of the request index
+                let mut shards: Vec<Vec<usize>> = vec![Vec::new(); live.len()];
+                for i in 0..n {
+                    shards[i % live.len()].push(i);
+                }
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = live
+                        .iter()
+                        .zip(&shards)
+                        .filter(|(_, idxs)| !idxs.is_empty())
+                        .map(|(&core, idxs)| {
+                            s.spawn(move || {
+                                let (results, cycles, failed) =
+                                    self.run_shard(core, idxs, inputs, plan);
+                                CoreOut {
+                                    core,
+                                    results,
+                                    cycles,
+                                    executions: 1,
+                                    requests: idxs.len() as u32,
+                                    failed,
+                                }
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().expect("cluster core panicked")).collect()
+                })
+            }
+            ShardPolicy::WorkSteal => {
+                // cores race for fixed-size chunks of the index space;
+                // a slow core simply takes fewer chunks
+                let chunk = n.div_ceil(live.len() * 2).max(1);
+                let cursor = AtomicUsize::new(0);
+                let cursor = &cursor;
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = live
+                        .iter()
+                        .map(|&core| {
+                            s.spawn(move || {
+                                let mut out = CoreOut {
+                                    core,
+                                    results: Vec::new(),
+                                    cycles: 0,
+                                    executions: 0,
+                                    requests: 0,
+                                    failed: false,
+                                };
+                                loop {
+                                    let start = cursor.fetch_add(chunk, Ordering::SeqCst);
+                                    if start >= n {
+                                        break;
+                                    }
+                                    let idxs: Vec<usize> =
+                                        (start..(start + chunk).min(n)).collect();
+                                    let (results, cycles, failed) =
+                                        self.run_shard(core, &idxs, inputs, plan);
+                                    out.results.extend(results);
+                                    out.cycles += cycles;
+                                    out.executions += 1;
+                                    out.requests += idxs.len() as u32;
+                                    out.failed |= failed;
+                                }
+                                out
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().expect("cluster core panicked")).collect()
+                })
+            }
+        };
+
+        // merge: results back into request order, cycles into the
+        // max-over-cores makespan
+        let mut merged: Vec<Option<CoreResult>> = vec![None; n];
+        let mut per_core: Vec<CoreAccount> = (0..self.cores.len())
+            .map(|core| CoreAccount { core, requests: 0, executions: 0, cycles: 0 })
+            .collect();
+        let mut failed_cores = Vec::new();
+        for out in outs {
+            per_core[out.core] = CoreAccount {
+                core: out.core,
+                requests: out.requests,
+                executions: out.executions,
+                cycles: out.cycles,
+            };
+            if out.failed {
+                failed_cores.push(out.core);
+            }
+            for (i, r) in out.results {
+                merged[i] = Some(r);
+            }
+        }
+        failed_cores.sort_unstable();
+        let results: Vec<CoreResult> =
+            merged.into_iter().map(|r| r.expect("every request must be assigned a core")).collect();
+        let busiest = per_core.iter().map(|c| c.cycles).max().unwrap_or(0);
+        let overhead = shard_merge_overhead(live.len());
+        Ok(ClusterRun {
+            results,
+            account: ClusterAccount {
+                per_core,
+                sharded_across: live.len(),
+                overhead_cycles: overhead,
+                makespan_cycles: busiest + overhead,
+            },
+            failed_cores,
+        })
+    }
+
+    /// One batched execution of `idxs`' inputs on `core`.  Returns the
+    /// per-request results, the execution's total cycles (0 on
+    /// failure), and whether it failed.
+    fn run_shard(
+        &self,
+        core: usize,
+        idxs: &[usize],
+        inputs: &[&[f32]],
+        plan: Option<&FaultPlan>,
+    ) -> (Vec<(usize, CoreResult)>, u64, bool) {
+        let st = &self.cores[core];
+        st.executions.fetch_add(1, Ordering::SeqCst);
+        // one fault-plan consult per core execution, keyed by core id
+        let injected = plan.map(|p| p.next_for(core)).unwrap_or(FaultAction::None);
+        if let FaultAction::Delay(us) = injected {
+            std::thread::sleep(Duration::from_micros(us));
+        }
+        let fail = |msg: String| {
+            st.failures.fetch_add(1, Ordering::SeqCst);
+            let results: Vec<(usize, CoreResult)> =
+                idxs.iter().map(|&i| (i, Err(msg.clone()))).collect();
+            (results, 0u64, true)
+        };
+        match injected {
+            FaultAction::Error => fail(format!("chaos: injected error (core {core})")),
+            FaultAction::SlowError(us) => {
+                std::thread::sleep(Duration::from_micros(us));
+                fail(format!("chaos: injected slow error (core {core})"))
+            }
+            FaultAction::Kill => {
+                // the core is dead from here on: later frames shard
+                // around it, and its riders fail over typed
+                st.alive.store(false, Ordering::SeqCst);
+                fail(format!("{} (core {core})", fault::KILL_SENTINEL))
+            }
+            _ => {
+                let shard: Vec<&[f32]> = idxs.iter().map(|&i| inputs[i]).collect();
+                let exec = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if injected == FaultAction::Panic {
+                        panic!("chaos: injected panic (core {core})");
+                    }
+                    self.model.infer_batch_refs(&st.pool, &shard)
+                }))
+                .map_err(|p| super::panic_message(p.as_ref()))
+                .and_then(|r| r.map_err(|e| e.to_string()));
+                match exec {
+                    Ok((per_image, total)) => {
+                        let mut results = Vec::with_capacity(idxs.len());
+                        for (&i, (mut logits, slot_cycles)) in idxs.iter().zip(per_image) {
+                            if injected == FaultAction::CorruptLogits {
+                                if let Some(first) = logits.first_mut() {
+                                    *first = i64::MIN;
+                                }
+                            }
+                            results.push((i, Ok((logits, slot_cycles))));
+                        }
+                        (results, total, false)
+                    }
+                    Err(e) => fail(format!("cluster core {core}: {e}")),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_model_is_zero_at_fan_one_and_linear_after() {
+        assert_eq!(shard_merge_overhead(0), 0);
+        assert_eq!(shard_merge_overhead(1), 0);
+        let per_core = SHARD_CYCLES_PER_CORE + MERGE_CYCLES_PER_CORE;
+        assert_eq!(shard_merge_overhead(2), 2 * per_core);
+        assert_eq!(shard_merge_overhead(8), 8 * per_core);
+        // strictly increasing in the fan past 1 (the monotonicity the
+        // capacity grid's strict-increase assertion leans on)
+        for fan in 2..MAX_CORES {
+            assert!(shard_merge_overhead(fan + 1) > shard_merge_overhead(fan));
+        }
+    }
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(ShardPolicy::RoundRobin.label(), "round-robin");
+        assert_eq!(ShardPolicy::WorkSteal.label(), "work-steal");
+    }
+}

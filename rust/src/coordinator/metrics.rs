@@ -124,6 +124,9 @@ struct Inner {
     /// Requests refused (at submit or by the terminal queue drain)
     /// because the worker pool was empty with no restart budget left.
     no_workers: u64,
+    /// Failed cluster-core executions (a frame whose shard failed on
+    /// `n` cores counts `n`; see `coordinator::cluster`).
+    core_failures: u64,
     sim_cycles: u128,
 }
 
@@ -148,6 +151,7 @@ impl Default for Inner {
             breaker_trips: 0,
             drain_shed: 0,
             no_workers: 0,
+            core_failures: 0,
             sim_cycles: 0,
         }
     }
@@ -241,6 +245,13 @@ impl Metrics {
         self.inner.lock().unwrap().no_workers += n;
     }
 
+    /// `n` cluster-core executions failed while serving one frame
+    /// (kill/error/panic on a core; the frame's other shards still
+    /// scattered normally).
+    pub fn record_core_failures(&self, n: u64) {
+        self.inner.lock().unwrap().core_failures += n;
+    }
+
     /// A request entered the submission ring.
     pub fn queue_inc(&self) {
         let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
@@ -277,6 +288,7 @@ impl Metrics {
             breaker_trips: g.breaker_trips,
             drain_shed: g.drain_shed,
             no_workers: g.no_workers,
+            core_failures: g.core_failures,
             p50_us: pct(&lat, 0.50),
             p95_us: pct(&lat, 0.95),
             p99_us: pct(&lat, 0.99),
@@ -345,6 +357,8 @@ pub struct Snapshot {
     /// Requests refused because the worker pool was empty with no
     /// restart budget left.
     pub no_workers: u64,
+    /// Failed cluster-core executions across all served frames.
+    pub core_failures: u64,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
@@ -449,6 +463,7 @@ mod tests {
         m.record_breaker_trip();
         m.record_drain_shed(5);
         m.record_no_workers(4);
+        m.record_core_failures(2);
         let s = m.snapshot();
         assert_eq!(s.deadline_shed, 3);
         assert_eq!(s.bad_input, 2);
@@ -456,6 +471,7 @@ mod tests {
         assert_eq!(s.breaker_trips, 1);
         assert_eq!(s.drain_shed, 5);
         assert_eq!(s.no_workers, 4);
+        assert_eq!(s.core_failures, 2);
         // None of these count as completions or worker errors.
         assert_eq!(s.completed, 0);
         assert_eq!(s.errors, 0);

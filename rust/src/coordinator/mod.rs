@@ -16,7 +16,12 @@
 //!   place, frames seal when they fill or their window expires, and
 //!   any worker dispatches a sealed frame as ONE batched execution
 //!   with per-request scatter — what `sparq serve --batch` and the
-//!   `serve_throughput` bench run.
+//!   `serve_throughput` bench run.  With `--cores K` the dispatched
+//!   frame is *sharded across a K-core cluster*
+//!   ([`cluster::QnnCluster`], DESIGN.md §Cluster): per-core machine
+//!   pools execute shards host-parallel and the results merge back
+//!   into request order with a deterministic max-over-cores makespan
+//!   account, so scale-out numbers stay cycle-gateable.
 //!
 //! Design notes:
 //! * PJRT handles are not `Send`, so each generic-path worker thread
@@ -52,7 +57,11 @@
 //! * The batched path adds failover (one retry back through the ring)
 //!   and a circuit breaker whose ejected workers pause consuming while
 //!   a healthy peer covers, with probation re-admit
-//!   (`batch::QnnBatchServer`).
+//!   (`batch::QnnBatchServer`).  The same contract holds per *cluster
+//!   core*: a killed core fails only its shard's riders (typed, failed
+//!   over through the ring), the dead core is excluded from later
+//!   shard maps, and per-core fault targeting replays deterministically
+//!   ([`cluster`]).
 //! * `shutdown_with_deadline` drains gracefully: new work is rejected,
 //!   queued work finishes until the deadline and is shed typed after
 //!   it, and [`metrics::DrainStats`] reports what happened.
@@ -60,11 +69,16 @@
 //!   fault-injection harness in [`fault`] (`rust/tests/serve_faults.rs`).
 
 pub mod batch;
+pub mod cluster;
 pub mod fault;
 pub mod metrics;
 pub mod ring;
 
 pub use batch::QnnBatchServer;
+pub use cluster::{
+    shard_merge_overhead, ClusterAccount, ClusterRun, CoreAccount, CoreHealth, QnnCluster,
+    ShardPolicy,
+};
 pub use fault::{chaos_factory, CallSel, ChaosSpec, FaultAction, FaultPlan, FaultRule};
 pub use metrics::{DrainStats, Metrics, Snapshot};
 

@@ -66,7 +66,7 @@ COMMANDS
                cached-program simulator backend without them) [--precision wXaY|mixed] [--batch B]
                (--batch B serves through the batch-B compiled arena behind a    [--topology T] [--ring-frames R]
                lock-free slot-reservation ring: producers CAS into the open     [--deadline-us D] [--chaos-seed S]
-               batch frame, frames seal on fill or window expiry, any worker
+               batch frame, frames seal on fill or window expiry, any worker    [--cores K] [--work-steal]
                dispatches — fill/seal/queue metrics; --ring-frames R sizes the
                ring (0 derives it from queue_depth / batch);
                --topology chain|resnetlike|mobilenetlike|denselike picks the
@@ -74,7 +74,12 @@ COMMANDS
                one-program liveness-planned arena as the chain;
                --deadline-us D sheds requests older than D typed, --chaos-seed S
                injects a replayable storm of worker faults on the simulator
-               backend to demo supervision/failover — see DESIGN.md §Robustness)
+               backend to demo supervision/failover — see DESIGN.md §Robustness;
+               --cores K shards each dispatched batch frame across a K-core
+               cluster executing host-parallel (deterministic max-over-cores
+               makespan; with --chaos-seed a second derived storm targets
+               individual cores), --work-steal swaps the round-robin shard
+               policy for work stealing — see DESIGN.md §Cluster)
   bench-check  compare BENCH_*.json against the committed     [--baselines DIR] [--bless]
                cycle baselines (tolerance 0 on cycle fields; CI gate)
   isa          vmacsr encoding explorer                      [hex words...]
@@ -245,18 +250,39 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
     if let Some(r) = opt(rest, "--ring-frames") {
         serve_cfg.ring_frames = r.parse().map_err(|_| "bad --ring-frames value")?;
     }
+    if let Some(c) = opt(rest, "--cores") {
+        serve_cfg.cores = c.parse().map_err(|_| "bad --cores value")?;
+        if serve_cfg.cores == 0 {
+            return Err("--cores must be at least 1".into());
+        }
+    }
+    if flag(rest, "--work-steal") {
+        serve_cfg.work_steal = true;
+    }
     // A seeded storm of injected worker faults (kills, panics, errors,
     // delays) — the same seed replays the same fault sequence, so the
     // demo doubles as a reproducible supervision/failover exercise.
-    let plan: Option<Arc<sparq::coordinator::FaultPlan>> = match opt(rest, "--chaos-seed") {
+    // With a multi-core cluster, a second storm derived from the same
+    // seed targets individual cores (batched path only).
+    let (plan, core_plan): (
+        Option<Arc<sparq::coordinator::FaultPlan>>,
+        Option<Arc<sparq::coordinator::FaultPlan>>,
+    ) = match opt(rest, "--chaos-seed") {
         Some(s) => {
             let chaos_seed: u64 = s.parse().map_err(|_| "bad --chaos-seed value")?;
-            Some(Arc::new(sparq::coordinator::FaultPlan::seeded(
+            let worker = Some(Arc::new(sparq::coordinator::FaultPlan::seeded(
                 chaos_seed,
                 sparq::coordinator::ChaosSpec::storm(),
-            )))
+            )));
+            let core = (serve_cfg.cores > 1).then(|| {
+                Arc::new(sparq::coordinator::FaultPlan::seeded(
+                    chaos_seed ^ 0xC0DE_C0DE_C0DE_C0DE,
+                    sparq::coordinator::ChaosSpec::storm(),
+                ))
+            });
+            (worker, core)
         }
-        None => None,
+        None => (None, None),
     };
     // "mixed" = the W4A4 stem-adjacent / W2A2 deep configuration: the
     // per-layer overrides flow through the same autotuned dataflow
@@ -304,7 +330,7 @@ fn cmd_serve_sim(rest: &[String]) -> Result<(), String> {
 
     if batched {
         return cmd_serve_sim_batched(
-            &cfg, &graph, precision, seed, serve_cfg, &cache, n, prec_arg, topo, plan,
+            &cfg, &graph, precision, seed, serve_cfg, &cache, n, prec_arg, topo, plan, core_plan,
         );
     }
 
@@ -401,8 +427,9 @@ fn cmd_serve_sim_batched(
     prec_arg: &str,
     topo: &str,
     plan: Option<std::sync::Arc<sparq::coordinator::FaultPlan>>,
+    core_plan: Option<std::sync::Arc<sparq::coordinator::FaultPlan>>,
 ) -> Result<(), String> {
-    let server = sparq::coordinator::QnnBatchServer::start_chaos(
+    let server = sparq::coordinator::QnnBatchServer::start_chaos_cores(
         cfg.clone(),
         graph,
         precision,
@@ -410,16 +437,20 @@ fn cmd_serve_sim_batched(
         serve_cfg,
         cache,
         plan,
+        core_plan,
     )
     .map_err(|e| e.to_string())?;
     println!(
         "serving the {topo} network at {} through the batch-{} arena \
-         ({} worker(s) on a {}-frame ring, window {} us), {n} requests...",
+         ({} worker(s) on a {}-frame ring, window {} us; {}-core cluster, {} sharding), \
+         {n} requests...",
         if prec_arg == "mixed" { "mixed W4A4-stem/W2A2".to_string() } else { precision.label() },
         server.batch(),
         serve_cfg.workers.max(1),
         server.ring_frames(),
         serve_cfg.batch_window_us,
+        server.cores(),
+        server.shard_policy().label(),
     );
     let image_len = server.image_len();
     let mut pending = Vec::new();
@@ -445,6 +476,7 @@ fn cmd_serve_sim_batched(
         served += matches!(rx.recv(), Ok(Ok(_))) as usize;
     }
     let health = server.health();
+    let policy_label = server.shard_policy().label();
     let snap = server.shutdown();
     let cs = cache.stats();
     let fills: Vec<String> =
@@ -478,6 +510,13 @@ fn cmd_serve_sim_batched(
         snap.deadline_shed,
         snap.bad_input,
         snap.no_workers,
+    );
+    println!(
+        "  cluster: {}/{} core(s) up ({} sharding), {} core failure(s)",
+        health.cores_alive,
+        health.cores.len(),
+        policy_label,
+        snap.core_failures,
     );
     Ok(())
 }

@@ -1,6 +1,16 @@
 //! Experiment drivers + paper-style renderers: every table and figure
 //! of the paper regenerates through this module (the CLI subcommands
 //! and the cargo benches are thin wrappers around these functions).
+//!
+//! Beyond the paper's figures, the module carries the scale-out
+//! capacity planning sweep: [`capacity_grid`] runs the full
+//! (cores × batch × precision) grid through the K-core cluster layer
+//! (`coordinator::cluster`, DESIGN.md §Cluster) and renders it as one
+//! capacity table ([`render_capacity`]) — the single-core
+//! [`throughput_sweep`] is its K=1, W2A2 column.  Every cycle number
+//! in the grid is deterministic simulated arithmetic (max-over-cores
+//! makespan + a fixed shard/merge overhead), so the grid is gated at
+//! tolerance 0 by `rust/benches/cluster.rs` → BENCH_cluster.json.
 
 use crate::arch::{ProcessorConfig, Unit};
 use crate::kernels::{
@@ -473,65 +483,198 @@ pub struct ThroughputRow {
 /// so the B=1..B=8 ordering is exact and CI-gateable; wall img/s is
 /// measured alongside for the host-side picture.  Warm reruns are pure
 /// graph-level cache hits — nothing recompiles, nothing re-tunes.
+///
+/// Since the cluster layer landed this is the K=1, W2A2 column of
+/// [`capacity_grid`]: a 1-core cluster pays zero shard/merge overhead,
+/// so the delegation is value-identical to the original single-model
+/// sweep.
 pub fn throughput_sweep(
     ctx: &SweepCtx,
     batches: &[u32],
     images: usize,
 ) -> Result<Vec<ThroughputRow>, SimError> {
+    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+    let rows = capacity_grid(ctx, &[1], batches, &[("w2a2", prec)], images)?;
+    Ok(rows
+        .into_iter()
+        .map(|r| ThroughputRow {
+            batch: r.batch,
+            slot_cycles: r.slot_cycles,
+            preamble_cycles: r.preamble_cycles,
+            cycles_per_image: r.cycles_per_image,
+            img_per_s_fmax: r.img_per_s_fmax,
+            wall_img_per_s: r.wall_img_per_s,
+        })
+        .collect())
+}
+
+/// One cell of the (cores × batch × precision) capacity grid
+/// ([`capacity_grid`]).
+#[derive(Debug, Clone)]
+pub struct CapacityRow {
+    /// Cluster width the frame was sharded across.
+    pub cores: usize,
+    /// Activation slots per dispatched frame.
+    pub batch: u32,
+    /// Precision label (e.g. `w2a2`).
+    pub precision: String,
+    /// Per-slot chained-stage cycles — batch- AND core-invariant.
+    pub slot_cycles: u64,
+    /// Per-execution weight-pack preamble cycles (each core that
+    /// executes a shard pays it once).
+    pub preamble_cycles: u64,
+    /// Fixed shard/merge overhead
+    /// (`coordinator::cluster::shard_merge_overhead`; zero at K=1).
+    pub overhead_cycles: u64,
+    /// Cluster makespan of one full frame: max over cores of per-core
+    /// cycles, plus the overhead.
+    pub makespan_cycles: u64,
+    /// Amortized simulated cycles per image: `makespan / B`.
+    pub cycles_per_image: f64,
+    /// Cluster images/second at the lane fmax, full frames.
+    pub img_per_s_fmax: f64,
+    /// Host-side wall throughput (informational; machine-dependent,
+    /// not gated).
+    pub wall_img_per_s: f64,
+}
+
+/// The full (cores × batch × precision) capacity-planning grid
+/// (DESIGN.md §Cluster): for every precision and batch size the
+/// SparqCNN compiles once under the batch-B arena layout (shared
+/// [`SweepCtx`] cache), then every requested cluster width serves the
+/// same full frames through a round-robin
+/// [`crate::coordinator::cluster::QnnCluster`].  The makespan is
+/// deterministic (max-over-cores + fixed shard/merge overhead), so
+/// every cycle column is exact and CI-gateable; for a fixed batch
+/// B >= K the makespan strictly shrinks as cores are added (fewer
+/// slots per core dominate the small linear overhead), so cluster
+/// img/s strictly increases — asserted in `rust/benches/cluster.rs`.
+pub fn capacity_grid(
+    ctx: &SweepCtx,
+    cores: &[usize],
+    batches: &[u32],
+    precisions: &[(&str, QnnPrecision)],
+    images: usize,
+) -> Result<Vec<CapacityRow>, SimError> {
+    use crate::coordinator::cluster::{QnnCluster, ShardPolicy};
     use crate::qnn::schedule::DEFAULT_QNN_SEED;
     use crate::runtime::SimQnnModel;
+    use std::sync::Arc;
     let cfg = ProcessorConfig::sparq();
     let fmax = LaneReport::for_config(&cfg).fmax_ghz();
     let graph = QnnGraph::sparq_cnn();
-    let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
-    let mut rows = Vec::with_capacity(batches.len());
-    for &b in batches {
-        let model = SimQnnModel::compile_batched(
-            &cfg,
-            &graph,
-            prec,
-            DEFAULT_QNN_SEED,
-            &ctx.cache,
-            b,
-        )?;
-        let inputs: Vec<Vec<f32>> = (0..images.max(b as usize))
-            .map(|i| {
-                (0..model.input_len())
-                    .map(|k| ((k as u64 * 31 + i as u64) % 4) as f32)
-                    .collect()
-            })
-            .collect();
-        let mut slot_cycles = None;
-        let mut preamble_cycles = 0u64;
-        let mut served = 0usize;
-        let t0 = std::time::Instant::now();
-        for chunk in inputs.chunks(b as usize) {
-            if chunk.len() < b as usize {
-                break; // full batches only: the sweep measures fill = B
-            }
-            let (per_image, total) = model.infer_batch(&ctx.pool, chunk)?;
-            served += per_image.len();
-            for (_, cyc) in &per_image {
-                match slot_cycles {
-                    None => slot_cycles = Some(*cyc),
-                    Some(s) => debug_assert_eq!(s, *cyc, "slot cycles must be batch-invariant"),
+    let mut rows = Vec::with_capacity(cores.len() * batches.len() * precisions.len());
+    for &(plabel, prec) in precisions {
+        for &b in batches {
+            let model = Arc::new(SimQnnModel::compile_batched(
+                &cfg,
+                &graph,
+                prec,
+                DEFAULT_QNN_SEED,
+                &ctx.cache,
+                b,
+            )?);
+            let inputs: Vec<Vec<f32>> = (0..images.max(b as usize))
+                .map(|i| {
+                    (0..model.input_len())
+                        .map(|k| ((k as u64 * 31 + i as u64) % 4) as f32)
+                        .collect()
+                })
+                .collect();
+            for &k in cores {
+                let cluster = QnnCluster::new(Arc::clone(&model), k, ShardPolicy::RoundRobin);
+                let mut slot_cycles = None;
+                let mut preamble_cycles = 0u64;
+                let mut overhead_cycles = 0u64;
+                let mut makespan_cycles = 0u64;
+                let mut served = 0usize;
+                let t0 = std::time::Instant::now();
+                for chunk in inputs.chunks(b as usize) {
+                    if chunk.len() < b as usize {
+                        break; // full frames only: the grid measures fill = B
+                    }
+                    let refs: Vec<&[f32]> = chunk.iter().map(|v| v.as_slice()).collect();
+                    let run = cluster.infer_frame(&refs)?;
+                    for res in &run.results {
+                        let (_, cyc) = res.as_ref().expect("clean cluster run");
+                        match slot_cycles {
+                            None => slot_cycles = Some(*cyc),
+                            Some(s) => {
+                                debug_assert_eq!(s, *cyc, "slot cycles must be layout-invariant")
+                            }
+                        }
+                    }
+                    served += run.results.len();
+                    // full frames under round-robin: the account is
+                    // frame-invariant, keep the last one
+                    overhead_cycles = run.account.overhead_cycles;
+                    makespan_cycles = run.account.makespan_cycles;
+                    let busiest = run
+                        .account
+                        .per_core
+                        .iter()
+                        .max_by_key(|c| c.cycles)
+                        .expect("cluster has cores");
+                    let slot = slot_cycles.unwrap_or(0);
+                    preamble_cycles =
+                        busiest.cycles - busiest.requests as u64 * slot;
                 }
+                let wall = t0.elapsed().as_secs_f64();
+                let slot = slot_cycles.expect("at least one full frame must run");
+                let cycles_per_image = makespan_cycles as f64 / b as f64;
+                rows.push(CapacityRow {
+                    cores: cluster.cores(),
+                    batch: b,
+                    precision: plabel.to_string(),
+                    slot_cycles: slot,
+                    preamble_cycles,
+                    overhead_cycles,
+                    makespan_cycles,
+                    cycles_per_image,
+                    img_per_s_fmax: fmax * 1e9 / cycles_per_image,
+                    wall_img_per_s: if wall > 0.0 { served as f64 / wall } else { 0.0 },
+                });
             }
-            preamble_cycles = total - per_image.iter().map(|(_, c)| c).sum::<u64>();
         }
-        let wall = t0.elapsed().as_secs_f64();
-        let slot = slot_cycles.expect("at least one full batch must run");
-        let cycles_per_image = slot as f64 + preamble_cycles as f64 / b as f64;
-        rows.push(ThroughputRow {
-            batch: b,
-            slot_cycles: slot,
-            preamble_cycles,
-            cycles_per_image,
-            img_per_s_fmax: fmax * 1e9 / cycles_per_image,
-            wall_img_per_s: if wall > 0.0 { served as f64 / wall } else { 0.0 },
-        });
     }
     Ok(rows)
+}
+
+/// Render the capacity grid as one table (grouped precision → batch →
+/// cores, the order [`capacity_grid`] emits).
+pub fn render_capacity(rows: &[CapacityRow], fmax_ghz: f64) -> String {
+    let mut s = format!(
+        "Cluster capacity — SparqCNN, full frames at {:.3} GHz (round-robin shard; \
+         makespan = max over cores + fixed shard/merge overhead)\n\
+         {:>6} {:>5} {:>6} {:>12} {:>10} {:>9} {:>12} {:>12} {:>12} {:>12}\n",
+        fmax_ghz,
+        "prec",
+        "B",
+        "cores",
+        "slot cyc",
+        "preamble",
+        "overhead",
+        "makespan",
+        "cyc/img",
+        "img/s@fmax",
+        "host img/s"
+    );
+    for r in rows {
+        s += &format!(
+            "{:>6} {:>5} {:>6} {:>12} {:>10} {:>9} {:>12} {:>12.1} {:>12.0} {:>12.0}\n",
+            r.precision,
+            r.batch,
+            r.cores,
+            r.slot_cycles,
+            r.preamble_cycles,
+            r.overhead_cycles,
+            r.makespan_cycles,
+            r.cycles_per_image,
+            r.img_per_s_fmax,
+            r.wall_img_per_s
+        );
+    }
+    s
 }
 
 pub fn render_throughput(rows: &[ThroughputRow], fmax_ghz: f64) -> String {
@@ -759,6 +902,51 @@ mod tests {
         }
         let rendered = render_throughput(&rows, 1.464);
         assert!(rendered.contains("preamble") && rendered.contains("img/s@fmax"));
+    }
+
+    #[test]
+    fn capacity_grid_scales_with_cores_and_matches_the_single_core_sweep() {
+        use crate::coordinator::cluster::shard_merge_overhead;
+        let ctx = SweepCtx::new();
+        let prec = QnnPrecision::SubByte { w_bits: 2, a_bits: 2 };
+        let rows = capacity_grid(&ctx, &[1, 2, 4], &[4], &[("w2a2", prec)], 8).unwrap();
+        assert_eq!(rows.len(), 3);
+        // slot and preamble cycles are core-invariant (same compiled
+        // model, same per-slot streams — only the assignment changes)
+        assert!(rows.iter().all(|r| r.slot_cycles == rows[0].slot_cycles));
+        assert!(rows.iter().all(|r| r.preamble_cycles == rows[0].preamble_cycles));
+        // the makespan model is closed-form under round-robin full
+        // frames: K cores split B=4 slots evenly, the busiest core
+        // carries B/K slots plus one preamble, plus the fixed overhead
+        let (slot, pre) = (rows[0].slot_cycles, rows[0].preamble_cycles);
+        for r in &rows {
+            let per_core_slots = 4 / r.cores as u64;
+            assert_eq!(r.overhead_cycles, shard_merge_overhead(r.cores));
+            assert_eq!(
+                r.makespan_cycles,
+                pre + per_core_slots * slot + r.overhead_cycles,
+                "K={} makespan off the max-over-cores model",
+                r.cores
+            );
+        }
+        // img/s strictly increases in cores for fixed batch >= cores
+        for pair in rows.windows(2) {
+            assert!(
+                pair[1].img_per_s_fmax > pair[0].img_per_s_fmax,
+                "K={} img/s {} !> K={} img/s {}",
+                pair[1].cores,
+                pair[1].img_per_s_fmax,
+                pair[0].cores,
+                pair[0].img_per_s_fmax
+            );
+        }
+        // the K=1 column IS the single-core throughput sweep
+        let sweep = throughput_sweep(&ctx, &[4], 8).unwrap();
+        assert_eq!(rows[0].slot_cycles, sweep[0].slot_cycles);
+        assert_eq!(rows[0].preamble_cycles, sweep[0].preamble_cycles);
+        assert_eq!(rows[0].makespan_cycles, pre + 4 * slot, "K=1 pays zero overhead");
+        let rendered = render_capacity(&rows, 1.464);
+        assert!(rendered.contains("makespan") && rendered.contains("img/s@fmax"));
     }
 
     #[test]

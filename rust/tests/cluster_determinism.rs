@@ -1,0 +1,279 @@
+//! Cluster determinism suite (DESIGN.md §Cluster): K-core sharding
+//! must be a pure refactor of the 1-core batched path.
+//!
+//! What it asserts:
+//!
+//! * **Bit-identity.**  For every fill and every cluster width, the
+//!   per-request logits AND per-slot cycles of a K-core frame equal the
+//!   1-core goldens exactly — per-slot results are batch-layout-
+//!   invariant, so which core runs a slot cannot matter.
+//! * **Makespan by construction.**  Every account satisfies
+//!   `makespan == max(per_core.cycles) + shard_merge_overhead(fan)`.
+//! * **Replay.**  Re-running a round-robin frame reproduces the whole
+//!   [`ClusterRun`] (results and account) bit-for-bit.
+//! * **Policy agreement.**  Work-steal frames agree with round-robin on
+//!   every per-request output (the account is scheduling-dependent and
+//!   deliberately not compared).
+//! * **Per-core chaos.**  Under a per-core fault plan (a kill + a
+//!   recurring error) every request still resolves bounded and typed,
+//!   every Ok response bit-matches the clean goldens, and the killed
+//!   core stays dead in the health report.
+//!
+//! `SPARQ_FUZZ_ITERS` scales the sweep (nightly deep-fuzz raises it;
+//! the PR matrix runs the defaults).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparq::config::ServeConfig;
+use sparq::coordinator::cluster::{shard_merge_overhead, QnnCluster, ShardPolicy};
+use sparq::coordinator::{
+    fault, CallSel, FaultAction, FaultPlan, FaultRule, QnnBatchServer, ServeError,
+};
+use sparq::kernels::ProgramCache;
+use sparq::qnn::schedule::{QnnPrecision, DEFAULT_QNN_SEED};
+use sparq::qnn::QnnGraph;
+use sparq::runtime::SimQnnModel;
+use sparq::{MachinePool, ProcessorConfig};
+
+fn w2a2() -> QnnPrecision {
+    QnnPrecision::SubByte { w_bits: 2, a_bits: 2 }
+}
+
+fn compile(cache: &ProgramCache, batch: u32) -> Arc<SimQnnModel> {
+    let cfg = ProcessorConfig::sparq();
+    let graph = QnnGraph::sparq_cnn();
+    Arc::new(
+        SimQnnModel::compile_batched(&cfg, &graph, w2a2(), DEFAULT_QNN_SEED, cache, batch)
+            .expect("batched compile"),
+    )
+}
+
+fn images(model: &SimQnnModel, n: usize, salt: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            (0..model.input_len())
+                .map(|k| ((k as u64).wrapping_mul(salt * 2 + 13) + i as u64).rem_euclid(4) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+fn check_account(run: &sparq::coordinator::ClusterRun) {
+    let busiest = run.account.per_core.iter().map(|c| c.cycles).max().unwrap_or(0);
+    assert_eq!(
+        run.account.overhead_cycles,
+        shard_merge_overhead(run.account.sharded_across),
+        "overhead must follow the fixed fan model"
+    );
+    assert_eq!(
+        run.account.makespan_cycles,
+        busiest + run.account.overhead_cycles,
+        "makespan must be max-over-cores plus the fixed overhead, by construction"
+    );
+}
+
+#[test]
+fn k_core_frames_are_bit_identical_to_one_core_goldens() {
+    let cache = ProgramCache::new();
+    let model = compile(&cache, 8);
+    let pool = MachinePool::new();
+    let iters = sparq::testutil::fuzz_iters(6);
+    for it in 0..iters {
+        let fill = 1 + (it as usize % 8);
+        let imgs = images(&model, fill, it as u64);
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let (golden, _) = model.infer_batch_refs(&pool, &refs).expect("golden batched call");
+        for k in [1usize, 2, 3, 4, 8] {
+            let cluster = QnnCluster::new(Arc::clone(&model), k, ShardPolicy::RoundRobin);
+            let run = cluster.infer_frame(&refs).expect("cluster frame");
+            assert_eq!(run.results.len(), fill);
+            for (i, g) in golden.iter().enumerate() {
+                let r = run.results[i].as_ref().expect("clean cluster slot");
+                assert_eq!(
+                    r, g,
+                    "iter {it} fill {fill} K={k} slot {i}: cluster output must be \
+                     bit-identical to the 1-core golden"
+                );
+            }
+            check_account(&run);
+            if k == 1 {
+                assert_eq!(run.account.overhead_cycles, 0, "K=1 pays zero overhead");
+            }
+            assert!(run.failed_cores.is_empty());
+        }
+    }
+}
+
+#[test]
+fn round_robin_reruns_replay_the_whole_run_bit_for_bit() {
+    let cache = ProgramCache::new();
+    let model = compile(&cache, 4);
+    let imgs = images(&model, 4, 3);
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let cluster = QnnCluster::new(Arc::clone(&model), 3, ShardPolicy::RoundRobin);
+    let a = cluster.infer_frame(&refs).expect("first run");
+    let b = cluster.infer_frame(&refs).expect("second run");
+    assert_eq!(a, b, "a round-robin frame must replay bit-for-bit, account included");
+    check_account(&a);
+    assert_eq!(a.account.sharded_across, 3);
+}
+
+#[test]
+fn work_steal_agrees_with_round_robin_on_every_output() {
+    let cache = ProgramCache::new();
+    let model = compile(&cache, 8);
+    let iters = sparq::testutil::fuzz_iters(4);
+    for it in 0..iters {
+        let fill = 1 + (it as usize % 8);
+        let imgs = images(&model, fill, 100 + it as u64);
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let rr = QnnCluster::new(Arc::clone(&model), 4, ShardPolicy::RoundRobin);
+        let ws = QnnCluster::new(Arc::clone(&model), 4, ShardPolicy::WorkSteal);
+        let run_rr = rr.infer_frame(&refs).expect("round-robin frame");
+        let run_ws = ws.infer_frame(&refs).expect("work-steal frame");
+        for (i, (a, b)) in run_rr.results.iter().zip(&run_ws.results).enumerate() {
+            let a = a.as_ref().expect("clean round-robin slot");
+            let b = b.as_ref().expect("clean work-steal slot");
+            assert_eq!(a, b, "iter {it} slot {i}: policies must agree on every output");
+        }
+        // the steal account is scheduling-dependent, but it must still
+        // satisfy the makespan model over whatever schedule happened
+        check_account(&run_ws);
+        check_account(&run_rr);
+    }
+}
+
+#[test]
+fn per_core_chaos_keeps_ok_responses_bit_identical_and_kills_stay_dead() {
+    // workers: 1, cores: 3.  Core 1 is killed on its first execution;
+    // core 2 injects a typed error on every 3rd of its executions.  No
+    // CorruptLogits — every Ok response must bit-match the clean
+    // goldens.  The serving contract: every request resolves bounded
+    // (Ok, or typed failover-exhausted error), the killed core stays
+    // dead, the cluster keeps serving on the survivors.
+    let cache = ProgramCache::new();
+    let core_plan = Arc::new(FaultPlan::from_rules(vec![
+        FaultRule { worker: Some(1), when: CallSel::Nth(0), action: FaultAction::Kill },
+        FaultRule { worker: Some(2), when: CallSel::Every(3), action: FaultAction::Error },
+    ]));
+    let serve = ServeConfig {
+        workers: 1,
+        batch: 4,
+        batch_window_us: 200,
+        queue_depth: 64,
+        cores: 3,
+        ..ServeConfig::default()
+    };
+    let server = QnnBatchServer::start_chaos_cores(
+        ProcessorConfig::sparq(),
+        &QnnGraph::sparq_cnn(),
+        w2a2(),
+        DEFAULT_QNN_SEED,
+        serve,
+        &cache,
+        None,
+        Some(core_plan),
+    )
+    .unwrap();
+    // clean goldens from the same compiled layout, batch-by-batch
+    let model = compile(&cache, 4);
+    let pool = MachinePool::new();
+    let n = sparq::testutil::chaos_iters(24) as usize;
+    let imgs = images(&model, n, 7);
+    let golden: Vec<(Vec<i64>, u64)> = imgs
+        .chunks(4)
+        .flat_map(|chunk| {
+            let refs: Vec<&[f32]> = chunk.iter().map(|v| v.as_slice()).collect();
+            model.infer_batch_refs(&pool, &refs).expect("golden batch").0
+        })
+        .collect();
+    // waves of 16 keep the in-flight count (riders + failover retries)
+    // well under the 64-deep ring even when SPARQ_CHAOS_ITERS scales n
+    // to thousands in the nightly deep-fuzz job
+    let mut oks = 0usize;
+    for (w, wave) in imgs.chunks(16).enumerate() {
+        let pending: Vec<_> =
+            wave.iter().map(|img| server.submit(img.clone()).expect("submit")).collect();
+        for (j, rx) in pending.into_iter().enumerate() {
+            let i = w * 16 + j;
+            // the bounded wait IS the no-hang assertion
+            let r = rx
+                .recv_timeout(Duration::from_secs(10))
+                .unwrap_or_else(|_| panic!("request {i} hung — no reply within 10s"));
+            match r {
+                Ok(res) => {
+                    let want: Vec<f32> = golden[i].0.iter().map(|&v| v as f32).collect();
+                    assert_eq!(
+                        res.logits, want,
+                        "request {i}: Ok logits must bit-match the golden"
+                    );
+                    assert_eq!(res.sim_cycles, golden[i].1, "request {i}: slot cycles must match");
+                    oks += 1;
+                }
+                Err(ServeError::Worker(msg)) => {
+                    assert!(
+                        msg.contains("injected error") || fault::is_kill(&msg),
+                        "request {i}: only the injected per-core faults may surface: {msg}"
+                    );
+                }
+                other => panic!("request {i}: unexpected outcome {other:?}"),
+            }
+        }
+    }
+    assert!(oks > 0, "the surviving cores must keep serving");
+    let health = server.health();
+    assert_eq!(health.cores.len(), 3);
+    assert!(!health.cores[1].alive, "the killed core must stay dead");
+    assert_eq!(health.cores_alive, 2);
+    assert!(health.cores[1].failures >= 1);
+    assert_eq!(health.alive, 1, "the worker itself survives its cores' faults");
+    let snap = server.shutdown();
+    assert!(snap.core_failures >= 1, "core failures must be counted in the metrics");
+}
+
+#[test]
+fn a_fully_dead_cluster_answers_kill_typed_instead_of_hanging() {
+    // cores: 1 and the only core is killed on its first execution: the
+    // whole cluster is dead, the rider fails over once and is answered
+    // typed by the terminal drain — never a hang.  Later submits fail
+    // fast once the worker notices.
+    let cache = ProgramCache::new();
+    let core_plan = Arc::new(FaultPlan::from_rules(vec![FaultRule {
+        worker: None,
+        when: CallSel::Always,
+        action: FaultAction::Kill,
+    }]));
+    let serve = ServeConfig {
+        workers: 1,
+        batch: 1,
+        batch_window_us: 50,
+        queue_depth: 16,
+        cores: 1,
+        ..ServeConfig::default()
+    };
+    let server = QnnBatchServer::start_chaos_cores(
+        ProcessorConfig::sparq(),
+        &QnnGraph::sparq_cnn(),
+        w2a2(),
+        DEFAULT_QNN_SEED,
+        serve,
+        &cache,
+        None,
+        Some(core_plan),
+    )
+    .unwrap();
+    let image = vec![1.0; server.image_len()];
+    let rx = server.submit(image.clone()).expect("submit");
+    // the first execution kills the core; the rider fails over into
+    // the now-dead cluster and the exiting worker's terminal drain
+    // answers it as a dead-pool refusal (or, if the retry raced the
+    // exit, as the kill sentinel) — either way typed and bounded
+    match rx.recv_timeout(Duration::from_secs(10)).expect("request hung") {
+        Err(ServeError::NoWorkers) => {}
+        Err(ServeError::Worker(msg)) => assert!(fault::is_kill(&msg), "{msg}"),
+        other => panic!("a dead cluster must answer typed, got {other:?}"),
+    }
+    assert_eq!(server.health().cores_alive, 0);
+    server.shutdown();
+}

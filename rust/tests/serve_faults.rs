@@ -549,6 +549,119 @@ fn drain_reclassifies_failover_as_closed() {
 }
 
 #[test]
+fn killed_core_fails_over_typed_and_the_cluster_keeps_serving() {
+    // one worker serving through a 2-core cluster; core 1 is killed on
+    // its FIRST core execution (per-core FaultRule targeting — the
+    // rule's `worker` field addresses the core id in the core plan).
+    // Its shard's riders fail over through the ring and come back Ok
+    // off the surviving core; the worker itself stays alive.
+    let cache = ProgramCache::new();
+    let core_plan = Arc::new(FaultPlan::from_rules(vec![FaultRule {
+        worker: Some(1),
+        when: CallSel::Nth(0),
+        action: FaultAction::Kill,
+    }]));
+    let serve = ServeConfig {
+        workers: 1,
+        batch: 2,
+        batch_window_us: 100_000,
+        queue_depth: 16,
+        cores: 2,
+        ..ServeConfig::default()
+    };
+    let server = QnnBatchServer::start_chaos_cores(
+        ProcessorConfig::sparq(),
+        &QnnGraph::sparq_cnn(),
+        w2a2(),
+        7,
+        serve,
+        &cache,
+        None,
+        Some(core_plan),
+    )
+    .unwrap();
+    assert_eq!(server.cores(), 2);
+    let image = vec![1.0; server.image_len()];
+    // both riders land in one batch-2 frame (the second write seals
+    // it); the frame shards across both cores, so core 1 executes —
+    // and dies — deterministically.  Its rider must fail over Ok.
+    let rx_a = server.submit(image.clone()).expect("submit a");
+    let rx_b = server.submit(image.clone()).expect("submit b");
+    for (name, rx) in [("a", rx_a), ("b", rx_b)] {
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap_or_else(|_| panic!("{name} hung"));
+        assert!(r.is_ok(), "rider {name} must survive the core kill via failover: {r:?}");
+    }
+    let h = server.health();
+    assert_eq!(h.alive, 1, "the worker survives its core's death");
+    assert_eq!(h.cores_alive, 1, "the killed core stays dead");
+    assert!(!h.cores[1].alive);
+    assert!(h.cores[0].alive);
+    assert!(h.cores[1].failures >= 1);
+    // the surviving core keeps serving
+    for i in 0..4 {
+        let rx = server.submit(image.clone()).expect("submit");
+        let r = rx.recv_timeout(Duration::from_secs(10)).expect("request hung");
+        assert!(r.is_ok(), "request {i} must serve on the surviving core: {r:?}");
+    }
+    let snap = server.shutdown();
+    assert!(snap.retries >= 1, "the killed shard's rider must have failed over");
+    assert_eq!(snap.errors, 0, "failover hid the core kill from every client");
+    assert!(snap.core_failures >= 1, "the kill is counted as a core failure");
+}
+
+#[test]
+fn persistent_core_errors_surface_typed_after_one_failover() {
+    // every core execution fails typed: a rider fails over once, fails
+    // again, and the SECOND failure must reach the client as a typed
+    // Worker error carrying the injected message — bounded, no hang.
+    let cache = ProgramCache::new();
+    let core_plan = Arc::new(FaultPlan::from_rules(vec![FaultRule {
+        worker: None,
+        when: CallSel::Always,
+        action: FaultAction::Error,
+    }]));
+    let serve = ServeConfig {
+        workers: 1,
+        batch: 1,
+        batch_window_us: 50,
+        queue_depth: 16,
+        cores: 2,
+        ..ServeConfig::default()
+    };
+    let server = QnnBatchServer::start_chaos_cores(
+        ProcessorConfig::sparq(),
+        &QnnGraph::sparq_cnn(),
+        w2a2(),
+        7,
+        serve,
+        &cache,
+        None,
+        Some(core_plan),
+    )
+    .unwrap();
+    let image = vec![1.0; server.image_len()];
+    for i in 0..3 {
+        let rx = server.submit(image.clone()).expect("submit");
+        match rx
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|_| panic!("request {i} hung"))
+        {
+            Err(ServeError::Worker(msg)) => {
+                assert!(msg.contains("injected error"), "request {i}: {msg}")
+            }
+            other => panic!("request {i} must surface the core error typed, got {other:?}"),
+        }
+    }
+    let h = server.health();
+    assert_eq!(h.cores_alive, 2, "typed errors do not kill cores");
+    assert_eq!(h.alive, 1, "typed core errors do not kill the worker either");
+    let snap = server.shutdown();
+    assert_eq!(snap.retries, 3, "every request fails over exactly once before surfacing");
+    assert_eq!(snap.errors, 3, "every request surfaces exactly one typed error");
+    assert!(snap.core_failures >= 6, "both attempts of every request failed a core");
+}
+
+#[test]
 fn drain_under_load_resolves_every_request() {
     let cache = ProgramCache::new();
     // 5ms of injected delay per batch makes the backlog outlast the
